@@ -1,0 +1,75 @@
+//! Quickstart: one matrix multiplication through the whole stack.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Runs a 64×256×64 signed 4×4-bit matmul on the overlay (pack →
+//! schedule → simulate), verifies the result against the i64 reference
+//! AND against the AOT-compiled JAX/Pallas artifact executed through
+//! PJRT, and prints the run report.
+
+use bismo::arch::instance;
+use bismo::bitmatrix::IntMatrix;
+use bismo::coordinator::{BismoContext, MatmulOptions, Precision};
+use bismo::report::{f, pct};
+use bismo::runtime::Runtime;
+use bismo::util::Rng;
+use std::path::Path;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // 1. An overlay instance (Table IV #1: 8×64×8 DPA on the PYNQ-Z1).
+    let cfg = instance(1);
+    let ctx = BismoContext::new(cfg)?;
+    println!(
+        "overlay: {}x{}x{} DPA @ {} MHz  (peak {} binary GOPS)",
+        cfg.dm,
+        cfg.dk,
+        cfg.dn,
+        cfg.fclk_mhz,
+        f(cfg.peak_binary_gops(), 1)
+    );
+
+    // 2. Random signed 4-bit operands.
+    let mut rng = Rng::new(42);
+    let a = IntMatrix::random(&mut rng, 64, 256, 4, true);
+    let b = IntMatrix::random(&mut rng, 256, 64, 4, true);
+
+    // 3. Multiply on the overlay with verification enabled.
+    let opts = MatmulOptions {
+        verify: true,
+        ..Default::default()
+    };
+    let (p, rep) = ctx.matmul(&a, &b, Precision::signed(4, 4), opts)?;
+    assert_eq!(p, a.matmul(&b), "overlay result vs i64 reference");
+    println!(
+        "overlay run: {} cycles = {:.1} µs  |  {} GOPS ({} of peak)  |  {:.2} W -> {} GOPS/W",
+        rep.cycles,
+        rep.seconds * 1e6,
+        f(rep.gops, 1),
+        pct(rep.efficiency),
+        rep.power_w,
+        f(rep.gops_per_w, 1)
+    );
+    println!(
+        "instructions: {} fetch / {} execute / {} result (+{} syncs)",
+        rep.instructions.fetch_runs,
+        rep.instructions.execute_runs,
+        rep.instructions.result_runs,
+        rep.instructions.waits + rep.instructions.signals
+    );
+
+    // 4. Cross-check against the AOT-compiled JAX/Pallas artifact.
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let rt = Runtime::new(&artifacts)?;
+        let exe = rt.load("bitserial_matmul_64x256x64_w4a4_ss")?;
+        let jax_out = exe.run_i32(&[&a, &b])?;
+        assert_eq!(jax_out, p, "PJRT artifact vs overlay");
+        println!("PJRT cross-check: JAX/Pallas artifact agrees bit-exactly ✓");
+    } else {
+        println!("(run `make artifacts` to enable the PJRT cross-check)");
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,97 @@
+"""AOT export: lower the L2 entry points to HLO text artifacts.
+
+Run once at build time (`make artifacts`); the rust coordinator loads
+the resulting `artifacts/*.hlo.txt` through the PJRT C API and Python
+never appears on the request path.
+
+HLO **text** is the interchange format, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. Lowered with
+``return_tuple=True``; the rust side unwraps with ``to_tuple1()``.
+
+Usage: ``python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, specs) -> str:
+    """jit → lower → StableHLO → XlaComputation → HLO text."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_desc(spec) -> dict:
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def entries():
+    """The artifact set: (name, fn, specs).
+
+    Shapes used by the rust examples/benches; adding an entry here is
+    the only step needed to expose a new computation to the runtime.
+    """
+    out = []
+
+    # Coordinator verification matmul (quickstart shape).
+    fn, specs = model.make_bitserial_matmul_fn(64, 256, 64, 4, 4, True, True)
+    out.append(("bitserial_matmul_64x256x64_w4a4_ss", fn, specs))
+
+    # Fig. 13 shape (precision sweep, modest size for CPU interpret).
+    fn, specs = model.make_bitserial_matmul_fn(8, 2048, 8, 2, 2, False, False)
+    out.append(("bitserial_matmul_8x2048x8_w2a2_uu", fn, specs))
+
+    # Popcount-form kernel artifact (runtime kernel-verification path).
+    fn, specs = model.make_binary_matmul_packed_fn(64, 64, 64)  # k = 2048
+    out.append(("binary_matmul_popcount_64x2048x64", fn, specs))
+
+    # End-to-end QNN forward (batch 16).
+    fn, specs = model.make_qnn_mlp_fn(16)
+    out.append(("qnn_mlp_b16_w4a2", fn, specs))
+
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--only", default=None, help="only regenerate artifacts whose name contains this"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {}
+    for name, fn, specs in entries():
+        if args.only and args.only not in name:
+            continue
+        text = to_hlo_text(fn, specs)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [spec_desc(s) for s in specs],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Layer-1 Pallas kernels: the BISMO compute hot-spot on TPU terms.
+
+The paper's DPU is AND + popcount feeding a weighted accumulator, sized
+``D_k`` bits, replicated ``D_m x D_n`` times, fed from BRAM matrix
+buffers. Two TPU-idiomatic formulations are provided (DESIGN.md
+SSHardware-Adaptation):
+
+* :func:`popcount_matmul` - the **direct port**: operands bit-packed
+  into uint32 lanes, ``bitwise_and`` + ``lax.population_count`` on the
+  VPU, reduced along k. The VMEM tile of packed words plays the role of
+  the matrix buffer; ``D_k`` maps to the packed-lane tile width.
+
+* :func:`bitserial_matmul_mxu` - the **rethink**: a binary matmul is a
+  matmul of {0,1} matrices, which the MXU systolic array executes
+  natively; bit-planes are fed as f32 {0,1} tiles to ``jnp.dot`` (exact
+  up to 2^24), and the ``+-2^(i+j)`` weight is a scalar multiply fused
+  into the accumulation - the paper's shift-and-negate unit. The grid's
+  plane-pair dimension serializes exactly like Algorithm 1's outer
+  loops, with the accumulator tile resident in VMEM across it.
+
+Both are lowered with ``interpret=True`` (CPU PJRT cannot run Mosaic
+custom-calls) and checked bit-exactly against `ref.py` by pytest and
+hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# Popcount form (direct DPU port).
+# ---------------------------------------------------------------------------
+
+
+def _popcount_kernel(l_ref, r_ref, o_ref):
+    """One (bm, bn) output tile: AND + popcount over packed k words.
+
+    ``l_ref``: (bm, kw) uint32, ``r_ref``: (bn, kw) uint32 - the matrix
+    buffer contents for one DPU row/column group.
+    """
+    anded = l_ref[...][:, None, :] & r_ref[...][None, :, :]
+    o_ref[...] = jnp.sum(
+        jax.lax.population_count(anded).astype(jnp.int32), axis=-1
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def popcount_matmul(l_bits, r_bits_t, *, bm: int = 8, bn: int = 8):
+    """Binary matmul on bit-packed operands.
+
+    Args:
+      l_bits: (m, kw) uint32 - LHS plane, k packed into 32-bit words.
+      r_bits_t: (n, kw) uint32 - transposed RHS plane, same packing.
+      bm, bn: VMEM tile sizes (the D_m/D_n analogue).
+
+    Returns:
+      (m, n) int32 popcount dot products.
+    """
+    m, kw = l_bits.shape
+    n, _ = r_bits_t.shape
+    if m % bm or n % bn:
+        raise ValueError(f"shape ({m},{n}) not divisible by tile ({bm},{bn})")
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _popcount_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kw), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kw), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(l_bits, r_bits_t)
+
+
+# ---------------------------------------------------------------------------
+# MXU form (bit-planes on the systolic array).
+# ---------------------------------------------------------------------------
+
+
+def _mxu_kernel(wl_ref, wr_ref, l_ref, r_ref, o_ref, *, abits: int):
+    """Grid step (p, i, j): accumulate one weighted plane-pair product
+    into output tile (i, j).
+
+    ``l_ref``: (1, bm, k) f32 {0,1} - LHS plane p//abits, tile i.
+    ``r_ref``: (1, bn, k) f32 {0,1} - RHS plane p%abits, tile j.
+    ``wl_ref``/``wr_ref``: (1,) f32 plane weights (+-2^i).
+    """
+    p = pl.program_id(0)
+    l = l_ref[0]
+    r = r_ref[0]
+    contrib = jax.lax.dot_general(
+        l,
+        r,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    w = wl_ref[0] * wr_ref[0]
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = w * contrib
+
+    @pl.when(p > 0)
+    def _acc():
+        o_ref[...] += w * contrib
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def bitserial_matmul_mxu(l_planes, r_planes_t, wl, wr, *, bm: int = 8, bn: int = 8):
+    """Weighted sum of binary matmuls on the MXU (Algorithm 1).
+
+    Args:
+      l_planes: (wbits, m, k) f32 {0,1} bit-planes of the LHS.
+      r_planes_t: (abits, n, k) f32 {0,1} planes of the transposed RHS.
+      wl: (wbits,) f32 plane weights (signed two's-complement weights).
+      wr: (abits,) f32 plane weights.
+      bm, bn: output tile sizes.
+
+    Returns:
+      (m, n) f32 - exact integers while |result| < 2^24.
+    """
+    wbits, m, k = l_planes.shape
+    abits, n, _ = r_planes_t.shape
+    if m % bm or n % bn:
+        raise ValueError(f"shape ({m},{n}) not divisible by tile ({bm},{bn})")
+    pairs = wbits * abits
+    grid = (pairs, m // bm, n // bn)
+    kernel = functools.partial(_mxu_kernel, abits=abits)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda p, i, j: (p // abits,)),
+            pl.BlockSpec((1,), lambda p, i, j: (p % abits,)),
+            pl.BlockSpec((1, bm, k), lambda p, i, j: (p // abits, i, 0)),
+            pl.BlockSpec((1, bn, k), lambda p, i, j: (p % abits, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda p, i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(wl, wr, l_planes, r_planes_t)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, k: int, pairs: int) -> int:
+    """Estimated VMEM working set of one :func:`bitserial_matmul_mxu`
+    grid step with double buffering: two (bm,k) + two (bn,k) f32 plane
+    tiles in flight plus the resident (bm,bn) f32 accumulator.
+
+    Used by the SSPerf notes in EXPERIMENTS.md; ``pairs`` does not grow
+    the footprint (the accumulator is reused across the serial grid
+    dimension) but is kept in the signature for the roofline notes.
+    """
+    del pairs
+    return 4 * (2 * bm * k + 2 * bn * k + bm * bn)

@@ -1,0 +1,91 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Everything here is straight-line jax.numpy with no Pallas, no tiling and
+no cleverness: the ground truth that `binary_matmul.py` must match
+bit-exactly (integer results) under pytest/hypothesis.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def plane_weights(bits: int, signed: bool) -> jnp.ndarray:
+    """Per-plane weights of a two's-complement decomposition.
+
+    ``w[i] = 2**i`` except the MSB of a signed operand, which carries
+    ``-2**(bits-1)`` (Algorithm 1 lines 5-7 of the paper).
+    """
+    w = 2 ** jnp.arange(bits, dtype=jnp.int64)
+    if signed:
+        w = w.at[bits - 1].multiply(-1)
+    return w
+
+
+def decompose(x: jnp.ndarray, bits: int, signed: bool) -> jnp.ndarray:
+    """Bit-plane decomposition: int array [..., m, k] -> [bits, ..., m, k]
+    of {0,1} int32 planes (two's complement within ``bits``)."""
+    x = x.astype(jnp.int64)
+    pattern = jnp.where(x < 0, x + (1 << bits), x)  # two's complement
+    planes = [(pattern >> i) & 1 for i in range(bits)]
+    return jnp.stack(planes).astype(jnp.int32)
+
+
+def recompose(planes: jnp.ndarray, bits: int, signed: bool) -> jnp.ndarray:
+    """Exact inverse of :func:`decompose`."""
+    w = plane_weights(bits, signed)
+    shape = (bits,) + (1,) * (planes.ndim - 1)
+    return jnp.sum(planes.astype(jnp.int64) * w.reshape(shape), axis=0)
+
+
+def int_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Direct integer matmul oracle: the value every bit-serial path must
+    reproduce exactly."""
+    return jnp.matmul(a.astype(jnp.int64), b.astype(jnp.int64))
+
+
+def binary_matmul_ref(l_plane: jnp.ndarray, r_plane_t: jnp.ndarray) -> jnp.ndarray:
+    """One binary matmul: {0,1} planes, RHS transposed (n, k)."""
+    return jnp.matmul(l_plane.astype(jnp.int64), r_plane_t.astype(jnp.int64).T)
+
+
+def bitserial_matmul_ref(
+    lhs: jnp.ndarray,
+    rhs: jnp.ndarray,
+    wbits: int,
+    abits: int,
+    lsigned: bool,
+    rsigned: bool,
+) -> jnp.ndarray:
+    """Algorithm 1 executed literally: weighted sum of binary matmuls.
+
+    ``lhs`` is (m, k) int, ``rhs`` is (k, n) int. Must equal
+    :func:`int_matmul_ref` for in-range operands.
+    """
+    lp = decompose(lhs, wbits, lsigned)          # [w, m, k]
+    rp = decompose(rhs.T, abits, rsigned)        # [a, n, k]
+    wl = plane_weights(wbits, lsigned)
+    wr = plane_weights(abits, rsigned)
+    acc = jnp.zeros((lhs.shape[0], rhs.shape[1]), dtype=jnp.int64)
+    for i in range(wbits):
+        for j in range(abits):
+            acc = acc + wl[i] * wr[j] * binary_matmul_ref(lp[i], rp[j])
+    return acc
+
+
+def pack_bits_u32(plane: jnp.ndarray) -> jnp.ndarray:
+    """Pack a {0,1} plane (..., k) into uint32 words (..., ceil(k/32)),
+    little-endian within each word — the DPU's bit-packed input format."""
+    k = plane.shape[-1]
+    kw = -(-k // 32)
+    pad = kw * 32 - k
+    p = jnp.pad(plane.astype(jnp.uint32), [(0, 0)] * (plane.ndim - 1) + [(0, pad)])
+    p = p.reshape(p.shape[:-1] + (kw, 32))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(p << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def popcount_matmul_ref(l_bits: jnp.ndarray, r_bits_t: jnp.ndarray) -> jnp.ndarray:
+    """AND+popcount binary matmul on packed uint32 rows: the DPU
+    operation. ``l_bits`` (m, kw), ``r_bits_t`` (n, kw) -> (m, n) int32."""
+    anded = l_bits[:, None, :] & r_bits_t[None, :, :]
+    return jnp.sum(jax.lax.population_count(anded), axis=-1).astype(jnp.int32)

@@ -1,0 +1,61 @@
+"""Tile selection for the MXU-form kernel under a VMEM budget.
+
+The TPU analogue of the paper's B_m/B_n buffer-sizing decision (SSIII-B):
+pick the largest MXU-aligned output tile (bm, bn) and k-block such that
+the double-buffered working set fits VMEM, preferring square-ish tiles
+(maximizes MACs per byte loaded, the same arithmetic-intensity argument
+as the paper's D_k scaling).
+"""
+
+from .binary_matmul import vmem_footprint_bytes
+
+# One TPU core's VMEM, minus headroom for spills/constants.
+VMEM_BUDGET_BYTES = 14 * 2**20
+# MXU systolic array dimension: tiles should be multiples of this.
+MXU_DIM = 128
+
+
+def aligned_candidates(limit: int, align: int = MXU_DIM):
+    """Tile sizes to consider: multiples of `align` up to `limit`, and
+    `limit` itself when smaller than one aligned step (small matrices
+    fall back to 8-lane alignment)."""
+    if limit < align:
+        base = 8
+        return [min(limit, base * i) for i in range(1, limit // base + 1)] or [limit]
+    return [align * i for i in range(1, limit // align + 1)]
+
+
+def choose_tiles(m: int, n: int, k: int, budget: int = VMEM_BUDGET_BYTES):
+    """Pick (bm, bn, kblock) for `bitserial_matmul_mxu`.
+
+    Returns the tiling with the highest arithmetic intensity
+    (bm*bn / (bm+bn), i.e. MACs per plane byte streamed) whose
+    double-buffered footprint fits the budget.
+    """
+    best = None
+    for bm in aligned_candidates(m):
+        for bn in aligned_candidates(n):
+            # Largest k block that fits with this (bm, bn).
+            kb = min(k, _max_kblock(bm, bn, budget))
+            if kb < min(k, MXU_DIM if k >= MXU_DIM else k):
+                continue  # degenerate: k slice thinner than one MXU pass
+            fp = vmem_footprint_bytes(bm, bn, kb, 1)
+            if fp > budget:
+                continue
+            intensity = (bm * bn) / (bm + bn)
+            key = (intensity, kb, bm * bn)
+            if best is None or key > best[0]:
+                best = (key, (bm, bn, kb))
+    if best is None:
+        # Fall back to the smallest legal tile.
+        return (min(8, m), min(8, n), min(k, 128))
+    return best[1]
+
+
+def _max_kblock(bm: int, bn: int, budget: int) -> int:
+    """Largest k with 4*(2*bm*k + 2*bn*k + bm*bn) <= budget."""
+    fixed = 4 * bm * bn
+    per_k = 4 * 2 * (bm + bn)
+    if budget <= fixed:
+        return 0
+    return (budget - fixed) // per_k

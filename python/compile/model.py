@@ -1,0 +1,157 @@
+"""Layer-2 JAX model: bit-serial matmul graphs and the quantized MLP.
+
+This is the compute the rust coordinator executes through PJRT: the
+functions here are lowered ONCE by `aot.py` to HLO text and never run
+from Python at serving time. All integer work is expressed in int32 (the
+overlay's accumulator width A = 32); the Pallas kernels of
+`kernels/binary_matmul.py` sit at the hot spot.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.binary_matmul import bitserial_matmul_mxu, popcount_matmul
+
+
+def bitserial_matmul(
+    lhs: jnp.ndarray,
+    rhs: jnp.ndarray,
+    *,
+    wbits: int,
+    abits: int,
+    lsigned: bool,
+    rsigned: bool,
+    bm: int = 8,
+    bn: int = 8,
+) -> jnp.ndarray:
+    """Integer matmul via Algorithm 1 on the MXU-form Pallas kernel.
+
+    Args:
+      lhs: (m, k) int32, values within `wbits` (signed per `lsigned`).
+      rhs: (k, n) int32, values within `abits`.
+
+    Returns:
+      (m, n) int32 product (exact while |result| < 2^24).
+    """
+    m, n = lhs.shape[0], rhs.shape[1]
+    # Pad the output dims up to tile multiples (zero rows/cols contribute
+    # zero planes), slice back after — the scheduler's partial tiles.
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    lhs_p = jnp.pad(lhs, ((0, mp - m), (0, 0)))
+    rhs_p = jnp.pad(rhs, ((0, 0), (0, np_ - n)))
+    lp = ref.decompose(lhs_p, wbits, lsigned).astype(jnp.float32)    # [w,m,k]
+    rp = ref.decompose(rhs_p.T, abits, rsigned).astype(jnp.float32)  # [a,n,k]
+    wl = ref.plane_weights(wbits, lsigned).astype(jnp.float32)
+    wr = ref.plane_weights(abits, rsigned).astype(jnp.float32)
+    out = bitserial_matmul_mxu(lp, rp, wl, wr, bm=bm, bn=bn)
+    return out[:m, :n].astype(jnp.int32)
+
+
+def binary_matmul_packed(l_bits: jnp.ndarray, r_bits_t: jnp.ndarray) -> jnp.ndarray:
+    """One binary matmul on pre-packed uint32 planes (popcount form).
+
+    The direct DPU analogue, exported for the runtime's kernel-level
+    verification path.
+    """
+    return popcount_matmul(l_bits, r_bits_t)
+
+
+def requantize(acc: jnp.ndarray, shift: int, out_bits: int) -> jnp.ndarray:
+    """Integer-only requantization + ReLU: clip(acc >> shift, 0, 2^b-1).
+
+    The standard integer-inference post-GEMM step; `shift` is fixed at
+    export time (per-layer static scale).
+    """
+    shifted = jnp.right_shift(jnp.maximum(acc, 0), shift)
+    return jnp.clip(shifted, 0, (1 << out_bits) - 1).astype(jnp.int32)
+
+
+def qnn_mlp(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    w2: jnp.ndarray,
+    w3: jnp.ndarray,
+    *,
+    wbits: int = 4,
+    abits: int = 2,
+    shifts: tuple = (6, 4),
+) -> jnp.ndarray:
+    """Quantized 3-layer MLP forward pass (the paper's QNN motivation).
+
+    Every GEMM runs through the bit-serial path. Activations are
+    `abits`-bit unsigned, weights `wbits`-bit signed (two's complement),
+    matching the precision regime of Park et al. / FINN that BISMO
+    targets.
+
+    Args:
+      x:  (batch, 784) int32 in [0, 2^abits).
+      w1: (784, 256) int32 signed `wbits`-bit.
+      w2: (256, 256) int32 signed `wbits`-bit.
+      w3: (256, 10) int32 signed `wbits`-bit.
+
+    Returns:
+      (batch, 10) int32 logits.
+    """
+    h = bitserial_matmul(
+        x, w1, wbits=abits, abits=wbits, lsigned=False, rsigned=True
+    )
+    h = requantize(h, shifts[0], abits)
+    h = bitserial_matmul(
+        h, w2, wbits=abits, abits=wbits, lsigned=False, rsigned=True
+    )
+    h = requantize(h, shifts[1], abits)
+    return bitserial_matmul(
+        h, w3, wbits=abits, abits=wbits, lsigned=False, rsigned=True
+    )
+
+
+def make_bitserial_matmul_fn(m, k, n, wbits, abits, lsigned, rsigned):
+    """Entry point factory for AOT export: fixes shapes + precision."""
+
+    def fn(lhs, rhs):
+        return (
+            bitserial_matmul(
+                lhs,
+                rhs,
+                wbits=wbits,
+                abits=abits,
+                lsigned=lsigned,
+                rsigned=rsigned,
+            ),
+        )
+
+    specs = (
+        jax.ShapeDtypeStruct((m, k), jnp.int32),
+        jax.ShapeDtypeStruct((k, n), jnp.int32),
+    )
+    return fn, specs
+
+
+def make_qnn_mlp_fn(batch, wbits=4, abits=2):
+    """AOT entry point for the full QNN forward pass."""
+
+    def fn(x, w1, w2, w3):
+        return (qnn_mlp(x, w1, w2, w3, wbits=wbits, abits=abits),)
+
+    specs = (
+        jax.ShapeDtypeStruct((batch, 784), jnp.int32),
+        jax.ShapeDtypeStruct((784, 256), jnp.int32),
+        jax.ShapeDtypeStruct((256, 256), jnp.int32),
+        jax.ShapeDtypeStruct((256, 10), jnp.int32),
+    )
+    return fn, specs
+
+
+def make_binary_matmul_packed_fn(m, kw, n):
+    """AOT entry point for the popcount-form kernel (packed planes)."""
+
+    def fn(l_bits, r_bits_t):
+        return (binary_matmul_packed(l_bits, r_bits_t),)
+
+    specs = (
+        jax.ShapeDtypeStruct((m, kw), jnp.uint32),
+        jax.ShapeDtypeStruct((n, kw), jnp.uint32),
+    )
+    return fn, specs

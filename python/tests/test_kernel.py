@@ -1,0 +1,173 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle, bit-exact.
+
+Hypothesis sweeps shapes, precisions and signedness — the CORE
+correctness signal for the compute layer.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.binary_matmul import (
+    bitserial_matmul_mxu,
+    popcount_matmul,
+    vmem_footprint_bytes,
+)
+
+
+def _random_bits(rng, m, k):
+    return rng.integers(0, 2, (m, k))
+
+
+class TestPopcountForm:
+    def test_small_exact(self):
+        rng = np.random.default_rng(1)
+        lp = _random_bits(rng, 8, 64)
+        rp = _random_bits(rng, 8, 64)
+        got = popcount_matmul(
+            ref.pack_bits_u32(jnp.asarray(lp)), ref.pack_bits_u32(jnp.asarray(rp))
+        )
+        want = ref.binary_matmul_ref(jnp.asarray(lp), jnp.asarray(rp))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        mt=st.integers(1, 4),
+        nt=st.integers(1, 4),
+        k=st.integers(1, 200),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_shapes(self, mt, nt, k, seed):
+        rng = np.random.default_rng(seed)
+        m, n = 8 * mt, 8 * nt
+        lp = _random_bits(rng, m, k)
+        rp = _random_bits(rng, n, k)
+        got = popcount_matmul(
+            ref.pack_bits_u32(jnp.asarray(lp)), ref.pack_bits_u32(jnp.asarray(rp))
+        )
+        want = ref.binary_matmul_ref(jnp.asarray(lp), jnp.asarray(rp))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_all_ones_hits_k(self):
+        k = 130
+        ones = jnp.ones((8, k), dtype=jnp.int32)
+        got = popcount_matmul(ref.pack_bits_u32(ones), ref.pack_bits_u32(ones))
+        np.testing.assert_array_equal(np.asarray(got), np.full((8, 8), k))
+
+    def test_padding_bits_do_not_leak(self):
+        # k = 33 packs into 2 words with 31 pad bits; they must stay 0.
+        k = 33
+        ones = jnp.ones((8, k), dtype=jnp.int32)
+        got = popcount_matmul(ref.pack_bits_u32(ones), ref.pack_bits_u32(ones))
+        np.testing.assert_array_equal(np.asarray(got), np.full((8, 8), k))
+
+    def test_tile_mismatch_rejected(self):
+        b = ref.pack_bits_u32(jnp.ones((9, 32), dtype=jnp.int32))
+        with pytest.raises(ValueError, match="not divisible"):
+            popcount_matmul(b, b, bm=8, bn=8)
+
+
+class TestMxuForm:
+    def _run(self, rng, m, k, n, w, a, ls, rs, bm=8, bn=8):
+        lo_l = -(1 << (w - 1)) if ls else 0
+        hi_l = (1 << (w - 1)) if ls else (1 << w)
+        lo_r = -(1 << (a - 1)) if rs else 0
+        hi_r = (1 << (a - 1)) if rs else (1 << a)
+        lhs = rng.integers(lo_l, hi_l, (m, k))
+        rhs = rng.integers(lo_r, hi_r, (k, n))
+        lp = ref.decompose(jnp.asarray(lhs), w, ls).astype(jnp.float32)
+        rp = ref.decompose(jnp.asarray(rhs.T), a, rs).astype(jnp.float32)
+        wl = ref.plane_weights(w, ls).astype(jnp.float32)
+        wr = ref.plane_weights(a, rs).astype(jnp.float32)
+        got = bitserial_matmul_mxu(lp, rp, wl, wr, bm=bm, bn=bn)
+        want = lhs.astype(np.int64) @ rhs.astype(np.int64)
+        np.testing.assert_array_equal(np.asarray(got).astype(np.int64), want)
+
+    def test_paper_fig1(self):
+        l = jnp.array([[2, 0], [1, 3]], dtype=jnp.int32)
+        r = jnp.array([[0, 1], [1, 2]], dtype=jnp.int32)
+        lp = ref.decompose(l, 2, False).astype(jnp.float32)
+        rp = ref.decompose(r.T, 2, False).astype(jnp.float32)
+        wl = ref.plane_weights(2, False).astype(jnp.float32)
+        got = bitserial_matmul_mxu(lp, rp, wl, wl, bm=2, bn=2)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.array([[0.0, 2.0], [3.0, 7.0]])
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        mt=st.integers(1, 3),
+        nt=st.integers(1, 3),
+        k=st.integers(1, 96),
+        w=st.integers(1, 6),
+        a=st.integers(1, 6),
+        ls=st.booleans(),
+        rs=st.booleans(),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_precisions(self, mt, nt, k, w, a, ls, rs, seed):
+        rng = np.random.default_rng(seed)
+        self._run(rng, 8 * mt, k, 8 * nt, w, a, ls, rs)
+
+    def test_signed_extremes(self):
+        # All-minimum signed values stress the negative MSB plane.
+        for bits in (2, 4, 8):
+            lo = -(1 << (bits - 1))
+            m = k = n = 8
+            lhs = np.full((m, k), lo)
+            rhs = np.full((k, n), lo)
+            lp = ref.decompose(jnp.asarray(lhs), bits, True).astype(jnp.float32)
+            rp = ref.decompose(jnp.asarray(rhs.T), bits, True).astype(jnp.float32)
+            wl = ref.plane_weights(bits, True).astype(jnp.float32)
+            got = bitserial_matmul_mxu(lp, rp, wl, wl)
+            want = lhs.astype(np.int64) @ rhs.astype(np.int64)
+            np.testing.assert_array_equal(np.asarray(got).astype(np.int64), want)
+
+    def test_different_tiles_same_answer(self):
+        rng = np.random.default_rng(7)
+        for (bm, bn) in [(8, 8), (16, 8), (8, 16), (16, 16)]:
+            self._run(rng, 16, 50, 16, 3, 3, True, False, bm=bm, bn=bn)
+
+
+class TestRefInternals:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        bits=st.integers(1, 16),
+        signed=st.booleans(),
+        seed=st.integers(0, 2**31),
+    )
+    def test_decompose_recompose_roundtrip(self, bits, signed, seed):
+        rng = np.random.default_rng(seed)
+        lo = -(1 << (bits - 1)) if signed else 0
+        hi = (1 << (bits - 1)) if signed else (1 << bits)
+        x = jnp.asarray(rng.integers(lo, hi, (5, 7)))
+        planes = ref.decompose(x, bits, signed)
+        assert set(np.unique(np.asarray(planes))) <= {0, 1}
+        back = ref.recompose(planes, bits, signed)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+    def test_bitserial_ref_equals_int_matmul(self):
+        rng = np.random.default_rng(3)
+        a = jnp.asarray(rng.integers(-8, 8, (5, 40)))
+        b = jnp.asarray(rng.integers(0, 4, (40, 6)))
+        got = ref.bitserial_matmul_ref(a, b, 4, 2, True, False)
+        want = ref.int_matmul_ref(a, b)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_pack_bits_layout(self):
+        # Bit i of word j covers column 32*j + i (little-endian).
+        plane = jnp.zeros((1, 40), dtype=jnp.int32).at[0, 33].set(1).at[0, 0].set(1)
+        packed = np.asarray(ref.pack_bits_u32(plane))
+        assert packed.shape == (1, 2)
+        assert packed[0, 0] == 1
+        assert packed[0, 1] == 2
+
+    def test_vmem_footprint_formula(self):
+        # 8x8 tiles over k=2048: 2*(8*2048)*2*4B + 256B accumulator.
+        b = vmem_footprint_bytes(8, 8, 2048, 16)
+        assert b == 4 * (2 * 8 * 2048 + 2 * 8 * 2048 + 64)
+        # A realistic TPU tiling (128x128 tiles, k blocked at 4096) must
+        # fit VMEM (16 MiB) with double buffering.
+        assert vmem_footprint_bytes(128, 128, 4096, 64) < 16 * 2**20

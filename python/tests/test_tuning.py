@@ -1,0 +1,58 @@
+"""Tile-tuning: selections must fit VMEM, align to the MXU, and remain
+correct when plugged into the kernel."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.binary_matmul import bitserial_matmul_mxu, vmem_footprint_bytes
+from compile.kernels.tuning import choose_tiles, MXU_DIM, VMEM_BUDGET_BYTES
+
+
+class TestChooseTiles:
+    def test_large_matmul_uses_mxu_tiles(self):
+        bm, bn, kb = choose_tiles(4096, 4096, 8192)
+        assert bm % MXU_DIM == 0 and bn % MXU_DIM == 0
+        assert kb >= MXU_DIM
+        assert vmem_footprint_bytes(bm, bn, kb, 1) <= VMEM_BUDGET_BYTES
+
+    def test_small_matmul_fits(self):
+        bm, bn, kb = choose_tiles(16, 16, 64)
+        assert bm <= 16 and bn <= 16 and kb <= 64
+        assert vmem_footprint_bytes(bm, bn, kb, 1) <= VMEM_BUDGET_BYTES
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(8, 4096),
+        n=st.integers(8, 4096),
+        k=st.integers(8, 65536),
+    )
+    def test_always_within_budget(self, m, n, k):
+        bm, bn, kb = choose_tiles(m, n, k)
+        assert bm >= 1 and bn >= 1 and kb >= 1
+        assert bm <= m and bn <= n and kb <= k
+        assert vmem_footprint_bytes(bm, bn, kb, 1) <= VMEM_BUDGET_BYTES
+
+    def test_bigger_budget_never_smaller_tiles(self):
+        small = choose_tiles(2048, 2048, 4096, budget=2 * 2**20)
+        large = choose_tiles(2048, 2048, 4096, budget=14 * 2**20)
+        assert large[0] * large[1] >= small[0] * small[1]
+
+    def test_selected_tiles_run_correctly(self):
+        # Use a selection (scaled down to interpret-friendly sizes) in
+        # the actual kernel and check exactness.
+        m = n = 16
+        k = 96
+        bm, bn, kb = choose_tiles(m, n, k)
+        assert kb == k, "k fits in one block at this size"
+        rng = np.random.default_rng(0)
+        lhs = rng.integers(0, 4, (m, k))
+        rhs = rng.integers(-4, 4, (k, n))
+        lp = ref.decompose(jnp.asarray(lhs), 2, False).astype(jnp.float32)
+        rp = ref.decompose(jnp.asarray(rhs.T), 3, True).astype(jnp.float32)
+        wl = ref.plane_weights(2, False).astype(jnp.float32)
+        wr = ref.plane_weights(3, True).astype(jnp.float32)
+        got = bitserial_matmul_mxu(lp, rp, wl, wr, bm=bm, bn=bn)
+        want = lhs.astype(np.int64) @ rhs.astype(np.int64)
+        np.testing.assert_array_equal(np.asarray(got).astype(np.int64), want)

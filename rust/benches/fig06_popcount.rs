@@ -1,0 +1,34 @@
+//! Fig. 6: popcount unit LUT usage and Fmax vs input bitwidth.
+//!
+//! Paper: least-squares fit ≈ 1 LUT per input bit; Fmax 320–650 MHz.
+
+use bismo::costmodel::linear_fit;
+use bismo::report::{f, Table};
+use bismo::synth::synth_popcount;
+use bismo::util::CsvWriter;
+
+fn main() {
+    let widths = [32u32, 64, 96, 128, 192, 256, 384, 512, 768, 1024];
+    let mut table = Table::new(
+        "Fig. 6 — popcount LUT usage & Fmax vs width",
+        &["width", "LUTs", "LUT/bit", "Fmax (MHz)"],
+    );
+    let mut csv = CsvWriter::new("results/fig06_popcount.csv", &["width", "luts", "fmax_mhz"]);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for &n in &widths {
+        let r = synth_popcount(n);
+        table.rowf(&[&n, &f(r.luts, 0), &f(r.luts / n as f64, 2), &f(r.fmax_mhz, 0)]);
+        csv.rowf(&[&n, &r.luts, &r.fmax_mhz]);
+        xs.push(n as f64);
+        ys.push(r.luts);
+    }
+    table.print();
+    let (slope, icept) = linear_fit(&xs, &ys);
+    println!(
+        "least-squares: LUTs = {slope:.3}·width + {icept:.1}   (paper: ~1 LUT/bit)"
+    );
+    println!("paper band: Fmax 320–650 MHz across widths");
+    let path = csv.finish().expect("csv");
+    println!("data -> {}", path.display());
+}

@@ -1,0 +1,37 @@
+//! Fig. 7: DPU LUT usage and LUT-per-binary-op vs D_k.
+//!
+//! Paper: 2.8 LUT/op at D_k=32 falling to 1.07 at D_k=1024;
+//! α_DPU = 2.04, β_DPU = 109.41; Fmax 300–350 MHz.
+
+use bismo::costmodel::linear_fit;
+use bismo::report::{f, Table};
+use bismo::synth::synth_dpu;
+use bismo::util::CsvWriter;
+
+fn main() {
+    let dks = [32u32, 64, 128, 256, 512, 1024];
+    let mut table = Table::new(
+        "Fig. 7 — DPU LUT usage & efficiency vs D_k",
+        &["D_k", "LUTs", "LUT/bin.op", "Fmax (MHz)"],
+    );
+    let mut csv = CsvWriter::new(
+        "results/fig07_dpu.csv",
+        &["dk", "luts", "lut_per_op", "fmax_mhz"],
+    );
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for &dk in &dks {
+        let r = synth_dpu(dk, 32);
+        let per_op = r.luts / (2.0 * dk as f64);
+        table.rowf(&[&dk, &f(r.luts, 0), &f(per_op, 2), &f(r.fmax_mhz, 0)]);
+        csv.rowf(&[&dk, &r.luts, &per_op, &r.fmax_mhz]);
+        xs.push(dk as f64);
+        ys.push(r.luts);
+    }
+    table.print();
+    let (alpha, beta) = linear_fit(&xs, &ys);
+    println!("fitted: LUT_DPU = {alpha:.2}·D_k + {beta:.1}   (paper: 2.04·D_k + 109.41)");
+    println!("paper: 2.8 LUT/op @ D_k=32 -> 1.07 @ D_k=1024; Fmax 300–350 MHz");
+    let path = csv.finish().expect("csv");
+    println!("data -> {}", path.display());
+}

@@ -1,0 +1,49 @@
+//! Fig. 8: predicted vs actual LUT usage over the 34-design validation
+//! sweep. Paper: 93.8% average accuracy, BRAM predictions 100% exact.
+
+use bismo::costmodel::{validation_sweep, CostModel};
+use bismo::report::{f, pct, Table};
+use bismo::util::CsvWriter;
+
+fn main() {
+    let model = CostModel::fit_from_synth();
+    println!(
+        "fitted constants: alpha={:.2} beta={:.1} (paper 2.04 / 109.41)",
+        model.alpha_dpu, model.beta_dpu
+    );
+    let pts = validation_sweep(&model);
+    let mut table = Table::new(
+        "Fig. 8 — predicted vs actual LUTs (34 designs)",
+        &["Dm", "Dk", "Dn", "predicted", "actual", "error", "BRAM ok"],
+    );
+    let mut csv = CsvWriter::new(
+        "results/fig08_costmodel.csv",
+        &["dm", "dk", "dn", "predicted_luts", "actual_luts", "rel_error"],
+    );
+    let mut acc_sum = 0.0;
+    let mut bram_exact = 0usize;
+    for p in &pts {
+        let ok = p.predicted_brams == p.actual_brams;
+        bram_exact += ok as usize;
+        acc_sum += p.lut_accuracy();
+        table.rowf(&[
+            &p.dm,
+            &p.dk,
+            &p.dn,
+            &f(p.predicted_luts, 0),
+            &f(p.actual_luts, 0),
+            &pct(p.lut_error()),
+            &ok,
+        ]);
+        csv.rowf(&[&p.dm, &p.dk, &p.dn, &p.predicted_luts, &p.actual_luts, &p.lut_error()]);
+    }
+    table.print();
+    println!(
+        "mean LUT accuracy: {} (paper: 93.8%)   BRAM exact: {}/{} (paper: 100%)",
+        pct(acc_sum / pts.len() as f64),
+        bram_exact,
+        pts.len()
+    );
+    let path = csv.finish().expect("csv");
+    println!("data -> {}", path.display());
+}

@@ -1,0 +1,36 @@
+//! Fig. 9: LUT cost-model prediction error vs design size.
+//!
+//! Paper: large designs predicted accurately; small designs
+//! overestimated (Vivado optimizes small designs harder).
+
+use bismo::costmodel::{validation_sweep, CostModel};
+use bismo::report::{f, pct, Table};
+use bismo::util::CsvWriter;
+
+fn main() {
+    let model = CostModel::fit_from_synth();
+    let mut pts = validation_sweep(&model);
+    pts.sort_by(|a, b| a.actual_luts.partial_cmp(&b.actual_luts).unwrap());
+    let mut table = Table::new(
+        "Fig. 9 — prediction error vs design size",
+        &["actual LUTs", "error"],
+    );
+    let mut csv = CsvWriter::new("results/fig09_error.csv", &["actual_luts", "rel_error"]);
+    for p in &pts {
+        table.rowf(&[&f(p.actual_luts, 0), &pct(p.lut_error())]);
+        csv.rowf(&[&p.actual_luts, &p.lut_error()]);
+    }
+    table.print();
+    // Quartile summary: smallest vs largest quarter of designs.
+    let q = pts.len() / 4;
+    let mean_err = |s: &[bismo::costmodel::ValidationPoint]| {
+        s.iter().map(|p| p.lut_error()).sum::<f64>() / s.len() as f64
+    };
+    println!(
+        "mean signed error: smallest quartile {} vs largest quartile {}  (paper: small overestimated, large accurate)",
+        pct(mean_err(&pts[..q])),
+        pct(mean_err(&pts[pts.len() - q..]))
+    );
+    let path = csv.finish().expect("csv");
+    println!("data -> {}", path.display());
+}

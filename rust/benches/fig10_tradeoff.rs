@@ -1,0 +1,50 @@
+//! Fig. 10: LUT-vs-BRAM tradeoff at constant performance.
+//!
+//! Three shapes delivering the same 1.6 binary TOPS at 200 MHz
+//! (D_m·D_n·D_k = 4096): larger D_k costs fewer LUTs per op but more
+//! BRAMs for bandwidth, and vice versa.
+
+use bismo::arch::BismoConfig;
+use bismo::costmodel::CostModel;
+use bismo::report::{f, Table};
+use bismo::synth::synth_instance;
+use bismo::util::CsvWriter;
+
+fn main() {
+    let shapes = [(8u32, 64u32, 8u32), (4, 256, 4), (2, 1024, 2)];
+    let model = CostModel::fit_from_synth();
+    let mut table = Table::new(
+        "Fig. 10 — LUT/op vs BRAM at 1.6 binary TOPS, 200 MHz",
+        &["(Dm,Dk,Dn)", "GOPS", "BRAMs", "LUT/bin.op", "total LUTs"],
+    );
+    let mut csv = CsvWriter::new(
+        "results/fig10_tradeoff.csv",
+        &["dm", "dk", "dn", "brams", "lut_per_op", "total_luts"],
+    );
+    for &(dm, dk, dn) in &shapes {
+        let cfg = BismoConfig {
+            dm,
+            dk,
+            dn,
+            bm: 1024,
+            bn: 1024,
+            ..BismoConfig::small()
+        };
+        assert_eq!(cfg.binary_ops_per_cycle(), 8192, "constant performance");
+        let s = synth_instance(&cfg);
+        let per_op = s.total_luts / cfg.binary_ops_per_cycle() as f64;
+        let brams = model.bram_total(&cfg);
+        table.rowf(&[
+            &format!("({dm},{dk},{dn})"),
+            &f(cfg.peak_binary_gops(), 1),
+            &brams,
+            &f(per_op, 3),
+            &f(s.total_luts, 0),
+        ]);
+        csv.rowf(&[&dm, &dk, &dn, &brams, &per_op, &s.total_luts]);
+    }
+    table.print();
+    println!("paper: larger D_k -> lower LUT/op but more BRAMs (and vice versa)");
+    let path = csv.finish().expect("csv");
+    println!("data -> {}", path.display());
+}

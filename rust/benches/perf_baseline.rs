@@ -1,0 +1,45 @@
+//! §Perf: CPU bit-serial gemm throughput (the Umuroglu & Jahre
+//! baseline) — single-threaded and multi-threaded, plus the i64
+//! reference gemm for context.
+
+use bismo::baseline::{binary_ops, gemm_bitserial, gemm_bitserial_parallel};
+use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
+use bismo::util::bench::{report, BenchTimer};
+use bismo::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xBA5E);
+    for (m, k, n, w, a) in [
+        (256usize, 4096usize, 256usize, 1u32, 1u32),
+        (256, 4096, 256, 2, 2),
+        (64, 8192, 64, 4, 4),
+    ] {
+        let am = IntMatrix::random(&mut rng, m, k, w, false);
+        let bm = IntMatrix::random(&mut rng, k, n, a, false);
+        let la = BitSerialMatrix::from_int(&am, w, false);
+        let rb = BitSerialMatrix::from_int(&bm.transpose(), a, false);
+        let ops = binary_ops(m as u64, k as u64, n as u64, w, a) as f64;
+        let t = BenchTimer::heavy();
+
+        let s = t.run(|| gemm_bitserial(&la, &rb));
+        report(
+            &format!("cpu_bitserial_{m}x{k}x{n}_w{w}a{a}_1t"),
+            &s,
+            Some((ops, "binop")),
+        );
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        let s = t.run(|| gemm_bitserial_parallel(&la, &rb, threads));
+        report(
+            &format!("cpu_bitserial_{m}x{k}x{n}_w{w}a{a}_{threads}t"),
+            &s,
+            Some((ops, "binop")),
+        );
+    }
+
+    // i64 dense reference for context.
+    let am = IntMatrix::random(&mut rng, 256, 1024, 8, true);
+    let bm = IntMatrix::random(&mut rng, 1024, 256, 8, true);
+    let t = BenchTimer::heavy();
+    let s = t.run(|| am.matmul(&bm));
+    report("cpu_i64_dense_256x1024x256", &s, None);
+}

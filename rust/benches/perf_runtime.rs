@@ -1,0 +1,43 @@
+//! §Perf: PJRT runtime — artifact compile time (one-off) and execute
+//! latency/throughput on the request path (Python is never involved).
+
+use bismo::bitmatrix::IntMatrix;
+use bismo::runtime::Runtime;
+use bismo::util::bench::{fmt_ns, report, BenchTimer};
+use bismo::util::Rng;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("skipping perf_runtime: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+
+    // One-off compile cost.
+    let t0 = Instant::now();
+    let exe = rt.load("bitserial_matmul_64x256x64_w4a4_ss").expect("load");
+    println!(
+        "artifact compile (cold) bitserial_matmul_64x256x64: {}",
+        fmt_ns(t0.elapsed().as_nanos() as f64)
+    );
+
+    let mut rng = Rng::new(0x9E);
+    let a = IntMatrix::random(&mut rng, 64, 256, 4, true);
+    let b = IntMatrix::random(&mut rng, 256, 64, 4, true);
+    let t = BenchTimer::default();
+    let s = t.run(|| exe.run_i32(&[&a, &b]).unwrap());
+    // 8 plane pairs * 2*m*k*n binary op equivalents.
+    let ops = 2.0 * 64.0 * 256.0 * 64.0 * 16.0;
+    report("pjrt_exec_matmul_64x256x64_w4a4", &s, Some((ops, "binop")));
+
+    let qnn = rt.load("qnn_mlp_b16_w4a2").expect("load qnn");
+    let x = IntMatrix::random(&mut rng, 16, 784, 2, false);
+    let w1 = IntMatrix::random(&mut rng, 784, 256, 4, true);
+    let w2 = IntMatrix::random(&mut rng, 256, 256, 4, true);
+    let w3 = IntMatrix::random(&mut rng, 256, 10, 4, true);
+    let s = t.run(|| qnn.run_i32(&[&x, &w1, &w2, &w3]).unwrap());
+    report("pjrt_exec_qnn_mlp_b16", &s, Some((16.0, "inference")));
+}

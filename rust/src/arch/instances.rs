@@ -1,0 +1,111 @@
+//! The six BISMO instances of Table IV, used for all runtime-performance
+//! experiments (Figs 12–13, stage overlap, Table V power rows).
+//!
+//! Buffer depths are not listed in the paper's table; they are chosen
+//! here to consume most of the Z7020's BRAM budget, matching the table's
+//! reported BRAM utilization as closely as our BRAM model (Eq. 2) allows
+//! (see `costmodel`). `B_m`/`B_n` are in `D_k`-bit words.
+
+use super::config::BismoConfig;
+
+/// Identifier of a Table IV instance (1-based, as in the paper).
+pub type InstanceId = u32;
+
+/// Return Table IV instance `id` (1..=6), at its default 200 MHz clock.
+///
+/// | # | D_m | D_k | D_n | peak GOPS |
+/// |---|-----|-----|-----|-----------|
+/// | 1 | 8   | 64  | 8   | 1638.4    |
+/// | 2 | 8   | 128 | 8   | 3276.8    |
+/// | 3 | 8   | 256 | 8   | 6553.6    |
+/// | 4 | 4   | 256 | 4   | 1638.4    |
+/// | 5 | 8   | 256 | 4   | 3276.8    |
+/// | 6 | 4   | 512 | 4   | 3276.8    |
+pub fn instance(id: InstanceId) -> BismoConfig {
+    let base = BismoConfig {
+        dm: 0,
+        dk: 0,
+        dn: 0,
+        bm: 0,
+        bn: 0,
+        br: 2,
+        acc_bits: 32,
+        fetch_bits: 64,
+        res_bits: 64,
+        fclk_mhz: 200,
+    };
+    match id {
+        // Dk=64 → 2 BRAM lanes/buffer-word: deep buffers are cheap, use
+        // 4096-deep to soak up BRAM like the paper's 86% utilization row.
+        1 => BismoConfig { dm: 8, dk: 64, dn: 8, bm: 4096, bn: 3072, ..base },
+        2 => BismoConfig { dm: 8, dk: 128, dn: 8, bm: 2048, bn: 2048, ..base },
+        3 => BismoConfig { dm: 8, dk: 256, dn: 8, bm: 1024, bn: 1024, ..base },
+        4 => BismoConfig { dm: 4, dk: 256, dn: 4, bm: 2048, bn: 2048, ..base },
+        5 => BismoConfig { dm: 8, dk: 256, dn: 4, bm: 1024, bn: 2048, ..base },
+        6 => BismoConfig { dm: 4, dk: 512, dn: 4, bm: 1024, bn: 1024, ..base },
+        _ => panic!("Table IV defines instances 1..=6, got {id}"),
+    }
+}
+
+/// All six Table IV instances in order.
+pub fn all_instances() -> Vec<(InstanceId, BismoConfig)> {
+    (1..=6).map(|i| (i, instance(i))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::platform::PYNQ_Z1;
+
+    #[test]
+    fn gops_match_table4() {
+        let expect = [1638.4, 3276.8, 6553.6, 1638.4, 3276.8, 3276.8];
+        for (i, &g) in expect.iter().enumerate() {
+            let c = instance(i as u32 + 1);
+            assert!(
+                (c.peak_binary_gops() - g).abs() < 1e-6,
+                "instance {} gops {}",
+                i + 1,
+                c.peak_binary_gops()
+            );
+        }
+    }
+
+    #[test]
+    fn all_valid() {
+        for (id, c) in all_instances() {
+            c.validate().unwrap_or_else(|e| panic!("instance {id}: {e}"));
+        }
+    }
+
+    #[test]
+    fn buffers_hold_meaningful_tiles() {
+        // Each instance must at least hold two bit-planes of an
+        // 8-row × 4096-bit tile per buffer for double buffering.
+        for (_, c) in all_instances() {
+            assert!(c.lhs_buf_bits() >= 2 * 4096);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "instances 1..=6")]
+    fn unknown_instance_panics() {
+        instance(7);
+    }
+
+    #[test]
+    fn bram_within_board_budget() {
+        // The BRAM cost of every preset must fit the Z7020's 140 BRAMs.
+        // (Uses the raw Eq. 2 array term; full model checked in costmodel.)
+        for (id, c) in all_instances() {
+            let lanes = (c.dk as u64 + 31) / 32;
+            let bm_t = (c.bm as u64 * c.dk as u64 / c.dk as u64 + 1023) / 1024;
+            let bn_t = (c.bn as u64 + 1023) / 1024;
+            let array = lanes * (c.dm as u64 * bm_t + c.dn as u64 * bn_t);
+            assert!(
+                PYNQ_Z1.brams >= array,
+                "instance {id} BRAM array cost {array} exceeds board budget"
+            );
+        }
+    }
+}

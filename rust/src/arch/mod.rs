@@ -1,0 +1,11 @@
+//! Hardware architecture description: overlay configuration parameters
+//! (the paper's Table I), target-platform description (PYNQ-Z1 / Z7020),
+//! and the Table IV instance presets used throughout the evaluation.
+
+mod config;
+mod instances;
+mod platform;
+
+pub use config::BismoConfig;
+pub use instances::{instance, all_instances, InstanceId};
+pub use platform::{Platform, PYNQ_Z1};

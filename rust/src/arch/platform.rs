@@ -1,0 +1,87 @@
+//! Target platform description. The paper evaluates on the Xilinx
+//! PYNQ-Z1 board (Zynq Z7020 SoC); the cost model checks resource budgets
+//! against it and the simulator takes its DRAM bandwidth from it.
+
+/// An FPGA platform: resource budget + memory system.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Platform {
+    /// Human-readable name.
+    pub name: &'static str,
+    /// Number of 6-input LUTs available.
+    pub luts: u64,
+    /// Number of 36-kbit BRAM blocks available.
+    pub brams: u64,
+    /// Peak DRAM bandwidth in bytes/second (shared across channels).
+    pub dram_bandwidth_bps: u64,
+    /// Width of one DRAM channel port in bits (AXI HP port on Zynq).
+    pub dram_channel_bits: u32,
+    /// DRAM read latency in accelerator cycles (DMA request to first
+    /// beat). Modelled as a constant; real Zynq HP-port latency varies
+    /// ~20–40 fabric cycles.
+    pub dram_latency_cycles: u64,
+}
+
+/// The board used throughout the paper's evaluation: PYNQ-Z1 with a
+/// Z7020 (53,200 LUTs, 140 BRAMs) and 3.2 GB/s of DRAM bandwidth.
+pub const PYNQ_Z1: Platform = Platform {
+    name: "PYNQ-Z1 (Xilinx Z7020)",
+    luts: 53_200,
+    brams: 140,
+    dram_bandwidth_bps: 3_200_000_000,
+    dram_channel_bits: 64,
+    dram_latency_cycles: 32,
+};
+
+impl Platform {
+    /// Does a (LUT, BRAM) requirement fit this device?
+    pub fn fits(&self, luts: u64, brams: u64) -> bool {
+        luts <= self.luts && brams <= self.brams
+    }
+
+    /// Utilization fractions for reporting (LUT, BRAM).
+    pub fn utilization(&self, luts: u64, brams: u64) -> (f64, f64) {
+        (
+            luts as f64 / self.luts as f64,
+            brams as f64 / self.brams as f64,
+        )
+    }
+
+    /// Maximum bytes/cycle one DMA channel can move at `fclk_mhz`,
+    /// accounting for the board-level DRAM bandwidth cap shared by all
+    /// channels.
+    pub fn channel_bytes_per_cycle(&self, fclk_mhz: u32, channel_bits: u32) -> f64 {
+        let channel = channel_bits as f64 / 8.0;
+        let board_cap = self.dram_bandwidth_bps as f64 / (fclk_mhz as f64 * 1e6);
+        channel.min(board_cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pynq_budget() {
+        assert!(PYNQ_Z1.fits(53_200, 140));
+        assert!(!PYNQ_Z1.fits(53_201, 140));
+        assert!(!PYNQ_Z1.fits(100, 141));
+    }
+
+    #[test]
+    fn utilization_fractions() {
+        let (l, b) = PYNQ_Z1.utilization(26_600, 70);
+        assert!((l - 0.5).abs() < 1e-9);
+        assert!((b - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn channel_rate_caps_at_board_bandwidth() {
+        // At 200 MHz a 64-bit channel wants 8 B/cycle = 1.6 GB/s < 3.2 GB/s cap.
+        let r = PYNQ_Z1.channel_bytes_per_cycle(200, 64);
+        assert!((r - 8.0).abs() < 1e-9);
+        // A hypothetical 512-bit channel at 200 MHz would want 12.8 GB/s,
+        // capped to 3.2 GB/s = 16 B/cycle.
+        let r = PYNQ_Z1.channel_bytes_per_cycle(200, 512);
+        assert!((r - 16.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,45 @@
+//! CPU bit-serial matrix multiplication — the software baseline of
+//! Umuroglu & Jahre ("Streamlined deployment for quantized neural
+//! networks", the paper's reference [5]) reimplemented in Rust.
+//!
+//! Serves three roles:
+//!
+//! 1. The **correctness oracle** for the overlay simulator, the PJRT
+//!    runtime path and the JAX/Pallas kernels (all must agree with it,
+//!    and it must agree with [`IntMatrix::matmul`]).
+//! 2. The **CPU comparison row** of Table VI.
+//! 3. A realistic performance baseline for the §Perf pass: word-level
+//!    AND + popcount is exactly what the DPU does, at 64-bit width.
+
+mod gemm;
+
+pub use gemm::{gemm_bitserial, gemm_bitserial_parallel};
+
+use crate::bitmatrix::IntMatrix;
+
+/// Binary-operation count of a `m×k×n` matmul at `w×a` bits, using the
+/// paper's convention: a binary dot product of length `k` is `2k` ops
+/// (AND + popcount-add), and the bit-serial expansion multiplies by the
+/// `w·a` plane pairs.
+pub fn binary_ops(m: u64, k: u64, n: u64, wbits: u32, abits: u32) -> u64 {
+    2 * m * k * n * wbits as u64 * abits as u64
+}
+
+/// Reference i64 matmul (bit-parallel CPU baseline; wraps
+/// [`IntMatrix::matmul`] for discoverability).
+pub fn gemm_i64(l: &IntMatrix, r: &IntMatrix) -> IntMatrix {
+    l.matmul(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_ops_counts_plane_pairs() {
+        // 1-bit 2×2×2: 2·2·2·2 = 16 ops.
+        assert_eq!(binary_ops(2, 2, 2, 1, 1), 16);
+        // Scaling with precision is multiplicative.
+        assert_eq!(binary_ops(2, 2, 2, 3, 2), 96);
+    }
+}

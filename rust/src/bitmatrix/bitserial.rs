@@ -1,0 +1,358 @@
+//! Bit-plane decomposition: the data representation of Algorithm 1.
+
+use super::int::IntMatrix;
+use super::plane_sign;
+use crate::util::ceil_div;
+
+/// A matrix decomposed into `bits` binary bit-planes, each bit-packed
+/// into `u64` words along the columns (`k`) dimension.
+///
+/// For an operand matrix `M` of width `bits`:
+///
+/// ```text
+/// M = Σ_{i=0}^{bits-1}  plane_sign(i) · 2^i · M[i]
+/// ```
+///
+/// where `M[i]` is binary and `plane_sign` is −1 for the MSB plane of a
+/// signed operand (two's complement), +1 otherwise. Storage is
+/// plane-major, then row-major: `planes[i][row][word]` flattened.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitSerialMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u32,
+    pub signed: bool,
+    /// `ceil(cols / 64)` — words per packed row.
+    pub words_per_row: usize,
+    data: Vec<u64>,
+}
+
+impl BitSerialMatrix {
+    /// All-zero decomposition.
+    pub fn zeros(rows: usize, cols: usize, bits: u32, signed: bool) -> Self {
+        assert!(bits >= 1 && bits <= 32, "1..=32 bit operands supported");
+        let words_per_row = ceil_div(cols as u64, 64) as usize;
+        BitSerialMatrix {
+            rows,
+            cols,
+            bits,
+            signed,
+            words_per_row,
+            data: vec![0; bits as usize * rows * words_per_row],
+        }
+    }
+
+    /// Decompose an integer matrix. Panics if any entry does not fit the
+    /// requested precision (validated inline — single pass).
+    pub fn from_int(m: &IntMatrix, bits: u32, signed: bool) -> Self {
+        let (lo, hi) = if signed {
+            (-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1)
+        } else {
+            (0, ((1u128 << bits) - 1) as i64)
+        };
+        let mut out = Self::zeros(m.rows, m.cols, bits, signed);
+        let mask = ((1u128 << bits) - 1) as u64;
+        // Word-wise packing: accumulate 64 columns per plane into local
+        // words, then store — ~10x faster than per-bit set_bit (this is
+        // on the coordinator's request path).
+        if bits == 1 {
+            // Binary fast path (the peak-performance workloads).
+            for r in 0..m.rows {
+                let row = m.row(r);
+                for (wi, colchunk) in row.chunks(64).enumerate() {
+                    let mut w = 0u64;
+                    for (bi, &v) in colchunk.iter().enumerate() {
+                        assert!(v >= lo && v <= hi, "entry {v} does not fit 1-bit");
+                        w |= ((v as u64) & 1) << bi;
+                    }
+                    let idx = out.idx(0, r, wi);
+                    out.data[idx] = w;
+                }
+            }
+            return out;
+        }
+        let mut words = vec![0u64; bits as usize];
+        for r in 0..m.rows {
+            let row = m.row(r);
+            for (wi, colchunk) in row.chunks(64).enumerate() {
+                words.iter_mut().for_each(|w| *w = 0);
+                for (bi, &v) in colchunk.iter().enumerate() {
+                    assert!(
+                        v >= lo && v <= hi,
+                        "matrix entry {v} does not fit {} {}-bit",
+                        if signed { "signed" } else { "unsigned" },
+                        bits
+                    );
+                    // Two's-complement bit pattern within `bits`; walk
+                    // only the set bits.
+                    let mut p = (v as u64) & mask;
+                    while p != 0 {
+                        words[p.trailing_zeros() as usize] |= 1u64 << bi;
+                        p &= p - 1;
+                    }
+                }
+                for (i, &w) in words.iter().enumerate() {
+                    let idx = out.idx(i as u32, r, wi);
+                    out.data[idx] = w;
+                }
+            }
+        }
+        out
+    }
+
+    /// Decompose the *transpose* of `m` without materializing it:
+    /// produces exactly `from_int(&m.transpose(), ...)` but in one pass
+    /// over `m` (the coordinator packs the RHS this way — fusing the
+    /// transpose saves a full 16-byte-per-element round trip).
+    pub fn from_int_transposed(m: &IntMatrix, bits: u32, signed: bool) -> Self {
+        let (lo, hi) = if signed {
+            (-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1)
+        } else {
+            (0, ((1u128 << bits) - 1) as i64)
+        };
+        let mask = ((1u128 << bits) - 1) as u64;
+        // Output: rows = m.cols, cols = m.rows (packed along m.rows).
+        let mut out = Self::zeros(m.cols, m.rows, bits, signed);
+        let wpr = out.words_per_row;
+        for r in 0..m.rows {
+            let (word_i, bitpos) = (r / 64, (r % 64) as u32);
+            let row = m.row(r);
+            for (c, &v) in row.iter().enumerate() {
+                assert!(
+                    v >= lo && v <= hi,
+                    "matrix entry {v} does not fit {} {}-bit",
+                    if signed { "signed" } else { "unsigned" },
+                    bits
+                );
+                let mut p = (v as u64) & mask;
+                while p != 0 {
+                    let plane = p.trailing_zeros() as usize;
+                    out.data[(plane * out.rows + c) * wpr + word_i] |= 1u64 << bitpos;
+                    p &= p - 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Recompose to integers — exact inverse of [`BitSerialMatrix::from_int`].
+    pub fn to_int(&self) -> IntMatrix {
+        IntMatrix::from_fn(self.rows, self.cols, |r, c| {
+            let mut v = 0i64;
+            for i in 0..self.bits {
+                if self.get_bit(i, r, c) {
+                    v += plane_sign(i, self.bits, self.signed) * (1i64 << i);
+                }
+            }
+            v
+        })
+    }
+
+    #[inline]
+    fn idx(&self, plane: u32, row: usize, word: usize) -> usize {
+        debug_assert!(plane < self.bits && row < self.rows && word < self.words_per_row);
+        (plane as usize * self.rows + row) * self.words_per_row + word
+    }
+
+    /// One packed row of one plane.
+    #[inline]
+    pub fn plane_row(&self, plane: u32, row: usize) -> &[u64] {
+        let base = self.idx(plane, row, 0);
+        &self.data[base..base + self.words_per_row]
+    }
+
+    #[inline]
+    pub fn get_bit(&self, plane: u32, row: usize, col: usize) -> bool {
+        let w = self.idx(plane, row, col / 64);
+        (self.data[w] >> (col % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set_bit(&mut self, plane: u32, row: usize, col: usize, v: bool) {
+        let w = self.idx(plane, row, col / 64);
+        let mask = 1u64 << (col % 64);
+        if v {
+            self.data[w] |= mask;
+        } else {
+            self.data[w] &= !mask;
+        }
+    }
+
+    /// Signed weight of plane `i`: `plane_sign(i) · 2^i`.
+    #[inline]
+    pub fn plane_weight(&self, i: u32) -> i64 {
+        plane_sign(i, self.bits, self.signed) * (1i64 << i)
+    }
+
+    /// Fraction of set bits in plane `i` (used by the sparse bit-skip
+    /// scheduler extension).
+    pub fn plane_density(&self, i: u32) -> f64 {
+        let mut ones = 0u64;
+        for r in 0..self.rows {
+            for &w in self.plane_row(i, r) {
+                ones += w.count_ones() as u64;
+            }
+        }
+        ones as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    /// Is plane `i` entirely zero? (bit-skip fast path)
+    pub fn plane_is_zero(&self, i: u32) -> bool {
+        (0..self.rows).all(|r| self.plane_row(i, r).iter().all(|&w| w == 0))
+    }
+
+    /// Binary dot product between a packed row of `self` and a packed row
+    /// of `other` (both along k): AND + popcount — exactly what one DPU
+    /// computes, at word granularity.
+    pub fn binary_row_dot(&self, plane: u32, row: usize, other: &BitSerialMatrix, oplane: u32, orow: usize) -> u64 {
+        debug_assert_eq!(self.cols, other.cols, "k mismatch");
+        let a = self.plane_row(plane, row);
+        let b = other.plane_row(oplane, orow);
+        a.iter()
+            .zip(b.iter())
+            .map(|(&x, &y)| (x & y).count_ones() as u64)
+            .sum()
+    }
+
+    /// Total payload size in bytes of the packed representation.
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+
+    /// Raw plane data (plane-major, row-major, little-endian words).
+    pub fn raw(&self) -> &[u64] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{property_sweep, Rng};
+
+    #[test]
+    fn from_int_transposed_equals_transpose_then_pack() {
+        property_sweep(0x7A5, 20, |rng, _| {
+            let rows = rng.index(70) + 1;
+            let cols = rng.index(70) + 1;
+            let bits = rng.index(8) as u32 + 1;
+            let signed = rng.chance(0.5);
+            let m = IntMatrix::random(rng, rows, cols, bits, signed);
+            let fused = BitSerialMatrix::from_int_transposed(&m, bits, signed);
+            let naive = BitSerialMatrix::from_int(&m.transpose(), bits, signed);
+            assert_eq!(fused, naive);
+        });
+    }
+
+    #[test]
+    fn roundtrip_unsigned() {
+        let mut rng = Rng::new(1);
+        for bits in [1u32, 2, 3, 4, 7, 8, 16] {
+            let m = IntMatrix::random(&mut rng, 5, 9, bits, false);
+            let bs = BitSerialMatrix::from_int(&m, bits, false);
+            assert_eq!(bs.to_int(), m, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_signed() {
+        let mut rng = Rng::new(2);
+        for bits in [1u32, 2, 3, 4, 7, 8, 16] {
+            let m = IntMatrix::random(&mut rng, 6, 5, bits, true);
+            let bs = BitSerialMatrix::from_int(&m, bits, true);
+            assert_eq!(bs.to_int(), m, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn paper_fig1_planes() {
+        // L = [[2,0],[1,3]] = 2·[[1,0],[0,1]] + 1·[[0,0],[1,1]]
+        let l = IntMatrix::from_slice(2, 2, &[2, 0, 1, 3]);
+        let bs = BitSerialMatrix::from_int(&l, 2, false);
+        // plane 0 (LSB): [[0,0],[1,1]]
+        assert!(!bs.get_bit(0, 0, 0) && !bs.get_bit(0, 0, 1));
+        assert!(bs.get_bit(0, 1, 0) && bs.get_bit(0, 1, 1));
+        // plane 1: [[1,0],[0,1]]
+        assert!(bs.get_bit(1, 0, 0) && !bs.get_bit(1, 0, 1));
+        assert!(!bs.get_bit(1, 1, 0) && bs.get_bit(1, 1, 1));
+        assert_eq!(bs.plane_weight(0), 1);
+        assert_eq!(bs.plane_weight(1), 2);
+    }
+
+    #[test]
+    fn signed_msb_weight_negative() {
+        let m = IntMatrix::from_slice(1, 1, &[-8]);
+        let bs = BitSerialMatrix::from_int(&m, 4, true);
+        assert_eq!(bs.plane_weight(3), -8);
+        assert!(bs.get_bit(3, 0, 0));
+        assert!(!bs.get_bit(0, 0, 0));
+        assert_eq!(bs.to_int().get(0, 0), -8);
+    }
+
+    #[test]
+    fn weighted_plane_sum_reconstructs() {
+        // Property: Σ_i weight(i)·plane_i == original, across shapes.
+        property_sweep(0xB15, 25, |rng, _| {
+            let rows = rng.index(6) + 1;
+            let cols = rng.index(130) + 1;
+            let bits = rng.index(8) as u32 + 1;
+            let signed = rng.chance(0.5);
+            let m = IntMatrix::random(rng, rows, cols, bits, signed);
+            let bs = BitSerialMatrix::from_int(&m, bits, signed);
+            let mut acc = IntMatrix::zeros(rows, cols);
+            for i in 0..bits {
+                let w = bs.plane_weight(i);
+                for r in 0..rows {
+                    for c in 0..cols {
+                        if bs.get_bit(i, r, c) {
+                            acc.set(r, c, acc.get(r, c) + w);
+                        }
+                    }
+                }
+            }
+            assert_eq!(acc, m);
+        });
+    }
+
+    #[test]
+    fn binary_row_dot_matches_naive() {
+        property_sweep(0xD07, 20, |rng, _| {
+            let k = rng.index(200) + 1;
+            let a = IntMatrix::random(rng, 1, k, 1, false);
+            let b = IntMatrix::random(rng, 1, k, 1, false);
+            let ab = BitSerialMatrix::from_int(&a, 1, false);
+            let bb = BitSerialMatrix::from_int(&b, 1, false);
+            let naive: i64 = (0..k).map(|i| a.get(0, i) * b.get(0, i)).sum();
+            assert_eq!(ab.binary_row_dot(0, 0, &bb, 0, 0), naive as u64);
+        });
+    }
+
+    #[test]
+    fn density_and_zero_planes() {
+        let m = IntMatrix::from_slice(2, 2, &[1, 1, 1, 1]); // only LSB set
+        let bs = BitSerialMatrix::from_int(&m, 3, false);
+        assert_eq!(bs.plane_density(0), 1.0);
+        assert_eq!(bs.plane_density(1), 0.0);
+        assert!(bs.plane_is_zero(2));
+        assert!(!bs.plane_is_zero(0));
+    }
+
+    #[test]
+    fn packing_crosses_word_boundaries() {
+        // 70 columns forces two words per row.
+        let m = IntMatrix::from_fn(1, 70, |_, c| (c >= 63) as i64);
+        let bs = BitSerialMatrix::from_int(&m, 1, false);
+        assert_eq!(bs.words_per_row, 2);
+        assert!(!bs.get_bit(0, 0, 62));
+        assert!(bs.get_bit(0, 0, 63));
+        assert!(bs.get_bit(0, 0, 69));
+        assert_eq!(bs.to_int(), m);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn from_int_checks_range() {
+        let m = IntMatrix::from_slice(1, 1, &[16]);
+        let _ = BitSerialMatrix::from_int(&m, 4, false);
+    }
+}

@@ -1,0 +1,207 @@
+//! Plain row-major integer matrix: the user-facing operand type and the
+//! correctness-reference domain.
+
+use crate::util::Rng;
+
+/// Row-major `i64` matrix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IntMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<i64>,
+}
+
+impl IntMatrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        IntMatrix {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn<F: FnMut(usize, usize) -> i64>(rows: usize, cols: usize, mut f: F) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        IntMatrix { rows, cols, data }
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_slice(rows: usize, cols: usize, v: &[i64]) -> Self {
+        assert_eq!(v.len(), rows * cols);
+        IntMatrix {
+            rows,
+            cols,
+            data: v.to_vec(),
+        }
+    }
+
+    /// Uniformly random matrix of `bits`-wide (optionally signed) entries.
+    pub fn random(rng: &mut Rng, rows: usize, cols: usize, bits: u32, signed: bool) -> Self {
+        Self::from_fn(rows, cols, |_, _| rng.operand(bits, signed))
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow one row.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Raw row-major data.
+    pub fn data(&self) -> &[i64] {
+        &self.data
+    }
+
+    /// Reference matrix product `self · rhs` in i64 (the oracle for every
+    /// other matmul path in the crate).
+    pub fn matmul(&self, rhs: &IntMatrix) -> IntMatrix {
+        assert_eq!(
+            self.cols, rhs.rows,
+            "matmul shape mismatch: {}×{} · {}×{}",
+            self.rows, self.cols, rhs.rows, rhs.cols
+        );
+        let mut out = IntMatrix::zeros(self.rows, rhs.cols);
+        for r in 0..self.rows {
+            for d in 0..self.cols {
+                let a = self.get(r, d);
+                if a == 0 {
+                    continue;
+                }
+                for c in 0..rhs.cols {
+                    out.data[r * rhs.cols + c] += a * rhs.get(d, c);
+                }
+            }
+        }
+        out
+    }
+
+    /// Transposed copy (cache-blocked; this sits on the coordinator's
+    /// request path for the RHS operand).
+    pub fn transpose(&self) -> IntMatrix {
+        const B: usize = 32;
+        let mut out = IntMatrix::zeros(self.cols, self.rows);
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    let row = &self.data[r * self.cols..];
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = row[c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Value range of the entries (min, max).
+    pub fn value_range(&self) -> (i64, i64) {
+        let mut lo = i64::MAX;
+        let mut hi = i64::MIN;
+        for &v in &self.data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if self.data.is_empty() {
+            (0, 0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    /// Does every entry fit in `bits` (signed or unsigned)?
+    pub fn fits(&self, bits: u32, signed: bool) -> bool {
+        let (lo, hi) = if signed {
+            (-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1)
+        } else {
+            (0, (1i64 << bits) - 1)
+        };
+        self.data.iter().all(|&v| v >= lo && v <= hi)
+    }
+}
+
+impl std::fmt::Display for IntMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                write!(f, "{:>6}", self.get(r, c))?;
+                if c + 1 < self.cols {
+                    write!(f, " ")?;
+                }
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fig1_example() {
+        // L = [[2,0],[1,3]], R = [[0,1],[1,2]] → P = [[0,2],[3,7]].
+        let l = IntMatrix::from_slice(2, 2, &[2, 0, 1, 3]);
+        let r = IntMatrix::from_slice(2, 2, &[0, 1, 1, 2]);
+        let p = l.matmul(&r);
+        assert_eq!(p, IntMatrix::from_slice(2, 2, &[0, 2, 3, 7]));
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(5);
+        let a = IntMatrix::random(&mut rng, 5, 7, 6, true);
+        let id = IntMatrix::from_fn(7, 7, |r, c| (r == c) as i64);
+        assert_eq!(a.matmul(&id), a);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(6);
+        let a = IntMatrix::random(&mut rng, 4, 9, 8, true);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn fits_bounds() {
+        let a = IntMatrix::from_slice(1, 2, &[0, 15]);
+        assert!(a.fits(4, false));
+        assert!(!a.fits(4, true));
+        assert!(a.fits(5, true));
+        let b = IntMatrix::from_slice(1, 2, &[-8, 7]);
+        assert!(b.fits(4, true));
+        assert!(!b.fits(4, false));
+    }
+
+    #[test]
+    fn value_range() {
+        let a = IntMatrix::from_slice(2, 2, &[-3, 0, 9, 1]);
+        assert_eq!(a.value_range(), (-3, 9));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn matmul_shape_checked() {
+        let a = IntMatrix::zeros(2, 3);
+        let b = IntMatrix::zeros(4, 2);
+        let _ = a.matmul(&b);
+    }
+}

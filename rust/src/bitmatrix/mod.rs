@@ -1,0 +1,68 @@
+//! Matrix representations for bit-serial computation.
+//!
+//! * [`IntMatrix`] — plain row-major `i64` matrix, the user-facing type
+//!   and the reference domain for correctness checks.
+//! * [`BitSerialMatrix`] — a matrix decomposed into bit-planes: binary
+//!   matrices `M[i]` such that `M = Σ_i sgn_i · 2^i · M[i]` (two's
+//!   complement for signed operands, so `sgn_{bits-1} = -1`). This is the
+//!   representation Algorithm 1 of the paper operates on, bit-packed into
+//!   `u64` words along the `k` (columns) dimension.
+//! * [`dram`] — the bit-packed main-memory layout fetched by the overlay
+//!   (plane-major, row-major, `D_k`-bit chunks).
+
+mod bitserial;
+mod int;
+pub mod dram;
+
+pub use bitserial::BitSerialMatrix;
+pub use int::IntMatrix;
+
+/// Weight sign of bit-plane `i` of a `bits`-wide operand: two's
+/// complement makes the MSB plane negative for signed operands
+/// (Algorithm 1, lines 5–7).
+#[inline]
+pub fn plane_sign(i: u32, bits: u32, signed: bool) -> i64 {
+    if signed && i == bits - 1 {
+        -1
+    } else {
+        1
+    }
+}
+
+/// Full weight of the (i, j) bit-plane pair: `sgnL·sgnR·2^{i+j}`.
+#[inline]
+pub fn pair_weight(i: u32, lbits: u32, lsigned: bool, j: u32, rbits: u32, rsigned: bool) -> i64 {
+    plane_sign(i, lbits, lsigned) * plane_sign(j, rbits, rsigned) * (1i64 << (i + j))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plane_sign_unsigned_always_positive() {
+        for i in 0..8 {
+            assert_eq!(plane_sign(i, 8, false), 1);
+        }
+    }
+
+    #[test]
+    fn plane_sign_signed_msb_negative() {
+        assert_eq!(plane_sign(7, 8, true), -1);
+        assert_eq!(plane_sign(6, 8, true), 1);
+        assert_eq!(plane_sign(0, 8, true), 1);
+        assert_eq!(plane_sign(0, 1, true), -1); // 1-bit signed = {-1? no: {0,-1}}
+    }
+
+    #[test]
+    fn pair_weight_combines() {
+        // Unsigned 2-bit × 2-bit: weights 1,2,2,4.
+        assert_eq!(pair_weight(0, 2, false, 0, 2, false), 1);
+        assert_eq!(pair_weight(1, 2, false, 0, 2, false), 2);
+        assert_eq!(pair_weight(1, 2, false, 1, 2, false), 4);
+        // Signed MSB on one side flips the sign.
+        assert_eq!(pair_weight(1, 2, true, 0, 2, false), -2);
+        // Both MSBs: positive again.
+        assert_eq!(pair_weight(1, 2, true, 1, 2, true), 4);
+    }
+}

@@ -1,0 +1,389 @@
+//! One overlay instance: pack → schedule → simulate → report.
+
+use crate::arch::{BismoConfig, Platform, PYNQ_Z1};
+use crate::baseline::gemm_bitserial;
+use crate::bitmatrix::dram::{DramImage, OperandLayout, ResultLayout};
+use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
+use crate::costmodel::CostModel;
+use crate::power::PowerModel;
+use crate::scheduler::{self, MatmulJob, Overlap, PlaneList};
+use crate::sim::{RunStats, SimError, Simulation};
+use crate::util::round_up;
+
+/// Operand precision for a matmul job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Precision {
+    pub wbits: u32,
+    pub abits: u32,
+    pub lsigned: bool,
+    pub rsigned: bool,
+}
+
+impl Precision {
+    pub fn unsigned(wbits: u32, abits: u32) -> Self {
+        Precision {
+            wbits,
+            abits,
+            lsigned: false,
+            rsigned: false,
+        }
+    }
+
+    pub fn signed(wbits: u32, abits: u32) -> Self {
+        Precision {
+            wbits,
+            abits,
+            lsigned: true,
+            rsigned: true,
+        }
+    }
+}
+
+/// Per-job options.
+#[derive(Clone, Copy, Debug)]
+pub struct MatmulOptions {
+    /// Stage overlap mode (default: full overlap).
+    pub overlap: Overlap,
+    /// Skip all-zero bit-planes (the paper's sparse extension).
+    pub bit_skip: bool,
+    /// Cross-check the simulator result against the CPU bit-serial
+    /// oracle (costs an extra software gemm).
+    pub verify: bool,
+}
+
+impl Default for MatmulOptions {
+    fn default() -> Self {
+        MatmulOptions {
+            overlap: Overlap::Full,
+            bit_skip: false,
+            verify: false,
+        }
+    }
+}
+
+/// Everything measured about one executed job.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Simulated clock cycles.
+    pub cycles: u64,
+    /// Wall-clock seconds at the configured clock.
+    pub seconds: f64,
+    /// Achieved binary GOPS.
+    pub gops: f64,
+    /// Fraction of the configuration's peak binary throughput.
+    pub efficiency: f64,
+    /// Full simulator statistics.
+    pub stats: RunStats,
+    /// Instruction counts (fetch/execute/result runs, syncs).
+    pub instructions: crate::isa::ProgramStats,
+    /// Estimated board power during the run (W).
+    pub power_w: f64,
+    /// Achieved GOPS per watt.
+    pub gops_per_w: f64,
+    /// Bit-planes actually scheduled (post bit-skip) on each side.
+    pub lhs_planes: u32,
+    pub rhs_planes: u32,
+}
+
+/// One configured overlay + its evaluation models.
+pub struct BismoContext {
+    cfg: BismoConfig,
+    platform: Platform,
+    cost: CostModel,
+    power: PowerModel,
+}
+
+impl BismoContext {
+    /// Build a context, checking the configuration is valid and fits
+    /// the platform's resource budget under the cost model.
+    pub fn new(cfg: BismoConfig) -> Result<Self, String> {
+        Self::on_platform(cfg, PYNQ_Z1)
+    }
+
+    pub fn on_platform(cfg: BismoConfig, platform: Platform) -> Result<Self, String> {
+        cfg.validate()?;
+        let cost = CostModel::paper();
+        if !cost.fits(&cfg, &platform) {
+            return Err(format!(
+                "configuration needs {:.0} LUTs / {} BRAMs; {} has {} / {}",
+                cost.lut_total(&cfg),
+                cost.bram_total(&cfg),
+                platform.name,
+                platform.luts,
+                platform.brams
+            ));
+        }
+        Ok(BismoContext {
+            cfg,
+            platform,
+            cost,
+            power: PowerModel::calibrated(),
+        })
+    }
+
+    pub fn config(&self) -> &BismoConfig {
+        &self.cfg
+    }
+
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
+    }
+
+    /// `P = A · B` on the overlay. `A` is `m×k` at `wbits`, `B` is
+    /// `k×n` at `abits`.
+    pub fn matmul(
+        &self,
+        a: &IntMatrix,
+        b: &IntMatrix,
+        prec: Precision,
+        opts: MatmulOptions,
+    ) -> Result<(IntMatrix, RunReport), String> {
+        if a.cols != b.rows {
+            return Err(format!(
+                "shape mismatch: {}×{} · {}×{}",
+                a.rows, a.cols, b.rows, b.cols
+            ));
+        }
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let la = BitSerialMatrix::from_int(a, prec.wbits, prec.lsigned);
+        // Transpose fused into packing (§Perf: saves an 8B/element pass).
+        let rb = BitSerialMatrix::from_int_transposed(b, prec.abits, prec.rsigned);
+
+        // DRAM placement: lhs | rhs | result, 8-byte aligned.
+        let lhs = OperandLayout::new(0, m, k, prec.wbits, self.cfg.dk);
+        let rhs = OperandLayout::new(
+            round_up(lhs.base + lhs.total_bytes(), 8),
+            n,
+            k,
+            prec.abits,
+            self.cfg.dk,
+        );
+        let res = ResultLayout::new(round_up(rhs.base + rhs.total_bytes(), 8), m, n);
+        let mut dram = DramImage::new((res.base + res.total_bytes()) as usize);
+        lhs.store(&mut dram, &la);
+        rhs.store(&mut dram, &rb);
+
+        let job = MatmulJob {
+            m,
+            k,
+            n,
+            wbits: prec.wbits,
+            abits: prec.abits,
+            lsigned: prec.lsigned,
+            rsigned: prec.rsigned,
+            lhs,
+            rhs,
+            res,
+        };
+
+        // Plane lists (bit-skip drops all-zero planes).
+        let lhs_planes = if opts.bit_skip {
+            PlaneList::nonzero(&la)
+        } else {
+            PlaneList::full(prec.wbits, prec.lsigned)
+        };
+        let rhs_planes = if opts.bit_skip {
+            PlaneList::nonzero(&rb)
+        } else {
+            PlaneList::full(prec.abits, prec.rsigned)
+        };
+        if lhs_planes.is_empty() || rhs_planes.is_empty() {
+            // An all-zero operand: result is all zeros, zero cycles.
+            let report = RunReport {
+                cycles: 0,
+                seconds: 0.0,
+                gops: 0.0,
+                efficiency: 0.0,
+                stats: RunStats::default(),
+                instructions: Default::default(),
+                power_w: self.power.idle_w(&self.cfg),
+                gops_per_w: 0.0,
+                lhs_planes: 0,
+                rhs_planes: 0,
+            };
+            return Ok((IntMatrix::zeros(m, n), report));
+        }
+
+        let prog = scheduler::compile_with_planes(
+            &job,
+            &self.cfg,
+            opts.overlap,
+            &lhs_planes,
+            &rhs_planes,
+        )?;
+        let instructions = prog.stats();
+
+        let mut sim = Simulation::new(self.cfg, &self.platform, dram)
+            .map_err(|e: SimError| e.to_string())?;
+        let stats = sim.run(&prog).map_err(|e| e.to_string())?;
+        let result = res.load(&sim.dram);
+
+        if opts.verify {
+            let expect = gemm_bitserial(&la, &rb);
+            if result != expect {
+                return Err("verification failed: simulator result != CPU oracle".into());
+            }
+        }
+
+        let seconds = stats.seconds_at(self.cfg.fclk_mhz);
+        let gops = stats.gops_at(self.cfg.fclk_mhz);
+        let power_w = self.power.full_w(&self.cfg);
+        let report = RunReport {
+            cycles: stats.cycles,
+            seconds,
+            gops,
+            efficiency: stats.efficiency(self.cfg.binary_ops_per_cycle()),
+            stats,
+            instructions,
+            power_w,
+            gops_per_w: gops / power_w,
+            lhs_planes: lhs_planes.len() as u32,
+            rhs_planes: rhs_planes.len() as u32,
+        };
+        Ok((result, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{property_sweep, Rng};
+
+    fn ctx() -> BismoContext {
+        BismoContext::new(BismoConfig::small()).unwrap()
+    }
+
+    #[test]
+    fn matmul_matches_reference() {
+        let c = ctx();
+        let mut rng = Rng::new(0xC0DE);
+        let a = IntMatrix::random(&mut rng, 6, 200, 3, true);
+        let b = IntMatrix::random(&mut rng, 200, 6, 3, true);
+        let (p, rep) = c
+            .matmul(&a, &b, Precision::signed(3, 3), MatmulOptions::default())
+            .unwrap();
+        assert_eq!(p, a.matmul(&b));
+        assert!(rep.cycles > 0);
+        assert!(rep.gops > 0.0);
+        assert!(rep.efficiency > 0.0 && rep.efficiency <= 1.0);
+        assert!(rep.power_w > 1.0);
+        assert_eq!(rep.lhs_planes, 3);
+    }
+
+    #[test]
+    fn verify_option_passes() {
+        let c = ctx();
+        let mut rng = Rng::new(2);
+        let a = IntMatrix::random(&mut rng, 4, 64, 2, false);
+        let b = IntMatrix::random(&mut rng, 64, 4, 2, false);
+        let opts = MatmulOptions {
+            verify: true,
+            ..Default::default()
+        };
+        c.matmul(&a, &b, Precision::unsigned(2, 2), opts).unwrap();
+    }
+
+    #[test]
+    fn precision_scales_runtime() {
+        // The paper's headline: runtime ≈ w·a·t of the binary case.
+        let c = ctx();
+        let mut rng = Rng::new(3);
+        let a1 = IntMatrix::random(&mut rng, 8, 2048, 1, false);
+        let b1 = IntMatrix::random(&mut rng, 2048, 8, 1, false);
+        let (_, r1) = c
+            .matmul(&a1, &b1, Precision::unsigned(1, 1), MatmulOptions::default())
+            .unwrap();
+        let a4 = IntMatrix::random(&mut rng, 8, 2048, 2, false);
+        let b4 = IntMatrix::random(&mut rng, 2048, 8, 2, false);
+        let (_, r4) = c
+            .matmul(&a4, &b4, Precision::unsigned(2, 2), MatmulOptions::default())
+            .unwrap();
+        let ratio = r4.cycles as f64 / r1.cycles as f64;
+        assert!(
+            ratio > 1.5 && ratio <= 4.2,
+            "2x2-bit vs binary cycle ratio {ratio:.2} (expect ≲ 4)"
+        );
+    }
+
+    #[test]
+    fn bit_skip_saves_cycles_and_stays_exact() {
+        let c = ctx();
+        // Even-valued operand: LSB plane empty.
+        let a = IntMatrix::from_fn(4, 128, |r, q| (((r + q) % 4) as i64) * 2);
+        let mut rng = Rng::new(4);
+        let b = IntMatrix::random(&mut rng, 128, 4, 2, false);
+        let dense = c
+            .matmul(&a, &b, Precision::unsigned(3, 2), MatmulOptions::default())
+            .unwrap();
+        let skip = c
+            .matmul(
+                &a,
+                &b,
+                Precision::unsigned(3, 2),
+                MatmulOptions {
+                    bit_skip: true,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(dense.0, skip.0);
+        assert!(skip.1.cycles < dense.1.cycles);
+        assert_eq!(skip.1.lhs_planes, 2);
+    }
+
+    #[test]
+    fn zero_operand_short_circuits() {
+        let c = ctx();
+        let a = IntMatrix::zeros(4, 64);
+        let mut rng = Rng::new(5);
+        let b = IntMatrix::random(&mut rng, 64, 4, 2, false);
+        let opts = MatmulOptions {
+            bit_skip: true,
+            ..Default::default()
+        };
+        let (p, rep) = c.matmul(&a, &b, Precision::unsigned(2, 2), opts).unwrap();
+        assert_eq!(p, IntMatrix::zeros(4, 4));
+        assert_eq!(rep.cycles, 0);
+    }
+
+    #[test]
+    fn oversized_config_rejected() {
+        let cfg = BismoConfig {
+            dm: 32,
+            dk: 1024,
+            dn: 32,
+            ..BismoConfig::small()
+        };
+        assert!(BismoContext::new(cfg).is_err());
+    }
+
+    #[test]
+    fn random_jobs_property() {
+        let c = ctx();
+        property_sweep(0xAB5, 8, |rng, _| {
+            let m = rng.index(12) + 1;
+            let k = rng.index(256) + 1;
+            let n = rng.index(12) + 1;
+            let w = rng.index(4) as u32 + 1;
+            let ab = rng.index(4) as u32 + 1;
+            let a = IntMatrix::random(rng, m, k, w, true);
+            let b = IntMatrix::random(rng, k, n, ab, false);
+            let prec = Precision {
+                wbits: w,
+                abits: ab,
+                lsigned: true,
+                rsigned: false,
+            };
+            let opts = MatmulOptions {
+                bit_skip: rng.chance(0.5),
+                ..Default::default()
+            };
+            let (p, _) = c.matmul(&a, &b, prec, opts).unwrap();
+            assert_eq!(p, a.matmul(&b));
+        });
+    }
+}

@@ -1,0 +1,18 @@
+//! The coordinator: BISMO's public matrix-multiplication API.
+//!
+//! [`BismoContext`] owns one overlay configuration and provides
+//! [`BismoContext::matmul`]: pack the operands into the bit-serial DRAM
+//! layout, compile the instruction streams, run the functional+timing
+//! simulator, and return the result with a full [`RunReport`]
+//! (cycles, GOPS, efficiency, stage breakdown, power estimate).
+//!
+//! [`BismoBatchRunner`] adds the request-loop shape: a pool of worker
+//! threads, each with its own simulated overlay instance, draining a
+//! shared job queue — the software topology a multi-accelerator
+//! deployment of BISMO would use.
+
+mod context;
+mod server;
+
+pub use context::{BismoContext, MatmulOptions, Precision, RunReport};
+pub use server::{BatchOutcome, BismoBatchRunner};

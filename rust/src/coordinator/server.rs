@@ -1,0 +1,137 @@
+//! Batched job execution: the request-loop topology.
+//!
+//! A deployment of BISMO serves many independent GEMM jobs (e.g. the
+//! layers of many concurrent QNN inferences). [`BismoBatchRunner`] owns
+//! a pool of worker threads, each standing for one overlay instance,
+//! draining a shared queue — the same leader/worker shape a PCIe
+//! multi-FPGA host process would use, with the simulator in place of
+//! the device.
+
+use super::context::{BismoContext, MatmulOptions, Precision, RunReport};
+use crate::arch::BismoConfig;
+use crate::bitmatrix::IntMatrix;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Result of one job in a batch.
+pub struct BatchOutcome {
+    pub index: usize,
+    pub result: Result<(IntMatrix, RunReport), String>,
+}
+
+/// Fixed pool of simulated overlay workers.
+pub struct BismoBatchRunner {
+    cfg: BismoConfig,
+    workers: usize,
+}
+
+impl BismoBatchRunner {
+    pub fn new(cfg: BismoConfig, workers: usize) -> Result<Self, String> {
+        // Validate once up front (each worker builds its own context).
+        BismoContext::new(cfg)?;
+        Ok(BismoBatchRunner {
+            cfg,
+            workers: workers.max(1),
+        })
+    }
+
+    /// Run all jobs, preserving input order in the output.
+    pub fn run_batch(
+        &self,
+        jobs: &[(IntMatrix, IntMatrix, Precision, MatmulOptions)],
+    ) -> Vec<BatchOutcome> {
+        let next = AtomicUsize::new(0);
+        let out: Mutex<Vec<Option<BatchOutcome>>> =
+            Mutex::new((0..jobs.len()).map(|_| None).collect());
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(jobs.len().max(1)) {
+                scope.spawn(|| {
+                    // One overlay per worker.
+                    let ctx = match BismoContext::new(self.cfg) {
+                        Ok(c) => c,
+                        Err(_) => return, // validated in new(); unreachable
+                    };
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        let (a, b, prec, opts) = &jobs[i];
+                        let result = ctx.matmul(a, b, *prec, *opts);
+                        out.lock().unwrap()[i] = Some(BatchOutcome { index: i, result });
+                    }
+                });
+            }
+        });
+        out.into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("all jobs completed"))
+            .collect()
+    }
+
+    /// Aggregate throughput of a batch: total binary ops / total
+    /// simulated seconds (jobs run on `workers` parallel overlays).
+    pub fn batch_gops(&self, outcomes: &[BatchOutcome]) -> f64 {
+        let mut total_ops = 0.0;
+        let mut total_secs = 0.0f64;
+        for o in outcomes {
+            if let Ok((_, rep)) = &o.result {
+                total_ops += rep.gops * rep.seconds * 1e9;
+                total_secs += rep.seconds;
+            }
+        }
+        if total_secs == 0.0 {
+            0.0
+        } else {
+            total_ops / (total_secs / self.workers as f64) / 1e9
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn batch_matches_serial_and_orders() {
+        let runner = BismoBatchRunner::new(BismoConfig::small(), 4).unwrap();
+        let mut rng = Rng::new(77);
+        let jobs: Vec<_> = (0..10)
+            .map(|_| {
+                let k = rng.index(128) + 1;
+                let a = IntMatrix::random(&mut rng, 4, k, 2, false);
+                let b = IntMatrix::random(&mut rng, k, 4, 2, false);
+                (a, b, Precision::unsigned(2, 2), MatmulOptions::default())
+            })
+            .collect();
+        let outcomes = runner.run_batch(&jobs);
+        assert_eq!(outcomes.len(), 10);
+        for (i, o) in outcomes.iter().enumerate() {
+            assert_eq!(o.index, i);
+            let (p, _) = o.result.as_ref().unwrap();
+            assert_eq!(*p, jobs[i].0.matmul(&jobs[i].1), "job {i}");
+        }
+        assert!(runner.batch_gops(&outcomes) > 0.0);
+    }
+
+    #[test]
+    fn single_worker_works() {
+        let runner = BismoBatchRunner::new(BismoConfig::small(), 1).unwrap();
+        let mut rng = Rng::new(78);
+        let a = IntMatrix::random(&mut rng, 2, 64, 1, false);
+        let b = IntMatrix::random(&mut rng, 64, 2, 1, false);
+        let jobs = vec![(a, b, Precision::unsigned(1, 1), MatmulOptions::default())];
+        let outcomes = runner.run_batch(&jobs);
+        assert!(outcomes[0].result.is_ok());
+    }
+
+    #[test]
+    fn empty_batch_ok() {
+        let runner = BismoBatchRunner::new(BismoConfig::small(), 2).unwrap();
+        let outcomes = runner.run_batch(&[]);
+        assert!(outcomes.is_empty());
+        assert_eq!(runner.batch_gops(&outcomes), 0.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Linear least squares via normal equations + Gaussian elimination.
+//! Used to fit the cost-model constants (paper §IV-A) and the power
+//! model (Table V).
+
+/// Solve `min ‖X·β − y‖²` for β. `xs[i]` is the feature row of sample
+/// `i` (include a constant-1 column for an intercept).
+pub fn least_squares(xs: &[Vec<f64>], ys: &[f64]) -> Vec<f64> {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    let p = xs[0].len();
+    assert!(xs.iter().all(|r| r.len() == p), "ragged feature rows");
+    assert!(xs.len() >= p, "need at least as many samples as features");
+
+    // Normal equations: (XᵀX) β = Xᵀy.
+    let mut a = vec![vec![0.0; p]; p];
+    let mut b = vec![0.0; p];
+    for (row, &y) in xs.iter().zip(ys) {
+        for i in 0..p {
+            b[i] += row[i] * y;
+            for j in 0..p {
+                a[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    solve(a, b)
+}
+
+/// Gaussian elimination with partial pivoting.
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // Pivot.
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        assert!(
+            d.abs() > 1e-12,
+            "singular system (collinear features) at column {col}"
+        );
+        for r in (col + 1)..n {
+            let f = a[r][col] / d;
+            for c in col..n {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for r in (0..n).rev() {
+        let mut s = b[r];
+        for c in (r + 1)..n {
+            s -= a[r][c] * x[c];
+        }
+        x[r] = s / a[r][r];
+    }
+    x
+}
+
+/// Convenience: fit `y = slope·x + intercept`. Returns (slope, intercept).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    let rows: Vec<Vec<f64>> = xs.iter().map(|&x| vec![x, 1.0]).collect();
+    let beta = least_squares(&rows, ys);
+    (beta[0], beta[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovered() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 2.5 * x - 1.0).collect();
+        let (m, c) = linear_fit(&xs, &ys);
+        assert!((m - 2.5).abs() < 1e-9);
+        assert!((c + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noisy_line_close() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| 3.0 * x + 10.0 + if i % 2 == 0 { 0.5 } else { -0.5 })
+            .collect();
+        let (m, c) = linear_fit(&xs, &ys);
+        assert!((m - 3.0).abs() < 0.01);
+        assert!((c - 10.0).abs() < 0.6);
+    }
+
+    #[test]
+    fn multivariate_plane() {
+        // y = 2a + 3b + 5
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for a in 0..5 {
+            for b in 0..5 {
+                xs.push(vec![a as f64, b as f64, 1.0]);
+                ys.push(2.0 * a as f64 + 3.0 * b as f64 + 5.0);
+            }
+        }
+        let beta = least_squares(&xs, &ys);
+        assert!((beta[0] - 2.0).abs() < 1e-9);
+        assert!((beta[1] - 3.0).abs() < 1e-9);
+        assert!((beta[2] - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "singular")]
+    fn collinear_detected() {
+        let xs = vec![vec![1.0, 2.0], vec![2.0, 4.0], vec![3.0, 6.0]];
+        let ys = vec![1.0, 2.0, 3.0];
+        let _ = least_squares(&xs, &ys);
+    }
+}

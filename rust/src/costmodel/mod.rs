@@ -1,0 +1,280 @@
+//! The BISMO hardware cost model (paper §III-B, Eqs 1–2).
+//!
+//! ```text
+//! LUT_total  = LUT_base + D_m·D_n·(LUT_DPU + LUT_res)      (1a–b)
+//! LUT_DPU    = α_DPU·D_k + β_DPU                           (1c)
+//! BRAM_total = BRAM_base
+//!            + ceil(D_k/32)·(D_m·ceil(B_m/1024) + D_n·ceil(B_n/1024))  (2)
+//! ```
+//!
+//! Two sets of constants are provided: [`CostModel::paper`] uses the
+//! values the authors fitted from Vivado synthesis (α=2.04, β=109.41,
+//! LUT_base=718, LUT_res=120.1), and [`CostModel::fit_from_synth`]
+//! re-derives them by least squares over this crate's virtual-synthesis
+//! sweep — the same procedure the paper used, applied to our substrate
+//! (DESIGN.md §Substitutions). Fig. 8/9's "actual" values come from
+//! [`crate::synth::synth_instance`].
+
+pub mod fit;
+
+pub use fit::{least_squares, linear_fit};
+
+use crate::arch::{BismoConfig, Platform};
+use crate::synth::{synth_dpu, synth_instance};
+use crate::util::ceil_div;
+
+/// LUT/BRAM cost model constants.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    /// LUTs per popcount input bit in a DPU (Eq. 1c slope).
+    pub alpha_dpu: f64,
+    /// Fixed per-DPU LUTs: shifter, negator, accumulator (Eq. 1c offset).
+    pub beta_dpu: f64,
+    /// DPA-size-independent LUTs: DMA engines etc. (Eq. 1a).
+    pub lut_base: f64,
+    /// Per-DPU result-generation LUTs (Eq. 1b).
+    pub lut_res: f64,
+    /// DPA-size-independent BRAMs (Eq. 2a).
+    pub bram_base: u64,
+}
+
+impl CostModel {
+    /// Constants as fitted in the paper (§IV-A).
+    pub fn paper() -> Self {
+        CostModel {
+            alpha_dpu: 2.04,
+            beta_dpu: 109.41,
+            lut_base: 718.0,
+            lut_res: 120.1,
+            bram_base: 1,
+        }
+    }
+
+    /// Re-fit α/β from this crate's virtual synthesis over the Fig. 7
+    /// `D_k` sweep, keeping the stage characterizations for base/res.
+    pub fn fit_from_synth() -> Self {
+        let dks = [32u32, 64, 128, 256, 512, 1024];
+        let xs: Vec<f64> = dks.iter().map(|&d| d as f64).collect();
+        let ys: Vec<f64> = dks.iter().map(|&d| synth_dpu(d, 32).luts).collect();
+        let (alpha, beta) = linear_fit(&xs, &ys);
+        CostModel {
+            alpha_dpu: alpha,
+            beta_dpu: beta,
+            lut_base: 718.0,
+            lut_res: 120.1,
+            bram_base: 1,
+        }
+    }
+
+    /// Eq. 1c: LUTs of one DPU.
+    pub fn lut_dpu(&self, dk: u32) -> f64 {
+        self.alpha_dpu * dk as f64 + self.beta_dpu
+    }
+
+    /// Eq. 1b: DPA-size-dependent LUTs.
+    pub fn lut_array(&self, cfg: &BismoConfig) -> f64 {
+        (cfg.dm * cfg.dn) as f64 * (self.lut_dpu(cfg.dk) + self.lut_res)
+    }
+
+    /// Eq. 1a: total LUTs.
+    pub fn lut_total(&self, cfg: &BismoConfig) -> f64 {
+        self.lut_base + self.lut_array(cfg)
+    }
+
+    /// Eq. 2b: matrix-buffer BRAMs.
+    pub fn bram_array(&self, cfg: &BismoConfig) -> u64 {
+        ceil_div(cfg.dk as u64, 32)
+            * (cfg.dm as u64 * ceil_div(cfg.bm as u64, 1024)
+                + cfg.dn as u64 * ceil_div(cfg.bn as u64, 1024))
+    }
+
+    /// Eq. 2a: total BRAMs.
+    pub fn bram_total(&self, cfg: &BismoConfig) -> u64 {
+        self.bram_base + self.bram_array(cfg)
+    }
+
+    /// Does `cfg` fit on `platform` under this model?
+    pub fn fits(&self, cfg: &BismoConfig, platform: &Platform) -> bool {
+        platform.fits(self.lut_total(cfg).round() as u64, self.bram_total(cfg))
+    }
+}
+
+/// One Fig. 8 validation point: model prediction vs virtual synthesis.
+#[derive(Clone, Copy, Debug)]
+pub struct ValidationPoint {
+    pub dm: u32,
+    pub dk: u32,
+    pub dn: u32,
+    pub predicted_luts: f64,
+    pub actual_luts: f64,
+    pub predicted_brams: u64,
+    pub actual_brams: u64,
+}
+
+impl ValidationPoint {
+    /// Relative LUT error (signed; positive = overestimate).
+    pub fn lut_error(&self) -> f64 {
+        (self.predicted_luts - self.actual_luts) / self.actual_luts
+    }
+
+    /// Prediction accuracy as the paper reports it (1 − |rel. error|).
+    pub fn lut_accuracy(&self) -> f64 {
+        1.0 - self.lut_error().abs()
+    }
+}
+
+/// The paper's 34-design validation sweep (Fig. 8/9): every
+/// `(D_m=D_n ∈ {2,4,8}) × (D_k ∈ {64,128,256})`-ish grid point from
+/// (2,64,2) to (8,256,8), evaluated against virtual synthesis.
+pub fn validation_sweep(model: &CostModel) -> Vec<ValidationPoint> {
+    let mut out = Vec::new();
+    for &dm in &[2u32, 4, 8] {
+        for &dn in &[2u32, 4, 8] {
+            for &dk in &[64u32, 128, 256] {
+                // Match the paper's range: (2,64,2) .. (8,256,8), and
+                // include the asymmetric shapes.
+                let cfg = BismoConfig {
+                    dm,
+                    dk,
+                    dn,
+                    bm: 1024,
+                    bn: 1024,
+                    ..BismoConfig::small()
+                };
+                let s = synth_instance(&cfg);
+                out.push(ValidationPoint {
+                    dm,
+                    dk,
+                    dn,
+                    predicted_luts: model.lut_total(&cfg),
+                    actual_luts: s.total_luts,
+                    predicted_brams: model.bram_total(&cfg),
+                    actual_brams: s.brams,
+                });
+            }
+        }
+    }
+    // 27 symmetric+asymmetric points; add 7 extra D_k=32/512 shapes to
+    // reach the paper's 34 designs.
+    for &(dm, dk, dn) in &[
+        (2u32, 32u32, 2u32),
+        (4, 32, 4),
+        (8, 32, 8),
+        (2, 512, 2),
+        (4, 512, 4),
+        (2, 128, 8),
+        (8, 128, 2),
+    ] {
+        let cfg = BismoConfig {
+            dm,
+            dk,
+            dn,
+            bm: 1024,
+            bn: 1024,
+            ..BismoConfig::small()
+        };
+        let s = synth_instance(&cfg);
+        out.push(ValidationPoint {
+            dm,
+            dk,
+            dn,
+            predicted_luts: model.lut_total(&cfg),
+            actual_luts: s.total_luts,
+            predicted_brams: model.bram_total(&cfg),
+            actual_brams: s.brams,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{instance, PYNQ_Z1};
+
+    #[test]
+    fn paper_constants_reproduce_table4_scale() {
+        // With the paper's constants, Table IV LUT counts come out
+        // within ~25% — note the paper's own Eq. 1 applied to its own
+        // Table IV rows shows the same gap (e.g. instance #1: predicted
+        // 23.8k vs measured 19.5k, +22%), the full-build optimization
+        // effect Fig. 9 discusses.
+        let m = CostModel::paper();
+        let expect = [19545.0, 27740.0, 45573.0, 13352.0, 24202.0, 21755.0];
+        for (i, &e) in expect.iter().enumerate() {
+            let cfg = instance(i as u32 + 1);
+            let got = m.lut_total(&cfg);
+            let rel = (got - e).abs() / e;
+            assert!(
+                rel < 0.25,
+                "instance {}: model {got:.0} vs paper {e} ({:.0}%)",
+                i + 1,
+                rel * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn fitted_constants_near_paper() {
+        let m = CostModel::fit_from_synth();
+        assert!(
+            (1.6..=2.5).contains(&m.alpha_dpu),
+            "alpha {} vs paper 2.04",
+            m.alpha_dpu
+        );
+        assert!(
+            (60.0..=220.0).contains(&m.beta_dpu),
+            "beta {} vs paper 109.41",
+            m.beta_dpu
+        );
+    }
+
+    #[test]
+    fn validation_sweep_accuracy() {
+        // Paper: 93.8% average accuracy; our fitted model against our
+        // virtual synthesis should be at least 90%.
+        let m = CostModel::fit_from_synth();
+        let pts = validation_sweep(&m);
+        assert_eq!(pts.len(), 34);
+        let mean_acc: f64 =
+            pts.iter().map(|p| p.lut_accuracy()).sum::<f64>() / pts.len() as f64;
+        assert!(mean_acc > 0.90, "mean accuracy {:.3}", mean_acc);
+    }
+
+    #[test]
+    fn bram_predictions_exact_on_sweep() {
+        // Paper: "BRAM predictions were 100% accurate".
+        let m = CostModel::fit_from_synth();
+        for p in validation_sweep(&m) {
+            assert_eq!(p.predicted_brams, p.actual_brams);
+        }
+    }
+
+    #[test]
+    fn small_designs_overestimated() {
+        // Fig. 9's observation: the model overestimates small designs.
+        let m = CostModel::fit_from_synth();
+        let pts = validation_sweep(&m);
+        let small: Vec<&ValidationPoint> =
+            pts.iter().filter(|p| p.dm == 2 && p.dn == 2).collect();
+        let large: Vec<&ValidationPoint> =
+            pts.iter().filter(|p| p.dm == 8 && p.dn == 8).collect();
+        let err = |v: &[&ValidationPoint]| {
+            v.iter().map(|p| p.lut_error().abs()).sum::<f64>() / v.len() as f64
+        };
+        assert!(
+            err(&small) > err(&large),
+            "small {:.3} vs large {:.3}",
+            err(&small),
+            err(&large)
+        );
+    }
+
+    #[test]
+    fn instances_fit_pynq() {
+        let m = CostModel::paper();
+        for (id, cfg) in crate::arch::all_instances() {
+            assert!(m.fits(&cfg, &PYNQ_Z1), "instance {id} should fit Z7020");
+        }
+    }
+}

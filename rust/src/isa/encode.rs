@@ -1,0 +1,270 @@
+//! Fixed 128-bit binary encoding of BISMO instructions.
+//!
+//! This is the contract a hardware instruction decoder would implement:
+//! every field has a fixed (offset, width) slot and encoding asserts the
+//! value fits. Field map (LSB-first offsets into the 128-bit word):
+//!
+//! ```text
+//! [0:2)   kind      0=Wait 1=Signal 2=Run
+//! [2:4)   stage     0=Fetch 1=Execute 2=Result
+//! Wait/Signal:
+//! [4:6)   channel   0=F→E 1=E→F 2=E→R 3=R→E
+//! RunFetch (stage=0):
+//! [4:36)  dram_base/8        [36:52) block_bytes/8
+//! [52:68) block_stride/8     [68:84) num_blocks
+//! [84:100) buf_offset        [100:106) buf_start
+//! [106:112) buf_range        [112:126) words_per_buf
+//! RunExecute (stage=1):
+//! [4:20)  lhs_offset         [20:36) rhs_offset
+//! [36:52) num_chunks         [52:58) shift
+//! [58]    negate  [59] acc_reset  [60] commit_result
+//! RunResult (stage=2):
+//! [4:36)  dram_base/4        [36:64) offset/4
+//! [64:72) rows               [72:80) cols
+//! [80:104) row_stride_bytes/4
+//! ```
+
+use super::{ExecuteRun, FetchRun, Instr, ResultRun, Stage, SyncChannel};
+
+/// Insert `value` into `word` at `[off, off+width)`, asserting range.
+fn put(word: &mut u128, off: u32, width: u32, value: u64, what: &str) {
+    assert!(
+        width == 64 || (value >> width) == 0,
+        "ISA field {what} = {value} does not fit {width} bits"
+    );
+    *word |= (value as u128) << off;
+}
+
+fn get(word: u128, off: u32, width: u32) -> u64 {
+    ((word >> off) & ((1u128 << width) - 1)) as u64
+}
+
+fn chan_code(c: SyncChannel) -> u64 {
+    match c {
+        SyncChannel::FetchToExecute => 0,
+        SyncChannel::ExecuteToFetch => 1,
+        SyncChannel::ExecuteToResult => 2,
+        SyncChannel::ResultToExecute => 3,
+    }
+}
+
+fn chan_from(code: u64) -> SyncChannel {
+    match code {
+        0 => SyncChannel::FetchToExecute,
+        1 => SyncChannel::ExecuteToFetch,
+        2 => SyncChannel::ExecuteToResult,
+        _ => SyncChannel::ResultToExecute,
+    }
+}
+
+fn stage_code(s: Stage) -> u64 {
+    match s {
+        Stage::Fetch => 0,
+        Stage::Execute => 1,
+        Stage::Result => 2,
+    }
+}
+
+/// Encode an instruction (as residing in `stage`'s queue) to 128 bits.
+///
+/// Panics if any field exceeds its encoding slot — the same values the
+/// hardware's instruction-word layout could not express.
+pub fn encode(instr: &Instr, stage: Stage) -> u128 {
+    let mut w = 0u128;
+    put(&mut w, 2, 2, stage_code(stage), "stage");
+    match instr {
+        Instr::Wait(c) => {
+            put(&mut w, 0, 2, 0, "kind");
+            put(&mut w, 4, 2, chan_code(*c), "channel");
+        }
+        Instr::Signal(c) => {
+            put(&mut w, 0, 2, 1, "kind");
+            put(&mut w, 4, 2, chan_code(*c), "channel");
+        }
+        Instr::Fetch(f) => {
+            assert_eq!(stage, Stage::Fetch, "RunFetch must encode in fetch queue");
+            put(&mut w, 0, 2, 2, "kind");
+            assert_eq!(f.dram_base % 8, 0);
+            assert_eq!(f.block_bytes % 8, 0);
+            assert_eq!(f.block_stride_bytes % 8, 0);
+            put(&mut w, 4, 32, f.dram_base / 8, "dram_base/8");
+            put(&mut w, 36, 16, (f.block_bytes / 8) as u64, "block_bytes/8");
+            put(&mut w, 52, 16, (f.block_stride_bytes / 8) as u64, "block_stride/8");
+            put(&mut w, 68, 16, f.num_blocks as u64, "num_blocks");
+            put(&mut w, 84, 16, f.buf_offset as u64, "buf_offset");
+            put(&mut w, 100, 6, f.buf_start as u64, "buf_start");
+            put(&mut w, 106, 6, f.buf_range as u64, "buf_range");
+            put(&mut w, 112, 14, f.words_per_buf as u64, "words_per_buf");
+        }
+        Instr::Execute(e) => {
+            assert_eq!(stage, Stage::Execute);
+            put(&mut w, 0, 2, 2, "kind");
+            put(&mut w, 4, 16, e.lhs_offset as u64, "lhs_offset");
+            put(&mut w, 20, 16, e.rhs_offset as u64, "rhs_offset");
+            put(&mut w, 36, 16, e.num_chunks as u64, "num_chunks");
+            put(&mut w, 52, 6, e.shift as u64, "shift");
+            put(&mut w, 58, 1, e.negate as u64, "negate");
+            put(&mut w, 59, 1, e.acc_reset as u64, "acc_reset");
+            put(&mut w, 60, 1, e.commit_result as u64, "commit_result");
+        }
+        Instr::Result(r) => {
+            assert_eq!(stage, Stage::Result);
+            put(&mut w, 0, 2, 2, "kind");
+            assert_eq!(r.dram_base % 4, 0);
+            assert_eq!(r.offset % 4, 0);
+            assert_eq!(r.row_stride_bytes % 4, 0);
+            put(&mut w, 4, 32, r.dram_base / 4, "dram_base/4");
+            put(&mut w, 36, 28, r.offset / 4, "offset/4");
+            put(&mut w, 64, 8, r.rows as u64, "rows");
+            put(&mut w, 72, 8, r.cols as u64, "cols");
+            put(&mut w, 80, 24, (r.row_stride_bytes / 4) as u64, "row_stride/4");
+        }
+    }
+    w
+}
+
+/// Decode a 128-bit instruction word. Returns the instruction and the
+/// stage whose queue it belongs to.
+pub fn decode(w: u128) -> (Instr, Stage) {
+    let kind = get(w, 0, 2);
+    let stage = match get(w, 2, 2) {
+        0 => Stage::Fetch,
+        1 => Stage::Execute,
+        _ => Stage::Result,
+    };
+    let instr = match kind {
+        0 => Instr::Wait(chan_from(get(w, 4, 2))),
+        1 => Instr::Signal(chan_from(get(w, 4, 2))),
+        _ => match stage {
+            Stage::Fetch => Instr::Fetch(FetchRun {
+                dram_base: get(w, 4, 32) * 8,
+                block_bytes: get(w, 36, 16) as u32 * 8,
+                block_stride_bytes: get(w, 52, 16) as u32 * 8,
+                num_blocks: get(w, 68, 16) as u32,
+                buf_offset: get(w, 84, 16) as u32,
+                buf_start: get(w, 100, 6) as u8,
+                buf_range: get(w, 106, 6) as u8,
+                words_per_buf: get(w, 112, 14) as u32,
+            }),
+            Stage::Execute => Instr::Execute(ExecuteRun {
+                lhs_offset: get(w, 4, 16) as u32,
+                rhs_offset: get(w, 20, 16) as u32,
+                num_chunks: get(w, 36, 16) as u32,
+                shift: get(w, 52, 6) as u8,
+                negate: get(w, 58, 1) == 1,
+                acc_reset: get(w, 59, 1) == 1,
+                commit_result: get(w, 60, 1) == 1,
+            }),
+            Stage::Result => Instr::Result(ResultRun {
+                dram_base: get(w, 4, 32) * 4,
+                offset: get(w, 36, 28) * 4,
+                rows: get(w, 64, 8) as u8,
+                cols: get(w, 72, 8) as u8,
+                row_stride_bytes: get(w, 80, 24) as u32 * 4,
+            }),
+        },
+    };
+    (instr, stage)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{property_sweep, Rng};
+
+    fn roundtrip(i: Instr, s: Stage) {
+        let w = encode(&i, s);
+        let (i2, s2) = decode(w);
+        assert_eq!(i, i2, "roundtrip failed for {i}");
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn sync_roundtrip_all_channels() {
+        for c in SyncChannel::ALL {
+            roundtrip(Instr::Wait(c), c.consumer());
+            roundtrip(Instr::Signal(c), c.producer());
+        }
+    }
+
+    fn rand_fetch(rng: &mut Rng) -> FetchRun {
+        FetchRun {
+            dram_base: rng.below(1 << 20) * 8,
+            block_bytes: (rng.below(1 << 10) as u32 + 1) * 8,
+            block_stride_bytes: rng.below(1 << 12) as u32 * 8,
+            num_blocks: rng.below(1 << 12) as u32 + 1,
+            buf_offset: rng.below(1 << 12) as u32,
+            buf_start: rng.below(48) as u8,
+            buf_range: rng.below(48) as u8 + 1,
+            words_per_buf: rng.below(1 << 12) as u32 + 1,
+        }
+    }
+
+    #[test]
+    fn fetch_roundtrip_sweep() {
+        property_sweep(0xF37C, 50, |rng, _| {
+            roundtrip(Instr::Fetch(rand_fetch(rng)), Stage::Fetch);
+        });
+    }
+
+    #[test]
+    fn execute_roundtrip_sweep() {
+        property_sweep(0xE8EC, 50, |rng, _| {
+            let e = ExecuteRun {
+                lhs_offset: rng.below(1 << 16) as u32,
+                rhs_offset: rng.below(1 << 16) as u32,
+                num_chunks: rng.below(1 << 16) as u32 + 1,
+                shift: rng.below(63) as u8,
+                negate: rng.chance(0.5),
+                acc_reset: rng.chance(0.5),
+                commit_result: rng.chance(0.5),
+            };
+            roundtrip(Instr::Execute(e), Stage::Execute);
+        });
+    }
+
+    #[test]
+    fn result_roundtrip_sweep() {
+        property_sweep(0x4E57, 50, |rng, _| {
+            let r = ResultRun {
+                dram_base: rng.below(1 << 28) * 4,
+                offset: rng.below(1 << 24) * 4,
+                rows: rng.below(255) as u8 + 1,
+                cols: rng.below(255) as u8 + 1,
+                row_stride_bytes: rng.below(1 << 20) as u32 * 4,
+            };
+            roundtrip(Instr::Result(r), Stage::Result);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn overflow_field_panics() {
+        let e = ExecuteRun {
+            lhs_offset: 1 << 16, // exceeds 16-bit slot
+            rhs_offset: 0,
+            num_chunks: 1,
+            shift: 0,
+            negate: false,
+            acc_reset: false,
+            commit_result: false,
+        };
+        let _ = encode(&Instr::Execute(e), Stage::Execute);
+    }
+
+    #[test]
+    fn shift_field_is_6_bits_like_weight_unit() {
+        // Largest legal shift (62) must roundtrip — 2^62 weights occur
+        // only for absurd precisions but the slot must hold them.
+        let e = ExecuteRun {
+            lhs_offset: 0,
+            rhs_offset: 0,
+            num_chunks: 1,
+            shift: 62,
+            negate: true,
+            acc_reset: false,
+            commit_result: true,
+        };
+        roundtrip(Instr::Execute(e), Stage::Execute);
+    }
+}

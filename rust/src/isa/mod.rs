@@ -1,0 +1,360 @@
+//! The BISMO instruction set (paper Table II).
+//!
+//! Each pipeline stage (fetch / execute / result) consumes its own
+//! in-order instruction queue. Three instruction kinds exist per stage:
+//!
+//! * `Wait(chan)` — block until a token is available on a sync FIFO,
+//!   then pop it.
+//! * `Signal(chan)` — push a token onto a sync FIFO.
+//! * `Run*` — the stage's actual work (DMA read, DPA execution, DMA
+//!   write).
+//!
+//! Tokens carry no payload: the *meaning* of a token (e.g. "buffer
+//! region 0 is now full") is a software convention of the scheduler,
+//! exactly as in the paper (§III-C1a).
+//!
+//! [`encode`] gives every instruction a fixed 128-bit binary encoding
+//! with range-checked fields — the contract a hardware instruction
+//! decoder would implement — and [`program`] bundles per-stage streams
+//! with legality validation and a disassembler.
+
+mod encode;
+mod program;
+
+pub use encode::{decode, encode};
+pub use program::{Program, ProgramStats};
+
+/// Pipeline stage that owns an instruction queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stage {
+    Fetch,
+    Execute,
+    Result,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 3] = [Stage::Fetch, Stage::Execute, Stage::Result];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Fetch => "fetch",
+            Stage::Execute => "execute",
+            Stage::Result => "result",
+        }
+    }
+}
+
+/// The four synchronization FIFOs between stage pairs (paper Fig. 2):
+/// fetch↔execute and execute↔result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SyncChannel {
+    /// Fetch signals "data is in the matrix buffers"; execute waits.
+    FetchToExecute,
+    /// Execute signals "buffer region free for refill"; fetch waits.
+    ExecuteToFetch,
+    /// Execute signals "results committed to result buffer"; result waits.
+    ExecuteToResult,
+    /// Result signals "result-buffer slot drained"; execute waits.
+    ResultToExecute,
+}
+
+impl SyncChannel {
+    pub const ALL: [SyncChannel; 4] = [
+        SyncChannel::FetchToExecute,
+        SyncChannel::ExecuteToFetch,
+        SyncChannel::ExecuteToResult,
+        SyncChannel::ResultToExecute,
+    ];
+
+    /// Stage allowed to `Signal` this channel.
+    pub fn producer(&self) -> Stage {
+        match self {
+            SyncChannel::FetchToExecute => Stage::Fetch,
+            SyncChannel::ExecuteToFetch | SyncChannel::ExecuteToResult => Stage::Execute,
+            SyncChannel::ResultToExecute => Stage::Result,
+        }
+    }
+
+    /// Stage allowed to `Wait` on this channel.
+    pub fn consumer(&self) -> Stage {
+        match self {
+            SyncChannel::FetchToExecute | SyncChannel::ResultToExecute => Stage::Execute,
+            SyncChannel::ExecuteToFetch => Stage::Fetch,
+            SyncChannel::ExecuteToResult => Stage::Result,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SyncChannel::FetchToExecute => "fetch->execute",
+            SyncChannel::ExecuteToFetch => "execute->fetch",
+            SyncChannel::ExecuteToResult => "execute->result",
+            SyncChannel::ResultToExecute => "result->execute",
+        }
+    }
+}
+
+/// `RunFetch`: stream a strided region of DRAM into matrix buffers.
+///
+/// Source side (DRAM): `num_blocks` blocks of `block_bytes` bytes,
+/// consecutive blocks separated by `block_stride_bytes` (supporting
+/// strided/tiled reads). Destination side (matrix buffers): starting at
+/// buffer `buf_start`, writing `words_per_buf` consecutive `D_k`-bit
+/// buffer words starting at word `buf_offset`, then switching to the
+/// next buffer, cyclically within `buf_range` buffers. Buffers are
+/// enumerated `0 .. D_m + D_n - 1`: LHS row buffers first, then RHS
+/// column buffers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FetchRun {
+    /// DRAM base byte address (8-byte aligned).
+    pub dram_base: u64,
+    /// Contiguous bytes per block (multiple of 8).
+    pub block_bytes: u32,
+    /// Stride between block starts in bytes (multiple of 8).
+    pub block_stride_bytes: u32,
+    /// Number of blocks.
+    pub num_blocks: u32,
+    /// Destination word offset within each target buffer.
+    pub buf_offset: u32,
+    /// First destination buffer id.
+    pub buf_start: u8,
+    /// Number of consecutive buffers written cyclically.
+    pub buf_range: u8,
+    /// `D_k`-bit words written per buffer before switching.
+    pub words_per_buf: u32,
+}
+
+/// `RunExecute`: one weighted binary matrix-multiply pass on the DPA.
+///
+/// The sequence generator reads `num_chunks` consecutive `D_k`-bit words
+/// from every LHS buffer (starting at `lhs_offset`) and every RHS buffer
+/// (starting at `rhs_offset`); each DPU ANDs + popcounts its pair,
+/// applies `weight = (negate ? -1 : 1) << shift` and accumulates.
+/// `acc_reset` clears the accumulators first; `commit_result` copies the
+/// final `D_m × D_n` accumulator set into the result buffer afterwards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecuteRun {
+    /// LHS buffer word offset.
+    pub lhs_offset: u32,
+    /// RHS buffer word offset.
+    pub rhs_offset: u32,
+    /// Number of `D_k`-bit chunks accumulated (dot length / `D_k`).
+    pub num_chunks: u32,
+    /// Left-shift amount of the plane-pair weight (`i + j`).
+    pub shift: u8,
+    /// Negate the weighted contribution (signed MSB planes).
+    pub negate: bool,
+    /// Clear accumulators before this pass.
+    pub acc_reset: bool,
+    /// Copy accumulators to the result buffer after this pass.
+    pub commit_result: bool,
+}
+
+/// `RunResult`: write one committed `D_m × D_n` result tile from the
+/// result buffer to DRAM, strided to scatter tile rows into the full
+/// result matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResultRun {
+    /// Result matrix base byte address (4-byte aligned).
+    pub dram_base: u64,
+    /// Byte offset of this tile's top-left accumulator.
+    pub offset: u64,
+    /// Tile rows to write (≤ `D_m`).
+    pub rows: u8,
+    /// Tile cols to write (≤ `D_n`).
+    pub cols: u8,
+    /// Byte stride between consecutive tile rows in DRAM (= 4·n).
+    pub row_stride_bytes: u32,
+}
+
+/// One instruction for some stage's queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Instr {
+    Wait(SyncChannel),
+    Signal(SyncChannel),
+    Fetch(FetchRun),
+    Execute(ExecuteRun),
+    Result(ResultRun),
+}
+
+impl Instr {
+    /// Check legality of this instruction in `stage`'s queue.
+    pub fn check_legal(&self, stage: Stage) -> Result<(), String> {
+        match self {
+            Instr::Wait(ch) => {
+                if ch.consumer() != stage {
+                    return Err(format!(
+                        "{} stage cannot Wait on {}",
+                        stage.name(),
+                        ch.name()
+                    ));
+                }
+            }
+            Instr::Signal(ch) => {
+                if ch.producer() != stage {
+                    return Err(format!(
+                        "{} stage cannot Signal {}",
+                        stage.name(),
+                        ch.name()
+                    ));
+                }
+            }
+            Instr::Fetch(f) => {
+                if stage != Stage::Fetch {
+                    return Err(format!("RunFetch in {} queue", stage.name()));
+                }
+                if f.dram_base % 8 != 0 || f.block_bytes % 8 != 0 || f.block_stride_bytes % 8 != 0
+                {
+                    return Err("fetch addresses/sizes must be 8-byte multiples".into());
+                }
+                if f.num_blocks == 0 || f.block_bytes == 0 {
+                    return Err("fetch must move at least one block of data".into());
+                }
+                if f.buf_range == 0 {
+                    return Err("fetch buf_range must be >= 1".into());
+                }
+            }
+            Instr::Execute(e) => {
+                if stage != Stage::Execute {
+                    return Err(format!("RunExecute in {} queue", stage.name()));
+                }
+                if e.num_chunks == 0 {
+                    return Err("execute needs num_chunks >= 1".into());
+                }
+                if e.shift >= 63 {
+                    return Err("shift must be < 63".into());
+                }
+            }
+            Instr::Result(r) => {
+                if stage != Stage::Result {
+                    return Err(format!("RunResult in {} queue", stage.name()));
+                }
+                if (r.dram_base + r.offset) % 4 != 0 {
+                    return Err("result address must be 4-byte aligned".into());
+                }
+                if r.rows == 0 || r.cols == 0 {
+                    return Err("result tile must be non-empty".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for Instr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Instr::Wait(ch) => write!(f, "Wait   {}", ch.name()),
+            Instr::Signal(ch) => write!(f, "Signal {}", ch.name()),
+            Instr::Fetch(x) => write!(
+                f,
+                "RunFetch   base=0x{:x} block={}B stride={}B n={} -> buf[{}..+{}]@{} wpb={}",
+                x.dram_base,
+                x.block_bytes,
+                x.block_stride_bytes,
+                x.num_blocks,
+                x.buf_start,
+                x.buf_range,
+                x.buf_offset,
+                x.words_per_buf
+            ),
+            Instr::Execute(x) => write!(
+                f,
+                "RunExecute lhs@{} rhs@{} chunks={} w={}{}{}{}",
+                x.lhs_offset,
+                x.rhs_offset,
+                x.num_chunks,
+                if x.negate { "-" } else { "+" },
+                1u64 << x.shift,
+                if x.acc_reset { " [reset]" } else { "" },
+                if x.commit_result { " [commit]" } else { "" }
+            ),
+            Instr::Result(x) => write!(
+                f,
+                "RunResult  base=0x{:x}+{} tile={}x{} stride={}B",
+                x.dram_base, x.offset, x.rows, x.cols, x.row_stride_bytes
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_endpoints() {
+        use SyncChannel::*;
+        assert_eq!(FetchToExecute.producer(), Stage::Fetch);
+        assert_eq!(FetchToExecute.consumer(), Stage::Execute);
+        assert_eq!(ExecuteToFetch.producer(), Stage::Execute);
+        assert_eq!(ExecuteToFetch.consumer(), Stage::Fetch);
+        assert_eq!(ExecuteToResult.consumer(), Stage::Result);
+        assert_eq!(ResultToExecute.consumer(), Stage::Execute);
+    }
+
+    #[test]
+    fn legality_matrix() {
+        use SyncChannel::*;
+        // Fetch may wait only on execute->fetch, signal only fetch->execute.
+        assert!(Instr::Wait(ExecuteToFetch).check_legal(Stage::Fetch).is_ok());
+        assert!(Instr::Wait(FetchToExecute).check_legal(Stage::Fetch).is_err());
+        assert!(Instr::Signal(FetchToExecute).check_legal(Stage::Fetch).is_ok());
+        assert!(Instr::Signal(ExecuteToResult).check_legal(Stage::Fetch).is_err());
+        // Execute waits on both inbound channels.
+        assert!(Instr::Wait(FetchToExecute).check_legal(Stage::Execute).is_ok());
+        assert!(Instr::Wait(ResultToExecute).check_legal(Stage::Execute).is_ok());
+        assert!(Instr::Signal(ExecuteToFetch).check_legal(Stage::Execute).is_ok());
+        assert!(Instr::Signal(ExecuteToResult).check_legal(Stage::Execute).is_ok());
+        assert!(Instr::Wait(ExecuteToFetch).check_legal(Stage::Execute).is_err());
+        // Run instructions only in their own queue.
+        let e = Instr::Execute(ExecuteRun {
+            lhs_offset: 0,
+            rhs_offset: 0,
+            num_chunks: 1,
+            shift: 0,
+            negate: false,
+            acc_reset: true,
+            commit_result: false,
+        });
+        assert!(e.check_legal(Stage::Execute).is_ok());
+        assert!(e.check_legal(Stage::Fetch).is_err());
+    }
+
+    #[test]
+    fn fetch_field_validation() {
+        let mut f = FetchRun {
+            dram_base: 8,
+            block_bytes: 64,
+            block_stride_bytes: 128,
+            num_blocks: 4,
+            buf_offset: 0,
+            buf_start: 0,
+            buf_range: 4,
+            words_per_buf: 8,
+        };
+        assert!(Instr::Fetch(f).check_legal(Stage::Fetch).is_ok());
+        f.dram_base = 4;
+        assert!(Instr::Fetch(f).check_legal(Stage::Fetch).is_err());
+        f.dram_base = 8;
+        f.num_blocks = 0;
+        assert!(Instr::Fetch(f).check_legal(Stage::Fetch).is_err());
+    }
+
+    #[test]
+    fn display_forms() {
+        let s = format!("{}", Instr::Wait(SyncChannel::FetchToExecute));
+        assert!(s.contains("Wait"));
+        let e = Instr::Execute(ExecuteRun {
+            lhs_offset: 3,
+            rhs_offset: 5,
+            num_chunks: 7,
+            shift: 2,
+            negate: true,
+            acc_reset: true,
+            commit_result: true,
+        });
+        let s = format!("{e}");
+        assert!(s.contains("-4") && s.contains("[reset]") && s.contains("[commit]"));
+    }
+}

@@ -1,0 +1,280 @@
+//! A complete BISMO program: the three per-stage instruction queues,
+//! with legality validation, statistics and a disassembler.
+
+use super::{encode, Instr, Stage, SyncChannel};
+
+/// Per-stage instruction streams, executed in order by each stage.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub fetch: Vec<Instr>,
+    pub execute: Vec<Instr>,
+    pub result: Vec<Instr>,
+}
+
+/// Instruction-count statistics for a program.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProgramStats {
+    pub fetch_runs: usize,
+    pub execute_runs: usize,
+    pub result_runs: usize,
+    pub waits: usize,
+    pub signals: usize,
+    pub total: usize,
+}
+
+impl Program {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn queue(&self, s: Stage) -> &[Instr] {
+        match s {
+            Stage::Fetch => &self.fetch,
+            Stage::Execute => &self.execute,
+            Stage::Result => &self.result,
+        }
+    }
+
+    pub fn queue_mut(&mut self, s: Stage) -> &mut Vec<Instr> {
+        match s {
+            Stage::Fetch => &mut self.fetch,
+            Stage::Execute => &mut self.execute,
+            Stage::Result => &mut self.result,
+        }
+    }
+
+    pub fn push(&mut self, s: Stage, i: Instr) {
+        self.queue_mut(s).push(i);
+    }
+
+    /// Validate every instruction against its queue's legality rules and
+    /// check global token balance: along every sync channel, the number
+    /// of signals must equal the number of waits (a completed program
+    /// leaves no dangling tokens and no stage starved forever — a
+    /// necessary, not sufficient, deadlock-freedom condition; the
+    /// simulator's deadlock detector covers the rest).
+    pub fn validate(&self) -> Result<(), String> {
+        for s in Stage::ALL {
+            for (i, instr) in self.queue(s).iter().enumerate() {
+                instr
+                    .check_legal(s)
+                    .map_err(|e| format!("{} queue[{i}]: {e}", s.name()))?;
+            }
+        }
+        for ch in SyncChannel::ALL {
+            let signals = self.count_sync(ch, true);
+            let waits = self.count_sync(ch, false);
+            if signals != waits {
+                return Err(format!(
+                    "token imbalance on {}: {} signals vs {} waits",
+                    ch.name(),
+                    signals,
+                    waits
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn count_sync(&self, ch: SyncChannel, signal: bool) -> usize {
+        Stage::ALL
+            .iter()
+            .flat_map(|&s| self.queue(s).iter())
+            .filter(|i| match (i, signal) {
+                (Instr::Signal(c), true) => *c == ch,
+                (Instr::Wait(c), false) => *c == ch,
+                _ => false,
+            })
+            .count()
+    }
+
+    pub fn stats(&self) -> ProgramStats {
+        let mut st = ProgramStats::default();
+        for s in Stage::ALL {
+            for i in self.queue(s) {
+                match i {
+                    Instr::Wait(_) => st.waits += 1,
+                    Instr::Signal(_) => st.signals += 1,
+                    Instr::Fetch(_) => st.fetch_runs += 1,
+                    Instr::Execute(_) => st.execute_runs += 1,
+                    Instr::Result(_) => st.result_runs += 1,
+                }
+                st.total += 1;
+            }
+        }
+        st
+    }
+
+    /// Binary size of the encoded program in bytes (16 B per instruction).
+    pub fn encoded_bytes(&self) -> usize {
+        self.stats().total * 16
+    }
+
+    /// Encode all queues to 128-bit words (fetch, execute, result order).
+    pub fn assemble(&self) -> Vec<u128> {
+        let mut out = Vec::with_capacity(self.stats().total);
+        for s in Stage::ALL {
+            for i in self.queue(s) {
+                out.push(encode(i, s));
+            }
+        }
+        out
+    }
+
+    /// Rebuild a program from encoded instruction words — the path a
+    /// host driver uses when loading a stored binary program into the
+    /// accelerator's instruction queues. Validates after decoding.
+    pub fn from_words(words: &[u128]) -> Result<Self, String> {
+        let mut p = Program::new();
+        for (i, &w) in words.iter().enumerate() {
+            let (instr, stage) = super::decode(w);
+            instr
+                .check_legal(stage)
+                .map_err(|e| format!("word {i}: {e}"))?;
+            p.push(stage, instr);
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Human-readable disassembly of all three queues, in the style of
+    /// the paper's Table III.
+    pub fn disassemble(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        for s in Stage::ALL {
+            let _ = writeln!(out, "{} queue ({} instrs):", s.name(), self.queue(s).len());
+            for (i, instr) in self.queue(s).iter().enumerate() {
+                let tag = match s {
+                    Stage::Fetch => "F",
+                    Stage::Execute => "E",
+                    Stage::Result => "R",
+                };
+                let _ = writeln!(out, "  {tag}{:<4} {instr}", i + 1);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{ExecuteRun, FetchRun, ResultRun};
+
+    fn tiny_program() -> Program {
+        let mut p = Program::new();
+        p.push(
+            Stage::Fetch,
+            Instr::Fetch(FetchRun {
+                dram_base: 0,
+                block_bytes: 64,
+                block_stride_bytes: 0,
+                num_blocks: 1,
+                buf_offset: 0,
+                buf_start: 0,
+                buf_range: 1,
+                words_per_buf: 8,
+            }),
+        );
+        p.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
+        p.push(Stage::Execute, Instr::Wait(SyncChannel::FetchToExecute));
+        p.push(
+            Stage::Execute,
+            Instr::Execute(ExecuteRun {
+                lhs_offset: 0,
+                rhs_offset: 0,
+                num_chunks: 1,
+                shift: 0,
+                negate: false,
+                acc_reset: true,
+                commit_result: true,
+            }),
+        );
+        p.push(Stage::Execute, Instr::Signal(SyncChannel::ExecuteToResult));
+        p.push(Stage::Result, Instr::Wait(SyncChannel::ExecuteToResult));
+        p.push(
+            Stage::Result,
+            Instr::Result(ResultRun {
+                dram_base: 0,
+                offset: 0,
+                rows: 2,
+                cols: 2,
+                row_stride_bytes: 8,
+            }),
+        );
+        p
+    }
+
+    #[test]
+    fn valid_program_passes() {
+        tiny_program().validate().unwrap();
+    }
+
+    #[test]
+    fn imbalance_detected() {
+        let mut p = tiny_program();
+        p.push(Stage::Execute, Instr::Signal(SyncChannel::ExecuteToFetch));
+        let err = p.validate().unwrap_err();
+        assert!(err.contains("token imbalance"), "{err}");
+    }
+
+    #[test]
+    fn wrong_queue_detected() {
+        let mut p = tiny_program();
+        p.push(
+            Stage::Fetch,
+            Instr::Execute(ExecuteRun {
+                lhs_offset: 0,
+                rhs_offset: 0,
+                num_chunks: 1,
+                shift: 0,
+                negate: false,
+                acc_reset: false,
+                commit_result: false,
+            }),
+        );
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn stats_and_assembly() {
+        let p = tiny_program();
+        let st = p.stats();
+        assert_eq!(st.fetch_runs, 1);
+        assert_eq!(st.execute_runs, 1);
+        assert_eq!(st.result_runs, 1);
+        assert_eq!(st.waits, 2);
+        assert_eq!(st.signals, 2);
+        assert_eq!(st.total, 7);
+        assert_eq!(p.assemble().len(), 7);
+        assert_eq!(p.encoded_bytes(), 112);
+    }
+
+    #[test]
+    fn binary_roundtrip_via_from_words() {
+        let p = tiny_program();
+        let words = p.assemble();
+        let q = Program::from_words(&words).unwrap();
+        assert_eq!(p.fetch, q.fetch);
+        assert_eq!(p.execute, q.execute);
+        assert_eq!(p.result, q.result);
+    }
+
+    #[test]
+    fn from_words_rejects_imbalanced_binary() {
+        let mut p = tiny_program();
+        p.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
+        let words = p.assemble();
+        assert!(Program::from_words(&words).is_err());
+    }
+
+    #[test]
+    fn disassembly_mentions_all() {
+        let d = tiny_program().disassemble();
+        assert!(d.contains("RunFetch"));
+        assert!(d.contains("RunExecute"));
+        assert!(d.contains("RunResult"));
+        assert!(d.contains("fetch queue"));
+    }
+}

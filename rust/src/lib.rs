@@ -1,0 +1,54 @@
+//! # BISMO — Bit-Serial Matrix Multiplication Overlay (full-system reproduction)
+//!
+//! Reproduction of *BISMO: A Scalable Bit-Serial Matrix Multiplication
+//! Overlay for Reconfigurable Computing* (Umuroglu, Rasnayake, Själander,
+//! 2018) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The original artifact is an FPGA overlay for the Xilinx PYNQ-Z1. This
+//! crate replaces the hardware with faithful software models (see
+//! `DESIGN.md` §Substitutions) while keeping the paper's entire
+//! hardware/software contract intact:
+//!
+//! * [`bitmatrix`] — bit-packed matrices and signed bit-plane decomposition
+//!   (the data representation of Algorithm 1).
+//! * [`arch`] — hardware configuration ([`arch::BismoConfig`]), the paper's
+//!   Table IV instance presets and the PYNQ-Z1 platform description.
+//! * [`isa`] — the three-stage instruction set (Table II): `Wait`, `Signal`,
+//!   `RunFetch`, `RunExecute`, `RunResult`, with binary encode/decode.
+//! * [`scheduler`] — the software half of the overlay: compiles a matmul
+//!   job into per-stage instruction streams (tiling, stage overlap,
+//!   bit-plane weights, sparse bit-skip).
+//! * [`sim`] — functional *and* cycle-level simulator of the fetch /
+//!   execute / result pipeline (DPA, matrix buffers, sync FIFOs, DMA).
+//! * [`synth`] — netlist generator + 6-LUT technology mapper + Fmax model
+//!   standing in for Vivado out-of-context synthesis (Figs 6–9, 11).
+//! * [`costmodel`] — the paper's analytic LUT/BRAM cost model (Eqs 1–2)
+//!   plus least-squares constant fitting.
+//! * [`power`] — calibrated power model reproducing Table V.
+//! * [`baseline`] — CPU bit-serial gemm (Umuroglu & Jahre) used both as a
+//!   Table VI comparison point and as a correctness oracle.
+//! * [`runtime`] — PJRT CPU client: loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust.
+//! * [`coordinator`] — the public API tying everything together.
+//! * [`qnn`] — quantized-neural-network layers running on the overlay.
+//! * [`report`] — table/figure formatting used by the benchmark harness.
+//! * [`util`] — PRNG, CSV, timing helpers (offline build: no external deps).
+
+pub mod arch;
+pub mod baseline;
+pub mod bitmatrix;
+pub mod coordinator;
+pub mod costmodel;
+pub mod isa;
+pub mod power;
+pub mod qnn;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod synth;
+pub mod util;
+
+pub use arch::{BismoConfig, Platform};
+pub use bitmatrix::{BitSerialMatrix, IntMatrix};
+pub use coordinator::{BismoContext, Precision, RunReport};

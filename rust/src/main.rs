@@ -1,0 +1,340 @@
+//! `bismo` — command-line interface to the overlay reproduction.
+//!
+//! Subcommands (hand-rolled parser; no clap in the offline registry):
+//!
+//! ```text
+//! bismo quickstart                          tiny end-to-end check
+//! bismo simulate [--instance N] [--m M --k K --n N --wbits W --abits A]
+//!                [--signed] [--no-overlap] [--bit-skip]
+//! bismo schedule [--instance N] [--m M --k K --n N ...]   dump queues
+//! bismo costmodel [--instance N]            LUT/BRAM prediction
+//! bismo synth [--dk N]                      DPU virtual synthesis
+//! bismo power                               Table V power model
+//! bismo instances                           Table IV presets
+//! bismo info                                config + artifact status
+//! ```
+
+use bismo::arch::{all_instances, instance, BismoConfig, PYNQ_Z1};
+use bismo::bitmatrix::IntMatrix;
+use bismo::coordinator::{BismoContext, MatmulOptions, Precision};
+use bismo::costmodel::CostModel;
+use bismo::power::{PowerModel, TABLE_V};
+use bismo::report::{f, pct, Table};
+use bismo::scheduler::Overlap;
+use bismo::synth::{synth_dpu, synth_instance};
+use bismo::util::Rng;
+use std::collections::HashMap;
+
+fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
+    let mut flags = HashMap::new();
+    let mut pos = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            let is_bool = matches!(
+                name,
+                "signed" | "no-overlap" | "bit-skip" | "verify" | "help"
+            );
+            if is_bool {
+                flags.insert(name.to_string(), "true".to_string());
+            } else if i + 1 < args.len() {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 1;
+            } else {
+                flags.insert(name.to_string(), String::new());
+            }
+        } else {
+            pos.push(a.clone());
+        }
+        i += 1;
+    }
+    (flags, pos)
+}
+
+fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, k: &str, default: T) -> T {
+    flags
+        .get(k)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn config_from(flags: &HashMap<String, String>) -> BismoConfig {
+    instance(get(flags, "instance", 1u32))
+}
+
+fn cmd_quickstart() -> Result<(), String> {
+    let ctx = BismoContext::new(instance(1))?;
+    let mut rng = Rng::new(1);
+    let a = IntMatrix::random(&mut rng, 16, 256, 3, true);
+    let b = IntMatrix::random(&mut rng, 256, 16, 3, true);
+    let opts = MatmulOptions {
+        verify: true,
+        ..Default::default()
+    };
+    let (_, rep) = ctx.matmul(&a, &b, Precision::signed(3, 3), opts)?;
+    println!(
+        "16x256x16 signed 3x3-bit: {} cycles, {} GOPS ({} of peak), verified OK",
+        rep.cycles,
+        f(rep.gops, 1),
+        pct(rep.efficiency)
+    );
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = config_from(flags);
+    let ctx = BismoContext::new(cfg)?;
+    let m = get(flags, "m", 64usize);
+    let k = get(flags, "k", 1024usize);
+    let n = get(flags, "n", 64usize);
+    let w = get(flags, "wbits", 2u32);
+    let a = get(flags, "abits", 2u32);
+    let signed = flags.contains_key("signed");
+    let mut rng = Rng::new(get(flags, "seed", 7u64));
+    let am = IntMatrix::random(&mut rng, m, k, w, signed);
+    let bm = IntMatrix::random(&mut rng, k, n, a, signed);
+    let prec = Precision {
+        wbits: w,
+        abits: a,
+        lsigned: signed,
+        rsigned: signed,
+    };
+    let opts = MatmulOptions {
+        overlap: if flags.contains_key("no-overlap") {
+            Overlap::None
+        } else {
+            Overlap::Full
+        },
+        bit_skip: flags.contains_key("bit-skip"),
+        verify: true,
+    };
+    let (_, rep) = ctx.matmul(&am, &bm, prec, opts)?;
+    let mut t = Table::new(
+        &format!(
+            "simulate {m}x{k}x{n} w{w}a{a} on (Dm={},Dk={},Dn={})",
+            cfg.dm, cfg.dk, cfg.dn
+        ),
+        &["metric", "value"],
+    );
+    t.rowf(&[&"cycles", &rep.cycles]);
+    t.rowf(&[&"seconds", &format!("{:.3e}", rep.seconds)]);
+    t.rowf(&[&"GOPS", &f(rep.gops, 2)]);
+    t.rowf(&[&"efficiency", &pct(rep.efficiency)]);
+    t.rowf(&[&"fetch busy", &rep.stats.fetch_busy]);
+    t.rowf(&[&"execute busy", &rep.stats.execute_busy]);
+    t.rowf(&[&"result busy", &rep.stats.result_busy]);
+    t.rowf(&[&"execute stall", &rep.stats.execute_stall]);
+    t.rowf(&[&"bytes fetched", &rep.stats.bytes_fetched]);
+    t.rowf(&[&"bytes written", &rep.stats.bytes_written]);
+    t.rowf(&[&"instructions", &rep.instructions.total]);
+    t.rowf(&[&"power (W)", &f(rep.power_w, 2)]);
+    t.rowf(&[&"GOPS/W", &f(rep.gops_per_w, 1)]);
+    t.rowf(&[
+        &"planes (lhs x rhs)",
+        &format!("{}x{}", rep.lhs_planes, rep.rhs_planes),
+    ]);
+    t.print();
+    println!("verified against CPU bit-serial oracle OK");
+    Ok(())
+}
+
+fn cmd_schedule(flags: &HashMap<String, String>) -> Result<(), String> {
+    use bismo::bitmatrix::dram::{OperandLayout, ResultLayout};
+    use bismo::scheduler::{compile, MatmulJob};
+    use bismo::util::round_up;
+    let cfg = config_from(flags);
+    let m = get(flags, "m", 4usize);
+    let k = get(flags, "k", 128usize);
+    let n = get(flags, "n", 4usize);
+    let w = get(flags, "wbits", 2u32);
+    let a = get(flags, "abits", 2u32);
+    let lhs = OperandLayout::new(0, m, k, w, cfg.dk);
+    let rhs = OperandLayout::new(round_up(lhs.total_bytes(), 8), n, k, a, cfg.dk);
+    let res = ResultLayout::new(round_up(rhs.base + rhs.total_bytes(), 8), m, n);
+    let job = MatmulJob {
+        m,
+        k,
+        n,
+        wbits: w,
+        abits: a,
+        lsigned: false,
+        rsigned: false,
+        lhs,
+        rhs,
+        res,
+    };
+    let overlap = if flags.contains_key("no-overlap") {
+        Overlap::None
+    } else {
+        Overlap::Full
+    };
+    let prog = compile(&job, &cfg, overlap)?;
+    print!("{}", prog.disassemble());
+    let st = prog.stats();
+    println!(
+        "{} instructions total ({} fetch / {} execute / {} result / {} sync), {} bytes encoded",
+        st.total,
+        st.fetch_runs,
+        st.execute_runs,
+        st.result_runs,
+        st.waits + st.signals,
+        prog.encoded_bytes()
+    );
+    Ok(())
+}
+
+fn cmd_costmodel(flags: &HashMap<String, String>) -> Result<(), String> {
+    let model = CostModel::paper();
+    let fitted = CostModel::fit_from_synth();
+    let mut t = Table::new(
+        "cost model (Eq. 1-2)",
+        &["instance", "LUT (paper const)", "LUT (fitted)", "BRAM", "fits Z7020"],
+    );
+    if let Some(inst) = flags.get("instance") {
+        let cfg = instance(inst.parse().map_err(|_| "bad --instance")?);
+        t.rowf(&[
+            inst,
+            &f(model.lut_total(&cfg), 0),
+            &f(fitted.lut_total(&cfg), 0),
+            &model.bram_total(&cfg),
+            &model.fits(&cfg, &PYNQ_Z1),
+        ]);
+    } else {
+        for (id, cfg) in all_instances() {
+            t.rowf(&[
+                &id,
+                &f(model.lut_total(&cfg), 0),
+                &f(fitted.lut_total(&cfg), 0),
+                &model.bram_total(&cfg),
+                &model.fits(&cfg, &PYNQ_Z1),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "fitted constants: alpha={:.2} beta={:.1} (paper: 2.04 / 109.41)",
+        fitted.alpha_dpu, fitted.beta_dpu
+    );
+    Ok(())
+}
+
+fn cmd_synth(flags: &HashMap<String, String>) -> Result<(), String> {
+    if let Some(dk) = flags.get("dk") {
+        let dk: u32 = dk.parse().map_err(|_| "bad --dk")?;
+        let r = synth_dpu(dk, 32);
+        println!(
+            "DPU(Dk={dk}): {} LUTs ({} LUT/bin.op), {} FFs, Fmax {} MHz",
+            f(r.luts, 0),
+            f(r.luts / (2.0 * dk as f64), 2),
+            f(r.ffs, 0),
+            f(r.fmax_mhz, 0)
+        );
+    } else {
+        let mut t = Table::new(
+            "virtual synthesis of Table IV instances",
+            &["instance", "LUTs", "BRAMs", "DPU Fmax", "Fmax (DMA-capped)"],
+        );
+        for (id, cfg) in all_instances() {
+            let s = synth_instance(&cfg);
+            t.rowf(&[
+                &id,
+                &f(s.total_luts, 0),
+                &s.brams,
+                &f(s.dpu.fmax_mhz, 0),
+                &f(s.fmax_mhz, 0),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_power() -> Result<(), String> {
+    let m = PowerModel::calibrated();
+    let mut t = Table::new(
+        "power model vs paper Table V",
+        &["config", "idle W", "+exec W", "+f&r W", "full W", "paper full W", "GOPS/W"],
+    );
+    for row in &TABLE_V {
+        let cfg = instance(row.instance).at_clock(row.fclk_mhz);
+        t.rowf(&[
+            &format!("(#{}, {} MHz)", row.instance, row.fclk_mhz),
+            &f(m.idle_w(&cfg), 2),
+            &f(m.exec_increment_w(&cfg), 2),
+            &f(m.fetch_result_increment_w(&cfg), 2),
+            &f(m.full_w(&cfg), 2),
+            &f(row.full_w, 2),
+            &f(row.gops / m.full_w(&cfg), 1),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_instances() -> Result<(), String> {
+    let mut t = Table::new(
+        "Table IV instance presets",
+        &["#", "Dm", "Dk", "Dn", "Bm", "Bn", "peak GOPS @ 200 MHz"],
+    );
+    for (id, cfg) in all_instances() {
+        t.rowf(&[
+            &id,
+            &cfg.dm,
+            &cfg.dk,
+            &cfg.dn,
+            &cfg.bm,
+            &cfg.bn,
+            &f(cfg.peak_binary_gops(), 1),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), String> {
+    println!("bismo — bit-serial matrix multiplication overlay (reproduction)");
+    println!("platform model: {}", PYNQ_Z1.name);
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        match bismo::runtime::ArtifactManifest::load(&dir) {
+            Ok(m) => {
+                println!("artifacts ({}):", dir.display());
+                for name in m.artifacts.keys() {
+                    println!("  {name}");
+                }
+            }
+            Err(e) => println!("artifact manifest error: {e}"),
+        }
+    } else {
+        println!("artifacts: not built (run `make artifacts`)");
+    }
+    Ok(())
+}
+
+const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|costmodel|synth|power|instances|info> [flags]
+flags: --instance N  --m M --k K --n N  --wbits W --abits A  --signed --no-overlap --bit-skip  --seed S  --dk N";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (flags, pos) = parse_flags(&args);
+    let cmd = pos.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "quickstart" => cmd_quickstart(),
+        "simulate" => cmd_simulate(&flags),
+        "schedule" => cmd_schedule(&flags),
+        "costmodel" => cmd_costmodel(&flags),
+        "synth" => cmd_synth(&flags),
+        "power" => cmd_power(),
+        "instances" => cmd_instances(),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,223 @@
+//! Board-level power model (paper Table V).
+//!
+//! The paper measures PYNQ-Z1 wall power with a USB power meter while
+//! looping individual stages. We cannot measure a board, so this module
+//! implements an analytic CMOS-style model
+//!
+//! ```text
+//! P_idle  = c0 + (c1 + c2·LUT)·f_clk          (static + clock tree)
+//! ΔP_exec = c3·(D_m·D_n·D_k)·f_clk            (DPA switching)
+//! ΔP_f&r  = c4 + c5·f_clk                     (DMA + DRAM I/O activity)
+//! P_full  = P_idle + ΔP_exec + ΔP_f&r
+//! ```
+//!
+//! whose six constants are **calibrated by least squares against the
+//! paper's own Table V measurements** (the documented substitution for
+//! the power meter). The regenerated table therefore reproduces the
+//! paper's qualitative findings — execute contributes ~10% of full
+//! power, fetch+result ~27%, idle ~66%, and a large-slow design beats a
+//! small-fast one by ~1.5× in GOPS/W — while the per-row numbers carry
+//! the model's residual error (reported in EXPERIMENTS.md).
+
+use crate::arch::BismoConfig;
+use crate::costmodel::{least_squares, CostModel};
+
+/// Calibrated power model.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerModel {
+    /// Static power (W).
+    pub c0: f64,
+    /// Clock-tree power per MHz (W/MHz).
+    pub c1: f64,
+    /// Clock-tree power per LUT per MHz (W/(LUT·MHz)).
+    pub c2: f64,
+    /// DPA switching power per (DPU·bit) per MHz.
+    pub c3: f64,
+    /// DMA static adder (W).
+    pub c4: f64,
+    /// DMA/DRAM activity power per MHz.
+    pub c5: f64,
+}
+
+/// One calibration / validation row: Table V of the paper.
+#[derive(Clone, Copy, Debug)]
+pub struct TableVRow {
+    pub instance: u32,
+    pub fclk_mhz: u32,
+    pub idle_w: f64,
+    pub exec_inc_w: f64,
+    pub fr_inc_w: f64,
+    pub full_w: f64,
+    pub gops: f64,
+}
+
+/// The paper's Table V measurements (calibration data).
+pub const TABLE_V: [TableVRow; 6] = [
+    TableVRow { instance: 1, fclk_mhz: 200, idle_w: 2.53, exec_inc_w: 0.33, fr_inc_w: 1.09, full_w: 4.07, gops: 1638.0 },
+    TableVRow { instance: 2, fclk_mhz: 100, idle_w: 2.10, exec_inc_w: 0.19, fr_inc_w: 0.87, full_w: 3.11, gops: 1638.0 },
+    TableVRow { instance: 3, fclk_mhz: 50, idle_w: 1.76, exec_inc_w: 0.30, fr_inc_w: 0.63, full_w: 2.53, gops: 1638.0 },
+    TableVRow { instance: 4, fclk_mhz: 200, idle_w: 2.53, exec_inc_w: 0.34, fr_inc_w: 1.09, full_w: 3.86, gops: 1638.0 },
+    TableVRow { instance: 5, fclk_mhz: 100, idle_w: 2.05, exec_inc_w: 0.24, fr_inc_w: 0.92, full_w: 3.06, gops: 1638.0 },
+    TableVRow { instance: 3, fclk_mhz: 200, idle_w: 2.87, exec_inc_w: 0.71, fr_inc_w: 1.19, full_w: 4.64, gops: 6554.0 },
+];
+
+impl PowerModel {
+    /// Fit the six constants to the paper's Table V.
+    pub fn calibrated() -> Self {
+        let lut = |i: u32| {
+            CostModel::paper().lut_total(&crate::arch::instance(i))
+        };
+        // Idle: c0 + c1·f + c2·LUT·f.
+        let idle_x: Vec<Vec<f64>> = TABLE_V
+            .iter()
+            .map(|r| {
+                vec![
+                    1.0,
+                    r.fclk_mhz as f64,
+                    lut(r.instance) * r.fclk_mhz as f64,
+                ]
+            })
+            .collect();
+        let idle_y: Vec<f64> = TABLE_V.iter().map(|r| r.idle_w).collect();
+        let bi = least_squares(&idle_x, &idle_y);
+
+        // Exec increment: c3·(Dm·Dn·Dk)·f (single coefficient).
+        let ex: Vec<f64> = TABLE_V
+            .iter()
+            .map(|r| {
+                let c = crate::arch::instance(r.instance);
+                (c.dm * c.dn * c.dk) as f64 * r.fclk_mhz as f64
+            })
+            .collect();
+        let c3 = {
+            let num: f64 = TABLE_V
+                .iter()
+                .zip(&ex)
+                .map(|(r, x)| r.exec_inc_w * x)
+                .sum();
+            let den: f64 = ex.iter().map(|x| x * x).sum();
+            num / den
+        };
+
+        // Fetch+result increment: c4 + c5·f.
+        let fr_x: Vec<Vec<f64>> = TABLE_V
+            .iter()
+            .map(|r| vec![1.0, r.fclk_mhz as f64])
+            .collect();
+        let fr_y: Vec<f64> = TABLE_V.iter().map(|r| r.fr_inc_w).collect();
+        let bf = least_squares(&fr_x, &fr_y);
+
+        PowerModel {
+            c0: bi[0],
+            c1: bi[1],
+            c2: bi[2],
+            c3,
+            c4: bf[0],
+            c5: bf[1],
+        }
+    }
+
+    pub fn idle_w(&self, cfg: &BismoConfig) -> f64 {
+        let lut = CostModel::paper().lut_total(cfg);
+        self.c0 + (self.c1 + self.c2 * lut) * cfg.fclk_mhz as f64
+    }
+
+    pub fn exec_increment_w(&self, cfg: &BismoConfig) -> f64 {
+        self.c3 * (cfg.dm * cfg.dn * cfg.dk) as f64 * cfg.fclk_mhz as f64
+    }
+
+    pub fn fetch_result_increment_w(&self, cfg: &BismoConfig) -> f64 {
+        self.c4 + self.c5 * cfg.fclk_mhz as f64
+    }
+
+    pub fn full_w(&self, cfg: &BismoConfig) -> f64 {
+        self.idle_w(cfg) + self.exec_increment_w(cfg) + self.fetch_result_increment_w(cfg)
+    }
+
+    /// Peak binary GOPS per watt at full power.
+    pub fn gops_per_w(&self, cfg: &BismoConfig) -> f64 {
+        cfg.peak_binary_gops() / self.full_w(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::instance;
+
+    #[test]
+    fn calibration_residuals_small() {
+        let m = PowerModel::calibrated();
+        for r in &TABLE_V {
+            let cfg = instance(r.instance).at_clock(r.fclk_mhz);
+            let idle = m.idle_w(&cfg);
+            assert!(
+                (idle - r.idle_w).abs() < 0.25,
+                "idle({},{}MHz) {idle:.2} vs {}",
+                r.instance,
+                r.fclk_mhz,
+                r.idle_w
+            );
+            let full = m.full_w(&cfg);
+            assert!(
+                (full - r.full_w).abs() / r.full_w < 0.12,
+                "full({},{}MHz) {full:.2} vs {}",
+                r.instance,
+                r.fclk_mhz,
+                r.full_w
+            );
+        }
+    }
+
+    #[test]
+    fn component_shares_match_paper_story() {
+        // Paper: exec ≈ 9.7%, fetch+result ≈ 27.2%, idle ≈ 65.6% of
+        // full power on average.
+        let m = PowerModel::calibrated();
+        let mut shares = [0.0f64; 3];
+        for r in &TABLE_V {
+            let cfg = instance(r.instance).at_clock(r.fclk_mhz);
+            let full = m.full_w(&cfg);
+            shares[0] += m.idle_w(&cfg) / full;
+            shares[1] += m.exec_increment_w(&cfg) / full;
+            shares[2] += m.fetch_result_increment_w(&cfg) / full;
+        }
+        let n = TABLE_V.len() as f64;
+        assert!((shares[0] / n - 0.656).abs() < 0.06, "idle share {}", shares[0] / n);
+        assert!((shares[1] / n - 0.097).abs() < 0.05, "exec share {}", shares[1] / n);
+        assert!((shares[2] / n - 0.272).abs() < 0.06, "f&r share {}", shares[2] / n);
+    }
+
+    #[test]
+    fn large_slow_beats_small_fast() {
+        // Paper: #3 at 50 MHz is ~1.5× more efficient than #1 at 200 MHz
+        // for the same 1638 GOPS.
+        let m = PowerModel::calibrated();
+        let small_fast = m.gops_per_w(&instance(1).at_clock(200));
+        let large_slow = 1638.4 / m.full_w(&instance(3).at_clock(50));
+        let ratio = large_slow / small_fast;
+        assert!(
+            (1.25..=1.9).contains(&ratio),
+            "efficiency ratio {ratio:.2} vs paper ~1.5×"
+        );
+    }
+
+    #[test]
+    fn headline_efficiency_band() {
+        // Paper: #3 @ 200 MHz → 1413 GOPS/W (DRAM included).
+        let m = PowerModel::calibrated();
+        let g = m.gops_per_w(&instance(3).at_clock(200));
+        assert!(
+            (1100.0..=1800.0).contains(&g),
+            "headline GOPS/W {g:.0} vs paper 1413"
+        );
+    }
+
+    #[test]
+    fn power_increases_with_clock() {
+        let m = PowerModel::calibrated();
+        let p50 = m.full_w(&instance(3).at_clock(50));
+        let p200 = m.full_w(&instance(3).at_clock(200));
+        assert!(p200 > p50);
+    }
+}

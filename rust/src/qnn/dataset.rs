@@ -1,0 +1,115 @@
+//! Synthetic digit-classification dataset.
+//!
+//! 10 class prototypes drawn uniformly in `[0,1]^784`, samples =
+//! prototype + Gaussian noise (clipped back to `[0,1]`). Chosen so a
+//! small MLP reaches high accuracy quickly while quantization still
+//! costs measurable accuracy — the phenomenon the paper's
+//! variable-precision story is about. Stands in for MNIST (no dataset
+//! downloads in this offline environment).
+
+use crate::util::Rng;
+
+/// A generated dataset: features in `[0,1]`, labels `0..10`.
+pub struct SyntheticDigits {
+    pub dim: usize,
+    pub classes: usize,
+    pub train_x: Vec<Vec<f32>>,
+    pub train_y: Vec<usize>,
+    pub test_x: Vec<Vec<f32>>,
+    pub test_y: Vec<usize>,
+}
+
+/// Standard normal via Box–Muller.
+fn gaussian(rng: &mut Rng) -> f32 {
+    let u1 = rng.f64().max(1e-12);
+    let u2 = rng.f64();
+    ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+}
+
+impl SyntheticDigits {
+    /// Generate with `noise` standard deviation around the prototypes.
+    pub fn generate(seed: u64, train_n: usize, test_n: usize, noise: f32) -> Self {
+        let dim = 784;
+        let classes = 10;
+        let mut rng = Rng::new(seed);
+        let protos: Vec<Vec<f32>> = (0..classes)
+            .map(|_| (0..dim).map(|_| rng.f64() as f32).collect())
+            .collect();
+        let sample = |rng: &mut Rng| {
+            let y = rng.index(classes);
+            let x: Vec<f32> = protos[y]
+                .iter()
+                .map(|&p| (p + noise * gaussian(rng)).clamp(0.0, 1.0))
+                .collect();
+            (x, y)
+        };
+        let mut train_x = Vec::with_capacity(train_n);
+        let mut train_y = Vec::with_capacity(train_n);
+        for _ in 0..train_n {
+            let (x, y) = sample(&mut rng);
+            train_x.push(x);
+            train_y.push(y);
+        }
+        let mut test_x = Vec::with_capacity(test_n);
+        let mut test_y = Vec::with_capacity(test_n);
+        for _ in 0..test_n {
+            let (x, y) = sample(&mut rng);
+            test_x.push(x);
+            test_y.push(y);
+        }
+        SyntheticDigits {
+            dim,
+            classes,
+            train_x,
+            train_y,
+            test_x,
+            test_y,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let d = SyntheticDigits::generate(1, 100, 40, 0.15);
+        assert_eq!(d.train_x.len(), 100);
+        assert_eq!(d.test_x.len(), 40);
+        assert!(d.train_x.iter().all(|x| x.len() == 784));
+        assert!(d
+            .train_x
+            .iter()
+            .flatten()
+            .all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(d.train_y.iter().all(|&y| y < 10));
+        // All classes present in a 100-sample draw (w.h.p.).
+        let mut seen = [false; 10];
+        for &y in &d.train_y {
+            seen[y] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 8);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = SyntheticDigits::generate(7, 10, 5, 0.1);
+        let b = SyntheticDigits::generate(7, 10, 5, 0.1);
+        assert_eq!(a.train_x, b.train_x);
+        assert_eq!(a.test_y, b.test_y);
+        let c = SyntheticDigits::generate(8, 10, 5, 0.1);
+        assert_ne!(a.train_x, c.train_x);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Rng::new(5);
+        let n = 20_000;
+        let xs: Vec<f32> = (0..n).map(|_| gaussian(&mut rng)).collect();
+        let mean: f32 = xs.iter().sum::<f32>() / n as f32;
+        let var: f32 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

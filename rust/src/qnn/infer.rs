@@ -1,0 +1,153 @@
+//! Integer-only QNN inference, with every GEMM on the overlay.
+
+use super::mlp::FloatMlp;
+use super::quantize::{quantize_activations, quantize_weights_symmetric, requantize};
+use crate::bitmatrix::IntMatrix;
+use crate::coordinator::{BismoContext, MatmulOptions, Precision, RunReport};
+
+/// A quantized 3-layer MLP ready for the overlay.
+pub struct QnnMlp {
+    pub w1: IntMatrix,
+    pub w2: IntMatrix,
+    pub w3: IntMatrix,
+    pub wbits: u32,
+    pub abits: u32,
+    /// Requantization shifts after layers 1 and 2 (static, like the
+    /// exported JAX artifact).
+    pub shifts: (u32, u32),
+}
+
+impl QnnMlp {
+    /// Quantize a trained float MLP (weights symmetric signed `wbits`).
+    pub fn from_float(mlp: &FloatMlp, wbits: u32, abits: u32, shifts: (u32, u32)) -> Self {
+        let [d0, d1, d2, d3] = mlp.dims;
+        let (w1, _) = quantize_weights_symmetric(&mlp.w[0], d0, d1, wbits);
+        let (w2, _) = quantize_weights_symmetric(&mlp.w[1], d1, d2, wbits);
+        let (w3, _) = quantize_weights_symmetric(&mlp.w[2], d2, d3, wbits);
+        QnnMlp {
+            w1,
+            w2,
+            w3,
+            wbits,
+            abits,
+            shifts,
+        }
+    }
+
+    /// Quantize a batch of float inputs to the activation precision.
+    pub fn quantize_input(&self, xs: &[Vec<f32>]) -> IntMatrix {
+        let rows = xs.len();
+        let cols = xs.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(rows * cols);
+        for x in xs {
+            data.extend(quantize_activations(x, self.abits));
+        }
+        IntMatrix::from_slice(rows, cols, &data)
+    }
+
+    /// Pure-integer reference forward pass (no overlay). Semantically
+    /// identical to the exported JAX artifact.
+    pub fn forward_reference(&self, x: &IntMatrix) -> IntMatrix {
+        let h = requantize(&x.matmul(&self.w1), self.shifts.0, self.abits);
+        let h = requantize(&h.matmul(&self.w2), self.shifts.1, self.abits);
+        h.matmul(&self.w3)
+    }
+
+    /// Forward pass with all three GEMMs on the overlay; returns logits
+    /// and the per-layer run reports.
+    pub fn forward_on_overlay(
+        &self,
+        ctx: &BismoContext,
+        x: &IntMatrix,
+        opts: MatmulOptions,
+    ) -> Result<(IntMatrix, Vec<RunReport>), String> {
+        let prec = |_layer: usize| Precision {
+            wbits: self.abits, // LHS = activations (unsigned)
+            abits: self.wbits, // RHS = weights (signed)
+            lsigned: false,
+            rsigned: true,
+        };
+        let mut reports = Vec::with_capacity(3);
+        let (acc1, r1) = ctx.matmul(x, &self.w1, prec(0), opts)?;
+        reports.push(r1);
+        let h1 = requantize(&acc1, self.shifts.0, self.abits);
+        let (acc2, r2) = ctx.matmul(&h1, &self.w2, prec(1), opts)?;
+        reports.push(r2);
+        let h2 = requantize(&acc2, self.shifts.1, self.abits);
+        let (logits, r3) = ctx.matmul(&h2, &self.w3, prec(2), opts)?;
+        reports.push(r3);
+        Ok((logits, reports))
+    }
+
+    /// Argmax predictions from logits.
+    pub fn predictions(logits: &IntMatrix) -> Vec<usize> {
+        (0..logits.rows)
+            .map(|r| {
+                (0..logits.cols)
+                    .max_by_key(|&c| logits.get(r, c))
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Classification accuracy of logits vs labels.
+    pub fn accuracy(logits: &IntMatrix, labels: &[usize]) -> f64 {
+        let preds = Self::predictions(logits);
+        let correct = preds.iter().zip(labels).filter(|(p, y)| p == y).count();
+        correct as f64 / labels.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::BismoConfig;
+    use crate::qnn::dataset::SyntheticDigits;
+
+    fn quantized_model() -> (QnnMlp, SyntheticDigits) {
+        let d = SyntheticDigits::generate(42, 300, 60, 0.15);
+        let mut mlp = FloatMlp::new(7, [784, 32, 32, 10]);
+        for e in 0..3 {
+            mlp.train_epoch(&d.train_x, &d.train_y, 0.02, e);
+        }
+        (QnnMlp::from_float(&mlp, 4, 2, (6, 4)), d)
+    }
+
+    #[test]
+    fn weights_fit_declared_precision() {
+        let (q, _) = quantized_model();
+        assert!(q.w1.fits(4, true));
+        assert!(q.w2.fits(4, true));
+        assert!(q.w3.fits(4, true));
+    }
+
+    #[test]
+    fn overlay_matches_reference_exactly() {
+        let (q, d) = quantized_model();
+        let ctx = BismoContext::new(BismoConfig::small()).unwrap();
+        let x = q.quantize_input(&d.test_x[..4]);
+        let want = q.forward_reference(&x);
+        let (got, reports) = q
+            .forward_on_overlay(&ctx, &x, MatmulOptions::default())
+            .unwrap();
+        assert_eq!(got, want);
+        assert_eq!(reports.len(), 3);
+        assert!(reports.iter().all(|r| r.cycles > 0));
+    }
+
+    #[test]
+    fn quantized_model_still_classifies() {
+        let (q, d) = quantized_model();
+        let x = q.quantize_input(&d.test_x);
+        let logits = q.forward_reference(&x);
+        let acc = QnnMlp::accuracy(&logits, &d.test_y);
+        assert!(acc > 0.5, "quantized accuracy {acc:.2} too low");
+    }
+
+    #[test]
+    fn activation_range_respected() {
+        let (q, d) = quantized_model();
+        let x = q.quantize_input(&d.test_x[..8]);
+        assert!(x.fits(2, false));
+    }
+}

@@ -1,0 +1,194 @@
+//! Float MLP (784-256-256-10) with minibatch SGD: the model that gets
+//! quantized onto the overlay. Deliberately dependency-free and small;
+//! training a ~270k-parameter MLP on the synthetic set takes well under
+//! a second per epoch.
+
+use crate::util::Rng;
+
+/// Row-major dense layer weights (in_dim × out_dim), no bias (keeps the
+/// integer pipeline bias-free like the overlay's accumulator path).
+pub struct FloatMlp {
+    pub dims: [usize; 4],
+    pub w: [Vec<f32>; 3],
+}
+
+fn matvec(w: &[f32], x: &[f32], in_dim: usize, out_dim: usize, out: &mut [f32]) {
+    out.iter_mut().for_each(|o| *o = 0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * out_dim..(i + 1) * out_dim];
+        for (o, &wij) in out.iter_mut().zip(row) {
+            *o += xi * wij;
+        }
+    }
+    debug_assert_eq!(x.len(), in_dim);
+}
+
+fn relu(x: &mut [f32]) {
+    x.iter_mut().for_each(|v| *v = v.max(0.0));
+}
+
+fn softmax_xent_grad(logits: &[f32], label: usize, grad: &mut [f32]) -> f32 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&l| (l - max).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    for (g, e) in grad.iter_mut().zip(&exps) {
+        *g = e / z;
+    }
+    grad[label] -= 1.0;
+    -(exps[label] / z).max(1e-12).ln()
+}
+
+impl FloatMlp {
+    /// He-initialized random MLP.
+    pub fn new(seed: u64, dims: [usize; 4]) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut init = |i: usize, o: usize| -> Vec<f32> {
+            let scale = (2.0 / i as f64).sqrt();
+            (0..i * o)
+                .map(|_| ((rng.f64() * 2.0 - 1.0) * scale) as f32)
+                .collect()
+        };
+        let w = [
+            init(dims[0], dims[1]),
+            init(dims[1], dims[2]),
+            init(dims[2], dims[3]),
+        ];
+        FloatMlp { dims, w }
+    }
+
+    /// Forward pass returning all activations (for backprop).
+    fn forward_full(&self, x: &[f32]) -> [Vec<f32>; 3] {
+        let [d0, d1, d2, d3] = self.dims;
+        let mut h1 = vec![0.0; d1];
+        matvec(&self.w[0], x, d0, d1, &mut h1);
+        relu(&mut h1);
+        let mut h2 = vec![0.0; d2];
+        matvec(&self.w[1], &h1, d1, d2, &mut h2);
+        relu(&mut h2);
+        let mut out = vec![0.0; d3];
+        matvec(&self.w[2], &h2, d2, d3, &mut out);
+        [h1, h2, out]
+    }
+
+    pub fn logits(&self, x: &[f32]) -> Vec<f32> {
+        let [_, _, out] = self.forward_full(x);
+        out
+    }
+
+    pub fn predict(&self, x: &[f32]) -> usize {
+        let l = self.logits(x);
+        l.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    }
+
+    pub fn accuracy(&self, xs: &[Vec<f32>], ys: &[usize]) -> f64 {
+        let correct = xs
+            .iter()
+            .zip(ys)
+            .filter(|(x, &y)| self.predict(x) == y)
+            .count();
+        correct as f64 / xs.len().max(1) as f64
+    }
+
+    /// One epoch of plain SGD; returns mean loss.
+    pub fn train_epoch(&mut self, xs: &[Vec<f32>], ys: &[usize], lr: f32, seed: u64) -> f64 {
+        let [d0, d1, d2, d3] = self.dims;
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        let mut rng = Rng::new(seed);
+        for i in (1..order.len()).rev() {
+            order.swap(i, rng.index(i + 1));
+        }
+        let mut total = 0.0f64;
+        let mut g3 = vec![0.0f32; d3];
+        for &s in &order {
+            let x = &xs[s];
+            let [h1, h2, out] = self.forward_full(x);
+            total += softmax_xent_grad(&out, ys[s], &mut g3) as f64;
+            // Backprop layer 3.
+            let mut g2 = vec![0.0f32; d2];
+            for (i, &h) in h2.iter().enumerate() {
+                let row = &mut self.w[2][i * d3..(i + 1) * d3];
+                let mut acc = 0.0;
+                for (j, w) in row.iter_mut().enumerate() {
+                    acc += *w * g3[j];
+                    *w -= lr * h * g3[j];
+                }
+                g2[i] = if h > 0.0 { acc } else { 0.0 };
+            }
+            // Layer 2.
+            let mut g1 = vec![0.0f32; d1];
+            for (i, &h) in h1.iter().enumerate() {
+                let row = &mut self.w[1][i * d2..(i + 1) * d2];
+                let mut acc = 0.0;
+                for (j, w) in row.iter_mut().enumerate() {
+                    acc += *w * g2[j];
+                    *w -= lr * h * g2[j];
+                }
+                g1[i] = if h > 0.0 { acc } else { 0.0 };
+            }
+            // Layer 1.
+            for (i, &xi) in x.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = &mut self.w[0][i * d1..(i + 1) * d1];
+                for (j, w) in row.iter_mut().enumerate() {
+                    *w -= lr * xi * g1[j];
+                }
+            }
+            debug_assert_eq!(x.len(), d0);
+        }
+        total / xs.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::dataset::SyntheticDigits;
+
+    #[test]
+    fn learns_synthetic_digits() {
+        let d = SyntheticDigits::generate(42, 400, 100, 0.15);
+        let mut mlp = FloatMlp::new(7, [784, 64, 64, 10]);
+        let before = mlp.accuracy(&d.test_x, &d.test_y);
+        let mut loss_first = 0.0;
+        let mut loss_last = 0.0;
+        for e in 0..3 {
+            let loss = mlp.train_epoch(&d.train_x, &d.train_y, 0.02, e);
+            if e == 0 {
+                loss_first = loss;
+            }
+            loss_last = loss;
+        }
+        let after = mlp.accuracy(&d.test_x, &d.test_y);
+        assert!(loss_last < loss_first, "loss {loss_first} -> {loss_last}");
+        assert!(
+            after > before.max(0.5),
+            "accuracy {before:.2} -> {after:.2}"
+        );
+    }
+
+    #[test]
+    fn softmax_grad_sums_to_zero() {
+        let logits = [1.0, 2.0, 0.5];
+        let mut g = [0.0; 3];
+        let loss = softmax_xent_grad(&logits, 1, &mut g);
+        assert!(loss > 0.0);
+        assert!(g.iter().sum::<f32>().abs() < 1e-6);
+        assert!(g[1] < 0.0);
+    }
+
+    #[test]
+    fn predict_in_range() {
+        let mlp = FloatMlp::new(1, [784, 16, 16, 10]);
+        let x = vec![0.5; 784];
+        assert!(mlp.predict(&x) < 10);
+    }
+}

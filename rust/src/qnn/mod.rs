@@ -1,0 +1,24 @@
+//! Quantized neural network layer: the application the paper motivates
+//! BISMO with (QNN inference à la FINN / Park et al.).
+//!
+//! * [`dataset`] — synthetic 784-dimensional "digits" (10 Gaussian
+//!   class prototypes) standing in for MNIST (no dataset downloads in
+//!   this environment; documented substitution).
+//! * [`mlp`] — a small float MLP (784-256-256-10) trained in-crate with
+//!   SGD: the model that gets quantized.
+//! * [`quantize`] — symmetric weight quantization + activation
+//!   quantization to the overlay's operand precisions.
+//! * [`infer`] — integer-only inference: a reference path (pure i64)
+//!   and the overlay path where every GEMM runs through
+//!   [`crate::coordinator::BismoContext`]; both must agree bit-exactly
+//!   with the AOT-compiled JAX artifact.
+
+pub mod dataset;
+pub mod infer;
+pub mod mlp;
+pub mod quantize;
+
+pub use dataset::SyntheticDigits;
+pub use infer::QnnMlp;
+pub use mlp::FloatMlp;
+pub use quantize::{quantize_activations, quantize_weights_symmetric};

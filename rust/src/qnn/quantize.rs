@@ -1,0 +1,78 @@
+//! Post-training quantization to the overlay's operand precisions.
+
+use crate::bitmatrix::IntMatrix;
+
+/// Quantize activations in `[0,1]` to unsigned `bits`-bit levels:
+/// `q = round(x · (2^bits − 1))`.
+pub fn quantize_activations(x: &[f32], bits: u32) -> Vec<i64> {
+    let levels = ((1u32 << bits) - 1) as f32;
+    x.iter()
+        .map(|&v| (v.clamp(0.0, 1.0) * levels).round() as i64)
+        .collect()
+}
+
+/// Symmetric per-tensor weight quantization to signed `bits`-bit:
+/// `scale = max|w| / (2^{bits−1} − 1)`, `q = clamp(round(w / scale))`.
+/// Returns the quantized matrix and the scale.
+pub fn quantize_weights_symmetric(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    bits: u32,
+) -> (IntMatrix, f32) {
+    assert_eq!(w.len(), rows * cols);
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    let absmax = w.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-12);
+    let scale = absmax / qmax;
+    let data: Vec<i64> = w
+        .iter()
+        .map(|&v| ((v / scale).round() as i64).clamp(-(qmax as i64) - 1, qmax as i64))
+        .collect();
+    (IntMatrix::from_slice(rows, cols, &data), scale)
+}
+
+/// Integer-only requantization + ReLU, matching the L2 model's
+/// `requantize` exactly: `clip(max(acc,0) >> shift, 0, 2^bits − 1)`.
+pub fn requantize(acc: &IntMatrix, shift: u32, out_bits: u32) -> IntMatrix {
+    let hi = (1i64 << out_bits) - 1;
+    IntMatrix::from_fn(acc.rows, acc.cols, |r, c| {
+        ((acc.get(r, c).max(0)) >> shift).min(hi)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn activation_levels() {
+        let q = quantize_activations(&[0.0, 0.32, 0.34, 0.66, 1.0, 2.0, -1.0], 2);
+        assert_eq!(q, vec![0, 1, 1, 2, 3, 3, 0]);
+    }
+
+    #[test]
+    fn weight_quantization_symmetric() {
+        let w = [-1.0f32, -0.5, 0.0, 0.5, 1.0];
+        let (q, scale) = quantize_weights_symmetric(&w, 1, 5, 4);
+        // qmax = 7; ±0.5/scale = 3.4999996 in f32 → rounds to ±3.
+        assert_eq!(q.data(), &[-7, -3, 0, 3, 7]);
+        assert!((scale - 1.0 / 7.0).abs() < 1e-6);
+        assert!(q.fits(4, true));
+    }
+
+    #[test]
+    fn weight_extreme_clamps_to_range() {
+        let w = [1.0f32, -1.0];
+        let (q, _) = quantize_weights_symmetric(&w, 1, 2, 2);
+        // 2-bit signed: [-2, 1]; +1.0/scale = qmax = 1.
+        assert_eq!(q.data(), &[1, -1]);
+        assert!(q.fits(2, true));
+    }
+
+    #[test]
+    fn requantize_matches_l2_semantics() {
+        let acc = IntMatrix::from_slice(1, 5, &[-5, 0, 63, 64, 1000]);
+        let out = requantize(&acc, 4, 2);
+        assert_eq!(out.data(), &[0, 0, 3, 3, 3]);
+    }
+}

@@ -1,0 +1,172 @@
+//! Table/figure formatting used by the benchmark harness and CLI.
+
+/// A simple fixed-width text table with a title, printed in the style
+/// the benches use to mirror the paper's tables.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> &mut Self {
+        assert_eq!(fields.len(), self.headers.len(), "table row width");
+        self.rows.push(fields.to_vec());
+        self
+    }
+
+    pub fn rowf(&mut self, fields: &[&dyn std::fmt::Display]) -> &mut Self {
+        let v: Vec<String> = fields.iter().map(|f| format!("{f}")).collect();
+        self.row(&v)
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, f) in widths.iter_mut().zip(row) {
+                *w = (*w).max(f.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |fields: &[String], widths: &[usize]| -> String {
+            fields
+                .iter()
+                .zip(widths)
+                .map(|(f, w)| format!("{f:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Render a Fig. 5-style ASCII timeline from simulator trace events:
+/// one lane per stage, `#` = running, `.` = stalled in a Wait, with
+/// time scaled to `width` columns.
+pub fn render_timeline(events: &[crate::sim::TraceEvent], width: usize) -> String {
+    use crate::isa::Stage;
+    let total = events.iter().map(|e| e.end).max().unwrap_or(0).max(1);
+    let scale = |t: u64| ((t as f64 / total as f64) * width as f64) as usize;
+    let mut out = String::new();
+    for stage in Stage::ALL {
+        let mut lane = vec![' '; width + 1];
+        for e in events.iter().filter(|e| e.stage == stage) {
+            let (a, b) = (scale(e.start), scale(e.end).max(scale(e.start) + 1));
+            let ch = if e.stalled { '.' } else { '#' };
+            for c in lane.iter_mut().take(b.min(width + 1)).skip(a) {
+                // Running work wins over stall marks at the same column.
+                if *c != '#' {
+                    *c = ch;
+                }
+            }
+        }
+        out.push_str(&format!("{:>7} |", stage.name()));
+        out.extend(lane);
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>7} +{}> {} cycles   (# running, . stalled)\n",
+        "",
+        "-".repeat(width),
+        total
+    ));
+    out
+}
+
+/// Format a float with `d` decimals (bench helper).
+pub fn f(v: f64, d: usize) -> String {
+    format!("{v:.d$}")
+}
+
+/// Format a percentage.
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.rowf(&[&100, &"x"]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("  a  bbbb"));
+        assert!(s.lines().count() == 5);
+        // Right-aligned columns.
+        assert!(s.contains("100     x"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(pct(0.938), "93.8%");
+    }
+
+    #[test]
+    fn timeline_lanes() {
+        use crate::isa::Stage;
+        use crate::sim::TraceEvent;
+        let events = vec![
+            TraceEvent {
+                stage: Stage::Fetch,
+                label: "F1 RunFetch".into(),
+                start: 0,
+                end: 50,
+                stalled: false,
+            },
+            TraceEvent {
+                stage: Stage::Execute,
+                label: "E1 Wait".into(),
+                start: 0,
+                end: 50,
+                stalled: true,
+            },
+            TraceEvent {
+                stage: Stage::Execute,
+                label: "E2 RunExecute".into(),
+                start: 50,
+                end: 100,
+                stalled: false,
+            },
+        ];
+        let s = render_timeline(&events, 40);
+        assert!(s.contains("fetch"));
+        assert!(s.contains("execute"));
+        assert!(s.contains("100 cycles"));
+        // Execute lane has both a stalled and a running phase.
+        let exec_lane = s.lines().find(|l| l.contains("execute")).unwrap();
+        assert!(exec_lane.contains('.') && exec_lane.contains('#'));
+    }
+}

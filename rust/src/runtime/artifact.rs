@@ -1,0 +1,138 @@
+//! Artifact manifest: what `python -m compile.aot` exported.
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Declared shape/dtype of one artifact input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported computation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<InputSpec>,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .map_err(|e| format!("reading {}: {e} (run `make artifacts` first)", mpath.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text with artifact paths relative to `dir`.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self, String> {
+        let j = Json::parse(text).map_err(|e| format!("manifest.json: {e}"))?;
+        let obj = j.as_obj().ok_or("manifest root must be an object")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in obj {
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| format!("{name}: missing file"))?;
+            let inputs = entry
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| format!("{name}: missing inputs"))?
+                .iter()
+                .map(|spec| {
+                    let shape = spec
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .ok_or_else(|| format!("{name}: input missing shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| format!("{name}: bad dim")))
+                        .collect::<Result<Vec<_>, _>>()?;
+                    let dtype = spec
+                        .get("dtype")
+                        .and_then(|d| d.as_str())
+                        .unwrap_or("int32")
+                        .to_string();
+                    Ok(InputSpec { shape, dtype })
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    path: dir.join(file),
+                    inputs,
+                },
+            );
+        }
+        Ok(ArtifactManifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec, String> {
+        self.artifacts.get(name).ok_or_else(|| {
+            format!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "bitserial_matmul_8x2048x8_w2a2_uu": {
+        "file": "bitserial_matmul_8x2048x8_w2a2_uu.hlo.txt",
+        "inputs": [
+          {"shape": [8, 2048], "dtype": "int32"},
+          {"shape": [2048, 8], "dtype": "int32"}
+        ]
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let a = m.get("bitserial_matmul_8x2048x8_w2a2_uu").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![8, 2048]);
+        assert_eq!(a.inputs[0].elements(), 16384);
+        assert_eq!(a.inputs[1].dtype, "int32");
+        assert!(a.path.ends_with("bitserial_matmul_8x2048x8_w2a2_uu.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_artifact_reported() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert!(m.get("nope").unwrap_err().contains("not in manifest"));
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // If `make artifacts` has run, the real manifest must parse and
+        // contain the expected entries.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = ArtifactManifest::load(&dir).unwrap();
+            assert!(m.get("qnn_mlp_b16_w4a2").is_ok());
+            assert!(m.get("bitserial_matmul_64x256x64_w4a4_ss").is_ok());
+        }
+    }
+}

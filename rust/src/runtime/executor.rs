@@ -1,0 +1,158 @@
+//! PJRT CPU client wrapper: compile HLO-text artifacts once, execute
+//! many times from the request path.
+
+use super::artifact::{ArtifactManifest, ArtifactSpec};
+use crate::bitmatrix::IntMatrix;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// The runtime: one PJRT CPU client + a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+/// A compiled computation bound to its input contract.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+impl Runtime {
+    /// Connect to the CPU PJRT plugin and read the artifact manifest.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = ArtifactManifest::load(artifact_dir).map_err(|e| anyhow!(e))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Load (and cache) a compiled executable by artifact name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(name).map_err(|e| anyhow!(e))?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", spec.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let arc = std::sync::Arc::new(Executable { exe, spec });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+}
+
+impl Executable {
+    /// Execute with i32 matrices (row-major), returning the first tuple
+    /// element as an [`IntMatrix`] of the given output shape.
+    pub fn run_i32(&self, inputs: &[&IntMatrix]) -> Result<IntMatrix> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {} wants {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (m, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if spec.shape != [m.rows, m.cols] {
+                bail!(
+                    "artifact {} input shape {:?} != matrix {}x{}",
+                    self.spec.name,
+                    spec.shape,
+                    m.rows,
+                    m.cols
+                );
+            }
+            if spec.dtype != "int32" {
+                bail!("run_i32 on non-int32 input ({})", spec.dtype);
+            }
+            let v: Vec<i32> = m.data().iter().map(|&x| x as i32).collect();
+            lits.push(
+                xla::Literal::vec1(&v)
+                    .reshape(&[m.rows as i64, m.cols as i64])
+                    .context("reshaping literal")?,
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let dims: Vec<usize> = out
+            .array_shape()
+            .context("result shape")?
+            .dims()
+            .iter()
+            .map(|&d| d as usize)
+            .collect();
+        if dims.len() != 2 {
+            bail!("expected rank-2 result, got {dims:?}");
+        }
+        let data: Vec<i64> = out
+            .to_vec::<i32>()
+            .context("reading i32 result")?
+            .into_iter()
+            .map(|x| x as i64)
+            .collect();
+        Ok(IntMatrix::from_slice(dims[0], dims[1], &data))
+    }
+
+    /// Execute with packed uint32 planes (popcount-form artifact).
+    pub fn run_u32_pair(
+        &self,
+        a: (&[u32], [usize; 2]),
+        b: (&[u32], [usize; 2]),
+    ) -> Result<IntMatrix> {
+        let mk = |(data, shape): (&[u32], [usize; 2])| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(data).reshape(&[shape[0] as i64, shape[1] as i64])?)
+        };
+        let lits = [mk(a)?, mk(b)?];
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let dims: Vec<usize> = out
+            .array_shape()?
+            .dims()
+            .iter()
+            .map(|&d| d as usize)
+            .collect();
+        let data: Vec<i64> = out
+            .to_vec::<i32>()?
+            .into_iter()
+            .map(|x| x as i64)
+            .collect();
+        Ok(IntMatrix::from_slice(dims[0], dims[1], &data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed tests live in rust/tests/runtime_integration.rs: they
+    // need built artifacts and a working libxla_extension, which unit
+    // tests must not assume.
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The compile path (`make artifacts`) lowers the L2 model to HLO text;
+//! this module loads `artifacts/*.hlo.txt` through the `xla` crate's
+//! PJRT CPU client, compiles each module once, and exposes typed
+//! execution — the only place Python-born compute is touched, and it is
+//! touched as a binary artifact. Interchange is HLO *text*: jax ≥ 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids.
+
+mod artifact;
+mod executor;
+
+pub use artifact::{ArtifactManifest, ArtifactSpec, InputSpec};
+pub use executor::{Executable, Runtime};

@@ -1,0 +1,586 @@
+//! Instruction emission: turns a [`Plan`] into the three synchronized
+//! instruction queues.
+//!
+//! Internally builds a round-based IR — fetch rounds paired 1:1 with
+//! execute rounds — then lowers it to the anonymous-token protocol:
+//!
+//! * `FetchToExecute`: one signal per fetch round; execute waits once
+//!   per fetch round it consumes, in order.
+//! * `ExecuteToFetch`: "buffer region free" tokens. Each fetch round
+//!   that reuses a region records the execute round that must complete
+//!   first; since token FIFOs pair waits with signals positionally, the
+//!   required milestones are made non-decreasing (running max) and
+//!   execute emits the matching signals right after each round.
+//! * `ExecuteToResult` / `ResultToExecute`: result-buffer slot
+//!   handshake. With [`Overlap::Full`], execute only waits once the
+//!   `B_r` slots could all be in flight; with [`Overlap::None`], every
+//!   commit round-trips through the result writer (the paper's
+//!   serialized baseline).
+
+use super::plan::{MatmulJob, Mode, Plan};
+use super::{Overlap, PlaneList};
+use crate::arch::BismoConfig;
+use crate::isa::{ExecuteRun, FetchRun, Instr, Program, ResultRun, Stage, SyncChannel};
+
+/// IR: one fetch round (a set of RunFetch instructions that execute as a
+/// unit and are acknowledged by a single FetchToExecute token).
+struct FetchRound {
+    instrs: Vec<FetchRun>,
+    /// Execute round (by index) that must fully complete before this
+    /// round may touch its destination region.
+    requires_exec: Option<usize>,
+}
+
+/// IR: one burst of back-to-back RunExecutes (one accumulation group or
+/// one slice of it), optionally committing a result tile.
+struct Burst {
+    execs: Vec<ExecuteRun>,
+    commit: Option<ResultRun>,
+}
+
+/// IR: one execute round, consuming `consumes` fetch rounds.
+struct ExecRound {
+    consumes: usize,
+    bursts: Vec<Burst>,
+}
+
+/// Emit the program for `job` under `plan`.
+pub fn emit(
+    job: &MatmulJob,
+    cfg: &BismoConfig,
+    plan: &Plan,
+    overlap: Overlap,
+    lhs_planes: &PlaneList,
+    rhs_planes: &PlaneList,
+) -> Result<Program, String> {
+    assert_eq!(lhs_planes.len() as u32, plan.lhs_planes);
+    assert_eq!(rhs_planes.len() as u32, plan.rhs_planes);
+    let ir = match plan.mode {
+        Mode::RhsResident { tiles_per_group } => {
+            build_rhs_resident(job, cfg, plan, overlap, lhs_planes, rhs_planes, tiles_per_group)
+        }
+        Mode::Streaming { slice_chunks } => {
+            build_streaming(job, cfg, plan, overlap, lhs_planes, rhs_planes, slice_chunks)
+        }
+    }?;
+    lower(ir, cfg, overlap)
+}
+
+/// Fetch-block size sanity vs the 16-bit (in 8-byte units) ISA field.
+fn check_block(bytes: u64) -> Result<u32, String> {
+    if bytes / 8 >= (1 << 16) {
+        return Err(format!(
+            "fetch block of {bytes} bytes exceeds the ISA block-size field"
+        ));
+    }
+    Ok(bytes as u32)
+}
+
+/// Rows of output tile `t` (0-based) for dimension size `total`, tile
+/// height `d`.
+fn tile_span(t: usize, d: usize, total: usize) -> usize {
+    (total - t * d).min(d)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_rhs_resident(
+    job: &MatmulJob,
+    cfg: &BismoConfig,
+    plan: &Plan,
+    overlap: Overlap,
+    lhs_planes: &PlaneList,
+    rhs_planes: &PlaneList,
+    tiles_per_group: usize,
+) -> Result<(Vec<FetchRound>, Vec<ExecRound>), String> {
+    let dm = cfg.dm as usize;
+    let dn = cfg.dn as usize;
+    let kc = plan.kc as u32;
+    let regions = if overlap == Overlap::Full { 2 } else { 1 };
+    let region_words = (cfg.bm as usize) / regions;
+    let dist = regions; // LHS region reuse distance in rounds
+
+    let mut fetch_rounds = Vec::new();
+    let mut exec_rounds = Vec::new();
+    let groups = plan.groups();
+    for g in 0..groups {
+        let tn_lo = g * tiles_per_group;
+        let tn_hi = ((g + 1) * tiles_per_group).min(plan.tn);
+
+        // RHS group fetch round: all planes of all tiles in the group.
+        let mut rhs_instrs = Vec::new();
+        for (u, tn) in (tn_lo..tn_hi).enumerate() {
+            let cols = tile_span(tn, dn, job.n);
+            for (j_idx, &(pj, _)) in rhs_planes.planes.iter().enumerate() {
+                rhs_instrs.push(FetchRun {
+                    dram_base: job.rhs.addr(pj, tn * dn, 0),
+                    block_bytes: check_block(job.rhs.row_bytes())?,
+                    block_stride_bytes: check_block(job.rhs.row_bytes())?,
+                    num_blocks: cols as u32,
+                    buf_offset: (u * rhs_planes.len() as usize + j_idx) as u32 * kc,
+                    buf_start: dm as u8,
+                    buf_range: cols as u8,
+                    words_per_buf: kc,
+                });
+            }
+        }
+        fetch_rounds.push(FetchRound {
+            instrs: rhs_instrs,
+            // The previous group's RHS data is in use until its last
+            // execute round completes.
+            requires_exec: if g > 0 { Some(g * plan.tm - 1) } else { None },
+        });
+
+        for tm_i in 0..plan.tm {
+            let l_global = g * plan.tm + tm_i;
+            let rows = tile_span(tm_i, dm, job.m);
+            let region_base = ((l_global % regions) * region_words) as u32;
+
+            // LHS tile fetch round (one RunFetch per scheduled plane).
+            let mut lhs_instrs = Vec::new();
+            for (i_idx, &(pi, _)) in lhs_planes.planes.iter().enumerate() {
+                lhs_instrs.push(FetchRun {
+                    dram_base: job.lhs.addr(pi, tm_i * dm, 0),
+                    block_bytes: check_block(job.lhs.row_bytes())?,
+                    block_stride_bytes: check_block(job.lhs.row_bytes())?,
+                    num_blocks: rows as u32,
+                    buf_offset: region_base + i_idx as u32 * kc,
+                    buf_start: 0,
+                    buf_range: rows as u8,
+                    words_per_buf: kc,
+                });
+            }
+            fetch_rounds.push(FetchRound {
+                instrs: lhs_instrs,
+                requires_exec: l_global.checked_sub(dist),
+            });
+
+            // Execute round: one burst per resident RHS tile.
+            let mut bursts = Vec::new();
+            for (u, tn) in (tn_lo..tn_hi).enumerate() {
+                let cols = tile_span(tn, dn, job.n);
+                let mut execs = Vec::new();
+                let npairs = lhs_planes.len() * rhs_planes.len();
+                let mut pair = 0usize;
+                for (i_idx, &(pi, ni)) in lhs_planes.planes.iter().enumerate() {
+                    for (j_idx, &(pj, nj)) in rhs_planes.planes.iter().enumerate() {
+                        execs.push(ExecuteRun {
+                            lhs_offset: region_base + i_idx as u32 * kc,
+                            rhs_offset: (u * rhs_planes.len() + j_idx) as u32 * kc,
+                            num_chunks: kc,
+                            shift: (pi + pj) as u8,
+                            negate: ni ^ nj,
+                            acc_reset: pair == 0,
+                            commit_result: pair + 1 == npairs,
+                        });
+                        pair += 1;
+                    }
+                }
+                bursts.push(Burst {
+                    execs,
+                    commit: Some(ResultRun {
+                        dram_base: job.res.base,
+                        offset: (tm_i * dm * job.n + tn * dn) as u64 * 4,
+                        rows: rows as u8,
+                        cols: cols as u8,
+                        row_stride_bytes: job.n as u32 * 4,
+                    }),
+                });
+            }
+            exec_rounds.push(ExecRound {
+                consumes: 1 + (tm_i == 0) as usize,
+                bursts,
+            });
+        }
+    }
+    Ok((fetch_rounds, exec_rounds))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_streaming(
+    job: &MatmulJob,
+    cfg: &BismoConfig,
+    plan: &Plan,
+    overlap: Overlap,
+    lhs_planes: &PlaneList,
+    rhs_planes: &PlaneList,
+    slice_chunks: usize,
+) -> Result<(Vec<FetchRound>, Vec<ExecRound>), String> {
+    let dm = cfg.dm as usize;
+    let dn = cfg.dn as usize;
+    let regions = if overlap == Overlap::Full { 2 } else { 1 };
+    let l_region_words = (cfg.bm as usize) / regions;
+    let r_region_words = (cfg.bn as usize) / regions;
+    let dist = regions;
+    let slices = plan.slices();
+    let wpc = job.lhs.words_per_chunk as u64;
+
+    let mut fetch_rounds = Vec::new();
+    let mut exec_rounds = Vec::new();
+    let mut round = 0usize;
+    for tm_i in 0..plan.tm {
+        let rows = tile_span(tm_i, dm, job.m);
+        for tn_i in 0..plan.tn {
+            let cols = tile_span(tn_i, dn, job.n);
+            for s in 0..slices {
+                let c0 = s * slice_chunks;
+                let sc = (plan.kc - c0).min(slice_chunks);
+                let l_base = ((round % regions) * l_region_words) as u32;
+                let r_base = ((round % regions) * r_region_words) as u32;
+
+                let mut instrs = Vec::new();
+                for (i_idx, &(pi, _)) in lhs_planes.planes.iter().enumerate() {
+                    instrs.push(FetchRun {
+                        dram_base: job.lhs.addr(pi, tm_i * dm, c0),
+                        block_bytes: check_block(sc as u64 * wpc * 8)?,
+                        block_stride_bytes: check_block(job.lhs.row_bytes())?,
+                        num_blocks: rows as u32,
+                        buf_offset: l_base + (i_idx * slice_chunks) as u32,
+                        buf_start: 0,
+                        buf_range: rows as u8,
+                        words_per_buf: sc as u32,
+                    });
+                }
+                for (j_idx, &(pj, _)) in rhs_planes.planes.iter().enumerate() {
+                    instrs.push(FetchRun {
+                        dram_base: job.rhs.addr(pj, tn_i * dn, c0),
+                        block_bytes: check_block(sc as u64 * wpc * 8)?,
+                        block_stride_bytes: check_block(job.rhs.row_bytes())?,
+                        num_blocks: cols as u32,
+                        buf_offset: r_base + (j_idx * slice_chunks) as u32,
+                        buf_start: dm as u8,
+                        buf_range: cols as u8,
+                        words_per_buf: sc as u32,
+                    });
+                }
+                fetch_rounds.push(FetchRound {
+                    instrs,
+                    requires_exec: round.checked_sub(dist),
+                });
+
+                // One burst: all plane pairs over this slice.
+                let mut execs = Vec::new();
+                let npairs = lhs_planes.len() * rhs_planes.len();
+                let mut pair = 0usize;
+                for (i_idx, &(pi, ni)) in lhs_planes.planes.iter().enumerate() {
+                    for (j_idx, &(pj, nj)) in rhs_planes.planes.iter().enumerate() {
+                        execs.push(ExecuteRun {
+                            lhs_offset: l_base + (i_idx * slice_chunks) as u32,
+                            rhs_offset: r_base + (j_idx * slice_chunks) as u32,
+                            num_chunks: sc as u32,
+                            shift: (pi + pj) as u8,
+                            negate: ni ^ nj,
+                            // Fresh accumulation only on the tile's first
+                            // slice; later slices extend the dot product.
+                            acc_reset: pair == 0 && s == 0,
+                            commit_result: pair + 1 == npairs && s + 1 == slices,
+                        });
+                        pair += 1;
+                    }
+                }
+                let commit = if s + 1 == slices {
+                    Some(ResultRun {
+                        dram_base: job.res.base,
+                        offset: (tm_i * dm * job.n + tn_i * dn) as u64 * 4,
+                        rows: rows as u8,
+                        cols: cols as u8,
+                        row_stride_bytes: job.n as u32 * 4,
+                    })
+                } else {
+                    None
+                };
+                exec_rounds.push(ExecRound {
+                    consumes: 1,
+                    bursts: vec![Burst { execs, commit }],
+                });
+                round += 1;
+            }
+        }
+    }
+    Ok((fetch_rounds, exec_rounds))
+}
+
+/// Lower the IR to the token protocol (see module docs).
+fn lower(
+    ir: (Vec<FetchRound>, Vec<ExecRound>),
+    cfg: &BismoConfig,
+    overlap: Overlap,
+) -> Result<Program, String> {
+    let (fetch_rounds, exec_rounds) = ir;
+    let mut prog = Program::new();
+
+    // 1. Non-decreasing region-free milestones (positional pairing).
+    let mut adjusted: Vec<Option<usize>> = Vec::with_capacity(fetch_rounds.len());
+    let mut running: Option<usize> = None;
+    for fr in &fetch_rounds {
+        let adj = match (running, fr.requires_exec) {
+            (None, r) => r,
+            (Some(a), None) => Some(a), // keep monotone: later waits pop later tokens
+            (Some(a), Some(r)) => Some(a.max(r)),
+        };
+        // Only rounds that *have* a requirement wait; rounds without one
+        // must not consume tokens.
+        adjusted.push(fr.requires_exec.map(|_| adj.unwrap()));
+        if fr.requires_exec.is_some() {
+            running = adj;
+        }
+    }
+
+    // 2. Signals execute must emit after each of its rounds.
+    let mut signals_after = vec![0usize; exec_rounds.len()];
+    for adj in adjusted.iter().flatten() {
+        if *adj >= exec_rounds.len() {
+            return Err(format!(
+                "internal: milestone {adj} beyond {} exec rounds",
+                exec_rounds.len()
+            ));
+        }
+        signals_after[*adj] += 1;
+    }
+
+    // 3. Fetch queue.
+    for (fr, adj) in fetch_rounds.iter().zip(&adjusted) {
+        if adj.is_some() {
+            prog.push(Stage::Fetch, Instr::Wait(SyncChannel::ExecuteToFetch));
+        }
+        for f in &fr.instrs {
+            prog.push(Stage::Fetch, Instr::Fetch(*f));
+        }
+        prog.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
+    }
+
+    // 4. Execute + result queues.
+    let total_commits: usize = exec_rounds
+        .iter()
+        .flat_map(|e| e.bursts.iter())
+        .filter(|b| b.commit.is_some())
+        .count();
+    let br = cfg.br as usize;
+    let mut commit_idx = 0usize;
+    let mut result_queue: Vec<ResultRun> = Vec::with_capacity(total_commits);
+    for (e, er) in exec_rounds.iter().enumerate() {
+        for _ in 0..er.consumes {
+            prog.push(Stage::Execute, Instr::Wait(SyncChannel::FetchToExecute));
+        }
+        for burst in &er.bursts {
+            let last = burst.execs.len() - 1;
+            for (x, ex) in burst.execs.iter().enumerate() {
+                let committing = x == last && burst.commit.is_some();
+                debug_assert_eq!(ex.commit_result, committing);
+                if committing && overlap == Overlap::Full && commit_idx >= br {
+                    // A slot must have drained before this commit.
+                    prog.push(Stage::Execute, Instr::Wait(SyncChannel::ResultToExecute));
+                }
+                prog.push(Stage::Execute, Instr::Execute(*ex));
+                if committing {
+                    prog.push(Stage::Execute, Instr::Signal(SyncChannel::ExecuteToResult));
+                    if overlap == Overlap::None {
+                        // Serialized baseline: wait for our own drain.
+                        prog.push(Stage::Execute, Instr::Wait(SyncChannel::ResultToExecute));
+                    }
+                    result_queue.push(burst.commit.unwrap());
+                    commit_idx += 1;
+                }
+            }
+        }
+        for _ in 0..signals_after[e] {
+            prog.push(Stage::Execute, Instr::Signal(SyncChannel::ExecuteToFetch));
+        }
+    }
+
+    for (c, rr) in result_queue.iter().enumerate() {
+        prog.push(Stage::Result, Instr::Wait(SyncChannel::ExecuteToResult));
+        prog.push(Stage::Result, Instr::Result(*rr));
+        let do_signal = match overlap {
+            Overlap::Full => c + br < total_commits,
+            Overlap::None => true,
+        };
+        if do_signal {
+            prog.push(Stage::Result, Instr::Signal(SyncChannel::ResultToExecute));
+        }
+    }
+
+    prog.validate()?;
+    Ok(prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::PYNQ_Z1;
+    use crate::baseline::gemm_bitserial;
+    use crate::bitmatrix::dram::{DramImage, OperandLayout, ResultLayout};
+    use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
+    use crate::scheduler::{compile, Overlap};
+    use crate::sim::Simulation;
+    use crate::util::{property_sweep, Rng};
+
+    /// Full pipeline check: build DRAM image, compile, simulate, compare
+    /// against both oracles.
+    fn run_case(
+        cfg: &BismoConfig,
+        rng: &mut Rng,
+        m: usize,
+        k: usize,
+        n: usize,
+        w: u32,
+        a: u32,
+        ls: bool,
+        rs: bool,
+        overlap: Overlap,
+    ) -> (IntMatrix, crate::sim::RunStats) {
+        let am = IntMatrix::random(rng, m, k, w, ls);
+        let bm = IntMatrix::random(rng, k, n, a, rs);
+        let labits = BitSerialMatrix::from_int(&am, w, ls);
+        let rabits = BitSerialMatrix::from_int(&bm.transpose(), a, rs);
+        let lhs = OperandLayout::new(0, m, k, w, cfg.dk);
+        let rhs = OperandLayout::new(lhs.base + lhs.total_bytes(), n, k, a, cfg.dk);
+        let res = ResultLayout::new(
+            crate::util::round_up(rhs.base + rhs.total_bytes(), 8),
+            m,
+            n,
+        );
+        let mut dram = DramImage::new((res.base + res.total_bytes()) as usize);
+        lhs.store(&mut dram, &labits);
+        rhs.store(&mut dram, &rabits);
+        let job = MatmulJob {
+            m,
+            k,
+            n,
+            wbits: w,
+            abits: a,
+            lsigned: ls,
+            rsigned: rs,
+            lhs,
+            rhs,
+            res,
+        };
+        let prog = compile(&job, cfg, overlap).expect("compile");
+        let mut sim = Simulation::new(*cfg, &PYNQ_Z1, dram).expect("sim");
+        let stats = sim.run(&prog).expect("run");
+        let got = res.load(&sim.dram);
+        let expect = am.matmul(&bm);
+        assert_eq!(got, expect, "sim vs i64 reference");
+        assert_eq!(
+            gemm_bitserial(&labits, &rabits),
+            expect,
+            "cpu bit-serial oracle"
+        );
+        (got, stats)
+    }
+
+    #[test]
+    fn exact_tile_binary() {
+        let cfg = BismoConfig::small();
+        let mut rng = Rng::new(101);
+        run_case(&cfg, &mut rng, 2, 64, 2, 1, 1, false, false, Overlap::Full);
+    }
+
+    #[test]
+    fn multi_tile_multi_bit() {
+        let cfg = BismoConfig::small();
+        let mut rng = Rng::new(102);
+        let (_, stats) = run_case(&cfg, &mut rng, 6, 256, 6, 3, 2, true, false, Overlap::Full);
+        assert_eq!(stats.commits, 9); // 3×3 tiles
+    }
+
+    #[test]
+    fn partial_tiles_everywhere() {
+        let cfg = BismoConfig::small();
+        let mut rng = Rng::new(103);
+        // m=5 (2+2+1), n=3 (2+1), k=100 (2 chunks, last partial).
+        run_case(&cfg, &mut rng, 5, 100, 3, 2, 2, true, true, Overlap::Full);
+    }
+
+    #[test]
+    fn streaming_mode_large_k() {
+        let cfg = BismoConfig {
+            bm: 64,
+            bn: 64,
+            ..BismoConfig::small()
+        };
+        let mut rng = Rng::new(104);
+        // kc = 32 chunks > bm/2 per 2 planes → streaming with slices.
+        let job_k = 64 * 32;
+        let (_, stats) = run_case(&cfg, &mut rng, 4, job_k, 4, 2, 2, false, true, Overlap::Full);
+        assert!(stats.cycles > 0);
+    }
+
+    #[test]
+    fn overlap_none_matches_numerics_and_is_slower() {
+        let cfg = BismoConfig::small();
+        let mut rng1 = Rng::new(105);
+        let mut rng2 = Rng::new(105);
+        let (r_full, s_full) =
+            run_case(&cfg, &mut rng1, 8, 512, 8, 2, 2, false, false, Overlap::Full);
+        let (r_none, s_none) =
+            run_case(&cfg, &mut rng2, 8, 512, 8, 2, 2, false, false, Overlap::None);
+        assert_eq!(r_full, r_none);
+        assert!(
+            s_none.cycles > s_full.cycles,
+            "serialized {} should exceed overlapped {}",
+            s_none.cycles,
+            s_full.cycles
+        );
+    }
+
+    #[test]
+    fn random_shape_sweep() {
+        let cfg = BismoConfig::small();
+        property_sweep(0x5CED, 15, |rng, _| {
+            let m = rng.index(10) + 1;
+            let k = rng.index(300) + 1;
+            let n = rng.index(10) + 1;
+            let w = rng.index(4) as u32 + 1;
+            let a = rng.index(4) as u32 + 1;
+            let (ls, rs) = (rng.chance(0.5), rng.chance(0.5));
+            let ov = if rng.chance(0.5) {
+                Overlap::Full
+            } else {
+                Overlap::None
+            };
+            run_case(&cfg, rng, m, k, n, w, a, ls, rs, ov);
+        });
+    }
+
+    #[test]
+    fn bit_skip_schedules_fewer_pairs() {
+        use crate::scheduler::{compile_with_planes, PlaneList};
+        let cfg = BismoConfig::small();
+        let mut rng = Rng::new(106);
+        // Operand with only even values: plane 0 is all-zero.
+        let m = 4;
+        let k = 128;
+        let n = 4;
+        let am = IntMatrix::from_fn(m, k, |r, c| (((r + c) % 4) * 2) as i64);
+        let bm = IntMatrix::random(&mut rng, k, n, 2, false);
+        let labits = BitSerialMatrix::from_int(&am, 3, false);
+        let rabits = BitSerialMatrix::from_int(&bm.transpose(), 2, false);
+        let lhs = OperandLayout::new(0, m, k, 3, cfg.dk);
+        let rhs = OperandLayout::new(lhs.total_bytes(), n, k, 2, cfg.dk);
+        let res = ResultLayout::new(rhs.base + rhs.total_bytes(), m, n);
+        let mut dram = DramImage::new((res.base + res.total_bytes()) as usize);
+        lhs.store(&mut dram, &labits);
+        rhs.store(&mut dram, &rabits);
+        let job = MatmulJob {
+            m,
+            k,
+            n,
+            wbits: 3,
+            abits: 2,
+            lsigned: false,
+            rsigned: false,
+            lhs,
+            rhs,
+            res,
+        };
+        let lp = PlaneList::nonzero(&labits);
+        assert_eq!(lp.len(), 2); // plane 0 skipped
+        let rp = PlaneList::full(2, false);
+        let skip = compile_with_planes(&job, &cfg, Overlap::Full, &lp, &rp).unwrap();
+        let full = compile(&job, &cfg, Overlap::Full).unwrap();
+        assert!(skip.stats().execute_runs < full.stats().execute_runs);
+        let mut sim = Simulation::new(cfg, &PYNQ_Z1, dram).unwrap();
+        sim.run(&skip).unwrap();
+        assert_eq!(res.load(&sim.dram), am.matmul(&bm));
+    }
+}

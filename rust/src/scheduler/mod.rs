@@ -1,0 +1,196 @@
+//! The software half of BISMO (paper §III-C): compiles a matrix
+//! multiplication job into the three per-stage instruction streams.
+//!
+//! Given a [`MatmulJob`] (dimensions, precisions, DRAM layouts) and a
+//! [`BismoConfig`], the scheduler:
+//!
+//! 1. **Tiles** the output into `D_m × D_n` tiles and the inner `k`
+//!    dimension into `D_k`-bit chunks ([`plan`]).
+//! 2. Picks a **schedule mode**: `RhsResident` keeps a group of RHS
+//!    tile-columns on-chip and streams LHS tiles past them
+//!    (double-buffered), minimizing DRAM traffic; `Streaming` falls back
+//!    to per-tile-pair fetching with `k`-slicing when buffers are too
+//!    small to hold full dot products.
+//! 3. **Emits** fetch/execute/result instructions with the token
+//!    protocol that lets the three stages overlap ([`emit`]), or a
+//!    fully serialized variant ([`Overlap::None`]) used for the paper's
+//!    stage-overlap experiment (§IV-B3).
+//!
+//! The sparse **bit-skip** extension (paper §III: "dynamically skip bit
+//! positions for sparse or approximate computing") drops all-zero
+//! bit-planes from the plane lists before emission.
+
+mod emit;
+mod plan;
+
+pub use emit::emit;
+pub use plan::{plan, MatmulJob, Mode, Plan};
+
+use crate::arch::BismoConfig;
+use crate::bitmatrix::{plane_sign, BitSerialMatrix};
+use crate::isa::{ExecuteRun, Instr, Program, Stage};
+
+/// How aggressively stages may run concurrently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Overlap {
+    /// Double-buffered fetch, pipelined result drain — the paper's
+    /// intended operating mode.
+    Full,
+    /// Every stage round-trips with its neighbours; used as the
+    /// baseline in the paper's 2.2× stage-overlap experiment.
+    None,
+}
+
+/// One operand's bit-planes as scheduled: `(plane index, negate)`.
+/// Derived from precision + signedness, optionally with zero planes
+/// skipped.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlaneList {
+    pub planes: Vec<(u32, bool)>,
+    /// Declared operand precision (for weight computation).
+    pub bits: u32,
+}
+
+impl PlaneList {
+    /// All planes of a `bits`-wide (signed?) operand.
+    pub fn full(bits: u32, signed: bool) -> Self {
+        PlaneList {
+            planes: (0..bits)
+                .map(|i| (i, plane_sign(i, bits, signed) < 0))
+                .collect(),
+            bits,
+        }
+    }
+
+    /// Planes of `m` that are not entirely zero (bit-skip extension).
+    pub fn nonzero(m: &BitSerialMatrix) -> Self {
+        PlaneList {
+            planes: (0..m.bits)
+                .filter(|&i| !m.plane_is_zero(i))
+                .map(|i| (i, plane_sign(i, m.bits, m.signed) < 0))
+                .collect(),
+            bits: m.bits,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.planes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.planes.is_empty()
+    }
+}
+
+/// Compile `job` into a program for `cfg`.
+///
+/// Convenience wrapper over [`plan`] + [`emit`] with full plane lists.
+pub fn compile(job: &MatmulJob, cfg: &BismoConfig, overlap: Overlap) -> Result<Program, String> {
+    let lhs_planes = PlaneList::full(job.wbits, job.lsigned);
+    let rhs_planes = PlaneList::full(job.abits, job.rsigned);
+    compile_with_planes(job, cfg, overlap, &lhs_planes, &rhs_planes)
+}
+
+/// Compile with explicit plane lists (bit-skip or custom precision).
+pub fn compile_with_planes(
+    job: &MatmulJob,
+    cfg: &BismoConfig,
+    overlap: Overlap,
+    lhs_planes: &PlaneList,
+    rhs_planes: &PlaneList,
+) -> Result<Program, String> {
+    let p = plan(job, cfg, lhs_planes.len() as u32, rhs_planes.len() as u32)?;
+    emit(job, cfg, &p, overlap, lhs_planes, rhs_planes)
+}
+
+/// Build the execute-only benchmark program used by the paper's
+/// "peak binary compute" experiment (Fig. 12): `bursts` accumulation
+/// groups, each a burst of `pairs` back-to-back RunExecutes over
+/// `k_chunks` chunks, with no fetch/result stages involved (data is
+/// whatever resides in the buffers — timing is data-independent).
+pub fn peak_execute_program(
+    cfg: &BismoConfig,
+    k_chunks: u32,
+    bursts: u32,
+    pairs: u32,
+) -> Result<Program, String> {
+    let max_off = k_chunks as u64;
+    if max_off > cfg.bm as u64 || max_off > cfg.bn as u64 {
+        return Err(format!(
+            "k_chunks {} exceeds buffer depth (bm {}, bn {})",
+            k_chunks, cfg.bm, cfg.bn
+        ));
+    }
+    let mut prog = Program::new();
+    for _ in 0..bursts {
+        for p in 0..pairs {
+            prog.push(
+                Stage::Execute,
+                Instr::Execute(ExecuteRun {
+                    lhs_offset: 0,
+                    rhs_offset: 0,
+                    num_chunks: k_chunks,
+                    shift: (p % 2) as u8,
+                    negate: false,
+                    acc_reset: p == 0,
+                    commit_result: false,
+                }),
+            );
+        }
+    }
+    Ok(prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitmatrix::IntMatrix;
+
+    #[test]
+    fn plane_list_full_unsigned() {
+        let p = PlaneList::full(3, false);
+        assert_eq!(p.planes, vec![(0, false), (1, false), (2, false)]);
+    }
+
+    #[test]
+    fn plane_list_full_signed_msb_negated() {
+        let p = PlaneList::full(3, true);
+        assert_eq!(p.planes, vec![(0, false), (1, false), (2, true)]);
+    }
+
+    #[test]
+    fn plane_list_nonzero_skips() {
+        // Values {0, 2}: plane 0 all-zero, plane 1 populated.
+        let m = IntMatrix::from_slice(2, 2, &[0, 2, 2, 0]);
+        let bs = BitSerialMatrix::from_int(&m, 3, false);
+        let p = PlaneList::nonzero(&bs);
+        assert_eq!(p.planes, vec![(1, false)]);
+        assert_eq!(p.bits, 3);
+    }
+
+    #[test]
+    fn peak_program_shape() {
+        let cfg = BismoConfig::small();
+        let p = peak_execute_program(&cfg, 8, 3, 4).unwrap();
+        assert_eq!(p.execute.len(), 12);
+        assert!(p.fetch.is_empty() && p.result.is_empty());
+        p.validate().unwrap();
+        // First of each burst resets; others accumulate.
+        let resets: Vec<bool> = p
+            .execute
+            .iter()
+            .map(|i| match i {
+                Instr::Execute(e) => e.acc_reset,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(resets.iter().filter(|&&r| r).count(), 3);
+        assert!(resets[0] && resets[4] && resets[8]);
+    }
+
+    #[test]
+    fn peak_program_checks_depth() {
+        let cfg = BismoConfig::small();
+        assert!(peak_execute_program(&cfg, 5000, 1, 1).is_err());
+    }
+}

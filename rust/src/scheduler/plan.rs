@@ -1,0 +1,306 @@
+//! Tiling and schedule-mode selection.
+
+use crate::arch::BismoConfig;
+use crate::bitmatrix::dram::{OperandLayout, ResultLayout};
+use crate::util::ceil_div;
+
+/// A matrix multiplication job: `P(m×n) = L(m×k) · R(k×n)`, with the
+/// RHS stored transposed (`n×k`) as the overlay requires.
+#[derive(Clone, Copy, Debug)]
+pub struct MatmulJob {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// LHS precision in bits.
+    pub wbits: u32,
+    /// RHS precision in bits.
+    pub abits: u32,
+    pub lsigned: bool,
+    pub rsigned: bool,
+    /// DRAM placement of the LHS (`m×k`, `wbits` planes).
+    pub lhs: OperandLayout,
+    /// DRAM placement of the transposed RHS (`n×k`, `abits` planes).
+    pub rhs: OperandLayout,
+    /// DRAM placement of the `m×n` i32 result.
+    pub res: ResultLayout,
+}
+
+impl MatmulJob {
+    /// Check internal consistency and compatibility with `cfg`.
+    pub fn validate(&self, cfg: &BismoConfig) -> Result<(), String> {
+        if self.m == 0 || self.k == 0 || self.n == 0 {
+            return Err("matrix dimensions must be non-zero".into());
+        }
+        if self.wbits == 0 || self.abits == 0 || self.wbits > 32 || self.abits > 32 {
+            return Err("precisions must be in 1..=32 bits".into());
+        }
+        if self.wbits + self.abits > 62 {
+            return Err("combined precision exceeds the 2^62 weight range".into());
+        }
+        let checks = [
+            (self.lhs.rows == self.m, "lhs layout rows != m"),
+            (self.lhs.cols == self.k, "lhs layout cols != k"),
+            (self.lhs.bits == self.wbits, "lhs layout bits != wbits"),
+            (self.rhs.rows == self.n, "rhs layout rows != n (must be transposed)"),
+            (self.rhs.cols == self.k, "rhs layout cols != k"),
+            (self.rhs.bits == self.abits, "rhs layout bits != abits"),
+            (self.lhs.dk == cfg.dk, "lhs layout chunk width != D_k"),
+            (self.rhs.dk == cfg.dk, "rhs layout chunk width != D_k"),
+            (self.res.rows == self.m, "result layout rows != m"),
+            (self.res.cols == self.n, "result layout cols != n"),
+        ];
+        for (ok, msg) in checks {
+            if !ok {
+                return Err(msg.into());
+            }
+        }
+        // Region overlap in DRAM would corrupt operands with results.
+        let spans = [
+            (self.lhs.base, self.lhs.base + self.lhs.total_bytes()),
+            (self.rhs.base, self.rhs.base + self.rhs.total_bytes()),
+            (self.res.base, self.res.base + self.res.total_bytes()),
+        ];
+        for i in 0..3 {
+            for j in (i + 1)..3 {
+                let (a0, a1) = spans[i];
+                let (b0, b1) = spans[j];
+                if a0 < b1 && b0 < a1 {
+                    return Err(format!(
+                        "DRAM regions overlap: [{a0},{a1}) vs [{b0},{b1})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total binary operations of this job (paper convention).
+    pub fn binary_ops(&self) -> u64 {
+        crate::baseline::binary_ops(
+            self.m as u64,
+            self.k as u64,
+            self.n as u64,
+            self.wbits,
+            self.abits,
+        )
+    }
+}
+
+/// Schedule structure chosen by [`plan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// A group of `tiles_per_group` RHS tile-columns stays resident in
+    /// the RHS buffers while LHS tiles stream past (double-buffered).
+    RhsResident { tiles_per_group: usize },
+    /// Both operands streamed per tile pair, `k` sliced into
+    /// `slice_chunks`-chunk pieces that fit half a buffer.
+    Streaming { slice_chunks: usize },
+}
+
+/// The tiling decisions for one job on one configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Plan {
+    pub mode: Mode,
+    /// Output row tiles: `ceil(m / D_m)`.
+    pub tm: usize,
+    /// Output column tiles: `ceil(n / D_n)`.
+    pub tn: usize,
+    /// `k` chunks per full dot product: `ceil(k / D_k)`.
+    pub kc: usize,
+    /// Result-tile commits the schedule will perform (= `tm · tn`).
+    pub commits: usize,
+    /// Effective plane counts being scheduled.
+    pub lhs_planes: u32,
+    pub rhs_planes: u32,
+}
+
+impl Plan {
+    /// Number of RHS-resident groups (`RhsResident` mode), else 0.
+    pub fn groups(&self) -> usize {
+        match self.mode {
+            Mode::RhsResident { tiles_per_group } => ceil_div(self.tn as u64, tiles_per_group as u64) as usize,
+            Mode::Streaming { .. } => 0,
+        }
+    }
+
+    /// Number of `k` slices per dot product (`Streaming` mode), else 1.
+    pub fn slices(&self) -> usize {
+        match self.mode {
+            Mode::RhsResident { .. } => 1,
+            Mode::Streaming { slice_chunks } => ceil_div(self.kc as u64, slice_chunks as u64) as usize,
+        }
+    }
+}
+
+/// Decide tiling + mode for `job` on `cfg` with the given effective
+/// plane counts (post bit-skip).
+pub fn plan(
+    job: &MatmulJob,
+    cfg: &BismoConfig,
+    lhs_planes: u32,
+    rhs_planes: u32,
+) -> Result<Plan, String> {
+    job.validate(cfg)?;
+    cfg.validate()?;
+    if lhs_planes == 0 || rhs_planes == 0 {
+        return Err("plane lists must be non-empty (all-zero operand: result is zero; \
+                    short-circuit upstream)"
+            .into());
+    }
+    let tm = ceil_div(job.m as u64, cfg.dm as u64) as usize;
+    let tn = ceil_div(job.n as u64, cfg.dn as u64) as usize;
+    let kc = ceil_div(job.k as u64, cfg.dk as u64) as usize;
+
+    let lhs_words_needed = lhs_planes as usize * kc; // per LHS buffer, per m-tile
+    let rhs_words_needed = rhs_planes as usize * kc; // per RHS buffer, per n-tile
+    let lhs_half = (cfg.bm as usize) / 2;
+
+    let mode = if lhs_words_needed <= lhs_half && rhs_words_needed <= cfg.bn as usize {
+        // Full dot products fit: keep as many RHS tile-columns resident
+        // as the RHS buffers hold, stream LHS double-buffered.
+        let tiles_per_group = ((cfg.bn as usize) / rhs_words_needed).min(tn.max(1)).max(1);
+        Mode::RhsResident { tiles_per_group }
+    } else {
+        // k must be sliced: the largest slice that fits half of each
+        // buffer for every scheduled plane.
+        let s_l = lhs_half / lhs_planes as usize;
+        let s_r = (cfg.bn as usize / 2) / rhs_planes as usize;
+        let slice_chunks = s_l.min(s_r).min(kc);
+        if slice_chunks == 0 {
+            return Err(format!(
+                "buffers too small for precision: bm/2={} words for {} LHS planes, \
+                 bn/2={} for {} RHS planes",
+                lhs_half,
+                lhs_planes,
+                cfg.bn / 2,
+                rhs_planes
+            ));
+        }
+        Mode::Streaming { slice_chunks }
+    };
+
+    // Encoding limits (14-bit words_per_buf, 16-bit num_chunks).
+    let max_words = match mode {
+        Mode::RhsResident { .. } => kc,
+        Mode::Streaming { slice_chunks } => slice_chunks,
+    };
+    if max_words >= (1 << 14) {
+        return Err(format!(
+            "schedule needs {max_words}-word fetches, exceeding the 14-bit ISA field"
+        ));
+    }
+
+    Ok(Plan {
+        mode,
+        tm,
+        tn,
+        kc,
+        commits: tm * tn,
+        lhs_planes,
+        rhs_planes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_job(m: usize, k: usize, n: usize, w: u32, a: u32, dk: u32) -> MatmulJob {
+        let lhs = OperandLayout::new(0, m, k, w, dk);
+        let rhs = OperandLayout::new(lhs.base + lhs.total_bytes(), n, k, a, dk);
+        let res = ResultLayout::new(rhs.base + rhs.total_bytes(), m, n);
+        MatmulJob {
+            m,
+            k,
+            n,
+            wbits: w,
+            abits: a,
+            lsigned: false,
+            rsigned: false,
+            lhs,
+            rhs,
+            res,
+        }
+    }
+
+    #[test]
+    fn small_job_is_rhs_resident() {
+        let cfg = BismoConfig::small(); // 2×64×2, bm=bn=1024
+        let job = mk_job(4, 256, 4, 2, 2, 64);
+        let p = plan(&job, &cfg, 2, 2).unwrap();
+        assert_eq!(p.tm, 2);
+        assert_eq!(p.tn, 2);
+        assert_eq!(p.kc, 4);
+        assert_eq!(p.commits, 4);
+        match p.mode {
+            Mode::RhsResident { tiles_per_group } => {
+                // 1024 / (2 planes · 4 chunks) = 128, capped at tn = 2.
+                assert_eq!(tiles_per_group, 2);
+                assert_eq!(p.groups(), 1);
+            }
+            _ => panic!("expected RhsResident"),
+        }
+    }
+
+    #[test]
+    fn huge_k_forces_streaming() {
+        let cfg = BismoConfig::small();
+        // kc = 4096 chunks > bm/2=512 per plane → stream with slices.
+        let job = mk_job(2, 64 * 4096, 2, 1, 1, 64);
+        let p = plan(&job, &cfg, 1, 1).unwrap();
+        match p.mode {
+            Mode::Streaming { slice_chunks } => {
+                assert_eq!(slice_chunks, 512); // bm/2 / 1 plane, capped by bn/2
+                assert_eq!(p.slices(), 8);
+            }
+            _ => panic!("expected Streaming"),
+        }
+    }
+
+    #[test]
+    fn high_precision_shrinks_slices() {
+        let cfg = BismoConfig::small();
+        let job = mk_job(2, 64 * 4096, 2, 8, 8, 64);
+        let p = plan(&job, &cfg, 8, 8).unwrap();
+        match p.mode {
+            Mode::Streaming { slice_chunks } => {
+                assert_eq!(slice_chunks, 512 / 8);
+            }
+            _ => panic!("expected Streaming"),
+        }
+    }
+
+    #[test]
+    fn buffer_too_small_detected() {
+        let cfg = BismoConfig {
+            bm: 4,
+            bn: 4,
+            ..BismoConfig::small()
+        };
+        let job = mk_job(2, 64 * 4096, 2, 8, 8, 64);
+        assert!(plan(&job, &cfg, 8, 8).is_err());
+    }
+
+    #[test]
+    fn job_validation_catches_mismatches() {
+        let cfg = BismoConfig::small();
+        let mut job = mk_job(4, 128, 4, 2, 2, 64);
+        job.m = 5; // layout says 4
+        assert!(job.validate(&cfg).is_err());
+        let job2 = mk_job(4, 128, 4, 2, 2, 128); // layout dk != cfg dk
+        assert!(job2.validate(&cfg).is_err());
+        let mut job3 = mk_job(4, 128, 4, 2, 2, 64);
+        job3.res = ResultLayout::new(0, 4, 4); // overlaps lhs
+        assert!(job3.validate(&cfg).is_err());
+    }
+
+    #[test]
+    fn partial_tiles_counted() {
+        let cfg = BismoConfig::small(); // 2×2 DPA
+        let job = mk_job(5, 100, 3, 1, 1, 64);
+        let p = plan(&job, &cfg, 1, 1).unwrap();
+        assert_eq!(p.tm, 3); // ceil(5/2)
+        assert_eq!(p.tn, 2); // ceil(3/2)
+        assert_eq!(p.kc, 2); // ceil(100/64)
+    }
+}

@@ -1,0 +1,246 @@
+//! On-chip memories: the LHS/RHS matrix buffers (BRAM in hardware) and
+//! the result buffer (LUTRAM in hardware).
+
+use crate::arch::BismoConfig;
+use crate::util::ceil_div;
+
+/// The `D_m + D_n` matrix buffers. Each buffer holds `depth` words of
+//  `D_k` bits; a word is stored as `words_per_chunk` u64s (zero-padded
+/// above `D_k`). Buffers `0..D_m` feed DPU rows (LHS), buffers
+/// `D_m..D_m+D_n` feed DPU columns (RHS).
+#[derive(Clone, Debug)]
+pub struct MatrixBuffers {
+    dm: usize,
+    dn: usize,
+    bm: usize,
+    bn: usize,
+    /// u64 words per `D_k`-bit buffer word.
+    wpc: usize,
+    /// LHS storage: `dm × bm × wpc`.
+    lhs: Vec<u64>,
+    /// RHS storage: `dn × bn × wpc`.
+    rhs: Vec<u64>,
+}
+
+impl MatrixBuffers {
+    pub fn new(cfg: &BismoConfig) -> Self {
+        let wpc = ceil_div(cfg.dk as u64, 64) as usize;
+        MatrixBuffers {
+            dm: cfg.dm as usize,
+            dn: cfg.dn as usize,
+            bm: cfg.bm as usize,
+            bn: cfg.bn as usize,
+            wpc,
+            lhs: vec![0; cfg.dm as usize * cfg.bm as usize * wpc],
+            rhs: vec![0; cfg.dn as usize * cfg.bn as usize * wpc],
+        }
+    }
+
+    /// Total number of addressable buffers.
+    pub fn num_buffers(&self) -> usize {
+        self.dm + self.dn
+    }
+
+    /// Depth in `D_k`-bit words of buffer `buf`.
+    pub fn depth_of(&self, buf: usize) -> usize {
+        if buf < self.dm {
+            self.bm
+        } else {
+            self.bn
+        }
+    }
+
+    /// u64 words per buffer word.
+    pub fn words_per_chunk(&self) -> usize {
+        self.wpc
+    }
+
+    fn slot(&self, buf: usize, word: usize) -> Result<usize, String> {
+        if buf >= self.num_buffers() {
+            return Err(format!(
+                "buffer id {buf} out of range (have {})",
+                self.num_buffers()
+            ));
+        }
+        if word >= self.depth_of(buf) {
+            return Err(format!(
+                "word {word} out of range for buffer {buf} (depth {})",
+                self.depth_of(buf)
+            ));
+        }
+        Ok(if buf < self.dm {
+            (buf * self.bm + word) * self.wpc
+        } else {
+            ((buf - self.dm) * self.bn + word) * self.wpc
+        })
+    }
+
+    /// Write one `D_k`-bit buffer word (as `wpc` u64s).
+    pub fn write_word(&mut self, buf: usize, word: usize, data: &[u64]) -> Result<(), String> {
+        assert_eq!(data.len(), self.wpc);
+        let s = self.slot(buf, word)?;
+        let dst = if buf < self.dm {
+            &mut self.lhs[s..s + self.wpc]
+        } else {
+            &mut self.rhs[s..s + self.wpc]
+        };
+        dst.copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Read one `D_k`-bit buffer word.
+    pub fn read_word(&self, buf: usize, word: usize) -> Result<&[u64], String> {
+        let s = self.slot(buf, word)?;
+        Ok(if buf < self.dm {
+            &self.lhs[s..s + self.wpc]
+        } else {
+            &self.rhs[s..s + self.wpc]
+        })
+    }
+
+    /// Read `nwords` consecutive `D_k`-bit words as one contiguous u64
+    /// slice (buffer storage is word-major, so consecutive words are
+    /// adjacent). Bounds are validated once — this is the execute
+    /// stage's hot path.
+    pub fn read_range(&self, buf: usize, word: usize, nwords: usize) -> Result<&[u64], String> {
+        if nwords == 0 {
+            return Ok(&[]);
+        }
+        let s = self.slot(buf, word)?;
+        let _ = self.slot(buf, word + nwords - 1)?; // validate end
+        let len = nwords * self.wpc;
+        Ok(if buf < self.dm {
+            &self.lhs[s..s + len]
+        } else {
+            &self.rhs[s..s + len]
+        })
+    }
+
+    /// LHS row buffer id for DPU row `i`.
+    pub fn lhs_buf(&self, i: usize) -> usize {
+        debug_assert!(i < self.dm);
+        i
+    }
+
+    /// RHS column buffer id for DPU column `j`.
+    pub fn rhs_buf(&self, j: usize) -> usize {
+        debug_assert!(j < self.dn);
+        self.dm + j
+    }
+}
+
+/// The result buffer: a FIFO of up to `B_r` committed `D_m × D_n`
+/// accumulator sets, decoupling execute from the result writer.
+#[derive(Clone, Debug)]
+pub struct ResultBuffer {
+    capacity: usize,
+    dm: usize,
+    dn: usize,
+    slots: std::collections::VecDeque<Vec<i32>>,
+    /// High-water mark of occupied slots.
+    pub max_occupancy: usize,
+}
+
+impl ResultBuffer {
+    pub fn new(cfg: &BismoConfig) -> Self {
+        ResultBuffer {
+            capacity: cfg.br as usize,
+            dm: cfg.dm as usize,
+            dn: cfg.dn as usize,
+            slots: Default::default(),
+            max_occupancy: 0,
+        }
+    }
+
+    /// Execute-side: commit an accumulator set. Errors on overflow —
+    /// a scheduler bug (missing `Wait(ResultToExecute)`).
+    pub fn commit(&mut self, accs: Vec<i32>) -> Result<(), String> {
+        assert_eq!(accs.len(), self.dm * self.dn);
+        if self.slots.len() == self.capacity {
+            return Err(format!(
+                "result buffer overflow (B_r = {}): execute committed without a drained slot",
+                self.capacity
+            ));
+        }
+        self.slots.push_back(accs);
+        self.max_occupancy = self.max_occupancy.max(self.slots.len());
+        Ok(())
+    }
+
+    /// Result-side: drain the oldest committed set. Errors on underflow.
+    pub fn drain(&mut self) -> Result<Vec<i32>, String> {
+        self.slots.pop_front().ok_or_else(|| {
+            "result buffer underflow: RunResult with no committed results".to_string()
+        })
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Accumulators per committed set.
+    pub fn set_len(&self) -> usize {
+        self.dm * self.dn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BismoConfig {
+        BismoConfig::small() // 2×64×2, bm=bn=1024, br=2
+    }
+
+    #[test]
+    fn buffer_rw_roundtrip() {
+        let mut b = MatrixBuffers::new(&cfg());
+        b.write_word(0, 5, &[0xAB]).unwrap();
+        b.write_word(3, 1023, &[0xCD]).unwrap(); // RHS buffer 1, last word
+        assert_eq!(b.read_word(0, 5).unwrap(), &[0xAB]);
+        assert_eq!(b.read_word(3, 1023).unwrap(), &[0xCD]);
+        assert_eq!(b.read_word(0, 6).unwrap(), &[0]);
+    }
+
+    #[test]
+    fn buffer_bounds_checked() {
+        let mut b = MatrixBuffers::new(&cfg());
+        assert!(b.write_word(4, 0, &[0]).is_err()); // only 4 buffers (2+2)
+        assert!(b.write_word(0, 1024, &[0]).is_err()); // depth exceeded
+        assert!(b.read_word(9, 0).is_err());
+    }
+
+    #[test]
+    fn buffer_id_mapping() {
+        let b = MatrixBuffers::new(&cfg());
+        assert_eq!(b.lhs_buf(0), 0);
+        assert_eq!(b.lhs_buf(1), 1);
+        assert_eq!(b.rhs_buf(0), 2);
+        assert_eq!(b.rhs_buf(1), 3);
+        assert_eq!(b.num_buffers(), 4);
+    }
+
+    #[test]
+    fn wide_dk_uses_multiple_words() {
+        let c = BismoConfig {
+            dk: 256,
+            ..BismoConfig::small()
+        };
+        let mut b = MatrixBuffers::new(&c);
+        assert_eq!(b.words_per_chunk(), 4);
+        b.write_word(0, 0, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(b.read_word(0, 0).unwrap(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn result_fifo_protocol() {
+        let mut r = ResultBuffer::new(&cfg());
+        assert!(r.drain().is_err()); // underflow detected
+        r.commit(vec![1, 2, 3, 4]).unwrap();
+        r.commit(vec![5, 6, 7, 8]).unwrap();
+        assert!(r.commit(vec![0; 4]).is_err()); // B_r = 2: overflow
+        assert_eq!(r.drain().unwrap(), vec![1, 2, 3, 4]); // FIFO order
+        assert_eq!(r.occupancy(), 1);
+        assert_eq!(r.max_occupancy, 2);
+    }
+}

@@ -1,0 +1,96 @@
+//! DMA timing model shared by the fetch and result stages.
+//!
+//! A `Run` DMA transfer of `bytes` through a `channel_bits`-wide port
+//! costs:
+//!
+//! ```text
+//! latency + per_block·blocks + ceil(bytes / bytes_per_cycle)
+//! ```
+//!
+//! where `bytes_per_cycle` is the channel width capped by the board's
+//! shared DRAM bandwidth at the configured clock (PYNQ-Z1: 3.2 GB/s),
+//! `latency` is the request-to-first-beat DRAM latency charged once per
+//! instruction (the StreamReader pipelines block requests), and
+//! `per_block` is the route/stride generation cost per block.
+
+use crate::arch::{BismoConfig, Platform};
+
+/// Timing calculator for one DMA channel.
+#[derive(Clone, Copy, Debug)]
+pub struct DmaTiming {
+    /// Effective payload bytes per cycle (channel vs board cap).
+    pub bytes_per_cycle: f64,
+    /// Cycles from request to first beat, charged once per Run.
+    pub latency: u64,
+    /// Cycles of per-block overhead (address/route generation).
+    pub per_block: u64,
+}
+
+impl DmaTiming {
+    /// Fetch-channel timing for a configuration on a platform.
+    pub fn fetch(cfg: &BismoConfig, plat: &Platform) -> Self {
+        DmaTiming {
+            bytes_per_cycle: plat.channel_bytes_per_cycle(cfg.fclk_mhz, cfg.fetch_bits),
+            latency: plat.dram_latency_cycles,
+            per_block: 1,
+        }
+    }
+
+    /// Result-channel timing (write path; same latency model).
+    pub fn result(cfg: &BismoConfig, plat: &Platform) -> Self {
+        DmaTiming {
+            bytes_per_cycle: plat.channel_bytes_per_cycle(cfg.fclk_mhz, cfg.res_bits),
+            latency: plat.dram_latency_cycles,
+            per_block: 1,
+        }
+    }
+
+    /// Duration in cycles of moving `bytes` in `blocks` blocks.
+    pub fn duration(&self, bytes: u64, blocks: u64) -> u64 {
+        let beats = (bytes as f64 / self.bytes_per_cycle).ceil() as u64;
+        self.latency + self.per_block * blocks + beats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::PYNQ_Z1;
+
+    #[test]
+    fn fetch_duration_bandwidth_bound() {
+        let cfg = BismoConfig::small(); // F = 64 bits at 200 MHz → 8 B/cycle
+        let t = DmaTiming::fetch(&cfg, &PYNQ_Z1);
+        assert_eq!(t.bytes_per_cycle, 8.0);
+        // 1 KiB in one block: 32 latency + 1 block + 128 beats.
+        assert_eq!(t.duration(1024, 1), 32 + 1 + 128);
+    }
+
+    #[test]
+    fn many_blocks_cost_route_overhead() {
+        let cfg = BismoConfig::small();
+        let t = DmaTiming::fetch(&cfg, &PYNQ_Z1);
+        let one = t.duration(4096, 1);
+        let many = t.duration(4096, 64);
+        assert_eq!(many - one, 63);
+    }
+
+    #[test]
+    fn board_cap_limits_wide_channels() {
+        // A hypothetical 512-bit channel at 200 MHz is capped by the
+        // 3.2 GB/s board bandwidth to 16 B/cycle.
+        let cfg = BismoConfig {
+            fetch_bits: 512,
+            ..BismoConfig::small()
+        };
+        let t = DmaTiming::fetch(&cfg, &PYNQ_Z1);
+        assert_eq!(t.bytes_per_cycle, 16.0);
+    }
+
+    #[test]
+    fn zero_bytes_still_costs_latency() {
+        let cfg = BismoConfig::small();
+        let t = DmaTiming::result(&cfg, &PYNQ_Z1);
+        assert_eq!(t.duration(0, 0), t.latency);
+    }
+}

@@ -1,0 +1,518 @@
+//! The simulation engine: runs the three stage processes to completion
+//! as a discrete-event fixpoint, with deadlock detection.
+//!
+//! Each stage is a sequential process with a local clock. Engine order
+//! respects the token protocol: a stage blocked on `Wait` cannot advance
+//! (or mutate shared state) until the producing stage has signalled —
+//! so functional updates happen in a token-consistent order, matching
+//! hardware for any correctly-synchronized schedule. Races *between*
+//! synchronization points (a schedule that lets fetch overwrite a buffer
+//! region execute is still reading) are schedule bugs in hardware too;
+//! the engine executes them deterministically (fetch → execute → result
+//! priority) rather than diagnosing them.
+
+use super::buffers::{MatrixBuffers, ResultBuffer};
+use super::dram::DmaTiming;
+use super::execute::ExecuteUnit;
+use super::fetch::FetchUnit;
+use super::result::ResultUnit;
+use super::{RunStats, TokenFifo};
+use crate::arch::{BismoConfig, Platform};
+use crate::bitmatrix::dram::DramImage;
+use crate::isa::{Instr, Program, Stage, SyncChannel};
+use crate::util::ceil_div;
+
+/// Simulation failure modes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SimError {
+    /// Configuration rejected by `BismoConfig::validate`.
+    BadConfig(String),
+    /// Program rejected by `Program::validate`.
+    BadProgram(String),
+    /// No stage can make progress but instructions remain.
+    Deadlock {
+        /// (stage, next-pc, description of what it is blocked on)
+        blocked: Vec<(&'static str, usize, String)>,
+    },
+    /// A Run instruction faulted (out-of-range access, over/underflow).
+    Fault {
+        stage: &'static str,
+        pc: usize,
+        msg: String,
+    },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::BadConfig(m) => write!(f, "bad config: {m}"),
+            SimError::BadProgram(m) => write!(f, "bad program: {m}"),
+            SimError::Deadlock { blocked } => {
+                write!(f, "deadlock:")?;
+                for (s, pc, what) in blocked {
+                    write!(f, " [{s}@{pc}: {what}]")?;
+                }
+                Ok(())
+            }
+            SimError::Fault { stage, pc, msg } => {
+                write!(f, "fault in {stage} queue at {pc}: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// One recorded span of stage activity (for Fig. 5-style timelines).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub stage: Stage,
+    /// Short label: "F3 RunFetch", "E2 Wait", ...
+    pub label: String,
+    /// Start cycle (inclusive).
+    pub start: u64,
+    /// End cycle (exclusive).
+    pub end: u64,
+    /// Was this a stall (Wait blocked on a token)?
+    pub stalled: bool,
+}
+
+/// One overlay instance simulating programs against a DRAM image.
+pub struct Simulation {
+    cfg: BismoConfig,
+    /// Main-memory image: operands in, results out.
+    pub dram: DramImage,
+    fetch_unit: FetchUnit,
+    result_unit: ResultUnit,
+    exec: ExecuteUnit,
+    bufs: MatrixBuffers,
+    result_buf: ResultBuffer,
+    fifos: [TokenFifo; 4],
+    trace: Option<Vec<TraceEvent>>,
+}
+
+fn fifo_idx(ch: SyncChannel) -> usize {
+    match ch {
+        SyncChannel::FetchToExecute => 0,
+        SyncChannel::ExecuteToFetch => 1,
+        SyncChannel::ExecuteToResult => 2,
+        SyncChannel::ResultToExecute => 3,
+    }
+}
+
+struct StageState {
+    pc: usize,
+    t: u64,
+}
+
+impl Simulation {
+    pub fn new(cfg: BismoConfig, platform: &Platform, dram: DramImage) -> Result<Self, SimError> {
+        cfg.validate().map_err(SimError::BadConfig)?;
+        Ok(Simulation {
+            fetch_unit: FetchUnit {
+                timing: DmaTiming::fetch(&cfg, platform),
+                words_per_chunk: ceil_div(cfg.dk as u64, 64) as usize,
+            },
+            result_unit: ResultUnit {
+                timing: DmaTiming::result(&cfg, platform),
+                dn: cfg.dn as usize,
+            },
+            exec: ExecuteUnit::new(&cfg),
+            bufs: MatrixBuffers::new(&cfg),
+            result_buf: ResultBuffer::new(&cfg),
+            fifos: Default::default(),
+            trace: None,
+            cfg,
+            dram,
+        })
+    }
+
+    pub fn config(&self) -> &BismoConfig {
+        &self.cfg
+    }
+
+    /// Record per-instruction activity spans during `run` (Fig. 5
+    /// timelines). Call before `run`; retrieve with [`Simulation::trace`].
+    pub fn enable_trace(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    /// Recorded trace events (empty unless `enable_trace` was called).
+    pub fn trace(&self) -> &[TraceEvent] {
+        self.trace.as_deref().unwrap_or(&[])
+    }
+
+    fn record(&mut self, stage: Stage, pc: usize, instr: &Instr, start: u64, end: u64, stalled: bool) {
+        if let Some(t) = self.trace.as_mut() {
+            let kind = match instr {
+                Instr::Wait(_) => "Wait",
+                Instr::Signal(_) => "Signal",
+                Instr::Fetch(_) => "RunFetch",
+                Instr::Execute(_) => "RunExecute",
+                Instr::Result(_) => "RunResult",
+            };
+            let tag = match stage {
+                Stage::Fetch => 'F',
+                Stage::Execute => 'E',
+                Stage::Result => 'R',
+            };
+            t.push(TraceEvent {
+                stage,
+                label: format!("{tag}{} {kind}", pc + 1),
+                start,
+                end,
+                stalled,
+            });
+        }
+    }
+
+    /// Maximum depth each sync FIFO reached (hardware sizing datum).
+    pub fn fifo_high_water(&self) -> [(SyncChannel, usize); 4] {
+        SyncChannel::ALL.map(|ch| (ch, self.fifos[fifo_idx(ch)].max_depth))
+    }
+
+    /// Run a program to completion.
+    pub fn run(&mut self, prog: &Program) -> Result<RunStats, SimError> {
+        prog.validate().map_err(SimError::BadProgram)?;
+        let mut stats = RunStats::default();
+        let mut st = [
+            StageState { pc: 0, t: 0 },
+            StageState { pc: 0, t: 0 },
+            StageState { pc: 0, t: 0 },
+        ];
+        let queues = [&prog.fetch, &prog.execute, &prog.result];
+        let stage_of = [Stage::Fetch, Stage::Execute, Stage::Result];
+
+        loop {
+            let mut progress = false;
+            for s in 0..3 {
+                // Advance stage `s` as far as it can go.
+                while st[s].pc < queues[s].len() {
+                    let instr = &queues[s][st[s].pc];
+                    let t_before = st[s].t;
+                    let mut stalled = false;
+                    match instr {
+                        Instr::Signal(ch) => {
+                            st[s].t += 1;
+                            self.fifos[fifo_idx(*ch)].push(st[s].t);
+                        }
+                        Instr::Wait(ch) => {
+                            let fifo = &mut self.fifos[fifo_idx(*ch)];
+                            match fifo.front() {
+                                Some(tok_t) => {
+                                    fifo.pop();
+                                    let ready = st[s].t.max(tok_t);
+                                    let stall = ready - st[s].t;
+                                    stalled = stall > 0;
+                                    match stage_of[s] {
+                                        Stage::Fetch => stats.fetch_stall += stall,
+                                        Stage::Execute => stats.execute_stall += stall,
+                                        Stage::Result => stats.result_stall += stall,
+                                    }
+                                    st[s].t = ready + 1;
+                                }
+                                None => break, // blocked; retry after others advance
+                            }
+                        }
+                        Instr::Fetch(fr) => {
+                            let (cy, bytes) = self
+                                .fetch_unit
+                                .run(fr, &self.dram, &mut self.bufs)
+                                .map_err(|msg| SimError::Fault {
+                                    stage: "fetch",
+                                    pc: st[s].pc,
+                                    msg,
+                                })?;
+                            st[s].t += cy;
+                            stats.fetch_busy += cy;
+                            stats.bytes_fetched += bytes;
+                        }
+                        Instr::Execute(er) => {
+                            let (cy, ops, fill, committed) = self
+                                .exec
+                                .run(er, &self.bufs, &mut self.result_buf)
+                                .map_err(|msg| SimError::Fault {
+                                    stage: "execute",
+                                    pc: st[s].pc,
+                                    msg,
+                                })?;
+                            st[s].t += cy;
+                            stats.execute_busy += cy;
+                            stats.binary_ops += ops;
+                            stats.pipeline_fill_cycles += fill;
+                            stats.commits += committed as u64;
+                        }
+                        Instr::Result(rr) => {
+                            let (cy, bytes) = self
+                                .result_unit
+                                .run(rr, &mut self.result_buf, &mut self.dram)
+                                .map_err(|msg| SimError::Fault {
+                                    stage: "result",
+                                    pc: st[s].pc,
+                                    msg,
+                                })?;
+                            st[s].t += cy;
+                            stats.result_busy += cy;
+                            stats.bytes_written += bytes;
+                        }
+                    }
+                    self.record(stage_of[s], st[s].pc, instr, t_before, st[s].t, stalled);
+                    st[s].pc += 1;
+                    progress = true;
+                }
+            }
+            let done = (0..3).all(|s| st[s].pc >= queues[s].len());
+            if done {
+                break;
+            }
+            if !progress {
+                let blocked = (0..3)
+                    .filter(|&s| st[s].pc < queues[s].len())
+                    .map(|s| {
+                        let what = match &queues[s][st[s].pc] {
+                            Instr::Wait(ch) => format!("waiting on {}", ch.name()),
+                            other => format!("stuck at {other}"),
+                        };
+                        (stage_of[s].name(), st[s].pc, what)
+                    })
+                    .collect();
+                return Err(SimError::Deadlock { blocked });
+            }
+        }
+
+        stats.cycles = st.iter().map(|x| x.t).max().unwrap_or(0);
+        stats.acc_overflows = self.exec.overflows;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::PYNQ_Z1;
+    use crate::bitmatrix::dram::{DramImage, OperandLayout, ResultLayout};
+    use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
+    use crate::isa::{ExecuteRun, FetchRun, ResultRun};
+
+    fn cfg() -> BismoConfig {
+        BismoConfig::small()
+    }
+
+    /// Hand-built program: binary 2×64×2 matmul, the smallest end-to-end
+    /// flow exercising all three stages (in the spirit of Table III).
+    fn binary_2x64x2() -> (Program, DramImage, IntMatrix, ResultLayout) {
+        let c = cfg();
+        let mut rng = crate::util::Rng::new(0xE2E);
+        let a = IntMatrix::random(&mut rng, 2, 64, 1, false);
+        let b = IntMatrix::random(&mut rng, 64, 2, 1, false);
+        let expect = a.matmul(&b);
+        let la = BitSerialMatrix::from_int(&a, 1, false);
+        let rb = BitSerialMatrix::from_int(&b.transpose(), 1, false);
+
+        let lhs_lay = OperandLayout::new(0, 2, 64, 1, c.dk);
+        let rhs_lay = OperandLayout::new(lhs_lay.total_bytes(), 2, 64, 1, c.dk);
+        let res_lay = ResultLayout::new(lhs_lay.total_bytes() + rhs_lay.total_bytes(), 2, 2);
+        let mut dram = DramImage::new((res_lay.base + res_lay.total_bytes()) as usize);
+        lhs_lay.store(&mut dram, &la);
+        rhs_lay.store(&mut dram, &rb);
+
+        let mut p = Program::new();
+        // Fetch both operands: 2 rows each, one 8-byte chunk per row.
+        p.push(
+            Stage::Fetch,
+            Instr::Fetch(FetchRun {
+                dram_base: lhs_lay.base,
+                block_bytes: 8,
+                block_stride_bytes: lhs_lay.row_bytes() as u32,
+                num_blocks: 2,
+                buf_offset: 0,
+                buf_start: 0,
+                buf_range: 2,
+                words_per_buf: 1,
+            }),
+        );
+        p.push(
+            Stage::Fetch,
+            Instr::Fetch(FetchRun {
+                dram_base: rhs_lay.base,
+                block_bytes: 8,
+                block_stride_bytes: rhs_lay.row_bytes() as u32,
+                num_blocks: 2,
+                buf_offset: 0,
+                buf_start: 2,
+                buf_range: 2,
+                words_per_buf: 1,
+            }),
+        );
+        p.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
+        p.push(Stage::Execute, Instr::Wait(SyncChannel::FetchToExecute));
+        p.push(
+            Stage::Execute,
+            Instr::Execute(ExecuteRun {
+                lhs_offset: 0,
+                rhs_offset: 0,
+                num_chunks: 1,
+                shift: 0,
+                negate: false,
+                acc_reset: true,
+                commit_result: true,
+            }),
+        );
+        p.push(Stage::Execute, Instr::Signal(SyncChannel::ExecuteToResult));
+        p.push(Stage::Result, Instr::Wait(SyncChannel::ExecuteToResult));
+        p.push(
+            Stage::Result,
+            Instr::Result(ResultRun {
+                dram_base: res_lay.base,
+                offset: 0,
+                rows: 2,
+                cols: 2,
+                row_stride_bytes: 8,
+            }),
+        );
+        (p, dram, expect, res_lay)
+    }
+
+    #[test]
+    fn end_to_end_binary_matmul() {
+        let (p, dram, expect, res_lay) = binary_2x64x2();
+        let mut sim = Simulation::new(cfg(), &PYNQ_Z1, dram).unwrap();
+        let stats = sim.run(&p).unwrap();
+        assert_eq!(res_lay.load(&sim.dram), expect);
+        assert!(stats.cycles > 0);
+        assert_eq!(stats.bytes_fetched, 32);
+        assert_eq!(stats.bytes_written, 16);
+        assert_eq!(stats.binary_ops, 2 * 2 * 2 * 64);
+        assert_eq!(stats.commits, 1);
+        assert_eq!(stats.acc_overflows, 0);
+        // Execute must have stalled for the fetch (serial dependency).
+        assert!(stats.execute_stall > 0);
+    }
+
+    #[test]
+    fn timing_is_causal_and_stable() {
+        let (p, dram, _, _) = binary_2x64x2();
+        let mut sim = Simulation::new(cfg(), &PYNQ_Z1, dram.clone()).unwrap();
+        let s1 = sim.run(&p).unwrap();
+        // Total must be at least each stage's busy time and deterministic.
+        assert!(s1.cycles >= s1.fetch_busy);
+        assert!(s1.cycles >= s1.execute_busy + s1.execute_stall);
+        let mut sim2 = Simulation::new(cfg(), &PYNQ_Z1, dram).unwrap();
+        assert_eq!(sim2.run(&p).unwrap(), s1);
+    }
+
+    #[test]
+    fn deadlock_detected() {
+        let mut p = Program::new();
+        p.push(Stage::Execute, Instr::Wait(SyncChannel::FetchToExecute));
+        p.push(Stage::Fetch, Instr::Wait(SyncChannel::ExecuteToFetch));
+        p.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
+        p.push(Stage::Execute, Instr::Signal(SyncChannel::ExecuteToFetch));
+        let mut sim = Simulation::new(cfg(), &PYNQ_Z1, DramImage::new(64)).unwrap();
+        match sim.run(&p) {
+            Err(SimError::Deadlock { blocked }) => {
+                assert_eq!(blocked.len(), 2);
+            }
+            other => panic!("expected deadlock, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn result_underflow_is_fault() {
+        let mut p = Program::new();
+        p.push(
+            Stage::Result,
+            Instr::Result(ResultRun {
+                dram_base: 0,
+                offset: 0,
+                rows: 1,
+                cols: 1,
+                row_stride_bytes: 4,
+            }),
+        );
+        let mut sim = Simulation::new(cfg(), &PYNQ_Z1, DramImage::new(64)).unwrap();
+        match sim.run(&p) {
+            Err(SimError::Fault { stage, .. }) => assert_eq!(stage, "result"),
+            other => panic!("expected fault, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn token_imbalance_rejected_up_front() {
+        let mut p = Program::new();
+        p.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
+        let mut sim = Simulation::new(cfg(), &PYNQ_Z1, DramImage::new(64)).unwrap();
+        assert!(matches!(sim.run(&p), Err(SimError::BadProgram(_))));
+    }
+
+    #[test]
+    fn stage_overlap_reduces_makespan() {
+        // Two independent fetch+execute rounds: with tokens allowing
+        // lookahead, fetch round 2 overlaps execute round 1.
+        let c = cfg();
+        let mut dram = DramImage::new(1024);
+        for i in 0..128 {
+            dram.write_u64(i * 8, i as u64);
+        }
+        let mk_fetch = |base: u64, off: u32| {
+            Instr::Fetch(FetchRun {
+                dram_base: base,
+                block_bytes: 256,
+                block_stride_bytes: 0,
+                num_blocks: 1,
+                buf_offset: off,
+                buf_start: 0,
+                buf_range: 4,
+                words_per_buf: 8,
+            })
+        };
+        let mk_exec = |off: u32| {
+            Instr::Execute(ExecuteRun {
+                lhs_offset: off,
+                rhs_offset: off,
+                num_chunks: 8,
+                shift: 0,
+                negate: false,
+                acc_reset: true,
+                commit_result: false,
+            })
+        };
+        // Overlapped: both fetches issued before waiting.
+        let mut over = Program::new();
+        over.push(Stage::Fetch, mk_fetch(0, 0));
+        over.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
+        over.push(Stage::Fetch, mk_fetch(256, 8));
+        over.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
+        over.push(Stage::Execute, Instr::Wait(SyncChannel::FetchToExecute));
+        over.push(Stage::Execute, mk_exec(0));
+        over.push(Stage::Execute, Instr::Wait(SyncChannel::FetchToExecute));
+        over.push(Stage::Execute, mk_exec(8));
+        // Serialized: execute acknowledges each fetch before the next.
+        let mut ser = Program::new();
+        ser.push(Stage::Fetch, mk_fetch(0, 0));
+        ser.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
+        ser.push(Stage::Fetch, Instr::Wait(SyncChannel::ExecuteToFetch));
+        ser.push(Stage::Fetch, mk_fetch(256, 8));
+        ser.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
+        ser.push(Stage::Execute, Instr::Wait(SyncChannel::FetchToExecute));
+        ser.push(Stage::Execute, mk_exec(0));
+        ser.push(Stage::Execute, Instr::Signal(SyncChannel::ExecuteToFetch));
+        ser.push(Stage::Execute, Instr::Wait(SyncChannel::FetchToExecute));
+        ser.push(Stage::Execute, mk_exec(8));
+
+        let t_over = Simulation::new(c, &PYNQ_Z1, dram.clone())
+            .unwrap()
+            .run(&over)
+            .unwrap()
+            .cycles;
+        let t_ser = Simulation::new(c, &PYNQ_Z1, dram)
+            .unwrap()
+            .run(&ser)
+            .unwrap()
+            .cycles;
+        assert!(
+            t_over < t_ser,
+            "overlap ({t_over}) should beat serialized ({t_ser})"
+        );
+    }
+}

@@ -1,0 +1,247 @@
+//! The execute stage: the Dot Product Array and its sequence generator.
+//!
+//! Functionally, a `RunExecute` performs — for every DPU `(i, j)` — an
+//! AND + popcount dot product over `num_chunks` consecutive `D_k`-bit
+//! buffer words, applies the software-controlled weight
+//! `(negate ? -1 : 1) << shift` and accumulates into the DPU's `A`-bit
+//! register (paper Fig. 4). Accumulators wrap at `A` bits exactly like
+//! the hardware register would; wrap events are counted.
+//!
+//! Timing (DESIGN.md §4, calibrated to paper Figs 12–13): a burst of
+//! back-to-back accumulating RunExecutes fills the DPA pipeline once;
+//! each instruction then streams one chunk per cycle:
+//!
+//! ```text
+//! cycles = (acc_reset ? D_pipe : 0) + num_chunks  [+1 if commit]
+//! ```
+//!
+//! `acc_reset` starts a fresh accumulation group, which in hardware must
+//! wait for the previous group to drain out of the pipelined
+//! AND→popcount→shift→accumulate datapath — the source of the paper's
+//! narrow-matrix inefficiency (Fig. 12: 89% for D_k=64 vs 64% for
+//! D_k=256 at k=8192, both reproduced by this model).
+
+use super::buffers::{MatrixBuffers, ResultBuffer};
+use crate::arch::BismoConfig;
+use crate::isa::ExecuteRun;
+
+/// Execute-stage state: the `D_m × D_n` accumulator registers.
+pub struct ExecuteUnit {
+    dm: usize,
+    dn: usize,
+    acc_bits: u32,
+    pipeline_depth: u64,
+    /// Accumulators, row-major `dm × dn`, modelled at i64 then wrapped
+    /// to `acc_bits` on read-out (the register itself is `A` bits wide:
+    /// we wrap on every update).
+    accs: Vec<i64>,
+    /// Wrap events observed (value exceeded the `A`-bit register).
+    pub overflows: u64,
+}
+
+impl ExecuteUnit {
+    pub fn new(cfg: &BismoConfig) -> Self {
+        ExecuteUnit {
+            dm: cfg.dm as usize,
+            dn: cfg.dn as usize,
+            acc_bits: cfg.acc_bits,
+            pipeline_depth: cfg.dpa_pipeline_depth(),
+            accs: vec![0; (cfg.dm * cfg.dn) as usize],
+            overflows: 0,
+        }
+    }
+
+    /// Wrap `v` into the two's-complement range of the `A`-bit register.
+    fn wrap(&mut self, v: i64) -> i64 {
+        if self.acc_bits == 64 {
+            return v;
+        }
+        let m = 1i64 << (self.acc_bits - 1);
+        let wrapped = ((v + m).rem_euclid(1i64 << self.acc_bits)) - m;
+        if wrapped != v {
+            self.overflows += 1;
+        }
+        wrapped
+    }
+
+    /// Execute one `RunExecute`. Returns
+    /// `(cycles, binary_ops, fill_cycles, committed)`.
+    pub fn run(
+        &mut self,
+        e: &ExecuteRun,
+        bufs: &MatrixBuffers,
+        result_buf: &mut ResultBuffer,
+    ) -> Result<(u64, u64, u64, bool), String> {
+        if e.acc_reset {
+            self.accs.iter_mut().for_each(|a| *a = 0);
+        }
+        let weight = if e.negate {
+            -(1i64 << e.shift)
+        } else {
+            1i64 << e.shift
+        };
+
+        // Hot path: one contiguous slice per buffer, validated once per
+        // instruction (RHS slices hoisted out of the row loop); the
+        // inner loop is the same word-level AND+popcount the DPU
+        // datapath performs.
+        let chunks = e.num_chunks as usize;
+        let mut rhs_slices = Vec::with_capacity(self.dn);
+        for j in 0..self.dn {
+            rhs_slices.push(
+                bufs.read_range(bufs.rhs_buf(j), e.rhs_offset as usize, chunks)
+                    .map_err(|err| format!("execute rhs: {err}"))?,
+            );
+        }
+        for i in 0..self.dm {
+            let lw = bufs
+                .read_range(bufs.lhs_buf(i), e.lhs_offset as usize, chunks)
+                .map_err(|err| format!("execute lhs: {err}"))?;
+            for (j, rw) in rhs_slices.iter().enumerate() {
+                let mut pc = 0u64;
+                for (&x, &y) in lw.iter().zip(rw.iter()) {
+                    pc += (x & y).count_ones() as u64;
+                }
+                let updated = self.accs[i * self.dn + j] + weight * pc as i64;
+                self.accs[i * self.dn + j] = self.wrap(updated);
+            }
+        }
+
+        let committed = e.commit_result;
+        if committed {
+            let set: Vec<i32> = self.accs.iter().map(|&a| a as i32).collect();
+            result_buf.commit(set).map_err(|err| format!("execute: {err}"))?;
+        }
+
+        // Timing (see module docs).
+        let fill = if e.acc_reset { self.pipeline_depth } else { 0 };
+        let cycles = fill + e.num_chunks as u64 + committed as u64;
+        // Work: every DPU processes num_chunks·D_k bit pairs, 2 ops each.
+        let dk_bits = bufs.words_per_chunk() as u64 * 64;
+        let ops = 2 * self.dm as u64 * self.dn as u64 * e.num_chunks as u64 * dk_bits;
+        Ok((cycles, ops, fill, committed))
+    }
+
+    /// Current accumulator values (wrapped to `A` bits), row-major.
+    pub fn accumulators(&self) -> &[i64] {
+        &self.accs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::ExecuteRun;
+
+    fn cfg() -> BismoConfig {
+        BismoConfig::small() // 2×64×2
+    }
+
+    fn exec(
+        unit: &mut ExecuteUnit,
+        bufs: &MatrixBuffers,
+        rb: &mut ResultBuffer,
+        e: ExecuteRun,
+    ) -> (u64, u64, u64, bool) {
+        unit.run(&e, bufs, rb).unwrap()
+    }
+
+    fn basic_run(chunks: u32, shift: u8, negate: bool, reset: bool) -> ExecuteRun {
+        ExecuteRun {
+            lhs_offset: 0,
+            rhs_offset: 0,
+            num_chunks: chunks,
+            shift,
+            negate,
+            acc_reset: reset,
+            commit_result: false,
+        }
+    }
+
+    #[test]
+    fn popcount_and_weight() {
+        let c = cfg();
+        let mut bufs = MatrixBuffers::new(&c);
+        // LHS buffer 0 word 0: 0b1111, RHS buffer word 0: 0b0110 → AND
+        // popcount = 2.
+        bufs.write_word(0, 0, &[0b1111]).unwrap();
+        bufs.write_word(1, 0, &[0b1111]).unwrap();
+        bufs.write_word(2, 0, &[0b0110]).unwrap();
+        bufs.write_word(3, 0, &[0b0001]).unwrap();
+        let mut unit = ExecuteUnit::new(&c);
+        let mut rb = ResultBuffer::new(&c);
+        exec(&mut unit, &bufs, &mut rb, basic_run(1, 2, false, true));
+        // weight = 4: acc[0][0] = 4·2 = 8; acc[0][1] = 4·1 = 4.
+        assert_eq!(unit.accumulators(), &[8, 4, 8, 4]);
+        // Negated accumulation on top, weight = -1, no reset.
+        exec(&mut unit, &bufs, &mut rb, basic_run(1, 0, true, false));
+        assert_eq!(unit.accumulators(), &[6, 3, 6, 3]);
+    }
+
+    #[test]
+    fn timing_model_fill_and_stream() {
+        let c = cfg();
+        let bufs = MatrixBuffers::new(&c);
+        let mut unit = ExecuteUnit::new(&c);
+        let mut rb = ResultBuffer::new(&c);
+        let depth = c.dpa_pipeline_depth();
+        let (cy, ops, fill, _) = exec(&mut unit, &bufs, &mut rb, basic_run(6, 0, false, true));
+        assert_eq!(cy, depth + 6);
+        assert_eq!(fill, depth);
+        assert_eq!(ops, 2 * 2 * 2 * 6 * 64);
+        // Warm pipeline: continuation costs only the chunks.
+        let (cy2, _, fill2, _) = exec(&mut unit, &bufs, &mut rb, basic_run(6, 1, false, false));
+        assert_eq!(cy2, 6);
+        assert_eq!(fill2, 0);
+    }
+
+    #[test]
+    fn commit_pushes_result_set() {
+        let c = cfg();
+        let mut bufs = MatrixBuffers::new(&c);
+        bufs.write_word(0, 0, &[u64::MAX]).unwrap();
+        bufs.write_word(1, 0, &[0]).unwrap();
+        bufs.write_word(2, 0, &[u64::MAX]).unwrap();
+        bufs.write_word(3, 0, &[u64::MAX]).unwrap();
+        let mut unit = ExecuteUnit::new(&c);
+        let mut rb = ResultBuffer::new(&c);
+        let e = ExecuteRun {
+            commit_result: true,
+            ..basic_run(1, 0, false, true)
+        };
+        let (_, _, _, committed) = exec(&mut unit, &bufs, &mut rb, e);
+        assert!(committed);
+        assert_eq!(rb.drain().unwrap(), vec![64, 64, 0, 0]);
+    }
+
+    #[test]
+    fn accumulator_wraps_at_a_bits() {
+        let c = BismoConfig {
+            acc_bits: 8,
+            ..cfg()
+        };
+        let mut bufs = MatrixBuffers::new(&c);
+        for b in 0..4 {
+            bufs.write_word(b, 0, &[u64::MAX]).unwrap(); // popcount 64
+        }
+        let mut unit = ExecuteUnit::new(&c);
+        let mut rb = ResultBuffer::new(&c);
+        // 64 · 2 = 128 overflows an 8-bit register to -128.
+        exec(&mut unit, &bufs, &mut rb, basic_run(1, 1, false, true));
+        assert_eq!(unit.accumulators(), &[-128; 4]);
+        assert_eq!(unit.overflows, 4);
+    }
+
+    #[test]
+    fn out_of_range_read_rejected() {
+        let c = cfg();
+        let bufs = MatrixBuffers::new(&c);
+        let mut unit = ExecuteUnit::new(&c);
+        let mut rb = ResultBuffer::new(&c);
+        let e = ExecuteRun {
+            lhs_offset: 1023,
+            ..basic_run(2, 0, false, true)
+        };
+        assert!(unit.run(&e, &bufs, &mut rb).is_err());
+    }
+}

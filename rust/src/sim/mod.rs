@@ -1,0 +1,160 @@
+//! Functional + cycle-level simulator of the BISMO overlay.
+//!
+//! The three pipeline stages (fetch / execute / result) run as
+//! discrete-event sequential processes, synchronized only through the
+//! four token FIFOs — exactly the hardware contract of paper Fig. 2.
+//! Every `Run*` instruction both *does the work* (moves real bytes,
+//! computes real AND+popcount dot products) and *advances time* by the
+//! duration the hardware would take (DESIGN.md §4 gives the timing
+//! model and its calibration against the paper's Figs 12–13).
+//!
+//! The simulator therefore produces, for every program:
+//!
+//! * a real result matrix in the DRAM image (checked against the CPU
+//!   oracle in tests), and
+//! * exact cycle counts, per-stage busy/stall breakdowns, and
+//!   efficiency relative to the configuration's peak.
+//!
+//! Illegal schedules are detected, not silently mis-simulated: token
+//! deadlock, result-buffer over/underflow and out-of-range buffer
+//! accesses all return [`SimError`].
+
+mod buffers;
+mod dram;
+mod engine;
+mod execute;
+mod fetch;
+mod result;
+
+pub use buffers::{MatrixBuffers, ResultBuffer};
+pub use dram::DmaTiming;
+pub use engine::{SimError, Simulation, TraceEvent};
+pub use execute::ExecuteUnit;
+pub use fetch::FetchUnit;
+pub use result::ResultUnit;
+
+/// A simple token FIFO with unbounded depth (hardware uses small FIFOs;
+/// depth is a scheduler property we check, not a correctness cliff) —
+/// tokens carry the producer-side timestamp so the consumer's `Wait`
+/// completes at `max(consumer_time, token_time)`.
+#[derive(Clone, Debug, Default)]
+pub struct TokenFifo {
+    tokens: std::collections::VecDeque<u64>,
+    /// High-water mark, for reporting hardware FIFO depth requirements.
+    pub max_depth: usize,
+    /// Total tokens ever pushed.
+    pub total: u64,
+}
+
+impl TokenFifo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: u64) {
+        self.tokens.push_back(time);
+        self.max_depth = self.max_depth.max(self.tokens.len());
+        self.total += 1;
+    }
+
+    /// Peek the arrival time of the oldest token.
+    pub fn front(&self) -> Option<u64> {
+        self.tokens.front().copied()
+    }
+
+    pub fn pop(&mut self) -> Option<u64> {
+        self.tokens.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// Cycle/byte/op statistics of one simulated program run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RunStats {
+    /// Total cycles: latest finish time across the three stages.
+    pub cycles: u64,
+    /// Busy cycles per stage (time inside Run instructions).
+    pub fetch_busy: u64,
+    pub execute_busy: u64,
+    pub result_busy: u64,
+    /// Stall cycles per stage (time blocked in Wait instructions).
+    pub fetch_stall: u64,
+    pub execute_stall: u64,
+    pub result_stall: u64,
+    /// Bytes moved from / to DRAM.
+    pub bytes_fetched: u64,
+    pub bytes_written: u64,
+    /// Binary operations performed (2 × AND-popcount bit pairs).
+    pub binary_ops: u64,
+    /// DPA pipeline fill cycles paid (drain/fill overhead).
+    pub pipeline_fill_cycles: u64,
+    /// Number of accumulator commits to the result buffer.
+    pub commits: u64,
+    /// Accumulator overflow events (value did not fit `A` bits).
+    pub acc_overflows: u64,
+}
+
+impl RunStats {
+    /// Achieved binary ops per cycle.
+    pub fn ops_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.binary_ops as f64 / self.cycles as f64
+        }
+    }
+
+    /// Efficiency vs a configuration's peak ops/cycle.
+    pub fn efficiency(&self, peak_ops_per_cycle: u64) -> f64 {
+        self.ops_per_cycle() / peak_ops_per_cycle as f64
+    }
+
+    /// Wall-clock seconds at `fclk_mhz`.
+    pub fn seconds_at(&self, fclk_mhz: u32) -> f64 {
+        self.cycles as f64 / (fclk_mhz as f64 * 1e6)
+    }
+
+    /// Achieved binary GOPS at `fclk_mhz`.
+    pub fn gops_at(&self, fclk_mhz: u32) -> f64 {
+        self.binary_ops as f64 / self.seconds_at(fclk_mhz) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_stats() {
+        let mut f = TokenFifo::new();
+        f.push(10);
+        f.push(20);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.max_depth, 2);
+        assert_eq!(f.front(), Some(10));
+        assert_eq!(f.pop(), Some(10));
+        assert_eq!(f.pop(), Some(20));
+        assert_eq!(f.pop(), None);
+        assert_eq!(f.total, 2);
+    }
+
+    #[test]
+    fn stats_derived_metrics() {
+        let s = RunStats {
+            cycles: 1000,
+            binary_ops: 500_000,
+            ..Default::default()
+        };
+        assert!((s.ops_per_cycle() - 500.0).abs() < 1e-9);
+        assert!((s.efficiency(1000) - 0.5).abs() < 1e-9);
+        assert!((s.seconds_at(200) - 5e-6).abs() < 1e-12);
+        assert!((s.gops_at(200) - 100.0).abs() < 1e-9);
+    }
+}

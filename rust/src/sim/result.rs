@@ -1,0 +1,136 @@
+//! The result stage: StreamWriter (downsizer + striding DMA engine).
+//!
+//! Executes `RunResult` instructions: drains the oldest committed
+//! `D_m × D_n` accumulator set from the result buffer and writes a
+//! `rows × cols` tile of it to DRAM, row-strided so the tile lands
+//! inside the full result matrix (paper §III-A3). The downsizer
+//! serializes `A`-bit accumulators onto the `R`-bit write channel; its
+//! bandwidth is what the DMA timing model charges.
+
+use super::buffers::ResultBuffer;
+use super::dram::DmaTiming;
+use crate::bitmatrix::dram::DramImage;
+use crate::isa::ResultRun;
+
+/// Stateless executor for the result stage.
+pub struct ResultUnit {
+    pub timing: DmaTiming,
+    /// DPU columns (`D_n`) — the row pitch inside a committed set.
+    pub dn: usize,
+}
+
+impl ResultUnit {
+    /// Execute one `RunResult`. Returns (cycles, bytes_written).
+    pub fn run(
+        &self,
+        r: &ResultRun,
+        result_buf: &mut ResultBuffer,
+        dram: &mut DramImage,
+    ) -> Result<(u64, u64), String> {
+        let set = result_buf.drain().map_err(|e| format!("result: {e}"))?;
+        let rows = r.rows as usize;
+        let cols = r.cols as usize;
+        if cols > self.dn || rows * self.dn > set.len() {
+            return Err(format!(
+                "result tile {}x{} exceeds committed set ({} accumulators, D_n={})",
+                rows,
+                cols,
+                set.len(),
+                self.dn
+            ));
+        }
+        let base = r.dram_base + r.offset;
+        for tr in 0..rows {
+            for tc in 0..cols {
+                let v = set[tr * self.dn + tc];
+                dram.write_i32(base + (tr as u64) * r.row_stride_bytes as u64 + tc as u64 * 4, v);
+            }
+        }
+        let bytes = (rows * cols * 4) as u64;
+        // One strided burst per tile row.
+        let cycles = self.timing.duration(bytes, rows as u64);
+        Ok((cycles, bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{BismoConfig, PYNQ_Z1};
+
+    fn setup() -> (ResultUnit, ResultBuffer, DramImage) {
+        let cfg = BismoConfig::small(); // 2×2 DPA
+        let unit = ResultUnit {
+            timing: DmaTiming::result(&cfg, &PYNQ_Z1),
+            dn: cfg.dn as usize,
+        };
+        (unit, ResultBuffer::new(&cfg), DramImage::new(4096))
+    }
+
+    #[test]
+    fn writes_strided_tile() {
+        let (unit, mut rb, mut dram) = setup();
+        rb.commit(vec![11, 12, 21, 22]).unwrap();
+        let r = ResultRun {
+            dram_base: 0,
+            offset: 8, // tile lands at row 0, col 2 of an n=4 matrix
+            rows: 2,
+            cols: 2,
+            row_stride_bytes: 16, // n=4 → 16-byte rows
+        };
+        let (cycles, bytes) = unit.run(&r, &mut rb, &mut dram).unwrap();
+        assert_eq!(bytes, 16);
+        assert!(cycles >= unit.timing.latency);
+        assert_eq!(dram.read_i32(8), 11);
+        assert_eq!(dram.read_i32(12), 12);
+        assert_eq!(dram.read_i32(24), 21);
+        assert_eq!(dram.read_i32(28), 22);
+        // Neighbors untouched.
+        assert_eq!(dram.read_i32(0), 0);
+        assert_eq!(dram.read_i32(16), 0);
+    }
+
+    #[test]
+    fn partial_tile_for_edge_of_matrix() {
+        let (unit, mut rb, mut dram) = setup();
+        rb.commit(vec![5, 6, 7, 8]).unwrap();
+        let r = ResultRun {
+            dram_base: 0,
+            offset: 0,
+            rows: 1,
+            cols: 1,
+            row_stride_bytes: 4,
+        };
+        let (_, bytes) = unit.run(&r, &mut rb, &mut dram).unwrap();
+        assert_eq!(bytes, 4);
+        assert_eq!(dram.read_i32(0), 5);
+        assert_eq!(dram.read_i32(4), 0);
+    }
+
+    #[test]
+    fn underflow_detected() {
+        let (unit, mut rb, mut dram) = setup();
+        let r = ResultRun {
+            dram_base: 0,
+            offset: 0,
+            rows: 1,
+            cols: 1,
+            row_stride_bytes: 4,
+        };
+        assert!(unit.run(&r, &mut rb, &mut dram).is_err());
+    }
+
+    #[test]
+    fn oversized_tile_rejected() {
+        let (unit, mut rb, mut dram) = setup();
+        rb.commit(vec![0; 4]).unwrap();
+        let r = ResultRun {
+            dram_base: 0,
+            offset: 0,
+            rows: 3, // > D_m
+            cols: 2,
+            row_stride_bytes: 8,
+        };
+        assert!(unit.run(&r, &mut rb, &mut dram).is_err());
+    }
+}

@@ -1,0 +1,57 @@
+//! Folding a generated netlist into a mapped-circuit summary.
+
+use super::netlist::Netlist;
+use super::timing::fmax_mhz;
+use super::SynthReport;
+
+/// Summary of a mapped circuit (thin wrapper; generators build the
+/// netlist, this attaches timing).
+#[derive(Clone, Copy, Debug)]
+pub struct MappedCircuit {
+    pub luts: f64,
+    pub ffs: f64,
+    pub stage_depth: f64,
+}
+
+impl MappedCircuit {
+    /// Fold a netlist.
+    pub fn of(nl: &Netlist) -> Self {
+        let (luts, ffs) = nl.cost();
+        MappedCircuit {
+            luts,
+            ffs,
+            stage_depth: nl.stage_depth(),
+        }
+    }
+
+    /// Attach the wire-load timing model; `fanout_hint` approximates
+    /// congestion (number of LUTs competing for routing).
+    pub fn report(&self, fanout_hint: f64) -> SynthReport {
+        SynthReport {
+            luts: self.luts,
+            ffs: self.ffs,
+            stage_depth: self.stage_depth,
+            fmax_mhz: fmax_mhz(self.stage_depth, fanout_hint),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::netlist::{Netlist, Prim};
+
+    #[test]
+    fn fold_matches_netlist() {
+        let mut nl = Netlist::new();
+        let i = nl.input();
+        let a = nl.add(Prim::Compressor32, &[i]);
+        nl.add(Prim::Reg { w: 2 }, &[a]);
+        let m = MappedCircuit::of(&nl);
+        assert_eq!(m.luts, 2.0);
+        assert_eq!(m.ffs, 2.0);
+        assert_eq!(m.stage_depth, 1.0);
+        let r = m.report(10.0);
+        assert!(r.fmax_mhz > 0.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Virtual synthesis: structural circuit generation + 6-LUT technology
+//! mapping + timing estimation for the BISMO datapath components.
+//!
+//! This module stands in for the paper's Vivado out-of-context synthesis
+//! runs (§IV-A). Every characterized number comes from *constructing the
+//! circuit* — e.g. the popcount compressor tree is actually built, level
+//! by level, for the requested width — and mapping it onto Xilinx
+//! 7-series primitives (6-input LUTs, CARRY4 chains) with documented
+//! packing rules ([`lutmap`]). Delay/Fmax comes from the mapped depth
+//! and a simple wire-load model ([`timing`]).
+//!
+//! What this preserves from real synthesis (and what the paper's figures
+//! demonstrate): the *structural scaling* of each component — popcount
+//! ≈ 1 LUT/bit, DPU cost linear in `D_k` with a fixed
+//! shifter/negator/accumulator overhead, bit-parallel DPUs cheaper per
+//! binary-op-equivalent but fixed-precision. What it cannot reproduce:
+//! Vivado's local optimizations on small designs (the paper itself
+//! reports those as its main source of model error, Fig. 9).
+
+mod bitparallel;
+mod lutmap;
+mod netlist;
+mod popcount;
+mod stages;
+mod timing;
+
+pub use bitparallel::{bitparallel_ops, synth_bitparallel_dpu};
+pub use lutmap::MappedCircuit;
+pub use netlist::{Netlist, NodeId};
+pub use popcount::{build_popcount, synth_popcount};
+pub use stages::{fetch_stage_luts, result_stage_luts, synth_dpu, synth_instance, InstanceSynth};
+pub use timing::fmax_mhz;
+
+/// Synthesis result for one component.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SynthReport {
+    /// Mapped 6-input LUTs.
+    pub luts: f64,
+    /// Flip-flops (registers, incl. pipeline registers).
+    pub ffs: f64,
+    /// Combinational LUT levels on the critical path *between pipeline
+    /// registers* (retimed, as the paper does).
+    pub stage_depth: f64,
+    /// Estimated maximum clock frequency.
+    pub fmax_mhz: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn popcount_about_one_lut_per_bit() {
+        // The paper's Fig. 6 headline: ~1 LUT per input bit.
+        for n in [32u32, 64, 128, 256, 512, 1024] {
+            let r = synth_popcount(n);
+            let per_bit = r.luts / n as f64;
+            assert!(
+                (0.7..=1.4).contains(&per_bit),
+                "popcount({n}): {per_bit:.2} LUT/bit out of Fig. 6 band"
+            );
+        }
+    }
+
+    #[test]
+    fn popcount_fmax_in_paper_band() {
+        // Fig. 6 reports 320–650 MHz across widths.
+        for n in [32u32, 64, 128, 256, 512, 1024] {
+            let r = synth_popcount(n);
+            assert!(
+                (320.0..=650.0).contains(&r.fmax_mhz),
+                "popcount({n}): Fmax {:.0} MHz out of band",
+                r.fmax_mhz
+            );
+        }
+    }
+
+    #[test]
+    fn dpu_cost_per_op_decreases_with_dk() {
+        // Fig. 7: 2.8 LUT/op at D_k=32 falling to ~1.07 at D_k=1024.
+        let per_op = |dk: u32| synth_dpu(dk, 32).luts / (2.0 * dk as f64);
+        let c32 = per_op(32);
+        let c1024 = per_op(1024);
+        assert!(c32 > 2.0 && c32 < 3.6, "Dk=32: {c32:.2}");
+        assert!(c1024 > 0.8 && c1024 < 1.4, "Dk=1024: {c1024:.2}");
+        assert!(c32 > 1.8 * c1024, "amortization too weak");
+        // Monotone decreasing across the sweep.
+        let mut prev = f64::INFINITY;
+        for dk in [32u32, 64, 128, 256, 512, 1024] {
+            let c = per_op(dk);
+            assert!(c < prev, "per-op cost must fall with D_k");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn dpu_fmax_in_paper_band() {
+        // Fig. 7 text: 300–350 MHz for tested widths.
+        for dk in [32u32, 64, 128, 256, 512, 1024] {
+            let f = synth_dpu(dk, 32).fmax_mhz;
+            assert!(
+                (280.0..=380.0).contains(&f),
+                "DPU({dk}) Fmax {f:.0} out of band"
+            );
+        }
+    }
+
+    #[test]
+    fn bitparallel_cheaper_per_op_but_gap_closes() {
+        // Fig. 11: bit-parallel 3×3 ≈ 0.73 LUT/op; BISMO gap ≤ ~0.5
+        // LUT/op at large D_k.
+        let dk = 256;
+        let bs = synth_dpu(dk, 32).luts / (2.0 * dk as f64);
+        let bp33 = synth_bitparallel_dpu(3, 3, dk).luts / (2.0 * 3.0 * 3.0 * dk as f64);
+        assert!(bp33 < bs, "bit-parallel must be cheaper per op");
+        assert!(bp33 > 0.5 && bp33 < 1.1, "3x3 per-op {bp33:.2}");
+        let gap = bs - bp33;
+        assert!(gap < 0.9, "gap {gap:.2} too wide at D_k={dk}");
+    }
+}

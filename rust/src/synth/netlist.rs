@@ -1,0 +1,176 @@
+//! A small structural netlist for virtual synthesis.
+//!
+//! Nodes are *mapped primitives*, not raw gates: generators emit the
+//! Xilinx 7-series structures a synthesis tool would produce for these
+//! well-understood datapath circuits (compressors, carry-chain adders,
+//! mux stages). Each node records its LUT cost, register count and the
+//! delay it adds on top of its deepest predecessor; the mapper
+//! ([`super::lutmap`]) folds the graph into totals.
+
+/// Handle to a netlist node. `NodeId(0)` is the primary-input pseudo
+/// node (depth 0, zero cost).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeId(pub usize);
+
+/// Mapped-primitive kinds with their packing rules.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Prim {
+    /// Generic k-input (k ≤ 6) logic function: 1 LUT, 1 level.
+    Lut6,
+    /// 6:3 bit-count compressor: 3 LUT6 sharing 6 inputs, 1 level.
+    Compressor63,
+    /// 3:2 full-adder compressor: 2 LUTs (sum + carry), 1 level.
+    Compressor32,
+    /// Ripple-carry adder, `w` bits: `w` LUTs + CARRY4 chain. One LUT
+    /// level plus fast carry propagation (`w/4` CARRY4 hops).
+    AdderCarry { w: u32 },
+    /// `w`-bit 4:1 mux stage (2 select bits): `w` LUTs, 1 level.
+    Mux4 { w: u32 },
+    /// Register bank, `w` bits: 0 LUTs, `w` FFs; cuts the timing path.
+    Reg { w: u32 },
+}
+
+struct Node {
+    #[allow(dead_code)] // kept for netlist dumps / debugging
+    prim: Prim,
+    /// Combinational depth at this node's output, in equivalent LUT
+    /// levels since the last register cut.
+    depth: f64,
+}
+
+/// The netlist under construction.
+pub struct Netlist {
+    nodes: Vec<Node>,
+    luts: f64,
+    ffs: f64,
+    /// Deepest combinational path between register cuts seen anywhere.
+    max_stage_depth: f64,
+}
+
+impl Netlist {
+    pub fn new() -> Self {
+        Netlist {
+            nodes: vec![Node {
+                prim: Prim::Reg { w: 0 },
+                depth: 0.0,
+            }],
+            luts: 0.0,
+            ffs: 0.0,
+            max_stage_depth: 0.0,
+        }
+    }
+
+    /// Primary-input pseudo node.
+    pub fn input(&self) -> NodeId {
+        NodeId(0)
+    }
+
+    fn prim_cost(prim: Prim) -> (f64, f64, f64) {
+        // (luts, ffs, delay in LUT levels)
+        match prim {
+            Prim::Lut6 => (1.0, 0.0, 1.0),
+            Prim::Compressor63 => (3.0, 0.0, 1.0),
+            Prim::Compressor32 => (2.0, 0.0, 1.0),
+            // Carry chains are much faster than LUT hops: count the
+            // chain at 1/8 LUT-level per CARRY4 (two bits per half hop).
+            Prim::AdderCarry { w } => (w as f64, 0.0, 1.0 + w as f64 / 4.0 * 0.125),
+            Prim::Mux4 { w } => (w as f64, 0.0, 1.0),
+            Prim::Reg { w } => (0.0, w as f64, 0.0),
+        }
+    }
+
+    /// Add a node fed by `preds`. Returns its id.
+    pub fn add(&mut self, prim: Prim, preds: &[NodeId]) -> NodeId {
+        let in_depth = preds
+            .iter()
+            .map(|p| self.nodes[p.0].depth)
+            .fold(0.0, f64::max);
+        let (l, f, d) = Self::prim_cost(prim);
+        self.luts += l;
+        self.ffs += f;
+        let depth = if matches!(prim, Prim::Reg { .. }) {
+            // Register: path ends here; record the cut stage depth.
+            self.max_stage_depth = self.max_stage_depth.max(in_depth);
+            0.0
+        } else {
+            let depth = in_depth + d;
+            self.max_stage_depth = self.max_stage_depth.max(depth);
+            depth
+        };
+        self.nodes.push(Node { prim, depth });
+        NodeId(self.nodes.len() - 1)
+    }
+
+    /// Totals so far: (luts, ffs).
+    pub fn cost(&self) -> (f64, f64) {
+        (self.luts, self.ffs)
+    }
+
+    /// Deepest combinational stage (LUT levels between registers).
+    pub fn stage_depth(&self) -> f64 {
+        self.max_stage_depth
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+impl Default for Netlist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn costs_accumulate() {
+        let mut nl = Netlist::new();
+        let i = nl.input();
+        let a = nl.add(Prim::Compressor63, &[i]);
+        let b = nl.add(Prim::Compressor63, &[i]);
+        let s = nl.add(Prim::AdderCarry { w: 4 }, &[a, b]);
+        nl.add(Prim::Reg { w: 4 }, &[s]);
+        let (luts, ffs) = nl.cost();
+        assert_eq!(luts, 3.0 + 3.0 + 4.0);
+        assert_eq!(ffs, 4.0);
+    }
+
+    #[test]
+    fn depth_tracks_critical_path() {
+        let mut nl = Netlist::new();
+        let i = nl.input();
+        let a = nl.add(Prim::Lut6, &[i]); // depth 1
+        let b = nl.add(Prim::Lut6, &[a]); // depth 2
+        let _c = nl.add(Prim::Lut6, &[i]); // depth 1 (parallel)
+        assert_eq!(nl.stage_depth(), 2.0);
+        let r = nl.add(Prim::Reg { w: 1 }, &[b]); // cut
+        let d = nl.add(Prim::Lut6, &[r]); // new stage: depth 1
+        let _ = d;
+        assert_eq!(nl.stage_depth(), 2.0); // still the deepest stage
+    }
+
+    #[test]
+    fn register_resets_stage() {
+        let mut nl = Netlist::new();
+        let i = nl.input();
+        let mut x = i;
+        for _ in 0..3 {
+            let y = nl.add(Prim::Lut6, &[x]);
+            x = nl.add(Prim::Reg { w: 1 }, &[y]); // pipeline every level
+        }
+        assert_eq!(nl.stage_depth(), 1.0);
+        assert_eq!(nl.cost(), (3.0, 3.0));
+    }
+
+    #[test]
+    fn adder_carry_delay_scales_slowly() {
+        let (_, _, d8) = Netlist::prim_cost(Prim::AdderCarry { w: 8 });
+        let (_, _, d64) = Netlist::prim_cost(Prim::AdderCarry { w: 64 });
+        assert!(d64 > d8);
+        assert!(d64 < 4.0, "carry chain must stay far below LUT-hop cost");
+    }
+}

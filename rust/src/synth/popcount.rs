@@ -1,0 +1,150 @@
+//! Popcount compressor-tree generator (paper Fig. 6).
+//!
+//! Builds the circuit a synthesis tool produces for `+` over bits: a
+//! Wallace-style tree of 6:3 and 3:2 compressors over weight columns,
+//! pipelined every two levels (the paper adds registers and lets Vivado
+//! retime), finished by one carry-chain adder when every column is down
+//! to ≤ 2 bits.
+
+use super::lutmap::MappedCircuit;
+use super::netlist::{Netlist, NodeId, Prim};
+use super::SynthReport;
+
+/// How many compressor levels between pipeline registers.
+const PIPELINE_EVERY: u32 = 2;
+
+/// Reduce weight columns until each holds ≤ 2 bits, then add the final
+/// carry-propagate adder. Returns the result bit nodes.
+pub fn compress_columns(nl: &mut Netlist, mut cols: Vec<Vec<NodeId>>) -> Vec<NodeId> {
+    let mut level = 0u32;
+    loop {
+        let worst = cols.iter().map(|c| c.len()).max().unwrap_or(0);
+        if worst <= 2 {
+            break;
+        }
+        // One compressor level across all columns.
+        let mut next: Vec<Vec<NodeId>> = vec![Vec::new(); cols.len() + 3];
+        for (w, col) in cols.iter().enumerate() {
+            let mut i = 0;
+            // 6:3 compressors while at least 6 bits remain.
+            while col.len() - i >= 6 {
+                let n = nl.add(Prim::Compressor63, &col[i..i + 6]);
+                next[w].push(n);
+                next[w + 1].push(n);
+                next[w + 2].push(n);
+                i += 6;
+            }
+            // 3:2 full adders for 3..5 leftovers.
+            while col.len() - i >= 3 {
+                let n = nl.add(Prim::Compressor32, &col[i..i + 3]);
+                next[w].push(n);
+                next[w + 1].push(n);
+                i += 3;
+            }
+            // 1–2 leftover bits pass through.
+            for &b in &col[i..] {
+                next[w].push(b);
+            }
+        }
+        while next.last().map(|c| c.is_empty()) == Some(true) {
+            next.pop();
+        }
+        cols = next;
+        level += 1;
+        if level % PIPELINE_EVERY == 0 {
+            // Register every live bit (retiming-friendly pipelining).
+            for col in cols.iter_mut() {
+                for b in col.iter_mut() {
+                    *b = nl.add(Prim::Reg { w: 1 }, &[*b]);
+                }
+            }
+        }
+    }
+    // Final carry-propagate add of the two remaining rows.
+    let width = cols.len() as u32;
+    let all: Vec<NodeId> = cols.iter().flatten().copied().collect();
+    if all.is_empty() {
+        return Vec::new();
+    }
+    let needs_adder = cols.iter().any(|c| c.len() > 1);
+    if needs_adder {
+        let sum = nl.add(Prim::AdderCarry { w: width }, &all);
+        let reg = nl.add(Prim::Reg { w: width + 1 }, &[sum]);
+        vec![reg]
+    } else {
+        all
+    }
+}
+
+/// Build a popcount unit of width `n` into `nl`. Returns result node(s).
+pub fn build_popcount(nl: &mut Netlist, n: u32) -> Vec<NodeId> {
+    let input = nl.input();
+    let cols = vec![vec![input; n as usize]];
+    compress_columns(nl, cols)
+}
+
+/// Characterize a popcount unit (the paper's Fig. 6 experiment).
+pub fn synth_popcount(n: u32) -> SynthReport {
+    let mut nl = Netlist::new();
+    build_popcount(&mut nl, n);
+    let m = MappedCircuit::of(&nl);
+    m.report(m.luts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_widths() {
+        // popcount(3): one 3:2 compressor (2 LUTs), no adder needed.
+        let r = synth_popcount(3);
+        assert_eq!(r.luts, 2.0);
+        // popcount(6): one 6:3 (3 LUTs).
+        let r = synth_popcount(6);
+        assert_eq!(r.luts, 3.0);
+    }
+
+    #[test]
+    fn linear_scaling_like_fig6() {
+        // Least-squares slope over the Fig. 6 sweep should be ~1 LUT/bit.
+        let widths = [32u32, 64, 128, 256, 512, 1024];
+        let pts: Vec<(f64, f64)> = widths
+            .iter()
+            .map(|&n| (n as f64, synth_popcount(n).luts))
+            .collect();
+        let n = pts.len() as f64;
+        let sx: f64 = pts.iter().map(|p| p.0).sum();
+        let sy: f64 = pts.iter().map(|p| p.1).sum();
+        let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+        let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+        assert!(
+            (0.8..=1.3).contains(&slope),
+            "slope {slope:.3} LUT/bit vs Fig. 6's ~1"
+        );
+    }
+
+    #[test]
+    fn monotone_in_width() {
+        let mut prev = 0.0;
+        for n in [8u32, 16, 32, 64, 128, 256] {
+            let l = synth_popcount(n).luts;
+            assert!(l > prev);
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn pipelining_bounds_stage_depth() {
+        // Even popcount(1024) must keep stages ≤ PIPELINE_EVERY levels +
+        // the final adder's carry tail.
+        let mut nl = Netlist::new();
+        build_popcount(&mut nl, 1024);
+        assert!(
+            nl.stage_depth() <= 4.0,
+            "stage depth {} not pipelined",
+            nl.stage_depth()
+        );
+    }
+}

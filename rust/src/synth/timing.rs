@@ -1,0 +1,53 @@
+//! Delay / Fmax model for mapped circuits.
+//!
+//! A pipeline stage of depth `d` LUT levels has period
+//!
+//! ```text
+//! T = t_clk_overhead + d · (t_lut + t_route(fanout))
+//! ```
+//!
+//! with a congestion-dependent routing delay: bigger blocks spread over
+//! more of the die and pay longer nets. Constants are calibrated so the
+//! characterized components land in the paper's reported bands
+//! (popcount 320–650 MHz, DPU 300–350 MHz, Fig. 6–7) on the Zynq-7000
+//! (-1 speed grade) process.
+
+/// Clock-to-Q + setup + clock skew (ns).
+const T_CLK_NS: f64 = 0.65;
+/// LUT6 propagation delay (ns).
+const T_LUT_NS: f64 = 0.35;
+/// Base net delay between LUTs (ns).
+const T_ROUTE_BASE_NS: f64 = 0.45;
+/// Congestion growth: extra net delay per doubling of block size (ns).
+const T_ROUTE_GROWTH_NS: f64 = 0.037;
+
+/// Estimated Fmax (MHz) of a pipeline stage `depth` LUT levels deep in
+/// a block of roughly `fanout_hint` LUTs.
+pub fn fmax_mhz(depth: f64, fanout_hint: f64) -> f64 {
+    let congestion = T_ROUTE_GROWTH_NS * fanout_hint.max(1.0).log2();
+    let t_level = T_LUT_NS + T_ROUTE_BASE_NS + congestion;
+    let period_ns = T_CLK_NS + depth.max(0.5) * t_level;
+    1000.0 / period_ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deeper_is_slower() {
+        assert!(fmax_mhz(1.0, 64.0) > fmax_mhz(3.0, 64.0));
+    }
+
+    #[test]
+    fn bigger_blocks_are_slower() {
+        assert!(fmax_mhz(2.0, 32.0) > fmax_mhz(2.0, 2048.0));
+    }
+
+    #[test]
+    fn shallow_small_block_in_plausible_range() {
+        // A 2-level stage in a small block: a few hundred MHz on Zynq-7000.
+        let f = fmax_mhz(2.0, 64.0);
+        assert!((350.0..700.0).contains(&f), "{f}");
+    }
+}

@@ -1,0 +1,162 @@
+//! Minimal benchmark support (the offline registry has no criterion).
+//!
+//! `cargo bench` targets in this crate use `harness = false` and drive
+//! [`BenchTimer`] directly: warmup, then timed iterations until both a
+//! minimum sample count and a minimum wall-clock budget are met, then
+//! robust statistics over the per-iteration samples.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over per-iteration timings (nanoseconds).
+#[derive(Clone, Debug)]
+pub struct Samples {
+    /// Sorted per-iteration durations in nanoseconds.
+    pub ns: Vec<f64>,
+}
+
+impl Samples {
+    pub fn median(&self) -> f64 {
+        percentile_sorted(&self.ns, 50.0)
+    }
+    pub fn p05(&self) -> f64 {
+        percentile_sorted(&self.ns, 5.0)
+    }
+    pub fn p95(&self) -> f64 {
+        percentile_sorted(&self.ns, 95.0)
+    }
+    pub fn mean(&self) -> f64 {
+        self.ns.iter().sum::<f64>() / self.ns.len() as f64
+    }
+    pub fn min(&self) -> f64 {
+        *self.ns.first().unwrap()
+    }
+}
+
+fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let idx = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Bench runner: measures a closure with warmup and a time budget.
+pub struct BenchTimer {
+    /// Minimum number of timed samples.
+    pub min_samples: usize,
+    /// Minimum total measurement time.
+    pub min_time: Duration,
+    /// Warmup time before measurement starts.
+    pub warmup: Duration,
+}
+
+impl Default for BenchTimer {
+    fn default() -> Self {
+        BenchTimer {
+            min_samples: 10,
+            min_time: Duration::from_millis(300),
+            warmup: Duration::from_millis(100),
+        }
+    }
+}
+
+impl BenchTimer {
+    /// Quick preset for heavyweight benchmarks (seconds per iteration).
+    pub fn heavy() -> Self {
+        BenchTimer {
+            min_samples: 3,
+            min_time: Duration::from_millis(200),
+            warmup: Duration::from_millis(0),
+        }
+    }
+
+    /// Measure `f`, returning sorted per-iteration samples. The closure's
+    /// return value is passed through `std::hint::black_box` to keep the
+    /// optimizer honest.
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> Samples {
+        let warm_start = Instant::now();
+        while warm_start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut ns = Vec::new();
+        let start = Instant::now();
+        while ns.len() < self.min_samples || start.elapsed() < self.min_time {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            ns.push(t0.elapsed().as_nanos() as f64);
+            if ns.len() >= 1_000_000 {
+                break;
+            }
+        }
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Samples { ns }
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Print one bench result line in a stable, grep-friendly format.
+pub fn report(name: &str, s: &Samples, throughput: Option<(f64, &str)>) {
+    let med = s.median();
+    let extra = match throughput {
+        Some((units_per_iter, unit)) => {
+            let per_sec = units_per_iter / (med / 1e9);
+            format!("  {:>12.3e} {unit}/s", per_sec)
+        }
+        None => String::new(),
+    };
+    println!(
+        "bench {name:<44} median {:>12}  p05 {:>12}  p95 {:>12}  n={}{}",
+        fmt_ns(med),
+        fmt_ns(s.p05()),
+        fmt_ns(s.p95()),
+        s.ns.len(),
+        extra
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_sorts() {
+        let t = BenchTimer {
+            min_samples: 5,
+            min_time: Duration::from_millis(1),
+            warmup: Duration::from_millis(0),
+        };
+        let s = t.run(|| (0..100u64).sum::<u64>());
+        assert!(s.ns.len() >= 5);
+        assert!(s.ns.windows(2).all(|w| w[0] <= w[1]));
+        assert!(s.min() <= s.median() && s.median() <= s.p95());
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let s = Samples {
+            ns: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        };
+        assert_eq!(s.p05(), 1.0);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.p95(), 5.0);
+        assert_eq!(s.mean(), 3.0);
+    }
+}

@@ -1,0 +1,102 @@
+//! Tiny CSV writer used by the benchmark harness to dump figure/table
+//! data for external plotting. No quoting edge-cases are needed: all our
+//! emitted fields are numbers or simple identifiers (asserted).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Accumulates rows and writes them to `results/<name>.csv`.
+pub struct CsvWriter {
+    path: PathBuf,
+    buf: String,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create a writer with a header row. The file is written on
+    /// [`CsvWriter::finish`].
+    pub fn new<P: AsRef<Path>>(path: P, header: &[&str]) -> Self {
+        let mut buf = String::new();
+        for (i, h) in header.iter().enumerate() {
+            assert!(is_simple(h), "CSV header field needs no quoting: {h:?}");
+            if i > 0 {
+                buf.push(',');
+            }
+            buf.push_str(h);
+        }
+        buf.push('\n');
+        CsvWriter {
+            path: path.as_ref().to_path_buf(),
+            buf,
+            cols: header.len(),
+        }
+    }
+
+    /// Append one row of already-formatted fields.
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(
+            fields.len(),
+            self.cols,
+            "row width mismatch in {:?}",
+            self.path
+        );
+        for (i, f) in fields.iter().enumerate() {
+            assert!(is_simple(f), "CSV field needs no quoting: {f:?}");
+            if i > 0 {
+                self.buf.push(',');
+            }
+            self.buf.push_str(f);
+        }
+        self.buf.push('\n');
+    }
+
+    /// Convenience: append a row of display-formatted values.
+    pub fn rowf(&mut self, fields: &[&dyn std::fmt::Display]) {
+        let v: Vec<String> = fields.iter().map(|f| {
+            let mut s = String::new();
+            let _ = write!(s, "{f}");
+            s
+        }).collect();
+        self.row(&v);
+    }
+
+    /// Write the accumulated contents, creating parent dirs.
+    pub fn finish(self) -> io::Result<PathBuf> {
+        if let Some(parent) = self.path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(&self.path, self.buf.as_bytes())?;
+        Ok(self.path)
+    }
+}
+
+fn is_simple(s: &str) -> bool {
+    !s.contains(',') && !s.contains('"') && !s.contains('\n')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_csv() {
+        let dir = std::env::temp_dir().join("bismo_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::new(&path, &["a", "b"]);
+        w.row(&["1".into(), "2.5".into()]);
+        w.rowf(&[&3, &4.5]);
+        let p = w.finish().unwrap();
+        let body = std::fs::read_to_string(p).unwrap();
+        assert_eq!(body, "a,b\n1,2.5\n3,4.5\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut w = CsvWriter::new("/tmp/x.csv", &["a", "b"]);
+        w.row(&["1".into()]);
+    }
+}

@@ -1,0 +1,96 @@
+//! Small self-contained utilities: deterministic PRNG, property-sweep
+//! helper, timing, and CSV emission.
+//!
+//! The offline crate registry for this build provides no `rand`,
+//! `proptest`, `criterion` or `serde`, so the handful of primitives the
+//! rest of the crate needs live here.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod rng;
+
+pub use bench::{BenchTimer, Samples};
+pub use csv::CsvWriter;
+pub use json::Json;
+pub use rng::Rng;
+
+/// Integer ceiling division. Used throughout the timing and cost models
+/// (`ceil(k / D_k)` chunks, `ceil(B_m / 1024)` BRAM tiles, ...).
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: u64, b: u64) -> u64 {
+    ceil_div(a, b) * b
+}
+
+/// `ceil(log2(x))` for `x >= 1`; 0 for `x == 1`.
+#[inline]
+pub fn ceil_log2(x: u64) -> u32 {
+    debug_assert!(x >= 1);
+    if x <= 1 {
+        0
+    } else {
+        64 - (x - 1).leading_zeros()
+    }
+}
+
+/// Run `f` over `n` pseudo-random cases derived from `seed`. This is the
+/// crate's stand-in for a property-based testing harness: no shrinking,
+/// but deterministic and seed-reportable. On failure the closure should
+/// panic with enough context (the case index is added by this wrapper).
+pub fn property_sweep<F: FnMut(&mut Rng, usize)>(seed: u64, n: usize, mut f: F) {
+    for case in 0..n {
+        let mut rng = Rng::new(seed ^ (0x9e37_79b9_7f4a_7c15u64.wrapping_mul(case as u64 + 1)));
+        f(&mut rng, case);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(1024, 1024), 1);
+        assert_eq!(ceil_div(1025, 1024), 2);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn ceil_log2_basics() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(1024), 10);
+        assert_eq!(ceil_log2(1025), 11);
+    }
+
+    #[test]
+    fn property_sweep_is_deterministic() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        property_sweep(42, 5, |rng, _| a.push(rng.next_u64()));
+        property_sweep(42, 5, |rng, _| b.push(rng.next_u64()));
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5);
+    }
+}

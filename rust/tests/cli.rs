@@ -1,0 +1,76 @@
+//! CLI smoke tests: every subcommand runs and prints what it promises.
+
+use std::process::Command;
+
+fn bismo(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_bismo"))
+        .args(args)
+        .output()
+        .expect("spawn bismo");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn quickstart_verifies() {
+    let (ok, text) = bismo(&["quickstart"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("verified OK"), "{text}");
+}
+
+#[test]
+fn simulate_prints_report() {
+    let (ok, text) = bismo(&[
+        "simulate", "--instance", "2", "--m", "16", "--k", "512", "--n", "16",
+        "--wbits", "3", "--abits", "2", "--signed",
+    ]);
+    assert!(ok, "{text}");
+    for needle in ["cycles", "GOPS", "efficiency", "planes"] {
+        assert!(text.contains(needle), "missing {needle}: {text}");
+    }
+}
+
+#[test]
+fn simulate_bit_skip_and_no_overlap() {
+    let (ok, text) = bismo(&[
+        "simulate", "--m", "8", "--k", "256", "--n", "8", "--bit-skip", "--no-overlap",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("verified"), "{text}");
+}
+
+#[test]
+fn schedule_dumps_queues() {
+    let (ok, text) = bismo(&["schedule", "--m", "4", "--k", "128", "--n", "4"]);
+    assert!(ok, "{text}");
+    for needle in ["fetch queue", "execute queue", "result queue", "RunExecute"] {
+        assert!(text.contains(needle), "missing {needle}");
+    }
+}
+
+#[test]
+fn costmodel_power_synth_instances_info() {
+    for cmd in ["costmodel", "power", "synth", "instances", "info"] {
+        let (ok, text) = bismo(&[cmd]);
+        assert!(ok, "{cmd}: {text}");
+        assert!(text.len() > 50, "{cmd} output too short");
+    }
+}
+
+#[test]
+fn synth_single_dk() {
+    let (ok, text) = bismo(&["synth", "--dk", "128"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("DPU(Dk=128)"), "{text}");
+}
+
+#[test]
+fn unknown_command_usage() {
+    let (ok, text) = bismo(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("usage:"), "{text}");
+}

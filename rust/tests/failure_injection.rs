@@ -1,0 +1,182 @@
+//! Failure injection: broken schedules and abusive configurations must
+//! be *diagnosed*, not silently mis-simulated.
+
+use bismo::arch::{BismoConfig, PYNQ_Z1};
+use bismo::bitmatrix::dram::DramImage;
+use bismo::isa::{ExecuteRun, FetchRun, Instr, Program, ResultRun, Stage, SyncChannel};
+use bismo::sim::{SimError, Simulation};
+
+fn cfg() -> BismoConfig {
+    BismoConfig::small()
+}
+
+fn sim() -> Simulation {
+    Simulation::new(cfg(), &PYNQ_Z1, DramImage::new(4096)).unwrap()
+}
+
+fn exec(chunks: u32, commit: bool) -> Instr {
+    Instr::Execute(ExecuteRun {
+        lhs_offset: 0,
+        rhs_offset: 0,
+        num_chunks: chunks,
+        shift: 0,
+        negate: false,
+        acc_reset: true,
+        commit_result: commit,
+    })
+}
+
+#[test]
+fn wait_without_signal_deadlocks_with_diagnosis() {
+    let mut p = Program::new();
+    p.push(Stage::Execute, Instr::Wait(SyncChannel::FetchToExecute));
+    p.push(Stage::Fetch, Instr::Wait(SyncChannel::ExecuteToFetch));
+    p.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
+    p.push(Stage::Execute, Instr::Signal(SyncChannel::ExecuteToFetch));
+    match sim().run(&p) {
+        Err(SimError::Deadlock { blocked }) => {
+            let msg = format!("{blocked:?}");
+            assert!(msg.contains("fetch") && msg.contains("execute"), "{msg}");
+            assert!(msg.contains("waiting on"), "{msg}");
+        }
+        other => panic!("expected deadlock, got {other:?}"),
+    }
+}
+
+#[test]
+fn result_buffer_overflow_detected() {
+    // B_r = 2: three commits without any drain must fault on the third.
+    let mut p = Program::new();
+    for _ in 0..3 {
+        p.push(Stage::Execute, exec(1, true));
+        p.push(Stage::Execute, Instr::Signal(SyncChannel::ExecuteToResult));
+    }
+    for _ in 0..3 {
+        p.push(Stage::Result, Instr::Wait(SyncChannel::ExecuteToResult));
+        p.push(
+            Stage::Result,
+            Instr::Result(ResultRun {
+                dram_base: 0,
+                offset: 0,
+                rows: 1,
+                cols: 1,
+                row_stride_bytes: 4,
+            }),
+        );
+    }
+    // Force the engine to run all execute instructions before result
+    // (fetch->execute->result priority does this already).
+    match sim().run(&p) {
+        Err(SimError::Fault { stage, msg, .. }) => {
+            assert_eq!(stage, "execute");
+            assert!(msg.contains("overflow"), "{msg}");
+        }
+        other => panic!("expected overflow fault, got {other:?}"),
+    }
+}
+
+#[test]
+fn fetch_out_of_buffer_range_detected() {
+    let mut p = Program::new();
+    p.push(
+        Stage::Fetch,
+        Instr::Fetch(FetchRun {
+            dram_base: 0,
+            block_bytes: 8,
+            block_stride_bytes: 0,
+            num_blocks: 1,
+            buf_offset: 0,
+            buf_start: 60, // far out of range (4 buffers exist)
+            buf_range: 1,
+            words_per_buf: 1,
+        }),
+    );
+    match sim().run(&p) {
+        Err(SimError::Fault { stage, msg, .. }) => {
+            assert_eq!(stage, "fetch");
+            assert!(msg.contains("out of range"), "{msg}");
+        }
+        other => panic!("expected fetch fault, got {other:?}"),
+    }
+}
+
+#[test]
+fn execute_past_buffer_depth_detected() {
+    let mut p = Program::new();
+    p.push(Stage::Execute, exec(5000, false)); // bm = 1024
+    match sim().run(&p) {
+        Err(SimError::Fault { stage, .. }) => assert_eq!(stage, "execute"),
+        other => panic!("expected execute fault, got {other:?}"),
+    }
+}
+
+#[test]
+fn illegal_queue_placement_rejected() {
+    let mut p = Program::new();
+    p.push(Stage::Result, exec(1, false)); // RunExecute in result queue
+    match sim().run(&p) {
+        Err(SimError::BadProgram(msg)) => assert!(msg.contains("result queue"), "{msg}"),
+        other => panic!("expected BadProgram, got {other:?}"),
+    }
+}
+
+#[test]
+fn accumulator_overflow_counted_not_fatal() {
+    // A=8 bits with dense data overflows; the simulator must complete
+    // and report the wraps (like the hardware register would wrap).
+    let c = BismoConfig {
+        acc_bits: 8,
+        ..cfg()
+    };
+    let mut dram = DramImage::new(4096);
+    for i in 0..64 {
+        dram.write_u64(i * 8, u64::MAX);
+    }
+    let mut p = Program::new();
+    p.push(
+        Stage::Fetch,
+        Instr::Fetch(FetchRun {
+            dram_base: 0,
+            block_bytes: 64,
+            block_stride_bytes: 0,
+            num_blocks: 4,
+            buf_offset: 0,
+            buf_start: 0,
+            buf_range: 4,
+            words_per_buf: 8,
+        }),
+    );
+    p.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
+    p.push(Stage::Execute, Instr::Wait(SyncChannel::FetchToExecute));
+    p.push(Stage::Execute, exec(8, false)); // 8 chunks of all-ones: 512 >> 8-bit range
+    let mut s = Simulation::new(c, &PYNQ_Z1, dram).unwrap();
+    let stats = s.run(&p).unwrap();
+    assert!(stats.acc_overflows > 0, "overflow must be counted");
+}
+
+#[test]
+fn bad_config_rejected_before_running() {
+    let bad = BismoConfig {
+        dk: 48,
+        ..cfg()
+    };
+    match Simulation::new(bad, &PYNQ_Z1, DramImage::new(64)) {
+        Err(SimError::BadConfig(msg)) => assert!(msg.contains("power of two"), "{msg}"),
+        other => panic!("expected BadConfig, got {:?}", other.err()),
+    }
+}
+
+#[test]
+fn error_display_is_informative() {
+    let e = SimError::Fault {
+        stage: "fetch",
+        pc: 3,
+        msg: "boom".into(),
+    };
+    let s = format!("{e}");
+    assert!(s.contains("fetch") && s.contains('3') && s.contains("boom"));
+    let d = SimError::Deadlock {
+        blocked: vec![("execute", 1, "waiting on fetch->execute".into())],
+    };
+    assert!(format!("{d}").contains("deadlock"));
+}

@@ -1,0 +1,154 @@
+//! QNN application pipeline: train → quantize → serve on the overlay,
+//! across precisions and batch execution.
+
+use bismo::arch::instance;
+use bismo::bitmatrix::IntMatrix;
+use bismo::coordinator::{BismoBatchRunner, BismoContext, MatmulOptions, Precision};
+use bismo::qnn::{FloatMlp, QnnMlp, SyntheticDigits};
+use bismo::util::Rng;
+
+fn trained() -> (FloatMlp, SyntheticDigits) {
+    let d = SyntheticDigits::generate(42, 600, 120, 0.15);
+    let mut mlp = FloatMlp::new(7, [784, 64, 64, 10]);
+    for e in 0..3 {
+        mlp.train_epoch(&d.train_x, &d.train_y, 0.02, e);
+    }
+    (mlp, d)
+}
+
+#[test]
+fn precision_sweep_accuracy_and_cycles() {
+    let (mlp, d) = trained();
+    let float_acc = mlp.accuracy(&d.test_x, &d.test_y);
+    assert!(float_acc > 0.8, "float acc {float_acc}");
+
+    let ctx = BismoContext::new(instance(2)).unwrap();
+    let mut prev_cycles = 0u64;
+    let mut accs = Vec::new();
+    for (w, a) in [(2u32, 2u32), (4, 2), (8, 4)] {
+        let q = QnnMlp::from_float(&mlp, w, a, (6, 4));
+        let x = q.quantize_input(&d.test_x[..32]);
+        let (logits, reports) = q
+            .forward_on_overlay(&ctx, &x, MatmulOptions::default())
+            .unwrap();
+        // Bit-exact vs the integer reference at every precision.
+        assert_eq!(logits, q.forward_reference(&x), "w{w}a{a}");
+        let cycles: u64 = reports.iter().map(|r| r.cycles).sum();
+        assert!(
+            cycles > prev_cycles,
+            "higher precision must cost more cycles ({cycles} !> {prev_cycles})"
+        );
+        prev_cycles = cycles;
+        accs.push(QnnMlp::accuracy(&logits, &d.test_y[..32]));
+    }
+    // Highest precision should not be (much) worse than lowest.
+    assert!(
+        accs[2] + 0.10 >= accs[0],
+        "accuracy collapsed with precision: {accs:?}"
+    );
+}
+
+#[test]
+fn bit_skip_helps_low_effective_precision_activations() {
+    let (mlp, d) = trained();
+    // Activations declared 8-bit but quantized to 2 effective bits:
+    // their upper planes are all zero (unsigned side — note that
+    // *signed* low-magnitude weights do NOT yield zero planes, because
+    // two's-complement sign extension fills the high planes).
+    let q3 = QnnMlp::from_float(&mlp, 3, 2, (6, 4));
+    let q8 = QnnMlp {
+        w1: q3.w1.clone(),
+        w2: q3.w2.clone(),
+        w3: q3.w3.clone(),
+        wbits: 3,
+        abits: 8, // declared activation precision: 8 bits
+        shifts: (6, 4),
+    };
+    let ctx = BismoContext::new(instance(2)).unwrap();
+    // Quantize at 2 effective bits (q3's abits), run declared as 8-bit.
+    let x = q3.quantize_input(&d.test_x[..16]);
+    let dense = q8
+        .forward_on_overlay(&ctx, &x, MatmulOptions::default())
+        .unwrap();
+    let skip = q8
+        .forward_on_overlay(
+            &ctx,
+            &x,
+            MatmulOptions {
+                bit_skip: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(dense.0, skip.0, "bit-skip must stay exact");
+    let dc: u64 = dense.1.iter().map(|r| r.cycles).sum();
+    let sc: u64 = skip.1.iter().map(|r| r.cycles).sum();
+    assert!(sc < dc, "bit-skip {sc} should beat dense {dc}");
+}
+
+#[test]
+fn batch_runner_serves_mixed_precision_layers() {
+    let (mlp, d) = trained();
+    let q = QnnMlp::from_float(&mlp, 4, 2, (6, 4));
+    let runner = BismoBatchRunner::new(instance(2), 2).unwrap();
+    // Eight independent layer-1 GEMM jobs (as a serving queue would see).
+    let jobs: Vec<_> = d
+        .test_x
+        .chunks(8)
+        .take(8)
+        .map(|chunk| {
+            let x = q.quantize_input(chunk);
+            (
+                x,
+                q.w1.clone(),
+                Precision {
+                    wbits: 2,
+                    abits: 4,
+                    lsigned: false,
+                    rsigned: true,
+                },
+                MatmulOptions::default(),
+            )
+        })
+        .collect();
+    let outcomes = runner.run_batch(&jobs);
+    for (i, o) in outcomes.iter().enumerate() {
+        let (p, _) = o.result.as_ref().expect("job ok");
+        assert_eq!(*p, jobs[i].0.matmul(&jobs[i].1), "job {i}");
+    }
+    assert!(runner.batch_gops(&outcomes) > 0.0);
+}
+
+#[test]
+fn quantize_input_respects_batch_rows() {
+    let (mlp, d) = trained();
+    let q = QnnMlp::from_float(&mlp, 4, 2, (6, 4));
+    let x = q.quantize_input(&d.test_x[..5]);
+    assert_eq!((x.rows, x.cols), (5, 784));
+    assert!(x.fits(2, false));
+}
+
+#[test]
+fn random_weights_roundtrip_overlay() {
+    // QNN layers with adversarial (random, extreme) integer weights.
+    let ctx = BismoContext::new(instance(1)).unwrap();
+    let mut rng = Rng::new(0x91A);
+    for _ in 0..3 {
+        let x = IntMatrix::random(&mut rng, 8, 784, 2, false);
+        let w = IntMatrix::random(&mut rng, 784, 32, 4, true);
+        let (p, _) = ctx
+            .matmul(
+                &x,
+                &w,
+                Precision {
+                    wbits: 2,
+                    abits: 4,
+                    lsigned: false,
+                    rsigned: true,
+                },
+                MatmulOptions::default(),
+            )
+            .unwrap();
+        assert_eq!(p, x.matmul(&w));
+    }
+}

@@ -1,0 +1,140 @@
+//! Integration: AOT artifacts load, compile and execute through PJRT,
+//! and their numerics agree bit-exactly with the Rust oracles and the
+//! overlay simulator. Requires `make artifacts` (skips cleanly if the
+//! artifact directory has not been built).
+
+use bismo::arch::BismoConfig;
+use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
+use bismo::coordinator::{BismoContext, MatmulOptions, Precision};
+use bismo::qnn::{FloatMlp, QnnMlp, SyntheticDigits};
+use bismo::runtime::Runtime;
+use bismo::util::Rng;
+use std::path::{Path, PathBuf};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn matmul_artifact_matches_reference_and_overlay() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let exe = rt.load("bitserial_matmul_64x256x64_w4a4_ss").expect("load");
+
+    let mut rng = Rng::new(0xA0);
+    let a = IntMatrix::random(&mut rng, 64, 256, 4, true);
+    let b = IntMatrix::random(&mut rng, 256, 64, 4, true);
+    let want = a.matmul(&b);
+
+    // PJRT path (JAX/Pallas artifact).
+    let got = exe.run_i32(&[&a, &b]).expect("execute");
+    assert_eq!(got, want, "PJRT artifact vs i64 reference");
+
+    // Overlay simulator path.
+    let ctx = BismoContext::new(BismoConfig::small()).unwrap();
+    let (sim_out, _) = ctx
+        .matmul(&a, &b, Precision::signed(4, 4), MatmulOptions::default())
+        .unwrap();
+    assert_eq!(sim_out, want, "overlay simulator vs i64 reference");
+}
+
+#[test]
+fn matmul_artifact_caches_compilation() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let e1 = rt.load("bitserial_matmul_8x2048x8_w2a2_uu").expect("load");
+    let e2 = rt.load("bitserial_matmul_8x2048x8_w2a2_uu").expect("load");
+    assert!(std::sync::Arc::ptr_eq(&e1, &e2), "cache must hit");
+}
+
+#[test]
+fn popcount_artifact_matches_bitserial_oracle() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let exe = rt.load("binary_matmul_popcount_64x2048x64").expect("load");
+
+    let mut rng = Rng::new(0xA1);
+    let (m, k, n) = (64usize, 2048usize, 64usize);
+    let a = IntMatrix::random(&mut rng, m, k, 1, false);
+    let b = IntMatrix::random(&mut rng, k, n, 1, false);
+
+    // Pack planes into u32 words, little-endian bit order (the
+    // kernel-side convention of ref.pack_bits_u32).
+    let pack = |mat: &IntMatrix| -> Vec<u32> {
+        let kw = k / 32;
+        let mut out = vec![0u32; mat.rows * kw];
+        for r in 0..mat.rows {
+            for c in 0..k {
+                if mat.get(r, c) == 1 {
+                    out[r * kw + c / 32] |= 1 << (c % 32);
+                }
+            }
+        }
+        out
+    };
+    let la = pack(&a);
+    let rb = pack(&b.transpose());
+    let got = exe
+        .run_u32_pair((&la, [m, k / 32]), (&rb, [n, k / 32]))
+        .expect("execute");
+    assert_eq!(got, a.matmul(&b), "popcount artifact vs reference");
+
+    // Also check against the u64-word CPU DPU oracle.
+    let la64 = BitSerialMatrix::from_int(&a, 1, false);
+    let rb64 = BitSerialMatrix::from_int(&b.transpose(), 1, false);
+    assert_eq!(bismo::baseline::gemm_bitserial(&la64, &rb64), got);
+}
+
+#[test]
+fn qnn_artifact_matches_rust_quantized_model() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let exe = rt.load("qnn_mlp_b16_w4a2").expect("load");
+
+    // Train + quantize the same way the E2E example does.
+    let d = SyntheticDigits::generate(42, 200, 16, 0.15);
+    let mut mlp = FloatMlp::new(7, [784, 256, 256, 10]);
+    mlp.train_epoch(&d.train_x, &d.train_y, 0.02, 0);
+    let q = QnnMlp::from_float(&mlp, 4, 2, (6, 4));
+
+    let x = q.quantize_input(&d.test_x[..16]);
+    let want = q.forward_reference(&x);
+
+    let got = exe.run_i32(&[&x, &q.w1, &q.w2, &q.w3]).expect("execute");
+    assert_eq!(got, want, "JAX QNN artifact vs Rust integer reference");
+
+    // And the full overlay path agrees too.
+    let ctx = BismoContext::new(BismoConfig::small()).unwrap();
+    let (overlay_logits, _) = q
+        .forward_on_overlay(&ctx, &x, MatmulOptions::default())
+        .unwrap();
+    assert_eq!(overlay_logits, want, "overlay QNN vs artifact");
+}
+
+#[test]
+fn missing_artifact_is_clean_error() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let err = match rt.load("does_not_exist") {
+        Ok(_) => panic!("load of unknown artifact must fail"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("not in manifest"), "{err}");
+}
+
+#[test]
+fn wrong_shape_is_clean_error() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let exe = rt.load("bitserial_matmul_64x256x64_w4a4_ss").expect("load");
+    let a = IntMatrix::zeros(8, 8);
+    let b = IntMatrix::zeros(8, 8);
+    let err = exe.run_i32(&[&a, &b]).unwrap_err().to_string();
+    assert!(err.contains("shape"), "{err}");
+}

@@ -1,0 +1,215 @@
+//! Property-level integration: for random shapes, precisions, overlap
+//! modes and every Table IV instance, the scheduler+simulator pipeline
+//! must (1) produce bit-exact results vs the i64 reference, (2) satisfy
+//! timing invariants, and (3) keep resource accounting consistent.
+
+use bismo::arch::{all_instances, instance, BismoConfig};
+use bismo::baseline::binary_ops;
+use bismo::bitmatrix::IntMatrix;
+use bismo::coordinator::{BismoContext, MatmulOptions, Precision};
+use bismo::scheduler::Overlap;
+use bismo::util::{property_sweep, Rng};
+
+fn run_one(
+    ctx: &BismoContext,
+    rng: &mut Rng,
+    m: usize,
+    k: usize,
+    n: usize,
+    w: u32,
+    a: u32,
+    overlap: Overlap,
+    bit_skip: bool,
+) {
+    let (ls, rs) = (rng.chance(0.5), rng.chance(0.5));
+    let am = IntMatrix::random(rng, m, k, w, ls);
+    let bm = IntMatrix::random(rng, k, n, a, rs);
+    let prec = Precision {
+        wbits: w,
+        abits: a,
+        lsigned: ls,
+        rsigned: rs,
+    };
+    let opts = MatmulOptions {
+        overlap,
+        bit_skip,
+        verify: false,
+    };
+    let (p, rep) = ctx
+        .matmul(&am, &bm, prec, opts)
+        .unwrap_or_else(|e| panic!("matmul {m}x{k}x{n} w{w}a{a}: {e}"));
+    assert_eq!(p, am.matmul(&bm), "numerics {m}x{k}x{n} w{w}a{a} {overlap:?}");
+
+    // Timing invariants.
+    let cfg = ctx.config();
+    let s = &rep.stats;
+    assert!(rep.cycles >= s.fetch_busy, "makespan >= fetch busy");
+    assert!(rep.cycles >= s.execute_busy, "makespan >= execute busy");
+    assert!(rep.cycles >= s.result_busy, "makespan >= result busy");
+    assert!(rep.efficiency > 0.0 && rep.efficiency <= 1.0);
+
+    // Work accounting: without bit-skip the DPA processes full tiles:
+    // ops >= the mathematical op count, <= padded tile bound.
+    if !bit_skip {
+        let math_ops = binary_ops(m as u64, k as u64, n as u64, w, a);
+        assert!(s.binary_ops >= math_ops, "{} < {}", s.binary_ops, math_ops);
+        let pad = |x: usize, d: u32| x.div_ceil(d as usize) as u64 * d as u64;
+        let padded = binary_ops(
+            pad(m, cfg.dm),
+            pad(k, cfg.dk),
+            pad(n, cfg.dn),
+            w,
+            a,
+        );
+        assert!(s.binary_ops <= padded, "{} > padded {}", s.binary_ops, padded);
+    }
+
+    // Data movement: result bytes = exactly the result matrix.
+    assert_eq!(s.bytes_written, (m * n * 4) as u64);
+    // Fetched at least one copy of both operands (packed sizes).
+    let lhs_planes = rep.lhs_planes as u64;
+    let rhs_planes = rep.rhs_planes as u64;
+    let wpc = (cfg.dk as u64).div_ceil(64) * 8;
+    let lhs_min = lhs_planes * m as u64 * (k as u64).div_ceil(cfg.dk as u64) * wpc;
+    let rhs_min = rhs_planes * n as u64 * (k as u64).div_ceil(cfg.dk as u64) * wpc;
+    assert!(
+        s.bytes_fetched >= lhs_min + rhs_min,
+        "fetched {} < minimum {}",
+        s.bytes_fetched,
+        lhs_min + rhs_min
+    );
+    assert_eq!(s.commits, (m.div_ceil(cfg.dm as usize) * n.div_ceil(cfg.dn as usize)) as u64);
+}
+
+#[test]
+fn random_jobs_all_instances() {
+    for (id, cfg) in all_instances() {
+        let ctx = BismoContext::new(cfg).unwrap();
+        property_sweep(0x1000 + id as u64, 4, |rng, _| {
+            let m = rng.index(24) + 1;
+            let k = rng.index(1024) + 1;
+            let n = rng.index(24) + 1;
+            let w = rng.index(4) as u32 + 1;
+            let a = rng.index(4) as u32 + 1;
+            let ov = *rng.pick(&[Overlap::Full, Overlap::None]);
+            let skip = rng.chance(0.3);
+            run_one(&ctx, rng, m, k, n, w, a, ov, skip);
+        });
+    }
+}
+
+#[test]
+fn streaming_mode_large_k_all_overlaps() {
+    // Small buffers force Streaming mode with k-slicing.
+    let cfg = BismoConfig {
+        bm: 128,
+        bn: 128,
+        ..BismoConfig::small()
+    };
+    let ctx = BismoContext::new(cfg).unwrap();
+    property_sweep(0x2000, 6, |rng, _| {
+        let k = 64 * (rng.index(200) + 40); // up to ~15k: kc up to 240 > bm/2
+        let w = rng.index(3) as u32 + 1;
+        let a = rng.index(2) as u32 + 1;
+        let ov = *rng.pick(&[Overlap::Full, Overlap::None]);
+        run_one(&ctx, rng, 5, k, 3, w, a, ov, false);
+    });
+}
+
+#[test]
+fn extreme_aspect_ratios() {
+    let ctx = BismoContext::new(instance(1)).unwrap();
+    let mut rng = Rng::new(0x3000);
+    // Matrix-vector (n = 1), vector-matrix (m = 1), tiny k.
+    run_one(&ctx, &mut rng, 1, 512, 64, 2, 2, Overlap::Full, false);
+    run_one(&ctx, &mut rng, 64, 512, 1, 2, 2, Overlap::Full, false);
+    run_one(&ctx, &mut rng, 33, 1, 33, 3, 3, Overlap::Full, false);
+    run_one(&ctx, &mut rng, 1, 1, 1, 8, 8, Overlap::None, false);
+}
+
+#[test]
+fn max_precision_jobs() {
+    let ctx = BismoContext::new(instance(1)).unwrap();
+    let mut rng = Rng::new(0x4000);
+    // Asymmetric extreme precision (no accumulator overflow: products
+    // fit A=32 for k=128).
+    run_one(&ctx, &mut rng, 4, 128, 4, 1, 16, Overlap::Full, false);
+}
+
+#[test]
+fn acc_width_wraps_like_hardware_at_extreme_precision() {
+    // 16x16-bit over k=128 produces |values| up to ~2^37, overflowing
+    // the 32-bit accumulator. The hardware register wraps; the
+    // simulator must reproduce exactly that (i64 result mod 2^32),
+    // and report the overflow events.
+    let ctx = BismoContext::new(instance(1)).unwrap();
+    let mut rng = Rng::new(0x4001);
+    let a = IntMatrix::random(&mut rng, 4, 128, 16, true);
+    let b = IntMatrix::random(&mut rng, 128, 4, 16, true);
+    let (p, rep) = ctx
+        .matmul(
+            &a,
+            &b,
+            Precision::signed(16, 16),
+            MatmulOptions::default(),
+        )
+        .unwrap();
+    let wrapped = IntMatrix::from_fn(4, 4, |r, c| a.matmul(&b).get(r, c) as i32 as i64);
+    assert_eq!(p, wrapped, "simulator must wrap at A=32 like hardware");
+    assert!(rep.stats.acc_overflows > 0, "overflow events must be counted");
+}
+
+#[test]
+fn overlap_full_never_slower() {
+    // For identical inputs, the overlapped schedule must finish no
+    // later than the serialized one (token protocol only adds slack).
+    for (_, cfg) in all_instances().into_iter().take(3) {
+        let ctx = BismoContext::new(cfg).unwrap();
+        property_sweep(0x5000, 4, |rng, _| {
+            let m = rng.index(20) + 1;
+            let k = rng.index(2048) + 1;
+            let n = rng.index(20) + 1;
+            let am = IntMatrix::random(rng, m, k, 2, false);
+            let bm = IntMatrix::random(rng, k, n, 2, false);
+            let mk = |ov| MatmulOptions {
+                overlap: ov,
+                ..Default::default()
+            };
+            let (pf, rf) = ctx
+                .matmul(&am, &bm, Precision::unsigned(2, 2), mk(Overlap::Full))
+                .unwrap();
+            let (pn, rn) = ctx
+                .matmul(&am, &bm, Precision::unsigned(2, 2), mk(Overlap::None))
+                .unwrap();
+            assert_eq!(pf, pn);
+            assert!(
+                rf.cycles <= rn.cycles,
+                "overlap {} > serialized {} for {m}x{k}x{n}",
+                rf.cycles,
+                rn.cycles
+            );
+        });
+    }
+}
+
+#[test]
+fn determinism_across_runs() {
+    let ctx = BismoContext::new(instance(2)).unwrap();
+    let mut rng = Rng::new(0x6000);
+    let am = IntMatrix::random(&mut rng, 16, 1024, 3, true);
+    let bm = IntMatrix::random(&mut rng, 1024, 16, 3, true);
+    let run = || {
+        ctx.matmul(
+            &am,
+            &bm,
+            Precision::signed(3, 3),
+            MatmulOptions::default(),
+        )
+        .unwrap()
+    };
+    let (p1, r1) = run();
+    let (p2, r2) = run();
+    assert_eq!(p1, p2);
+    assert_eq!(r1.cycles, r2.cycles);
+    assert_eq!(r1.stats, r2.stats);
+}
