@@ -19,8 +19,6 @@ use bismo::arch::instance;
 use bismo::coordinator::{BismoContext, MatmulOptions};
 use bismo::qnn::{FloatMlp, QnnMlp, SyntheticDigits};
 use bismo::report::{f, pct, Table};
-use bismo::runtime::Runtime;
-use std::path::Path;
 use std::time::Instant;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -108,16 +106,22 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         wall.elapsed()
     );
 
-    // 5. PJRT cross-check on the first batch.
-    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if artifacts.join("manifest.json").exists() {
-        let rt = Runtime::new(&artifacts)?;
-        let exe = rt.load("qnn_mlp_b16_w4a2")?;
-        let x = q.quantize_input(&data.test_x[..16]);
-        let jax_logits = exe.run_i32(&[&x, &q.w1, &q.w2, &q.w3])?;
-        let (overlay_logits, _) = q.forward_on_overlay(&ctx, &x, MatmulOptions::default())?;
-        assert_eq!(jax_logits, overlay_logits, "JAX artifact vs overlay");
-        println!("PJRT cross-check: JAX/Pallas QNN artifact agrees bit-exactly ✓");
+    // 5. PJRT cross-check on the first batch (needs the `xla` cargo
+    //    feature and `make artifacts`).
+    #[cfg(feature = "xla")]
+    {
+        use bismo::runtime::Runtime;
+        use std::path::Path;
+        let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if artifacts.join("manifest.json").exists() {
+            let rt = Runtime::new(&artifacts)?;
+            let exe = rt.load("qnn_mlp_b16_w4a2")?;
+            let x = q.quantize_input(&data.test_x[..16]);
+            let jax_logits = exe.run_i32(&[&x, &q.w1, &q.w2, &q.w3])?;
+            let (overlay_logits, _) = q.forward_on_overlay(&ctx, &x, MatmulOptions::default())?;
+            assert_eq!(jax_logits, overlay_logits, "JAX artifact vs overlay");
+            println!("PJRT cross-check: JAX/Pallas QNN artifact agrees bit-exactly ✓");
+        }
     }
 
     println!("qnn_inference OK");

@@ -13,9 +13,7 @@ use bismo::arch::instance;
 use bismo::bitmatrix::IntMatrix;
 use bismo::coordinator::{BismoContext, MatmulOptions, Precision};
 use bismo::report::{f, pct};
-use bismo::runtime::Runtime;
 use bismo::util::Rng;
-use std::path::Path;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. An overlay instance (Table IV #1: 8×64×8 DPA on the PYNQ-Z1).
@@ -59,17 +57,25 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         rep.instructions.waits + rep.instructions.signals
     );
 
-    // 4. Cross-check against the AOT-compiled JAX/Pallas artifact.
-    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if artifacts.join("manifest.json").exists() {
-        let rt = Runtime::new(&artifacts)?;
-        let exe = rt.load("bitserial_matmul_64x256x64_w4a4_ss")?;
-        let jax_out = exe.run_i32(&[&a, &b])?;
-        assert_eq!(jax_out, p, "PJRT artifact vs overlay");
-        println!("PJRT cross-check: JAX/Pallas artifact agrees bit-exactly ✓");
-    } else {
-        println!("(run `make artifacts` to enable the PJRT cross-check)");
+    // 4. Cross-check against the AOT-compiled JAX/Pallas artifact
+    //    (needs the `xla` cargo feature and `make artifacts`).
+    #[cfg(feature = "xla")]
+    {
+        use bismo::runtime::Runtime;
+        use std::path::Path;
+        let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if artifacts.join("manifest.json").exists() {
+            let rt = Runtime::new(&artifacts)?;
+            let exe = rt.load("bitserial_matmul_64x256x64_w4a4_ss")?;
+            let jax_out = exe.run_i32(&[&a, &b])?;
+            assert_eq!(jax_out, p, "PJRT artifact vs overlay");
+            println!("PJRT cross-check: JAX/Pallas artifact agrees bit-exactly ✓");
+        } else {
+            println!("(run `make artifacts` to enable the PJRT cross-check)");
+        }
     }
+    #[cfg(not(feature = "xla"))]
+    println!("(build with --features xla for the PJRT cross-check)");
     println!("quickstart OK");
     Ok(())
 }

@@ -1,9 +1,12 @@
 //! §Perf: CPU bit-serial gemm throughput (the Umuroglu & Jahre
-//! baseline) — single-threaded and multi-threaded, plus the i64
-//! reference gemm for context.
+//! baseline) — single-threaded and multi-threaded (the latter on the
+//! shared persistent worker pool), plus the i64 reference gemm and the
+//! tiled kernel engine for context. See perf_kernel for the full
+//! engine comparison.
 
 use bismo::baseline::{binary_ops, gemm_bitserial, gemm_bitserial_parallel};
 use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
+use bismo::kernel::gemm_tiled;
 use bismo::util::bench::{report, BenchTimer};
 use bismo::util::Rng;
 
@@ -31,6 +34,14 @@ fn main() {
         let s = t.run(|| gemm_bitserial_parallel(&la, &rb, threads));
         report(
             &format!("cpu_bitserial_{m}x{k}x{n}_w{w}a{a}_{threads}t"),
+            &s,
+            Some((ops, "binop")),
+        );
+        // The tiled engine on the same operands, for context (the full
+        // sweep lives in perf_kernel / `bismo bench`).
+        let s = t.run(|| gemm_tiled(&la, &rb));
+        report(
+            &format!("tiled_kernel_{m}x{k}x{n}_w{w}a{a}_1t"),
             &s,
             Some((ops, "binop")),
         );

@@ -1,0 +1,92 @@
+//! §Perf: the tiled, plane-fused kernel engine vs the naive baseline —
+//! the headline software hot path. The same comparison (plus the JSON
+//! trajectory) is available as `bismo bench`.
+
+use bismo::baseline::{binary_ops, gemm_bitserial};
+use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
+use bismo::kernel::{gemm_tiled, gemm_tiled_parallel, gemm_tiled_with, KernelConfig};
+use bismo::util::bench::{report, BenchTimer};
+use bismo::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0x7173D);
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4);
+
+    // Precision sweep on a mid-size shape, then the 8-bit headline case
+    // the perf-regression gate tracks.
+    for (m, k, n, w, a) in [
+        (128usize, 1024usize, 128usize, 1u32, 1u32),
+        (128, 1024, 128, 4, 4),
+        (96, 1000, 96, 3, 5), // ragged k, mixed precision
+        (256, 2048, 256, 8, 8),
+    ] {
+        let am = IntMatrix::random(&mut rng, m, k, w, false);
+        let bm = IntMatrix::random(&mut rng, k, n, a, false);
+        let la = BitSerialMatrix::from_int(&am, w, false);
+        let rb = BitSerialMatrix::from_int_transposed(&bm, a, false);
+        assert_eq!(gemm_tiled(&la, &rb), gemm_bitserial(&la, &rb));
+        let ops = binary_ops(m as u64, k as u64, n as u64, w, a) as f64;
+        let t = BenchTimer::heavy();
+
+        let s = t.run(|| gemm_bitserial(&la, &rb));
+        let base_ns = s.median();
+        report(
+            &format!("baseline_{m}x{k}x{n}_w{w}a{a}_1t"),
+            &s,
+            Some((ops, "binop")),
+        );
+        let s = t.run(|| gemm_tiled(&la, &rb));
+        report(
+            &format!("tiled_{m}x{k}x{n}_w{w}a{a}_1t"),
+            &s,
+            Some((ops, "binop")),
+        );
+        println!(
+            "  -> tiled speedup {:.2}x over baseline (1 thread)",
+            base_ns / s.median()
+        );
+        let s = t.run(|| gemm_tiled_parallel(&la, &rb, threads));
+        report(
+            &format!("tiled_{m}x{k}x{n}_w{w}a{a}_{threads}t"),
+            &s,
+            Some((ops, "binop")),
+        );
+    }
+
+    // Sparse operands: zero planes cost the baseline full price and the
+    // engine (ideally) nothing.
+    let m = 128;
+    let k = 2048;
+    let n = 128;
+    let am = IntMatrix::from_fn(m, k, |r, c| (((r + c) % 4) as i64) * 2); // LSB plane empty
+    let bm = IntMatrix::from_fn(k, n, |r, c| ((r * c) % 2) as i64); // only LSB populated
+    let la = BitSerialMatrix::from_int(&am, 6, false);
+    let rb = BitSerialMatrix::from_int_transposed(&bm, 6, false);
+    assert_eq!(gemm_tiled(&la, &rb), gemm_bitserial(&la, &rb));
+    let t = BenchTimer::heavy();
+    let s = t.run(|| gemm_bitserial(&la, &rb));
+    let base_ns = s.median();
+    report("baseline_sparse_128x2048x128_w6a6", &s, None);
+    let s = t.run(|| gemm_tiled(&la, &rb));
+    report("tiled_sparse_128x2048x128_w6a6", &s, None);
+    println!(
+        "  -> zero-plane skip speedup {:.2}x (w6a6 with 4+5 empty planes)",
+        base_ns / s.median()
+    );
+
+    // Tile-size ablation on the headline shape.
+    let am = IntMatrix::random(&mut rng, 256, 2048, 8, false);
+    let bm = IntMatrix::random(&mut rng, 2048, 256, 8, false);
+    let la = BitSerialMatrix::from_int(&am, 8, false);
+    let rb = BitSerialMatrix::from_int_transposed(&bm, 8, false);
+    for (tm, tn) in [(4usize, 4usize), (8, 8), (16, 16), (8, 32)] {
+        let cfg = KernelConfig {
+            tile_m: tm,
+            tile_n: tn,
+        };
+        let s = t.run(|| gemm_tiled_with(&la, &rb, &cfg, None));
+        report(&format!("tiled_256x2048x256_w8a8_tile{tm}x{tn}"), &s, None);
+    }
+}

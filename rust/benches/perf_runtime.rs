@@ -1,14 +1,21 @@
 //! §Perf: PJRT runtime — artifact compile time (one-off) and execute
 //! latency/throughput on the request path (Python is never involved).
+//! Requires the `xla` cargo feature (PJRT plugin + xla/anyhow crates).
 
-use bismo::bitmatrix::IntMatrix;
-use bismo::runtime::Runtime;
-use bismo::util::bench::{fmt_ns, report, BenchTimer};
-use bismo::util::Rng;
-use std::path::Path;
-use std::time::Instant;
-
+#[cfg(not(feature = "xla"))]
 fn main() {
+    println!("skipping perf_runtime: build with --features xla");
+}
+
+#[cfg(feature = "xla")]
+fn main() {
+    use bismo::bitmatrix::IntMatrix;
+    use bismo::runtime::Runtime;
+    use bismo::util::bench::{fmt_ns, report, BenchTimer};
+    use bismo::util::Rng;
+    use std::path::Path;
+    use std::time::Instant;
+
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         println!("skipping perf_runtime: run `make artifacts` first");

@@ -4,7 +4,7 @@
 
 use bismo::arch::instance;
 use bismo::bitmatrix::IntMatrix;
-use bismo::coordinator::{BismoContext, MatmulOptions, Precision};
+use bismo::coordinator::{BismoBatchRunner, BismoContext, MatmulOptions, Precision};
 use bismo::util::bench::{report, BenchTimer};
 use bismo::util::Rng;
 
@@ -38,4 +38,17 @@ fn main() {
             .cycles
     });
     report("e2e_matmul_64x4096x64_w4a2", &s, None);
+
+    // Batch drain on the persistent worker pool: context validated
+    // once, no per-batch thread spawning.
+    let runner = BismoBatchRunner::new(cfg, 4).expect("runner");
+    let jobs: Vec<_> = (0..16)
+        .map(|_| {
+            let a = IntMatrix::random(&mut rng, 16, 512, 2, false);
+            let b = IntMatrix::random(&mut rng, 512, 16, 2, false);
+            (a, b, Precision::unsigned(2, 2), MatmulOptions::default())
+        })
+        .collect();
+    let s = t.run(|| runner.run_batch(&jobs));
+    report("batch_16x(16x512x16)_w2a2_4workers", &s, Some((16.0, "job")));
 }

@@ -1,6 +1,13 @@
 //! Word-parallel bit-serial GEMM kernels (Algorithm 1 on u64 words).
+//!
+//! [`gemm_bitserial`] is the crate's bit-exact reference oracle — keep
+//! it simple and obviously correct. The fast path lives in
+//! [`crate::kernel`] (tiled, plane-fused, zero-plane-skipping) and is
+//! property-tested against this oracle.
 
 use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
+use crate::kernel::WorkerPool;
+use std::sync::Mutex;
 
 /// Bit-serial GEMM: `P = L · Rᵀ` where `L` is `m×k` and `r_t` is the
 /// *transposed* right-hand side (`n×k`), both bit-plane decomposed.
@@ -21,8 +28,9 @@ pub fn gemm_bitserial(l: &BitSerialMatrix, r_t: &BitSerialMatrix) -> IntMatrix {
     out
 }
 
-/// Multi-threaded variant: splits output rows across `threads` workers
-/// (std::thread scoped; no pool, spawn cost is negligible vs the work).
+/// Multi-threaded variant: splits output rows across up to `threads`
+/// lanes of the shared persistent [`WorkerPool`] (no per-call thread
+/// spawning).
 pub fn gemm_bitserial_parallel(
     l: &BitSerialMatrix,
     r_t: &BitSerialMatrix,
@@ -31,20 +39,23 @@ pub fn gemm_bitserial_parallel(
     assert_eq!(l.cols, r_t.cols, "k mismatch");
     let m = l.rows;
     let n = r_t.rows;
-    let threads = threads.max(1).min(m.max(1));
+    if m == 0 || n == 0 {
+        return IntMatrix::zeros(m, n);
+    }
+    let threads = threads.max(1).min(m);
     let mut data = vec![0i64; m * n];
     let rows_per = (m + threads - 1) / threads;
-    std::thread::scope(|scope| {
-        for (t, chunk) in data.chunks_mut(rows_per * n).enumerate() {
-            let lo = t * rows_per;
-            let hi = (lo + rows_per).min(m);
-            scope.spawn(move || {
-                gemm_rows(l, r_t, lo..hi, &mut |r, c, v| {
-                    chunk[(r - lo) * n + c] = v;
-                });
-            });
-        }
+    let chunks: Vec<Mutex<&mut [i64]>> = data.chunks_mut(rows_per * n).map(Mutex::new).collect();
+    WorkerPool::global().run_limited(chunks.len(), threads, &|t| {
+        let lo = t * rows_per;
+        let hi = (lo + rows_per).min(m);
+        let mut guard = chunks[t].lock().unwrap();
+        let chunk: &mut [i64] = &mut guard;
+        gemm_rows(l, r_t, lo..hi, &mut |r, c, v| {
+            chunk[(r - lo) * n + c] = v;
+        });
     });
+    drop(chunks);
     IntMatrix::from_slice(m, n, &data)
 }
 

@@ -184,21 +184,40 @@ impl BitSerialMatrix {
         plane_sign(i, self.bits, self.signed) * (1i64 << i)
     }
 
+    /// The contiguous packed slice of one whole plane: all rows,
+    /// row-major (`rows · words_per_row` words). The tiled kernel engine
+    /// packs its tiles from this view; padding bits above `cols` are
+    /// always zero.
+    #[inline]
+    pub fn plane_slice(&self, plane: u32) -> &[u64] {
+        let len = self.rows * self.words_per_row;
+        let base = plane as usize * len;
+        &self.data[base..base + len]
+    }
+
     /// Fraction of set bits in plane `i` (used by the sparse bit-skip
-    /// scheduler extension).
+    /// scheduler extension). Single pass over the contiguous plane
+    /// slice.
     pub fn plane_density(&self, i: u32) -> f64 {
-        let mut ones = 0u64;
-        for r in 0..self.rows {
-            for &w in self.plane_row(i, r) {
-                ones += w.count_ones() as u64;
-            }
-        }
+        let ones: u64 = self
+            .plane_slice(i)
+            .iter()
+            .map(|w| w.count_ones() as u64)
+            .sum();
         ones as f64 / (self.rows * self.cols).max(1) as f64
     }
 
-    /// Is plane `i` entirely zero? (bit-skip fast path)
+    /// Is plane `i` entirely zero? (bit-skip fast path) Single pass over
+    /// the contiguous plane slice.
     pub fn plane_is_zero(&self, i: u32) -> bool {
-        (0..self.rows).all(|r| self.plane_row(i, r).iter().all(|&w| w == 0))
+        self.plane_slice(i).iter().all(|&w| w == 0)
+    }
+
+    /// Indices of planes that are not entirely zero — the shared
+    /// zero-plane filter used by both the scheduler's bit-skip extension
+    /// and the tiled software kernel.
+    pub fn nonzero_planes(&self) -> Vec<u32> {
+        (0..self.bits).filter(|&i| !self.plane_is_zero(i)).collect()
     }
 
     /// Binary dot product between a packed row of `self` and a packed row
@@ -335,6 +354,49 @@ mod tests {
         assert_eq!(bs.plane_density(1), 0.0);
         assert!(bs.plane_is_zero(2));
         assert!(!bs.plane_is_zero(0));
+        assert_eq!(bs.nonzero_planes(), vec![0]);
+    }
+
+    #[test]
+    fn plane_slice_is_rows_concatenated() {
+        property_sweep(0x51C, 15, |rng, _| {
+            let rows = rng.index(9) + 1;
+            let cols = rng.index(150) + 1;
+            let bits = rng.index(6) as u32 + 1;
+            let m = IntMatrix::random(rng, rows, cols, bits, false);
+            let bs = BitSerialMatrix::from_int(&m, bits, false);
+            for i in 0..bits {
+                let slice = bs.plane_slice(i);
+                assert_eq!(slice.len(), rows * bs.words_per_row);
+                for r in 0..rows {
+                    assert_eq!(
+                        &slice[r * bs.words_per_row..(r + 1) * bs.words_per_row],
+                        bs.plane_row(i, r)
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn nonzero_planes_match_per_plane_checks() {
+        property_sweep(0x2E0, 15, |rng, _| {
+            let rows = rng.index(7) + 1;
+            let cols = rng.index(100) + 1;
+            let bits = rng.index(8) as u32 + 1;
+            let signed = rng.chance(0.5);
+            // Bias toward sparse bit patterns so some planes are empty.
+            let m = IntMatrix::from_fn(rows, cols, |_, _| {
+                if rng.chance(0.6) {
+                    0
+                } else {
+                    rng.operand(bits, signed) & 0b11
+                }
+            });
+            let bs = BitSerialMatrix::from_int(&m, bits.max(3), signed);
+            let expect: Vec<u32> = (0..bs.bits).filter(|&i| !bs.plane_is_zero(i)).collect();
+            assert_eq!(bs.nonzero_planes(), expect);
+        });
     }
 
     #[test]

@@ -1,16 +1,20 @@
 //! Batched job execution: the request-loop topology.
 //!
 //! A deployment of BISMO serves many independent GEMM jobs (e.g. the
-//! layers of many concurrent QNN inferences). [`BismoBatchRunner`] owns
-//! a pool of worker threads, each standing for one overlay instance,
-//! draining a shared queue — the same leader/worker shape a PCIe
-//! multi-FPGA host process would use, with the simulator in place of
-//! the device.
+//! layers of many concurrent QNN inferences). [`BismoBatchRunner`]
+//! models `workers` overlay instances draining a shared queue — the
+//! same leader/worker shape a PCIe multi-FPGA host process would use,
+//! with the simulator in place of the device.
+//!
+//! The runner validates its [`BismoContext`] once at construction and
+//! shares it across jobs (`matmul` is stateless per call), and drains
+//! batches on the persistent process-wide [`WorkerPool`] instead of
+//! spawning scoped threads per batch.
 
 use super::context::{BismoContext, MatmulOptions, Precision, RunReport};
 use crate::arch::BismoConfig;
 use crate::bitmatrix::IntMatrix;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::kernel::WorkerPool;
 use std::sync::Mutex;
 
 /// Result of one job in a batch.
@@ -19,54 +23,48 @@ pub struct BatchOutcome {
     pub result: Result<(IntMatrix, RunReport), String>,
 }
 
-/// Fixed pool of simulated overlay workers.
+/// Fixed set of simulated overlay workers sharing one validated
+/// context and the global worker pool.
 pub struct BismoBatchRunner {
-    cfg: BismoConfig,
+    ctx: BismoContext,
     workers: usize,
 }
 
 impl BismoBatchRunner {
     pub fn new(cfg: BismoConfig, workers: usize) -> Result<Self, String> {
-        // Validate once up front (each worker builds its own context).
-        BismoContext::new(cfg)?;
+        // Validate once up front; every job reuses this context instead
+        // of rebuilding (and revalidating) one per worker per batch.
         Ok(BismoBatchRunner {
-            cfg,
+            ctx: BismoContext::new(cfg)?,
             workers: workers.max(1),
         })
     }
 
-    /// Run all jobs, preserving input order in the output.
+    /// The shared, pre-validated overlay context.
+    pub fn context(&self) -> &BismoContext {
+        &self.ctx
+    }
+
+    /// Configured number of overlay instances (the concurrency cap).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run all jobs, preserving input order in the output. Jobs drain
+    /// from a shared index queue across up to `workers` pool lanes.
     pub fn run_batch(
         &self,
         jobs: &[(IntMatrix, IntMatrix, Precision, MatmulOptions)],
     ) -> Vec<BatchOutcome> {
-        let next = AtomicUsize::new(0);
-        let out: Mutex<Vec<Option<BatchOutcome>>> =
-            Mutex::new((0..jobs.len()).map(|_| None).collect());
-        std::thread::scope(|scope| {
-            for _ in 0..self.workers.min(jobs.len().max(1)) {
-                scope.spawn(|| {
-                    // One overlay per worker.
-                    let ctx = match BismoContext::new(self.cfg) {
-                        Ok(c) => c,
-                        Err(_) => return, // validated in new(); unreachable
-                    };
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= jobs.len() {
-                            break;
-                        }
-                        let (a, b, prec, opts) = &jobs[i];
-                        let result = ctx.matmul(a, b, *prec, *opts);
-                        out.lock().unwrap()[i] = Some(BatchOutcome { index: i, result });
-                    }
-                });
-            }
+        let out: Vec<Mutex<Option<BatchOutcome>>> =
+            (0..jobs.len()).map(|_| Mutex::new(None)).collect();
+        WorkerPool::global().run_limited(jobs.len(), self.workers, &|i| {
+            let (a, b, prec, opts) = &jobs[i];
+            let result = self.ctx.matmul(a, b, *prec, *opts);
+            *out[i].lock().unwrap() = Some(BatchOutcome { index: i, result });
         });
-        out.into_inner()
-            .unwrap()
-            .into_iter()
-            .map(|o| o.expect("all jobs completed"))
+        out.into_iter()
+            .map(|slot| slot.into_inner().unwrap().expect("all jobs completed"))
             .collect()
     }
 
@@ -114,6 +112,60 @@ mod tests {
             assert_eq!(*p, jobs[i].0.matmul(&jobs[i].1), "job {i}");
         }
         assert!(runner.batch_gops(&outcomes) > 0.0);
+    }
+
+    #[test]
+    fn pooled_runner_matches_per_job_serial_results() {
+        // The pooled drain must agree job-for-job (results AND reports)
+        // with running each job alone on a fresh context.
+        let runner = BismoBatchRunner::new(BismoConfig::small(), 3).unwrap();
+        let serial_ctx = BismoContext::new(BismoConfig::small()).unwrap();
+        let mut rng = Rng::new(0x0B7);
+        let jobs: Vec<_> = (0..8)
+            .map(|j| {
+                let k = rng.index(200) + 1;
+                let a = IntMatrix::random(&mut rng, 3 + j % 3, k, 3, true);
+                let b = IntMatrix::random(&mut rng, k, 2 + j % 4, 2, false);
+                let prec = Precision {
+                    wbits: 3,
+                    abits: 2,
+                    lsigned: true,
+                    rsigned: false,
+                };
+                (a, b, prec, MatmulOptions::default())
+            })
+            .collect();
+        let outcomes = runner.run_batch(&jobs);
+        for (i, o) in outcomes.iter().enumerate() {
+            assert_eq!(o.index, i, "ordering preserved");
+            let (p, rep) = o.result.as_ref().unwrap();
+            let (sp, srep) = serial_ctx
+                .matmul(&jobs[i].0, &jobs[i].1, jobs[i].2, jobs[i].3)
+                .unwrap();
+            assert_eq!(*p, sp, "job {i} result");
+            assert_eq!(rep.cycles, srep.cycles, "job {i} cycles deterministic");
+        }
+    }
+
+    #[test]
+    fn runner_is_reusable_across_batches() {
+        let runner = BismoBatchRunner::new(BismoConfig::small(), 2).unwrap();
+        let mut rng = Rng::new(0x2E5E);
+        for _ in 0..3 {
+            let jobs: Vec<_> = (0..4)
+                .map(|_| {
+                    let a = IntMatrix::random(&mut rng, 2, 64, 1, false);
+                    let b = IntMatrix::random(&mut rng, 64, 2, 1, false);
+                    (a, b, Precision::unsigned(1, 1), MatmulOptions::default())
+                })
+                .collect();
+            let outcomes = runner.run_batch(&jobs);
+            assert_eq!(outcomes.len(), 4);
+            for (i, o) in outcomes.iter().enumerate() {
+                assert_eq!(o.index, i);
+                assert!(o.result.is_ok());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,73 @@
+//! The software kernel engine: a tiled, plane-fused bit-serial GEMM
+//! plus the persistent worker pool the parallel paths share.
+//!
+//! [`crate::baseline::gemm_bitserial`] remains the bit-exact reference
+//! oracle; this module is the *fast* software implementation of the
+//! same contract:
+//!
+//! * [`gemm_tiled`] / [`gemm_tiled_parallel`] — cache-blocked,
+//!   zero-plane-skipping GEMM over packed plane rows (see [`engine`]).
+//! * [`WorkerPool`] — persistent work-claiming thread pool reused by
+//!   the engine, [`crate::baseline::gemm_bitserial_parallel`] and
+//!   [`crate::coordinator::BismoBatchRunner`] (see [`pool`]).
+//! * [`popcount_and`] — the unrolled AND+popcount word-strip primitive,
+//!   also used by the simulator's execute stage.
+
+pub mod engine;
+pub mod pool;
+
+pub use engine::{gemm_tiled, gemm_tiled_parallel, gemm_tiled_with, KernelConfig};
+pub use pool::WorkerPool;
+
+/// Binary dot product of two equal-length packed words slices:
+/// `Σ popcount(a[i] & b[i])`. Unrolled over 4-word strips with
+/// independent counter chains so the popcounts pipeline instead of
+/// serializing on one accumulator.
+#[inline]
+pub fn popcount_and(a: &[u64], b: &[u64]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut c0 = 0u64;
+    let mut c1 = 0u64;
+    let mut c2 = 0u64;
+    let mut c3 = 0u64;
+    let mut astrips = a.chunks_exact(4);
+    let mut bstrips = b.chunks_exact(4);
+    for (wa, wb) in (&mut astrips).zip(&mut bstrips) {
+        c0 += (wa[0] & wb[0]).count_ones() as u64;
+        c1 += (wa[1] & wb[1]).count_ones() as u64;
+        c2 += (wa[2] & wb[2]).count_ones() as u64;
+        c3 += (wa[3] & wb[3]).count_ones() as u64;
+    }
+    for (&x, &y) in astrips.remainder().iter().zip(bstrips.remainder()) {
+        c0 += (x & y).count_ones() as u64;
+    }
+    c0 + c1 + c2 + c3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{property_sweep, Rng};
+
+    #[test]
+    fn popcount_and_matches_naive() {
+        property_sweep(0xA17D0, 25, |rng, _| {
+            let len = rng.index(40); // covers 0, <4 and non-multiple-of-4
+            let a: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let naive: u64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| (x & y).count_ones() as u64)
+                .sum();
+            assert_eq!(popcount_and(&a, &b), naive, "len={len}");
+        });
+    }
+
+    #[test]
+    fn popcount_and_extremes() {
+        assert_eq!(popcount_and(&[], &[]), 0);
+        assert_eq!(popcount_and(&[u64::MAX; 7], &[u64::MAX; 7]), 7 * 64);
+        assert_eq!(popcount_and(&[u64::MAX; 5], &[0; 5]), 0);
+    }
+}

@@ -1,0 +1,412 @@
+//! Persistent worker pool with atomic work-claiming ("work-stealing"
+//! over a shared index counter).
+//!
+//! The pool exists so the hot software paths — the tiled GEMM engine,
+//! [`crate::baseline::gemm_bitserial_parallel`] and
+//! [`crate::coordinator::BismoBatchRunner`] — stop paying a
+//! `thread::spawn` + stack setup per call. Workers are spawned once
+//! (lazily for the process-wide [`WorkerPool::global`] pool) and park
+//! on a condvar between jobs.
+//!
+//! A job is a borrowed `Fn(usize)` closure plus a task count. Every
+//! participant — the submitting thread included — claims task indices
+//! from a shared atomic counter until the range is exhausted, so load
+//! balances dynamically across workers regardless of per-task cost
+//! (the work-stealing property that matters for row tiles of uneven
+//! density).
+//!
+//! ## Safety
+//!
+//! The closure is lifetime-erased into a raw pointer so parked workers
+//! can reach it. The invariant that makes this sound: a worker only
+//! dereferences the pointer for a claimed index `i < tasks`, every
+//! claimed index decrements `pending` exactly once *after* the call
+//! returns, and [`WorkerPool::run_limited`] does not return before
+//! `pending == 0`. Task closures run under `catch_unwind`, so a
+//! panicking task cannot skip its `pending` decrement or unwind the
+//! submitting frame early — the first panic payload is re-raised on
+//! the submitting thread once the job has fully retired, preserving
+//! scoped-thread panic semantics. Therefore no dereference can happen
+//! after the submitting frame (which owns the closure and its
+//! borrows) is gone.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One in-flight job. `func` points into the submitting thread's stack;
+/// see the module-level safety note.
+struct Job {
+    func: *const (dyn Fn(usize) + Sync),
+    /// Next unclaimed task index.
+    next: AtomicUsize,
+    /// Tasks not yet completed.
+    pending: AtomicUsize,
+    tasks: usize,
+    /// Helper workers that joined so far (the caller is not counted).
+    helpers: AtomicUsize,
+    /// Maximum helper workers allowed (`limit - 1`; the caller always
+    /// takes one lane).
+    max_helpers: usize,
+    /// First panic payload from a task closure. Tasks run under
+    /// `catch_unwind` so a panicking task can neither strand the
+    /// submitter (un-decremented `pending`) nor let the submitting
+    /// frame unwind while other participants still hold `func`; the
+    /// payload is re-raised on the submitting thread once the job has
+    /// fully retired.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+// The raw closure pointer is only dereferenced under the protocol above;
+// all other fields are atomics / plain data.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct State {
+    job: Option<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signalled when a job is posted or retired (workers wait here).
+    work: Condvar,
+    /// Signalled when a job's last task completes (the caller waits here).
+    done: Condvar,
+}
+
+/// A fixed set of persistent worker threads draining borrowed jobs.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    lanes: usize,
+}
+
+impl WorkerPool {
+    /// A pool with `lanes`-way parallelism: `lanes - 1` helper threads
+    /// plus the submitting thread, which always participates.
+    pub fn new(lanes: usize) -> Self {
+        let lanes = lanes.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..lanes - 1)
+            .map(|_| {
+                let sh = shared.clone();
+                std::thread::spawn(move || Self::worker_loop(&sh))
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            handles,
+            lanes,
+        }
+    }
+
+    /// The process-wide pool, sized to the machine, created on first
+    /// use. This is what the GEMM engine, the baseline parallel path
+    /// and the batch runner share.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            WorkerPool::new(
+                std::thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(4),
+            )
+        })
+    }
+
+    /// Parallelism of this pool (helper threads + the caller).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Run `f(0..tasks)` across the pool; returns when every task has
+    /// completed. Tasks must be independent (they run concurrently, in
+    /// no particular order).
+    pub fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.run_limited(tasks, usize::MAX, f);
+    }
+
+    /// Like [`WorkerPool::run`] but with at most `limit` concurrent
+    /// executors (callers that model a fixed number of overlay
+    /// instances use this). The pool's persistent workers serve one
+    /// submitter at a time: if it is already busy — another thread's
+    /// job, or the nested case where a pool task itself submits — the
+    /// job falls back to one-off scoped threads, so a second
+    /// concurrent submitter keeps its parallelism and the pool stays
+    /// deadlock-free by construction.
+    pub fn run_limited(&self, tasks: usize, limit: usize, f: &(dyn Fn(usize) + Sync)) {
+        if tasks == 0 {
+            return;
+        }
+        let limit = limit.max(1);
+        if tasks == 1 || limit == 1 || self.lanes == 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        let job = Arc::new(Job {
+            func: unsafe {
+                std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(f)
+            },
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(tasks),
+            tasks,
+            helpers: AtomicUsize::new(0),
+            max_helpers: limit - 1,
+            panic: Mutex::new(None),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.job.is_some() {
+                // Busy (or nested submission from a pool task): rather
+                // than queueing — which could deadlock the nested case
+                // — run on freshly scoped threads so this submitter
+                // still gets its parallelism.
+                drop(st);
+                Self::run_scoped(tasks, limit.min(self.lanes), f);
+                return;
+            }
+            st.job = Some(job.clone());
+            self.shared.work.notify_all();
+        }
+        // The caller is a full participant.
+        Self::execute(&self.shared, &job);
+        // Wait for helper stragglers still finishing claimed tasks.
+        let mut st = self.shared.state.lock().unwrap();
+        while job.pending.load(Ordering::SeqCst) != 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        if st
+            .job
+            .as_ref()
+            .is_some_and(|active| Arc::ptr_eq(active, &job))
+        {
+            st.job = None;
+            self.shared.work.notify_all();
+        }
+        drop(st);
+        // Every task has completed and the job is retired, so no
+        // participant can reach `func` anymore: re-raising a task panic
+        // here is safe and gives the caller scoped-thread semantics.
+        if let Some(payload) = job.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Fallback when the persistent workers are taken: the same
+    /// work-claiming drain over one-off scoped threads (the caller is
+    /// one of the `workers` lanes). Panics propagate on scope join,
+    /// matching the pooled path's semantics.
+    fn run_scoped(tasks: usize, workers: usize, f: &(dyn Fn(usize) + Sync)) {
+        let next = AtomicUsize::new(0);
+        let drain = || loop {
+            let i = next.fetch_add(1, Ordering::SeqCst);
+            if i >= tasks {
+                break;
+            }
+            f(i);
+        };
+        std::thread::scope(|scope| {
+            for _ in 1..workers.max(1) {
+                scope.spawn(drain);
+            }
+            drain();
+        });
+    }
+
+    /// Claim-and-run loop shared by the caller and the helpers.
+    fn execute(shared: &Shared, job: &Arc<Job>) {
+        loop {
+            let i = job.next.fetch_add(1, Ordering::SeqCst);
+            if i >= job.tasks {
+                return;
+            }
+            // SAFETY: a successful claim (`i < tasks`) proves this task
+            // has not completed, so `pending > 0` and the submitting
+            // frame that owns the closure is still blocked in
+            // `run_limited`. A retired job always has `next >= tasks`,
+            // so a stale worker can never reach this dereference.
+            let f = unsafe { &*job.func };
+            // Panics must not escape: an unwinding participant would
+            // skip the `pending` decrement (stranding the submitter)
+            // or — on the submitting thread itself — free the closure
+            // while helpers still hold `func`. Capture the first
+            // payload; `run_limited` re-raises it after retirement.
+            if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))) {
+                let mut slot = job.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            if job.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+                // Last task: retire the job and wake the caller plus any
+                // workers parked on it.
+                let mut st = shared.state.lock().unwrap();
+                if st
+                    .job
+                    .as_ref()
+                    .is_some_and(|active| Arc::ptr_eq(active, job))
+                {
+                    st.job = None;
+                }
+                shared.done.notify_all();
+                shared.work.notify_all();
+            }
+        }
+    }
+
+    fn worker_loop(shared: &Shared) {
+        loop {
+            let job = {
+                let mut st = shared.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    if let Some(j) = st.job.clone() {
+                        break j;
+                    }
+                    st = shared.work.wait(st).unwrap();
+                }
+            };
+            if job.helpers.fetch_add(1, Ordering::SeqCst) < job.max_helpers {
+                Self::execute(shared, &job);
+            }
+            // Park until this job is retired (or shutdown) so an
+            // exhausted or over-subscribed worker does not spin on it.
+            let mut st = shared.state.lock().unwrap();
+            while !st.shutdown
+                && st
+                    .job
+                    .as_ref()
+                    .is_some_and(|active| Arc::ptr_eq(active, &job))
+            {
+                st = shared.work.wait(st).unwrap();
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for tasks in [1usize, 2, 7, 64, 257] {
+            let hits: Vec<AtomicU64> = (0..tasks).map(|_| AtomicU64::new(0)).collect();
+            pool.run(tasks, &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "task {i} of {tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_jobs() {
+        let pool = WorkerPool::new(3);
+        let total = AtomicU64::new(0);
+        for round in 0..200u64 {
+            pool.run(5, &|i| {
+                total.fetch_add(round + i as u64, Ordering::SeqCst);
+            });
+        }
+        // Σ_round (5·round + 0+1+2+3+4)
+        let expect: u64 = (0..200u64).map(|r| 5 * r + 10).sum();
+        assert_eq!(total.load(Ordering::SeqCst), expect);
+    }
+
+    #[test]
+    fn limit_bounds_concurrency() {
+        let pool = WorkerPool::new(8);
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        pool.run_limited(32, 2, &|_| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2, "peak {}", peak.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn single_lane_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let sum = AtomicU64::new(0);
+        pool.run(10, &|i| {
+            sum.fetch_add(i as u64, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 45);
+    }
+
+    #[test]
+    fn nested_submission_falls_back_inline() {
+        let pool = WorkerPool::new(4);
+        let count = AtomicU64::new(0);
+        pool.run(4, &|_| {
+            // A pool task submitting to the same pool must not deadlock.
+            pool.run(3, &|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 3 {
+                    panic!("boom in task");
+                }
+            });
+        }));
+        let payload = caught.expect_err("panic must propagate to the submitter");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "boom in task");
+        // The pool must stay fully usable afterwards.
+        let sum = AtomicU64::new(0);
+        pool.run(10, &|i| {
+            sum.fetch_add(i as u64, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 45);
+    }
+
+    #[test]
+    fn global_pool_exists_and_works() {
+        let pool = WorkerPool::global();
+        assert!(pool.lanes() >= 1);
+        let sum = AtomicU64::new(0);
+        pool.run(100, &|i| {
+            sum.fetch_add(i as u64, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 4950);
+    }
+}

@@ -27,8 +27,13 @@
 //! * [`power`] — calibrated power model reproducing Table V.
 //! * [`baseline`] — CPU bit-serial gemm (Umuroglu & Jahre) used both as a
 //!   Table VI comparison point and as a correctness oracle.
+//! * [`kernel`] — the fast software path: tiled, plane-fused,
+//!   zero-plane-skipping bit-serial GEMM engine plus the persistent
+//!   worker pool shared by every parallel path in the crate.
 //! * [`runtime`] — PJRT CPU client: loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust.
+//!   Gated behind the `xla` cargo feature (needs the PJRT plugin and
+//!   the `xla`/`anyhow` crates, absent from the offline registry).
 //! * [`coordinator`] — the public API tying everything together.
 //! * [`qnn`] — quantized-neural-network layers running on the overlay.
 //! * [`report`] — table/figure formatting used by the benchmark harness.
@@ -40,9 +45,11 @@ pub mod bitmatrix;
 pub mod coordinator;
 pub mod costmodel;
 pub mod isa;
+pub mod kernel;
 pub mod power;
 pub mod qnn;
 pub mod report;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;

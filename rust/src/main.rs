@@ -7,6 +7,8 @@
 //! bismo simulate [--instance N] [--m M --k K --n N --wbits W --abits A]
 //!                [--signed] [--no-overlap] [--bit-skip]
 //! bismo schedule [--instance N] [--m M --k K --n N ...]   dump queues
+//! bismo bench [--quick] [--out PATH] [--threads N]   CPU kernel suite
+//!                                           -> BENCH_gemm.json
 //! bismo costmodel [--instance N]            LUT/BRAM prediction
 //! bismo synth [--dk N]                      DPU virtual synthesis
 //! bismo power                               Table V power model
@@ -34,7 +36,7 @@ fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
         if let Some(name) = a.strip_prefix("--") {
             let is_bool = matches!(
                 name,
-                "signed" | "no-overlap" | "bit-skip" | "verify" | "help"
+                "signed" | "no-overlap" | "bit-skip" | "verify" | "help" | "quick"
             );
             if is_bool {
                 flags.insert(name.to_string(), "true".to_string());
@@ -184,6 +186,193 @@ fn cmd_schedule(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// One benchmark case of the GEMM suite.
+struct BenchCase {
+    m: usize,
+    k: usize,
+    n: usize,
+    wbits: u32,
+    abits: u32,
+    signed: bool,
+}
+
+impl BenchCase {
+    fn name(&self) -> String {
+        format!(
+            "{}x{}x{}_w{}a{}_{}",
+            self.m,
+            self.k,
+            self.n,
+            self.wbits,
+            self.abits,
+            if self.signed { "s" } else { "u" }
+        )
+    }
+}
+
+/// `bismo bench`: the CPU bit-serial GEMM suite — naive baseline vs the
+/// tiled kernel engine, across precisions, signedness and ragged
+/// shapes. Verifies bit-exactness on every case and writes the
+/// machine-readable trajectory to `BENCH_gemm.json`.
+fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
+    use bismo::baseline::{binary_ops, gemm_bitserial};
+    use bismo::bitmatrix::BitSerialMatrix;
+    use bismo::kernel::{gemm_tiled, gemm_tiled_parallel};
+    use bismo::util::bench::{report, BenchTimer};
+    use bismo::util::Json;
+    use std::collections::BTreeMap;
+
+    let quick = flags.contains_key("quick");
+    let out_path = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "BENCH_gemm.json".to_string());
+    let default_threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4);
+    let threads = get(flags, "threads", default_threads).max(1);
+
+    let mk = |m, k, n, wbits, abits, signed| BenchCase {
+        m,
+        k,
+        n,
+        wbits,
+        abits,
+        signed,
+    };
+    // `--quick` is the CI smoke suite; the full suite sweeps precision
+    // 1..8 plus ragged (k, n not multiples of 64/tile) and deep-k
+    // shapes, ending with the 8x8-bit headline case the perf-regression
+    // gate tracks.
+    let cases: Vec<BenchCase> = if quick {
+        vec![
+            mk(32, 256, 32, 1, 1, false),
+            mk(32, 256, 32, 4, 4, false),
+            mk(33, 100, 17, 2, 3, true),
+            mk(64, 512, 64, 8, 8, false),
+        ]
+    } else {
+        vec![
+            mk(128, 1024, 128, 1, 1, false),
+            mk(128, 1024, 128, 2, 2, false),
+            mk(128, 1024, 128, 3, 3, true),
+            mk(128, 1024, 128, 4, 4, false),
+            mk(128, 1024, 128, 6, 6, true),
+            mk(128, 1024, 128, 8, 8, false),
+            mk(96, 1000, 96, 3, 5, true),
+            mk(64, 8192, 64, 4, 4, false),
+            mk(256, 2048, 256, 8, 8, false),
+        ]
+    };
+    let headline_name = cases.last().map(|c| c.name()).unwrap_or_default();
+    let timer = if quick {
+        BenchTimer::smoke()
+    } else {
+        BenchTimer::heavy()
+    };
+
+    let mut rng = Rng::new(0xBE7C);
+    let mut jcases = Vec::new();
+    let mut headline_speedup = 0.0f64;
+    for case in &cases {
+        let a = IntMatrix::random(&mut rng, case.m, case.k, case.wbits, case.signed);
+        let b = IntMatrix::random(&mut rng, case.k, case.n, case.abits, case.signed);
+        let la = BitSerialMatrix::from_int(&a, case.wbits, case.signed);
+        let rb = BitSerialMatrix::from_int_transposed(&b, case.abits, case.signed);
+
+        // Correctness gate first: the engine must be bit-exact against
+        // the oracle on every case it is timed on.
+        let oracle = gemm_bitserial(&la, &rb);
+        if gemm_tiled(&la, &rb) != oracle {
+            return Err(format!("tiled kernel mismatch on {}", case.name()));
+        }
+        if gemm_tiled_parallel(&la, &rb, threads) != oracle {
+            return Err(format!("parallel tiled kernel mismatch on {}", case.name()));
+        }
+
+        let ops = binary_ops(
+            case.m as u64,
+            case.k as u64,
+            case.n as u64,
+            case.wbits,
+            case.abits,
+        ) as f64;
+        let name = case.name();
+        let base = timer.run(|| gemm_bitserial(&la, &rb));
+        report(&format!("baseline_{name}_1t"), &base, Some((ops, "binop")));
+        let tiled = timer.run(|| gemm_tiled(&la, &rb));
+        report(&format!("tiled_{name}_1t"), &tiled, Some((ops, "binop")));
+        let tiled_mt = timer.run(|| gemm_tiled_parallel(&la, &rb, threads));
+        report(
+            &format!("tiled_{name}_{threads}t"),
+            &tiled_mt,
+            Some((ops, "binop")),
+        );
+
+        let speedup_1t = base.median() / tiled.median();
+        if name == headline_name {
+            headline_speedup = speedup_1t;
+        }
+        let mut jc = BTreeMap::new();
+        jc.insert("name".to_string(), Json::str(&name));
+        jc.insert("m".to_string(), Json::num(case.m as f64));
+        jc.insert("k".to_string(), Json::num(case.k as f64));
+        jc.insert("n".to_string(), Json::num(case.n as f64));
+        jc.insert("wbits".to_string(), Json::num(case.wbits as f64));
+        jc.insert("abits".to_string(), Json::num(case.abits as f64));
+        jc.insert("signed".to_string(), Json::Bool(case.signed));
+        jc.insert("binary_ops".to_string(), Json::num(ops));
+        jc.insert("baseline_ns".to_string(), Json::num(base.median()));
+        jc.insert("tiled_ns".to_string(), Json::num(tiled.median()));
+        jc.insert("tiled_mt_ns".to_string(), Json::num(tiled_mt.median()));
+        jc.insert(
+            "baseline_gops".to_string(),
+            Json::num(ops / base.median()),
+        );
+        jc.insert("tiled_gops".to_string(), Json::num(ops / tiled.median()));
+        jc.insert(
+            "tiled_mt_gops".to_string(),
+            Json::num(ops / tiled_mt.median()),
+        );
+        jc.insert("speedup_1t".to_string(), Json::num(speedup_1t));
+        jc.insert(
+            "speedup_mt".to_string(),
+            Json::num(base.median() / tiled_mt.median()),
+        );
+        jcases.push(Json::Obj(jc));
+    }
+
+    let mut headline = BTreeMap::new();
+    headline.insert("case".to_string(), Json::str(&headline_name));
+    headline.insert("speedup_1t".to_string(), Json::num(headline_speedup));
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), Json::str("bismo-bench-gemm/v1"));
+    root.insert(
+        "mode".to_string(),
+        Json::str(if quick { "quick" } else { "full" }),
+    );
+    root.insert("threads".to_string(), Json::num(threads as f64));
+    root.insert(
+        "generated_unix".to_string(),
+        Json::num(
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs() as f64)
+                .unwrap_or(0.0),
+        ),
+    );
+    root.insert("cases".to_string(), Json::Arr(jcases));
+    root.insert("headline".to_string(), Json::Obj(headline));
+    let doc = Json::Obj(root);
+    std::fs::write(&out_path, doc.pretty(2) + "\n")
+        .map_err(|e| format!("writing {out_path}: {e}"))?;
+    println!(
+        "wrote {out_path}: headline {} speedup {:.2}x (tiled vs baseline, 1 thread)",
+        headline_name, headline_speedup
+    );
+    Ok(())
+}
+
 fn cmd_costmodel(flags: &HashMap<String, String>) -> Result<(), String> {
     let model = CostModel::paper();
     let fitted = CostModel::fit_from_synth();
@@ -295,25 +484,31 @@ fn cmd_instances() -> Result<(), String> {
 fn cmd_info() -> Result<(), String> {
     println!("bismo — bit-serial matrix multiplication overlay (reproduction)");
     println!("platform model: {}", PYNQ_Z1.name);
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        match bismo::runtime::ArtifactManifest::load(&dir) {
-            Ok(m) => {
-                println!("artifacts ({}):", dir.display());
-                for name in m.artifacts.keys() {
-                    println!("  {name}");
+    #[cfg(feature = "xla")]
+    {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            match bismo::runtime::ArtifactManifest::load(&dir) {
+                Ok(m) => {
+                    println!("artifacts ({}):", dir.display());
+                    for name in m.artifacts.keys() {
+                        println!("  {name}");
+                    }
                 }
+                Err(e) => println!("artifact manifest error: {e}"),
             }
-            Err(e) => println!("artifact manifest error: {e}"),
+        } else {
+            println!("artifacts: not built (run `make artifacts`)");
         }
-    } else {
-        println!("artifacts: not built (run `make artifacts`)");
     }
+    #[cfg(not(feature = "xla"))]
+    println!("artifacts: PJRT runtime disabled (build with --features xla)");
     Ok(())
 }
 
-const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|costmodel|synth|power|instances|info> [flags]
-flags: --instance N  --m M --k K --n N  --wbits W --abits A  --signed --no-overlap --bit-skip  --seed S  --dk N";
+const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|bench|costmodel|synth|power|instances|info> [flags]
+flags: --instance N  --m M --k K --n N  --wbits W --abits A  --signed --no-overlap --bit-skip  --seed S  --dk N
+bench: --quick  --out PATH (default BENCH_gemm.json)  --threads N";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -323,6 +518,7 @@ fn main() {
         "quickstart" => cmd_quickstart(),
         "simulate" => cmd_simulate(&flags),
         "schedule" => cmd_schedule(&flags),
+        "bench" => cmd_bench(&flags),
         "costmodel" => cmd_costmodel(&flags),
         "synth" => cmd_synth(&flags),
         "power" => cmd_power(),

@@ -63,10 +63,13 @@ impl PlaneList {
     }
 
     /// Planes of `m` that are not entirely zero (bit-skip extension).
+    /// Uses the shared [`BitSerialMatrix::nonzero_planes`] filter — the
+    /// same zero-plane test the tiled software kernel applies.
     pub fn nonzero(m: &BitSerialMatrix) -> Self {
         PlaneList {
-            planes: (0..m.bits)
-                .filter(|&i| !m.plane_is_zero(i))
+            planes: m
+                .nonzero_planes()
+                .into_iter()
                 .map(|i| (i, plane_sign(i, m.bits, m.signed) < 0))
                 .collect(),
             bits: m.bits,

@@ -98,22 +98,54 @@ impl MatrixBuffers {
         })
     }
 
+    /// Storage-relative `u64` range of `nwords` consecutive buffer
+    /// words, bounds-validated once (shared by [`MatrixBuffers::read_range`]
+    /// and [`MatrixBuffers::rhs_word_range`]).
+    fn word_range(
+        &self,
+        buf: usize,
+        word: usize,
+        nwords: usize,
+    ) -> Result<std::ops::Range<usize>, String> {
+        if nwords == 0 {
+            return Ok(0..0);
+        }
+        let s = self.slot(buf, word)?;
+        let _ = self.slot(buf, word + nwords - 1)?; // validate end
+        Ok(s..s + nwords * self.wpc)
+    }
+
     /// Read `nwords` consecutive `D_k`-bit words as one contiguous u64
     /// slice (buffer storage is word-major, so consecutive words are
     /// adjacent). Bounds are validated once — this is the execute
     /// stage's hot path.
     pub fn read_range(&self, buf: usize, word: usize, nwords: usize) -> Result<&[u64], String> {
-        if nwords == 0 {
-            return Ok(&[]);
-        }
-        let s = self.slot(buf, word)?;
-        let _ = self.slot(buf, word + nwords - 1)?; // validate end
-        let len = nwords * self.wpc;
+        let r = self.word_range(buf, word, nwords)?;
         Ok(if buf < self.dm {
-            &self.lhs[s..s + len]
+            &self.lhs[r]
         } else {
-            &self.rhs[s..s + len]
+            &self.rhs[r]
         })
+    }
+
+    /// Storage-relative `u64` range of `nwords` consecutive buffer words
+    /// of the RHS buffer for DPU column `j` (an index range into
+    /// [`MatrixBuffers::rhs_data`]). Bounds are validated here once so
+    /// the execute stage can cache the ranges in scratch storage and
+    /// slice without re-validating.
+    pub fn rhs_word_range(
+        &self,
+        j: usize,
+        word: usize,
+        nwords: usize,
+    ) -> Result<std::ops::Range<usize>, String> {
+        self.word_range(self.rhs_buf(j), word, nwords)
+    }
+
+    /// The raw RHS storage ([`MatrixBuffers::rhs_word_range`] indexes
+    /// into this).
+    pub fn rhs_data(&self) -> &[u64] {
+        &self.rhs
     }
 
     /// LHS row buffer id for DPU row `i`.
@@ -230,6 +262,19 @@ mod tests {
         assert_eq!(b.words_per_chunk(), 4);
         b.write_word(0, 0, &[1, 2, 3, 4]).unwrap();
         assert_eq!(b.read_word(0, 0).unwrap(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rhs_word_range_matches_read_range() {
+        let mut b = MatrixBuffers::new(&cfg());
+        b.write_word(2, 3, &[0x11]).unwrap();
+        b.write_word(3, 4, &[0x22]).unwrap();
+        for j in 0..2 {
+            let range = b.rhs_word_range(j, 2, 4).unwrap();
+            assert_eq!(&b.rhs_data()[range], b.read_range(b.rhs_buf(j), 2, 4).unwrap());
+        }
+        assert!(b.rhs_word_range(0, 1023, 2).is_err()); // end out of range
+        assert_eq!(b.rhs_word_range(1, 0, 0).unwrap(), 0..0);
     }
 
     #[test]

@@ -24,6 +24,7 @@
 use super::buffers::{MatrixBuffers, ResultBuffer};
 use crate::arch::BismoConfig;
 use crate::isa::ExecuteRun;
+use crate::kernel::popcount_and;
 
 /// Execute-stage state: the `D_m × D_n` accumulator registers.
 pub struct ExecuteUnit {
@@ -37,6 +38,10 @@ pub struct ExecuteUnit {
     accs: Vec<i64>,
     /// Wrap events observed (value exceeded the `A`-bit register).
     pub overflows: u64,
+    /// Scratch: per-DPU-column RHS word ranges, revalidated per
+    /// instruction but allocated once (this sits on the per-instruction
+    /// hot path).
+    rhs_scratch: Vec<std::ops::Range<usize>>,
 }
 
 impl ExecuteUnit {
@@ -48,20 +53,16 @@ impl ExecuteUnit {
             pipeline_depth: cfg.dpa_pipeline_depth(),
             accs: vec![0; (cfg.dm * cfg.dn) as usize],
             overflows: 0,
+            rhs_scratch: Vec::with_capacity(cfg.dn as usize),
         }
     }
 
-    /// Wrap `v` into the two's-complement range of the `A`-bit register.
-    fn wrap(&mut self, v: i64) -> i64 {
-        if self.acc_bits == 64 {
-            return v;
-        }
-        let m = 1i64 << (self.acc_bits - 1);
-        let wrapped = ((v + m).rem_euclid(1i64 << self.acc_bits)) - m;
-        if wrapped != v {
-            self.overflows += 1;
-        }
-        wrapped
+    /// Wrap `v` into the two's-complement range of an `acc_bits`-wide
+    /// register (`acc_bits < 64`).
+    #[inline]
+    fn wrap_value(acc_bits: u32, v: i64) -> i64 {
+        let m = 1i64 << (acc_bits - 1);
+        ((v + m).rem_euclid(1i64 << acc_bits)) - m
     }
 
     /// Execute one `RunExecute`. Returns
@@ -81,29 +82,47 @@ impl ExecuteUnit {
             1i64 << e.shift
         };
 
-        // Hot path: one contiguous slice per buffer, validated once per
-        // instruction (RHS slices hoisted out of the row loop); the
-        // inner loop is the same word-level AND+popcount the DPU
-        // datapath performs.
+        // Hot path: one contiguous range per RHS buffer, validated once
+        // per instruction and cached in reusable scratch (no
+        // per-instruction heap allocation); the inner loop is the same
+        // word-level AND+popcount the DPU datapath performs.
         let chunks = e.num_chunks as usize;
-        let mut rhs_slices = Vec::with_capacity(self.dn);
+        self.rhs_scratch.clear();
         for j in 0..self.dn {
-            rhs_slices.push(
-                bufs.read_range(bufs.rhs_buf(j), e.rhs_offset as usize, chunks)
-                    .map_err(|err| format!("execute rhs: {err}"))?,
-            );
+            let range = bufs
+                .rhs_word_range(j, e.rhs_offset as usize, chunks)
+                .map_err(|err| format!("execute rhs: {err}"))?;
+            self.rhs_scratch.push(range);
         }
-        for i in 0..self.dm {
-            let lw = bufs
-                .read_range(bufs.lhs_buf(i), e.lhs_offset as usize, chunks)
-                .map_err(|err| format!("execute lhs: {err}"))?;
-            for (j, rw) in rhs_slices.iter().enumerate() {
-                let mut pc = 0u64;
-                for (&x, &y) in lw.iter().zip(rw.iter()) {
-                    pc += (x & y).count_ones() as u64;
+        let rhs_data = bufs.rhs_data();
+        // The `acc_bits == 64` check is hoisted out of the accumulate
+        // loop: a full-width register never wraps, so that path skips
+        // the wrap arithmetic entirely.
+        if self.acc_bits == 64 {
+            for i in 0..self.dm {
+                let lw = bufs
+                    .read_range(bufs.lhs_buf(i), e.lhs_offset as usize, chunks)
+                    .map_err(|err| format!("execute lhs: {err}"))?;
+                for (j, range) in self.rhs_scratch.iter().enumerate() {
+                    let pc = popcount_and(lw, &rhs_data[range.clone()]);
+                    self.accs[i * self.dn + j] += weight * pc as i64;
                 }
-                let updated = self.accs[i * self.dn + j] + weight * pc as i64;
-                self.accs[i * self.dn + j] = self.wrap(updated);
+            }
+        } else {
+            for i in 0..self.dm {
+                let lw = bufs
+                    .read_range(bufs.lhs_buf(i), e.lhs_offset as usize, chunks)
+                    .map_err(|err| format!("execute lhs: {err}"))?;
+                for (j, range) in self.rhs_scratch.iter().enumerate() {
+                    let pc = popcount_and(lw, &rhs_data[range.clone()]);
+                    let idx = i * self.dn + j;
+                    let updated = self.accs[idx] + weight * pc as i64;
+                    let wrapped = Self::wrap_value(self.acc_bits, updated);
+                    if wrapped != updated {
+                        self.overflows += 1;
+                    }
+                    self.accs[idx] = wrapped;
+                }
             }
         }
 
@@ -230,6 +249,43 @@ mod tests {
         exec(&mut unit, &bufs, &mut rb, basic_run(1, 1, false, true));
         assert_eq!(unit.accumulators(), &[-128; 4]);
         assert_eq!(unit.overflows, 4);
+    }
+
+    #[test]
+    fn full_width_accumulator_never_wraps() {
+        let c = BismoConfig {
+            acc_bits: 64,
+            ..cfg()
+        };
+        let mut bufs = MatrixBuffers::new(&c);
+        for b in 0..4 {
+            bufs.write_word(b, 0, &[u64::MAX]).unwrap(); // popcount 64
+        }
+        let mut unit = ExecuteUnit::new(&c);
+        let mut rb = ResultBuffer::new(&c);
+        exec(&mut unit, &bufs, &mut rb, basic_run(1, 40, false, true));
+        assert_eq!(unit.accumulators(), &[64i64 << 40; 4]);
+        assert_eq!(unit.overflows, 0);
+    }
+
+    #[test]
+    fn scratch_reuse_across_instructions() {
+        // Many back-to-back instructions share the hoisted scratch; the
+        // numerics must match a fresh unit per instruction.
+        let c = cfg();
+        let mut bufs = MatrixBuffers::new(&c);
+        bufs.write_word(0, 0, &[0b1011]).unwrap();
+        bufs.write_word(1, 0, &[0b0111]).unwrap();
+        bufs.write_word(2, 0, &[0b1101]).unwrap();
+        bufs.write_word(3, 0, &[0b1110]).unwrap();
+        let mut unit = ExecuteUnit::new(&c);
+        let mut rb = ResultBuffer::new(&c);
+        exec(&mut unit, &bufs, &mut rb, basic_run(1, 0, false, true));
+        let first = unit.accumulators().to_vec();
+        for _ in 0..5 {
+            exec(&mut unit, &bufs, &mut rb, basic_run(1, 0, false, true));
+            assert_eq!(unit.accumulators(), &first[..]);
+        }
     }
 
     #[test]

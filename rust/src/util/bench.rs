@@ -68,6 +68,17 @@ impl BenchTimer {
         }
     }
 
+    /// Smoke-test preset (`bismo bench --quick`, CI): one warm sample —
+    /// enough to validate the harness and produce a schema-complete
+    /// report, not enough for stable statistics.
+    pub fn smoke() -> Self {
+        BenchTimer {
+            min_samples: 1,
+            min_time: Duration::from_millis(10),
+            warmup: Duration::from_millis(5),
+        }
+    }
+
     /// Measure `f`, returning sorted per-iteration samples. The closure's
     /// return value is passed through `std::hint::black_box` to keep the
     /// optimizer honest.

@@ -1,8 +1,8 @@
-//! Minimal JSON parser for the artifact manifest (no serde offline).
+//! Minimal JSON parser *and writer* (no serde offline).
 //!
 //! Supports the full JSON grammar minus exotic number forms; ample for
-//! `artifacts/manifest.json` and small config files. Not a streaming
-//! parser; inputs are small.
+//! `artifacts/manifest.json`, `BENCH_*.json` emission and small config
+//! files. Not a streaming parser; inputs are small.
 
 use std::collections::BTreeMap;
 
@@ -69,6 +69,116 @@ impl Json {
             Json::Obj(m) => Some(m),
             _ => None,
         }
+    }
+
+    /// Convenience constructor: a string value.
+    pub fn str(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+
+    /// Convenience constructor: a number value.
+    pub fn num(n: f64) -> Json {
+        Json::Num(n)
+    }
+
+    /// Serialize compactly (no whitespace). `parse(dump(v)) == v` for
+    /// every value whose numbers survive an f64 round trip.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    /// Serialize human-readably with `indent`-space nesting.
+    pub fn pretty(&self, indent: usize) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(indent), 0);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        let pad = |out: &mut String, d: usize| {
+            if let Some(n) = indent {
+                out.push('\n');
+                out.push_str(&" ".repeat(n * d));
+            }
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => out.push_str(&fmt_number(*n)),
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, depth + 1);
+                    item.write(out, indent, depth + 1);
+                }
+                if !v.is_empty() {
+                    pad(out, depth);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, item)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, depth + 1);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    item.write(out, indent, depth + 1);
+                }
+                if !m.is_empty() {
+                    pad(out, depth);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Format a JSON number: integers without a fractional part, everything
+/// else with enough digits to round-trip.
+fn fmt_number(n: f64) -> String {
+    if !n.is_finite() {
+        // JSON has no Inf/NaN; emit null-adjacent zero rather than
+        // invalid output.
+        return "0".to_string();
+    }
+    if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n}")
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.dump())
     }
 }
 
@@ -286,5 +396,42 @@ mod tests {
     fn unicode_escapes() {
         let j = Json::parse(r#""Aé""#).unwrap();
         assert_eq!(j.as_str(), Some("Aé"));
+    }
+
+    #[test]
+    fn dump_roundtrips() {
+        let src = r#"{"a": [1, -2.5, true, false, null, "x\ny"], "b": {"c": 0.125}}"#;
+        let j = Json::parse(src).unwrap();
+        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
+        assert_eq!(Json::parse(&j.pretty(2)).unwrap(), j);
+    }
+
+    #[test]
+    fn dump_integers_without_fraction() {
+        assert_eq!(Json::Num(42.0).dump(), "42");
+        assert_eq!(Json::Num(-3.0).dump(), "-3");
+        assert_eq!(Json::Num(0.5).dump(), "0.5");
+        assert_eq!(Json::Num(1.5e20).dump(), "150000000000000000000");
+    }
+
+    #[test]
+    fn dump_escapes_strings() {
+        let j = Json::Str("a\"b\\c\nd".to_string());
+        assert_eq!(j.dump(), r#""a\"b\\c\nd""#);
+        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
+    }
+
+    #[test]
+    fn pretty_is_indented() {
+        let j = Json::parse(r#"{"k": [1, 2]}"#).unwrap();
+        let p = j.pretty(2);
+        assert!(p.contains("\n  \"k\""), "{p}");
+        assert!(p.ends_with('}'));
+    }
+
+    #[test]
+    fn empty_containers_stay_compact() {
+        assert_eq!(Json::Arr(vec![]).pretty(2), "[]");
+        assert_eq!(Json::Obj(Default::default()).pretty(2), "{}");
     }
 }

@@ -69,6 +69,38 @@ fn synth_single_dk() {
 }
 
 #[test]
+fn bench_quick_writes_json() {
+    let out = std::env::temp_dir().join(format!("bismo_bench_{}.json", std::process::id()));
+    let out_str = out.to_str().unwrap().to_string();
+    let (ok, text) = bismo(&["bench", "--quick", "--threads", "2", "--out", &out_str]);
+    assert!(ok, "{text}");
+    assert!(text.contains("speedup"), "{text}");
+    let json = std::fs::read_to_string(&out).expect("bench json written");
+    let _ = std::fs::remove_file(&out);
+    let doc = bismo::util::Json::parse(&json).expect("valid json");
+    assert_eq!(
+        doc.get("schema").and_then(|s| s.as_str()),
+        Some("bismo-bench-gemm/v1")
+    );
+    assert_eq!(doc.get("mode").and_then(|s| s.as_str()), Some("quick"));
+    let cases = doc.get("cases").and_then(|c| c.as_arr()).expect("cases");
+    assert!(!cases.is_empty());
+    for c in cases {
+        for key in [
+            "name",
+            "binary_ops",
+            "baseline_ns",
+            "tiled_ns",
+            "tiled_mt_ns",
+            "speedup_1t",
+        ] {
+            assert!(c.get(key).is_some(), "case missing {key}: {json}");
+        }
+    }
+    assert!(doc.get("headline").is_some(), "{json}");
+}
+
+#[test]
 fn unknown_command_usage() {
     let (ok, text) = bismo(&["frobnicate"]);
     assert!(!ok);

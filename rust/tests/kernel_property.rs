@@ -1,0 +1,156 @@
+//! Property sweep: the tiled, plane-fused kernel engine is bit-exact
+//! against the `gemm_bitserial` oracle (and the i64 reference) across
+//! mixed precisions, signedness, sparse (zero-plane) operands and
+//! ragged shapes — and the pooled batch runner preserves ordering and
+//! per-job results.
+
+use bismo::arch::BismoConfig;
+use bismo::baseline::{gemm_bitserial, gemm_bitserial_parallel};
+use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
+use bismo::coordinator::{BismoBatchRunner, BismoContext, MatmulOptions, Precision};
+use bismo::kernel::{gemm_tiled, gemm_tiled_parallel, gemm_tiled_with, KernelConfig, WorkerPool};
+use bismo::util::{property_sweep, Rng};
+
+/// Random matrix with controllable plane sparsity: `mode 0` = dense,
+/// `mode 1` = even values (LSB plane all-zero), `mode 2` = tiny values
+/// (high planes all-zero), `mode 3` = all-zero operand.
+fn sparse_random(rng: &mut Rng, rows: usize, cols: usize, bits: u32, signed: bool, mode: usize) -> IntMatrix {
+    let m = IntMatrix::random(rng, rows, cols, bits, signed);
+    let (lo, hi) = if signed {
+        (-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1)
+    } else {
+        (0, (1i64 << bits) - 1)
+    };
+    match mode {
+        1 => IntMatrix::from_fn(rows, cols, |r, c| ((m.get(r, c).abs() / 2) * 2).clamp(lo, hi)),
+        2 => IntMatrix::from_fn(rows, cols, |r, c| (m.get(r, c).abs() % 2).clamp(lo, hi)),
+        3 => IntMatrix::zeros(rows, cols),
+        _ => m,
+    }
+}
+
+#[test]
+fn tiled_engine_matches_oracle_everywhere() {
+    property_sweep(0xB17_5E81, 60, |rng, case| {
+        let m = rng.index(33) + 1;
+        let k = rng.index(300) + 1; // usually not a multiple of 64
+        let n = rng.index(33) + 1;
+        let wbits = rng.index(8) as u32 + 1;
+        let abits = rng.index(8) as u32 + 1;
+        let lsigned = rng.chance(0.5);
+        let rsigned = rng.chance(0.5);
+        let lmode = rng.index(4);
+        let rmode = rng.index(3); // keep RHS nonzero a bit more often
+        let a = sparse_random(rng, m, k, wbits, lsigned, lmode);
+        let b = sparse_random(rng, k, n, abits, rsigned, rmode);
+        let expect = a.matmul(&b);
+
+        let la = BitSerialMatrix::from_int(&a, wbits, lsigned);
+        let rb = BitSerialMatrix::from_int_transposed(&b, abits, rsigned);
+        let oracle = gemm_bitserial(&la, &rb);
+        assert_eq!(oracle, expect, "oracle vs reference, case {case}");
+
+        let tiled = gemm_tiled(&la, &rb);
+        assert_eq!(
+            tiled, oracle,
+            "case {case}: m={m} k={k} n={n} w={wbits} a={abits} \
+             ls={lsigned} rs={rsigned} lmode={lmode} rmode={rmode}"
+        );
+    });
+}
+
+#[test]
+fn tiled_engine_handles_ragged_tiles() {
+    // m, n, k straddling every tile boundary for several geometries.
+    let mut rng = Rng::new(0x4A66);
+    for (m, k, n) in [(1, 64, 1), (7, 65, 9), (8, 63, 8), (15, 128, 17), (33, 191, 31)] {
+        let a = IntMatrix::random(&mut rng, m, k, 4, true);
+        let b = IntMatrix::random(&mut rng, k, n, 3, false);
+        let la = BitSerialMatrix::from_int(&a, 4, true);
+        let rb = BitSerialMatrix::from_int_transposed(&b, 3, false);
+        let expect = a.matmul(&b);
+        for (tm, tn) in [(1, 1), (2, 7), (8, 8), (64, 64)] {
+            let cfg = KernelConfig {
+                tile_m: tm,
+                tile_n: tn,
+            };
+            assert_eq!(
+                gemm_tiled_with(&la, &rb, &cfg, None),
+                expect,
+                "m={m} k={k} n={n} tile {tm}x{tn}"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_paths_match_serial_on_shared_pool() {
+    property_sweep(0x600D, 10, |rng, _| {
+        let m = rng.index(50) + 1;
+        let k = rng.index(400) + 1;
+        let n = rng.index(20) + 1;
+        let a = IntMatrix::random(rng, m, k, 3, true);
+        let b = IntMatrix::random(rng, k, n, 3, true);
+        let la = BitSerialMatrix::from_int(&a, 3, true);
+        let rb = BitSerialMatrix::from_int_transposed(&b, 3, true);
+        let serial = gemm_bitserial(&la, &rb);
+        for threads in [1, 2, 3, 8] {
+            assert_eq!(gemm_bitserial_parallel(&la, &rb, threads), serial);
+            assert_eq!(gemm_tiled_parallel(&la, &rb, threads), serial);
+        }
+    });
+}
+
+#[test]
+fn dedicated_pool_usable_alongside_global() {
+    let pool = WorkerPool::new(3);
+    let mut rng = Rng::new(0xD0_01);
+    let a = IntMatrix::random(&mut rng, 20, 130, 2, false);
+    let b = IntMatrix::random(&mut rng, 130, 12, 2, false);
+    let la = BitSerialMatrix::from_int(&a, 2, false);
+    let rb = BitSerialMatrix::from_int_transposed(&b, 2, false);
+    let expect = a.matmul(&b);
+    let cfg = KernelConfig::default();
+    for _ in 0..5 {
+        assert_eq!(gemm_tiled_with(&la, &rb, &cfg, Some((&pool, 3))), expect);
+        assert_eq!(gemm_tiled_with(&la, &rb, &cfg, Some((WorkerPool::global(), 2))), expect);
+    }
+}
+
+#[test]
+fn batch_runner_preserves_order_and_matches_per_job_results() {
+    let runner = BismoBatchRunner::new(BismoConfig::small(), 4).unwrap();
+    let serial = BismoContext::new(BismoConfig::small()).unwrap();
+    let mut rng = Rng::new(0xBA7C);
+    let jobs: Vec<_> = (0..12)
+        .map(|j| {
+            let k = rng.index(256) + 1;
+            let m = rng.index(8) + 1;
+            let n = rng.index(8) + 1;
+            let a = IntMatrix::random(&mut rng, m, k, 2, false);
+            let b = IntMatrix::random(&mut rng, k, n, 2, false);
+            let opts = MatmulOptions {
+                bit_skip: j % 2 == 0,
+                ..Default::default()
+            };
+            (a, b, Precision::unsigned(2, 2), opts)
+        })
+        .collect();
+    // Two batches on the same runner: pooled workers are reused, and
+    // each outcome lands at its job's index with identical results to
+    // a serial single-context run.
+    for _ in 0..2 {
+        let outcomes = runner.run_batch(&jobs);
+        assert_eq!(outcomes.len(), jobs.len());
+        for (i, o) in outcomes.iter().enumerate() {
+            assert_eq!(o.index, i, "outcome {i} out of order");
+            let (p, rep) = o.result.as_ref().unwrap();
+            let (sp, srep) = serial
+                .matmul(&jobs[i].0, &jobs[i].1, jobs[i].2, jobs[i].3)
+                .unwrap();
+            assert_eq!(*p, sp, "job {i} result");
+            assert_eq!(rep.cycles, srep.cycles, "job {i} report");
+            assert_eq!(*p, jobs[i].0.matmul(&jobs[i].1), "job {i} reference");
+        }
+    }
+}

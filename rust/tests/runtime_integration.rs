@@ -1,7 +1,10 @@
 //! Integration: AOT artifacts load, compile and execute through PJRT,
 //! and their numerics agree bit-exactly with the Rust oracles and the
 //! overlay simulator. Requires `make artifacts` (skips cleanly if the
-//! artifact directory has not been built).
+//! artifact directory has not been built) and the `xla` cargo feature
+//! (the whole file is compiled out without it).
+
+#![cfg(feature = "xla")]
 
 use bismo::arch::BismoConfig;
 use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
