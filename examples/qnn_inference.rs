@@ -1,4 +1,5 @@
-//! End-to-end driver: quantized-MLP inference served on the overlay.
+//! End-to-end driver: quantized-MLP inference served on the overlay
+//! through the asynchronous serving layer.
 //!
 //! The full workflow the paper motivates (QNN inference with
 //! per-application precision):
@@ -6,17 +7,21 @@
 //! 1. generate a synthetic 784-d digit dataset (MNIST stand-in),
 //! 2. train a float MLP (784-256-256-10) in-crate with SGD,
 //! 3. post-training-quantize to w4 (weights) / a2 (activations),
-//! 4. serve batched inference where EVERY GEMM runs through the
-//!    overlay (pack → schedule → simulate) on Table IV instance #2,
-//! 5. cross-check logits bit-exactly against the integer reference and
-//!    the AOT-compiled JAX/Pallas artifact via PJRT (batch 16),
-//! 6. report accuracy (float vs quantized), per-layer cycles, and
-//!    latency/throughput at 200 MHz.
+//! 4. serve batched inference through `BismoService` where EVERY GEMM
+//!    runs on the cycle-accurate overlay simulator backend (Table IV
+//!    instance #2) — layer weights are weight-stationary, so from the
+//!    second batch on the service's packing cache hands each layer its
+//!    pre-packed weights without repacking,
+//! 5. assert logits bit-exactly against the integer reference on every
+//!    batch (and against the AOT-compiled JAX/Pallas artifact via PJRT
+//!    when the `xla` feature is enabled),
+//! 6. report accuracy (float vs quantized), per-layer cycles,
+//!    latency/throughput at 200 MHz, and the cache's repack-avoidance.
 //!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
 use bismo::arch::instance;
-use bismo::coordinator::{BismoContext, MatmulOptions};
+use bismo::coordinator::{Backend, BismoService, RequestOptions, ServiceConfig};
 use bismo::qnn::{FloatMlp, QnnMlp, SyntheticDigits};
 use bismo::report::{f, pct, Table};
 use std::time::Instant;
@@ -52,21 +57,40 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let q_acc = QnnMlp::accuracy(&ref_logits, &data.test_y);
     println!("quantized (w4/a2) accuracy: {}", pct(q_acc));
 
-    // 4. Serve batches through the overlay.
+    // 4. Serve batches through the async service (sim backend: every
+    //    GEMM is simulated cycle-accurately on instance #2).
     let cfg = instance(2);
-    let ctx = BismoContext::new(cfg)?;
+    let svc = BismoService::new(ServiceConfig {
+        workers: 4,
+        max_batch: 8,
+        overlay: cfg,
+        ..Default::default()
+    })?;
+    let opts = RequestOptions {
+        backend: Backend::Sim,
+        ..Default::default()
+    };
     let batch = 16usize;
     let mut table = Table::new(
-        "per-layer overlay cost (batch 16, instance #2 @ 200 MHz)",
+        "per-layer overlay cost (batch 16, instance #2 @ 200 MHz, via BismoService)",
         &["layer", "shape", "cycles", "GOPS", "efficiency"],
     );
     let mut total_cycles = 0u64;
     let mut correct = 0usize;
     let mut served = 0usize;
+    let mut batches_served = 0usize;
     let wall = Instant::now();
     for (bi, chunk) in data.test_x.chunks(batch).take(8).enumerate() {
+        batches_served += 1;
         let x = q.quantize_input(chunk);
-        let (logits, reports) = q.forward_on_overlay(&ctx, &x, MatmulOptions::default())?;
+        let (logits, responses) = q.forward_on_service(&svc, x.clone(), opts)?;
+        // The serving layer must be bit-exact against the integer
+        // reference on every batch.
+        assert_eq!(
+            logits,
+            q.forward_reference(&x),
+            "service logits != integer reference (batch {bi})"
+        );
         let labels = &data.test_y[bi * batch..bi * batch + chunk.len()];
         correct += QnnMlp::predictions(&logits)
             .iter()
@@ -74,6 +98,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             .filter(|(p, y)| p == y)
             .count();
         served += chunk.len();
+        let reports: Vec<_> = responses
+            .iter()
+            .map(|r| r.report.as_ref().expect("sim backend carries reports"))
+            .collect();
         if bi == 0 {
             let shapes = ["16x784x256", "16x256x256", "16x256x10"];
             for (li, rep) in reports.iter().enumerate() {
@@ -85,11 +113,20 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     &pct(rep.efficiency),
                 ]);
             }
+            assert!(
+                responses.iter().all(|r| !r.rhs_cached),
+                "first batch packs every layer's weights"
+            );
+        } else {
+            assert!(
+                responses.iter().all(|r| r.rhs_cached),
+                "weight-stationary reuse: later batches hit the packing cache"
+            );
         }
         total_cycles += reports.iter().map(|r| r.cycles).sum::<u64>();
     }
     table.print();
-    let batches = 8.0;
+    let batches = batches_served as f64;
     let secs_per_batch = (total_cycles as f64 / batches) / (cfg.fclk_mhz as f64 * 1e6);
     println!(
         "served {} inferences in {} batches: overlay accuracy {} (reference {})",
@@ -105,11 +142,23 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         cfg.fclk_mhz,
         wall.elapsed()
     );
+    let cs = svc.cache_stats();
+    println!(
+        "packing cache: {} hits / {} misses ({} entries, {} KiB resident) — \
+         {} of {} batches served their weights without repacking",
+        cs.hits,
+        cs.misses,
+        svc.cache_entries(),
+        svc.cache_bytes() / 1024,
+        batches_served.saturating_sub(1),
+        batches_served
+    );
 
     // 5. PJRT cross-check on the first batch (needs the `xla` cargo
     //    feature and `make artifacts`).
     #[cfg(feature = "xla")]
     {
+        use bismo::bitmatrix::IntMatrix;
         use bismo::runtime::Runtime;
         use std::path::Path;
         let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -117,9 +166,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let rt = Runtime::new(&artifacts)?;
             let exe = rt.load("qnn_mlp_b16_w4a2")?;
             let x = q.quantize_input(&data.test_x[..16]);
-            let jax_logits = exe.run_i32(&[&x, &q.w1, &q.w2, &q.w3])?;
-            let (overlay_logits, _) = q.forward_on_overlay(&ctx, &x, MatmulOptions::default())?;
-            assert_eq!(jax_logits, overlay_logits, "JAX artifact vs overlay");
+            let inputs: [&IntMatrix; 4] = [&x, &q.w1, &q.w2, &q.w3];
+            let jax_logits = exe.run_i32(&inputs)?;
+            let (service_logits, _) = q.forward_on_service(&svc, x.clone(), opts)?;
+            assert_eq!(jax_logits, service_logits, "JAX artifact vs serving layer");
             println!("PJRT cross-check: JAX/Pallas QNN artifact agrees bit-exactly ✓");
         }
     }

@@ -126,6 +126,31 @@ impl IntMatrix {
         }
     }
 
+    /// Content hash over dimensions and row-major entries.
+    ///
+    /// This is the identity the coordinator's packing cache keys on: two
+    /// matrices hash equal iff they have the same shape and entries
+    /// (modulo the negligible 64-bit collision probability, which the
+    /// cache accepts and documents). Not cryptographic.
+    ///
+    /// Sits on the serving layer's per-request lookup path, so it folds
+    /// one splitmix64 avalanche per *word* (chained, so entry order
+    /// matters) rather than hashing byte-wise — still a full pass over
+    /// the operand, but several times cheaper than the repack it
+    /// stands in for.
+    pub fn content_hash(&self) -> u64 {
+        #[inline]
+        fn mix(h: u64, v: u64) -> u64 {
+            crate::util::splitmix64(h.wrapping_add(v).wrapping_add(0x9e37_79b9_7f4a_7c15))
+        }
+        let mut h = mix(0xcbf2_9ce4_8422_2325, self.rows as u64);
+        h = mix(h, self.cols as u64);
+        for &v in &self.data {
+            h = mix(h, v as u64);
+        }
+        h
+    }
+
     /// Does every entry fit in `bits` (signed or unsigned)?
     pub fn fits(&self, bits: u32, signed: bool) -> bool {
         let (lo, hi) = if signed {
@@ -195,6 +220,24 @@ mod tests {
     fn value_range() {
         let a = IntMatrix::from_slice(2, 2, &[-3, 0, 9, 1]);
         assert_eq!(a.value_range(), (-3, 9));
+    }
+
+    #[test]
+    fn content_hash_distinguishes_shape_and_values() {
+        let a = IntMatrix::from_slice(2, 3, &[1, 2, 3, 4, 5, 6]);
+        // Equal content hashes equal.
+        assert_eq!(a.content_hash(), a.clone().content_hash());
+        // Same data, different shape: distinct.
+        let b = IntMatrix::from_slice(3, 2, &[1, 2, 3, 4, 5, 6]);
+        assert_ne!(a.content_hash(), b.content_hash());
+        // One entry changed: distinct.
+        let mut c = a.clone();
+        c.set(1, 2, 7);
+        assert_ne!(a.content_hash(), c.content_hash());
+        // Sign matters (two's-complement mix must not collapse ±v).
+        let d = IntMatrix::from_slice(1, 1, &[5]);
+        let e = IntMatrix::from_slice(1, 1, &[-5]);
+        assert_ne!(d.content_hash(), e.content_hash());
     }
 
     #[test]

@@ -1,0 +1,405 @@
+//! Weight-stationary packing cache: content-addressed, LRU-evicted
+//! storage of packed bit-serial operands.
+//!
+//! Packing an operand — bit-plane decomposition, plus the fused
+//! transpose for the RHS — is a full pass over the matrix and sits on
+//! the request path of every GEMM. QNN serving replays the same weight
+//! matrices across requests (the *weight-stationary* case the paper's
+//! motivating workload exhibits layer by layer), so
+//! [`crate::coordinator::BismoService`] keys packed operands by
+//! [`IntMatrix::content_hash`] and serves repeat requests straight from
+//! this cache, skipping the repack entirely.
+//!
+//! Identity is the 64-bit content hash plus shape/precision/layout; a
+//! hash collision between *different* matrices of identical shape would
+//! alias them. At 64 bits this is accepted and documented rather than
+//! defended against (the alternative — comparing full contents on every
+//! hit — would cost a pass comparable to the repack being avoided).
+
+use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+/// Cache identity of one packed operand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PackKey {
+    /// [`IntMatrix::content_hash`] of the source matrix.
+    pub content: u64,
+    /// Source shape (pre-transpose).
+    pub rows: usize,
+    pub cols: usize,
+    /// Operand precision the planes were decomposed at.
+    pub bits: u32,
+    pub signed: bool,
+    /// Packed via [`BitSerialMatrix::from_int_transposed`] (RHS layout)
+    /// rather than [`BitSerialMatrix::from_int`] (LHS layout).
+    pub transposed: bool,
+}
+
+impl PackKey {
+    /// Key for packing `m` at `bits`/`signed`, direct or transposed.
+    pub fn of(m: &IntMatrix, bits: u32, signed: bool, transposed: bool) -> PackKey {
+        PackKey {
+            content: m.content_hash(),
+            rows: m.rows,
+            cols: m.cols,
+            bits,
+            signed,
+            transposed,
+        }
+    }
+}
+
+/// The packing a [`PackKey`] identifies: bit-plane decomposition in
+/// either layout. The single pack path shared by the cache and the
+/// serving layer, so identity (key) and content (this function) cannot
+/// drift apart. Callers must range-check first ([`check_fits`]) — the
+/// decomposition itself panics on out-of-range entries.
+pub fn pack_operand(m: &IntMatrix, bits: u32, signed: bool, transposed: bool) -> BitSerialMatrix {
+    if transposed {
+        BitSerialMatrix::from_int_transposed(m, bits, signed)
+    } else {
+        BitSerialMatrix::from_int(m, bits, signed)
+    }
+}
+
+/// Range validation shared by every pack path: every entry of `m` must
+/// fit the declared precision before bit-plane decomposition. `side`
+/// labels the operand in the error ("lhs"/"rhs").
+pub fn check_fits(m: &IntMatrix, bits: u32, signed: bool, side: &str) -> Result<(), String> {
+    if m.fits(bits, signed) {
+        Ok(())
+    } else {
+        Err(format!(
+            "{side} entries do not fit {} {bits}-bit",
+            if signed { "signed" } else { "unsigned" },
+        ))
+    }
+}
+
+/// Hit/miss/eviction counters (monotonic over the cache's lifetime).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry {
+    packed: Arc<BitSerialMatrix>,
+    bytes: usize,
+    /// Monotonic tick of the last lookup hit (or insertion).
+    last_used: u64,
+}
+
+/// LRU cache of packed operands, bounded by total packed bytes.
+///
+/// Single-threaded by itself; the serving layer wraps it in a `Mutex`
+/// and keeps the critical sections to lookup/insert (packing happens
+/// outside the lock). Recency is a tick-ordered side index, so
+/// eviction is `O(log n)` instead of a full scan — churn workloads
+/// (e.g. `cache_lhs` with fresh activations) evict on every insert.
+pub struct PackingCache {
+    map: HashMap<PackKey, Entry>,
+    /// `last_used` tick → key. Ticks are unique (monotonic, one per
+    /// touch), so the first entry is always the least recently used.
+    lru: BTreeMap<u64, PackKey>,
+    capacity_bytes: usize,
+    bytes: usize,
+    tick: u64,
+    stats: CacheStats,
+}
+
+impl PackingCache {
+    /// A cache holding at most `capacity_bytes` of packed operand data.
+    /// Zero capacity disables caching (every lookup misses, nothing is
+    /// stored) — the serving layer's cache-off mode.
+    pub fn new(capacity_bytes: usize) -> PackingCache {
+        PackingCache {
+            map: HashMap::new(),
+            lru: BTreeMap::new(),
+            capacity_bytes,
+            bytes: 0,
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Look `key` up, counting a hit or miss and refreshing LRU order.
+    pub fn get(&mut self, key: &PackKey) -> Option<Arc<BitSerialMatrix>> {
+        self.tick += 1;
+        match self.map.get_mut(key) {
+            Some(e) => {
+                self.lru.remove(&e.last_used);
+                e.last_used = self.tick;
+                self.lru.insert(self.tick, *key);
+                self.stats.hits += 1;
+                Some(e.packed.clone())
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Is `key` resident? Does not touch LRU order or the counters.
+    pub fn contains(&self, key: &PackKey) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Insert a packed operand, evicting least-recently-used entries
+    /// until it fits. An operand larger than the whole capacity is not
+    /// cached at all.
+    pub fn insert(&mut self, key: PackKey, packed: Arc<BitSerialMatrix>) {
+        let bytes = packed.packed_bytes();
+        // The capacity-0 check keeps cache-off mode honest even for
+        // zero-byte packings (0-row/0-col operands).
+        if self.capacity_bytes == 0 || bytes > self.capacity_bytes {
+            return;
+        }
+        if let Some(old) = self.map.remove(&key) {
+            // Re-insert of a racing miss: replace, keep accounting exact.
+            self.lru.remove(&old.last_used);
+            self.bytes -= old.bytes;
+        }
+        while self.bytes + bytes > self.capacity_bytes {
+            let (_, lru_key) = self
+                .lru
+                .pop_first()
+                .expect("bytes > 0 implies a resident entry");
+            let evicted = self.map.remove(&lru_key).unwrap();
+            self.bytes -= evicted.bytes;
+            self.stats.evictions += 1;
+        }
+        self.tick += 1;
+        self.lru.insert(self.tick, key);
+        self.map.insert(
+            key,
+            Entry {
+                packed,
+                bytes,
+                last_used: self.tick,
+            },
+        );
+        self.bytes += bytes;
+        self.stats.insertions += 1;
+    }
+
+    /// Look up, packing and inserting on a miss; errs on operands
+    /// outside the declared precision (same [`check_fits`] gate as the
+    /// serving layer, skipped on hits). Returns the packed operand and
+    /// whether it was served from the cache.
+    ///
+    /// Single-threaded convenience: unlike the serving layer's
+    /// pack-outside-the-lock path, this packs while holding `&mut self`
+    /// — do not call it under a contended mutex.
+    pub fn get_or_pack(
+        &mut self,
+        m: &IntMatrix,
+        bits: u32,
+        signed: bool,
+        transposed: bool,
+    ) -> Result<(Arc<BitSerialMatrix>, bool), String> {
+        let key = PackKey::of(m, bits, signed, transposed);
+        if let Some(hit) = self.get(&key) {
+            return Ok((hit, true));
+        }
+        check_fits(m, bits, signed, "operand")?;
+        let packed = Arc::new(pack_operand(m, bits, signed, transposed));
+        self.insert(key, packed.clone());
+        Ok((packed, false))
+    }
+
+    /// Resident entry count.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Resident packed bytes.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Configured capacity in bytes.
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Drop every entry (counters are kept).
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.lru.clear();
+        self.bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{property_sweep, Rng};
+
+    fn mat(rng: &mut Rng, rows: usize, cols: usize, bits: u32, signed: bool) -> IntMatrix {
+        IntMatrix::random(rng, rows, cols, bits, signed)
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let mut c = PackingCache::new(1 << 20);
+        let mut rng = Rng::new(1);
+        let a = mat(&mut rng, 4, 64, 2, false);
+        let (p1, hit1) = c.get_or_pack(&a, 2, false, false).unwrap();
+        assert!(!hit1);
+        let (p2, hit2) = c.get_or_pack(&a, 2, false, false).unwrap();
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&p1, &p2), "hit returns the resident packing");
+        // Same matrix, different precision / layout: distinct entries.
+        let (_, hit3) = c.get_or_pack(&a, 3, false, false).unwrap();
+        assert!(!hit3);
+        let (_, hit4) = c.get_or_pack(&a, 2, false, true).unwrap();
+        assert!(!hit4);
+        let s = c.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 3);
+        assert_eq!(s.insertions, 3);
+        assert_eq!(s.evictions, 0);
+        assert!((s.hit_rate() - 0.25).abs() < 1e-12);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut rng = Rng::new(2);
+        // Three same-shape operands: identical packed size, so a
+        // capacity of exactly two packings forces LRU eviction.
+        let a = mat(&mut rng, 4, 64, 2, false);
+        let b = mat(&mut rng, 4, 64, 2, false);
+        let d = mat(&mut rng, 4, 64, 2, false);
+        let one = BitSerialMatrix::from_int(&a, 2, false).packed_bytes();
+        let mut c = PackingCache::new(2 * one);
+        let ka = PackKey::of(&a, 2, false, false);
+        let kb = PackKey::of(&b, 2, false, false);
+        let kd = PackKey::of(&d, 2, false, false);
+        c.get_or_pack(&a, 2, false, false).unwrap();
+        c.get_or_pack(&b, 2, false, false).unwrap();
+        assert_eq!(c.len(), 2);
+        // Touch `a`, making `b` the least recently used.
+        let (_, hit) = c.get_or_pack(&a, 2, false, false).unwrap();
+        assert!(hit);
+        c.get_or_pack(&d, 2, false, false).unwrap();
+        assert!(c.contains(&ka), "recently-touched entry survives");
+        assert!(!c.contains(&kb), "LRU entry evicted");
+        assert!(c.contains(&kd));
+        assert_eq!(c.stats().evictions, 1);
+        assert_eq!(c.bytes(), 2 * one);
+    }
+
+    #[test]
+    fn cached_packing_is_bit_exact_on_signed_and_ragged_shapes() {
+        // Cached-vs-fresh must be indistinguishable across signedness,
+        // ragged k (not a multiple of 64) and both layouts.
+        property_sweep(0xCAC4E, 20, |rng, _| {
+            let rows = rng.index(9) + 1;
+            let cols = rng.index(150) + 1; // frequently ragged
+            let bits = rng.index(8) as u32 + 1;
+            let signed = rng.chance(0.5);
+            let transposed = rng.chance(0.5);
+            let m = IntMatrix::random(rng, rows, cols, bits, signed);
+            let mut c = PackingCache::new(1 << 22);
+            let (fresh, h0) = c.get_or_pack(&m, bits, signed, transposed).unwrap();
+            let (cached, h1) = c.get_or_pack(&m, bits, signed, transposed).unwrap();
+            assert!(!h0 && h1);
+            let expect = if transposed {
+                BitSerialMatrix::from_int_transposed(&m, bits, signed)
+            } else {
+                BitSerialMatrix::from_int(&m, bits, signed)
+            };
+            assert_eq!(*fresh, expect);
+            assert_eq!(*cached, expect);
+        });
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let mut c = PackingCache::new(0);
+        let mut rng = Rng::new(3);
+        let a = mat(&mut rng, 2, 64, 1, false);
+        let (_, hit1) = c.get_or_pack(&a, 1, false, false).unwrap();
+        let (_, hit2) = c.get_or_pack(&a, 1, false, false).unwrap();
+        assert!(!hit1 && !hit2);
+        // Degenerate zero-byte packings must not sneak past cache-off.
+        let empty = IntMatrix::zeros(0, 5);
+        let (_, h1) = c.get_or_pack(&empty, 1, false, false).unwrap();
+        let (_, h2) = c.get_or_pack(&empty, 1, false, false).unwrap();
+        assert!(!h1 && !h2, "zero-byte packing cached in cache-off mode");
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(c.stats().insertions, 0);
+    }
+
+    #[test]
+    fn oversized_entry_is_not_cached_and_evicts_nothing() {
+        let mut rng = Rng::new(4);
+        let small = mat(&mut rng, 2, 64, 1, false);
+        let one = BitSerialMatrix::from_int(&small, 1, false).packed_bytes();
+        let mut c = PackingCache::new(one);
+        c.get_or_pack(&small, 1, false, false).unwrap();
+        assert_eq!(c.len(), 1);
+        // 8 planes of a bigger matrix cannot fit the single-packing cap.
+        let big = mat(&mut rng, 16, 256, 8, false);
+        let (_, hit) = c.get_or_pack(&big, 8, false, false).unwrap();
+        assert!(!hit);
+        assert_eq!(c.len(), 1, "oversized insert is a no-op");
+        assert!(c.contains(&PackKey::of(&small, 1, false, false)));
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn out_of_range_operand_errs_instead_of_panicking() {
+        let mut c = PackingCache::new(1 << 20);
+        let m = IntMatrix::from_slice(1, 2, &[3, 100]);
+        let err = c.get_or_pack(&m, 2, false, false).unwrap_err();
+        assert!(err.contains("do not fit"), "{err}");
+        assert!(c.is_empty(), "failed pack must not insert");
+        // The range is re-derived per precision: same matrix fits 7-bit.
+        let (_, hit) = c.get_or_pack(&m, 7, false, false).unwrap();
+        assert!(!hit);
+    }
+
+    #[test]
+    fn clear_keeps_counters() {
+        let mut c = PackingCache::new(1 << 20);
+        let mut rng = Rng::new(5);
+        let a = mat(&mut rng, 2, 64, 1, false);
+        c.get_or_pack(&a, 1, false, false).unwrap();
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(c.stats().misses, 1);
+        // Re-packing after clear is a fresh miss, not a corrupted hit.
+        let (_, hit) = c.get_or_pack(&a, 1, false, false).unwrap();
+        assert!(!hit);
+    }
+}

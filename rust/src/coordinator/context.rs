@@ -85,6 +85,19 @@ pub struct RunReport {
     pub rhs_planes: u32,
 }
 
+/// Shared guard for every consumer of pre-packed operand pairs (the
+/// context's packed path and the serving backends): both packings must
+/// run along the same `k`.
+pub(crate) fn check_packed_pair(la: &BitSerialMatrix, rb: &BitSerialMatrix) -> Result<(), String> {
+    if la.cols != rb.cols {
+        return Err(format!(
+            "packed shape mismatch: lhs {}×{} vs rhs(T) {}×{}",
+            la.rows, la.cols, rb.rows, rb.cols
+        ));
+    }
+    Ok(())
+}
+
 /// One configured overlay + its evaluation models.
 pub struct BismoContext {
     cfg: BismoConfig,
@@ -135,6 +148,28 @@ impl BismoContext {
 
     /// `P = A · B` on the overlay. `A` is `m×k` at `wbits`, `B` is
     /// `k×n` at `abits`.
+    ///
+    /// Packs both operands, compiles the instruction streams, runs the
+    /// functional + cycle-level simulator, and returns the product with
+    /// a full [`RunReport`]. Pre-packed operands (e.g. from the serving
+    /// layer's cache) can skip the packing step via
+    /// [`BismoContext::matmul_packed`].
+    ///
+    /// ```
+    /// use bismo::arch::BismoConfig;
+    /// use bismo::bitmatrix::IntMatrix;
+    /// use bismo::coordinator::{BismoContext, MatmulOptions, Precision};
+    ///
+    /// let ctx = BismoContext::new(BismoConfig::small())?;
+    /// // The paper's Fig. 1 example: L·R with 2-bit unsigned operands.
+    /// let l = IntMatrix::from_slice(2, 2, &[2, 0, 1, 3]);
+    /// let r = IntMatrix::from_slice(2, 2, &[0, 1, 1, 2]);
+    /// let (p, report) =
+    ///     ctx.matmul(&l, &r, Precision::unsigned(2, 2), MatmulOptions::default())?;
+    /// assert_eq!(p, IntMatrix::from_slice(2, 2, &[0, 2, 3, 7]));
+    /// assert!(report.cycles > 0);
+    /// # Ok::<(), String>(())
+    /// ```
     pub fn matmul(
         &self,
         a: &IntMatrix,
@@ -148,10 +183,35 @@ impl BismoContext {
                 a.rows, a.cols, b.rows, b.cols
             ));
         }
-        let (m, k, n) = (a.rows, a.cols, b.cols);
         let la = BitSerialMatrix::from_int(a, prec.wbits, prec.lsigned);
         // Transpose fused into packing (§Perf: saves an 8B/element pass).
         let rb = BitSerialMatrix::from_int_transposed(b, prec.abits, prec.rsigned);
+        self.matmul_packed(&la, &rb, opts)
+    }
+
+    /// [`BismoContext::matmul`] over pre-packed operands: `la` is the
+    /// bit-plane-decomposed LHS (`m×k`), `rb` the decomposed *transposed*
+    /// RHS (`n×k`, as produced by
+    /// [`BitSerialMatrix::from_int_transposed`]). Precision and
+    /// signedness are carried by the packed operands themselves.
+    ///
+    /// This is the entry point the serving layer uses: its
+    /// weight-stationary packing cache hands the same packed operand to
+    /// many requests without repeating the decomposition pass.
+    pub fn matmul_packed(
+        &self,
+        la: &BitSerialMatrix,
+        rb: &BitSerialMatrix,
+        opts: MatmulOptions,
+    ) -> Result<(IntMatrix, RunReport), String> {
+        check_packed_pair(la, rb)?;
+        let (m, k, n) = (la.rows, la.cols, rb.rows);
+        let prec = Precision {
+            wbits: la.bits,
+            abits: rb.bits,
+            lsigned: la.signed,
+            rsigned: rb.signed,
+        };
 
         // DRAM placement: lhs | rhs | result, 8-byte aligned.
         let lhs = OperandLayout::new(0, m, k, prec.wbits, self.cfg.dk);
@@ -164,8 +224,8 @@ impl BismoContext {
         );
         let res = ResultLayout::new(round_up(rhs.base + rhs.total_bytes(), 8), m, n);
         let mut dram = DramImage::new((res.base + res.total_bytes()) as usize);
-        lhs.store(&mut dram, &la);
-        rhs.store(&mut dram, &rb);
+        lhs.store(&mut dram, la);
+        rhs.store(&mut dram, rb);
 
         let job = MatmulJob {
             m,
@@ -182,12 +242,12 @@ impl BismoContext {
 
         // Plane lists (bit-skip drops all-zero planes).
         let lhs_planes = if opts.bit_skip {
-            PlaneList::nonzero(&la)
+            PlaneList::nonzero(la)
         } else {
             PlaneList::full(prec.wbits, prec.lsigned)
         };
         let rhs_planes = if opts.bit_skip {
-            PlaneList::nonzero(&rb)
+            PlaneList::nonzero(rb)
         } else {
             PlaneList::full(prec.abits, prec.rsigned)
         };
@@ -223,7 +283,7 @@ impl BismoContext {
         let result = res.load(&sim.dram);
 
         if opts.verify {
-            let expect = gemm_bitserial(&la, &rb);
+            let expect = gemm_bitserial(la, rb);
             if result != expect {
                 return Err("verification failed: simulator result != CPU oracle".into());
             }
@@ -272,6 +332,35 @@ mod tests {
         assert!(rep.efficiency > 0.0 && rep.efficiency <= 1.0);
         assert!(rep.power_w > 1.0);
         assert_eq!(rep.lhs_planes, 3);
+    }
+
+    #[test]
+    fn matmul_packed_matches_matmul() {
+        // Pre-packing must be observationally identical to the packing
+        // matmul does internally — results AND timing.
+        let c = ctx();
+        let mut rng = Rng::new(0x9ACD);
+        let a = IntMatrix::random(&mut rng, 5, 150, 3, true);
+        let b = IntMatrix::random(&mut rng, 150, 7, 2, false);
+        let prec = Precision {
+            wbits: 3,
+            abits: 2,
+            lsigned: true,
+            rsigned: false,
+        };
+        let la = BitSerialMatrix::from_int(&a, prec.wbits, prec.lsigned);
+        let rb = BitSerialMatrix::from_int_transposed(&b, prec.abits, prec.rsigned);
+        let (p1, r1) = c.matmul(&a, &b, prec, MatmulOptions::default()).unwrap();
+        let (p2, r2) = c.matmul_packed(&la, &rb, MatmulOptions::default()).unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(r1.cycles, r2.cycles);
+        // k mismatch between packed operands is caught.
+        let short = BitSerialMatrix::from_int_transposed(
+            &IntMatrix::zeros(64, 7),
+            prec.abits,
+            prec.rsigned,
+        );
+        assert!(c.matmul_packed(&la, &short, MatmulOptions::default()).is_err());
     }
 
     #[test]

@@ -5,14 +5,30 @@
 //! layout, compile the instruction streams, run the functional+timing
 //! simulator, and return the result with a full [`RunReport`]
 //! (cycles, GOPS, efficiency, stage breakdown, power estimate).
+//! [`BismoContext::matmul_packed`] is the same contract over
+//! pre-packed operands.
 //!
 //! [`BismoBatchRunner`] adds the request-loop shape: a pool of worker
 //! threads, each with its own simulated overlay instance, draining a
 //! shared job queue — the software topology a multi-accelerator
 //! deployment of BISMO would use.
+//!
+//! [`BismoService`] is the serving layer on top (see `DESIGN.md`
+//! §Serving-Layer): an asynchronous submission queue with dynamic
+//! micro-batching, per-request backend selection through the
+//! [`ExecBackend`] trait (fast tiled engine vs cycle-accurate
+//! simulator), and a weight-stationary [`PackingCache`] that skips
+//! repacking operands reused across requests.
 
+mod cache;
 mod context;
 mod server;
+mod service;
 
+pub use cache::{check_fits, pack_operand, CacheStats, PackKey, PackingCache};
 pub use context::{BismoContext, MatmulOptions, Precision, RunReport};
 pub use server::{BatchOutcome, BismoBatchRunner};
+pub use service::{
+    Backend, BismoService, EngineBackend, ExecBackend, GemmRequest, GemmResponse, RequestHandle,
+    RequestOptions, ServiceConfig, SimBackend,
+};

@@ -10,6 +10,12 @@
 //! shares it across jobs (`matmul` is stateless per call), and drains
 //! batches on the persistent process-wide [`WorkerPool`] instead of
 //! spawning scoped threads per batch.
+//!
+//! The batch runner is the *closed-loop* shape: the caller assembles a
+//! batch, blocks, and gets every outcome back at once. For an open
+//! request stream — asynchronous submission, dynamic micro-batching,
+//! per-request backend choice and operand-packing reuse — use
+//! [`super::BismoService`] (see `DESIGN.md` §Serving-Layer).
 
 use super::context::{BismoContext, MatmulOptions, Precision, RunReport};
 use crate::arch::BismoConfig;

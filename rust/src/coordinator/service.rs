@@ -1,0 +1,806 @@
+//! The asynchronous serving layer: [`BismoService`].
+//!
+//! [`BismoBatchRunner`](super::BismoBatchRunner) drains one
+//! pre-assembled batch synchronously; a production deployment instead
+//! sees an *open stream* of independent GEMM requests (the layers of
+//! many concurrent QNN inferences). `BismoService` is that request
+//! loop:
+//!
+//! * **Submission queue** — [`BismoService::submit`] enqueues a
+//!   [`GemmRequest`] and returns a [`RequestHandle`] immediately; a
+//!   dispatcher thread forms *dynamic micro-batches* (whatever is
+//!   queued, up to [`ServiceConfig::max_batch`]) and drains each batch
+//!   concurrently on the shared [`WorkerPool`], capped at
+//!   [`ServiceConfig::workers`] lanes. Unlike the batch runner, the
+//!   caller never assembles a batch — but each micro-batch *does* drain
+//!   as a unit before the next is formed, so one slow request can hold
+//!   up to `max_batch − 1` peers plus the queue behind it.
+//!   [`ServiceConfig::max_batch`] bounds that head-of-line window:
+//!   keep it small (≈`workers`) for mixed sim/engine traffic, larger
+//!   for uniform throughput-oriented streams.
+//! * **Per-request backend selection** — the [`ExecBackend`] trait
+//!   abstracts "execute one GEMM over packed operands".
+//!   [`EngineBackend`] runs the fast tiled software engine
+//!   ([`crate::kernel::gemm_tiled`]); [`SimBackend`] runs the
+//!   cycle-accurate overlay simulator via
+//!   [`BismoContext::matmul_packed`] and returns a full [`RunReport`].
+//!   Requests pick per call via [`RequestOptions::backend`].
+//! * **Weight-stationary packing cache** — packed operands are cached
+//!   by content hash ([`PackingCache`]), so requests that reuse an
+//!   operand (QNN layer weights, the weight-stationary case) skip the
+//!   bit-plane decomposition entirely. By default only the RHS (the
+//!   weight side) is cached; one-shot LHS activations would churn the
+//!   cache, but [`RequestOptions::cache_lhs`] opts them in when they
+//!   recur. Packing happens outside the cache lock; only lookup/insert
+//!   are serialized.
+//!
+//! Results are bit-exact regardless of backend, caching or concurrency
+//! — property-tested against the CPU oracle in
+//! `rust/tests/service_concurrent.rs`.
+
+use super::cache::{check_fits, pack_operand, CacheStats, PackKey, PackingCache};
+use super::context::{check_packed_pair, BismoContext, MatmulOptions, Precision, RunReport};
+use crate::arch::BismoConfig;
+use crate::baseline::gemm_bitserial;
+use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
+use crate::kernel::{gemm_tiled_with, KernelConfig, WorkerPool};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Which execution backend serves a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// The fast tiled software engine (`kernel::engine`): lowest
+    /// latency, no hardware timing model ([`GemmResponse::report`] is
+    /// `None`).
+    Engine,
+    /// The cycle-accurate overlay simulator: every request additionally
+    /// yields a [`RunReport`] (cycles, GOPS, efficiency, power).
+    Sim,
+}
+
+impl Backend {
+    /// Stable lowercase name (CLI flag value / JSON field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Engine => "engine",
+            Backend::Sim => "sim",
+        }
+    }
+}
+
+/// One GEMM over pre-packed bit-serial operands. `la` is the decomposed
+/// LHS (`m×k`), `rb` the decomposed *transposed* RHS (`n×k`); both come
+/// from the packing cache or a fresh pack. Implementations must be
+/// bit-exact against [`crate::baseline::gemm_bitserial`].
+pub trait ExecBackend: Send + Sync {
+    /// Stable backend name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Execute, returning the `m×n` product and — if the backend models
+    /// hardware time — a [`RunReport`].
+    fn execute(
+        &self,
+        la: &BitSerialMatrix,
+        rb: &BitSerialMatrix,
+        opts: &MatmulOptions,
+    ) -> Result<(IntMatrix, Option<RunReport>), String>;
+}
+
+/// [`ExecBackend`] over the tiled plane-fused kernel engine.
+#[derive(Default)]
+pub struct EngineBackend {
+    /// Tile geometry handed to the engine.
+    pub kernel: KernelConfig,
+}
+
+impl ExecBackend for EngineBackend {
+    fn name(&self) -> &'static str {
+        "engine"
+    }
+
+    fn execute(
+        &self,
+        la: &BitSerialMatrix,
+        rb: &BitSerialMatrix,
+        _opts: &MatmulOptions,
+    ) -> Result<(IntMatrix, Option<RunReport>), String> {
+        check_packed_pair(la, rb)?;
+        // Single-lane inside the request: the micro-batch already runs
+        // `workers` requests concurrently on the pool, so per-request
+        // parallelism would only oversubscribe it.
+        Ok((gemm_tiled_with(la, rb, &self.kernel, None), None))
+    }
+}
+
+/// [`ExecBackend`] over the cycle-accurate simulator (one validated
+/// [`BismoContext`] shared by every request).
+pub struct SimBackend {
+    ctx: BismoContext,
+}
+
+impl SimBackend {
+    pub fn new(cfg: BismoConfig) -> Result<SimBackend, String> {
+        Ok(SimBackend {
+            ctx: BismoContext::new(cfg)?,
+        })
+    }
+
+    /// The shared overlay context.
+    pub fn context(&self) -> &BismoContext {
+        &self.ctx
+    }
+}
+
+impl ExecBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn execute(
+        &self,
+        la: &BitSerialMatrix,
+        rb: &BitSerialMatrix,
+        opts: &MatmulOptions,
+    ) -> Result<(IntMatrix, Option<RunReport>), String> {
+        self.ctx
+            .matmul_packed(la, rb, *opts)
+            .map(|(p, rep)| (p, Some(rep)))
+    }
+}
+
+/// Per-request serving options.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestOptions {
+    pub backend: Backend,
+    /// Skip all-zero bit-planes (sim backend; the engine always skips).
+    pub bit_skip: bool,
+    /// Cross-check the result against the CPU bit-serial oracle before
+    /// completing the request (costs an extra software GEMM).
+    pub verify: bool,
+    /// Cache this request's packed LHS. Off by default: in the served
+    /// workloads the LHS is a fresh activation matrix, and inserting
+    /// one-shot packings would only churn the cache. Flip it on when
+    /// the LHS genuinely recurs.
+    pub cache_lhs: bool,
+    /// Cache this request's packed RHS (the weight-stationary side).
+    /// On by default.
+    pub cache_rhs: bool,
+}
+
+impl Default for RequestOptions {
+    fn default() -> Self {
+        RequestOptions {
+            backend: Backend::Engine,
+            bit_skip: false,
+            verify: false,
+            cache_lhs: false,
+            cache_rhs: true,
+        }
+    }
+}
+
+/// One GEMM request: `a · b` at `prec`. Operands are `Arc`-shared so a
+/// weight matrix reused across thousands of requests is never copied.
+#[derive(Clone)]
+pub struct GemmRequest {
+    pub a: Arc<IntMatrix>,
+    pub b: Arc<IntMatrix>,
+    pub prec: Precision,
+    pub opts: RequestOptions,
+}
+
+impl GemmRequest {
+    /// Request with default options (engine backend, cache on).
+    pub fn new(
+        a: impl Into<Arc<IntMatrix>>,
+        b: impl Into<Arc<IntMatrix>>,
+        prec: Precision,
+    ) -> GemmRequest {
+        Self::with_opts(a, b, prec, RequestOptions::default())
+    }
+
+    pub fn with_opts(
+        a: impl Into<Arc<IntMatrix>>,
+        b: impl Into<Arc<IntMatrix>>,
+        prec: Precision,
+        opts: RequestOptions,
+    ) -> GemmRequest {
+        GemmRequest {
+            a: a.into(),
+            b: b.into(),
+            prec,
+            opts,
+        }
+    }
+}
+
+/// Everything a completed request reports back.
+#[derive(Clone, Debug)]
+pub struct GemmResponse {
+    /// The `m×n` product.
+    pub result: IntMatrix,
+    /// Cycle-accurate report ([`Backend::Sim`] only).
+    pub report: Option<RunReport>,
+    pub backend: Backend,
+    /// Wall-clock time from submission to the start of execution
+    /// (queueing + micro-batch formation), nanoseconds.
+    pub queue_ns: u64,
+    /// Wall-clock time spent packing operands (zero-ish on cache hits).
+    pub pack_ns: u64,
+    /// Wall-clock time inside the backend.
+    pub exec_ns: u64,
+    /// Wall-clock time from submission to completion.
+    pub total_ns: u64,
+    /// Whether the packed LHS / RHS came from the cache.
+    pub lhs_cached: bool,
+    pub rhs_cached: bool,
+}
+
+/// Completion slot shared between a [`RequestHandle`] and the worker
+/// that fills it. `done` is tracked separately from the take-once
+/// outcome so a `wait` after `try_take` errors instead of parking on a
+/// condvar nobody will signal again.
+#[derive(Default)]
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct SlotState {
+    outcome: Option<Result<GemmResponse, String>>,
+    done: bool,
+}
+
+impl Slot {
+    fn fill(&self, outcome: Result<GemmResponse, String>) {
+        let mut g = self.state.lock().unwrap();
+        g.outcome = Some(outcome);
+        g.done = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Handle to an in-flight request.
+pub struct RequestHandle {
+    slot: Arc<Slot>,
+}
+
+impl RequestHandle {
+    /// Block until the request completes. Errs (rather than hanging)
+    /// if the outcome was already consumed by [`RequestHandle::try_take`].
+    pub fn wait(self) -> Result<GemmResponse, String> {
+        let mut g = self.slot.state.lock().unwrap();
+        loop {
+            if g.done {
+                return g
+                    .outcome
+                    .take()
+                    .unwrap_or_else(|| Err("request outcome already taken".into()));
+            }
+            g = self.slot.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking poll; returns the outcome once, if complete.
+    pub fn try_take(&self) -> Option<Result<GemmResponse, String>> {
+        let mut g = self.slot.state.lock().unwrap();
+        if g.done {
+            g.outcome.take()
+        } else {
+            None
+        }
+    }
+}
+
+/// Service topology and resource limits.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Concurrent requests per micro-batch (the modeled number of
+    /// overlay instances).
+    pub workers: usize,
+    /// Maximum requests drained into one micro-batch.
+    pub max_batch: usize,
+    /// Packing-cache capacity in bytes; 0 disables the cache.
+    pub cache_bytes: usize,
+    /// Overlay configuration behind the [`Backend::Sim`] path.
+    pub overlay: BismoConfig,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 4,
+            max_batch: 16,
+            cache_bytes: 64 << 20,
+            overlay: BismoConfig::small(),
+        }
+    }
+}
+
+struct Inner {
+    cfg: ServiceConfig,
+    engine: EngineBackend,
+    sim: SimBackend,
+    queue: Mutex<VecDeque<Pending>>,
+    queue_cv: Condvar,
+    cache: Mutex<PackingCache>,
+    shutdown: AtomicBool,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+}
+
+struct Pending {
+    req: GemmRequest,
+    slot: Arc<Slot>,
+    since: Instant,
+}
+
+struct PackedOperands {
+    la: Arc<BitSerialMatrix>,
+    rb: Arc<BitSerialMatrix>,
+    lhs_cached: bool,
+    rhs_cached: bool,
+    pack_ns: u64,
+}
+
+/// A persistent, asynchronous GEMM service over the overlay stack.
+///
+/// ```
+/// use bismo::bitmatrix::IntMatrix;
+/// use bismo::coordinator::{BismoService, GemmRequest, Precision, ServiceConfig};
+///
+/// let svc = BismoService::new(ServiceConfig::default())?;
+/// let a = IntMatrix::from_slice(2, 2, &[2, 0, 1, 3]);
+/// let b = IntMatrix::from_slice(2, 2, &[0, 1, 1, 2]);
+/// // Submission returns immediately; `wait` blocks for the result.
+/// let handle = svc.submit(GemmRequest::new(a, b, Precision::unsigned(2, 2)));
+/// let resp = handle.wait()?;
+/// assert_eq!(resp.result, IntMatrix::from_slice(2, 2, &[0, 2, 3, 7]));
+/// # Ok::<(), String>(())
+/// ```
+pub struct BismoService {
+    inner: Arc<Inner>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BismoService {
+    /// Start the service: validates the overlay configuration and
+    /// spawns the dispatcher thread.
+    pub fn new(cfg: ServiceConfig) -> Result<BismoService, String> {
+        if cfg.workers == 0 || cfg.max_batch == 0 {
+            return Err("service workers and max_batch must be >= 1".into());
+        }
+        let inner = Arc::new(Inner {
+            engine: EngineBackend::default(),
+            sim: SimBackend::new(cfg.overlay)?,
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            cache: Mutex::new(PackingCache::new(cfg.cache_bytes)),
+            shutdown: AtomicBool::new(false),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            cfg,
+        });
+        let dispatcher = {
+            let inner = inner.clone();
+            std::thread::spawn(move || inner.dispatch_loop())
+        };
+        Ok(BismoService {
+            inner,
+            dispatcher: Some(dispatcher),
+        })
+    }
+
+    /// Enqueue a request. Returns at once; the result arrives through
+    /// the handle. Malformed requests fail with an error instead of
+    /// poisoning the pipeline: shape/precision mismatches complete
+    /// immediately (checked here in O(1)), while out-of-range operand
+    /// entries are caught at packing time (the scan is skipped on
+    /// cache hits, so reused weights are not rescanned per request).
+    pub fn submit(&self, req: GemmRequest) -> RequestHandle {
+        let slot = Arc::new(Slot::default());
+        let handle = RequestHandle { slot: slot.clone() };
+        if let Err(e) = validate(&req) {
+            slot.fill(Err(e));
+            return handle;
+        }
+        self.inner.submitted.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            q.push_back(Pending {
+                req,
+                slot,
+                since: Instant::now(),
+            });
+        }
+        self.inner.queue_cv.notify_one();
+        handle
+    }
+
+    /// Submit and wait — the synchronous convenience path.
+    pub fn run(&self, req: GemmRequest) -> Result<GemmResponse, String> {
+        self.submit(req).wait()
+    }
+
+    /// Packing-cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.inner.cache.lock().unwrap().stats()
+    }
+
+    /// Resident packed bytes in the cache.
+    pub fn cache_bytes(&self) -> usize {
+        self.inner.cache.lock().unwrap().bytes()
+    }
+
+    /// Resident cache entries.
+    pub fn cache_entries(&self) -> usize {
+        self.inner.cache.lock().unwrap().len()
+    }
+
+    /// Drop all cached packings (counters are kept).
+    pub fn clear_cache(&self) {
+        self.inner.cache.lock().unwrap().clear();
+    }
+
+    /// Requests submitted over the service's lifetime.
+    pub fn submitted(&self) -> u64 {
+        self.inner.submitted.load(Ordering::SeqCst)
+    }
+
+    /// Requests completed over the service's lifetime.
+    pub fn completed(&self) -> u64 {
+        self.inner.completed.load(Ordering::SeqCst)
+    }
+
+    /// Requests currently queued (not yet dispatched).
+    pub fn queue_depth(&self) -> usize {
+        self.inner.queue.lock().unwrap().len()
+    }
+}
+
+impl Drop for BismoService {
+    /// Graceful shutdown: the dispatcher drains every queued request
+    /// (no handle is left dangling), then exits.
+    fn drop(&mut self) {
+        {
+            // The flag must flip while holding the queue mutex: the
+            // dispatcher checks it under this lock before parking on
+            // `queue_cv`, so storing it lock-free could land between
+            // that check and the park — a lost wakeup that would leave
+            // `join` below waiting forever.
+            let _guard = self.inner.queue.lock().unwrap();
+            self.inner.shutdown.store(true, Ordering::SeqCst);
+            self.inner.queue_cv.notify_all();
+        }
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Constant-time request validation, run on the submitter thread.
+/// The O(elements) precision-range scan deliberately does NOT happen
+/// here: it runs at packing time ([`Inner::pack_one`]), where a cache
+/// hit proves the operand fit and skips the scan entirely — otherwise
+/// every request would rescan the shared weight matrix on the
+/// submitter's hot path.
+fn validate(req: &GemmRequest) -> Result<(), String> {
+    if req.a.cols != req.b.rows {
+        return Err(format!(
+            "shape mismatch: {}×{} · {}×{}",
+            req.a.rows, req.a.cols, req.b.rows, req.b.cols
+        ));
+    }
+    for (side, bits) in [("lhs wbits", req.prec.wbits), ("rhs abits", req.prec.abits)] {
+        if bits == 0 || bits > 32 {
+            return Err(format!("{side} must be in 1..=32, got {bits}"));
+        }
+    }
+    Ok(())
+}
+
+impl Inner {
+    /// Dispatcher: form a micro-batch from whatever is queued, drain it
+    /// concurrently, repeat. Exits only once shutdown is flagged AND
+    /// the queue is empty, so every accepted request completes.
+    fn dispatch_loop(&self) {
+        loop {
+            let batch: Vec<Pending> = {
+                let mut q = self.queue.lock().unwrap();
+                loop {
+                    if !q.is_empty() {
+                        break;
+                    }
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    q = self.queue_cv.wait(q).unwrap();
+                }
+                let take = q.len().min(self.cfg.max_batch);
+                q.drain(..take).collect()
+            };
+            self.run_batch(&batch);
+        }
+    }
+
+    fn run_batch(&self, batch: &[Pending]) {
+        WorkerPool::global().run_limited(batch.len(), self.cfg.workers, &|i| {
+            let p = &batch[i];
+            // A panic inside a request (a backend assertion, say) must
+            // fail that request, not kill the dispatcher and hang every
+            // future submitter.
+            let outcome =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.execute_one(p)))
+                    .unwrap_or_else(|payload| Err(format!("request panicked: {}", panic_msg(&payload))));
+            p.slot.fill(outcome);
+            self.completed.fetch_add(1, Ordering::SeqCst);
+        });
+    }
+
+    fn execute_one(&self, p: &Pending) -> Result<GemmResponse, String> {
+        let queue_ns = p.since.elapsed().as_nanos() as u64;
+        let req = &p.req;
+        let packed = self.pack_operands(req)?;
+        let t_exec = Instant::now();
+        let backend: &dyn ExecBackend = match req.opts.backend {
+            Backend::Engine => &self.engine,
+            Backend::Sim => &self.sim,
+        };
+        let mopts = MatmulOptions {
+            bit_skip: req.opts.bit_skip,
+            ..Default::default()
+        };
+        let (result, report) = backend.execute(&packed.la, &packed.rb, &mopts)?;
+        let exec_ns = t_exec.elapsed().as_nanos() as u64;
+        if req.opts.verify {
+            let expect = gemm_bitserial(&packed.la, &packed.rb);
+            if result != expect {
+                return Err(format!(
+                    "verification failed: {} backend != CPU oracle",
+                    backend.name()
+                ));
+            }
+        }
+        Ok(GemmResponse {
+            result,
+            report,
+            backend: req.opts.backend,
+            queue_ns,
+            pack_ns: packed.pack_ns,
+            exec_ns,
+            total_ns: p.since.elapsed().as_nanos() as u64,
+            lhs_cached: packed.lhs_cached,
+            rhs_cached: packed.rhs_cached,
+        })
+    }
+
+    fn pack_operands(&self, req: &GemmRequest) -> Result<PackedOperands, String> {
+        let t0 = Instant::now();
+        let (la, lhs_cached) = self.pack_one(
+            &req.a,
+            req.prec.wbits,
+            req.prec.lsigned,
+            false,
+            req.opts.cache_lhs,
+            "lhs",
+        )?;
+        let (rb, rhs_cached) = self.pack_one(
+            &req.b,
+            req.prec.abits,
+            req.prec.rsigned,
+            true,
+            req.opts.cache_rhs,
+            "rhs",
+        )?;
+        Ok(PackedOperands {
+            la,
+            rb,
+            lhs_cached,
+            rhs_cached,
+            pack_ns: t0.elapsed().as_nanos() as u64,
+        })
+    }
+
+    /// Cache-aware packing of one operand. Lookup and insert are short
+    /// critical sections; the pack itself runs outside the lock (two
+    /// racing misses may both pack — the second insert replaces the
+    /// first, and both results are identical by construction). A cache
+    /// hit proves the operand fit its declared precision when first
+    /// packed, so the range scan only runs on actual packs.
+    #[allow(clippy::too_many_arguments)]
+    fn pack_one(
+        &self,
+        m: &IntMatrix,
+        bits: u32,
+        signed: bool,
+        transposed: bool,
+        use_cache: bool,
+        side: &str,
+    ) -> Result<(Arc<BitSerialMatrix>, bool), String> {
+        if !use_cache || self.cfg.cache_bytes == 0 {
+            check_fits(m, bits, signed, side)?;
+            return Ok((Arc::new(pack_operand(m, bits, signed, transposed)), false));
+        }
+        let key = PackKey::of(m, bits, signed, transposed);
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return Ok((hit, true));
+        }
+        check_fits(m, bits, signed, side)?;
+        let packed = Arc::new(pack_operand(m, bits, signed, transposed));
+        self.cache.lock().unwrap().insert(key, packed.clone());
+        Ok((packed, false))
+    }
+}
+
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn svc() -> BismoService {
+        BismoService::new(ServiceConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn single_request_round_trip_engine_and_sim() {
+        let s = svc();
+        let mut rng = Rng::new(0x5EB);
+        let a = IntMatrix::random(&mut rng, 4, 100, 3, true);
+        let b = IntMatrix::random(&mut rng, 100, 5, 2, false);
+        let expect = a.matmul(&b);
+        let prec = Precision {
+            wbits: 3,
+            abits: 2,
+            lsigned: true,
+            rsigned: false,
+        };
+        for backend in [Backend::Engine, Backend::Sim] {
+            let opts = RequestOptions {
+                backend,
+                ..Default::default()
+            };
+            let resp = s
+                .run(GemmRequest::with_opts(a.clone(), b.clone(), prec, opts))
+                .unwrap();
+            assert_eq!(resp.result, expect, "{}", backend.name());
+            assert_eq!(resp.report.is_some(), backend == Backend::Sim);
+            assert!(resp.total_ns >= resp.exec_ns);
+        }
+        assert_eq!(s.submitted(), 2);
+        assert_eq!(s.completed(), 2);
+    }
+
+    #[test]
+    fn weight_reuse_is_served_from_cache() {
+        let s = svc();
+        let mut rng = Rng::new(0xCAFE);
+        let w = Arc::new(IntMatrix::random(&mut rng, 96, 8, 4, true));
+        let prec = Precision {
+            wbits: 2,
+            abits: 4,
+            lsigned: false,
+            rsigned: true,
+        };
+        let mut first = true;
+        for _ in 0..6 {
+            let x = IntMatrix::random(&mut rng, 3, 96, 2, false);
+            let expect = x.matmul(&w);
+            let resp = s.run(GemmRequest::new(x, w.clone(), prec)).unwrap();
+            assert_eq!(resp.result, expect);
+            assert_eq!(resp.rhs_cached, !first, "weight packing cached after first use");
+            assert!(!resp.lhs_cached, "fresh activations always miss");
+            first = false;
+        }
+        let stats = s.cache_stats();
+        assert_eq!(stats.hits, 5);
+        assert!(s.cache_entries() >= 1);
+        assert!(s.cache_bytes() > 0);
+    }
+
+    #[test]
+    fn invalid_requests_fail_cleanly_and_service_survives() {
+        let s = svc();
+        // Shape mismatch.
+        let bad = GemmRequest::new(
+            IntMatrix::zeros(2, 3),
+            IntMatrix::zeros(4, 2),
+            Precision::unsigned(1, 1),
+        );
+        assert!(s.run(bad).is_err());
+        // Operand outside the declared precision.
+        let too_wide = GemmRequest::new(
+            IntMatrix::from_slice(1, 1, &[100]),
+            IntMatrix::zeros(1, 1),
+            Precision::unsigned(2, 2),
+        );
+        assert!(s.run(too_wide).is_err());
+        // A valid request afterwards still completes.
+        let ok = GemmRequest::new(
+            IntMatrix::from_slice(1, 1, &[1]),
+            IntMatrix::from_slice(1, 1, &[1]),
+            Precision::unsigned(1, 1),
+        );
+        assert_eq!(s.run(ok).unwrap().result, IntMatrix::from_slice(1, 1, &[1]));
+    }
+
+    #[test]
+    fn micro_batch_preserves_per_request_results() {
+        let s = BismoService::new(ServiceConfig {
+            workers: 3,
+            max_batch: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut rng = Rng::new(0xBA7C);
+        let jobs: Vec<(IntMatrix, IntMatrix)> = (0..12)
+            .map(|_| {
+                let k = rng.index(128) + 1;
+                (
+                    IntMatrix::random(&mut rng, 2, k, 2, false),
+                    IntMatrix::random(&mut rng, k, 3, 2, false),
+                )
+            })
+            .collect();
+        let handles: Vec<_> = jobs
+            .iter()
+            .map(|(a, b)| {
+                s.submit(GemmRequest::new(
+                    a.clone(),
+                    b.clone(),
+                    Precision::unsigned(2, 2),
+                ))
+            })
+            .collect();
+        for (h, (a, b)) in handles.into_iter().zip(&jobs) {
+            assert_eq!(h.wait().unwrap().result, a.matmul(b));
+        }
+    }
+
+    #[test]
+    fn drop_drains_outstanding_requests() {
+        let s = svc();
+        let mut rng = Rng::new(0xD0);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let a = IntMatrix::random(&mut rng, 2, 64, 1, false);
+                let b = IntMatrix::random(&mut rng, 64, 2, 1, false);
+                s.submit(GemmRequest::new(a, b, Precision::unsigned(1, 1)))
+            })
+            .collect();
+        drop(s);
+        for h in handles {
+            assert!(h.wait().is_ok(), "request completed during shutdown drain");
+        }
+    }
+
+    #[test]
+    fn verify_option_cross_checks() {
+        let s = svc();
+        let mut rng = Rng::new(0x7E7);
+        let a = IntMatrix::random(&mut rng, 3, 70, 2, true);
+        let b = IntMatrix::random(&mut rng, 70, 3, 2, true);
+        let opts = RequestOptions {
+            verify: true,
+            backend: Backend::Sim,
+            ..Default::default()
+        };
+        let resp = s
+            .run(GemmRequest::with_opts(a.clone(), b.clone(), Precision::signed(2, 2), opts))
+            .unwrap();
+        assert_eq!(resp.result, a.matmul(&b));
+    }
+}

@@ -13,10 +13,10 @@
 //! region 0 is now full") is a software convention of the scheduler,
 //! exactly as in the paper (§III-C1a).
 //!
-//! [`encode`] gives every instruction a fixed 128-bit binary encoding
-//! with range-checked fields — the contract a hardware instruction
-//! decoder would implement — and [`program`] bundles per-stage streams
-//! with legality validation and a disassembler.
+//! [`encode()`]/[`decode()`] give every instruction a fixed 128-bit
+//! binary encoding with range-checked fields — the contract a hardware
+//! instruction decoder would implement — and [`Program`] bundles
+//! per-stage streams with legality validation and a disassembler.
 
 mod encode;
 mod program;

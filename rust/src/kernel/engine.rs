@@ -90,6 +90,19 @@ impl PackedOperand {
 /// Tiled bit-serial GEMM, single-threaded: `P = L · Rᵀ` with `L`
 /// (`m×k`) and `r_t` the transposed RHS (`n×k`), both bit-plane
 /// decomposed. Bit-exact against [`crate::baseline::gemm_bitserial`].
+///
+/// ```
+/// use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
+/// use bismo::kernel::gemm_tiled;
+///
+/// // The paper's Fig. 1 operands at 2-bit unsigned precision.
+/// let a = IntMatrix::from_slice(2, 2, &[2, 0, 1, 3]);
+/// let b = IntMatrix::from_slice(2, 2, &[0, 1, 1, 2]);
+/// let la = BitSerialMatrix::from_int(&a, 2, false);
+/// // The RHS is packed transposed (rows along k), in one fused pass.
+/// let rb = BitSerialMatrix::from_int_transposed(&b, 2, false);
+/// assert_eq!(gemm_tiled(&la, &rb), a.matmul(&b));
+/// ```
 pub fn gemm_tiled(l: &BitSerialMatrix, r_t: &BitSerialMatrix) -> IntMatrix {
     gemm_tiled_with(l, r_t, &KernelConfig::default(), None)
 }

@@ -8,8 +8,9 @@
 //! * [`gemm_tiled`] / [`gemm_tiled_parallel`] — cache-blocked,
 //!   zero-plane-skipping GEMM over packed plane rows (see [`engine`]).
 //! * [`WorkerPool`] — persistent work-claiming thread pool reused by
-//!   the engine, [`crate::baseline::gemm_bitserial_parallel`] and
-//!   [`crate::coordinator::BismoBatchRunner`] (see [`pool`]).
+//!   the engine, [`crate::baseline::gemm_bitserial_parallel`],
+//!   [`crate::coordinator::BismoBatchRunner`] and the micro-batches of
+//!   [`crate::coordinator::BismoService`] (see [`pool`]).
 //! * [`popcount_and`] — the unrolled AND+popcount word-strip primitive,
 //!   also used by the simulator's execute stage.
 

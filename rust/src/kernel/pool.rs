@@ -128,7 +128,20 @@ impl WorkerPool {
 
     /// Run `f(0..tasks)` across the pool; returns when every task has
     /// completed. Tasks must be independent (they run concurrently, in
-    /// no particular order).
+    /// no particular order). This is the pool's job-submission entry
+    /// point; [`WorkerPool::run_limited`] additionally caps concurrency.
+    ///
+    /// ```
+    /// use bismo::kernel::WorkerPool;
+    /// use std::sync::atomic::{AtomicU64, Ordering};
+    ///
+    /// let pool = WorkerPool::new(4);
+    /// let sum = AtomicU64::new(0);
+    /// pool.run(100, &|i| {
+    ///     sum.fetch_add(i as u64, Ordering::SeqCst);
+    /// });
+    /// assert_eq!(sum.load(Ordering::SeqCst), 4950);
+    /// ```
     pub fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
         self.run_limited(tasks, usize::MAX, f);
     }

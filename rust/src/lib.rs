@@ -30,11 +30,17 @@
 //! * [`kernel`] — the fast software path: tiled, plane-fused,
 //!   zero-plane-skipping bit-serial GEMM engine plus the persistent
 //!   worker pool shared by every parallel path in the crate.
-//! * [`runtime`] — PJRT CPU client: loads the AOT-compiled JAX/Pallas
+//! * `runtime` — PJRT CPU client: loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust.
 //!   Gated behind the `xla` cargo feature (needs the PJRT plugin and
-//!   the `xla`/`anyhow` crates, absent from the offline registry).
-//! * [`coordinator`] — the public API tying everything together.
+//!   the `xla`/`anyhow` crates, absent from the offline registry), so
+//!   it is deliberately not an intra-doc link here.
+//! * [`coordinator`] — the public API tying everything together:
+//!   [`coordinator::BismoContext`] for one synchronous matmul,
+//!   [`coordinator::BismoBatchRunner`] for one pre-assembled batch, and
+//!   [`coordinator::BismoService`] — the asynchronous serving layer
+//!   with dynamic micro-batching, per-request backend selection and a
+//!   weight-stationary packing cache (`DESIGN.md` §Serving-Layer).
 //! * [`qnn`] — quantized-neural-network layers running on the overlay.
 //! * [`report`] — table/figure formatting used by the benchmark harness.
 //! * [`util`] — PRNG, CSV, timing helpers (offline build: no external deps).
@@ -58,4 +64,4 @@ pub mod util;
 
 pub use arch::{BismoConfig, Platform};
 pub use bitmatrix::{BitSerialMatrix, IntMatrix};
-pub use coordinator::{BismoContext, Precision, RunReport};
+pub use coordinator::{BismoContext, BismoService, Precision, RunReport};

@@ -9,6 +9,12 @@
 //! bismo schedule [--instance N] [--m M --k K --n N ...]   dump queues
 //! bismo bench [--quick] [--out PATH] [--threads N]   CPU kernel suite
 //!                                           -> BENCH_gemm.json
+//! bismo serve-bench [--quick] [--backend engine|sim] [--requests N]
+//!                [--rate RPS] [--layers L] [--workers W] [--batch B]
+//!                [--m M --k K --n N --wbits W --abits A] [--out PATH]
+//!                open-loop load generator against the async serving
+//!                layer -> BENCH_serve.json (latency percentiles,
+//!                throughput, packing-cache repack-avoidance win)
 //! bismo costmodel [--instance N]            LUT/BRAM prediction
 //! bismo synth [--dk N]                      DPU virtual synthesis
 //! bismo power                               Table V power model
@@ -373,6 +379,301 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// `bismo serve-bench`: open-loop load generator against the async
+/// serving layer ([`bismo::coordinator::BismoService`]).
+///
+/// The workload is the weight-stationary QNN serving pattern: `layers`
+/// weight matrices (`k×n`, signed `wbits`) are reused round-robin as
+/// the RHS while every request carries a fresh activation matrix
+/// (`m×k`, unsigned `abits`). Requests arrive open-loop with
+/// exponential inter-arrival times at `rate` req/s, are micro-batched
+/// by the service, and per-request latency is measured submit→complete.
+///
+/// The same request stream then replays against a cache-disabled
+/// service, and the difference in packing time is reported as the
+/// repack-avoidance win. Results go to `BENCH_serve.json`
+/// (schema documented in the README).
+fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<(), String> {
+    use bismo::coordinator::{
+        Backend, BismoService, GemmRequest, Precision, RequestOptions, ServiceConfig,
+    };
+    use bismo::util::bench::Samples;
+    use bismo::util::Json;
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    struct Phase {
+        lat: Samples,
+        wall_s: f64,
+        pack_ns: u64,
+        exec_ns: u64,
+        queue_ns: u64,
+        rhs_hits: u64,
+        cache: bismo::coordinator::CacheStats,
+        cache_entries: usize,
+        cache_resident_bytes: usize,
+    }
+
+    // Packing-cache capacity of the cache-on phase; also what the
+    // emitted `service.cache_capacity_bytes` field reports.
+    const SERVE_CACHE_BYTES: usize = 256 << 20;
+
+    let quick = flags.contains_key("quick");
+    let requests = get(flags, "requests", if quick { 64usize } else { 384 }).max(1);
+    let layers = get(flags, "layers", 3usize).max(1);
+    let m = get(flags, "m", 16usize);
+    let k = get(flags, "k", 512usize);
+    let n = get(flags, "n", 128usize);
+    let wbits = get(flags, "wbits", 4u32); // weight (RHS) precision, signed
+    let abits = get(flags, "abits", 2u32); // activation (LHS) precision, unsigned
+    let default_threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4);
+    // Clamp to the pool's real lane count so the JSON reports the
+    // concurrency that actually executed, not an aspirational figure.
+    let workers = get(flags, "workers", default_threads)
+        .max(1)
+        .min(bismo::kernel::WorkerPool::global().lanes());
+    let max_batch = get(flags, "batch", 16usize).max(1);
+    let rate: f64 = get(flags, "rate", if quick { 4000.0 } else { 2000.0 });
+    let backend = match flags.get("backend").map(|s| s.as_str()) {
+        None | Some("engine") => Backend::Engine,
+        Some("sim") => Backend::Sim,
+        Some(other) => return Err(format!("unknown --backend {other} (engine|sim)")),
+    };
+    let out_path = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "BENCH_serve.json".to_string());
+    let overlay = config_from(flags);
+    let seed = get(flags, "seed", 0x5E17Eu64);
+    if rate <= 0.0 {
+        return Err("--rate must be positive".into());
+    }
+
+    // The weight-stationary workload: reused weights, fresh activations.
+    let mut rng = Rng::new(seed);
+    let prec = Precision {
+        wbits: abits, // LHS = activations
+        abits: wbits, // RHS = weights
+        lsigned: false,
+        rsigned: true,
+    };
+    let weights: Vec<Arc<IntMatrix>> = (0..layers)
+        .map(|_| Arc::new(IntMatrix::random(&mut rng, k, n, wbits, true)))
+        .collect();
+    let acts: Vec<Arc<IntMatrix>> = (0..requests)
+        .map(|_| Arc::new(IntMatrix::random(&mut rng, m, k, abits, false)))
+        .collect();
+    // Open-loop arrival schedule: exponential inter-arrival at `rate`.
+    let mut arrivals = Vec::with_capacity(requests);
+    let mut t = 0.0f64;
+    for _ in 0..requests {
+        t += -(1.0 - rng.f64()).ln() / rate;
+        arrivals.push(Duration::from_secs_f64(t));
+    }
+
+    let run_phase = |cache_bytes: usize| -> Result<Phase, String> {
+        let svc = BismoService::new(ServiceConfig {
+            workers,
+            max_batch,
+            cache_bytes,
+            overlay,
+        })?;
+        let opts = RequestOptions {
+            backend,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let mut handles = Vec::with_capacity(requests);
+        for i in 0..requests {
+            loop {
+                let el = t0.elapsed();
+                if el >= arrivals[i] {
+                    break;
+                }
+                std::thread::sleep((arrivals[i] - el).min(Duration::from_micros(500)));
+            }
+            handles.push(svc.submit(GemmRequest::with_opts(
+                acts[i].clone(),
+                weights[i % layers].clone(),
+                prec,
+                opts,
+            )));
+        }
+        let mut lat = Vec::with_capacity(requests);
+        let (mut pack_ns, mut exec_ns, mut queue_ns, mut rhs_hits) = (0u64, 0u64, 0u64, 0u64);
+        for (i, h) in handles.into_iter().enumerate() {
+            let r = h.wait()?;
+            // Correctness gate on the first pass over the weight set.
+            if i < layers && r.result != acts[i].matmul(&weights[i % layers]) {
+                return Err(format!("request {i}: service result != reference"));
+            }
+            lat.push(r.total_ns as f64);
+            pack_ns += r.pack_ns;
+            exec_ns += r.exec_ns;
+            queue_ns += r.queue_ns;
+            rhs_hits += r.rhs_cached as u64;
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok(Phase {
+            lat: Samples { ns: lat },
+            wall_s,
+            pack_ns,
+            exec_ns,
+            queue_ns,
+            rhs_hits,
+            cache: svc.cache_stats(),
+            cache_entries: svc.cache_entries(),
+            cache_resident_bytes: svc.cache_bytes(),
+        })
+    };
+
+    println!(
+        "serve-bench: {requests} requests, {layers} reused weight(s) {k}x{n} w{wbits}s, \
+         activations {m}x{k} a{abits}u, {} backend, open loop at {rate} req/s",
+        backend.name()
+    );
+    let on = run_phase(SERVE_CACHE_BYTES)?;
+    let off = run_phase(0)?;
+
+    let repack_avoided_ns = off.pack_ns.saturating_sub(on.pack_ns);
+    let pack_speedup = if on.pack_ns == 0 {
+        0.0
+    } else {
+        off.pack_ns as f64 / on.pack_ns as f64
+    };
+    let throughput = requests as f64 / on.wall_s;
+
+    let lat_json = |s: &Samples| {
+        let mut o = BTreeMap::new();
+        o.insert("p50".to_string(), Json::num(s.percentile(50.0)));
+        o.insert("p90".to_string(), Json::num(s.percentile(90.0)));
+        o.insert("p99".to_string(), Json::num(s.percentile(99.0)));
+        o.insert("max".to_string(), Json::num(s.max()));
+        o.insert("mean".to_string(), Json::num(s.mean()));
+        o
+    };
+
+    let mut workload = BTreeMap::new();
+    workload.insert("requests".to_string(), Json::num(requests as f64));
+    workload.insert("layers".to_string(), Json::num(layers as f64));
+    workload.insert("m".to_string(), Json::num(m as f64));
+    workload.insert("k".to_string(), Json::num(k as f64));
+    workload.insert("n".to_string(), Json::num(n as f64));
+    workload.insert("wbits".to_string(), Json::num(wbits as f64));
+    workload.insert("abits".to_string(), Json::num(abits as f64));
+    workload.insert("rate_rps".to_string(), Json::num(rate));
+    workload.insert("seed".to_string(), Json::num(seed as f64));
+
+    let mut service = BTreeMap::new();
+    service.insert("workers".to_string(), Json::num(workers as f64));
+    service.insert("max_batch".to_string(), Json::num(max_batch as f64));
+    service.insert(
+        "cache_capacity_bytes".to_string(),
+        Json::num(SERVE_CACHE_BYTES as f64),
+    );
+
+    let mut cache = BTreeMap::new();
+    cache.insert("hits".to_string(), Json::num(on.cache.hits as f64));
+    cache.insert("misses".to_string(), Json::num(on.cache.misses as f64));
+    cache.insert("hit_rate".to_string(), Json::num(on.cache.hit_rate()));
+    cache.insert("evictions".to_string(), Json::num(on.cache.evictions as f64));
+    cache.insert("entries".to_string(), Json::num(on.cache_entries as f64));
+    cache.insert(
+        "resident_bytes".to_string(),
+        Json::num(on.cache_resident_bytes as f64),
+    );
+    cache.insert(
+        "rhs_hit_requests".to_string(),
+        Json::num(on.rhs_hits as f64),
+    );
+
+    let mut pack = BTreeMap::new();
+    pack.insert("cache_on_total_ns".to_string(), Json::num(on.pack_ns as f64));
+    pack.insert(
+        "cache_off_total_ns".to_string(),
+        Json::num(off.pack_ns as f64),
+    );
+    pack.insert(
+        "avoided_ns".to_string(),
+        Json::num(repack_avoided_ns as f64),
+    );
+    pack.insert(
+        "avoided_ns_per_request".to_string(),
+        Json::num(repack_avoided_ns as f64 / requests as f64),
+    );
+    pack.insert("speedup".to_string(), Json::num(pack_speedup));
+
+    let mut per_request = BTreeMap::new();
+    per_request.insert(
+        "queue_ns_mean".to_string(),
+        Json::num(on.queue_ns as f64 / requests as f64),
+    );
+    per_request.insert(
+        "pack_ns_mean".to_string(),
+        Json::num(on.pack_ns as f64 / requests as f64),
+    );
+    per_request.insert(
+        "exec_ns_mean".to_string(),
+        Json::num(on.exec_ns as f64 / requests as f64),
+    );
+
+    let mut cache_off = BTreeMap::new();
+    cache_off.insert("latency_ns".to_string(), Json::Obj(lat_json(&off.lat)));
+    cache_off.insert(
+        "throughput_rps".to_string(),
+        Json::num(requests as f64 / off.wall_s),
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), Json::str("bismo-bench-serve/v1"));
+    root.insert(
+        "mode".to_string(),
+        Json::str(if quick { "quick" } else { "full" }),
+    );
+    root.insert("backend".to_string(), Json::str(backend.name()));
+    root.insert(
+        "generated_unix".to_string(),
+        Json::num(
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs() as f64)
+                .unwrap_or(0.0),
+        ),
+    );
+    root.insert("workload".to_string(), Json::Obj(workload));
+    root.insert("service".to_string(), Json::Obj(service));
+    root.insert("latency_ns".to_string(), Json::Obj(lat_json(&on.lat)));
+    root.insert("throughput_rps".to_string(), Json::num(throughput));
+    root.insert("cache".to_string(), Json::Obj(cache));
+    root.insert("pack".to_string(), Json::Obj(pack));
+    root.insert("per_request".to_string(), Json::Obj(per_request));
+    root.insert("cache_off".to_string(), Json::Obj(cache_off));
+    let doc = Json::Obj(root);
+    std::fs::write(&out_path, doc.pretty(2) + "\n")
+        .map_err(|e| format!("writing {out_path}: {e}"))?;
+
+    println!(
+        "wrote {out_path}: p50 {:.0} µs  p99 {:.0} µs  throughput {:.0} req/s",
+        on.lat.percentile(50.0) / 1e3,
+        on.lat.percentile(99.0) / 1e3,
+        throughput
+    );
+    println!(
+        "packing cache: {} hits / {} misses (hit rate {:.0}%), repack avoided {:.1} µs/request \
+         ({:.2}x less packing than cache-off)",
+        on.cache.hits,
+        on.cache.misses,
+        on.cache.hit_rate() * 100.0,
+        repack_avoided_ns as f64 / requests as f64 / 1e3,
+        pack_speedup
+    );
+    Ok(())
+}
+
 fn cmd_costmodel(flags: &HashMap<String, String>) -> Result<(), String> {
     let model = CostModel::paper();
     let fitted = CostModel::fit_from_synth();
@@ -506,9 +807,10 @@ fn cmd_info() -> Result<(), String> {
     Ok(())
 }
 
-const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|bench|costmodel|synth|power|instances|info> [flags]
+const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|bench|serve-bench|costmodel|synth|power|instances|info> [flags]
 flags: --instance N  --m M --k K --n N  --wbits W --abits A  --signed --no-overlap --bit-skip  --seed S  --dk N
-bench: --quick  --out PATH (default BENCH_gemm.json)  --threads N";
+bench: --quick  --out PATH (default BENCH_gemm.json)  --threads N
+serve-bench: --quick  --backend engine|sim  --requests N  --rate RPS  --layers L  --workers W  --batch B  --out PATH (default BENCH_serve.json)";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -519,6 +821,7 @@ fn main() {
         "simulate" => cmd_simulate(&flags),
         "schedule" => cmd_schedule(&flags),
         "bench" => cmd_bench(&flags),
+        "serve-bench" => cmd_serve_bench(&flags),
         "costmodel" => cmd_costmodel(&flags),
         "synth" => cmd_synth(&flags),
         "power" => cmd_power(),

@@ -3,13 +3,21 @@
 use super::mlp::FloatMlp;
 use super::quantize::{quantize_activations, quantize_weights_symmetric, requantize};
 use crate::bitmatrix::IntMatrix;
-use crate::coordinator::{BismoContext, MatmulOptions, Precision, RunReport};
+use crate::coordinator::{
+    BismoContext, BismoService, GemmRequest, GemmResponse, MatmulOptions, Precision,
+    RequestOptions, RunReport,
+};
+use std::sync::Arc;
 
 /// A quantized 3-layer MLP ready for the overlay.
+///
+/// Weights are `Arc`-shared so serving-layer requests reference them
+/// without copying (the weight-stationary contract: the matrices are
+/// packed once by the service's cache and never cloned per request).
 pub struct QnnMlp {
-    pub w1: IntMatrix,
-    pub w2: IntMatrix,
-    pub w3: IntMatrix,
+    pub w1: Arc<IntMatrix>,
+    pub w2: Arc<IntMatrix>,
+    pub w3: Arc<IntMatrix>,
     pub wbits: u32,
     pub abits: u32,
     /// Requantization shifts after layers 1 and 2 (static, like the
@@ -25,9 +33,9 @@ impl QnnMlp {
         let (w2, _) = quantize_weights_symmetric(&mlp.w[1], d1, d2, wbits);
         let (w3, _) = quantize_weights_symmetric(&mlp.w[2], d2, d3, wbits);
         QnnMlp {
-            w1,
-            w2,
-            w3,
+            w1: Arc::new(w1),
+            w2: Arc::new(w2),
+            w3: Arc::new(w3),
             wbits,
             abits,
             shifts,
@@ -77,6 +85,47 @@ impl QnnMlp {
         let (logits, r3) = ctx.matmul(&h2, &self.w3, prec(2), opts)?;
         reports.push(r3);
         Ok((logits, reports))
+    }
+
+    /// Forward pass through the serving layer: each GEMM is submitted
+    /// to a persistent [`BismoService`] and executed on the backend the
+    /// options select. Layer weights are identical across calls, so the
+    /// service's weight-stationary packing cache serves them without
+    /// repacking from the second inference on — the QNN serving pattern
+    /// the cache exists for.
+    ///
+    /// Returns the logits plus the per-layer [`GemmResponse`]s (timing,
+    /// cache attribution, and — on the sim backend — full
+    /// [`RunReport`]s).
+    pub fn forward_on_service(
+        &self,
+        svc: &BismoService,
+        x: impl Into<Arc<IntMatrix>>,
+        opts: RequestOptions,
+    ) -> Result<(IntMatrix, Vec<GemmResponse>), String> {
+        let prec = Precision {
+            wbits: self.abits, // LHS = activations (unsigned)
+            abits: self.wbits, // RHS = weights (signed)
+            lsigned: false,
+            rsigned: true,
+        };
+        // Layers are data-dependent, so submit→wait per layer; the
+        // weight (RHS) packings still reuse across calls via the cache.
+        // `x` moves in (callers that still need it pass a clone or Arc).
+        let x: Arc<IntMatrix> = x.into();
+        let r1 = svc
+            .submit(GemmRequest::with_opts(x, self.w1.clone(), prec, opts))
+            .wait()?;
+        let h1 = requantize(&r1.result, self.shifts.0, self.abits);
+        let r2 = svc
+            .submit(GemmRequest::with_opts(h1, self.w2.clone(), prec, opts))
+            .wait()?;
+        let h2 = requantize(&r2.result, self.shifts.1, self.abits);
+        let r3 = svc
+            .submit(GemmRequest::with_opts(h2, self.w3.clone(), prec, opts))
+            .wait()?;
+        let logits = r3.result.clone();
+        Ok((logits, vec![r1, r2, r3]))
     }
 
     /// Argmax predictions from logits.
@@ -133,6 +182,40 @@ mod tests {
         assert_eq!(got, want);
         assert_eq!(reports.len(), 3);
         assert!(reports.iter().all(|r| r.cycles > 0));
+    }
+
+    #[test]
+    fn service_matches_reference_and_reuses_weight_packings() {
+        use crate::coordinator::{Backend, ServiceConfig};
+        let (q, d) = quantized_model();
+        let svc = BismoService::new(ServiceConfig::default()).unwrap();
+        let opts = RequestOptions {
+            backend: Backend::Engine,
+            ..Default::default()
+        };
+        for chunk in d.test_x[..8].chunks(4) {
+            let x = q.quantize_input(chunk);
+            let want = q.forward_reference(&x);
+            let (got, responses) = q.forward_on_service(&svc, x.clone(), opts).unwrap();
+            assert_eq!(got, want);
+            assert_eq!(responses.len(), 3);
+        }
+        // Second inference onward, every layer's weight packing is a
+        // cache hit: 3 layers × 1 repeat here = 3 hits minimum.
+        assert!(
+            svc.cache_stats().hits >= 3,
+            "weight reuse must hit the packing cache: {:?}",
+            svc.cache_stats()
+        );
+        // Sim backend agrees bit-exactly and carries reports.
+        let x = q.quantize_input(&d.test_x[..2]);
+        let sim_opts = RequestOptions {
+            backend: Backend::Sim,
+            ..Default::default()
+        };
+        let (sim_logits, responses) = q.forward_on_service(&svc, x.clone(), sim_opts).unwrap();
+        assert_eq!(sim_logits, q.forward_reference(&x));
+        assert!(responses.iter().all(|r| r.report.is_some()));
     }
 
     #[test]

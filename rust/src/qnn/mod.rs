@@ -8,9 +8,12 @@
 //!   SGD: the model that gets quantized.
 //! * [`quantize`] — symmetric weight quantization + activation
 //!   quantization to the overlay's operand precisions.
-//! * [`infer`] — integer-only inference: a reference path (pure i64)
-//!   and the overlay path where every GEMM runs through
-//!   [`crate::coordinator::BismoContext`]; both must agree bit-exactly
+//! * [`infer`] — integer-only inference: a reference path (pure i64),
+//!   the overlay path where every GEMM runs through
+//!   [`crate::coordinator::BismoContext`], and the serving path where
+//!   GEMMs are submitted to [`crate::coordinator::BismoService`] (layer
+//!   weights are weight-stationary, so the service's packing cache
+//!   skips repacking them per request); all must agree bit-exactly
 //!   with the AOT-compiled JAX artifact.
 
 pub mod dataset;

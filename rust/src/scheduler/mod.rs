@@ -5,14 +5,14 @@
 //! [`BismoConfig`], the scheduler:
 //!
 //! 1. **Tiles** the output into `D_m × D_n` tiles and the inner `k`
-//!    dimension into `D_k`-bit chunks ([`plan`]).
+//!    dimension into `D_k`-bit chunks ([`plan()`]).
 //! 2. Picks a **schedule mode**: `RhsResident` keeps a group of RHS
 //!    tile-columns on-chip and streams LHS tiles past them
 //!    (double-buffered), minimizing DRAM traffic; `Streaming` falls back
 //!    to per-tile-pair fetching with `k`-slicing when buffers are too
 //!    small to hold full dot products.
 //! 3. **Emits** fetch/execute/result instructions with the token
-//!    protocol that lets the three stages overlap ([`emit`]), or a
+//!    protocol that lets the three stages overlap ([`emit()`]), or a
 //!    fully serialized variant ([`Overlap::None`]) used for the paper's
 //!    stage-overlap experiment (§IV-B3).
 //!
@@ -87,7 +87,7 @@ impl PlaneList {
 
 /// Compile `job` into a program for `cfg`.
 ///
-/// Convenience wrapper over [`plan`] + [`emit`] with full plane lists.
+/// Convenience wrapper over [`plan()`] + [`emit()`] with full plane lists.
 pub fn compile(job: &MatmulJob, cfg: &BismoConfig, overlap: Overlap) -> Result<Program, String> {
     let lhs_planes = PlaneList::full(job.wbits, job.lsigned);
     let rhs_planes = PlaneList::full(job.abits, job.rsigned);

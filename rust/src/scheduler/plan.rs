@@ -86,7 +86,7 @@ impl MatmulJob {
     }
 }
 
-/// Schedule structure chosen by [`plan`].
+/// Schedule structure chosen by [`plan()`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
     /// A group of `tiles_per_group` RHS tile-columns stays resident in

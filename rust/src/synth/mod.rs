@@ -6,8 +6,9 @@
 //! circuit* — e.g. the popcount compressor tree is actually built, level
 //! by level, for the requested width — and mapping it onto Xilinx
 //! 7-series primitives (6-input LUTs, CARRY4 chains) with documented
-//! packing rules ([`lutmap`]). Delay/Fmax comes from the mapped depth
-//! and a simple wire-load model ([`timing`]).
+//! packing rules (the `lutmap` mapper behind [`MappedCircuit`]).
+//! Delay/Fmax comes from the mapped depth and a simple wire-load model
+//! (the `timing` module behind [`fmax_mhz`]).
 //!
 //! What this preserves from real synthesis (and what the paper's figures
 //! demonstrate): the *structural scaling* of each component — popcount

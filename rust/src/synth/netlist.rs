@@ -5,7 +5,7 @@
 //! well-understood datapath circuits (compressors, carry-chain adders,
 //! mux stages). Each node records its LUT cost, register count and the
 //! delay it adds on top of its deepest predecessor; the mapper
-//! ([`super::lutmap`]) folds the graph into totals.
+//! (`super::lutmap`) folds the graph into totals.
 
 /// Handle to a netlist node. `NodeId(0)` is the primary-input pseudo
 /// node (depth 0, zero cost).

@@ -30,6 +30,15 @@ impl Samples {
     pub fn min(&self) -> f64 {
         *self.ns.first().unwrap()
     }
+    pub fn max(&self) -> f64 {
+        *self.ns.last().unwrap()
+    }
+    /// Arbitrary percentile in `[0, 100]` (nearest-rank on the sorted
+    /// samples) — the latency-distribution accessor `serve-bench` uses
+    /// for its p50/p90/p99 report.
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile_sorted(&self.ns, p)
+    }
 }
 
 fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
@@ -169,5 +178,8 @@ mod tests {
         assert_eq!(s.median(), 3.0);
         assert_eq!(s.p95(), 5.0);
         assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert_eq!(s.max(), 5.0);
     }
 }

@@ -149,9 +149,9 @@ impl Json {
 /// else with enough digits to round-trip.
 fn fmt_number(n: f64) -> String {
     if !n.is_finite() {
-        // JSON has no Inf/NaN; emit null-adjacent zero rather than
-        // invalid output.
-        return "0".to_string();
+        // JSON has no Inf/NaN; emit `null` so a degenerate metric reads
+        // as missing downstream instead of masquerading as a real zero.
+        return "null".to_string();
     }
     if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 {
         format!("{}", n as i64)
@@ -412,6 +412,15 @@ mod tests {
         assert_eq!(Json::Num(-3.0).dump(), "-3");
         assert_eq!(Json::Num(0.5).dump(), "0.5");
         assert_eq!(Json::Num(1.5e20).dump(), "150000000000000000000");
+    }
+
+    #[test]
+    fn non_finite_numbers_dump_as_null() {
+        // JSON has no Inf/NaN; a degenerate metric must read as missing,
+        // not as a legitimate zero.
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        assert_eq!(Json::parse(&Json::Num(f64::NAN).dump()).unwrap(), Json::Null);
     }
 
     #[test]

@@ -15,6 +15,17 @@ pub use csv::CsvWriter;
 pub use json::Json;
 pub use rng::Rng;
 
+/// splitmix64 finalizer: one full-avalanche mixing round. Shared by the
+/// PRNG's seed expansion ([`Rng::new`]) and the packing cache's content
+/// hash ([`crate::bitmatrix::IntMatrix::content_hash`]) so the mixer
+/// constants live in exactly one place.
+#[inline]
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
 /// Integer ceiling division. Used throughout the timing and cost models
 /// (`ceil(k / D_k)` chunks, `ceil(B_m / 1024)` BRAM tiles, ...).
 #[inline]

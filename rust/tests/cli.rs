@@ -101,6 +101,52 @@ fn bench_quick_writes_json() {
 }
 
 #[test]
+fn serve_bench_quick_writes_json_with_percentiles_and_cache_win() {
+    let out = std::env::temp_dir().join(format!("bismo_serve_{}.json", std::process::id()));
+    let out_str = out.to_str().unwrap().to_string();
+    let (ok, text) = bismo(&[
+        "serve-bench", "--quick", "--requests", "32", "--rate", "8000", "--workers", "2",
+        "--batch", "4", "--out", &out_str,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("throughput"), "{text}");
+    assert!(text.contains("packing cache"), "{text}");
+    let json = std::fs::read_to_string(&out).expect("serve bench json written");
+    let _ = std::fs::remove_file(&out);
+    let doc = bismo::util::Json::parse(&json).expect("valid json");
+    assert_eq!(
+        doc.get("schema").and_then(|s| s.as_str()),
+        Some("bismo-bench-serve/v1")
+    );
+    assert_eq!(doc.get("mode").and_then(|s| s.as_str()), Some("quick"));
+    let lat = doc.get("latency_ns").expect("latency_ns");
+    for key in ["p50", "p90", "p99", "max", "mean"] {
+        let v = lat.get(key).and_then(|v| v.as_f64()).expect(key);
+        assert!(v > 0.0, "{key} must be positive: {json}");
+    }
+    let thr = doc
+        .get("throughput_rps")
+        .and_then(|v| v.as_f64())
+        .expect("throughput_rps");
+    assert!(thr > 0.0);
+    // The weight-reuse workload must show cache traffic and a measured
+    // repack-avoidance comparison against the cache-off phase.
+    let cache = doc.get("cache").expect("cache");
+    assert!(cache.get("hits").and_then(|v| v.as_f64()).unwrap() > 0.0, "{json}");
+    let pack = doc.get("pack").expect("pack");
+    for key in [
+        "cache_on_total_ns",
+        "cache_off_total_ns",
+        "avoided_ns",
+        "avoided_ns_per_request",
+        "speedup",
+    ] {
+        assert!(pack.get(key).is_some(), "pack missing {key}: {json}");
+    }
+    assert!(doc.get("cache_off").and_then(|c| c.get("latency_ns")).is_some());
+}
+
+#[test]
 fn unknown_command_usage() {
     let (ok, text) = bismo(&["frobnicate"]);
     assert!(!ok);

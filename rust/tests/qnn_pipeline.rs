@@ -100,7 +100,10 @@ fn batch_runner_serves_mixed_precision_layers() {
             let x = q.quantize_input(chunk);
             (
                 x,
-                q.w1.clone(),
+                // The batch runner takes owned IntMatrix jobs; deep-copy
+                // the Arc-shared weight (the serving layer avoids this —
+                // see BismoService).
+                (*q.w1).clone(),
                 Precision {
                     wbits: 2,
                     abits: 4,

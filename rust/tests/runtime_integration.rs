@@ -109,7 +109,8 @@ fn qnn_artifact_matches_rust_quantized_model() {
     let x = q.quantize_input(&d.test_x[..16]);
     let want = q.forward_reference(&x);
 
-    let got = exe.run_i32(&[&x, &q.w1, &q.w2, &q.w3]).expect("execute");
+    let inputs: [&bismo::bitmatrix::IntMatrix; 4] = [&x, &q.w1, &q.w2, &q.w3];
+    let got = exe.run_i32(&inputs).expect("execute");
     assert_eq!(got, want, "JAX QNN artifact vs Rust integer reference");
 
     // And the full overlay path agrees too.

@@ -1,0 +1,243 @@
+//! Integration tests for the asynchronous serving layer: results must
+//! be bit-exact against the CPU bit-serial oracle under concurrent
+//! submission, across backends, and with the packing cache on or off.
+
+use bismo::arch::BismoConfig;
+use bismo::baseline::gemm_bitserial;
+use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
+use bismo::coordinator::{
+    Backend, BismoService, GemmRequest, Precision, RequestOptions, ServiceConfig,
+};
+use bismo::util::{property_sweep, Rng};
+use std::sync::Arc;
+
+fn service(workers: usize, max_batch: usize, cache_bytes: usize) -> BismoService {
+    BismoService::new(ServiceConfig {
+        workers,
+        max_batch,
+        cache_bytes,
+        overlay: BismoConfig::small(),
+    })
+    .unwrap()
+}
+
+/// Oracle product via the naive bit-serial reference.
+fn oracle(a: &IntMatrix, b: &IntMatrix, prec: Precision) -> IntMatrix {
+    let la = BitSerialMatrix::from_int(a, prec.wbits, prec.lsigned);
+    let rb = BitSerialMatrix::from_int_transposed(b, prec.abits, prec.rsigned);
+    gemm_bitserial(&la, &rb)
+}
+
+#[test]
+fn concurrent_submitters_get_bit_exact_results() {
+    // Several OS threads hammer one service concurrently; every result
+    // must match both the i64 reference and the bit-serial oracle.
+    let svc = service(4, 8, 32 << 20);
+    std::thread::scope(|scope| {
+        for t in 0..4u64 {
+            let svc = &svc;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0xC0 + t);
+                for i in 0..6 {
+                    let m = rng.index(8) + 1;
+                    let k = rng.index(200) + 1;
+                    let n = rng.index(8) + 1;
+                    let w = rng.index(4) as u32 + 1;
+                    let ab = rng.index(4) as u32 + 1;
+                    let prec = Precision {
+                        wbits: w,
+                        abits: ab,
+                        lsigned: true,
+                        rsigned: false,
+                    };
+                    let a = IntMatrix::random(&mut rng, m, k, w, true);
+                    let b = IntMatrix::random(&mut rng, k, n, ab, false);
+                    let backend = if rng.chance(0.3) {
+                        Backend::Sim
+                    } else {
+                        Backend::Engine
+                    };
+                    let opts = RequestOptions {
+                        backend,
+                        ..Default::default()
+                    };
+                    let expect = a.matmul(&b);
+                    assert_eq!(expect, oracle(&a, &b, prec), "thread {t} job {i} oracle");
+                    let resp = svc
+                        .run(GemmRequest::with_opts(a, b, prec, opts))
+                        .unwrap_or_else(|e| panic!("thread {t} job {i}: {e}"));
+                    assert_eq!(resp.result, expect, "thread {t} job {i}");
+                }
+            });
+        }
+    });
+    assert_eq!(svc.submitted(), 24);
+    assert_eq!(svc.completed(), 24);
+}
+
+#[test]
+fn backends_agree_with_each_other_and_the_oracle() {
+    let svc = service(2, 4, 16 << 20);
+    property_sweep(0x5E2C, 10, |rng, case| {
+        let m = rng.index(10) + 1;
+        let k = rng.index(180) + 1;
+        let n = rng.index(10) + 1;
+        let w = rng.index(3) as u32 + 1;
+        let ab = rng.index(3) as u32 + 1;
+        let (ls, rs) = (rng.chance(0.5), rng.chance(0.5));
+        let prec = Precision {
+            wbits: w,
+            abits: ab,
+            lsigned: ls,
+            rsigned: rs,
+        };
+        let a = Arc::new(IntMatrix::random(rng, m, k, w, ls));
+        let b = Arc::new(IntMatrix::random(rng, k, n, ab, rs));
+        // Opt the LHS into the cache too: the same operands go to both
+        // backends, exercising reuse on both sides.
+        let engine = svc
+            .run(GemmRequest::with_opts(
+                a.clone(),
+                b.clone(),
+                prec,
+                RequestOptions {
+                    backend: Backend::Engine,
+                    cache_lhs: true,
+                    ..Default::default()
+                },
+            ))
+            .unwrap();
+        let sim = svc
+            .run(GemmRequest::with_opts(
+                a.clone(),
+                b.clone(),
+                prec,
+                RequestOptions {
+                    backend: Backend::Sim,
+                    cache_lhs: true,
+                    ..Default::default()
+                },
+            ))
+            .unwrap();
+        assert_eq!(engine.result, sim.result, "case {case}");
+        assert_eq!(engine.result, oracle(&a, &b, prec), "case {case} oracle");
+        assert!(engine.report.is_none());
+        assert!(sim.report.is_some());
+        // Same operands twice: the second request's packings are hits.
+        assert!(sim.lhs_cached && sim.rhs_cached, "case {case} cache reuse");
+    });
+}
+
+#[test]
+fn cache_on_and_off_are_observationally_identical() {
+    let with_cache = service(2, 4, 32 << 20);
+    let without_cache = service(2, 4, 0);
+    let mut rng = Rng::new(0x0FF);
+    let w = Arc::new(IntMatrix::random(&mut rng, 130, 6, 4, true));
+    let prec = Precision {
+        wbits: 2,
+        abits: 4,
+        lsigned: false,
+        rsigned: true,
+    };
+    for _ in 0..5 {
+        let x = Arc::new(IntMatrix::random(&mut rng, 4, 130, 2, false));
+        let on = with_cache
+            .run(GemmRequest::new(x.clone(), w.clone(), prec))
+            .unwrap();
+        let off = without_cache
+            .run(GemmRequest::new(x.clone(), w.clone(), prec))
+            .unwrap();
+        assert_eq!(on.result, off.result);
+        assert!(!off.lhs_cached && !off.rhs_cached, "cache-off never hits");
+    }
+    assert_eq!(with_cache.cache_stats().hits, 4, "weight reused 4 times");
+    assert_eq!(without_cache.cache_stats().hits, 0);
+    assert_eq!(without_cache.cache_bytes(), 0);
+}
+
+#[test]
+fn open_stream_of_async_submissions_preserves_request_identity() {
+    // Fire a burst of async submissions (more than one micro-batch),
+    // then collect out of order: each handle must carry exactly its
+    // own request's product.
+    let svc = service(3, 4, 16 << 20);
+    let mut rng = Rng::new(0xA57);
+    let jobs: Vec<(Arc<IntMatrix>, Arc<IntMatrix>)> = (0..20)
+        .map(|_| {
+            let k = rng.index(150) + 1;
+            (
+                Arc::new(IntMatrix::random(&mut rng, 3, k, 2, false)),
+                Arc::new(IntMatrix::random(&mut rng, k, 4, 3, true)),
+            )
+        })
+        .collect();
+    let prec = Precision {
+        wbits: 2,
+        abits: 3,
+        lsigned: false,
+        rsigned: true,
+    };
+    let handles: Vec<_> = jobs
+        .iter()
+        .map(|(a, b)| svc.submit(GemmRequest::new(a.clone(), b.clone(), prec)))
+        .collect();
+    // Collect in reverse order to decouple completion from submission.
+    for (h, (a, b)) in handles.into_iter().zip(&jobs).rev() {
+        assert_eq!(h.wait().unwrap().result, a.matmul(b));
+    }
+}
+
+#[test]
+fn bit_skip_on_sim_backend_stays_exact_through_the_cache() {
+    let svc = service(2, 4, 16 << 20);
+    // Even-valued operand: the LSB plane is empty, bit-skip drops it.
+    let a = IntMatrix::from_fn(4, 128, |r, c| (((r + c) % 4) as i64) * 2);
+    let b = Arc::new(IntMatrix::from_fn(128, 4, |r, c| ((r * c) % 4) as i64));
+    let prec = Precision {
+        wbits: 3,
+        abits: 2,
+        lsigned: false,
+        rsigned: false,
+    };
+    let expect = a.matmul(&b);
+    for bit_skip in [false, true, true] {
+        let opts = RequestOptions {
+            backend: Backend::Sim,
+            bit_skip,
+            ..Default::default()
+        };
+        let resp = svc
+            .run(GemmRequest::with_opts(a.clone(), b.clone(), prec, opts))
+            .unwrap();
+        assert_eq!(resp.result, expect, "bit_skip={bit_skip}");
+        if bit_skip {
+            let rep = resp.report.unwrap();
+            assert_eq!(rep.lhs_planes, 2, "LSB plane skipped");
+        }
+    }
+}
+
+#[test]
+fn verify_option_holds_across_backends() {
+    let svc = service(2, 2, 1 << 20);
+    let mut rng = Rng::new(0x7E57);
+    let a = IntMatrix::random(&mut rng, 4, 96, 3, true);
+    let b = IntMatrix::random(&mut rng, 96, 4, 3, true);
+    for backend in [Backend::Engine, Backend::Sim] {
+        let opts = RequestOptions {
+            backend,
+            verify: true,
+            ..Default::default()
+        };
+        let resp = svc
+            .run(GemmRequest::with_opts(
+                a.clone(),
+                b.clone(),
+                Precision::signed(3, 3),
+                opts,
+            ))
+            .unwrap();
+        assert_eq!(resp.result, a.matmul(&b), "{}", backend.name());
+    }
+}
