@@ -7,8 +7,8 @@
 //! 1. generate a synthetic 784-d digit dataset (MNIST stand-in),
 //! 2. train a float MLP (784-256-256-10) in-crate with SGD,
 //! 3. post-training-quantize to w4 (weights) / a2 (activations),
-//! 4. serve batched inference through `BismoService` where EVERY GEMM
-//!    runs on the cycle-accurate overlay simulator backend (Table IV
+//! 4. serve batched inference through a `bismo::api::Session` where
+//!    EVERY GEMM runs on the cycle-accurate overlay simulator (Table IV
 //!    instance #2) — layer weights are weight-stationary, so from the
 //!    second batch on the service's packing cache hands each layer its
 //!    pre-packed weights without repacking,
@@ -20,8 +20,9 @@
 //!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
-use bismo::arch::instance;
-use bismo::coordinator::{Backend, BismoService, RequestOptions, ServiceConfig};
+use bismo::api::{Backend, Session, SessionConfig};
+use bismo::arch::try_instance;
+use bismo::coordinator::RequestOptions;
 use bismo::qnn::{FloatMlp, QnnMlp, SyntheticDigits};
 use bismo::report::{f, pct, Table};
 use std::time::Instant;
@@ -57,15 +58,18 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let q_acc = QnnMlp::accuracy(&ref_logits, &data.test_y);
     println!("quantized (w4/a2) accuracy: {}", pct(q_acc));
 
-    // 4. Serve batches through the async service (sim backend: every
-    //    GEMM is simulated cycle-accurately on instance #2).
-    let cfg = instance(2);
-    let svc = BismoService::new(ServiceConfig {
+    // 4. Serve batches through the api facade (sim backend: every
+    //    GEMM is simulated cycle-accurately on instance #2). The
+    //    Session owns the worker pool, both backends and the
+    //    weight-stationary packing cache.
+    let cfg = try_instance(2)?;
+    let session = Session::new(SessionConfig {
         workers: 4,
         max_batch: 8,
         overlay: cfg,
         ..Default::default()
     })?;
+    let svc = session.service();
     let opts = RequestOptions {
         backend: Backend::Sim,
         ..Default::default()
@@ -83,7 +87,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     for (bi, chunk) in data.test_x.chunks(batch).take(8).enumerate() {
         batches_served += 1;
         let x = q.quantize_input(chunk);
-        let (logits, responses) = q.forward_on_service(&svc, x.clone(), opts)?;
+        let (logits, responses) = q.forward_on_service(svc, x.clone(), opts)?;
         // The serving layer must be bit-exact against the integer
         // reference on every batch.
         assert_eq!(
@@ -142,14 +146,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         cfg.fclk_mhz,
         wall.elapsed()
     );
-    let cs = svc.cache_stats();
+    let cs = session.cache_stats();
     println!(
         "packing cache: {} hits / {} misses ({} entries, {} KiB resident) — \
          {} of {} batches served their weights without repacking",
         cs.hits,
         cs.misses,
-        svc.cache_entries(),
-        svc.cache_bytes() / 1024,
+        session.cache_entries(),
+        session.cache_bytes() / 1024,
         batches_served.saturating_sub(1),
         batches_served
     );
@@ -168,7 +172,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let x = q.quantize_input(&data.test_x[..16]);
             let inputs: [&IntMatrix; 4] = [&x, &q.w1, &q.w2, &q.w3];
             let jax_logits = exe.run_i32(&inputs)?;
-            let (service_logits, _) = q.forward_on_service(&svc, x.clone(), opts)?;
+            let (service_logits, _) = q.forward_on_service(svc, x.clone(), opts)?;
             assert_eq!(jax_logits, service_logits, "JAX artifact vs serving layer");
             println!("PJRT cross-check: JAX/Pallas QNN artifact agrees bit-exactly ✓");
         }

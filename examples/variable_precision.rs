@@ -3,23 +3,24 @@
 //! precision (contrast with a fixed-precision accelerator that always
 //! pays for its maximum).
 //!
-//! Routed through the asynchronous serving layer: all seven precision
-//! jobs are submitted up front and drain concurrently as one dynamic
-//! micro-batch on the simulator backend; every result is asserted
-//! against the i64 reference product before being reported.
+//! Routed through the `bismo::api` facade: one [`Session`] owns the
+//! worker pool and backends, a [`bismo::api::MatmulBuilder`] per
+//! precision submits asynchronously, and all seven jobs drain
+//! concurrently as one dynamic micro-batch on the simulator backend;
+//! every result is verified against the CPU bit-serial oracle (the
+//! builder's `verify(true)`) and asserted against the i64 reference
+//! before being reported.
 
-use bismo::arch::instance;
+use bismo::api::{Backend, Precision, Session, SessionConfig};
+use bismo::arch::try_instance;
 use bismo::bitmatrix::IntMatrix;
-use bismo::coordinator::{
-    Backend, BismoService, GemmRequest, Precision, RequestOptions, ServiceConfig,
-};
 use bismo::report::{f, Table};
 use bismo::util::Rng;
 use std::sync::Arc;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let cfg = instance(2);
-    let svc = BismoService::new(ServiceConfig {
+    let cfg = try_instance(2)?;
+    let session = Session::new(SessionConfig {
         workers: 4,
         overlay: cfg,
         ..Default::default()
@@ -28,38 +29,33 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut rng = Rng::new(0xFACE);
 
     // Submit everything asynchronously, then collect in order: the
-    // service forms micro-batches from whatever is queued.
+    // session's serving layer forms micro-batches from whatever is
+    // queued.
     let precisions = [(1u32, 1u32), (2, 2), (3, 3), (4, 4), (5, 5), (6, 6), (8, 8)];
-    let opts = RequestOptions {
-        backend: Backend::Sim,
-        verify: true,
-        ..Default::default()
-    };
     let mut jobs = Vec::new();
     for &(w, a) in &precisions {
         let am = Arc::new(IntMatrix::random(&mut rng, m, k, w, false));
         let bm = Arc::new(IntMatrix::random(&mut rng, k, n, a, false));
-        let handle = svc.submit(GemmRequest::with_opts(
-            am.clone(),
-            bm.clone(),
-            Precision::unsigned(w, a),
-            opts,
-        ));
+        let handle = session
+            .matmul(Precision::try_new(w, a, false, false)?)
+            .backend(Backend::Sim)
+            .verify(true)
+            .submit(am.clone(), bm.clone())?;
         jobs.push((w, a, am, bm, handle));
     }
 
     let mut table = Table::new(
-        "variable precision on one overlay (64x4096x64, instance #2, via BismoService)",
+        "variable precision on one overlay (64x4096x64, instance #2, via bismo::api::Session)",
         &["precision", "cycles", "µs", "vs binary", "w*a", "effective GOPS"],
     );
     let mut binary = 0u64;
     for (w, a, am, bm, handle) in jobs {
         let resp = handle.wait()?;
-        // The serving layer must agree exactly with the i64 reference.
+        // The facade must agree exactly with the i64 reference.
         assert_eq!(
             resp.result,
             am.matmul(&bm),
-            "service result mismatch at {w}x{a}-bit"
+            "session result mismatch at {w}x{a}-bit"
         );
         let rep = resp
             .report

@@ -4,7 +4,7 @@
 
 use bismo::baseline::{binary_ops, gemm_bitserial};
 use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
-use bismo::kernel::{gemm_tiled, gemm_tiled_parallel, gemm_tiled_with, KernelConfig};
+use bismo::kernel::{gemm_tiled, gemm_tiled_with, KernelConfig, WorkerPool};
 use bismo::util::bench::{report, BenchTimer};
 use bismo::util::Rng;
 
@@ -47,7 +47,14 @@ fn main() {
             "  -> tiled speedup {:.2}x over baseline (1 thread)",
             base_ns / s.median()
         );
-        let s = t.run(|| gemm_tiled_parallel(&la, &rb, threads));
+        let s = t.run(|| {
+            gemm_tiled_with(
+                &la,
+                &rb,
+                &KernelConfig::default(),
+                Some((WorkerPool::global(), threads)),
+            )
+        });
         report(
             &format!("tiled_{m}x{k}x{n}_w{w}a{a}_{threads}t"),
             &s,

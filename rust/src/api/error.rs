@@ -1,0 +1,159 @@
+//! [`BismoError`]: the crate-wide typed error.
+//!
+//! Every fallible public entry point in the crate returns this enum
+//! instead of a bare `String`, so callers can *branch on failure
+//! kinds* — retry a [`BismoError::CapacityExceeded`] with a smaller
+//! tile, surface a [`BismoError::PrecisionUnsupported`] to the client
+//! that picked the precision, treat [`BismoError::ServiceShutdown`] as
+//! back-pressure — while the payload keeps the human-readable detail
+//! the old strings carried.
+
+use crate::sim::SimError;
+use crate::util::json::JsonError;
+
+/// Why a BISMO operation failed.
+///
+/// Constructed throughout arch / scheduler / isa / sim / coordinator /
+/// qnn and surfaced unchanged by the [`crate::api::Session`] facade.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BismoError {
+    /// A hardware configuration, platform or service topology parameter
+    /// is invalid (e.g. non-power-of-two `D_k`, zero workers, unknown
+    /// Table IV instance id).
+    InvalidConfig(String),
+    /// Operand shapes are inconsistent: `a.cols != b.rows`, packed
+    /// operands disagree on `k`, or a DRAM layout does not match its
+    /// job.
+    ShapeMismatch(String),
+    /// A precision is outside the supported range (`wbits`/`abits` must
+    /// be in `1..=32` and jointly fit the accumulator), or operand
+    /// entries do not fit their declared precision.
+    PrecisionUnsupported(String),
+    /// A resource budget was exceeded: platform LUT/BRAM under the cost
+    /// model, on-chip buffer depths, or an ISA encoding field.
+    CapacityExceeded(String),
+    /// An instruction stream violated the ISA's legality rules (wrong
+    /// queue, token imbalance, malformed encoded word).
+    IllegalProgram(String),
+    /// The cycle-accurate simulator rejected or faulted on a run.
+    SimFault(SimError),
+    /// A computed result failed cross-checking against the CPU
+    /// bit-serial oracle.
+    VerifyFailed(String),
+    /// The service is shutting down and no longer accepts submissions.
+    ServiceShutdown,
+    /// A request outcome was already consumed (e.g. `try_take` followed
+    /// by `wait` on the same handle).
+    ResultConsumed,
+    /// A worker panicked while executing a request; the payload carries
+    /// the panic message.
+    WorkerPanicked(String),
+    /// Filesystem or OS I/O failed.
+    Io(String),
+    /// Input text (JSON manifest, CLI flag value) failed to parse.
+    Parse(String),
+}
+
+impl BismoError {
+    /// Stable lowercase kind tag, for logs and metrics dimensions.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            BismoError::InvalidConfig(_) => "invalid_config",
+            BismoError::ShapeMismatch(_) => "shape_mismatch",
+            BismoError::PrecisionUnsupported(_) => "precision_unsupported",
+            BismoError::CapacityExceeded(_) => "capacity_exceeded",
+            BismoError::IllegalProgram(_) => "illegal_program",
+            BismoError::SimFault(_) => "sim_fault",
+            BismoError::VerifyFailed(_) => "verify_failed",
+            BismoError::ServiceShutdown => "service_shutdown",
+            BismoError::ResultConsumed => "result_consumed",
+            BismoError::WorkerPanicked(_) => "worker_panicked",
+            BismoError::Io(_) => "io",
+            BismoError::Parse(_) => "parse",
+        }
+    }
+}
+
+impl std::fmt::Display for BismoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BismoError::InvalidConfig(m) => write!(f, "invalid config: {m}"),
+            BismoError::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
+            BismoError::PrecisionUnsupported(m) => write!(f, "unsupported precision: {m}"),
+            BismoError::CapacityExceeded(m) => write!(f, "capacity exceeded: {m}"),
+            BismoError::IllegalProgram(m) => write!(f, "illegal program: {m}"),
+            BismoError::SimFault(e) => write!(f, "simulation: {e}"),
+            BismoError::VerifyFailed(m) => write!(f, "verification failed: {m}"),
+            BismoError::ServiceShutdown => write!(f, "service is shutting down"),
+            BismoError::ResultConsumed => write!(f, "request outcome already taken"),
+            BismoError::WorkerPanicked(m) => write!(f, "request panicked: {m}"),
+            BismoError::Io(m) => write!(f, "io: {m}"),
+            BismoError::Parse(m) => write!(f, "parse: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for BismoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BismoError::SimFault(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<SimError> for BismoError {
+    fn from(e: SimError) -> Self {
+        BismoError::SimFault(e)
+    }
+}
+
+impl From<JsonError> for BismoError {
+    fn from(e: JsonError) -> Self {
+        BismoError::Parse(e.to_string())
+    }
+}
+
+impl From<std::io::Error> for BismoError {
+    fn from(e: std::io::Error) -> Self {
+        BismoError::Io(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_detail_and_kind_is_stable() {
+        let e = BismoError::PrecisionUnsupported("wbits must be in 1..=32, got 0".into());
+        let s = e.to_string();
+        assert!(s.contains("unsupported precision"), "{s}");
+        assert!(s.contains("wbits"), "{s}");
+        assert_eq!(e.kind(), "precision_unsupported");
+        assert_eq!(BismoError::ServiceShutdown.kind(), "service_shutdown");
+    }
+
+    #[test]
+    fn sim_error_converts_and_chains() {
+        use std::error::Error;
+        let e: BismoError = SimError::BadConfig("D_k must be a power of two".into()).into();
+        assert_eq!(e.kind(), "sim_fault");
+        assert!(e.to_string().contains("power of two"));
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn callers_can_branch_on_kind() {
+        // The point of the redesign: failure kinds are matchable.
+        let errs = [
+            BismoError::ShapeMismatch("2x3 · 4x2".into()),
+            BismoError::ServiceShutdown,
+        ];
+        let retriable = errs
+            .iter()
+            .filter(|e| matches!(e, BismoError::ServiceShutdown))
+            .count();
+        assert_eq!(retriable, 1);
+    }
+}

@@ -1,0 +1,52 @@
+//! The `bismo::api` facade: the crate's single front door.
+//!
+//! Three entry-point families grew side by side as the crate scaled —
+//! the raw kernel functions (`kernel::gemm_tiled*`), the synchronous
+//! overlay context ([`crate::coordinator::BismoContext`]), and the
+//! asynchronous serving layer ([`crate::coordinator::BismoService`]).
+//! This module unifies them behind three types:
+//!
+//! * [`Session`] — owns the serving stack: the shared
+//!   [`crate::kernel::WorkerPool`], the weight-stationary
+//!   [`crate::coordinator::PackingCache`], and the registered execution
+//!   backends (the fast tiled engine and the cycle-accurate overlay
+//!   simulator). One session serves many concurrent callers.
+//! * [`MatmulBuilder`] — per-job configuration (precision, backend,
+//!   stage overlap, bit-skip, verification, cache policy), validated
+//!   *before* any work is queued.
+//! * [`Prepared`] — the prepare-once-execute-many handle: weights are
+//!   packed into the session cache once and executed against any
+//!   number of activation matrices, with per-execute precision
+//!   override for variable-precision workloads (cf. the run-time
+//!   reconfigurable multi-precision designs this crate's ROADMAP
+//!   tracks).
+//!
+//! Every fallible call returns the typed [`BismoError`], so callers
+//! branch on failure kinds instead of parsing strings.
+//!
+//! ```
+//! use bismo::api::{Session, SessionConfig};
+//! use bismo::coordinator::Precision;
+//! use bismo::bitmatrix::IntMatrix;
+//!
+//! let session = Session::new(SessionConfig::default())?;
+//! // The paper's Fig. 1 example through the facade.
+//! let l = IntMatrix::from_slice(2, 2, &[2, 0, 1, 3]);
+//! let r = IntMatrix::from_slice(2, 2, &[0, 1, 1, 2]);
+//! let resp = session.run(l, r, Precision::unsigned(2, 2))?;
+//! assert_eq!(resp.result, IntMatrix::from_slice(2, 2, &[0, 2, 3, 7]));
+//! # Ok::<(), bismo::api::BismoError>(())
+//! ```
+
+mod error;
+mod session;
+
+pub use error::BismoError;
+pub use session::{MatmulBuilder, Prepared, Session, SessionConfig};
+
+// The vocabulary types a facade caller needs, re-exported so
+// `use bismo::api::*` is a complete import for application code.
+pub use crate::coordinator::{
+    Backend, CacheStats, GemmResponse, Precision, RequestHandle, RunReport,
+};
+pub use crate::scheduler::Overlap;

@@ -1,0 +1,484 @@
+//! [`Session`], [`MatmulBuilder`] and [`Prepared`]: the facade types.
+
+use super::BismoError;
+use crate::bitmatrix::IntMatrix;
+use crate::coordinator::{
+    Backend, BismoService, CacheStats, GemmRequest, GemmResponse, Precision, RequestHandle,
+    RequestOptions, ServiceConfig,
+};
+use crate::scheduler::Overlap;
+use std::sync::Arc;
+
+/// Topology and resource limits of a [`Session`] — worker lanes,
+/// micro-batch size, packing-cache capacity and the overlay instance
+/// behind the simulator backend. (The same shape the serving layer
+/// uses; the facade and the service are configured identically.)
+pub type SessionConfig = ServiceConfig;
+
+/// One running BISMO stack: worker pool, packing cache and both
+/// execution backends, shared by every job submitted through it.
+///
+/// `Session` is the crate's intended entry point. It wraps the
+/// asynchronous serving layer, so a single session concurrently serves
+/// synchronous calls ([`Session::run`]), asynchronous submissions
+/// ([`MatmulBuilder::submit`]) and prepared-operand replay
+/// ([`Prepared::execute`]) — all micro-batched onto the same worker
+/// lanes, all sharing one weight-stationary cache.
+pub struct Session {
+    svc: BismoService,
+}
+
+impl Session {
+    /// Start a session: validates the overlay configuration, registers
+    /// the engine and simulator backends and spawns the dispatcher.
+    pub fn new(cfg: SessionConfig) -> Result<Session, BismoError> {
+        Ok(Session {
+            svc: BismoService::new(cfg)?,
+        })
+    }
+
+    /// A session with the default topology (4 workers, 64 MiB cache,
+    /// the small test overlay behind the sim backend).
+    pub fn with_defaults() -> Result<Session, BismoError> {
+        Session::new(SessionConfig::default())
+    }
+
+    /// Begin configuring one matmul: `P = A · B` with `A` at
+    /// `prec.wbits` and `B` at `prec.abits`. The precision is validated
+    /// when the builder runs, submits or prepares — before any work is
+    /// queued.
+    pub fn matmul(&self, prec: Precision) -> MatmulBuilder<'_> {
+        MatmulBuilder {
+            session: self,
+            prec,
+            opts: RequestOptions::default(),
+        }
+    }
+
+    /// One synchronous matmul with default options (engine backend,
+    /// weight-side caching). Equivalent to
+    /// `self.matmul(prec).run(a, b)`.
+    pub fn run(
+        &self,
+        a: impl Into<Arc<IntMatrix>>,
+        b: impl Into<Arc<IntMatrix>>,
+        prec: Precision,
+    ) -> Result<GemmResponse, BismoError> {
+        self.matmul(prec).run(a, b)
+    }
+
+    /// Prepare `weights` (the RHS) once for repeated execution:
+    /// validates the precision, range-checks the entries and packs the
+    /// bit-plane decomposition into the session cache. Every
+    /// subsequent [`Prepared::execute`] reuses that packing — the
+    /// weight-stationary serving pattern.
+    ///
+    /// ```
+    /// use bismo::api::{Session, SessionConfig};
+    /// use bismo::coordinator::Precision;
+    /// use bismo::bitmatrix::IntMatrix;
+    ///
+    /// let session = Session::new(SessionConfig::default())?;
+    /// let weights = IntMatrix::from_slice(2, 2, &[0, 1, 1, 2]);
+    /// let prepared = session.prepare(weights, Precision::unsigned(2, 2))?;
+    ///
+    /// // Execute the same prepared weights against many activations.
+    /// let x1 = IntMatrix::from_slice(2, 2, &[2, 0, 1, 3]);
+    /// let y1 = prepared.execute(x1)?;
+    /// assert_eq!(y1.result, IntMatrix::from_slice(2, 2, &[0, 2, 3, 7]));
+    ///
+    /// let x2 = IntMatrix::from_slice(1, 2, &[3, 1]);
+    /// let y2 = prepared.execute(x2)?;
+    /// assert_eq!(y2.result, IntMatrix::from_slice(1, 2, &[1, 5]));
+    /// // The second execute found the weights already packed.
+    /// assert!(y2.rhs_cached);
+    /// # Ok::<(), bismo::api::BismoError>(())
+    /// ```
+    pub fn prepare(
+        &self,
+        weights: impl Into<Arc<IntMatrix>>,
+        prec: Precision,
+    ) -> Result<Prepared<'_>, BismoError> {
+        self.matmul(prec).prepare(weights)
+    }
+
+    /// The serving layer beneath this session, for callers that need
+    /// raw [`BismoService`] access (load generators, the QNN helpers).
+    pub fn service(&self) -> &BismoService {
+        &self.svc
+    }
+
+    /// Packing-cache counters (hits / misses / insertions / evictions).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.svc.cache_stats()
+    }
+
+    /// Resident packed bytes in the cache.
+    pub fn cache_bytes(&self) -> usize {
+        self.svc.cache_bytes()
+    }
+
+    /// Resident cache entries.
+    pub fn cache_entries(&self) -> usize {
+        self.svc.cache_entries()
+    }
+
+    /// Stop accepting new work; queued jobs still drain. Subsequent
+    /// submissions fail with [`BismoError::ServiceShutdown`].
+    pub fn shutdown(&self) {
+        self.svc.shutdown()
+    }
+}
+
+/// Per-job configuration, built off [`Session::matmul`]. Knob methods
+/// consume and return the builder so they chain; the terminal methods
+/// ([`MatmulBuilder::run`], [`MatmulBuilder::submit`],
+/// [`MatmulBuilder::prepare`]) take `&self`, so one configured builder
+/// can launch many jobs.
+#[derive(Clone, Copy)]
+pub struct MatmulBuilder<'s> {
+    session: &'s Session,
+    prec: Precision,
+    opts: RequestOptions,
+}
+
+impl<'s> MatmulBuilder<'s> {
+    /// Select the execution backend: the fast tiled engine (default)
+    /// or the cycle-accurate overlay simulator (which also yields a
+    /// [`crate::coordinator::RunReport`]).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.opts.backend = backend;
+        self
+    }
+
+    /// Stage-overlap mode of the simulated pipeline (sim backend only).
+    pub fn overlap(mut self, overlap: Overlap) -> Self {
+        self.opts.overlap = overlap;
+        self
+    }
+
+    /// Skip all-zero bit-planes (the paper's sparse extension; sim
+    /// backend — the engine always skips).
+    pub fn bit_skip(mut self, on: bool) -> Self {
+        self.opts.bit_skip = on;
+        self
+    }
+
+    /// Cross-check every result against the CPU bit-serial oracle
+    /// (costs an extra software GEMM; failures surface as
+    /// [`BismoError::VerifyFailed`]).
+    pub fn verify(mut self, on: bool) -> Self {
+        self.opts.verify = on;
+        self
+    }
+
+    /// Cache the packed LHS (off by default: fresh activations would
+    /// churn the cache).
+    pub fn cache_lhs(mut self, on: bool) -> Self {
+        self.opts.cache_lhs = on;
+        self
+    }
+
+    /// Cache the packed RHS — the weight-stationary side (on by
+    /// default).
+    pub fn cache_rhs(mut self, on: bool) -> Self {
+        self.opts.cache_rhs = on;
+        self
+    }
+
+    /// The builder's precision.
+    pub fn precision(&self) -> Precision {
+        self.prec
+    }
+
+    /// Validate the configuration without running anything — the
+    /// "build" step. `run`/`submit`/`prepare` all call this first.
+    pub fn build(&self) -> Result<(), BismoError> {
+        self.prec.validate()
+    }
+
+    /// Run one job synchronously.
+    pub fn run(
+        &self,
+        a: impl Into<Arc<IntMatrix>>,
+        b: impl Into<Arc<IntMatrix>>,
+    ) -> Result<GemmResponse, BismoError> {
+        self.submit(a, b)?.wait()
+    }
+
+    /// Enqueue one job asynchronously. Configuration errors are
+    /// reported here, before anything is queued; execution errors
+    /// arrive through the returned handle.
+    pub fn submit(
+        &self,
+        a: impl Into<Arc<IntMatrix>>,
+        b: impl Into<Arc<IntMatrix>>,
+    ) -> Result<RequestHandle, BismoError> {
+        self.build()?;
+        Ok(self
+            .session
+            .svc
+            .submit(GemmRequest::with_opts(a, b, self.prec, self.opts)))
+    }
+
+    /// Pack `weights` (the RHS) into the session cache once, returning
+    /// the prepare-once-execute-many handle. See [`Session::prepare`].
+    ///
+    /// Preparing *is* weight-side caching, so it contradicts
+    /// [`MatmulBuilder::cache_rhs`]`(false)` — that combination is
+    /// rejected as [`BismoError::InvalidConfig`] rather than silently
+    /// repacking on every execute.
+    pub fn prepare(&self, weights: impl Into<Arc<IntMatrix>>) -> Result<Prepared<'s>, BismoError> {
+        self.build()?;
+        if !self.opts.cache_rhs {
+            return Err(BismoError::InvalidConfig(
+                "prepare() requires weight-side caching; remove cache_rhs(false)".into(),
+            ));
+        }
+        let weights: Arc<IntMatrix> = weights.into();
+        let (packed, _resident) = self.session.svc.prepare_operand(
+            &weights,
+            self.prec.abits,
+            self.prec.rsigned,
+            true,
+        )?;
+        Ok(Prepared {
+            session: self.session,
+            weights,
+            packed_rows: packed.rows,
+            prec: self.prec,
+            opts: self.opts,
+        })
+    }
+}
+
+/// Weights packed once, executable against many activation matrices.
+///
+/// Holds the source weights (`Arc`-shared, never copied per request)
+/// and their declared precision. Each [`Prepared::execute`] submits
+/// through the session's serving layer; the weight-side packing is
+/// served from the cache, so only the fresh activations are packed per
+/// call. If the cache evicts the packing under memory pressure it is
+/// transparently rebuilt — results are identical either way.
+pub struct Prepared<'s> {
+    session: &'s Session,
+    weights: Arc<IntMatrix>,
+    packed_rows: usize,
+    prec: Precision,
+    opts: RequestOptions,
+}
+
+impl Prepared<'_> {
+    /// The prepared weight matrix.
+    pub fn weights(&self) -> &IntMatrix {
+        &self.weights
+    }
+
+    /// Declared precision of prepare-time packing (the default for
+    /// [`Prepared::execute`]).
+    pub fn precision(&self) -> Precision {
+        self.prec
+    }
+
+    /// Rows of the packed (transposed) weight operand — the output
+    /// width `n` of every execute.
+    pub fn output_cols(&self) -> usize {
+        self.packed_rows
+    }
+
+    /// Execute the prepared weights against one activation matrix at
+    /// the prepare-time precision.
+    pub fn execute(&self, x: impl Into<Arc<IntMatrix>>) -> Result<GemmResponse, BismoError> {
+        self.submit(x)?.wait()
+    }
+
+    /// [`Prepared::execute`] with a per-execute precision override —
+    /// the variable-precision serving case: one resident weight matrix
+    /// served at whatever precision each request asks for. The first
+    /// execute at a new weight precision packs once (a distinct cache
+    /// entry); repeats at that precision hit the cache again.
+    pub fn execute_with(
+        &self,
+        x: impl Into<Arc<IntMatrix>>,
+        prec: Precision,
+    ) -> Result<GemmResponse, BismoError> {
+        prec.validate()?;
+        self.session
+            .svc
+            .submit(GemmRequest::with_opts(x, self.weights.clone(), prec, self.opts))
+            .wait()
+    }
+
+    /// Asynchronous [`Prepared::execute`]: enqueue and return the
+    /// handle.
+    pub fn submit(&self, x: impl Into<Arc<IntMatrix>>) -> Result<RequestHandle, BismoError> {
+        Ok(self.session.svc.submit(GemmRequest::with_opts(
+            x,
+            self.weights.clone(),
+            self.prec,
+            self.opts,
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::gemm_bitserial;
+    use crate::bitmatrix::BitSerialMatrix;
+    use crate::util::Rng;
+
+    fn session() -> Session {
+        Session::with_defaults().unwrap()
+    }
+
+    #[test]
+    fn builder_validates_before_queueing() {
+        let s = session();
+        let bad = Precision {
+            wbits: 0,
+            abits: 4,
+            lsigned: false,
+            rsigned: false,
+        };
+        // submit() fails synchronously: nothing was enqueued.
+        let r = s.matmul(bad).submit(IntMatrix::zeros(1, 1), IntMatrix::zeros(1, 1));
+        assert!(matches!(r, Err(BismoError::PrecisionUnsupported(_))));
+        assert_eq!(s.service().submitted(), 0);
+        // prepare() fails the same way.
+        assert!(matches!(
+            s.prepare(IntMatrix::zeros(1, 1), bad),
+            Err(BismoError::PrecisionUnsupported(_))
+        ));
+        // prepare() contradicts cache_rhs(false): rejected, not a
+        // silent repack-per-execute degradation.
+        assert!(matches!(
+            s.matmul(Precision::unsigned(2, 2))
+                .cache_rhs(false)
+                .prepare(IntMatrix::zeros(2, 2)),
+            Err(BismoError::InvalidConfig(_))
+        ));
+    }
+
+    #[test]
+    fn run_agrees_with_oracle_across_backends() {
+        let s = session();
+        let mut rng = Rng::new(0xFACE);
+        let a = IntMatrix::random(&mut rng, 5, 130, 3, true);
+        let b = IntMatrix::random(&mut rng, 130, 4, 2, false);
+        let prec = Precision {
+            wbits: 3,
+            abits: 2,
+            lsigned: true,
+            rsigned: false,
+        };
+        let la = BitSerialMatrix::from_int(&a, 3, true);
+        let rb = BitSerialMatrix::from_int_transposed(&b, 2, false);
+        let expect = gemm_bitserial(&la, &rb);
+        for backend in [Backend::Engine, Backend::Sim] {
+            let resp = s
+                .matmul(prec)
+                .backend(backend)
+                .verify(true)
+                .run(a.clone(), b.clone())
+                .unwrap();
+            assert_eq!(resp.result, expect);
+            assert_eq!(resp.report.is_some(), backend == Backend::Sim);
+        }
+    }
+
+    #[test]
+    fn prepared_reuse_skips_repacking() {
+        let s = session();
+        let mut rng = Rng::new(0x9E9);
+        let w = IntMatrix::random(&mut rng, 96, 6, 4, true);
+        let prec = Precision {
+            wbits: 2,
+            abits: 4,
+            lsigned: false,
+            rsigned: true,
+        };
+        let prepared = s.prepare(w.clone(), prec).unwrap();
+        assert_eq!(prepared.output_cols(), 6);
+        let after_prepare = s.cache_stats();
+        for i in 0..3 {
+            let x = IntMatrix::random(&mut rng, 2, 96, 2, false);
+            let resp = prepared.execute(x.clone()).unwrap();
+            assert_eq!(resp.result, x.matmul(&w), "execute {i}");
+            assert!(resp.rhs_cached, "execute {i} reuses the prepared packing");
+        }
+        let after = s.cache_stats();
+        assert_eq!(
+            after.misses, after_prepare.misses,
+            "no repacks after prepare"
+        );
+        assert_eq!(after.hits, after_prepare.hits + 3);
+    }
+
+    #[test]
+    fn per_execute_precision_override() {
+        let s = session();
+        let mut rng = Rng::new(0x0DD);
+        // Weights fit 3 bits signed; serve them at 3-bit and (padded)
+        // 5-bit declared precision from the same Prepared handle.
+        let w = IntMatrix::random(&mut rng, 80, 4, 3, true);
+        let base = Precision {
+            wbits: 2,
+            abits: 3,
+            lsigned: false,
+            rsigned: true,
+        };
+        let prepared = s.prepare(w.clone(), base).unwrap();
+        let x = IntMatrix::random(&mut rng, 3, 80, 2, false);
+        let expect = x.matmul(&w);
+        let r1 = prepared.execute(x.clone()).unwrap();
+        assert_eq!(r1.result, expect);
+        let wider = Precision {
+            wbits: 2,
+            abits: 5,
+            lsigned: false,
+            rsigned: true,
+        };
+        let r2 = prepared.execute_with(x.clone(), wider).unwrap();
+        assert_eq!(r2.result, expect, "declared headroom changes nothing");
+        // Same override again: the new-precision packing is now cached.
+        let r3 = prepared.execute_with(x, wider).unwrap();
+        assert!(r3.rhs_cached);
+        assert_eq!(r3.result, expect);
+    }
+
+    #[test]
+    fn async_submit_preserves_identity() {
+        let s = session();
+        let mut rng = Rng::new(0xA21);
+        let builder = s.matmul(Precision::unsigned(2, 2));
+        let jobs: Vec<(IntMatrix, IntMatrix)> = (0..6)
+            .map(|_| {
+                let k = rng.index(100) + 1;
+                (
+                    IntMatrix::random(&mut rng, 2, k, 2, false),
+                    IntMatrix::random(&mut rng, k, 3, 2, false),
+                )
+            })
+            .collect();
+        let handles: Vec<RequestHandle> = jobs
+            .iter()
+            .map(|(a, b)| builder.submit(a.clone(), b.clone()).unwrap())
+            .collect();
+        for (h, (a, b)) in handles.into_iter().zip(&jobs).rev() {
+            assert_eq!(h.wait().unwrap().result, a.matmul(b));
+        }
+    }
+
+    #[test]
+    fn session_shutdown_is_typed() {
+        let s = session();
+        s.shutdown();
+        let r = s.run(
+            IntMatrix::from_slice(1, 1, &[1]),
+            IntMatrix::from_slice(1, 1, &[1]),
+            Precision::unsigned(1, 1),
+        );
+        assert!(matches!(r, Err(BismoError::ServiceShutdown)));
+    }
+}

@@ -1,6 +1,7 @@
 //! The BISMO hardware parameter set (paper Table I) plus derived
 //! quantities used by the scheduler, simulator and cost model.
 
+use crate::api::BismoError;
 use crate::util::{ceil_div, ceil_log2};
 
 /// Design-time configuration of one BISMO overlay instance.
@@ -107,33 +108,34 @@ impl BismoConfig {
     }
 
     /// Validate structural constraints the hardware generator imposes.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), BismoError> {
+        let bad = |m: String| Err(BismoError::InvalidConfig(m));
         if self.dm == 0 || self.dn == 0 || self.dk == 0 {
-            return Err("DPA dimensions must be non-zero".into());
+            return bad("DPA dimensions must be non-zero".into());
         }
         if !self.dk.is_power_of_two() {
-            return Err(format!("D_k must be a power of two, got {}", self.dk));
+            return bad(format!("D_k must be a power of two, got {}", self.dk));
         }
         if self.dk < 32 {
-            return Err(format!("D_k must be >= 32 (one BRAM lane), got {}", self.dk));
+            return bad(format!("D_k must be >= 32 (one BRAM lane), got {}", self.dk));
         }
         if !self.fetch_bits.is_power_of_two() || !self.res_bits.is_power_of_two() {
-            return Err("memory channel widths must be powers of two".into());
+            return bad("memory channel widths must be powers of two".into());
         }
         if self.dk % self.fetch_bits != 0 && self.fetch_bits % self.dk != 0 {
-            return Err(format!(
+            return bad(format!(
                 "D_k ({}) and F ({}) must be integer multiples of each other",
                 self.dk, self.fetch_bits
             ));
         }
         if self.acc_bits > 64 {
-            return Err("accumulator width above 64 bits is unsupported".into());
+            return bad("accumulator width above 64 bits is unsupported".into());
         }
         if self.bm == 0 || self.bn == 0 || self.br == 0 {
-            return Err("buffer depths must be non-zero".into());
+            return bad("buffer depths must be non-zero".into());
         }
         if self.fclk_mhz == 0 {
-            return Err("clock frequency must be non-zero".into());
+            return bad("clock frequency must be non-zero".into());
         }
         Ok(())
     }

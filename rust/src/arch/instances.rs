@@ -7,11 +7,15 @@
 //! (see `costmodel`). `B_m`/`B_n` are in `D_k`-bit words.
 
 use super::config::BismoConfig;
+use crate::api::BismoError;
 
 /// Identifier of a Table IV instance (1-based, as in the paper).
 pub type InstanceId = u32;
 
-/// Return Table IV instance `id` (1..=6), at its default 200 MHz clock.
+/// Fallible lookup of Table IV instance `id` (1..=6), at its default
+/// 200 MHz clock. Unknown ids return
+/// [`BismoError::InvalidConfig`] instead of panicking — the path the
+/// CLI and anything handling untrusted ids should take.
 ///
 /// | # | D_m | D_k | D_n | peak GOPS |
 /// |---|-----|-----|-----|-----------|
@@ -21,7 +25,7 @@ pub type InstanceId = u32;
 /// | 4 | 4   | 256 | 4   | 1638.4    |
 /// | 5 | 8   | 256 | 4   | 3276.8    |
 /// | 6 | 4   | 512 | 4   | 3276.8    |
-pub fn instance(id: InstanceId) -> BismoConfig {
+pub fn try_instance(id: InstanceId) -> Result<BismoConfig, BismoError> {
     let base = BismoConfig {
         dm: 0,
         dk: 0,
@@ -34,7 +38,7 @@ pub fn instance(id: InstanceId) -> BismoConfig {
         res_bits: 64,
         fclk_mhz: 200,
     };
-    match id {
+    Ok(match id {
         // Dk=64 → 2 BRAM lanes/buffer-word: deep buffers are cheap, use
         // 4096-deep to soak up BRAM like the paper's 86% utilization row.
         1 => BismoConfig { dm: 8, dk: 64, dn: 8, bm: 4096, bn: 3072, ..base },
@@ -43,8 +47,19 @@ pub fn instance(id: InstanceId) -> BismoConfig {
         4 => BismoConfig { dm: 4, dk: 256, dn: 4, bm: 2048, bn: 2048, ..base },
         5 => BismoConfig { dm: 8, dk: 256, dn: 4, bm: 1024, bn: 2048, ..base },
         6 => BismoConfig { dm: 4, dk: 512, dn: 4, bm: 1024, bn: 1024, ..base },
-        _ => panic!("Table IV defines instances 1..=6, got {id}"),
-    }
+        _ => {
+            return Err(BismoError::InvalidConfig(format!(
+                "Table IV defines instances 1..=6, got {id}"
+            )))
+        }
+    })
+}
+
+/// [`try_instance`] for trusted, hard-coded ids (benchmarks, tests):
+/// panics on an unknown id. Prefer [`try_instance`] anywhere the id
+/// comes from user input.
+pub fn instance(id: InstanceId) -> BismoConfig {
+    try_instance(id).unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// All six Table IV instances in order.
@@ -84,6 +99,19 @@ mod tests {
         // 8-row × 4096-bit tile per buffer for double buffering.
         for (_, c) in all_instances() {
             assert!(c.lhs_buf_bits() >= 2 * 4096);
+        }
+    }
+
+    #[test]
+    fn unknown_instance_is_a_typed_error() {
+        match try_instance(7) {
+            Err(BismoError::InvalidConfig(msg)) => {
+                assert!(msg.contains("instances 1..=6"), "{msg}")
+            }
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+        for id in 1..=6 {
+            assert!(try_instance(id).is_ok());
         }
     }
 

@@ -7,5 +7,5 @@ mod instances;
 mod platform;
 
 pub use config::BismoConfig;
-pub use instances::{instance, all_instances, InstanceId};
+pub use instances::{all_instances, instance, try_instance, InstanceId};
 pub use platform::{Platform, PYNQ_Z1};

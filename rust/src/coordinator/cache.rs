@@ -16,6 +16,7 @@
 //! defended against (the alternative — comparing full contents on every
 //! hit — would cost a pass comparable to the repack being avoided).
 
+use crate::api::BismoError;
 use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
@@ -66,14 +67,14 @@ pub fn pack_operand(m: &IntMatrix, bits: u32, signed: bool, transposed: bool) ->
 /// Range validation shared by every pack path: every entry of `m` must
 /// fit the declared precision before bit-plane decomposition. `side`
 /// labels the operand in the error ("lhs"/"rhs").
-pub fn check_fits(m: &IntMatrix, bits: u32, signed: bool, side: &str) -> Result<(), String> {
+pub fn check_fits(m: &IntMatrix, bits: u32, signed: bool, side: &str) -> Result<(), BismoError> {
     if m.fits(bits, signed) {
         Ok(())
     } else {
-        Err(format!(
+        Err(BismoError::PrecisionUnsupported(format!(
             "{side} entries do not fit {} {bits}-bit",
             if signed { "signed" } else { "unsigned" },
-        ))
+        )))
     }
 }
 
@@ -213,7 +214,7 @@ impl PackingCache {
         bits: u32,
         signed: bool,
         transposed: bool,
-    ) -> Result<(Arc<BitSerialMatrix>, bool), String> {
+    ) -> Result<(Arc<BitSerialMatrix>, bool), BismoError> {
         let key = PackKey::of(m, bits, signed, transposed);
         if let Some(hit) = self.get(&key) {
             return Ok((hit, true));
@@ -381,7 +382,11 @@ mod tests {
         let mut c = PackingCache::new(1 << 20);
         let m = IntMatrix::from_slice(1, 2, &[3, 100]);
         let err = c.get_or_pack(&m, 2, false, false).unwrap_err();
-        assert!(err.contains("do not fit"), "{err}");
+        assert!(
+            matches!(err, BismoError::PrecisionUnsupported(_)),
+            "{err:?}"
+        );
+        assert!(err.to_string().contains("do not fit"), "{err}");
         assert!(c.is_empty(), "failed pack must not insert");
         // The range is re-derived per precision: same matrix fits 7-bit.
         let (_, hit) = c.get_or_pack(&m, 7, false, false).unwrap();

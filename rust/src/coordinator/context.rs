@@ -1,5 +1,6 @@
 //! One overlay instance: pack → schedule → simulate → report.
 
+use crate::api::BismoError;
 use crate::arch::{BismoConfig, Platform, PYNQ_Z1};
 use crate::baseline::gemm_bitserial;
 use crate::bitmatrix::dram::{DramImage, OperandLayout, ResultLayout};
@@ -7,7 +8,7 @@ use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
 use crate::costmodel::CostModel;
 use crate::power::PowerModel;
 use crate::scheduler::{self, MatmulJob, Overlap, PlaneList};
-use crate::sim::{RunStats, SimError, Simulation};
+use crate::sim::{RunStats, Simulation};
 use crate::util::round_up;
 
 /// Operand precision for a matmul job.
@@ -20,6 +21,9 @@ pub struct Precision {
 }
 
 impl Precision {
+    /// Widest supported operand precision per side.
+    pub const MAX_BITS: u32 = 32;
+
     pub fn unsigned(wbits: u32, abits: u32) -> Self {
         Precision {
             wbits,
@@ -36,6 +40,47 @@ impl Precision {
             lsigned: true,
             rsigned: true,
         }
+    }
+
+    /// Validated construction: rejects zero widths, widths above
+    /// [`Precision::MAX_BITS`], and combined widths whose plane-pair
+    /// weight `2^{i+j}` would overflow the accumulator's weight range
+    /// — the garbage-in cases that used to surface as wrong products
+    /// deep inside the scheduler.
+    pub fn try_new(
+        wbits: u32,
+        abits: u32,
+        lsigned: bool,
+        rsigned: bool,
+    ) -> Result<Self, BismoError> {
+        let p = Precision {
+            wbits,
+            abits,
+            lsigned,
+            rsigned,
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// The precision gate every facade/service/scheduler entry point
+    /// shares. See [`Precision::try_new`].
+    pub fn validate(&self) -> Result<(), BismoError> {
+        for (side, bits) in [("wbits", self.wbits), ("abits", self.abits)] {
+            if bits == 0 || bits > Self::MAX_BITS {
+                return Err(BismoError::PrecisionUnsupported(format!(
+                    "{side} must be in 1..={}, got {bits}",
+                    Self::MAX_BITS
+                )));
+            }
+        }
+        if self.wbits + self.abits > 62 {
+            return Err(BismoError::PrecisionUnsupported(format!(
+                "wbits + abits = {} exceeds the accumulator's 2^62 weight range",
+                self.wbits + self.abits
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -88,12 +133,15 @@ pub struct RunReport {
 /// Shared guard for every consumer of pre-packed operand pairs (the
 /// context's packed path and the serving backends): both packings must
 /// run along the same `k`.
-pub(crate) fn check_packed_pair(la: &BitSerialMatrix, rb: &BitSerialMatrix) -> Result<(), String> {
+pub(crate) fn check_packed_pair(
+    la: &BitSerialMatrix,
+    rb: &BitSerialMatrix,
+) -> Result<(), BismoError> {
     if la.cols != rb.cols {
-        return Err(format!(
-            "packed shape mismatch: lhs {}×{} vs rhs(T) {}×{}",
+        return Err(BismoError::ShapeMismatch(format!(
+            "packed lhs {}×{} vs rhs(T) {}×{}",
             la.rows, la.cols, rb.rows, rb.cols
-        ));
+        )));
     }
     Ok(())
 }
@@ -109,22 +157,22 @@ pub struct BismoContext {
 impl BismoContext {
     /// Build a context, checking the configuration is valid and fits
     /// the platform's resource budget under the cost model.
-    pub fn new(cfg: BismoConfig) -> Result<Self, String> {
+    pub fn new(cfg: BismoConfig) -> Result<Self, BismoError> {
         Self::on_platform(cfg, PYNQ_Z1)
     }
 
-    pub fn on_platform(cfg: BismoConfig, platform: Platform) -> Result<Self, String> {
+    pub fn on_platform(cfg: BismoConfig, platform: Platform) -> Result<Self, BismoError> {
         cfg.validate()?;
         let cost = CostModel::paper();
         if !cost.fits(&cfg, &platform) {
-            return Err(format!(
+            return Err(BismoError::CapacityExceeded(format!(
                 "configuration needs {:.0} LUTs / {} BRAMs; {} has {} / {}",
                 cost.lut_total(&cfg),
                 cost.bram_total(&cfg),
                 platform.name,
                 platform.luts,
                 platform.brams
-            ));
+            )));
         }
         Ok(BismoContext {
             cfg,
@@ -155,6 +203,11 @@ impl BismoContext {
     /// layer's cache) can skip the packing step via
     /// [`BismoContext::matmul_packed`].
     ///
+    /// Application code should usually go through the
+    /// [`crate::api::Session`] facade instead, which adds backend
+    /// selection, micro-batching and the weight-stationary packing
+    /// cache on top of this context.
+    ///
     /// ```
     /// use bismo::arch::BismoConfig;
     /// use bismo::bitmatrix::IntMatrix;
@@ -168,7 +221,7 @@ impl BismoContext {
     ///     ctx.matmul(&l, &r, Precision::unsigned(2, 2), MatmulOptions::default())?;
     /// assert_eq!(p, IntMatrix::from_slice(2, 2, &[0, 2, 3, 7]));
     /// assert!(report.cycles > 0);
-    /// # Ok::<(), String>(())
+    /// # Ok::<(), bismo::api::BismoError>(())
     /// ```
     pub fn matmul(
         &self,
@@ -176,12 +229,13 @@ impl BismoContext {
         b: &IntMatrix,
         prec: Precision,
         opts: MatmulOptions,
-    ) -> Result<(IntMatrix, RunReport), String> {
+    ) -> Result<(IntMatrix, RunReport), BismoError> {
+        prec.validate()?;
         if a.cols != b.rows {
-            return Err(format!(
-                "shape mismatch: {}×{} · {}×{}",
+            return Err(BismoError::ShapeMismatch(format!(
+                "{}×{} · {}×{}",
                 a.rows, a.cols, b.rows, b.cols
-            ));
+            )));
         }
         let la = BitSerialMatrix::from_int(a, prec.wbits, prec.lsigned);
         // Transpose fused into packing (§Perf: saves an 8B/element pass).
@@ -203,7 +257,7 @@ impl BismoContext {
         la: &BitSerialMatrix,
         rb: &BitSerialMatrix,
         opts: MatmulOptions,
-    ) -> Result<(IntMatrix, RunReport), String> {
+    ) -> Result<(IntMatrix, RunReport), BismoError> {
         check_packed_pair(la, rb)?;
         let (m, k, n) = (la.rows, la.cols, rb.rows);
         let prec = Precision {
@@ -277,15 +331,16 @@ impl BismoContext {
         )?;
         let instructions = prog.stats();
 
-        let mut sim = Simulation::new(self.cfg, &self.platform, dram)
-            .map_err(|e: SimError| e.to_string())?;
-        let stats = sim.run(&prog).map_err(|e| e.to_string())?;
+        let mut sim = Simulation::new(self.cfg, &self.platform, dram)?;
+        let stats = sim.run(&prog)?;
         let result = res.load(&sim.dram);
 
         if opts.verify {
             let expect = gemm_bitserial(la, rb);
             if result != expect {
-                return Err("verification failed: simulator result != CPU oracle".into());
+                return Err(BismoError::VerifyFailed(
+                    "simulator result != CPU oracle".into(),
+                ));
             }
         }
 
@@ -437,6 +492,34 @@ mod tests {
         let (p, rep) = c.matmul(&a, &b, Precision::unsigned(2, 2), opts).unwrap();
         assert_eq!(p, IntMatrix::zeros(4, 4));
         assert_eq!(rep.cycles, 0);
+    }
+
+    #[test]
+    fn precision_validated_at_construction() {
+        // Zero widths, overwide sides and accumulator-overflowing
+        // combinations are all PrecisionUnsupported — not garbage output.
+        for (w, a) in [(0u32, 2u32), (2, 0), (33, 2), (2, 33), (32, 32)] {
+            match Precision::try_new(w, a, false, false) {
+                Err(BismoError::PrecisionUnsupported(_)) => {}
+                other => panic!("w{w}a{a}: expected PrecisionUnsupported, got {other:?}"),
+            }
+        }
+        assert!(Precision::try_new(1, 1, false, false).is_ok());
+        assert!(Precision::try_new(32, 30, true, true).is_ok());
+        // The context applies the same gate before packing.
+        let c = ctx();
+        let a = IntMatrix::zeros(2, 64);
+        let b = IntMatrix::zeros(64, 2);
+        let bad = Precision {
+            wbits: 0,
+            abits: 2,
+            lsigned: false,
+            rsigned: false,
+        };
+        match c.matmul(&a, &b, bad, MatmulOptions::default()) {
+            Err(BismoError::PrecisionUnsupported(_)) => {}
+            other => panic!("expected PrecisionUnsupported, got {other:?}"),
+        }
     }
 
     #[test]

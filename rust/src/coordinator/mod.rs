@@ -1,4 +1,7 @@
-//! The coordinator: BISMO's public matrix-multiplication API.
+//! The coordinator: the matrix-multiplication machinery beneath the
+//! [`crate::api::Session`] facade. Application code should usually
+//! enter through [`crate::api`]; the types here remain public as the
+//! documented low-level layer (and the facade's vocabulary).
 //!
 //! [`BismoContext`] owns one overlay configuration and provides
 //! [`BismoContext::matmul`]: pack the operands into the bit-serial DRAM

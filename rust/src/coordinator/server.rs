@@ -18,6 +18,7 @@
 //! [`super::BismoService`] (see `DESIGN.md` §Serving-Layer).
 
 use super::context::{BismoContext, MatmulOptions, Precision, RunReport};
+use crate::api::BismoError;
 use crate::arch::BismoConfig;
 use crate::bitmatrix::IntMatrix;
 use crate::kernel::WorkerPool;
@@ -26,7 +27,7 @@ use std::sync::Mutex;
 /// Result of one job in a batch.
 pub struct BatchOutcome {
     pub index: usize,
-    pub result: Result<(IntMatrix, RunReport), String>,
+    pub result: Result<(IntMatrix, RunReport), BismoError>,
 }
 
 /// Fixed set of simulated overlay workers sharing one validated
@@ -37,7 +38,7 @@ pub struct BismoBatchRunner {
 }
 
 impl BismoBatchRunner {
-    pub fn new(cfg: BismoConfig, workers: usize) -> Result<Self, String> {
+    pub fn new(cfg: BismoConfig, workers: usize) -> Result<Self, BismoError> {
         // Validate once up front; every job reuses this context instead
         // of rebuilding (and revalidating) one per worker per batch.
         Ok(BismoBatchRunner {

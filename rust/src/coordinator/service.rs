@@ -40,10 +40,12 @@
 
 use super::cache::{check_fits, pack_operand, CacheStats, PackKey, PackingCache};
 use super::context::{check_packed_pair, BismoContext, MatmulOptions, Precision, RunReport};
+use crate::api::BismoError;
 use crate::arch::BismoConfig;
 use crate::baseline::gemm_bitserial;
 use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
 use crate::kernel::{gemm_tiled_with, KernelConfig, WorkerPool};
+use crate::scheduler::Overlap;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -86,7 +88,7 @@ pub trait ExecBackend: Send + Sync {
         la: &BitSerialMatrix,
         rb: &BitSerialMatrix,
         opts: &MatmulOptions,
-    ) -> Result<(IntMatrix, Option<RunReport>), String>;
+    ) -> Result<(IntMatrix, Option<RunReport>), BismoError>;
 }
 
 /// [`ExecBackend`] over the tiled plane-fused kernel engine.
@@ -106,7 +108,7 @@ impl ExecBackend for EngineBackend {
         la: &BitSerialMatrix,
         rb: &BitSerialMatrix,
         _opts: &MatmulOptions,
-    ) -> Result<(IntMatrix, Option<RunReport>), String> {
+    ) -> Result<(IntMatrix, Option<RunReport>), BismoError> {
         check_packed_pair(la, rb)?;
         // Single-lane inside the request: the micro-batch already runs
         // `workers` requests concurrently on the pool, so per-request
@@ -122,7 +124,7 @@ pub struct SimBackend {
 }
 
 impl SimBackend {
-    pub fn new(cfg: BismoConfig) -> Result<SimBackend, String> {
+    pub fn new(cfg: BismoConfig) -> Result<SimBackend, BismoError> {
         Ok(SimBackend {
             ctx: BismoContext::new(cfg)?,
         })
@@ -144,7 +146,7 @@ impl ExecBackend for SimBackend {
         la: &BitSerialMatrix,
         rb: &BitSerialMatrix,
         opts: &MatmulOptions,
-    ) -> Result<(IntMatrix, Option<RunReport>), String> {
+    ) -> Result<(IntMatrix, Option<RunReport>), BismoError> {
         self.ctx
             .matmul_packed(la, rb, *opts)
             .map(|(p, rep)| (p, Some(rep)))
@@ -155,6 +157,9 @@ impl ExecBackend for SimBackend {
 #[derive(Clone, Copy, Debug)]
 pub struct RequestOptions {
     pub backend: Backend,
+    /// Stage-overlap mode of the simulated pipeline ([`Backend::Sim`]
+    /// only; the engine has no stages to overlap).
+    pub overlap: Overlap,
     /// Skip all-zero bit-planes (sim backend; the engine always skips).
     pub bit_skip: bool,
     /// Cross-check the result against the CPU bit-serial oracle before
@@ -174,6 +179,7 @@ impl Default for RequestOptions {
     fn default() -> Self {
         RequestOptions {
             backend: Backend::Engine,
+            overlap: Overlap::Full,
             bit_skip: false,
             verify: false,
             cache_lhs: false,
@@ -251,12 +257,12 @@ struct Slot {
 
 #[derive(Default)]
 struct SlotState {
-    outcome: Option<Result<GemmResponse, String>>,
+    outcome: Option<Result<GemmResponse, BismoError>>,
     done: bool,
 }
 
 impl Slot {
-    fn fill(&self, outcome: Result<GemmResponse, String>) {
+    fn fill(&self, outcome: Result<GemmResponse, BismoError>) {
         let mut g = self.state.lock().unwrap();
         g.outcome = Some(outcome);
         g.done = true;
@@ -270,23 +276,24 @@ pub struct RequestHandle {
 }
 
 impl RequestHandle {
-    /// Block until the request completes. Errs (rather than hanging)
-    /// if the outcome was already consumed by [`RequestHandle::try_take`].
-    pub fn wait(self) -> Result<GemmResponse, String> {
+    /// Block until the request completes. Errs
+    /// ([`BismoError::ResultConsumed`], rather than hanging) if the
+    /// outcome was already consumed by [`RequestHandle::try_take`].
+    pub fn wait(self) -> Result<GemmResponse, BismoError> {
         let mut g = self.slot.state.lock().unwrap();
         loop {
             if g.done {
                 return g
                     .outcome
                     .take()
-                    .unwrap_or_else(|| Err("request outcome already taken".into()));
+                    .unwrap_or_else(|| Err(BismoError::ResultConsumed));
             }
             g = self.slot.cv.wait(g).unwrap();
         }
     }
 
     /// Non-blocking poll; returns the outcome once, if complete.
-    pub fn try_take(&self) -> Option<Result<GemmResponse, String>> {
+    pub fn try_take(&self) -> Option<Result<GemmResponse, BismoError>> {
         let mut g = self.slot.state.lock().unwrap();
         if g.done {
             g.outcome.take()
@@ -349,6 +356,10 @@ struct PackedOperands {
 
 /// A persistent, asynchronous GEMM service over the overlay stack.
 ///
+/// Migration note: [`crate::api::Session`] wraps this service and is
+/// the intended entry point — it adds builder-style per-job options
+/// and the prepared-operand contract on top of `submit`/`run`.
+///
 /// ```
 /// use bismo::bitmatrix::IntMatrix;
 /// use bismo::coordinator::{BismoService, GemmRequest, Precision, ServiceConfig};
@@ -360,7 +371,7 @@ struct PackedOperands {
 /// let handle = svc.submit(GemmRequest::new(a, b, Precision::unsigned(2, 2)));
 /// let resp = handle.wait()?;
 /// assert_eq!(resp.result, IntMatrix::from_slice(2, 2, &[0, 2, 3, 7]));
-/// # Ok::<(), String>(())
+/// # Ok::<(), bismo::api::BismoError>(())
 /// ```
 pub struct BismoService {
     inner: Arc<Inner>,
@@ -370,9 +381,11 @@ pub struct BismoService {
 impl BismoService {
     /// Start the service: validates the overlay configuration and
     /// spawns the dispatcher thread.
-    pub fn new(cfg: ServiceConfig) -> Result<BismoService, String> {
+    pub fn new(cfg: ServiceConfig) -> Result<BismoService, BismoError> {
         if cfg.workers == 0 || cfg.max_batch == 0 {
-            return Err("service workers and max_batch must be >= 1".into());
+            return Err(BismoError::InvalidConfig(
+                "service workers and max_batch must be >= 1".into(),
+            ));
         }
         let inner = Arc::new(Inner {
             engine: EngineBackend::default(),
@@ -408,9 +421,17 @@ impl BismoService {
             slot.fill(Err(e));
             return handle;
         }
-        self.inner.submitted.fetch_add(1, Ordering::SeqCst);
         {
+            // Enqueue under the lock so a concurrent shutdown either
+            // sees this request (and drains it) or rejects it here —
+            // nothing is accepted into a queue nobody will drain.
             let mut q = self.inner.queue.lock().unwrap();
+            if self.inner.shutdown.load(Ordering::SeqCst) {
+                drop(q);
+                slot.fill(Err(BismoError::ServiceShutdown));
+                return handle;
+            }
+            self.inner.submitted.fetch_add(1, Ordering::SeqCst);
             q.push_back(Pending {
                 req,
                 slot,
@@ -422,8 +443,47 @@ impl BismoService {
     }
 
     /// Submit and wait — the synchronous convenience path.
-    pub fn run(&self, req: GemmRequest) -> Result<GemmResponse, String> {
+    pub fn run(&self, req: GemmRequest) -> Result<GemmResponse, BismoError> {
         self.submit(req).wait()
+    }
+
+    /// Pack one operand through the service's weight-stationary cache
+    /// without executing anything: the *prepare* half of the facade's
+    /// prepare-once-execute-many contract
+    /// ([`crate::api::Session::prepare`] /
+    /// [`crate::api::MatmulBuilder::prepare`]). Returns the packed
+    /// operand and whether it was already resident. With the cache
+    /// disabled (`cache_bytes == 0`) the pack still happens — it just
+    /// is not retained.
+    pub fn prepare_operand(
+        &self,
+        m: &IntMatrix,
+        bits: u32,
+        signed: bool,
+        transposed: bool,
+    ) -> Result<(Arc<BitSerialMatrix>, bool), BismoError> {
+        self.inner.pack_one(
+            m,
+            bits,
+            signed,
+            transposed,
+            true,
+            "prepared operand",
+        )
+    }
+
+    /// Stop accepting new submissions. Already-queued requests still
+    /// drain (every accepted handle completes); later submissions fail
+    /// with [`BismoError::ServiceShutdown`]. Dropping the service calls
+    /// this implicitly and then joins the dispatcher.
+    pub fn shutdown(&self) {
+        // The flag must flip while holding the queue mutex: the
+        // dispatcher checks it under this lock before parking on
+        // `queue_cv`, so storing it lock-free could land between that
+        // check and the park — a lost wakeup.
+        let _guard = self.inner.queue.lock().unwrap();
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.queue_cv.notify_all();
     }
 
     /// Packing-cache counters.
@@ -466,16 +526,7 @@ impl Drop for BismoService {
     /// Graceful shutdown: the dispatcher drains every queued request
     /// (no handle is left dangling), then exits.
     fn drop(&mut self) {
-        {
-            // The flag must flip while holding the queue mutex: the
-            // dispatcher checks it under this lock before parking on
-            // `queue_cv`, so storing it lock-free could land between
-            // that check and the park — a lost wakeup that would leave
-            // `join` below waiting forever.
-            let _guard = self.inner.queue.lock().unwrap();
-            self.inner.shutdown.store(true, Ordering::SeqCst);
-            self.inner.queue_cv.notify_all();
-        }
+        self.shutdown();
         if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
@@ -488,19 +539,14 @@ impl Drop for BismoService {
 /// hit proves the operand fit and skips the scan entirely — otherwise
 /// every request would rescan the shared weight matrix on the
 /// submitter's hot path.
-fn validate(req: &GemmRequest) -> Result<(), String> {
+fn validate(req: &GemmRequest) -> Result<(), BismoError> {
     if req.a.cols != req.b.rows {
-        return Err(format!(
-            "shape mismatch: {}×{} · {}×{}",
+        return Err(BismoError::ShapeMismatch(format!(
+            "{}×{} · {}×{}",
             req.a.rows, req.a.cols, req.b.rows, req.b.cols
-        ));
+        )));
     }
-    for (side, bits) in [("lhs wbits", req.prec.wbits), ("rhs abits", req.prec.abits)] {
-        if bits == 0 || bits > 32 {
-            return Err(format!("{side} must be in 1..=32, got {bits}"));
-        }
-    }
-    Ok(())
+    req.prec.validate()
 }
 
 impl Inner {
@@ -535,13 +581,15 @@ impl Inner {
             // future submitter.
             let outcome =
                 std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.execute_one(p)))
-                    .unwrap_or_else(|payload| Err(format!("request panicked: {}", panic_msg(&payload))));
+                    .unwrap_or_else(|payload| {
+                        Err(BismoError::WorkerPanicked(panic_msg(&payload)))
+                    });
             p.slot.fill(outcome);
             self.completed.fetch_add(1, Ordering::SeqCst);
         });
     }
 
-    fn execute_one(&self, p: &Pending) -> Result<GemmResponse, String> {
+    fn execute_one(&self, p: &Pending) -> Result<GemmResponse, BismoError> {
         let queue_ns = p.since.elapsed().as_nanos() as u64;
         let req = &p.req;
         let packed = self.pack_operands(req)?;
@@ -551,18 +599,19 @@ impl Inner {
             Backend::Sim => &self.sim,
         };
         let mopts = MatmulOptions {
+            overlap: req.opts.overlap,
             bit_skip: req.opts.bit_skip,
-            ..Default::default()
+            verify: false,
         };
         let (result, report) = backend.execute(&packed.la, &packed.rb, &mopts)?;
         let exec_ns = t_exec.elapsed().as_nanos() as u64;
         if req.opts.verify {
             let expect = gemm_bitserial(&packed.la, &packed.rb);
             if result != expect {
-                return Err(format!(
-                    "verification failed: {} backend != CPU oracle",
+                return Err(BismoError::VerifyFailed(format!(
+                    "{} backend != CPU oracle",
                     backend.name()
-                ));
+                )));
             }
         }
         Ok(GemmResponse {
@@ -578,7 +627,7 @@ impl Inner {
         })
     }
 
-    fn pack_operands(&self, req: &GemmRequest) -> Result<PackedOperands, String> {
+    fn pack_operands(&self, req: &GemmRequest) -> Result<PackedOperands, BismoError> {
         let t0 = Instant::now();
         let (la, lhs_cached) = self.pack_one(
             &req.a,
@@ -620,7 +669,7 @@ impl Inner {
         transposed: bool,
         use_cache: bool,
         side: &str,
-    ) -> Result<(Arc<BitSerialMatrix>, bool), String> {
+    ) -> Result<(Arc<BitSerialMatrix>, bool), BismoError> {
         if !use_cache || self.cfg.cache_bytes == 0 {
             check_fits(m, bits, signed, side)?;
             return Ok((Arc::new(pack_operand(m, bits, signed, transposed)), false));
@@ -714,20 +763,38 @@ mod tests {
     #[test]
     fn invalid_requests_fail_cleanly_and_service_survives() {
         let s = svc();
-        // Shape mismatch.
+        // Shape mismatch — and the caller can branch on the kind.
         let bad = GemmRequest::new(
             IntMatrix::zeros(2, 3),
             IntMatrix::zeros(4, 2),
             Precision::unsigned(1, 1),
         );
-        assert!(s.run(bad).is_err());
+        assert!(matches!(s.run(bad), Err(BismoError::ShapeMismatch(_))));
+        // Zero-width precision is rejected at submission.
+        let zero_bits = GemmRequest::new(
+            IntMatrix::zeros(1, 1),
+            IntMatrix::zeros(1, 1),
+            Precision {
+                wbits: 0,
+                abits: 1,
+                lsigned: false,
+                rsigned: false,
+            },
+        );
+        assert!(matches!(
+            s.run(zero_bits),
+            Err(BismoError::PrecisionUnsupported(_))
+        ));
         // Operand outside the declared precision.
         let too_wide = GemmRequest::new(
             IntMatrix::from_slice(1, 1, &[100]),
             IntMatrix::zeros(1, 1),
             Precision::unsigned(2, 2),
         );
-        assert!(s.run(too_wide).is_err());
+        assert!(matches!(
+            s.run(too_wide),
+            Err(BismoError::PrecisionUnsupported(_))
+        ));
         // A valid request afterwards still completes.
         let ok = GemmRequest::new(
             IntMatrix::from_slice(1, 1, &[1]),
@@ -768,6 +835,41 @@ mod tests {
         for (h, (a, b)) in handles.into_iter().zip(&jobs) {
             assert_eq!(h.wait().unwrap().result, a.matmul(b));
         }
+    }
+
+    #[test]
+    fn shutdown_rejects_new_submissions_with_typed_error() {
+        let s = svc();
+        s.shutdown();
+        let r = s.run(GemmRequest::new(
+            IntMatrix::from_slice(1, 1, &[1]),
+            IntMatrix::from_slice(1, 1, &[1]),
+            Precision::unsigned(1, 1),
+        ));
+        assert!(matches!(r, Err(BismoError::ServiceShutdown)), "{r:?}");
+        assert_eq!(s.submitted(), 0, "rejected submissions are not counted");
+    }
+
+    #[test]
+    fn prepare_operand_prewarms_the_cache() {
+        let s = svc();
+        let mut rng = Rng::new(0x11E);
+        let w = Arc::new(IntMatrix::random(&mut rng, 64, 4, 3, true));
+        let (_, resident) = s.prepare_operand(&w, 3, true, true).unwrap();
+        assert!(!resident, "first prepare packs");
+        let (_, resident2) = s.prepare_operand(&w, 3, true, true).unwrap();
+        assert!(resident2, "second prepare is already resident");
+        // A request over the prepared weights hits the cache on its RHS.
+        let x = IntMatrix::random(&mut rng, 2, 64, 2, false);
+        let prec = Precision {
+            wbits: 2,
+            abits: 3,
+            lsigned: false,
+            rsigned: true,
+        };
+        let resp = s.run(GemmRequest::new(x.clone(), w.clone(), prec)).unwrap();
+        assert!(resp.rhs_cached, "prepared packing served the request");
+        assert_eq!(resp.result, x.matmul(&w));
     }
 
     #[test]

@@ -179,7 +179,15 @@ pub enum Instr {
 
 impl Instr {
     /// Check legality of this instruction in `stage`'s queue.
-    pub fn check_legal(&self, stage: Stage) -> Result<(), String> {
+    pub fn check_legal(&self, stage: Stage) -> Result<(), crate::api::BismoError> {
+        self.legality(stage)
+            .map_err(crate::api::BismoError::IllegalProgram)
+    }
+
+    /// Legality with a bare message payload — shared by
+    /// [`Instr::check_legal`] and [`Program::validate`], which adds
+    /// queue/index context before wrapping into the typed error.
+    pub(crate) fn legality(&self, stage: Stage) -> Result<(), String> {
         match self {
             Instr::Wait(ch) => {
                 if ch.consumer() != stage {

@@ -2,6 +2,7 @@
 //! with legality validation, statistics and a disassembler.
 
 use super::{encode, Instr, Stage, SyncChannel};
+use crate::api::BismoError;
 
 /// Per-stage instruction streams, executed in order by each stage.
 #[derive(Clone, Debug, Default)]
@@ -53,24 +54,24 @@ impl Program {
     /// leaves no dangling tokens and no stage starved forever — a
     /// necessary, not sufficient, deadlock-freedom condition; the
     /// simulator's deadlock detector covers the rest).
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), BismoError> {
         for s in Stage::ALL {
             for (i, instr) in self.queue(s).iter().enumerate() {
-                instr
-                    .check_legal(s)
-                    .map_err(|e| format!("{} queue[{i}]: {e}", s.name()))?;
+                instr.legality(s).map_err(|e| {
+                    BismoError::IllegalProgram(format!("{} queue[{i}]: {e}", s.name()))
+                })?;
             }
         }
         for ch in SyncChannel::ALL {
             let signals = self.count_sync(ch, true);
             let waits = self.count_sync(ch, false);
             if signals != waits {
-                return Err(format!(
+                return Err(BismoError::IllegalProgram(format!(
                     "token imbalance on {}: {} signals vs {} waits",
                     ch.name(),
                     signals,
                     waits
-                ));
+                )));
             }
         }
         Ok(())
@@ -124,13 +125,13 @@ impl Program {
     /// Rebuild a program from encoded instruction words — the path a
     /// host driver uses when loading a stored binary program into the
     /// accelerator's instruction queues. Validates after decoding.
-    pub fn from_words(words: &[u128]) -> Result<Self, String> {
+    pub fn from_words(words: &[u128]) -> Result<Self, BismoError> {
         let mut p = Program::new();
         for (i, &w) in words.iter().enumerate() {
             let (instr, stage) = super::decode(w);
             instr
-                .check_legal(stage)
-                .map_err(|e| format!("word {i}: {e}"))?;
+                .legality(stage)
+                .map_err(|e| BismoError::IllegalProgram(format!("word {i}: {e}")))?;
             p.push(stage, instr);
         }
         p.validate()?;
@@ -216,7 +217,8 @@ mod tests {
         let mut p = tiny_program();
         p.push(Stage::Execute, Instr::Signal(SyncChannel::ExecuteToFetch));
         let err = p.validate().unwrap_err();
-        assert!(err.contains("token imbalance"), "{err}");
+        assert!(matches!(err, BismoError::IllegalProgram(_)), "{err:?}");
+        assert!(err.to_string().contains("token imbalance"), "{err}");
     }
 
     #[test]

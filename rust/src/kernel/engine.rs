@@ -109,6 +109,16 @@ pub fn gemm_tiled(l: &BitSerialMatrix, r_t: &BitSerialMatrix) -> IntMatrix {
 
 /// Tiled bit-serial GEMM with row tiles distributed over the shared
 /// worker pool, capped at `threads` concurrent lanes.
+///
+/// Deprecated shim, kept for one release: application code should
+/// route jobs through [`crate::api::Session`] (which micro-batches
+/// onto the same pool and adds caching), and low-level callers should
+/// use [`gemm_tiled_with`] with an explicit `(pool, lanes)` pair.
+#[doc(hidden)]
+#[deprecated(
+    since = "0.2.0",
+    note = "use bismo::api::Session for serving, or gemm_tiled_with for low-level pool control"
+)]
 pub fn gemm_tiled_parallel(
     l: &BitSerialMatrix,
     r_t: &BitSerialMatrix,
@@ -311,6 +321,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // the shim stays covered until it is removed
     fn parallel_matches_serial() {
         property_sweep(0x9B0, 8, |rng, _| {
             let m = rng.index(40) + 1;

@@ -5,8 +5,10 @@
 //! oracle; this module is the *fast* software implementation of the
 //! same contract:
 //!
-//! * [`gemm_tiled`] / [`gemm_tiled_parallel`] — cache-blocked,
+//! * [`gemm_tiled`] / [`gemm_tiled_with`] — cache-blocked,
 //!   zero-plane-skipping GEMM over packed plane rows (see [`engine`]).
+//!   Application code should prefer the [`crate::api::Session`]
+//!   facade, which runs this engine behind its `Engine` backend.
 //! * [`WorkerPool`] — persistent work-claiming thread pool reused by
 //!   the engine, [`crate::baseline::gemm_bitserial_parallel`],
 //!   [`crate::coordinator::BismoBatchRunner`] and the micro-batches of
@@ -17,7 +19,10 @@
 pub mod engine;
 pub mod pool;
 
-pub use engine::{gemm_tiled, gemm_tiled_parallel, gemm_tiled_with, KernelConfig};
+pub use engine::{gemm_tiled, gemm_tiled_with, KernelConfig};
+// The deprecated shim stays re-exported (and callable) for one release.
+#[allow(deprecated)]
+pub use engine::gemm_tiled_parallel;
 pub use pool::WorkerPool;
 
 /// Binary dot product of two equal-length packed words slices:

@@ -35,7 +35,12 @@
 //!   Gated behind the `xla` cargo feature (needs the PJRT plugin and
 //!   the `xla`/`anyhow` crates, absent from the offline registry), so
 //!   it is deliberately not an intra-doc link here.
-//! * [`coordinator`] — the public API tying everything together:
+//! * [`api`] — **the crate's front door**: [`api::Session`] (owns the
+//!   worker pool, packing cache and backends), [`api::MatmulBuilder`]
+//!   (per-job options, validated before queueing) and [`api::Prepared`]
+//!   (prepare-once-execute-many weights), all returning the typed
+//!   [`api::BismoError`].
+//! * [`coordinator`] — the machinery beneath the facade:
 //!   [`coordinator::BismoContext`] for one synchronous matmul,
 //!   [`coordinator::BismoBatchRunner`] for one pre-assembled batch, and
 //!   [`coordinator::BismoService`] — the asynchronous serving layer
@@ -45,6 +50,7 @@
 //! * [`report`] — table/figure formatting used by the benchmark harness.
 //! * [`util`] — PRNG, CSV, timing helpers (offline build: no external deps).
 
+pub mod api;
 pub mod arch;
 pub mod baseline;
 pub mod bitmatrix;
@@ -62,6 +68,7 @@ pub mod sim;
 pub mod synth;
 pub mod util;
 
+pub use api::{BismoError, MatmulBuilder, Prepared, Session, SessionConfig};
 pub use arch::{BismoConfig, Platform};
 pub use bitmatrix::{BitSerialMatrix, IntMatrix};
 pub use coordinator::{BismoContext, BismoService, Precision, RunReport};

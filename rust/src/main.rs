@@ -22,13 +22,12 @@
 //! bismo info                                config + artifact status
 //! ```
 
-use bismo::arch::{all_instances, instance, BismoConfig, PYNQ_Z1};
+use bismo::api::{Backend, BismoError, Overlap, Precision, Session, SessionConfig};
+use bismo::arch::{all_instances, try_instance, BismoConfig, PYNQ_Z1};
 use bismo::bitmatrix::IntMatrix;
-use bismo::coordinator::{BismoContext, MatmulOptions, Precision};
 use bismo::costmodel::CostModel;
 use bismo::power::{PowerModel, TABLE_V};
 use bismo::report::{f, pct, Table};
-use bismo::scheduler::Overlap;
 use bismo::synth::{synth_dpu, synth_instance};
 use bismo::util::Rng;
 use std::collections::HashMap;
@@ -67,20 +66,30 @@ fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, k: &str, default: 
         .unwrap_or(default)
 }
 
-fn config_from(flags: &HashMap<String, String>) -> BismoConfig {
-    instance(get(flags, "instance", 1u32))
+/// Resolve `--instance` through the fallible Table IV lookup, so an
+/// unknown id is reported as a proper CLI error instead of a panic.
+fn config_from(flags: &HashMap<String, String>) -> Result<BismoConfig, BismoError> {
+    let raw = flags.get("instance").map(String::as_str).unwrap_or("1");
+    let id: u32 = raw
+        .parse()
+        .map_err(|_| BismoError::Parse(format!("bad --instance {raw:?} (expect a number)")))?;
+    try_instance(id)
 }
 
-fn cmd_quickstart() -> Result<(), String> {
-    let ctx = BismoContext::new(instance(1))?;
+fn cmd_quickstart() -> Result<(), BismoError> {
+    let session = Session::new(SessionConfig {
+        overlay: try_instance(1)?,
+        ..Default::default()
+    })?;
     let mut rng = Rng::new(1);
     let a = IntMatrix::random(&mut rng, 16, 256, 3, true);
     let b = IntMatrix::random(&mut rng, 256, 16, 3, true);
-    let opts = MatmulOptions {
-        verify: true,
-        ..Default::default()
-    };
-    let (_, rep) = ctx.matmul(&a, &b, Precision::signed(3, 3), opts)?;
+    let resp = session
+        .matmul(Precision::signed(3, 3))
+        .backend(Backend::Sim)
+        .verify(true)
+        .run(a, b)?;
+    let rep = resp.report.expect("sim backend carries a report");
     println!(
         "16x256x16 signed 3x3-bit: {} cycles, {} GOPS ({} of peak), verified OK",
         rep.cycles,
@@ -90,9 +99,12 @@ fn cmd_quickstart() -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_simulate(flags: &HashMap<String, String>) -> Result<(), String> {
-    let cfg = config_from(flags);
-    let ctx = BismoContext::new(cfg)?;
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<(), BismoError> {
+    let cfg = config_from(flags)?;
+    let session = Session::new(SessionConfig {
+        overlay: cfg,
+        ..Default::default()
+    })?;
     let m = get(flags, "m", 64usize);
     let k = get(flags, "k", 1024usize);
     let n = get(flags, "n", 64usize);
@@ -102,22 +114,19 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<(), String> {
     let mut rng = Rng::new(get(flags, "seed", 7u64));
     let am = IntMatrix::random(&mut rng, m, k, w, signed);
     let bm = IntMatrix::random(&mut rng, k, n, a, signed);
-    let prec = Precision {
-        wbits: w,
-        abits: a,
-        lsigned: signed,
-        rsigned: signed,
-    };
-    let opts = MatmulOptions {
-        overlap: if flags.contains_key("no-overlap") {
+    let prec = Precision::try_new(w, a, signed, signed)?;
+    let resp = session
+        .matmul(prec)
+        .backend(Backend::Sim)
+        .overlap(if flags.contains_key("no-overlap") {
             Overlap::None
         } else {
             Overlap::Full
-        },
-        bit_skip: flags.contains_key("bit-skip"),
-        verify: true,
-    };
-    let (_, rep) = ctx.matmul(&am, &bm, prec, opts)?;
+        })
+        .bit_skip(flags.contains_key("bit-skip"))
+        .verify(true)
+        .run(am, bm)?;
+    let rep = resp.report.expect("sim backend carries a report");
     let mut t = Table::new(
         &format!(
             "simulate {m}x{k}x{n} w{w}a{a} on (Dm={},Dk={},Dn={})",
@@ -147,11 +156,11 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_schedule(flags: &HashMap<String, String>) -> Result<(), String> {
+fn cmd_schedule(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     use bismo::bitmatrix::dram::{OperandLayout, ResultLayout};
     use bismo::scheduler::{compile, MatmulJob};
     use bismo::util::round_up;
-    let cfg = config_from(flags);
+    let cfg = config_from(flags)?;
     let m = get(flags, "m", 4usize);
     let k = get(flags, "k", 128usize);
     let n = get(flags, "n", 4usize);
@@ -220,10 +229,13 @@ impl BenchCase {
 /// tiled kernel engine, across precisions, signedness and ragged
 /// shapes. Verifies bit-exactness on every case and writes the
 /// machine-readable trajectory to `BENCH_gemm.json`.
-fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
+fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     use bismo::baseline::{binary_ops, gemm_bitserial};
     use bismo::bitmatrix::BitSerialMatrix;
-    use bismo::kernel::{gemm_tiled, gemm_tiled_parallel};
+    use bismo::kernel::{gemm_tiled, gemm_tiled_with, KernelConfig, WorkerPool};
+    let mt = |la: &BitSerialMatrix, rb: &BitSerialMatrix, threads: usize| {
+        gemm_tiled_with(la, rb, &KernelConfig::default(), Some((WorkerPool::global(), threads)))
+    };
     use bismo::util::bench::{report, BenchTimer};
     use bismo::util::Json;
     use std::collections::BTreeMap;
@@ -290,10 +302,16 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
         // the oracle on every case it is timed on.
         let oracle = gemm_bitserial(&la, &rb);
         if gemm_tiled(&la, &rb) != oracle {
-            return Err(format!("tiled kernel mismatch on {}", case.name()));
+            return Err(BismoError::VerifyFailed(format!(
+                "tiled kernel mismatch on {}",
+                case.name()
+            )));
         }
-        if gemm_tiled_parallel(&la, &rb, threads) != oracle {
-            return Err(format!("parallel tiled kernel mismatch on {}", case.name()));
+        if mt(&la, &rb, threads) != oracle {
+            return Err(BismoError::VerifyFailed(format!(
+                "parallel tiled kernel mismatch on {}",
+                case.name()
+            )));
         }
 
         let ops = binary_ops(
@@ -308,7 +326,7 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
         report(&format!("baseline_{name}_1t"), &base, Some((ops, "binop")));
         let tiled = timer.run(|| gemm_tiled(&la, &rb));
         report(&format!("tiled_{name}_1t"), &tiled, Some((ops, "binop")));
-        let tiled_mt = timer.run(|| gemm_tiled_parallel(&la, &rb, threads));
+        let tiled_mt = timer.run(|| mt(&la, &rb, threads));
         report(
             &format!("tiled_{name}_{threads}t"),
             &tiled_mt,
@@ -371,7 +389,7 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
     root.insert("headline".to_string(), Json::Obj(headline));
     let doc = Json::Obj(root);
     std::fs::write(&out_path, doc.pretty(2) + "\n")
-        .map_err(|e| format!("writing {out_path}: {e}"))?;
+        .map_err(|e| BismoError::Io(format!("writing {out_path}: {e}")))?;
     println!(
         "wrote {out_path}: headline {} speedup {:.2}x (tiled vs baseline, 1 thread)",
         headline_name, headline_speedup
@@ -393,10 +411,8 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
 /// service, and the difference in packing time is reported as the
 /// repack-avoidance win. Results go to `BENCH_serve.json`
 /// (schema documented in the README).
-fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<(), String> {
-    use bismo::coordinator::{
-        Backend, BismoService, GemmRequest, Precision, RequestOptions, ServiceConfig,
-    };
+fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
+    use bismo::coordinator::{BismoService, GemmRequest, RequestOptions, ServiceConfig};
     use bismo::util::bench::Samples;
     use bismo::util::Json;
     use std::collections::BTreeMap;
@@ -440,16 +456,20 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<(), String> {
     let backend = match flags.get("backend").map(|s| s.as_str()) {
         None | Some("engine") => Backend::Engine,
         Some("sim") => Backend::Sim,
-        Some(other) => return Err(format!("unknown --backend {other} (engine|sim)")),
+        Some(other) => {
+            return Err(BismoError::Parse(format!(
+                "unknown --backend {other} (engine|sim)"
+            )))
+        }
     };
     let out_path = flags
         .get("out")
         .cloned()
         .unwrap_or_else(|| "BENCH_serve.json".to_string());
-    let overlay = config_from(flags);
+    let overlay = config_from(flags)?;
     let seed = get(flags, "seed", 0x5E17Eu64);
     if rate <= 0.0 {
-        return Err("--rate must be positive".into());
+        return Err(BismoError::InvalidConfig("--rate must be positive".into()));
     }
 
     // The weight-stationary workload: reused weights, fresh activations.
@@ -474,7 +494,7 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<(), String> {
         arrivals.push(Duration::from_secs_f64(t));
     }
 
-    let run_phase = |cache_bytes: usize| -> Result<Phase, String> {
+    let run_phase = |cache_bytes: usize| -> Result<Phase, BismoError> {
         let svc = BismoService::new(ServiceConfig {
             workers,
             max_batch,
@@ -508,7 +528,9 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<(), String> {
             let r = h.wait()?;
             // Correctness gate on the first pass over the weight set.
             if i < layers && r.result != acts[i].matmul(&weights[i % layers]) {
-                return Err(format!("request {i}: service result != reference"));
+                return Err(BismoError::VerifyFailed(format!(
+                    "request {i}: service result != reference"
+                )));
             }
             lat.push(r.total_ns as f64);
             pack_ns += r.pack_ns;
@@ -654,7 +676,7 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<(), String> {
     root.insert("cache_off".to_string(), Json::Obj(cache_off));
     let doc = Json::Obj(root);
     std::fs::write(&out_path, doc.pretty(2) + "\n")
-        .map_err(|e| format!("writing {out_path}: {e}"))?;
+        .map_err(|e| BismoError::Io(format!("writing {out_path}: {e}")))?;
 
     println!(
         "wrote {out_path}: p50 {:.0} µs  p99 {:.0} µs  throughput {:.0} req/s",
@@ -674,7 +696,7 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_costmodel(flags: &HashMap<String, String>) -> Result<(), String> {
+fn cmd_costmodel(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     let model = CostModel::paper();
     let fitted = CostModel::fit_from_synth();
     let mut t = Table::new(
@@ -682,7 +704,10 @@ fn cmd_costmodel(flags: &HashMap<String, String>) -> Result<(), String> {
         &["instance", "LUT (paper const)", "LUT (fitted)", "BRAM", "fits Z7020"],
     );
     if let Some(inst) = flags.get("instance") {
-        let cfg = instance(inst.parse().map_err(|_| "bad --instance")?);
+        let cfg = try_instance(
+            inst.parse()
+                .map_err(|_| BismoError::Parse(format!("bad --instance {inst:?}")))?,
+        )?;
         t.rowf(&[
             inst,
             &f(model.lut_total(&cfg), 0),
@@ -709,9 +734,11 @@ fn cmd_costmodel(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_synth(flags: &HashMap<String, String>) -> Result<(), String> {
+fn cmd_synth(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     if let Some(dk) = flags.get("dk") {
-        let dk: u32 = dk.parse().map_err(|_| "bad --dk")?;
+        let dk: u32 = dk
+            .parse()
+            .map_err(|_| BismoError::Parse(format!("bad --dk {dk:?}")))?;
         let r = synth_dpu(dk, 32);
         println!(
             "DPU(Dk={dk}): {} LUTs ({} LUT/bin.op), {} FFs, Fmax {} MHz",
@@ -740,14 +767,14 @@ fn cmd_synth(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_power() -> Result<(), String> {
+fn cmd_power() -> Result<(), BismoError> {
     let m = PowerModel::calibrated();
     let mut t = Table::new(
         "power model vs paper Table V",
         &["config", "idle W", "+exec W", "+f&r W", "full W", "paper full W", "GOPS/W"],
     );
     for row in &TABLE_V {
-        let cfg = instance(row.instance).at_clock(row.fclk_mhz);
+        let cfg = try_instance(row.instance)?.at_clock(row.fclk_mhz);
         t.rowf(&[
             &format!("(#{}, {} MHz)", row.instance, row.fclk_mhz),
             &f(m.idle_w(&cfg), 2),
@@ -762,7 +789,7 @@ fn cmd_power() -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_instances() -> Result<(), String> {
+fn cmd_instances() -> Result<(), BismoError> {
     let mut t = Table::new(
         "Table IV instance presets",
         &["#", "Dm", "Dk", "Dn", "Bm", "Bn", "peak GOPS @ 200 MHz"],
@@ -782,7 +809,7 @@ fn cmd_instances() -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_info() -> Result<(), String> {
+fn cmd_info() -> Result<(), BismoError> {
     println!("bismo — bit-serial matrix multiplication overlay (reproduction)");
     println!("platform model: {}", PYNQ_Z1.name);
     #[cfg(feature = "xla")]

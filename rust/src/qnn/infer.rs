@@ -2,6 +2,7 @@
 
 use super::mlp::FloatMlp;
 use super::quantize::{quantize_activations, quantize_weights_symmetric, requantize};
+use crate::api::BismoError;
 use crate::bitmatrix::IntMatrix;
 use crate::coordinator::{
     BismoContext, BismoService, GemmRequest, GemmResponse, MatmulOptions, Precision,
@@ -68,7 +69,7 @@ impl QnnMlp {
         ctx: &BismoContext,
         x: &IntMatrix,
         opts: MatmulOptions,
-    ) -> Result<(IntMatrix, Vec<RunReport>), String> {
+    ) -> Result<(IntMatrix, Vec<RunReport>), BismoError> {
         let prec = |_layer: usize| Precision {
             wbits: self.abits, // LHS = activations (unsigned)
             abits: self.wbits, // RHS = weights (signed)
@@ -102,7 +103,7 @@ impl QnnMlp {
         svc: &BismoService,
         x: impl Into<Arc<IntMatrix>>,
         opts: RequestOptions,
-    ) -> Result<(IntMatrix, Vec<GemmResponse>), String> {
+    ) -> Result<(IntMatrix, Vec<GemmResponse>), BismoError> {
         let prec = Precision {
             wbits: self.abits, // LHS = activations (unsigned)
             abits: self.wbits, // RHS = weights (signed)

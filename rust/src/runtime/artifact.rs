@@ -1,5 +1,6 @@
 //! Artifact manifest: what `python -m compile.aot` exported.
 
+use crate::api::BismoError;
 use crate::util::Json;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -33,35 +34,42 @@ pub struct ArtifactManifest {
 
 impl ArtifactManifest {
     /// Load `<dir>/manifest.json`.
-    pub fn load(dir: &Path) -> Result<Self, String> {
+    pub fn load(dir: &Path) -> Result<Self, BismoError> {
         let mpath = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&mpath)
-            .map_err(|e| format!("reading {}: {e} (run `make artifacts` first)", mpath.display()))?;
+        let text = std::fs::read_to_string(&mpath).map_err(|e| {
+            BismoError::Io(format!(
+                "reading {}: {e} (run `make artifacts` first)",
+                mpath.display()
+            ))
+        })?;
         Self::parse(&text, dir)
     }
 
     /// Parse manifest text with artifact paths relative to `dir`.
-    pub fn parse(text: &str, dir: &Path) -> Result<Self, String> {
-        let j = Json::parse(text).map_err(|e| format!("manifest.json: {e}"))?;
-        let obj = j.as_obj().ok_or("manifest root must be an object")?;
+    pub fn parse(text: &str, dir: &Path) -> Result<Self, BismoError> {
+        let bad = |m: String| BismoError::Parse(m);
+        let j = Json::parse(text).map_err(|e| bad(format!("manifest.json: {e}")))?;
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| bad("manifest root must be an object".into()))?;
         let mut artifacts = BTreeMap::new();
         for (name, entry) in obj {
             let file = entry
                 .get("file")
                 .and_then(|f| f.as_str())
-                .ok_or_else(|| format!("{name}: missing file"))?;
+                .ok_or_else(|| bad(format!("{name}: missing file")))?;
             let inputs = entry
                 .get("inputs")
                 .and_then(|i| i.as_arr())
-                .ok_or_else(|| format!("{name}: missing inputs"))?
+                .ok_or_else(|| bad(format!("{name}: missing inputs")))?
                 .iter()
                 .map(|spec| {
                     let shape = spec
                         .get("shape")
                         .and_then(|s| s.as_arr())
-                        .ok_or_else(|| format!("{name}: input missing shape"))?
+                        .ok_or_else(|| bad(format!("{name}: input missing shape")))?
                         .iter()
-                        .map(|d| d.as_usize().ok_or_else(|| format!("{name}: bad dim")))
+                        .map(|d| d.as_usize().ok_or_else(|| bad(format!("{name}: bad dim"))))
                         .collect::<Result<Vec<_>, _>>()?;
                     let dtype = spec
                         .get("dtype")
@@ -70,7 +78,7 @@ impl ArtifactManifest {
                         .to_string();
                     Ok(InputSpec { shape, dtype })
                 })
-                .collect::<Result<Vec<_>, String>>()?;
+                .collect::<Result<Vec<_>, BismoError>>()?;
             artifacts.insert(
                 name.clone(),
                 ArtifactSpec {
@@ -83,12 +91,12 @@ impl ArtifactManifest {
         Ok(ArtifactManifest { artifacts })
     }
 
-    pub fn get(&self, name: &str) -> Result<&ArtifactSpec, String> {
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec, BismoError> {
         self.artifacts.get(name).ok_or_else(|| {
-            format!(
+            BismoError::Parse(format!(
                 "artifact {name:?} not in manifest (have: {:?})",
                 self.artifacts.keys().collect::<Vec<_>>()
-            )
+            ))
         })
     }
 }
@@ -121,7 +129,11 @@ mod tests {
     #[test]
     fn missing_artifact_reported() {
         let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
-        assert!(m.get("nope").unwrap_err().contains("not in manifest"));
+        assert!(m
+            .get("nope")
+            .unwrap_err()
+            .to_string()
+            .contains("not in manifest"));
     }
 
     #[test]

@@ -19,6 +19,7 @@
 
 use super::plan::{MatmulJob, Mode, Plan};
 use super::{Overlap, PlaneList};
+use crate::api::BismoError;
 use crate::arch::BismoConfig;
 use crate::isa::{ExecuteRun, FetchRun, Instr, Program, ResultRun, Stage, SyncChannel};
 
@@ -52,7 +53,7 @@ pub fn emit(
     overlap: Overlap,
     lhs_planes: &PlaneList,
     rhs_planes: &PlaneList,
-) -> Result<Program, String> {
+) -> Result<Program, BismoError> {
     assert_eq!(lhs_planes.len() as u32, plan.lhs_planes);
     assert_eq!(rhs_planes.len() as u32, plan.rhs_planes);
     let ir = match plan.mode {
@@ -67,11 +68,11 @@ pub fn emit(
 }
 
 /// Fetch-block size sanity vs the 16-bit (in 8-byte units) ISA field.
-fn check_block(bytes: u64) -> Result<u32, String> {
+fn check_block(bytes: u64) -> Result<u32, BismoError> {
     if bytes / 8 >= (1 << 16) {
-        return Err(format!(
+        return Err(BismoError::CapacityExceeded(format!(
             "fetch block of {bytes} bytes exceeds the ISA block-size field"
-        ));
+        )));
     }
     Ok(bytes as u32)
 }
@@ -91,7 +92,7 @@ fn build_rhs_resident(
     lhs_planes: &PlaneList,
     rhs_planes: &PlaneList,
     tiles_per_group: usize,
-) -> Result<(Vec<FetchRound>, Vec<ExecRound>), String> {
+) -> Result<(Vec<FetchRound>, Vec<ExecRound>), BismoError> {
     let dm = cfg.dm as usize;
     let dn = cfg.dn as usize;
     let kc = plan.kc as u32;
@@ -204,7 +205,7 @@ fn build_streaming(
     lhs_planes: &PlaneList,
     rhs_planes: &PlaneList,
     slice_chunks: usize,
-) -> Result<(Vec<FetchRound>, Vec<ExecRound>), String> {
+) -> Result<(Vec<FetchRound>, Vec<ExecRound>), BismoError> {
     let dm = cfg.dm as usize;
     let dn = cfg.dn as usize;
     let regions = if overlap == Overlap::Full { 2 } else { 1 };
@@ -304,7 +305,7 @@ fn lower(
     ir: (Vec<FetchRound>, Vec<ExecRound>),
     cfg: &BismoConfig,
     overlap: Overlap,
-) -> Result<Program, String> {
+) -> Result<Program, BismoError> {
     let (fetch_rounds, exec_rounds) = ir;
     let mut prog = Program::new();
 
@@ -329,10 +330,10 @@ fn lower(
     let mut signals_after = vec![0usize; exec_rounds.len()];
     for adj in adjusted.iter().flatten() {
         if *adj >= exec_rounds.len() {
-            return Err(format!(
+            return Err(BismoError::IllegalProgram(format!(
                 "internal: milestone {adj} beyond {} exec rounds",
                 exec_rounds.len()
-            ));
+            )));
         }
         signals_after[*adj] += 1;
     }

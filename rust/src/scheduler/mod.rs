@@ -26,6 +26,7 @@ mod plan;
 pub use emit::emit;
 pub use plan::{plan, MatmulJob, Mode, Plan};
 
+use crate::api::BismoError;
 use crate::arch::BismoConfig;
 use crate::bitmatrix::{plane_sign, BitSerialMatrix};
 use crate::isa::{ExecuteRun, Instr, Program, Stage};
@@ -88,7 +89,11 @@ impl PlaneList {
 /// Compile `job` into a program for `cfg`.
 ///
 /// Convenience wrapper over [`plan()`] + [`emit()`] with full plane lists.
-pub fn compile(job: &MatmulJob, cfg: &BismoConfig, overlap: Overlap) -> Result<Program, String> {
+pub fn compile(
+    job: &MatmulJob,
+    cfg: &BismoConfig,
+    overlap: Overlap,
+) -> Result<Program, BismoError> {
     let lhs_planes = PlaneList::full(job.wbits, job.lsigned);
     let rhs_planes = PlaneList::full(job.abits, job.rsigned);
     compile_with_planes(job, cfg, overlap, &lhs_planes, &rhs_planes)
@@ -101,7 +106,7 @@ pub fn compile_with_planes(
     overlap: Overlap,
     lhs_planes: &PlaneList,
     rhs_planes: &PlaneList,
-) -> Result<Program, String> {
+) -> Result<Program, BismoError> {
     let p = plan(job, cfg, lhs_planes.len() as u32, rhs_planes.len() as u32)?;
     emit(job, cfg, &p, overlap, lhs_planes, rhs_planes)
 }
@@ -116,13 +121,13 @@ pub fn peak_execute_program(
     k_chunks: u32,
     bursts: u32,
     pairs: u32,
-) -> Result<Program, String> {
+) -> Result<Program, BismoError> {
     let max_off = k_chunks as u64;
     if max_off > cfg.bm as u64 || max_off > cfg.bn as u64 {
-        return Err(format!(
+        return Err(BismoError::CapacityExceeded(format!(
             "k_chunks {} exceeds buffer depth (bm {}, bn {})",
             k_chunks, cfg.bm, cfg.bn
-        ));
+        )));
     }
     let mut prog = Program::new();
     for _ in 0..bursts {

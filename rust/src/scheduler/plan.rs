@@ -1,7 +1,9 @@
 //! Tiling and schedule-mode selection.
 
+use crate::api::BismoError;
 use crate::arch::BismoConfig;
 use crate::bitmatrix::dram::{OperandLayout, ResultLayout};
+use crate::coordinator::Precision;
 use crate::util::ceil_div;
 
 /// A matrix multiplication job: `P(m×n) = L(m×k) · R(k×n)`, with the
@@ -27,16 +29,21 @@ pub struct MatmulJob {
 
 impl MatmulJob {
     /// Check internal consistency and compatibility with `cfg`.
-    pub fn validate(&self, cfg: &BismoConfig) -> Result<(), String> {
+    pub fn validate(&self, cfg: &BismoConfig) -> Result<(), BismoError> {
         if self.m == 0 || self.k == 0 || self.n == 0 {
-            return Err("matrix dimensions must be non-zero".into());
+            return Err(BismoError::ShapeMismatch(
+                "matrix dimensions must be non-zero".into(),
+            ));
         }
-        if self.wbits == 0 || self.abits == 0 || self.wbits > 32 || self.abits > 32 {
-            return Err("precisions must be in 1..=32 bits".into());
+        // The shared precision gate: 1..=32 bits per side, combined
+        // width inside the accumulator's weight range.
+        Precision {
+            wbits: self.wbits,
+            abits: self.abits,
+            lsigned: self.lsigned,
+            rsigned: self.rsigned,
         }
-        if self.wbits + self.abits > 62 {
-            return Err("combined precision exceeds the 2^62 weight range".into());
-        }
+        .validate()?;
         let checks = [
             (self.lhs.rows == self.m, "lhs layout rows != m"),
             (self.lhs.cols == self.k, "lhs layout cols != k"),
@@ -51,7 +58,7 @@ impl MatmulJob {
         ];
         for (ok, msg) in checks {
             if !ok {
-                return Err(msg.into());
+                return Err(BismoError::ShapeMismatch(msg.into()));
             }
         }
         // Region overlap in DRAM would corrupt operands with results.
@@ -65,9 +72,9 @@ impl MatmulJob {
                 let (a0, a1) = spans[i];
                 let (b0, b1) = spans[j];
                 if a0 < b1 && b0 < a1 {
-                    return Err(format!(
+                    return Err(BismoError::InvalidConfig(format!(
                         "DRAM regions overlap: [{a0},{a1}) vs [{b0},{b1})"
-                    ));
+                    )));
                 }
             }
         }
@@ -139,13 +146,15 @@ pub fn plan(
     cfg: &BismoConfig,
     lhs_planes: u32,
     rhs_planes: u32,
-) -> Result<Plan, String> {
+) -> Result<Plan, BismoError> {
     job.validate(cfg)?;
     cfg.validate()?;
     if lhs_planes == 0 || rhs_planes == 0 {
-        return Err("plane lists must be non-empty (all-zero operand: result is zero; \
-                    short-circuit upstream)"
-            .into());
+        return Err(BismoError::InvalidConfig(
+            "plane lists must be non-empty (all-zero operand: result is zero; \
+             short-circuit upstream)"
+                .into(),
+        ));
     }
     let tm = ceil_div(job.m as u64, cfg.dm as u64) as usize;
     let tn = ceil_div(job.n as u64, cfg.dn as u64) as usize;
@@ -167,14 +176,14 @@ pub fn plan(
         let s_r = (cfg.bn as usize / 2) / rhs_planes as usize;
         let slice_chunks = s_l.min(s_r).min(kc);
         if slice_chunks == 0 {
-            return Err(format!(
+            return Err(BismoError::CapacityExceeded(format!(
                 "buffers too small for precision: bm/2={} words for {} LHS planes, \
                  bn/2={} for {} RHS planes",
                 lhs_half,
                 lhs_planes,
                 cfg.bn / 2,
                 rhs_planes
-            ));
+            )));
         }
         Mode::Streaming { slice_chunks }
     };
@@ -185,9 +194,9 @@ pub fn plan(
         Mode::Streaming { slice_chunks } => slice_chunks,
     };
     if max_words >= (1 << 14) {
-        return Err(format!(
+        return Err(BismoError::CapacityExceeded(format!(
             "schedule needs {max_words}-word fetches, exceeding the 14-bit ISA field"
-        ));
+        )));
     }
 
     Ok(Plan {

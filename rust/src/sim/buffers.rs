@@ -1,6 +1,7 @@
 //! On-chip memories: the LHS/RHS matrix buffers (BRAM in hardware) and
 //! the result buffer (LUTRAM in hardware).
 
+use super::StageFault;
 use crate::arch::BismoConfig;
 use crate::util::ceil_div;
 
@@ -76,7 +77,7 @@ impl MatrixBuffers {
     }
 
     /// Write one `D_k`-bit buffer word (as `wpc` u64s).
-    pub fn write_word(&mut self, buf: usize, word: usize, data: &[u64]) -> Result<(), String> {
+    pub fn write_word(&mut self, buf: usize, word: usize, data: &[u64]) -> Result<(), StageFault> {
         assert_eq!(data.len(), self.wpc);
         let s = self.slot(buf, word)?;
         let dst = if buf < self.dm {
@@ -89,7 +90,7 @@ impl MatrixBuffers {
     }
 
     /// Read one `D_k`-bit buffer word.
-    pub fn read_word(&self, buf: usize, word: usize) -> Result<&[u64], String> {
+    pub fn read_word(&self, buf: usize, word: usize) -> Result<&[u64], StageFault> {
         let s = self.slot(buf, word)?;
         Ok(if buf < self.dm {
             &self.lhs[s..s + self.wpc]
@@ -119,7 +120,7 @@ impl MatrixBuffers {
     /// slice (buffer storage is word-major, so consecutive words are
     /// adjacent). Bounds are validated once — this is the execute
     /// stage's hot path.
-    pub fn read_range(&self, buf: usize, word: usize, nwords: usize) -> Result<&[u64], String> {
+    pub fn read_range(&self, buf: usize, word: usize, nwords: usize) -> Result<&[u64], StageFault> {
         let r = self.word_range(buf, word, nwords)?;
         Ok(if buf < self.dm {
             &self.lhs[r]
@@ -138,8 +139,8 @@ impl MatrixBuffers {
         j: usize,
         word: usize,
         nwords: usize,
-    ) -> Result<std::ops::Range<usize>, String> {
-        self.word_range(self.rhs_buf(j), word, nwords)
+    ) -> Result<std::ops::Range<usize>, StageFault> {
+        Ok(self.word_range(self.rhs_buf(j), word, nwords)?)
     }
 
     /// The raw RHS storage ([`MatrixBuffers::rhs_word_range`] indexes
@@ -186,13 +187,13 @@ impl ResultBuffer {
 
     /// Execute-side: commit an accumulator set. Errors on overflow —
     /// a scheduler bug (missing `Wait(ResultToExecute)`).
-    pub fn commit(&mut self, accs: Vec<i32>) -> Result<(), String> {
+    pub fn commit(&mut self, accs: Vec<i32>) -> Result<(), StageFault> {
         assert_eq!(accs.len(), self.dm * self.dn);
         if self.slots.len() == self.capacity {
-            return Err(format!(
+            return Err(StageFault(format!(
                 "result buffer overflow (B_r = {}): execute committed without a drained slot",
                 self.capacity
-            ));
+            )));
         }
         self.slots.push_back(accs);
         self.max_occupancy = self.max_occupancy.max(self.slots.len());
@@ -200,9 +201,9 @@ impl ResultBuffer {
     }
 
     /// Result-side: drain the oldest committed set. Errors on underflow.
-    pub fn drain(&mut self) -> Result<Vec<i32>, String> {
+    pub fn drain(&mut self) -> Result<Vec<i32>, StageFault> {
         self.slots.pop_front().ok_or_else(|| {
-            "result buffer underflow: RunResult with no committed results".to_string()
+            StageFault("result buffer underflow: RunResult with no committed results".to_string())
         })
     }
 

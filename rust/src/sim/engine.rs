@@ -107,7 +107,10 @@ struct StageState {
 
 impl Simulation {
     pub fn new(cfg: BismoConfig, platform: &Platform, dram: DramImage) -> Result<Self, SimError> {
-        cfg.validate().map_err(SimError::BadConfig)?;
+        cfg.validate().map_err(|e| match e {
+            crate::api::BismoError::InvalidConfig(m) => SimError::BadConfig(m),
+            other => SimError::BadConfig(other.to_string()),
+        })?;
         Ok(Simulation {
             fetch_unit: FetchUnit {
                 timing: DmaTiming::fetch(&cfg, platform),
@@ -173,7 +176,10 @@ impl Simulation {
 
     /// Run a program to completion.
     pub fn run(&mut self, prog: &Program) -> Result<RunStats, SimError> {
-        prog.validate().map_err(SimError::BadProgram)?;
+        prog.validate().map_err(|e| match e {
+            crate::api::BismoError::IllegalProgram(m) => SimError::BadProgram(m),
+            other => SimError::BadProgram(other.to_string()),
+        })?;
         let mut stats = RunStats::default();
         let mut st = [
             StageState { pc: 0, t: 0 },
@@ -218,10 +224,10 @@ impl Simulation {
                             let (cy, bytes) = self
                                 .fetch_unit
                                 .run(fr, &self.dram, &mut self.bufs)
-                                .map_err(|msg| SimError::Fault {
+                                .map_err(|e| SimError::Fault {
                                     stage: "fetch",
                                     pc: st[s].pc,
-                                    msg,
+                                    msg: e.0,
                                 })?;
                             st[s].t += cy;
                             stats.fetch_busy += cy;
@@ -231,10 +237,10 @@ impl Simulation {
                             let (cy, ops, fill, committed) = self
                                 .exec
                                 .run(er, &self.bufs, &mut self.result_buf)
-                                .map_err(|msg| SimError::Fault {
+                                .map_err(|e| SimError::Fault {
                                     stage: "execute",
                                     pc: st[s].pc,
-                                    msg,
+                                    msg: e.0,
                                 })?;
                             st[s].t += cy;
                             stats.execute_busy += cy;
@@ -246,10 +252,10 @@ impl Simulation {
                             let (cy, bytes) = self
                                 .result_unit
                                 .run(rr, &mut self.result_buf, &mut self.dram)
-                                .map_err(|msg| SimError::Fault {
+                                .map_err(|e| SimError::Fault {
                                     stage: "result",
                                     pc: st[s].pc,
-                                    msg,
+                                    msg: e.0,
                                 })?;
                             st[s].t += cy;
                             stats.result_busy += cy;

@@ -22,6 +22,7 @@
 //! D_k=256 at k=8192, both reproduced by this model).
 
 use super::buffers::{MatrixBuffers, ResultBuffer};
+use super::StageFault;
 use crate::arch::BismoConfig;
 use crate::isa::ExecuteRun;
 use crate::kernel::popcount_and;
@@ -72,7 +73,7 @@ impl ExecuteUnit {
         e: &ExecuteRun,
         bufs: &MatrixBuffers,
         result_buf: &mut ResultBuffer,
-    ) -> Result<(u64, u64, u64, bool), String> {
+    ) -> Result<(u64, u64, u64, bool), StageFault> {
         if e.acc_reset {
             self.accs.iter_mut().for_each(|a| *a = 0);
         }
@@ -91,7 +92,7 @@ impl ExecuteUnit {
         for j in 0..self.dn {
             let range = bufs
                 .rhs_word_range(j, e.rhs_offset as usize, chunks)
-                .map_err(|err| format!("execute rhs: {err}"))?;
+                .map_err(|err| StageFault(format!("execute rhs: {err}")))?;
             self.rhs_scratch.push(range);
         }
         let rhs_data = bufs.rhs_data();
@@ -102,7 +103,7 @@ impl ExecuteUnit {
             for i in 0..self.dm {
                 let lw = bufs
                     .read_range(bufs.lhs_buf(i), e.lhs_offset as usize, chunks)
-                    .map_err(|err| format!("execute lhs: {err}"))?;
+                    .map_err(|err| StageFault(format!("execute lhs: {err}")))?;
                 for (j, range) in self.rhs_scratch.iter().enumerate() {
                     let pc = popcount_and(lw, &rhs_data[range.clone()]);
                     self.accs[i * self.dn + j] += weight * pc as i64;
@@ -112,7 +113,7 @@ impl ExecuteUnit {
             for i in 0..self.dm {
                 let lw = bufs
                     .read_range(bufs.lhs_buf(i), e.lhs_offset as usize, chunks)
-                    .map_err(|err| format!("execute lhs: {err}"))?;
+                    .map_err(|err| StageFault(format!("execute lhs: {err}")))?;
                 for (j, range) in self.rhs_scratch.iter().enumerate() {
                     let pc = popcount_and(lw, &rhs_data[range.clone()]);
                     let idx = i * self.dn + j;
@@ -129,7 +130,9 @@ impl ExecuteUnit {
         let committed = e.commit_result;
         if committed {
             let set: Vec<i32> = self.accs.iter().map(|&a| a as i32).collect();
-            result_buf.commit(set).map_err(|err| format!("execute: {err}"))?;
+            result_buf
+                .commit(set)
+                .map_err(|err| StageFault(format!("execute: {err}")))?;
         }
 
         // Timing (see module docs).

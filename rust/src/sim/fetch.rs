@@ -8,6 +8,7 @@
 
 use super::buffers::MatrixBuffers;
 use super::dram::DmaTiming;
+use super::StageFault;
 use crate::bitmatrix::dram::DramImage;
 use crate::isa::FetchRun;
 
@@ -26,21 +27,21 @@ impl FetchUnit {
         f: &FetchRun,
         dram: &DramImage,
         bufs: &mut MatrixBuffers,
-    ) -> Result<(u64, u64), String> {
+    ) -> Result<(u64, u64), StageFault> {
         let chunk_bytes = self.words_per_chunk as u64 * 8;
         if f.block_bytes as u64 % chunk_bytes != 0 {
-            return Err(format!(
+            return Err(StageFault(format!(
                 "fetch block of {} bytes is not a multiple of the {}-byte buffer word",
                 f.block_bytes, chunk_bytes
-            ));
+            )));
         }
         if f.buf_start as usize + f.buf_range as usize > bufs.num_buffers() {
-            return Err(format!(
+            return Err(StageFault(format!(
                 "fetch target buffers [{}, {}) out of range ({} buffers)",
                 f.buf_start,
                 f.buf_start + f.buf_range,
                 bufs.num_buffers()
-            ));
+            )));
         }
         let words_per_block = f.block_bytes as u64 / chunk_bytes;
         let total_words = words_per_block * f.num_blocks as u64;
@@ -63,7 +64,7 @@ impl FetchUnit {
                 }
                 let buf = f.buf_start as usize + dst_buf;
                 bufs.write_word(buf, cursors[dst_buf], &word)
-                    .map_err(|e| format!("fetch: {e}"))?;
+                    .map_err(|e| StageFault(format!("fetch: {e}")))?;
                 cursors[dst_buf] += 1;
                 words_in_buf += 1;
                 if words_in_buf == f.words_per_buf {

@@ -33,6 +33,27 @@ pub use execute::ExecuteUnit;
 pub use fetch::FetchUnit;
 pub use result::ResultUnit;
 
+/// A localized failure inside one stage unit: out-of-range buffer
+/// access, result-FIFO over/underflow, misaligned fetch. The engine
+/// wraps it into [`SimError::Fault`] with stage and program-counter
+/// context; standalone users of the units see the bare message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageFault(pub String);
+
+impl std::fmt::Display for StageFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for StageFault {}
+
+impl From<String> for StageFault {
+    fn from(msg: String) -> Self {
+        StageFault(msg)
+    }
+}
+
 /// A simple token FIFO with unbounded depth (hardware uses small FIFOs;
 /// depth is a scheduler property we check, not a correctness cliff) —
 /// tokens carry the producer-side timestamp so the consumer's `Wait`

@@ -9,6 +9,7 @@
 
 use super::buffers::ResultBuffer;
 use super::dram::DmaTiming;
+use super::StageFault;
 use crate::bitmatrix::dram::DramImage;
 use crate::isa::ResultRun;
 
@@ -26,18 +27,20 @@ impl ResultUnit {
         r: &ResultRun,
         result_buf: &mut ResultBuffer,
         dram: &mut DramImage,
-    ) -> Result<(u64, u64), String> {
-        let set = result_buf.drain().map_err(|e| format!("result: {e}"))?;
+    ) -> Result<(u64, u64), StageFault> {
+        let set = result_buf
+            .drain()
+            .map_err(|e| StageFault(format!("result: {e}")))?;
         let rows = r.rows as usize;
         let cols = r.cols as usize;
         if cols > self.dn || rows * self.dn > set.len() {
-            return Err(format!(
+            return Err(StageFault(format!(
                 "result tile {}x{} exceeds committed set ({} accumulators, D_n={})",
                 rows,
                 cols,
                 set.len(),
                 self.dn
-            ));
+            )));
         }
         let base = r.dram_base + r.offset;
         for tr in 0..rows {

@@ -6,6 +6,20 @@
 
 use std::collections::BTreeMap;
 
+/// Parse failure from [`Json::parse`]: the message carries the byte
+/// offset and what was expected. Convertible into
+/// [`crate::api::BismoError::Parse`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JsonError(pub String);
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json: {}", self.0)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -18,16 +32,16 @@ pub enum Json {
 }
 
 impl Json {
-    pub fn parse(s: &str) -> Result<Json, String> {
+    pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             b: s.as_bytes(),
             i: 0,
         };
         p.ws();
-        let v = p.value()?;
+        let v = p.value().map_err(JsonError)?;
         p.ws();
         if p.i != p.b.len() {
-            return Err(format!("trailing garbage at byte {}", p.i));
+            return Err(JsonError(format!("trailing garbage at byte {}", p.i)));
         }
         Ok(v)
     }

@@ -12,7 +12,7 @@ pub mod rng;
 
 pub use bench::{BenchTimer, Samples};
 pub use csv::CsvWriter;
-pub use json::Json;
+pub use json::{Json, JsonError};
 pub use rng::Rng;
 
 /// splitmix64 finalizer: one full-avalanche mixing round. Shared by the

@@ -1,0 +1,178 @@
+//! Integration tests for the `bismo::api` facade: prepared operands
+//! are bit-exact against the CPU bit-serial oracle on BOTH backends,
+//! reuse skips repacking (observed through `CacheStats`), and errors
+//! are typed end to end.
+
+use bismo::api::{Backend, BismoError, Precision, Session, SessionConfig};
+use bismo::arch::BismoConfig;
+use bismo::baseline::gemm_bitserial;
+use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
+use bismo::util::{property_sweep, Rng};
+use std::sync::Arc;
+
+fn session() -> Session {
+    Session::new(SessionConfig {
+        workers: 2,
+        max_batch: 4,
+        cache_bytes: 32 << 20,
+        overlay: BismoConfig::small(),
+    })
+    .unwrap()
+}
+
+/// Oracle product via the naive bit-serial reference.
+fn oracle(a: &IntMatrix, b: &IntMatrix, prec: Precision) -> IntMatrix {
+    let la = BitSerialMatrix::from_int(a, prec.wbits, prec.lsigned);
+    let rb = BitSerialMatrix::from_int_transposed(b, prec.abits, prec.rsigned);
+    gemm_bitserial(&la, &rb)
+}
+
+#[test]
+fn prepared_weights_are_bit_exact_on_both_backends_and_never_repacked() {
+    let s = session();
+    let mut rng = Rng::new(0xFACADE);
+    // Signed weights with ragged k (not a multiple of 64) and ragged n.
+    let prec = Precision {
+        wbits: 2, // activations, unsigned
+        abits: 4, // weights, signed
+        lsigned: false,
+        rsigned: true,
+    };
+    let w = Arc::new(IntMatrix::random(&mut rng, 130, 5, 4, true));
+
+    let engine = s.matmul(prec).backend(Backend::Engine).prepare(w.clone()).unwrap();
+    // Same weights, same precision: the sim-backend handle finds the
+    // packing already resident.
+    let sim = s.matmul(prec).backend(Backend::Sim).prepare(w.clone()).unwrap();
+    let after_prepare = s.cache_stats();
+    assert_eq!(after_prepare.insertions, 1, "one packing for both handles");
+
+    for i in 0..4 {
+        let x = IntMatrix::random(&mut rng, 3, 130, 2, false);
+        let expect = oracle(&x, &w, prec);
+        assert_eq!(expect, x.matmul(&w), "oracle agrees with i64 reference");
+        let re = engine.execute(x.clone()).unwrap();
+        let rs = sim.execute(x.clone()).unwrap();
+        assert_eq!(re.result, expect, "engine backend, execute {i}");
+        assert_eq!(rs.result, expect, "sim backend, execute {i}");
+        assert!(re.report.is_none() && rs.report.is_some());
+        assert!(re.rhs_cached && rs.rhs_cached, "execute {i} reused the packing");
+    }
+
+    // The reuse contract, stated in counters: executes added cache hits
+    // but ZERO new misses or insertions — nothing was ever repacked.
+    let after = s.cache_stats();
+    assert_eq!(after.misses, after_prepare.misses, "no repack misses");
+    assert_eq!(
+        after.insertions, after_prepare.insertions,
+        "no repack insertions"
+    );
+    assert_eq!(after.hits, after_prepare.hits + 8, "8 executes, 8 hits");
+}
+
+#[test]
+fn prepared_reuse_property_sweep_signed_and_ragged() {
+    let s = session();
+    property_sweep(0x9A9ADE, 8, |rng, case| {
+        let k = rng.index(190) + 1; // frequently ragged
+        let n = rng.index(9) + 1;
+        let m = rng.index(5) + 1;
+        let wb = rng.index(4) as u32 + 1;
+        let ab = rng.index(4) as u32 + 1;
+        let (ls, rs) = (rng.chance(0.5), rng.chance(0.5));
+        let prec = Precision {
+            wbits: wb,
+            abits: ab,
+            lsigned: ls,
+            rsigned: rs,
+        };
+        let w = Arc::new(IntMatrix::random(rng, k, n, ab, rs));
+        let backend = if rng.chance(0.5) {
+            Backend::Engine
+        } else {
+            Backend::Sim
+        };
+        let prepared = s.matmul(prec).backend(backend).prepare(w.clone()).unwrap();
+        let before = s.cache_stats();
+        for _ in 0..2 {
+            let x = IntMatrix::random(rng, m, k, wb, ls);
+            let resp = prepared.execute(x.clone()).unwrap();
+            assert_eq!(resp.result, oracle(&x, &w, prec), "case {case}");
+            assert!(resp.rhs_cached, "case {case} reused the prepared packing");
+        }
+        let after = s.cache_stats();
+        assert_eq!(after.misses, before.misses, "case {case}: zero repacks");
+    });
+}
+
+#[test]
+fn builder_errors_are_typed_and_pre_queue() {
+    let s = session();
+    // Precision rejected before anything is enqueued.
+    let bad = Precision {
+        wbits: 0,
+        abits: 1,
+        lsigned: false,
+        rsigned: false,
+    };
+    match s.matmul(bad).run(IntMatrix::zeros(1, 1), IntMatrix::zeros(1, 1)) {
+        Err(BismoError::PrecisionUnsupported(_)) => {}
+        other => panic!("expected PrecisionUnsupported, got {other:?}"),
+    }
+    // Shape mismatch surfaces through the handle as a typed error.
+    match s.run(
+        IntMatrix::zeros(2, 3),
+        IntMatrix::zeros(4, 2),
+        Precision::unsigned(1, 1),
+    ) {
+        Err(BismoError::ShapeMismatch(_)) => {}
+        other => panic!("expected ShapeMismatch, got {other:?}"),
+    }
+    // Weights out of declared range are caught at prepare time.
+    match s.prepare(IntMatrix::from_slice(1, 1, &[100]), Precision::unsigned(2, 2)) {
+        Err(BismoError::PrecisionUnsupported(_)) => {}
+        other => panic!(
+            "expected PrecisionUnsupported, got {:?}",
+            other.err().map(|e| e.kind())
+        ),
+    }
+    // The session still serves valid work afterwards.
+    let ok = s
+        .run(
+            IntMatrix::from_slice(1, 1, &[1]),
+            IntMatrix::from_slice(1, 1, &[1]),
+            Precision::unsigned(1, 1),
+        )
+        .unwrap();
+    assert_eq!(ok.result, IntMatrix::from_slice(1, 1, &[1]));
+}
+
+#[test]
+fn variable_precision_override_packs_once_per_precision() {
+    let s = session();
+    let mut rng = Rng::new(0x1E9);
+    let w = Arc::new(IntMatrix::random(&mut rng, 96, 4, 3, true));
+    let base = Precision {
+        wbits: 2,
+        abits: 3,
+        lsigned: false,
+        rsigned: true,
+    };
+    let prepared = s.prepare(w.clone(), base).unwrap();
+    let x = IntMatrix::random(&mut rng, 2, 96, 2, false);
+    let expect = x.matmul(&w);
+    // Base precision: already packed at prepare.
+    assert_eq!(prepared.execute(x.clone()).unwrap().result, expect);
+    // Override to a wider declared weight precision: one new packing...
+    let wider = Precision {
+        abits: 6,
+        ..base
+    };
+    let m0 = s.cache_stats().misses;
+    assert_eq!(prepared.execute_with(x.clone(), wider).unwrap().result, expect);
+    assert_eq!(s.cache_stats().misses, m0 + 1, "new precision packs once");
+    // ...and repeats at that precision are hits again.
+    let r = prepared.execute_with(x.clone(), wider).unwrap();
+    assert!(r.rhs_cached);
+    assert_eq!(s.cache_stats().misses, m0 + 1, "second override reuses it");
+}

@@ -147,6 +147,21 @@ fn serve_bench_quick_writes_json_with_percentiles_and_cache_win() {
 }
 
 #[test]
+fn unknown_instance_is_a_clean_error_not_a_panic() {
+    // `try_instance` behind the CLI: a bad Table IV id must exit 1 with
+    // a typed-error message, not a panic/abort backtrace.
+    let (ok, text) = bismo(&["simulate", "--instance", "9", "--m", "4", "--k", "64", "--n", "4"]);
+    assert!(!ok);
+    assert!(text.contains("error:"), "{text}");
+    assert!(text.contains("instances 1..=6"), "{text}");
+    assert!(!text.contains("panicked"), "{text}");
+    // Non-numeric ids are parse errors.
+    let (ok2, text2) = bismo(&["costmodel", "--instance", "banana"]);
+    assert!(!ok2);
+    assert!(text2.contains("bad --instance"), "{text2}");
+}
+
+#[test]
 fn unknown_command_usage() {
     let (ok, text) = bismo(&["frobnicate"]);
     assert!(!ok);

@@ -4,6 +4,10 @@
 //! ragged shapes — and the pooled batch runner preserves ordering and
 //! per-job results.
 
+// `gemm_tiled_parallel` is a deprecated shim (use `bismo::api::Session`
+// or `gemm_tiled_with`); it stays covered here until it is removed.
+#![allow(deprecated)]
+
 use bismo::arch::BismoConfig;
 use bismo::baseline::{gemm_bitserial, gemm_bitserial_parallel};
 use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
