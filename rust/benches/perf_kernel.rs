@@ -5,6 +5,7 @@
 use bismo::baseline::{binary_ops, gemm_bitserial};
 use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
 use bismo::kernel::{gemm_tiled, gemm_tiled_with, KernelConfig, WorkerPool};
+use bismo::partition::ShardPlan;
 use bismo::util::bench::{report, BenchTimer};
 use bismo::util::Rng;
 
@@ -95,5 +96,56 @@ fn main() {
         };
         let s = t.run(|| gemm_tiled_with(&la, &rb, &cfg, None));
         report(&format!("tiled_256x2048x256_w8a8_tile{tm}x{tn}"), &s, None);
+    }
+
+    // Shard scaling on the headline shape: the partition layer splits
+    // the output and every shard runs as one pool lane — the engine
+    // half of `bismo shard-bench`, without the serving layer around it.
+    let expect = gemm_tiled(&la, &rb);
+    let ops = binary_ops(256, 2048, 256, 8, 8) as f64;
+    let mut single_ns = 0.0;
+    for shards in [1usize, 2, 4, 8] {
+        let plan = ShardPlan::for_instances(256, 256, shards);
+        let kcfg = KernelConfig::default();
+        let run_sharded = || {
+            let parts: Vec<IntMatrix> = {
+                let shard_list = plan.shards();
+                let slots: Vec<std::sync::Mutex<Option<IntMatrix>>> =
+                    shard_list.iter().map(|_| std::sync::Mutex::new(None)).collect();
+                WorkerPool::global().run_limited(shard_list.len(), shard_list.len(), &|i| {
+                    let s = &shard_list[i];
+                    let part = bismo::kernel::gemm_tiled_block(
+                        &la,
+                        &rb,
+                        s.rows.clone(),
+                        s.cols.clone(),
+                        s.planes.clone(),
+                        &kcfg,
+                        None,
+                    );
+                    *slots[i].lock().unwrap() = Some(part);
+                });
+                slots
+                    .into_iter()
+                    .map(|s| s.into_inner().unwrap().unwrap())
+                    .collect()
+            };
+            plan.assemble(&parts).unwrap()
+        };
+        assert_eq!(run_sharded(), expect, "{shards} shard(s)");
+        let s = t.run(run_sharded);
+        let med = s.median();
+        if shards == 1 {
+            single_ns = med;
+        }
+        report(
+            &format!("sharded_256x2048x256_w8a8_{shards}shards"),
+            &s,
+            Some((ops, "binop")),
+        );
+        println!(
+            "  -> {shards} shard(s): {:.2}x vs single shard",
+            single_ns / med
+        );
     }
 }

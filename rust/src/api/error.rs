@@ -35,7 +35,10 @@ pub enum BismoError {
     /// An instruction stream violated the ISA's legality rules (wrong
     /// queue, token imbalance, malformed encoded word).
     IllegalProgram(String),
-    /// The cycle-accurate simulator rejected or faulted on a run.
+    /// The cycle-accurate simulator faulted at run time (token
+    /// deadlock or a stage fault). Validation failures are reported as
+    /// [`BismoError::InvalidConfig`] / [`BismoError::IllegalProgram`]
+    /// before any simulation starts.
     SimFault(SimError),
     /// A computed result failed cross-checking against the CPU
     /// bit-serial oracle.
@@ -137,9 +140,14 @@ mod tests {
     #[test]
     fn sim_error_converts_and_chains() {
         use std::error::Error;
-        let e: BismoError = SimError::BadConfig("D_k must be a power of two".into()).into();
+        let e: BismoError = SimError::Fault {
+            stage: "execute",
+            pc: 7,
+            msg: "buffer access out of range".into(),
+        }
+        .into();
         assert_eq!(e.kind(), "sim_fault");
-        assert!(e.to_string().contains("power of two"));
+        assert!(e.to_string().contains("out of range"));
         assert!(e.source().is_some());
     }
 

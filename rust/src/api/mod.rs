@@ -47,6 +47,7 @@ pub use session::{MatmulBuilder, Prepared, Session, SessionConfig};
 // The vocabulary types a facade caller needs, re-exported so
 // `use bismo::api::*` is a complete import for application code.
 pub use crate::coordinator::{
-    Backend, CacheStats, GemmResponse, Precision, RequestHandle, RunReport,
+    Backend, CacheStats, GemmResponse, Precision, RequestHandle, RunReport, Sharding,
 };
+pub use crate::costmodel::ResourceBudget;
 pub use crate::scheduler::Overlap;

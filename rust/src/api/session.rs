@@ -4,8 +4,9 @@ use super::BismoError;
 use crate::bitmatrix::IntMatrix;
 use crate::coordinator::{
     Backend, BismoService, CacheStats, GemmRequest, GemmResponse, Precision, RequestHandle,
-    RequestOptions, ServiceConfig,
+    RequestOptions, ServiceConfig, Sharding,
 };
+use crate::costmodel::ResourceBudget;
 use crate::scheduler::Overlap;
 use std::sync::Arc;
 
@@ -186,6 +187,37 @@ impl<'s> MatmulBuilder<'s> {
         self
     }
 
+    /// Execute each job across (up to) `n` overlay instances: the
+    /// output splits into a shard grid factored per job shape, the
+    /// shards run concurrently and merge bit-exactly. `n = 1` is the
+    /// plain single-instance path; `n = 0` is rejected by
+    /// [`MatmulBuilder::build`].
+    pub fn instances(mut self, n: usize) -> Self {
+        self.opts.sharding = if n == 1 {
+            Sharding::Single
+        } else {
+            Sharding::Instances(n)
+        };
+        self
+    }
+
+    /// Execute each job over an explicit `rows × cols` shard grid
+    /// (each axis clamped so no shard is empty).
+    pub fn shard_grid(mut self, rows: usize, cols: usize) -> Self {
+        self.opts.sharding = Sharding::Grid { rows, cols };
+        self
+    }
+
+    /// Cost-model-driven sharding: for each job,
+    /// [`crate::costmodel::select_sharding`] picks the shard count and
+    /// per-shard instance configuration that maximize predicted
+    /// throughput under `budget` (paper Eqs 1–2). On the sim backend
+    /// the shards run on instances of the selected configuration.
+    pub fn auto_shard(mut self, budget: ResourceBudget) -> Self {
+        self.opts.sharding = Sharding::Auto(budget);
+        self
+    }
+
     /// The builder's precision.
     pub fn precision(&self) -> Precision {
         self.prec
@@ -194,7 +226,8 @@ impl<'s> MatmulBuilder<'s> {
     /// Validate the configuration without running anything — the
     /// "build" step. `run`/`submit`/`prepare` all call this first.
     pub fn build(&self) -> Result<(), BismoError> {
-        self.prec.validate()
+        self.prec.validate()?;
+        self.opts.sharding.validate()
     }
 
     /// Run one job synchronously.
@@ -468,6 +501,69 @@ mod tests {
         for (h, (a, b)) in handles.into_iter().zip(&jobs).rev() {
             assert_eq!(h.wait().unwrap().result, a.matmul(b));
         }
+    }
+
+    #[test]
+    fn instances_knob_shards_and_stays_exact() {
+        let s = session();
+        let mut rng = Rng::new(0x5AD);
+        let a = IntMatrix::random(&mut rng, 16, 120, 3, true);
+        let b = IntMatrix::random(&mut rng, 120, 12, 2, true);
+        let expect = a.matmul(&b);
+        for backend in [Backend::Engine, Backend::Sim] {
+            let resp = s
+                .matmul(Precision::signed(3, 2))
+                .backend(backend)
+                .instances(4)
+                .run(a.clone(), b.clone())
+                .unwrap();
+            assert_eq!(resp.result, expect, "{}", backend.name());
+            assert_eq!(resp.shards, 4);
+        }
+        // instances(1) is the plain single-instance path.
+        let resp = s
+            .matmul(Precision::signed(3, 2))
+            .instances(1)
+            .run(a.clone(), b.clone())
+            .unwrap();
+        assert_eq!(resp.shards, 1);
+        // Degenerate knob values fail at build time, before queueing.
+        let submitted = s.service().submitted();
+        assert!(matches!(
+            s.matmul(Precision::signed(3, 2))
+                .instances(0)
+                .submit(a.clone(), b.clone()),
+            Err(BismoError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            s.matmul(Precision::signed(3, 2))
+                .shard_grid(2, 0)
+                .submit(a.clone(), b.clone()),
+            Err(BismoError::InvalidConfig(_))
+        ));
+        assert_eq!(s.service().submitted(), submitted);
+    }
+
+    #[test]
+    fn auto_shard_knob_uses_the_cost_model() {
+        use crate::arch::PYNQ_Z1;
+        let s = session();
+        let mut rng = Rng::new(0xAB5D);
+        let a = IntMatrix::random(&mut rng, 24, 96, 2, false);
+        let b = IntMatrix::random(&mut rng, 96, 24, 2, false);
+        let expect = a.matmul(&b);
+        let budget = ResourceBudget {
+            luts: PYNQ_Z1.luts * 2,
+            brams: PYNQ_Z1.brams * 2,
+        };
+        let resp = s
+            .matmul(Precision::unsigned(2, 2))
+            .auto_shard(budget)
+            .verify(true)
+            .run(a, b)
+            .unwrap();
+        assert_eq!(resp.result, expect);
+        assert!(resp.shards >= 2, "double budget affords >1 instance");
     }
 
     #[test]

@@ -195,6 +195,35 @@ impl BitSerialMatrix {
         &self.data[base..base + len]
     }
 
+    /// Zero-copy view of a contiguous row block within one plane:
+    /// `rows.len() · words_per_row` packed words, row-major. This is
+    /// the block view the partition layer's shard packing reads — a
+    /// row-range of one plane is contiguous, so sharding an operand
+    /// along its rows costs no copy at all.
+    #[inline]
+    pub fn plane_rows(&self, plane: u32, rows: std::ops::Range<usize>) -> &[u64] {
+        debug_assert!(plane < self.bits);
+        assert!(rows.end <= self.rows, "row block out of range");
+        let base = (plane as usize * self.rows + rows.start) * self.words_per_row;
+        &self.data[base..base + rows.len() * self.words_per_row]
+    }
+
+    /// Owned packed sub-matrix of a row block (all planes): exactly
+    /// `from_int` of the corresponding row slice of the source matrix,
+    /// but produced by per-plane `memcpy` of the packed words — no
+    /// re-decomposition. The simulator backend executes shards of a
+    /// cached packing through this view.
+    pub fn row_block(&self, rows: std::ops::Range<usize>) -> BitSerialMatrix {
+        assert!(rows.end <= self.rows, "row block out of range");
+        let mut out = Self::zeros(rows.len(), self.cols, self.bits, self.signed);
+        for p in 0..self.bits {
+            let src = self.plane_rows(p, rows.clone());
+            let base = p as usize * out.rows * out.words_per_row;
+            out.data[base..base + src.len()].copy_from_slice(src);
+        }
+        out
+    }
+
     /// Fraction of set bits in plane `i` (used by the sparse bit-skip
     /// scheduler extension). Single pass over the contiguous plane
     /// slice.
@@ -409,6 +438,46 @@ mod tests {
         assert!(bs.get_bit(0, 0, 63));
         assert!(bs.get_bit(0, 0, 69));
         assert_eq!(bs.to_int(), m);
+    }
+
+    #[test]
+    fn plane_rows_is_zero_copy_view_of_row_block() {
+        property_sweep(0x6B0C, 12, |rng, _| {
+            let rows = rng.index(12) + 2;
+            let cols = rng.index(140) + 1;
+            let bits = rng.index(5) as u32 + 1;
+            let m = IntMatrix::random(rng, rows, cols, bits, false);
+            let bs = BitSerialMatrix::from_int(&m, bits, false);
+            let lo = rng.index(rows);
+            let hi = lo + rng.index(rows - lo) + 1;
+            for p in 0..bits {
+                let view = bs.plane_rows(p, lo..hi);
+                assert_eq!(view.len(), (hi - lo) * bs.words_per_row);
+                for (i, r) in (lo..hi).enumerate() {
+                    assert_eq!(
+                        &view[i * bs.words_per_row..(i + 1) * bs.words_per_row],
+                        bs.plane_row(p, r)
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn row_block_equals_repacking_the_slice() {
+        property_sweep(0xB10C, 12, |rng, _| {
+            let rows = rng.index(12) + 2;
+            let cols = rng.index(140) + 1;
+            let bits = rng.index(5) as u32 + 1;
+            let signed = rng.chance(0.5);
+            let m = IntMatrix::random(rng, rows, cols, bits, signed);
+            let bs = BitSerialMatrix::from_int(&m, bits, signed);
+            let lo = rng.index(rows);
+            let hi = lo + rng.index(rows - lo) + 1;
+            let block = bs.row_block(lo..hi);
+            let slice = IntMatrix::from_fn(hi - lo, cols, |r, c| m.get(lo + r, c));
+            assert_eq!(block, BitSerialMatrix::from_int(&slice, bits, signed));
+        });
     }
 
     #[test]

@@ -130,6 +130,74 @@ pub struct RunReport {
     pub rhs_planes: u32,
 }
 
+impl RunReport {
+    /// Aggregate the per-shard reports of one sharded job as `N`
+    /// instances running in parallel: makespan (cycles, seconds) is the
+    /// slowest instance, work (ops, bytes, busy/stall time, commits,
+    /// instructions, power) sums, and throughput/efficiency are
+    /// recomputed from the aggregates — achieved GOPS over the summed
+    /// work at the parallel makespan, efficiency against the combined
+    /// peak of all instances. Returns `None` for an empty slice.
+    pub fn merge_parallel(reports: &[RunReport]) -> Option<RunReport> {
+        let first = reports.first()?;
+        if reports.len() == 1 {
+            return Some(first.clone());
+        }
+        let mut stats = RunStats::default();
+        let mut instructions = crate::isa::ProgramStats::default();
+        let mut power_w = 0.0;
+        let mut seconds = 0.0f64;
+        let mut peak_gops = 0.0;
+        let mut lhs_planes = 0;
+        let mut rhs_planes = 0;
+        for r in reports {
+            stats.cycles = stats.cycles.max(r.stats.cycles);
+            stats.fetch_busy += r.stats.fetch_busy;
+            stats.execute_busy += r.stats.execute_busy;
+            stats.result_busy += r.stats.result_busy;
+            stats.fetch_stall += r.stats.fetch_stall;
+            stats.execute_stall += r.stats.execute_stall;
+            stats.result_stall += r.stats.result_stall;
+            stats.bytes_fetched += r.stats.bytes_fetched;
+            stats.bytes_written += r.stats.bytes_written;
+            stats.binary_ops += r.stats.binary_ops;
+            stats.pipeline_fill_cycles += r.stats.pipeline_fill_cycles;
+            stats.commits += r.stats.commits;
+            stats.acc_overflows += r.stats.acc_overflows;
+            instructions.fetch_runs += r.instructions.fetch_runs;
+            instructions.execute_runs += r.instructions.execute_runs;
+            instructions.result_runs += r.instructions.result_runs;
+            instructions.waits += r.instructions.waits;
+            instructions.signals += r.instructions.signals;
+            instructions.total += r.instructions.total;
+            power_w += r.power_w;
+            seconds = seconds.max(r.seconds);
+            if r.efficiency > 0.0 {
+                peak_gops += r.gops / r.efficiency;
+            }
+            lhs_planes = lhs_planes.max(r.lhs_planes);
+            rhs_planes = rhs_planes.max(r.rhs_planes);
+        }
+        let gops = if seconds > 0.0 {
+            stats.binary_ops as f64 / seconds / 1e9
+        } else {
+            0.0
+        };
+        Some(RunReport {
+            cycles: stats.cycles,
+            seconds,
+            gops,
+            efficiency: if peak_gops > 0.0 { gops / peak_gops } else { 0.0 },
+            stats,
+            instructions,
+            power_w,
+            gops_per_w: if power_w > 0.0 { gops / power_w } else { 0.0 },
+            lhs_planes,
+            rhs_planes,
+        })
+    }
+}
+
 /// Shared guard for every consumer of pre-packed operand pairs (the
 /// context's packed path and the serving backends): both packings must
 /// run along the same `k`.

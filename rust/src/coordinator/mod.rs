@@ -20,8 +20,11 @@
 //! §Serving-Layer): an asynchronous submission queue with dynamic
 //! micro-batching, per-request backend selection through the
 //! [`ExecBackend`] trait (fast tiled engine vs cycle-accurate
-//! simulator), and a weight-stationary [`PackingCache`] that skips
-//! repacking operands reused across requests.
+//! simulator), a weight-stationary [`PackingCache`] that skips
+//! repacking operands reused across requests, and multi-instance
+//! sharded execution ([`Sharding`], `DESIGN.md` §Partitioning): one
+//! request split across concurrent overlay instances by a
+//! [`crate::partition::ShardPlan`] and merged bit-exactly.
 
 mod cache;
 mod context;
@@ -33,5 +36,5 @@ pub use context::{BismoContext, MatmulOptions, Precision, RunReport};
 pub use server::{BatchOutcome, BismoBatchRunner};
 pub use service::{
     Backend, BismoService, EngineBackend, ExecBackend, GemmRequest, GemmResponse, RequestHandle,
-    RequestOptions, ServiceConfig, SimBackend,
+    RequestOptions, ServiceConfig, Sharding, SimBackend,
 };

@@ -25,6 +25,16 @@
 //!   cycle-accurate overlay simulator via
 //!   [`BismoContext::matmul_packed`] and returns a full [`RunReport`].
 //!   Requests pick per call via [`RequestOptions::backend`].
+//! * **Multi-instance sharded execution** — a request may ask to be
+//!   split across several overlay instances ([`RequestOptions::sharding`]):
+//!   a [`ShardPlan`] decomposes the output into row/column blocks, each
+//!   shard executes concurrently (engine shards as worker-pool lanes
+//!   over zero-copy block views of the packed operands, sim shards as
+//!   independent simulator instances), and the partial products merge
+//!   bit-exactly before the response completes. [`Sharding::Auto`]
+//!   sizes the split with the paper's cost model
+//!   ([`crate::costmodel::select_sharding`], Eqs 1–2) under a LUT/BRAM
+//!   budget.
 //! * **Weight-stationary packing cache** — packed operands are cached
 //!   by content hash ([`PackingCache`]), so requests that reuse an
 //!   operand (QNN layer weights, the weight-stationary case) skip the
@@ -41,10 +51,12 @@
 use super::cache::{check_fits, pack_operand, CacheStats, PackKey, PackingCache};
 use super::context::{check_packed_pair, BismoContext, MatmulOptions, Precision, RunReport};
 use crate::api::BismoError;
-use crate::arch::BismoConfig;
+use crate::arch::{BismoConfig, Platform};
 use crate::baseline::gemm_bitserial;
 use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
-use crate::kernel::{gemm_tiled_with, KernelConfig, WorkerPool};
+use crate::costmodel::{select_sharding, CostModel, ResourceBudget};
+use crate::kernel::{gemm_tiled_block, gemm_tiled_with, KernelConfig, WorkerPool};
+use crate::partition::{GemmShape, Shard, ShardPlan};
 use crate::scheduler::Overlap;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -73,6 +85,41 @@ impl Backend {
     }
 }
 
+/// How one request splits across overlay instances.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sharding {
+    /// One virtual instance executes the whole job (the default).
+    Single,
+    /// A fixed `rows × cols` shard grid over the output (each axis
+    /// clamped so no shard is empty).
+    Grid { rows: usize, cols: usize },
+    /// Up to `n` instances; the grid is factored per request shape
+    /// ([`ShardPlan::for_instances`]).
+    Instances(usize),
+    /// Cost-model-driven: [`select_sharding`] picks the shard count
+    /// *and* the per-shard instance configuration under this LUT/BRAM
+    /// budget (paper Eqs 1–2).
+    Auto(ResourceBudget),
+}
+
+impl Sharding {
+    /// Reject degenerate parameters (zero grid axes, zero instances).
+    /// Shared by [`BismoService::submit`]'s request validation and
+    /// [`crate::api::MatmulBuilder::build`], so the facade and the
+    /// direct-service path cannot drift apart.
+    pub fn validate(&self) -> Result<(), BismoError> {
+        match *self {
+            Sharding::Grid { rows, cols } if rows == 0 || cols == 0 => Err(
+                BismoError::InvalidConfig("shard grid dimensions must be >= 1".into()),
+            ),
+            Sharding::Instances(0) => Err(BismoError::InvalidConfig(
+                "instance count must be >= 1".into(),
+            )),
+            _ => Ok(()),
+        }
+    }
+}
+
 /// One GEMM over pre-packed bit-serial operands. `la` is the decomposed
 /// LHS (`m×k`), `rb` the decomposed *transposed* RHS (`n×k`); both come
 /// from the packing cache or a fresh pack. Implementations must be
@@ -87,6 +134,19 @@ pub trait ExecBackend: Send + Sync {
         &self,
         la: &BitSerialMatrix,
         rb: &BitSerialMatrix,
+        opts: &MatmulOptions,
+    ) -> Result<(IntMatrix, Option<RunReport>), BismoError>;
+
+    /// Execute one [`Shard`] of the job: the output block
+    /// `shard.rows × shard.cols` (optionally restricted to a group of
+    /// LHS bit-planes). Must equal the corresponding block of
+    /// [`ExecBackend::execute`]'s result — [`ShardPlan::assemble`]
+    /// relies on that to merge bit-exactly.
+    fn execute_block(
+        &self,
+        la: &BitSerialMatrix,
+        rb: &BitSerialMatrix,
+        shard: &Shard,
         opts: &MatmulOptions,
     ) -> Result<(IntMatrix, Option<RunReport>), BismoError>;
 }
@@ -115,6 +175,31 @@ impl ExecBackend for EngineBackend {
         // parallelism would only oversubscribe it.
         Ok((gemm_tiled_with(la, rb, &self.kernel, None), None))
     }
+
+    fn execute_block(
+        &self,
+        la: &BitSerialMatrix,
+        rb: &BitSerialMatrix,
+        shard: &Shard,
+        _opts: &MatmulOptions,
+    ) -> Result<(IntMatrix, Option<RunReport>), BismoError> {
+        check_packed_pair(la, rb)?;
+        // The block kernel packs its shard straight out of the cached
+        // operands' plane-row views — no per-shard repack of the source
+        // matrices (and plane-group shards are supported natively).
+        Ok((
+            gemm_tiled_block(
+                la,
+                rb,
+                shard.rows.clone(),
+                shard.cols.clone(),
+                shard.planes.clone(),
+                &self.kernel,
+                None,
+            ),
+            None,
+        ))
+    }
 }
 
 /// [`ExecBackend`] over the cycle-accurate simulator (one validated
@@ -127,6 +212,15 @@ impl SimBackend {
     pub fn new(cfg: BismoConfig) -> Result<SimBackend, BismoError> {
         Ok(SimBackend {
             ctx: BismoContext::new(cfg)?,
+        })
+    }
+
+    /// A backend whose instances are sized against an explicit
+    /// platform (the auto-sharding path validates the cost-model's
+    /// instance choice against the *budget*, not the default board).
+    pub fn on_platform(cfg: BismoConfig, platform: Platform) -> Result<SimBackend, BismoError> {
+        Ok(SimBackend {
+            ctx: BismoContext::on_platform(cfg, platform)?,
         })
     }
 
@@ -151,6 +245,31 @@ impl ExecBackend for SimBackend {
             .matmul_packed(la, rb, *opts)
             .map(|(p, rep)| (p, Some(rep)))
     }
+
+    fn execute_block(
+        &self,
+        la: &BitSerialMatrix,
+        rb: &BitSerialMatrix,
+        shard: &Shard,
+        opts: &MatmulOptions,
+    ) -> Result<(IntMatrix, Option<RunReport>), BismoError> {
+        if shard.planes.as_ref().is_some_and(|p| *p != (0..la.bits)) {
+            return Err(BismoError::InvalidConfig(
+                "bit-plane-group shards are supported by the engine backend only".into(),
+            ));
+        }
+        check_packed_pair(la, rb)?;
+        // Each shard is an independent smaller GEMM on its own
+        // simulator instance (`matmul_packed` spins up a fresh
+        // `Simulation` per call, so concurrent shards never share
+        // mutable overlay state). Row blocks of the cached packings are
+        // materialized by per-plane memcpy, not re-decomposition.
+        let la_block = la.row_block(shard.rows.clone());
+        let rb_block = rb.row_block(shard.cols.clone());
+        self.ctx
+            .matmul_packed(&la_block, &rb_block, *opts)
+            .map(|(p, rep)| (p, Some(rep)))
+    }
 }
 
 /// Per-request serving options.
@@ -173,6 +292,11 @@ pub struct RequestOptions {
     /// Cache this request's packed RHS (the weight-stationary side).
     /// On by default.
     pub cache_rhs: bool,
+    /// Multi-instance split of this request: the output is decomposed
+    /// by a [`ShardPlan`], shards execute concurrently (engine shards
+    /// on worker lanes, sim shards on independent simulator instances)
+    /// and merge bit-exactly before the response completes.
+    pub sharding: Sharding,
 }
 
 impl Default for RequestOptions {
@@ -184,6 +308,7 @@ impl Default for RequestOptions {
             verify: false,
             cache_lhs: false,
             cache_rhs: true,
+            sharding: Sharding::Single,
         }
     }
 }
@@ -243,6 +368,8 @@ pub struct GemmResponse {
     /// Whether the packed LHS / RHS came from the cache.
     pub lhs_cached: bool,
     pub rhs_cached: bool,
+    /// How many shards (overlay instances) executed this request.
+    pub shards: usize,
 }
 
 /// Completion slot shared between a [`RequestHandle`] and the worker
@@ -546,6 +673,7 @@ fn validate(req: &GemmRequest) -> Result<(), BismoError> {
             req.a.rows, req.a.cols, req.b.rows, req.b.cols
         )));
     }
+    req.opts.sharding.validate()?;
     req.prec.validate()
 }
 
@@ -594,23 +722,48 @@ impl Inner {
         let req = &p.req;
         let packed = self.pack_operands(req)?;
         let t_exec = Instant::now();
-        let backend: &dyn ExecBackend = match req.opts.backend {
-            Backend::Engine => &self.engine,
-            Backend::Sim => &self.sim,
-        };
         let mopts = MatmulOptions {
             overlap: req.opts.overlap,
             bit_skip: req.opts.bit_skip,
             verify: false,
         };
-        let (result, report) = backend.execute(&packed.la, &packed.rb, &mopts)?;
+        let shape = GemmShape {
+            m: packed.la.rows,
+            k: packed.la.cols,
+            n: packed.rb.rows,
+        };
+        let resolved = resolve_sharding(&req.opts.sharding, &shape)?;
+        // For the cost-model-driven path on the sim backend, execution
+        // runs on instances of the *selected* configuration (validated
+        // against the budget the caller named) — also when the
+        // selection came out as a single instance.
+        let auto_sim: Option<SimBackend> = match (req.opts.backend, resolved.auto) {
+            (Backend::Sim, Some((cfg, budget))) => {
+                Some(SimBackend::on_platform(cfg, budget.as_platform())?)
+            }
+            _ => None,
+        };
+        let backend: &dyn ExecBackend = match req.opts.backend {
+            Backend::Engine => &self.engine,
+            Backend::Sim => auto_sim
+                .as_ref()
+                .map(|b| b as &dyn ExecBackend)
+                .unwrap_or(&self.sim),
+        };
+        let (result, report, shards) = if resolved.plan.is_single() {
+            let (r, rep) = backend.execute(&packed.la, &packed.rb, &mopts)?;
+            (r, rep, 1)
+        } else {
+            self.execute_sharded(backend, &packed, &resolved, &mopts)?
+        };
         let exec_ns = t_exec.elapsed().as_nanos() as u64;
         if req.opts.verify {
             let expect = gemm_bitserial(&packed.la, &packed.rb);
             if result != expect {
                 return Err(BismoError::VerifyFailed(format!(
-                    "{} backend != CPU oracle",
-                    backend.name()
+                    "{} backend != CPU oracle ({} shard(s))",
+                    req.opts.backend.name(),
+                    shards
                 )));
             }
         }
@@ -624,7 +777,49 @@ impl Inner {
             total_ns: p.since.elapsed().as_nanos() as u64,
             lhs_cached: packed.lhs_cached,
             rhs_cached: packed.rhs_cached,
+            shards,
         })
+    }
+
+    /// Multi-instance execution of one request: every shard of the
+    /// plan runs concurrently — engine shards as worker-pool lanes over
+    /// zero-copy block views of the cached packings, sim shards as
+    /// independent simulator instances — and the partial products merge
+    /// through [`ShardPlan::assemble`] before the response completes.
+    fn execute_sharded(
+        &self,
+        backend: &dyn ExecBackend,
+        packed: &PackedOperands,
+        resolved: &ResolvedSharding,
+        mopts: &MatmulOptions,
+    ) -> Result<(IntMatrix, Option<RunReport>, usize), BismoError> {
+        let shards = resolved.plan.shards();
+        type ShardOutcome = Result<(IntMatrix, Option<RunReport>), BismoError>;
+        let slots: Vec<Mutex<Option<ShardOutcome>>> =
+            shards.iter().map(|_| Mutex::new(None)).collect();
+        // One lane per shard (the modeled instance count). When this
+        // runs inside a micro-batch drain the pool is busy and the
+        // shards fall back to scoped threads — per-request parallelism
+        // is preserved either way.
+        WorkerPool::global().run_limited(shards.len(), shards.len(), &|i| {
+            let out = backend.execute_block(&packed.la, &packed.rb, &shards[i], mopts);
+            *slots[i].lock().unwrap() = Some(out);
+        });
+        let mut parts = Vec::with_capacity(shards.len());
+        let mut reports = Vec::new();
+        for slot in slots {
+            match slot.into_inner().unwrap().expect("shard executed") {
+                Ok((part, rep)) => {
+                    if let Some(r) = rep {
+                        reports.push(r);
+                    }
+                    parts.push(part);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        let merged = resolved.plan.assemble(&parts)?;
+        Ok((merged, RunReport::merge_parallel(&reports), shards.len()))
     }
 
     fn pack_operands(&self, req: &GemmRequest) -> Result<PackedOperands, BismoError> {
@@ -683,6 +878,38 @@ impl Inner {
         self.cache.lock().unwrap().insert(key, packed.clone());
         Ok((packed, false))
     }
+}
+
+/// A request's [`Sharding`] resolved against its concrete shape.
+struct ResolvedSharding {
+    plan: ShardPlan,
+    /// `Auto` only: the selected per-instance config and the budget it
+    /// was priced against (the sim backend instantiates it).
+    auto: Option<(BismoConfig, ResourceBudget)>,
+}
+
+fn resolve_sharding(s: &Sharding, shape: &GemmShape) -> Result<ResolvedSharding, BismoError> {
+    Ok(match *s {
+        Sharding::Single => ResolvedSharding {
+            plan: ShardPlan::single(shape.m, shape.n),
+            auto: None,
+        },
+        Sharding::Grid { rows, cols } => ResolvedSharding {
+            plan: ShardPlan::grid(shape.m, shape.n, rows, cols),
+            auto: None,
+        },
+        Sharding::Instances(n) => ResolvedSharding {
+            plan: ShardPlan::for_instances(shape.m, shape.n, n),
+            auto: None,
+        },
+        Sharding::Auto(budget) => {
+            let choice = select_sharding(&CostModel::paper(), shape, budget)?;
+            ResolvedSharding {
+                plan: ShardPlan::grid(shape.m, shape.n, choice.grid.0, choice.grid.1),
+                auto: Some((choice.config, budget)),
+            }
+        }
+    })
 }
 
 fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
@@ -887,6 +1114,122 @@ mod tests {
         for h in handles {
             assert!(h.wait().is_ok(), "request completed during shutdown drain");
         }
+    }
+
+    #[test]
+    fn sharded_request_matches_unsharded_on_both_backends() {
+        let s = svc();
+        let mut rng = Rng::new(0x54A2);
+        let a = IntMatrix::random(&mut rng, 12, 150, 3, true);
+        let b = IntMatrix::random(&mut rng, 150, 10, 2, false);
+        let expect = a.matmul(&b);
+        let prec = Precision {
+            wbits: 3,
+            abits: 2,
+            lsigned: true,
+            rsigned: false,
+        };
+        for backend in [Backend::Engine, Backend::Sim] {
+            for sharding in [
+                Sharding::Grid { rows: 2, cols: 2 },
+                Sharding::Instances(3),
+                Sharding::Instances(8),
+            ] {
+                let opts = RequestOptions {
+                    backend,
+                    sharding,
+                    verify: true,
+                    ..Default::default()
+                };
+                let resp = s
+                    .run(GemmRequest::with_opts(a.clone(), b.clone(), prec, opts))
+                    .unwrap();
+                assert_eq!(resp.result, expect, "{} {sharding:?}", backend.name());
+                assert!(resp.shards > 1, "{} {sharding:?}", backend.name());
+                // Sim shards each carry a report; the merged report
+                // aggregates their work.
+                if backend == Backend::Sim {
+                    let rep = resp.report.expect("merged sim report");
+                    assert!(rep.cycles > 0);
+                    assert!(rep.stats.binary_ops > 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_sharding_picks_under_budget_and_stays_exact() {
+        use crate::arch::PYNQ_Z1;
+        let s = svc();
+        let mut rng = Rng::new(0xA070);
+        let a = IntMatrix::random(&mut rng, 32, 200, 2, false);
+        let b = IntMatrix::random(&mut rng, 200, 32, 2, false);
+        let expect = a.matmul(&b);
+        let budget = ResourceBudget {
+            luts: PYNQ_Z1.luts * 2,
+            brams: PYNQ_Z1.brams * 2,
+        };
+        for backend in [Backend::Engine, Backend::Sim] {
+            let opts = RequestOptions {
+                backend,
+                sharding: Sharding::Auto(budget),
+                ..Default::default()
+            };
+            let resp = s
+                .run(GemmRequest::with_opts(
+                    a.clone(),
+                    b.clone(),
+                    Precision::unsigned(2, 2),
+                    opts,
+                ))
+                .unwrap();
+            assert_eq!(resp.result, expect, "{}", backend.name());
+            assert!(resp.shards >= 2, "double budget affords >1 instance");
+        }
+    }
+
+    #[test]
+    fn degenerate_sharding_is_rejected_at_submission() {
+        let s = svc();
+        let mk = |sharding| {
+            let opts = RequestOptions {
+                sharding,
+                ..Default::default()
+            };
+            GemmRequest::with_opts(
+                IntMatrix::zeros(2, 2),
+                IntMatrix::zeros(2, 2),
+                Precision::unsigned(1, 1),
+                opts,
+            )
+        };
+        assert!(matches!(
+            s.run(mk(Sharding::Grid { rows: 0, cols: 2 })),
+            Err(BismoError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            s.run(mk(Sharding::Instances(0))),
+            Err(BismoError::InvalidConfig(_))
+        ));
+        // A 1-shard request takes the plain single-instance path.
+        let resp = s.run(mk(Sharding::Instances(1))).unwrap();
+        assert_eq!(resp.shards, 1);
+    }
+
+    #[test]
+    fn oversharded_tiny_job_clamps_to_available_rows() {
+        let s = svc();
+        let a = IntMatrix::from_slice(1, 2, &[1, 2]);
+        let b = IntMatrix::from_slice(2, 1, &[3, 4]);
+        let opts = RequestOptions {
+            sharding: Sharding::Grid { rows: 8, cols: 8 },
+            ..Default::default()
+        };
+        let resp = s
+            .run(GemmRequest::with_opts(a, b, Precision::unsigned(2, 3), opts))
+            .unwrap();
+        assert_eq!(resp.result, IntMatrix::from_slice(1, 1, &[11]));
+        assert_eq!(resp.shards, 1, "1×1 output cannot split");
     }
 
     #[test]

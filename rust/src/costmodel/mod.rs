@@ -19,7 +19,9 @@ pub mod fit;
 
 pub use fit::{least_squares, linear_fit};
 
-use crate::arch::{BismoConfig, Platform};
+use crate::api::BismoError;
+use crate::arch::{BismoConfig, Platform, PYNQ_Z1};
+use crate::partition::{GemmShape, ShardPlan};
 use crate::synth::{synth_dpu, synth_instance};
 use crate::util::ceil_div;
 
@@ -97,6 +99,152 @@ impl CostModel {
     pub fn fits(&self, cfg: &BismoConfig, platform: &Platform) -> bool {
         platform.fits(self.lut_total(cfg).round() as u64, self.bram_total(cfg))
     }
+}
+
+/// A LUT/BRAM resource budget for multi-instance selection — the
+/// fabric (or fabric share) that [`select_sharding`] may fill with
+/// overlay instances, each costed by Eqs 1–2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResourceBudget {
+    pub luts: u64,
+    pub brams: u64,
+}
+
+impl ResourceBudget {
+    /// The whole resource budget of a platform.
+    pub fn of_platform(p: &Platform) -> ResourceBudget {
+        ResourceBudget {
+            luts: p.luts,
+            brams: p.brams,
+        }
+    }
+
+    /// A synthetic platform with this budget and the PYNQ-Z1 memory
+    /// system — what the simulator backend runs auto-sharded instances
+    /// against.
+    pub fn as_platform(&self) -> Platform {
+        Platform {
+            name: "sharding budget",
+            luts: self.luts,
+            brams: self.brams,
+            ..PYNQ_Z1
+        }
+    }
+}
+
+/// Outcome of cost-model-driven shard selection: how many instances to
+/// run, how the output grid splits across them, and the per-instance
+/// overlay configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardingChoice {
+    /// Number of shards (= overlay instances) to run in parallel.
+    pub shards: usize,
+    /// Output split: `grid.0` row shards × `grid.1` column shards.
+    pub grid: (usize, usize),
+    /// The per-instance configuration (every instance identical).
+    pub config: BismoConfig,
+    /// Eq. 1 prediction for one instance.
+    pub luts_per_instance: f64,
+    /// Eq. 2 prediction for one instance.
+    pub brams_per_instance: u64,
+    /// Aggregate predictions across all instances.
+    pub total_luts: f64,
+    pub total_brams: u64,
+    /// Aggregate peak binary GOPS across all instances.
+    pub peak_gops: f64,
+}
+
+/// Upper bound on the shard counts [`select_sharding`] considers.
+pub const MAX_SHARDS: usize = 16;
+
+/// Pick a shard count and per-shard instance configuration for `shape`
+/// under `budget` — the paper's §III-B scaling argument made
+/// operational: Eqs 1–2 price each candidate configuration, the budget
+/// caps how many replicas fit, and the expected throughput of the
+/// resulting [`ShardPlan`] (aggregate peak, discounted for shards
+/// smaller than the `D_m × D_n` array) scores the combination.
+///
+/// Deterministic; ties prefer fewer shards, then fewer total LUTs.
+/// Errs with [`BismoError::CapacityExceeded`] when no candidate
+/// instance fits the budget at all.
+pub fn select_sharding(
+    model: &CostModel,
+    shape: &GemmShape,
+    budget: ResourceBudget,
+) -> Result<ShardingChoice, BismoError> {
+    if shape.m == 0 || shape.n == 0 {
+        return Err(BismoError::InvalidConfig(
+            "cannot shard an empty output (m and n must be non-zero)".into(),
+        ));
+    }
+    let mut best: Option<(f64, ShardingChoice)> = None;
+    for &dm in &[2u32, 4, 8] {
+        for &dn in &[2u32, 4, 8] {
+            for &dk in &[64u32, 128, 256] {
+                let cfg = BismoConfig {
+                    dm,
+                    dk,
+                    dn,
+                    bm: 1024,
+                    bn: 1024,
+                    ..BismoConfig::small()
+                };
+                if cfg.validate().is_err() {
+                    continue;
+                }
+                let luts = model.lut_total(&cfg);
+                let brams = model.bram_total(&cfg);
+                if luts > budget.luts as f64 || brams > budget.brams {
+                    continue;
+                }
+                let replicas = ((budget.luts as f64 / luts) as usize)
+                    .min((budget.brams / brams) as usize)
+                    .clamp(1, MAX_SHARDS);
+                for want in 1..=replicas {
+                    let plan = ShardPlan::for_instances(shape.m, shape.n, want);
+                    let shards = plan.count();
+                    // Aggregate throughput: each shard's peak, discounted
+                    // by how much of the DPA its output block can keep
+                    // busy (a shard smaller than the array wastes DPUs).
+                    let mut utilization = 0.0;
+                    for s in plan.shards() {
+                        utilization += (s.rows.len().min(dm as usize) as f64 / dm as f64)
+                            * (s.cols.len().min(dn as usize) as f64 / dn as f64);
+                    }
+                    let score = utilization * cfg.peak_binary_gops();
+                    let choice = ShardingChoice {
+                        shards,
+                        grid: (plan.rows.count(), plan.cols.count()),
+                        config: cfg,
+                        luts_per_instance: luts,
+                        brams_per_instance: brams,
+                        total_luts: luts * shards as f64,
+                        total_brams: brams * shards as u64,
+                        peak_gops: cfg.peak_binary_gops() * shards as f64,
+                    };
+                    let better = match &best {
+                        None => true,
+                        Some((bs, bc)) => {
+                            score > *bs + 1e-9
+                                || ((score - *bs).abs() <= 1e-9
+                                    && (choice.shards < bc.shards
+                                        || (choice.shards == bc.shards
+                                            && choice.total_luts < bc.total_luts - 1e-9)))
+                        }
+                    };
+                    if better {
+                        best = Some((score, choice));
+                    }
+                }
+            }
+        }
+    }
+    best.map(|(_, c)| c).ok_or_else(|| {
+        BismoError::CapacityExceeded(format!(
+            "budget ({} LUTs, {} BRAMs) fits no overlay instance",
+            budget.luts, budget.brams
+        ))
+    })
 }
 
 /// One Fig. 8 validation point: model prediction vs virtual synthesis.
@@ -276,5 +424,72 @@ mod tests {
         for (id, cfg) in crate::arch::all_instances() {
             assert!(m.fits(&cfg, &PYNQ_Z1), "instance {id} should fit Z7020");
         }
+    }
+
+    #[test]
+    fn sharding_on_pynq_prefers_one_big_instance() {
+        // A single Z7020 affords one large array or a couple of small
+        // ones; for a big job the single 8×256×8 instance wins on
+        // aggregate peak (Eq. 1 prices two half-arrays above one full).
+        let m = CostModel::paper();
+        let shape = GemmShape {
+            m: 512,
+            k: 4096,
+            n: 512,
+        };
+        let c = select_sharding(&m, &shape, ResourceBudget::of_platform(&PYNQ_Z1)).unwrap();
+        assert_eq!(c.shards, 1, "{c:?}");
+        assert_eq!((c.config.dm, c.config.dk, c.config.dn), (8, 256, 8));
+        assert!(c.total_luts <= PYNQ_Z1.luts as f64);
+        assert!(c.total_brams <= PYNQ_Z1.brams);
+    }
+
+    #[test]
+    fn doubling_the_budget_buys_more_instances() {
+        let m = CostModel::paper();
+        let shape = GemmShape {
+            m: 512,
+            k: 4096,
+            n: 512,
+        };
+        let single = ResourceBudget::of_platform(&PYNQ_Z1);
+        let double = ResourceBudget {
+            luts: single.luts * 2,
+            brams: single.brams * 2,
+        };
+        let c1 = select_sharding(&m, &shape, single).unwrap();
+        let c2 = select_sharding(&m, &shape, double).unwrap();
+        assert!(c2.shards > c1.shards, "{c1:?} vs {c2:?}");
+        assert!(c2.peak_gops > c1.peak_gops);
+        assert!(c2.total_luts <= double.luts as f64);
+        assert!(c2.total_brams <= double.brams);
+        assert_eq!(c2.grid.0 * c2.grid.1, c2.shards);
+    }
+
+    #[test]
+    fn tiny_jobs_are_not_oversharded() {
+        // A 2×2 output cannot keep more DPUs busy by splitting: the
+        // utilization discount makes extra shards worthless, so the
+        // tie-break lands on a single small instance.
+        let m = CostModel::paper();
+        let shape = GemmShape { m: 2, k: 64, n: 2 };
+        let budget = ResourceBudget {
+            luts: PYNQ_Z1.luts * 4,
+            brams: PYNQ_Z1.brams * 4,
+        };
+        let c = select_sharding(&m, &shape, budget).unwrap();
+        assert_eq!(c.shards, 1, "{c:?}");
+    }
+
+    #[test]
+    fn impossible_budget_is_capacity_exceeded() {
+        let m = CostModel::paper();
+        let shape = GemmShape {
+            m: 64,
+            k: 64,
+            n: 64,
+        };
+        let r = select_sharding(&m, &shape, ResourceBudget { luts: 100, brams: 1 });
+        assert!(matches!(r, Err(BismoError::CapacityExceeded(_))), "{r:?}");
     }
 }

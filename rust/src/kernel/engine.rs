@@ -17,11 +17,18 @@
 //!   row sit in adjacent cache lines and a whole `(row, col)` output
 //!   needs exactly `(w·a·⌈k/64⌉)` sequential word reads.
 //! * **Output tiling** — the output is walked in `tile_m × tile_n`
-//!   blocks; the RHS tile (all planes of `tile_n` packed rows) stays
-//!   L1/L2-resident across the `tile_m` LHS rows instead of being
-//!   restreamed per output row.
+//!   blocks described by a [`crate::partition::TilePlan`] (the crate's
+//!   single owner of tiling arithmetic); the RHS tile (all planes of
+//!   `tile_n` packed rows) stays L1/L2-resident across the `tile_m`
+//!   LHS rows instead of being restreamed per output row.
 //! * **Unrolled strips** — the AND+popcount inner loop runs over 4-word
 //!   strips with independent accumulator chains.
+//!
+//! [`gemm_tiled_block`] computes any output block (a row range × column
+//! range, optionally restricted to a group of LHS bit-planes) without
+//! touching the rest — the shard granularity of
+//! [`crate::partition::ShardPlan`], packed zero-copy from
+//! [`BitSerialMatrix::plane_rows`] block views.
 //!
 //! Row tiles are independent, which is exactly the granularity the
 //! persistent [`WorkerPool`] distributes.
@@ -29,6 +36,8 @@
 use super::pool::WorkerPool;
 use super::popcount_and;
 use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
+use crate::partition::{BlockSplit, TilePlan};
+use std::ops::Range;
 use std::sync::Mutex;
 
 /// Tile geometry of the engine. Defaults hold one RHS tile
@@ -52,7 +61,9 @@ impl Default for KernelConfig {
 }
 
 /// One operand repacked for the tiled kernel: zero planes dropped,
-/// layout `[row][plane][word]` (row-major, plane-minor).
+/// layout `[row][plane][word]` (row-major, plane-minor). Packs any row
+/// block and plane subset of the source, reading each plane's row range
+/// through the zero-copy [`BitSerialMatrix::plane_rows`] view.
 struct PackedOperand {
     /// Words per packed row (`⌈k/64⌉`).
     words: usize,
@@ -62,15 +73,20 @@ struct PackedOperand {
 }
 
 impl PackedOperand {
-    fn pack(m: &BitSerialMatrix) -> PackedOperand {
-        let kept = m.nonzero_planes();
+    fn pack(m: &BitSerialMatrix, rows: Range<usize>, planes: Range<u32>) -> PackedOperand {
+        let kept: Vec<u32> = m
+            .nonzero_planes()
+            .into_iter()
+            .filter(|p| planes.contains(p))
+            .collect();
         let weights: Vec<i64> = kept.iter().map(|&i| m.plane_weight(i)).collect();
         let words = m.words_per_row;
         let np = kept.len();
-        let mut data = vec![0u64; m.rows * np * words];
+        let nrows = rows.len();
+        let mut data = vec![0u64; nrows * np * words];
         for (pi, &plane) in kept.iter().enumerate() {
-            let src = m.plane_slice(plane);
-            for r in 0..m.rows {
+            let src = m.plane_rows(plane, rows.clone());
+            for r in 0..nrows {
                 let dst = (r * np + pi) * words;
                 data[dst..dst + words].copy_from_slice(&src[r * words..(r + 1) * words]);
             }
@@ -107,31 +123,6 @@ pub fn gemm_tiled(l: &BitSerialMatrix, r_t: &BitSerialMatrix) -> IntMatrix {
     gemm_tiled_with(l, r_t, &KernelConfig::default(), None)
 }
 
-/// Tiled bit-serial GEMM with row tiles distributed over the shared
-/// worker pool, capped at `threads` concurrent lanes.
-///
-/// Deprecated shim, kept for one release: application code should
-/// route jobs through [`crate::api::Session`] (which micro-batches
-/// onto the same pool and adds caching), and low-level callers should
-/// use [`gemm_tiled_with`] with an explicit `(pool, lanes)` pair.
-#[doc(hidden)]
-#[deprecated(
-    since = "0.2.0",
-    note = "use bismo::api::Session for serving, or gemm_tiled_with for low-level pool control"
-)]
-pub fn gemm_tiled_parallel(
-    l: &BitSerialMatrix,
-    r_t: &BitSerialMatrix,
-    threads: usize,
-) -> IntMatrix {
-    gemm_tiled_with(
-        l,
-        r_t,
-        &KernelConfig::default(),
-        Some((WorkerPool::global(), threads)),
-    )
-}
-
 /// Full-control entry point: explicit tile geometry and an optional
 /// `(pool, lane limit)` to parallelize over row tiles.
 pub fn gemm_tiled_with(
@@ -140,22 +131,54 @@ pub fn gemm_tiled_with(
     cfg: &KernelConfig,
     pool: Option<(&WorkerPool, usize)>,
 ) -> IntMatrix {
+    gemm_tiled_block(l, r_t, 0..l.rows, 0..r_t.rows, None, cfg, pool)
+}
+
+/// Compute one output *block* of `P = L · Rᵀ`: rows `rows` × columns
+/// `cols`, restricted to the LHS bit-planes in `lhs_planes` (`None` =
+/// all planes). Returns the `rows.len() × cols.len()` partial product —
+/// the shard granularity of [`crate::partition::ShardPlan`], whose
+/// [`assemble`](crate::partition::ShardPlan::assemble) merges blocks
+/// (and sums plane groups) back into the full product bit-exactly.
+///
+/// Each call repacks its own row/column blocks, so an `r×c` shard grid
+/// packs every LHS row-block `c` times (and every RHS column-block `r`
+/// times). That duplication is a deliberate trade for shard
+/// independence: the repack is a straight memcpy of `rows·planes·⌈k/64⌉`
+/// words, a factor of roughly `cols·planes` cheaper than the block's
+/// AND+popcount work, so it stays ≲2% of shard runtime at the grid
+/// sizes the service dispatches (≤8 per axis).
+pub fn gemm_tiled_block(
+    l: &BitSerialMatrix,
+    r_t: &BitSerialMatrix,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    lhs_planes: Option<Range<u32>>,
+    cfg: &KernelConfig,
+    pool: Option<(&WorkerPool, usize)>,
+) -> IntMatrix {
     assert_eq!(
         l.cols, r_t.cols,
         "k mismatch: lhs {}×{}, rhs(T) {}×{}",
         l.rows, l.cols, r_t.rows, r_t.cols
     );
+    assert!(
+        rows.end <= l.rows && cols.end <= r_t.rows,
+        "output block {rows:?}×{cols:?} out of range for {}×{}",
+        l.rows,
+        r_t.rows
+    );
     assert!(cfg.tile_m >= 1 && cfg.tile_n >= 1, "tile sizes must be >= 1");
-    let m = l.rows;
-    let n = r_t.rows;
-    if m == 0 || n == 0 {
-        return IntMatrix::zeros(m, n);
+    let bm = rows.len();
+    let bn = cols.len();
+    if bm == 0 || bn == 0 {
+        return IntMatrix::zeros(bm, bn);
     }
-    let lp = PackedOperand::pack(l);
-    let rp = PackedOperand::pack(r_t);
+    let lp = PackedOperand::pack(l, rows, lhs_planes.unwrap_or(0..l.bits));
+    let rp = PackedOperand::pack(r_t, cols, 0..r_t.bits);
     if lp.planes() == 0 || rp.planes() == 0 {
-        // An operand with every plane zero: the product is zero.
-        return IntMatrix::zeros(m, n);
+        // Every scheduled plane zero: this block of the product is zero.
+        return IntMatrix::zeros(bm, bn);
     }
     // Fused plane-pair weight table: pairw[i·rnp + j] = ±2^{i+j}.
     let mut pairw = Vec::with_capacity(lp.planes() * rp.planes());
@@ -165,63 +188,55 @@ pub fn gemm_tiled_with(
         }
     }
 
-    let mut data = vec![0i64; m * n];
-    let rows_per_tile = cfg.tile_m;
+    // The single source of tiling arithmetic: block rows in `tile_m`
+    // strips (the parallel work unit), block columns in `tile_n` strips
+    // (the cache-residency unit). The kernel never chunks `k` — packed
+    // rows stream whole.
+    let tiles = TilePlan::new(bm, bn, l.cols, cfg.tile_m, cfg.tile_n, l.cols.max(1));
+    let mut data = vec![0i64; bm * bn];
     match pool {
         None => {
-            for (t, chunk) in data.chunks_mut(rows_per_tile * n).enumerate() {
-                let r0 = t * rows_per_tile;
-                let r1 = (r0 + rows_per_tile).min(m);
-                row_tile_kernel(&lp, &rp, &pairw, r0, r1, n, cfg.tile_n, chunk);
+            for (t, chunk) in data.chunks_mut(cfg.tile_m * bn).enumerate() {
+                row_tile_kernel(&lp, &rp, &pairw, tiles.rows.span(t), bn, &tiles.cols, chunk);
             }
         }
         Some((pool, threads)) => {
-            let tiles: Vec<Mutex<&mut [i64]>> = data
-                .chunks_mut(rows_per_tile * n)
-                .map(Mutex::new)
-                .collect();
-            pool.run_limited(tiles.len(), threads.max(1), &|t| {
-                let r0 = t * rows_per_tile;
-                let r1 = (r0 + rows_per_tile).min(m);
-                let mut guard = tiles[t].lock().unwrap();
+            let slots: Vec<Mutex<&mut [i64]>> =
+                data.chunks_mut(cfg.tile_m * bn).map(Mutex::new).collect();
+            pool.run_limited(tiles.row_tiles(), threads.max(1), &|t| {
+                let mut guard = slots[t].lock().unwrap();
                 let chunk: &mut [i64] = &mut guard;
-                row_tile_kernel(&lp, &rp, &pairw, r0, r1, n, cfg.tile_n, chunk);
+                row_tile_kernel(&lp, &rp, &pairw, tiles.rows.span(t), bn, &tiles.cols, chunk);
             });
         }
     }
-    IntMatrix::from_slice(m, n, &data)
+    IntMatrix::from_slice(bm, bn, &data)
 }
 
-/// Compute output rows `r0..r1` into `out` (row-major, `(r1-r0)×n`,
-/// relative to `r0`), walking columns in `tile_n` blocks so the packed
-/// RHS tile stays cache-resident across the rows of this tile.
-#[allow(clippy::too_many_arguments)]
+/// Compute output rows `rows` into `out` (row-major,
+/// `rows.len() × n`, relative to `rows.start`), walking the column
+/// tiles of `cols` so the packed RHS tile stays cache-resident across
+/// the rows of this tile.
 fn row_tile_kernel(
     lp: &PackedOperand,
     rp: &PackedOperand,
     pairw: &[i64],
-    r0: usize,
-    r1: usize,
+    rows: Range<usize>,
     n: usize,
-    tile_n: usize,
+    cols: &BlockSplit,
     out: &mut [i64],
 ) {
     let words = lp.words;
     let lnp = lp.planes();
     let rnp = rp.planes();
-    let mut c0 = 0;
-    while c0 < n {
-        let c1 = (c0 + tile_n).min(n);
-        for r in r0..r1 {
+    for ctile in cols.iter() {
+        for r in rows.clone() {
             let lrow_all = &lp.data[r * lnp * words..(r + 1) * lnp * words];
-            let out_row = &mut out[(r - r0) * n..(r - r0 + 1) * n];
-            for c in c0..c1 {
+            let out_row = &mut out[(r - rows.start) * n..(r - rows.start + 1) * n];
+            for c in ctile.clone() {
                 let rrow_all = &rp.data[c * rnp * words..(c + 1) * rnp * words];
                 let mut acc = 0i64;
-                for (lrow, wrow) in lrow_all
-                    .chunks_exact(words)
-                    .zip(pairw.chunks_exact(rnp))
-                {
+                for (lrow, wrow) in lrow_all.chunks_exact(words).zip(pairw.chunks_exact(rnp)) {
                     for (rrow, &w) in rrow_all.chunks_exact(words).zip(wrow) {
                         acc += w * popcount_and(lrow, rrow) as i64;
                     }
@@ -229,7 +244,6 @@ fn row_tile_kernel(
                 out_row[c] = acc;
             }
         }
-        c0 = c1;
     }
 }
 
@@ -237,6 +251,7 @@ fn row_tile_kernel(
 mod tests {
     use super::*;
     use crate::baseline::gemm_bitserial;
+    use crate::partition::ShardPlan;
     use crate::util::{property_sweep, Rng};
 
     fn random_pair(
@@ -297,7 +312,6 @@ mod tests {
 
     #[test]
     fn sparse_planes_are_skipped_and_exact() {
-        let mut rng = Rng::new(0x5BA5);
         // Even values: LSB plane all-zero. Small values: high planes
         // all-zero. Both must stay bit-exact through the skip.
         let a = IntMatrix::from_fn(13, 100, |r, c| (((r * 7 + c) % 8) as i64) * 2);
@@ -307,7 +321,6 @@ mod tests {
         assert!(la.plane_is_zero(0) && la.plane_is_zero(4));
         assert!(rb.plane_is_zero(1));
         assert_eq!(gemm_tiled(&la, &rb), a.matmul(&b));
-        let _ = &mut rng;
     }
 
     #[test]
@@ -321,7 +334,6 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)] // the shim stays covered until it is removed
     fn parallel_matches_serial() {
         property_sweep(0x9B0, 8, |rng, _| {
             let m = rng.index(40) + 1;
@@ -330,10 +342,64 @@ mod tests {
             let (la, rb, expect) = random_pair(rng, m, k, n, 4, 3, true, true);
             let serial = gemm_tiled(&la, &rb);
             assert_eq!(serial, expect);
+            let cfg = KernelConfig::default();
             for threads in [1, 2, 3, 8] {
-                assert_eq!(gemm_tiled_parallel(&la, &rb, threads), serial);
+                assert_eq!(
+                    gemm_tiled_with(&la, &rb, &cfg, Some((WorkerPool::global(), threads))),
+                    serial
+                );
             }
         });
+    }
+
+    #[test]
+    fn block_equals_slice_of_full_product() {
+        property_sweep(0xB10C2, 12, |rng, _| {
+            let m = rng.index(16) + 2;
+            let k = rng.index(150) + 1;
+            let n = rng.index(16) + 2;
+            let (la, rb, expect) = random_pair(rng, m, k, n, 3, 3, true, false);
+            let r0 = rng.index(m);
+            let r1 = r0 + rng.index(m - r0) + 1;
+            let c0 = rng.index(n);
+            let c1 = c0 + rng.index(n - c0) + 1;
+            let block = gemm_tiled_block(
+                &la,
+                &rb,
+                r0..r1,
+                c0..c1,
+                None,
+                &KernelConfig::default(),
+                None,
+            );
+            let want = IntMatrix::from_fn(r1 - r0, c1 - c0, |r, c| expect.get(r0 + r, c0 + c));
+            assert_eq!(block, want, "m={m} k={k} n={n} block {r0}..{r1}×{c0}..{c1}");
+        });
+    }
+
+    #[test]
+    fn plane_group_shards_sum_to_full_product() {
+        let mut rng = Rng::new(0x93A);
+        let (la, rb, expect) = random_pair(&mut rng, 9, 130, 7, 5, 3, true, true);
+        for groups in [1, 2, 3, 5] {
+            let plan = ShardPlan::grid(9, 7, 2, 2).with_plane_groups(la.bits, groups);
+            let parts: Vec<IntMatrix> = plan
+                .shards()
+                .iter()
+                .map(|s| {
+                    gemm_tiled_block(
+                        &la,
+                        &rb,
+                        s.rows.clone(),
+                        s.cols.clone(),
+                        s.planes.clone(),
+                        &KernelConfig::default(),
+                        None,
+                    )
+                })
+                .collect();
+            assert_eq!(plan.assemble(&parts).unwrap(), expect, "groups={groups}");
+        }
     }
 
     #[test]

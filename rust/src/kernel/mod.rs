@@ -6,9 +6,14 @@
 //! same contract:
 //!
 //! * [`gemm_tiled`] / [`gemm_tiled_with`] — cache-blocked,
-//!   zero-plane-skipping GEMM over packed plane rows (see [`engine`]).
-//!   Application code should prefer the [`crate::api::Session`]
-//!   facade, which runs this engine behind its `Engine` backend.
+//!   zero-plane-skipping GEMM over packed plane rows (see [`engine`]),
+//!   tiled by the shared [`crate::partition::TilePlan`]. Application
+//!   code should prefer the [`crate::api::Session`] facade, which runs
+//!   this engine behind its `Engine` backend.
+//! * [`gemm_tiled_block`] — one output block (row range × column range,
+//!   optional LHS plane group): the shard granularity of
+//!   [`crate::partition::ShardPlan`], used by the serving layer's
+//!   multi-instance dispatch.
 //! * [`WorkerPool`] — persistent work-claiming thread pool reused by
 //!   the engine, [`crate::baseline::gemm_bitserial_parallel`],
 //!   [`crate::coordinator::BismoBatchRunner`] and the micro-batches of
@@ -19,10 +24,7 @@
 pub mod engine;
 pub mod pool;
 
-pub use engine::{gemm_tiled, gemm_tiled_with, KernelConfig};
-// The deprecated shim stays re-exported (and callable) for one release.
-#[allow(deprecated)]
-pub use engine::gemm_tiled_parallel;
+pub use engine::{gemm_tiled, gemm_tiled_block, gemm_tiled_with, KernelConfig};
 pub use pool::WorkerPool;
 
 /// Binary dot product of two equal-length packed words slices:

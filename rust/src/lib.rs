@@ -30,6 +30,11 @@
 //! * [`kernel`] — the fast software path: tiled, plane-fused,
 //!   zero-plane-skipping bit-serial GEMM engine plus the persistent
 //!   worker pool shared by every parallel path in the crate.
+//! * [`partition`] — the single owner of GEMM decomposition:
+//!   [`partition::TilePlan`] (the tiling arithmetic both the scheduler
+//!   and the kernel tiler consume) and [`partition::ShardPlan`]
+//!   (row-block × column-block × bit-plane-group shards with exact
+//!   reassembly — the unit of multi-instance execution).
 //! * `runtime` — PJRT CPU client: loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust.
 //!   Gated behind the `xla` cargo feature (needs the PJRT plugin and
@@ -58,6 +63,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod isa;
 pub mod kernel;
+pub mod partition;
 pub mod power;
 pub mod qnn;
 pub mod report;

@@ -15,6 +15,12 @@
 //!                open-loop load generator against the async serving
 //!                layer -> BENCH_serve.json (latency percentiles,
 //!                throughput, packing-cache repack-avoidance win)
+//! bismo shard-bench [--quick] [--backend engine|sim] [--reps N]
+//!                [--max-shards S] [--m M --k K --n N --wbits W --abits A]
+//!                [--budget-luts L --budget-brams B] [--out PATH]
+//!                sweep shard count (multi-instance execution) on one
+//!                workload -> BENCH_shard.json scaling curve, plus the
+//!                cost model's Auto pick under the budget
 //! bismo costmodel [--instance N]            LUT/BRAM prediction
 //! bismo synth [--dk N]                      DPU virtual synthesis
 //! bismo power                               Table V power model
@@ -696,6 +702,220 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     Ok(())
 }
 
+/// `bismo shard-bench`: the multi-instance scaling sweep.
+///
+/// One fixed GEMM workload is executed through the session facade at
+/// shard counts 1, 2, 4, ... (`--max-shards`), i.e. split across that
+/// many concurrent overlay instances by the partition layer and merged
+/// bit-exactly. Per-request latency is measured over `--reps`
+/// repetitions (operands stay cached, so the sweep isolates execution
+/// scaling from packing). The cost model's `Sharding::Auto`
+/// selection under `--budget-luts`/`--budget-brams` (default: 2× the
+/// PYNQ-Z1 fabric) is reported alongside. Results go to
+/// `BENCH_shard.json` (schema in the README).
+fn cmd_shard_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
+    use bismo::baseline::binary_ops;
+    use bismo::costmodel::{select_sharding, CostModel, ResourceBudget};
+    use bismo::partition::{GemmShape, ShardPlan};
+    use bismo::util::bench::Samples;
+    use bismo::util::Json;
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let quick = flags.contains_key("quick");
+    let m = get(flags, "m", if quick { 128usize } else { 256 });
+    let k = get(flags, "k", 1024usize);
+    let n = get(flags, "n", if quick { 128usize } else { 256 });
+    let wbits = get(flags, "wbits", 2u32);
+    let abits = get(flags, "abits", 2u32);
+    let reps = get(flags, "reps", if quick { 3usize } else { 7 }).max(1);
+    let max_shards = get(flags, "max-shards", if quick { 4usize } else { 8 }).max(1);
+    let budget = ResourceBudget {
+        luts: get(flags, "budget-luts", PYNQ_Z1.luts * 2),
+        brams: get(flags, "budget-brams", PYNQ_Z1.brams * 2),
+    };
+    let backend = match flags.get("backend").map(|s| s.as_str()) {
+        None | Some("engine") => Backend::Engine,
+        Some("sim") => Backend::Sim,
+        Some(other) => {
+            return Err(BismoError::Parse(format!(
+                "unknown --backend {other} (engine|sim)"
+            )))
+        }
+    };
+    let out_path = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "BENCH_shard.json".to_string());
+
+    let session = Session::new(SessionConfig {
+        overlay: config_from(flags)?,
+        ..Default::default()
+    })?;
+    let mut rng = Rng::new(get(flags, "seed", 0x5AA3Du64));
+    let a = Arc::new(IntMatrix::random(&mut rng, m, k, wbits, false));
+    let b = Arc::new(IntMatrix::random(&mut rng, k, n, abits, false));
+    let expect = a.matmul(&b);
+    let prec = Precision::unsigned(wbits, abits);
+    let ops = binary_ops(m as u64, k as u64, n as u64, wbits, abits) as f64;
+
+    let mut counts: Vec<usize> = std::iter::successors(Some(1usize), |s| Some(s * 2))
+        .take_while(|&s| s <= max_shards)
+        .collect();
+    if counts.last() != Some(&max_shards) {
+        counts.push(max_shards);
+    }
+
+    println!(
+        "shard-bench: {m}x{k}x{n} w{wbits}a{abits}, {} backend, {} reps per shard count",
+        backend.name(),
+        reps
+    );
+    let mut entries = Vec::new();
+    let mut single_ns = 0.0f64;
+    let mut best = (1usize, 1.0f64);
+    for &shards in &counts {
+        let builder = session
+            .matmul(prec)
+            .backend(backend)
+            .instances(shards)
+            // Both operands stay resident so every rep measures
+            // execution, not packing.
+            .cache_lhs(true)
+            .cache_rhs(true);
+        // Warm-up rep doubles as the bit-exactness gate.
+        let resp = builder.run(a.clone(), b.clone())?;
+        if resp.result != expect {
+            return Err(BismoError::VerifyFailed(format!(
+                "sharded result mismatch at {shards} shard(s)"
+            )));
+        }
+        // Same resolution the service used; the cross-check below turns
+        // any future drift into a loud failure instead of a benchmark
+        // artifact that misreports the grid it timed.
+        let grid = ShardPlan::for_instances(m, n, shards);
+        if resp.shards != grid.count() {
+            return Err(BismoError::VerifyFailed(format!(
+                "service executed {} shard(s), CLI derived {}",
+                resp.shards,
+                grid.count()
+            )));
+        }
+        let mut lat = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let r = builder.run(a.clone(), b.clone())?;
+            lat.push(t0.elapsed().as_nanos() as f64);
+            if r.result != expect {
+                return Err(BismoError::VerifyFailed(format!(
+                    "sharded result mismatch at {shards} shard(s)"
+                )));
+            }
+        }
+        lat.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let samples = Samples { ns: lat };
+        let median = samples.median();
+        if shards == 1 {
+            single_ns = median;
+        }
+        let speedup = if median > 0.0 { single_ns / median } else { 0.0 };
+        if speedup > best.1 {
+            best = (shards, speedup);
+        }
+        println!(
+            "  {:>2} shard(s) [{}x{} grid]: median {:>9.0} ns  {:>7.2} GOPS  speedup {:.2}x",
+            resp.shards,
+            grid.rows.count(),
+            grid.cols.count(),
+            median,
+            ops / median,
+            speedup
+        );
+        let mut e = BTreeMap::new();
+        e.insert("shards".to_string(), Json::num(resp.shards as f64));
+        e.insert("grid_rows".to_string(), Json::num(grid.rows.count() as f64));
+        e.insert("grid_cols".to_string(), Json::num(grid.cols.count() as f64));
+        e.insert("median_ns".to_string(), Json::num(median));
+        e.insert("mean_ns".to_string(), Json::num(samples.mean()));
+        e.insert("gops".to_string(), Json::num(ops / median));
+        e.insert("speedup_vs_single".to_string(), Json::num(speedup));
+        entries.push(Json::Obj(e));
+    }
+
+    // The cost model's own pick for this workload under the budget.
+    let shape = GemmShape { m, k, n };
+    let auto = select_sharding(&CostModel::paper(), &shape, budget)?;
+    println!(
+        "auto under budget ({} LUTs, {} BRAMs): {} instance(s) of Dm={} Dk={} Dn={} \
+         ({:.0} LUTs, {} BRAMs total, {:.0} peak GOPS)",
+        budget.luts,
+        budget.brams,
+        auto.shards,
+        auto.config.dm,
+        auto.config.dk,
+        auto.config.dn,
+        auto.total_luts,
+        auto.total_brams,
+        auto.peak_gops
+    );
+
+    let mut workload = BTreeMap::new();
+    workload.insert("m".to_string(), Json::num(m as f64));
+    workload.insert("k".to_string(), Json::num(k as f64));
+    workload.insert("n".to_string(), Json::num(n as f64));
+    workload.insert("wbits".to_string(), Json::num(wbits as f64));
+    workload.insert("abits".to_string(), Json::num(abits as f64));
+    workload.insert("binary_ops".to_string(), Json::num(ops));
+    workload.insert("reps".to_string(), Json::num(reps as f64));
+
+    let mut auto_j = BTreeMap::new();
+    auto_j.insert("budget_luts".to_string(), Json::num(budget.luts as f64));
+    auto_j.insert("budget_brams".to_string(), Json::num(budget.brams as f64));
+    auto_j.insert("shards".to_string(), Json::num(auto.shards as f64));
+    auto_j.insert("grid_rows".to_string(), Json::num(auto.grid.0 as f64));
+    auto_j.insert("grid_cols".to_string(), Json::num(auto.grid.1 as f64));
+    auto_j.insert("dm".to_string(), Json::num(auto.config.dm as f64));
+    auto_j.insert("dk".to_string(), Json::num(auto.config.dk as f64));
+    auto_j.insert("dn".to_string(), Json::num(auto.config.dn as f64));
+    auto_j.insert("total_luts".to_string(), Json::num(auto.total_luts));
+    auto_j.insert("total_brams".to_string(), Json::num(auto.total_brams as f64));
+    auto_j.insert("peak_gops".to_string(), Json::num(auto.peak_gops));
+
+    let mut headline = BTreeMap::new();
+    headline.insert("best_shards".to_string(), Json::num(best.0 as f64));
+    headline.insert("best_speedup".to_string(), Json::num(best.1));
+
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), Json::str("bismo-bench-shard/v1"));
+    root.insert(
+        "mode".to_string(),
+        Json::str(if quick { "quick" } else { "full" }),
+    );
+    root.insert("backend".to_string(), Json::str(backend.name()));
+    root.insert(
+        "generated_unix".to_string(),
+        Json::num(
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs() as f64)
+                .unwrap_or(0.0),
+        ),
+    );
+    root.insert("workload".to_string(), Json::Obj(workload));
+    root.insert("entries".to_string(), Json::Arr(entries));
+    root.insert("headline".to_string(), Json::Obj(headline));
+    root.insert("auto".to_string(), Json::Obj(auto_j));
+    let doc = Json::Obj(root);
+    std::fs::write(&out_path, doc.pretty(2) + "\n")
+        .map_err(|e| BismoError::Io(format!("writing {out_path}: {e}")))?;
+    println!(
+        "wrote {out_path}: best speedup {:.2}x at {} shard(s)",
+        best.1, best.0
+    );
+    Ok(())
+}
+
 fn cmd_costmodel(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     let model = CostModel::paper();
     let fitted = CostModel::fit_from_synth();
@@ -834,10 +1054,11 @@ fn cmd_info() -> Result<(), BismoError> {
     Ok(())
 }
 
-const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|bench|serve-bench|costmodel|synth|power|instances|info> [flags]
+const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|bench|serve-bench|shard-bench|costmodel|synth|power|instances|info> [flags]
 flags: --instance N  --m M --k K --n N  --wbits W --abits A  --signed --no-overlap --bit-skip  --seed S  --dk N
 bench: --quick  --out PATH (default BENCH_gemm.json)  --threads N
-serve-bench: --quick  --backend engine|sim  --requests N  --rate RPS  --layers L  --workers W  --batch B  --out PATH (default BENCH_serve.json)";
+serve-bench: --quick  --backend engine|sim  --requests N  --rate RPS  --layers L  --workers W  --batch B  --out PATH (default BENCH_serve.json)
+shard-bench: --quick  --backend engine|sim  --reps N  --max-shards S  --budget-luts L --budget-brams B  --out PATH (default BENCH_shard.json)";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -849,6 +1070,7 @@ fn main() {
         "schedule" => cmd_schedule(&flags),
         "bench" => cmd_bench(&flags),
         "serve-bench" => cmd_serve_bench(&flags),
+        "shard-bench" => cmd_shard_bench(&flags),
         "costmodel" => cmd_costmodel(&flags),
         "synth" => cmd_synth(&flags),
         "power" => cmd_power(),

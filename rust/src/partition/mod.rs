@@ -1,0 +1,27 @@
+//! The partition layer: the single owner of GEMM decomposition.
+//!
+//! Two kinds of decomposition used to live in two places with their own
+//! arithmetic — the software kernel's cache tiling (`kernel::engine`)
+//! and the scheduler's buffer-capacity tiling (`scheduler::plan`). Both
+//! now consume [`TilePlan`]; the `ceil`-division, span and raggedness
+//! rules are written here exactly once.
+//!
+//! On top of the intra-instance tiling sits the *inter*-instance split:
+//! [`ShardPlan`] decomposes one GEMM into row-block × column-block ×
+//! bit-plane-group shards, each an independent smaller GEMM that a
+//! separate overlay instance (or worker lane) can execute, with exact
+//! reassembly metadata ([`ShardPlan::assemble`]). This is the shape of
+//! the paper's scalability claim (§III-B): the cost model says how many
+//! instances a fabric affords ([`crate::costmodel::select_sharding`]),
+//! the shard plan says what each of them computes, and
+//! [`crate::coordinator::BismoService`] dispatches and merges.
+//!
+//! Layering: `partition` depends only on `bitmatrix`/`api`/`util`;
+//! `kernel`, `scheduler`, `costmodel` and `coordinator` all sit above
+//! it.
+
+mod shard;
+mod tile;
+
+pub use shard::{GemmShape, Shard, ShardPlan};
+pub use tile::{BlockSplit, EvenSplit, TilePlan};

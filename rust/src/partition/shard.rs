@@ -1,0 +1,265 @@
+//! [`ShardPlan`]: splitting one GEMM across independent overlay
+//! instances, with exact reassembly.
+
+use super::tile::EvenSplit;
+use crate::api::BismoError;
+use crate::bitmatrix::IntMatrix;
+use std::ops::Range;
+
+/// The shape of one GEMM job: `P(m×n) = L(m×k) · R(k×n)`. The minimal
+/// vocabulary the partition and cost-model layers share.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// One shard of a [`ShardPlan`]: an output block (`rows × cols`),
+/// optionally restricted to a group of LHS bit-planes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// Position in [`ShardPlan::shards`] order.
+    pub index: usize,
+    /// Output rows this shard produces (rows of `L`).
+    pub rows: Range<usize>,
+    /// Output columns this shard produces (rows of the transposed `R`).
+    pub cols: Range<usize>,
+    /// LHS bit-planes this shard covers; `None` means all planes. Plane
+    /// groups at the same `(rows, cols)` block *sum* into the output
+    /// (GEMM is linear in the bit-plane decomposition).
+    pub planes: Option<Range<u32>>,
+}
+
+/// A decomposition of one GEMM into row-block × column-block ×
+/// bit-plane-group shards, each an independent smaller GEMM. Row and
+/// column blocks land in disjoint output regions; plane groups
+/// accumulate into the same region — [`ShardPlan::assemble`] applies
+/// both rules and is bit-exact by construction (integer adds over
+/// disjoint or linear contributions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Output rows (`m`) split across shards.
+    pub rows: EvenSplit,
+    /// Output columns (`n`) split across shards.
+    pub cols: EvenSplit,
+    /// Optional LHS bit-plane grouping (`total` = declared LHS bits).
+    pub planes: Option<EvenSplit>,
+}
+
+impl ShardPlan {
+    /// The trivial plan: one shard covering the whole output.
+    pub fn single(m: usize, n: usize) -> ShardPlan {
+        ShardPlan::grid(m, n, 1, 1)
+    }
+
+    /// A fixed `row_shards × col_shards` grid (each axis clamped so no
+    /// shard is empty).
+    pub fn grid(m: usize, n: usize, row_shards: usize, col_shards: usize) -> ShardPlan {
+        ShardPlan {
+            rows: EvenSplit::new(m, row_shards),
+            cols: EvenSplit::new(n, col_shards),
+            planes: None,
+        }
+    }
+
+    /// A grid for (up to) `instances` shards, factored across the two
+    /// output axes so shards stay as close to the job's own aspect
+    /// ratio as the factorization allows (square-ish shards keep both
+    /// DPA dimensions busy on every instance). The count is clamped to
+    /// the available output parallelism (`m·n`) and a hard cap of 256 —
+    /// shard counts beyond either are useless, and the clamp keeps the
+    /// factorization scan bounded for adversarial inputs.
+    pub fn for_instances(m: usize, n: usize, instances: usize) -> ShardPlan {
+        let cap = m.max(1).saturating_mul(n.max(1)).min(256);
+        let instances = instances.clamp(1, cap);
+        let mut best: Option<(usize, f64, usize)> = None; // (effective, imbalance, r)
+        for r in 1..=instances {
+            if instances % r != 0 {
+                continue;
+            }
+            let c = instances / r;
+            let effective = r.min(m.max(1)) * c.min(n.max(1));
+            // Aspect imbalance of one shard, in log space so 4:1 and
+            // 1:4 score identically.
+            let sm = (m.max(1) as f64 / r.min(m.max(1)) as f64).max(1.0);
+            let sn = (n.max(1) as f64 / c.min(n.max(1)) as f64).max(1.0);
+            let imbalance = (sm / sn).ln().abs();
+            let better = match best {
+                None => true,
+                Some((be, bi, _)) => {
+                    effective > be || (effective == be && imbalance < bi - 1e-12)
+                }
+            };
+            if better {
+                best = Some((effective, imbalance, r));
+            }
+        }
+        let r = best.map(|(_, _, r)| r).unwrap_or(1);
+        ShardPlan::grid(m, n, r, instances / r)
+    }
+
+    /// Additionally split the LHS bit-planes into `groups` near-equal
+    /// groups (`lhs_bits` = the declared LHS precision). Plane-group
+    /// shards are supported by the software kernel engine
+    /// ([`crate::kernel::gemm_tiled_block`]); their partial products
+    /// sum during [`ShardPlan::assemble`].
+    pub fn with_plane_groups(mut self, lhs_bits: u32, groups: usize) -> ShardPlan {
+        self.planes = Some(EvenSplit::new(lhs_bits as usize, groups));
+        self
+    }
+
+    /// Total number of shards.
+    pub fn count(&self) -> usize {
+        self.rows.count() * self.cols.count() * self.planes.map_or(1, |p| p.count())
+    }
+
+    /// Is this the trivial single-shard plan?
+    pub fn is_single(&self) -> bool {
+        self.count() == 1
+    }
+
+    /// All shards, row-major over the grid, plane groups innermost.
+    pub fn shards(&self) -> Vec<Shard> {
+        let mut out = Vec::with_capacity(self.count());
+        for ri in 0..self.rows.count() {
+            for ci in 0..self.cols.count() {
+                match self.planes {
+                    None => out.push(Shard {
+                        index: out.len(),
+                        rows: self.rows.span(ri),
+                        cols: self.cols.span(ci),
+                        planes: None,
+                    }),
+                    Some(pl) => {
+                        for pi in 0..pl.count() {
+                            let span = pl.span(pi);
+                            out.push(Shard {
+                                index: out.len(),
+                                rows: self.rows.span(ri),
+                                cols: self.cols.span(ci),
+                                planes: Some(span.start as u32..span.end as u32),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Merge per-shard partial results (in [`ShardPlan::shards`] order)
+    /// into the full `m×n` product. Row/column blocks write disjoint
+    /// regions; plane groups of the same block accumulate.
+    pub fn assemble(&self, parts: &[IntMatrix]) -> Result<IntMatrix, BismoError> {
+        let shards = self.shards();
+        if parts.len() != shards.len() {
+            return Err(BismoError::ShapeMismatch(format!(
+                "{} shard results for a {}-shard plan",
+                parts.len(),
+                shards.len()
+            )));
+        }
+        let mut out = IntMatrix::zeros(self.rows.total, self.cols.total);
+        for (shard, part) in shards.iter().zip(parts) {
+            if part.rows != shard.rows.len() || part.cols != shard.cols.len() {
+                return Err(BismoError::ShapeMismatch(format!(
+                    "shard {} produced {}×{}, expected {}×{}",
+                    shard.index,
+                    part.rows,
+                    part.cols,
+                    shard.rows.len(),
+                    shard.cols.len()
+                )));
+            }
+            for (i, r) in shard.rows.clone().enumerate() {
+                for (j, c) in shard.cols.clone().enumerate() {
+                    out.set(r, c, out.get(r, c) + part.get(i, j));
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_output_disjointly() {
+        let plan = ShardPlan::grid(10, 7, 3, 2);
+        assert_eq!(plan.count(), 6);
+        let mut covered = vec![vec![0u32; 7]; 10];
+        for s in plan.shards() {
+            assert!(s.planes.is_none());
+            for r in s.rows.clone() {
+                for c in s.cols.clone() {
+                    covered[r][c] += 1;
+                }
+            }
+        }
+        assert!(covered.iter().flatten().all(|&c| c == 1), "exact cover");
+    }
+
+    #[test]
+    fn for_instances_prefers_the_larger_axis() {
+        // Tall job: the row axis should absorb the split.
+        let p = ShardPlan::for_instances(64, 4, 4);
+        assert_eq!((p.rows.count(), p.cols.count()), (4, 1));
+        // Wide job: the column axis.
+        let p = ShardPlan::for_instances(4, 64, 4);
+        assert_eq!((p.rows.count(), p.cols.count()), (1, 4));
+        // Square job, 4 instances: 2×2.
+        let p = ShardPlan::for_instances(32, 32, 4);
+        assert_eq!((p.rows.count(), p.cols.count()), (2, 2));
+    }
+
+    #[test]
+    fn for_instances_clamps_to_available_work() {
+        let p = ShardPlan::for_instances(2, 1, 8);
+        assert!(p.count() <= 2, "no empty shards: {}", p.count());
+        assert_eq!(ShardPlan::for_instances(1, 1, 8).count(), 1);
+        assert_eq!(ShardPlan::for_instances(5, 5, 0).count(), 1);
+        // Absurd requests terminate fast and clamp to useful work.
+        assert!(ShardPlan::for_instances(4, 4, usize::MAX).count() <= 16);
+        assert!(ShardPlan::for_instances(10_000, 10_000, usize::MAX).count() <= 256);
+    }
+
+    #[test]
+    fn plane_groups_multiply_count() {
+        let p = ShardPlan::grid(8, 8, 2, 2).with_plane_groups(5, 2);
+        assert_eq!(p.count(), 8);
+        let shards = p.shards();
+        assert_eq!(shards[0].planes, Some(0..3));
+        assert_eq!(shards[1].planes, Some(3..5));
+        assert_eq!(shards[0].rows, shards[1].rows, "plane groups share a block");
+    }
+
+    #[test]
+    fn assemble_copies_blocks_and_sums_plane_groups() {
+        // 2×1 row split with 2 plane groups: four parts, plane pairs sum.
+        let plan = ShardPlan::grid(2, 2, 2, 1).with_plane_groups(4, 2);
+        let parts = vec![
+            IntMatrix::from_slice(1, 2, &[1, 2]),
+            IntMatrix::from_slice(1, 2, &[10, 20]),
+            IntMatrix::from_slice(1, 2, &[3, 4]),
+            IntMatrix::from_slice(1, 2, &[30, 40]),
+        ];
+        let out = plan.assemble(&parts).unwrap();
+        assert_eq!(out, IntMatrix::from_slice(2, 2, &[11, 22, 33, 44]));
+    }
+
+    #[test]
+    fn assemble_rejects_wrong_arity_and_shape() {
+        let plan = ShardPlan::grid(4, 4, 2, 1);
+        assert!(matches!(
+            plan.assemble(&[IntMatrix::zeros(2, 4)]),
+            Err(BismoError::ShapeMismatch(_))
+        ));
+        assert!(matches!(
+            plan.assemble(&[IntMatrix::zeros(2, 4), IntMatrix::zeros(3, 4)]),
+            Err(BismoError::ShapeMismatch(_))
+        ));
+    }
+}

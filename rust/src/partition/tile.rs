@@ -1,0 +1,222 @@
+//! 1-D axis splits and the [`TilePlan`]: the single place where GEMM
+//! tiling arithmetic lives.
+
+use crate::util::ceil_div;
+use std::ops::Range;
+
+/// Uniform split of `0..total` into fixed-size blocks of `block`
+/// elements; the last block is ragged when `block` does not divide
+/// `total`. This is the tiling shape of fixed hardware resources: a
+/// `D_m × D_n` DPA walks the output in `D_m`-row blocks, the software
+/// kernel walks it in `tile_m`-row blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockSplit {
+    /// Extent of the axis being split.
+    pub total: usize,
+    /// Nominal block size (>= 1).
+    pub block: usize,
+}
+
+impl BlockSplit {
+    /// Split `0..total` into `ceil(total / block)` blocks.
+    pub fn new(total: usize, block: usize) -> BlockSplit {
+        assert!(block >= 1, "block size must be >= 1");
+        BlockSplit { total, block }
+    }
+
+    /// Number of blocks (`0` when the axis is empty).
+    pub fn count(&self) -> usize {
+        ceil_div(self.total as u64, self.block as u64) as usize
+    }
+
+    /// Half-open range of block `i`.
+    pub fn span(&self, i: usize) -> Range<usize> {
+        debug_assert!(i < self.count(), "block {i} of {}", self.count());
+        let start = i * self.block;
+        start..(start + self.block).min(self.total)
+    }
+
+    /// Length of block `i` (the last block may be shorter).
+    pub fn len_of(&self, i: usize) -> usize {
+        self.span(i).len()
+    }
+
+    /// All block spans, in order.
+    pub fn iter(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.count()).map(|i| self.span(i))
+    }
+}
+
+/// Near-equal split of `0..total` into `parts` contiguous pieces whose
+/// sizes differ by at most one. This is the sharding shape: work divided
+/// across `parts` equal instances, no instance idling on a ragged tail.
+/// `parts` is clamped to `1..=max(total, 1)` so every piece is non-empty
+/// (for a non-empty axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EvenSplit {
+    /// Extent of the axis being split.
+    pub total: usize,
+    /// Number of pieces (clamped at construction).
+    pub parts: usize,
+}
+
+impl EvenSplit {
+    pub fn new(total: usize, parts: usize) -> EvenSplit {
+        EvenSplit {
+            total,
+            parts: parts.max(1).min(total.max(1)),
+        }
+    }
+
+    /// Number of pieces.
+    pub fn count(&self) -> usize {
+        self.parts
+    }
+
+    /// Half-open range of piece `i`: the first `total % parts` pieces
+    /// get one extra element.
+    pub fn span(&self, i: usize) -> Range<usize> {
+        debug_assert!(i < self.parts, "piece {i} of {}", self.parts);
+        let base = self.total / self.parts;
+        let rem = self.total % self.parts;
+        let start = i * base + i.min(rem);
+        start..start + base + usize::from(i < rem)
+    }
+
+    /// All piece spans, in order.
+    pub fn iter(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.parts).map(|i| self.span(i))
+    }
+}
+
+/// The tiling decisions for one GEMM `P(m×n) = L(m×k)·R(k×n)`: output
+/// rows in `tile_m`-blocks, output columns in `tile_n`-blocks, the
+/// inner `k` dimension in `tile_k`-chunks.
+///
+/// Both tilers in the crate consume this one type: the scheduler plans
+/// `D_m × D_n × D_k` hardware tiles ([`crate::scheduler::plan()`]) and
+/// the software kernel walks `tile_m × tile_n` cache blocks
+/// ([`crate::kernel::gemm_tiled_with`]) — the `ceil`-division and span
+/// arithmetic is written here exactly once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TilePlan {
+    /// Output rows (`m`) in `tile_m`-blocks.
+    pub rows: BlockSplit,
+    /// Output columns (`n`) in `tile_n`-blocks.
+    pub cols: BlockSplit,
+    /// Inner dimension (`k`) in `tile_k`-chunks.
+    pub depth: BlockSplit,
+}
+
+impl TilePlan {
+    pub fn new(
+        m: usize,
+        n: usize,
+        k: usize,
+        tile_m: usize,
+        tile_n: usize,
+        tile_k: usize,
+    ) -> TilePlan {
+        TilePlan {
+            rows: BlockSplit::new(m, tile_m),
+            cols: BlockSplit::new(n, tile_n),
+            depth: BlockSplit::new(k, tile_k),
+        }
+    }
+
+    /// Output row tiles: `ceil(m / tile_m)`.
+    pub fn row_tiles(&self) -> usize {
+        self.rows.count()
+    }
+
+    /// Output column tiles: `ceil(n / tile_n)`.
+    pub fn col_tiles(&self) -> usize {
+        self.cols.count()
+    }
+
+    /// Inner-dimension chunks: `ceil(k / tile_k)`.
+    pub fn k_chunks(&self) -> usize {
+        self.depth.count()
+    }
+
+    /// Result-tile commits a full walk performs (= row × column tiles).
+    pub fn commits(&self) -> usize {
+        self.row_tiles() * self.col_tiles()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_split_counts_and_spans() {
+        let s = BlockSplit::new(10, 4);
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.span(0), 0..4);
+        assert_eq!(s.span(1), 4..8);
+        assert_eq!(s.span(2), 8..10);
+        assert_eq!(s.len_of(2), 2);
+        assert_eq!(BlockSplit::new(0, 4).count(), 0);
+        assert_eq!(BlockSplit::new(4, 4).count(), 1);
+    }
+
+    #[test]
+    fn block_split_covers_exactly() {
+        for (total, block) in [(1, 1), (7, 3), (64, 8), (65, 8), (100, 64)] {
+            let s = BlockSplit::new(total, block);
+            let mut next = 0;
+            for span in s.iter() {
+                assert_eq!(span.start, next, "contiguous");
+                assert!(!span.is_empty());
+                next = span.end;
+            }
+            assert_eq!(next, total, "exhaustive");
+        }
+    }
+
+    #[test]
+    fn even_split_balanced() {
+        let s = EvenSplit::new(10, 4);
+        let lens: Vec<usize> = s.iter().map(|r| r.len()).collect();
+        assert_eq!(lens, vec![3, 3, 2, 2]);
+        assert_eq!(s.span(0), 0..3);
+        assert_eq!(s.span(3), 8..10);
+    }
+
+    #[test]
+    fn even_split_clamps_parts() {
+        assert_eq!(EvenSplit::new(3, 8).count(), 3); // no empty pieces
+        assert_eq!(EvenSplit::new(3, 0).count(), 1);
+        assert_eq!(EvenSplit::new(0, 4).count(), 1);
+        assert_eq!(EvenSplit::new(0, 4).span(0), 0..0);
+    }
+
+    #[test]
+    fn even_split_covers_exactly() {
+        for (total, parts) in [(1, 1), (10, 3), (64, 8), (65, 8), (7, 7)] {
+            let s = EvenSplit::new(total, parts);
+            let mut next = 0;
+            let mut min = usize::MAX;
+            let mut max = 0;
+            for span in s.iter() {
+                assert_eq!(span.start, next);
+                min = min.min(span.len());
+                max = max.max(span.len());
+                next = span.end;
+            }
+            assert_eq!(next, total);
+            assert!(max - min <= 1, "sizes differ by at most one");
+        }
+    }
+
+    #[test]
+    fn tile_plan_matches_ceil_division() {
+        let t = TilePlan::new(5, 3, 100, 2, 2, 64);
+        assert_eq!(t.row_tiles(), 3);
+        assert_eq!(t.col_tiles(), 2);
+        assert_eq!(t.k_chunks(), 2);
+        assert_eq!(t.commits(), 6);
+        assert_eq!(t.rows.span(2), 4..5);
+    }
+}

@@ -22,6 +22,7 @@ use super::{Overlap, PlaneList};
 use crate::api::BismoError;
 use crate::arch::BismoConfig;
 use crate::isa::{ExecuteRun, FetchRun, Instr, Program, ResultRun, Stage, SyncChannel};
+use crate::partition::BlockSplit;
 
 /// IR: one fetch round (a set of RunFetch instructions that execute as a
 /// unit and are acknowledged by a single FetchToExecute token).
@@ -77,12 +78,6 @@ fn check_block(bytes: u64) -> Result<u32, BismoError> {
     Ok(bytes as u32)
 }
 
-/// Rows of output tile `t` (0-based) for dimension size `total`, tile
-/// height `d`.
-fn tile_span(t: usize, d: usize, total: usize) -> usize {
-    (total - t * d).min(d)
-}
-
 #[allow(clippy::too_many_arguments)]
 fn build_rhs_resident(
     job: &MatmulJob,
@@ -94,8 +89,7 @@ fn build_rhs_resident(
     tiles_per_group: usize,
 ) -> Result<(Vec<FetchRound>, Vec<ExecRound>), BismoError> {
     let dm = cfg.dm as usize;
-    let dn = cfg.dn as usize;
-    let kc = plan.kc as u32;
+    let kc = plan.kc() as u32;
     let regions = if overlap == Overlap::Full { 2 } else { 1 };
     let region_words = (cfg.bm as usize) / regions;
     let dist = regions; // LHS region reuse distance in rounds
@@ -105,15 +99,16 @@ fn build_rhs_resident(
     let groups = plan.groups();
     for g in 0..groups {
         let tn_lo = g * tiles_per_group;
-        let tn_hi = ((g + 1) * tiles_per_group).min(plan.tn);
+        let tn_hi = ((g + 1) * tiles_per_group).min(plan.tn());
 
         // RHS group fetch round: all planes of all tiles in the group.
         let mut rhs_instrs = Vec::new();
         for (u, tn) in (tn_lo..tn_hi).enumerate() {
-            let cols = tile_span(tn, dn, job.n);
+            let cspan = plan.tiles.cols.span(tn);
+            let cols = cspan.len();
             for (j_idx, &(pj, _)) in rhs_planes.planes.iter().enumerate() {
                 rhs_instrs.push(FetchRun {
-                    dram_base: job.rhs.addr(pj, tn * dn, 0),
+                    dram_base: job.rhs.addr(pj, cspan.start, 0),
                     block_bytes: check_block(job.rhs.row_bytes())?,
                     block_stride_bytes: check_block(job.rhs.row_bytes())?,
                     num_blocks: cols as u32,
@@ -128,19 +123,20 @@ fn build_rhs_resident(
             instrs: rhs_instrs,
             // The previous group's RHS data is in use until its last
             // execute round completes.
-            requires_exec: if g > 0 { Some(g * plan.tm - 1) } else { None },
+            requires_exec: if g > 0 { Some(g * plan.tm() - 1) } else { None },
         });
 
-        for tm_i in 0..plan.tm {
-            let l_global = g * plan.tm + tm_i;
-            let rows = tile_span(tm_i, dm, job.m);
+        for tm_i in 0..plan.tm() {
+            let l_global = g * plan.tm() + tm_i;
+            let rspan = plan.tiles.rows.span(tm_i);
+            let rows = rspan.len();
             let region_base = ((l_global % regions) * region_words) as u32;
 
             // LHS tile fetch round (one RunFetch per scheduled plane).
             let mut lhs_instrs = Vec::new();
             for (i_idx, &(pi, _)) in lhs_planes.planes.iter().enumerate() {
                 lhs_instrs.push(FetchRun {
-                    dram_base: job.lhs.addr(pi, tm_i * dm, 0),
+                    dram_base: job.lhs.addr(pi, rspan.start, 0),
                     block_bytes: check_block(job.lhs.row_bytes())?,
                     block_stride_bytes: check_block(job.lhs.row_bytes())?,
                     num_blocks: rows as u32,
@@ -158,7 +154,8 @@ fn build_rhs_resident(
             // Execute round: one burst per resident RHS tile.
             let mut bursts = Vec::new();
             for (u, tn) in (tn_lo..tn_hi).enumerate() {
-                let cols = tile_span(tn, dn, job.n);
+                let cspan = plan.tiles.cols.span(tn);
+                let cols = cspan.len();
                 let mut execs = Vec::new();
                 let npairs = lhs_planes.len() * rhs_planes.len();
                 let mut pair = 0usize;
@@ -180,7 +177,7 @@ fn build_rhs_resident(
                     execs,
                     commit: Some(ResultRun {
                         dram_base: job.res.base,
-                        offset: (tm_i * dm * job.n + tn * dn) as u64 * 4,
+                        offset: (rspan.start * job.n + cspan.start) as u64 * 4,
                         rows: rows as u8,
                         cols: cols as u8,
                         row_stride_bytes: job.n as u32 * 4,
@@ -207,31 +204,35 @@ fn build_streaming(
     slice_chunks: usize,
 ) -> Result<(Vec<FetchRound>, Vec<ExecRound>), BismoError> {
     let dm = cfg.dm as usize;
-    let dn = cfg.dn as usize;
     let regions = if overlap == Overlap::Full { 2 } else { 1 };
     let l_region_words = (cfg.bm as usize) / regions;
     let r_region_words = (cfg.bn as usize) / regions;
     let dist = regions;
-    let slices = plan.slices();
+    // The k-slice walk is itself a block split of the chunk axis.
+    let kslices = BlockSplit::new(plan.kc(), slice_chunks);
+    let slices = kslices.count();
+    debug_assert_eq!(slices, plan.slices());
     let wpc = job.lhs.words_per_chunk as u64;
 
     let mut fetch_rounds = Vec::new();
     let mut exec_rounds = Vec::new();
     let mut round = 0usize;
-    for tm_i in 0..plan.tm {
-        let rows = tile_span(tm_i, dm, job.m);
-        for tn_i in 0..plan.tn {
-            let cols = tile_span(tn_i, dn, job.n);
+    for tm_i in 0..plan.tm() {
+        let rspan = plan.tiles.rows.span(tm_i);
+        let rows = rspan.len();
+        for tn_i in 0..plan.tn() {
+            let cspan = plan.tiles.cols.span(tn_i);
+            let cols = cspan.len();
             for s in 0..slices {
-                let c0 = s * slice_chunks;
-                let sc = (plan.kc - c0).min(slice_chunks);
+                let kspan = kslices.span(s);
+                let (c0, sc) = (kspan.start, kspan.len());
                 let l_base = ((round % regions) * l_region_words) as u32;
                 let r_base = ((round % regions) * r_region_words) as u32;
 
                 let mut instrs = Vec::new();
                 for (i_idx, &(pi, _)) in lhs_planes.planes.iter().enumerate() {
                     instrs.push(FetchRun {
-                        dram_base: job.lhs.addr(pi, tm_i * dm, c0),
+                        dram_base: job.lhs.addr(pi, rspan.start, c0),
                         block_bytes: check_block(sc as u64 * wpc * 8)?,
                         block_stride_bytes: check_block(job.lhs.row_bytes())?,
                         num_blocks: rows as u32,
@@ -243,7 +244,7 @@ fn build_streaming(
                 }
                 for (j_idx, &(pj, _)) in rhs_planes.planes.iter().enumerate() {
                     instrs.push(FetchRun {
-                        dram_base: job.rhs.addr(pj, tn_i * dn, c0),
+                        dram_base: job.rhs.addr(pj, cspan.start, c0),
                         block_bytes: check_block(sc as u64 * wpc * 8)?,
                         block_stride_bytes: check_block(job.rhs.row_bytes())?,
                         num_blocks: cols as u32,
@@ -281,7 +282,7 @@ fn build_streaming(
                 let commit = if s + 1 == slices {
                     Some(ResultRun {
                         dram_base: job.res.base,
-                        offset: (tm_i * dm * job.n + tn_i * dn) as u64 * 4,
+                        offset: (rspan.start * job.n + cspan.start) as u64 * 4,
                         rows: rows as u8,
                         cols: cols as u8,
                         row_stride_bytes: job.n as u32 * 4,

@@ -1,9 +1,16 @@
-//! Tiling and schedule-mode selection.
+//! Schedule-mode selection over the shared tiling plan.
+//!
+//! The tiling arithmetic itself — how `m`, `n` and `k` divide into
+//! `D_m × D_n × D_k` tiles — lives in [`crate::partition::TilePlan`];
+//! this module decides what the overlay *does* with those tiles
+//! (RHS-resident grouping vs `k`-sliced streaming) under the buffer
+//! capacities of a [`BismoConfig`].
 
 use crate::api::BismoError;
 use crate::arch::BismoConfig;
 use crate::bitmatrix::dram::{OperandLayout, ResultLayout};
 use crate::coordinator::Precision;
+use crate::partition::TilePlan;
 use crate::util::ceil_div;
 
 /// A matrix multiplication job: `P(m×n) = L(m×k) · R(k×n)`, with the
@@ -104,28 +111,47 @@ pub enum Mode {
     Streaming { slice_chunks: usize },
 }
 
-/// The tiling decisions for one job on one configuration.
+/// The scheduling decisions for one job on one configuration: the
+/// shared [`TilePlan`] (hardware-tile geometry) plus the chosen
+/// [`Mode`] and the effective plane counts.
 #[derive(Clone, Copy, Debug)]
 pub struct Plan {
     pub mode: Mode,
-    /// Output row tiles: `ceil(m / D_m)`.
-    pub tm: usize,
-    /// Output column tiles: `ceil(n / D_n)`.
-    pub tn: usize,
-    /// `k` chunks per full dot product: `ceil(k / D_k)`.
-    pub kc: usize,
-    /// Result-tile commits the schedule will perform (= `tm · tn`).
-    pub commits: usize,
+    /// The `D_m × D_n × D_k` tiling of the job — the same
+    /// [`TilePlan`] abstraction the software kernel tiler consumes.
+    pub tiles: TilePlan,
     /// Effective plane counts being scheduled.
     pub lhs_planes: u32,
     pub rhs_planes: u32,
 }
 
 impl Plan {
+    /// Output row tiles: `ceil(m / D_m)`.
+    pub fn tm(&self) -> usize {
+        self.tiles.row_tiles()
+    }
+
+    /// Output column tiles: `ceil(n / D_n)`.
+    pub fn tn(&self) -> usize {
+        self.tiles.col_tiles()
+    }
+
+    /// `k` chunks per full dot product: `ceil(k / D_k)`.
+    pub fn kc(&self) -> usize {
+        self.tiles.k_chunks()
+    }
+
+    /// Result-tile commits the schedule will perform (= `tm · tn`).
+    pub fn commits(&self) -> usize {
+        self.tiles.commits()
+    }
+
     /// Number of RHS-resident groups (`RhsResident` mode), else 0.
     pub fn groups(&self) -> usize {
         match self.mode {
-            Mode::RhsResident { tiles_per_group } => ceil_div(self.tn as u64, tiles_per_group as u64) as usize,
+            Mode::RhsResident { tiles_per_group } => {
+                ceil_div(self.tn() as u64, tiles_per_group as u64) as usize
+            }
             Mode::Streaming { .. } => 0,
         }
     }
@@ -134,7 +160,9 @@ impl Plan {
     pub fn slices(&self) -> usize {
         match self.mode {
             Mode::RhsResident { .. } => 1,
-            Mode::Streaming { slice_chunks } => ceil_div(self.kc as u64, slice_chunks as u64) as usize,
+            Mode::Streaming { slice_chunks } => {
+                ceil_div(self.kc() as u64, slice_chunks as u64) as usize
+            }
         }
     }
 }
@@ -156,9 +184,17 @@ pub fn plan(
                 .into(),
         ));
     }
-    let tm = ceil_div(job.m as u64, cfg.dm as u64) as usize;
-    let tn = ceil_div(job.n as u64, cfg.dn as u64) as usize;
-    let kc = ceil_div(job.k as u64, cfg.dk as u64) as usize;
+    // The tile geometry comes from the shared partition layer — the
+    // same arithmetic the software kernel's tiler uses.
+    let tiles = TilePlan::new(
+        job.m,
+        job.n,
+        job.k,
+        cfg.dm as usize,
+        cfg.dn as usize,
+        cfg.dk as usize,
+    );
+    let (tn, kc) = (tiles.col_tiles(), tiles.k_chunks());
 
     let lhs_words_needed = lhs_planes as usize * kc; // per LHS buffer, per m-tile
     let rhs_words_needed = rhs_planes as usize * kc; // per RHS buffer, per n-tile
@@ -201,10 +237,7 @@ pub fn plan(
 
     Ok(Plan {
         mode,
-        tm,
-        tn,
-        kc,
-        commits: tm * tn,
+        tiles,
         lhs_planes,
         rhs_planes,
     })
@@ -237,10 +270,10 @@ mod tests {
         let cfg = BismoConfig::small(); // 2×64×2, bm=bn=1024
         let job = mk_job(4, 256, 4, 2, 2, 64);
         let p = plan(&job, &cfg, 2, 2).unwrap();
-        assert_eq!(p.tm, 2);
-        assert_eq!(p.tn, 2);
-        assert_eq!(p.kc, 4);
-        assert_eq!(p.commits, 4);
+        assert_eq!(p.tm(), 2);
+        assert_eq!(p.tn(), 2);
+        assert_eq!(p.kc(), 4);
+        assert_eq!(p.commits(), 4);
         match p.mode {
             Mode::RhsResident { tiles_per_group } => {
                 // 1024 / (2 planes · 4 chunks) = 128, capped at tn = 2.
@@ -308,8 +341,10 @@ mod tests {
         let cfg = BismoConfig::small(); // 2×2 DPA
         let job = mk_job(5, 100, 3, 1, 1, 64);
         let p = plan(&job, &cfg, 1, 1).unwrap();
-        assert_eq!(p.tm, 3); // ceil(5/2)
-        assert_eq!(p.tn, 2); // ceil(3/2)
-        assert_eq!(p.kc, 2); // ceil(100/64)
+        assert_eq!(p.tm(), 3); // ceil(5/2)
+        assert_eq!(p.tn(), 2); // ceil(3/2)
+        assert_eq!(p.kc(), 2); // ceil(100/64)
+        // The hardware tile spans come from the shared partition layer.
+        assert_eq!(p.tiles.rows.span(2), 4..5);
     }
 }

@@ -17,18 +17,20 @@ use super::execute::ExecuteUnit;
 use super::fetch::FetchUnit;
 use super::result::ResultUnit;
 use super::{RunStats, TokenFifo};
+use crate::api::BismoError;
 use crate::arch::{BismoConfig, Platform};
 use crate::bitmatrix::dram::DramImage;
 use crate::isa::{Instr, Program, Stage, SyncChannel};
 use crate::util::ceil_div;
 
-/// Simulation failure modes.
+/// Run-time simulation failure modes. Invalid configurations and
+/// illegal programs never reach the simulator as `SimError`s: they are
+/// rejected up front as [`crate::api::BismoError::InvalidConfig`] /
+/// [`crate::api::BismoError::IllegalProgram`] — the structured variants
+/// the rest of the crate uses — so no stringly-typed validation error
+/// crosses a public boundary.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SimError {
-    /// Configuration rejected by `BismoConfig::validate`.
-    BadConfig(String),
-    /// Program rejected by `Program::validate`.
-    BadProgram(String),
     /// No stage can make progress but instructions remain.
     Deadlock {
         /// (stage, next-pc, description of what it is blocked on)
@@ -45,8 +47,6 @@ pub enum SimError {
 impl std::fmt::Display for SimError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            SimError::BadConfig(m) => write!(f, "bad config: {m}"),
-            SimError::BadProgram(m) => write!(f, "bad program: {m}"),
             SimError::Deadlock { blocked } => {
                 write!(f, "deadlock:")?;
                 for (s, pc, what) in blocked {
@@ -106,11 +106,14 @@ struct StageState {
 }
 
 impl Simulation {
-    pub fn new(cfg: BismoConfig, platform: &Platform, dram: DramImage) -> Result<Self, SimError> {
-        cfg.validate().map_err(|e| match e {
-            crate::api::BismoError::InvalidConfig(m) => SimError::BadConfig(m),
-            other => SimError::BadConfig(other.to_string()),
-        })?;
+    /// Build one instance. The configuration is validated first; a bad
+    /// one is rejected as [`BismoError::InvalidConfig`].
+    pub fn new(
+        cfg: BismoConfig,
+        platform: &Platform,
+        dram: DramImage,
+    ) -> Result<Self, BismoError> {
+        cfg.validate()?;
         Ok(Simulation {
             fetch_unit: FetchUnit {
                 timing: DmaTiming::fetch(&cfg, platform),
@@ -174,12 +177,11 @@ impl Simulation {
         SyncChannel::ALL.map(|ch| (ch, self.fifos[fifo_idx(ch)].max_depth))
     }
 
-    /// Run a program to completion.
-    pub fn run(&mut self, prog: &Program) -> Result<RunStats, SimError> {
-        prog.validate().map_err(|e| match e {
-            crate::api::BismoError::IllegalProgram(m) => SimError::BadProgram(m),
-            other => SimError::BadProgram(other.to_string()),
-        })?;
+    /// Run a program to completion. Illegal programs are rejected up
+    /// front as [`BismoError::IllegalProgram`]; run-time deadlocks and
+    /// stage faults surface as [`BismoError::SimFault`].
+    pub fn run(&mut self, prog: &Program) -> Result<RunStats, BismoError> {
+        prog.validate()?;
         let mut stats = RunStats::default();
         let mut st = [
             StageState { pc: 0, t: 0 },
@@ -282,7 +284,7 @@ impl Simulation {
                         (stage_of[s].name(), st[s].pc, what)
                     })
                     .collect();
-                return Err(SimError::Deadlock { blocked });
+                return Err(SimError::Deadlock { blocked }.into());
             }
         }
 
@@ -416,7 +418,7 @@ mod tests {
         p.push(Stage::Execute, Instr::Signal(SyncChannel::ExecuteToFetch));
         let mut sim = Simulation::new(cfg(), &PYNQ_Z1, DramImage::new(64)).unwrap();
         match sim.run(&p) {
-            Err(SimError::Deadlock { blocked }) => {
+            Err(BismoError::SimFault(SimError::Deadlock { blocked })) => {
                 assert_eq!(blocked.len(), 2);
             }
             other => panic!("expected deadlock, got {other:?}"),
@@ -438,7 +440,9 @@ mod tests {
         );
         let mut sim = Simulation::new(cfg(), &PYNQ_Z1, DramImage::new(64)).unwrap();
         match sim.run(&p) {
-            Err(SimError::Fault { stage, .. }) => assert_eq!(stage, "result"),
+            Err(BismoError::SimFault(SimError::Fault { stage, .. })) => {
+                assert_eq!(stage, "result")
+            }
             other => panic!("expected fault, got {other:?}"),
         }
     }
@@ -448,7 +452,7 @@ mod tests {
         let mut p = Program::new();
         p.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
         let mut sim = Simulation::new(cfg(), &PYNQ_Z1, DramImage::new(64)).unwrap();
-        assert!(matches!(sim.run(&p), Err(SimError::BadProgram(_))));
+        assert!(matches!(sim.run(&p), Err(BismoError::IllegalProgram(_))));
     }
 
     #[test]

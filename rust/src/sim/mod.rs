@@ -17,7 +17,10 @@
 //!
 //! Illegal schedules are detected, not silently mis-simulated: token
 //! deadlock, result-buffer over/underflow and out-of-range buffer
-//! accesses all return [`SimError`].
+//! accesses all surface as [`SimError`] (wrapped in
+//! [`crate::api::BismoError::SimFault`]); invalid configurations and
+//! malformed programs are rejected up front with the typed
+//! `InvalidConfig` / `IllegalProgram` variants.
 
 mod buffers;
 mod dram;

@@ -147,6 +147,50 @@ fn serve_bench_quick_writes_json_with_percentiles_and_cache_win() {
 }
 
 #[test]
+fn shard_bench_quick_writes_scaling_curve() {
+    let out = std::env::temp_dir().join(format!("bismo_shard_{}.json", std::process::id()));
+    let out_str = out.to_str().unwrap().to_string();
+    // Tiny workload: this test checks plumbing and schema, not scaling.
+    let (ok, text) = bismo(&[
+        "shard-bench", "--quick", "--m", "32", "--k", "256", "--n", "32", "--reps", "2",
+        "--max-shards", "2", "--out", &out_str,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("speedup"), "{text}");
+    assert!(text.contains("auto under budget"), "{text}");
+    let json = std::fs::read_to_string(&out).expect("shard bench json written");
+    let _ = std::fs::remove_file(&out);
+    let doc = bismo::util::Json::parse(&json).expect("valid json");
+    assert_eq!(
+        doc.get("schema").and_then(|s| s.as_str()),
+        Some("bismo-bench-shard/v1")
+    );
+    assert_eq!(doc.get("mode").and_then(|s| s.as_str()), Some("quick"));
+    let entries = doc.get("entries").and_then(|e| e.as_arr()).expect("entries");
+    assert!(entries.len() >= 2, "{json}");
+    for e in entries {
+        for key in [
+            "shards",
+            "grid_rows",
+            "grid_cols",
+            "median_ns",
+            "gops",
+            "speedup_vs_single",
+        ] {
+            assert!(e.get(key).is_some(), "entry missing {key}: {json}");
+        }
+    }
+    // The single-shard entry anchors the curve at speedup 1.0.
+    let first = &entries[0];
+    assert_eq!(first.get("shards").and_then(|v| v.as_f64()), Some(1.0));
+    let auto = doc.get("auto").expect("auto");
+    for key in ["shards", "dm", "dk", "dn", "total_luts", "total_brams"] {
+        assert!(auto.get(key).is_some(), "auto missing {key}: {json}");
+    }
+    assert!(doc.get("headline").and_then(|h| h.get("best_speedup")).is_some());
+}
+
+#[test]
 fn unknown_instance_is_a_clean_error_not_a_panic() {
     // `try_instance` behind the CLI: a bad Table IV id must exit 1 with
     // a typed-error message, not a panic/abort backtrace.

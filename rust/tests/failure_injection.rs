@@ -1,6 +1,7 @@
 //! Failure injection: broken schedules and abusive configurations must
 //! be *diagnosed*, not silently mis-simulated.
 
+use bismo::api::BismoError;
 use bismo::arch::{BismoConfig, PYNQ_Z1};
 use bismo::bitmatrix::dram::DramImage;
 use bismo::isa::{ExecuteRun, FetchRun, Instr, Program, ResultRun, Stage, SyncChannel};
@@ -34,7 +35,7 @@ fn wait_without_signal_deadlocks_with_diagnosis() {
     p.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
     p.push(Stage::Execute, Instr::Signal(SyncChannel::ExecuteToFetch));
     match sim().run(&p) {
-        Err(SimError::Deadlock { blocked }) => {
+        Err(BismoError::SimFault(SimError::Deadlock { blocked })) => {
             let msg = format!("{blocked:?}");
             assert!(msg.contains("fetch") && msg.contains("execute"), "{msg}");
             assert!(msg.contains("waiting on"), "{msg}");
@@ -67,7 +68,7 @@ fn result_buffer_overflow_detected() {
     // Force the engine to run all execute instructions before result
     // (fetch->execute->result priority does this already).
     match sim().run(&p) {
-        Err(SimError::Fault { stage, msg, .. }) => {
+        Err(BismoError::SimFault(SimError::Fault { stage, msg, .. })) => {
             assert_eq!(stage, "execute");
             assert!(msg.contains("overflow"), "{msg}");
         }
@@ -92,7 +93,7 @@ fn fetch_out_of_buffer_range_detected() {
         }),
     );
     match sim().run(&p) {
-        Err(SimError::Fault { stage, msg, .. }) => {
+        Err(BismoError::SimFault(SimError::Fault { stage, msg, .. })) => {
             assert_eq!(stage, "fetch");
             assert!(msg.contains("out of range"), "{msg}");
         }
@@ -105,7 +106,9 @@ fn execute_past_buffer_depth_detected() {
     let mut p = Program::new();
     p.push(Stage::Execute, exec(5000, false)); // bm = 1024
     match sim().run(&p) {
-        Err(SimError::Fault { stage, .. }) => assert_eq!(stage, "execute"),
+        Err(BismoError::SimFault(SimError::Fault { stage, .. })) => {
+            assert_eq!(stage, "execute")
+        }
         other => panic!("expected execute fault, got {other:?}"),
     }
 }
@@ -114,9 +117,11 @@ fn execute_past_buffer_depth_detected() {
 fn illegal_queue_placement_rejected() {
     let mut p = Program::new();
     p.push(Stage::Result, exec(1, false)); // RunExecute in result queue
+    // Program validation surfaces the structured IllegalProgram variant
+    // directly — no stringly-typed sim error wrapping it.
     match sim().run(&p) {
-        Err(SimError::BadProgram(msg)) => assert!(msg.contains("result queue"), "{msg}"),
-        other => panic!("expected BadProgram, got {other:?}"),
+        Err(BismoError::IllegalProgram(msg)) => assert!(msg.contains("result queue"), "{msg}"),
+        other => panic!("expected IllegalProgram, got {other:?}"),
     }
 }
 
@@ -161,8 +166,8 @@ fn bad_config_rejected_before_running() {
         ..cfg()
     };
     match Simulation::new(bad, &PYNQ_Z1, DramImage::new(64)) {
-        Err(SimError::BadConfig(msg)) => assert!(msg.contains("power of two"), "{msg}"),
-        other => panic!("expected BadConfig, got {:?}", other.err()),
+        Err(BismoError::InvalidConfig(msg)) => assert!(msg.contains("power of two"), "{msg}"),
+        other => panic!("expected InvalidConfig, got {:?}", other.err()),
     }
 }
 

@@ -4,15 +4,11 @@
 //! ragged shapes — and the pooled batch runner preserves ordering and
 //! per-job results.
 
-// `gemm_tiled_parallel` is a deprecated shim (use `bismo::api::Session`
-// or `gemm_tiled_with`); it stays covered here until it is removed.
-#![allow(deprecated)]
-
 use bismo::arch::BismoConfig;
 use bismo::baseline::{gemm_bitserial, gemm_bitserial_parallel};
 use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
 use bismo::coordinator::{BismoBatchRunner, BismoContext, MatmulOptions, Precision};
-use bismo::kernel::{gemm_tiled, gemm_tiled_parallel, gemm_tiled_with, KernelConfig, WorkerPool};
+use bismo::kernel::{gemm_tiled, gemm_tiled_with, KernelConfig, WorkerPool};
 use bismo::util::{property_sweep, Rng};
 
 /// Random matrix with controllable plane sparsity: `mode 0` = dense,
@@ -98,9 +94,13 @@ fn parallel_paths_match_serial_on_shared_pool() {
         let la = BitSerialMatrix::from_int(&a, 3, true);
         let rb = BitSerialMatrix::from_int_transposed(&b, 3, true);
         let serial = gemm_bitserial(&la, &rb);
+        let cfg = KernelConfig::default();
         for threads in [1, 2, 3, 8] {
             assert_eq!(gemm_bitserial_parallel(&la, &rb, threads), serial);
-            assert_eq!(gemm_tiled_parallel(&la, &rb, threads), serial);
+            assert_eq!(
+                gemm_tiled_with(&la, &rb, &cfg, Some((WorkerPool::global(), threads))),
+                serial
+            );
         }
     });
 }
