@@ -1,0 +1,450 @@
+//! [`ConvBuilder`], [`PreparedConv`] and [`ConvResponse`]: the
+//! convolution entry points of the facade.
+//!
+//! A conv job is validated like a matmul job — spec, precision and
+//! sharding checked *before* anything is queued — then lowered
+//! ([`crate::lowering`]) and served through the same
+//! [`crate::coordinator::BismoService`] machinery as every GEMM:
+//! micro-batched worker lanes, per-request backend selection, the
+//! weight-stationary packing cache (lowered weight matrices are the
+//! cached side), and optional multi-instance sharding.
+
+use super::session::Session;
+use super::BismoError;
+use crate::bitmatrix::IntMatrix;
+use crate::coordinator::{
+    Backend, GemmResponse, Precision, RequestHandle, RequestOptions, Sharding,
+};
+use crate::lowering::{
+    kn2row_tap_weights, pack_im2col, pack_kn2row_tap, ConvSpec, LoweringMode, Tensor,
+};
+use crate::partition::GemmShape;
+use std::sync::Arc;
+
+/// Everything a completed convolution reports back.
+#[derive(Clone, Debug)]
+pub struct ConvResponse {
+    /// The `batch × out_h × out_w × out_c` output tensor (raw
+    /// accumulators; requantization is the caller's layer logic).
+    pub output: Tensor,
+    /// The underlying GEMM responses: one for im2col, `kh·kw` (one per
+    /// kernel tap) for kn2row. Carries timing, cache attribution and —
+    /// on the sim backend — the per-GEMM [`crate::coordinator::RunReport`]s.
+    pub gemms: Vec<GemmResponse>,
+    /// Shape of one lowered GEMM ([`ConvSpec::gemm_shape`] for im2col,
+    /// [`ConvSpec::kn2row_shape`] for kn2row).
+    pub shape: GemmShape,
+    /// The lowering that produced this response.
+    pub mode: LoweringMode,
+}
+
+impl ConvResponse {
+    /// Total simulated cycles across the layer's GEMMs (sim backend;
+    /// 0 on the engine backend). Kn2row taps execute concurrently in
+    /// reality, so this is the *work*, not the makespan.
+    pub fn sim_cycles(&self) -> u64 {
+        self.gemms
+            .iter()
+            .filter_map(|g| g.report.as_ref().map(|r| r.cycles))
+            .sum()
+    }
+
+    /// Whether every weight-side packing came from the cache.
+    pub fn weights_cached(&self) -> bool {
+        self.gemms.iter().all(|g| g.rhs_cached)
+    }
+}
+
+/// Per-job convolution configuration, built off [`Session::conv`].
+/// Mirrors [`super::MatmulBuilder`]: knob methods chain, terminal
+/// methods ([`ConvBuilder::run`], [`ConvBuilder::prepare`]) take
+/// `&self`, and [`ConvBuilder::build`] validates everything before any
+/// work is queued.
+#[derive(Clone, Copy)]
+pub struct ConvBuilder<'s> {
+    session: &'s Session,
+    spec: ConvSpec,
+    prec: Precision,
+    mode: LoweringMode,
+    opts: RequestOptions,
+}
+
+impl Session {
+    /// Begin configuring one convolution of `input · weights` at
+    /// `prec`: activations (the lowered LHS) at `prec.wbits`, weights
+    /// (the lowered RHS) at `prec.abits`. Defaults: im2col lowering,
+    /// engine backend, weight-side caching on.
+    pub fn conv(&self, spec: ConvSpec, prec: Precision) -> ConvBuilder<'_> {
+        ConvBuilder {
+            session: self,
+            spec,
+            prec,
+            mode: LoweringMode::Im2col,
+            opts: RequestOptions::default(),
+        }
+    }
+}
+
+impl<'s> ConvBuilder<'s> {
+    /// Select the lowering: one wide im2col GEMM (default) or `kh·kw`
+    /// concurrent kn2row tap GEMMs.
+    pub fn lowering(mut self, mode: LoweringMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Select the execution backend (engine default; sim additionally
+    /// yields per-GEMM [`crate::coordinator::RunReport`]s).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.opts.backend = backend;
+        self
+    }
+
+    /// Execute each lowered GEMM across (up to) `n` overlay instances
+    /// (see [`super::MatmulBuilder::instances`]).
+    pub fn instances(mut self, n: usize) -> Self {
+        self.opts.sharding = if n == 1 {
+            Sharding::Single
+        } else {
+            Sharding::Instances(n)
+        };
+        self
+    }
+
+    /// Cross-check every lowered GEMM against the CPU bit-serial
+    /// oracle (conv-level correctness against the direct-convolution
+    /// oracle lives in the property suite).
+    pub fn verify(mut self, on: bool) -> Self {
+        self.opts.verify = on;
+        self
+    }
+
+    /// The builder's spec.
+    pub fn spec(&self) -> ConvSpec {
+        self.spec
+    }
+
+    /// Validate spec, precision and sharding without running anything.
+    pub fn build(&self) -> Result<(), BismoError> {
+        self.spec.validate()?;
+        self.prec.validate()?;
+        self.opts.sharding.validate()
+    }
+
+    /// Run one convolution synchronously.
+    pub fn run(
+        &self,
+        input: &Tensor,
+        weights: impl Into<Arc<IntMatrix>>,
+    ) -> Result<ConvResponse, BismoError> {
+        self.build()?;
+        let weights: Arc<IntMatrix> = weights.into();
+        self.spec.check_weights(&weights)?;
+        let subs = lower_weights(&self.spec, &weights, self.mode);
+        execute_conv(self.session, &self.spec, self.mode, self.prec, self.opts, input, &subs)
+    }
+
+    /// Lower `weights` and pack them into the session cache once,
+    /// returning the prepare-once-execute-many handle (the conv
+    /// counterpart of [`super::MatmulBuilder::prepare`]). Im2col
+    /// prepares one matrix; kn2row prepares each of the `kh·kw` tap
+    /// sub-matrices.
+    pub fn prepare(
+        &self,
+        weights: impl Into<Arc<IntMatrix>>,
+    ) -> Result<PreparedConv<'s>, BismoError> {
+        self.build()?;
+        if !self.opts.cache_rhs {
+            return Err(BismoError::InvalidConfig(
+                "prepare() requires weight-side caching; remove cache_rhs(false)".into(),
+            ));
+        }
+        let weights: Arc<IntMatrix> = weights.into();
+        self.spec.check_weights(&weights)?;
+        let subs = lower_weights(&self.spec, &weights, self.mode);
+        for sub in &subs {
+            self.session
+                .service()
+                .prepare_operand(sub, self.prec.abits, self.prec.rsigned, true)?;
+        }
+        Ok(PreparedConv {
+            session: self.session,
+            spec: self.spec,
+            mode: self.mode,
+            prec: self.prec,
+            opts: self.opts,
+            subs,
+        })
+    }
+}
+
+/// Conv weights lowered and packed once, executable against many input
+/// tensors — the weight-stationary serving pattern for CNN layers.
+/// Like [`super::Prepared`], evicted packings are transparently
+/// rebuilt, and [`PreparedConv::execute_with`] serves the same
+/// resident weights at a per-execute precision (the paper's
+/// variable-precision claim, per layer).
+pub struct PreparedConv<'s> {
+    session: &'s Session,
+    spec: ConvSpec,
+    mode: LoweringMode,
+    prec: Precision,
+    opts: RequestOptions,
+    /// The lowered weight matrices: one for im2col, `kh·kw` for
+    /// kn2row — `Arc`-shared with every request, never copied.
+    subs: Vec<Arc<IntMatrix>>,
+}
+
+impl PreparedConv<'_> {
+    /// The spec this handle serves.
+    pub fn spec(&self) -> ConvSpec {
+        self.spec
+    }
+
+    /// Declared precision of prepare-time packing.
+    pub fn precision(&self) -> Precision {
+        self.prec
+    }
+
+    /// Execute against one input tensor at the prepare-time precision.
+    pub fn execute(&self, input: &Tensor) -> Result<ConvResponse, BismoError> {
+        execute_conv(self.session, &self.spec, self.mode, self.prec, self.opts, input, &self.subs)
+    }
+
+    /// [`PreparedConv::execute`] with a per-execute precision override:
+    /// one resident weight tensor served at whatever precision each
+    /// request (layer pass) asks for. The first execute at a new
+    /// weight precision packs once; repeats hit the cache again.
+    pub fn execute_with(
+        &self,
+        input: &Tensor,
+        prec: Precision,
+    ) -> Result<ConvResponse, BismoError> {
+        prec.validate()?;
+        execute_conv(self.session, &self.spec, self.mode, prec, self.opts, input, &self.subs)
+    }
+}
+
+/// The lowered weight matrices of one conv layer: the full matrix for
+/// im2col, the `kh·kw` per-tap row slices for kn2row.
+fn lower_weights(
+    spec: &ConvSpec,
+    weights: &Arc<IntMatrix>,
+    mode: LoweringMode,
+) -> Vec<Arc<IntMatrix>> {
+    match mode {
+        LoweringMode::Im2col => vec![weights.clone()],
+        LoweringMode::Kn2row => (0..spec.kh)
+            .flat_map(|r| (0..spec.kw).map(move |s| (r, s)))
+            .map(|(r, s)| Arc::new(kn2row_tap_weights(weights, spec, r, s)))
+            .collect(),
+    }
+}
+
+/// The shared execute path: pack the lowered LHS directly off the
+/// input tensor (zero materialization), submit through the serving
+/// layer, reshape the product rows back into an NHWC tensor. Kn2row
+/// submits all taps before waiting on any, so the taps micro-batch
+/// across the session's worker lanes.
+fn execute_conv(
+    session: &Session,
+    spec: &ConvSpec,
+    mode: LoweringMode,
+    prec: Precision,
+    opts: RequestOptions,
+    input: &Tensor,
+    subs: &[Arc<IntMatrix>],
+) -> Result<ConvResponse, BismoError> {
+    spec.check_input(input)?;
+    if !input.fits(prec.wbits, prec.lsigned) {
+        return Err(BismoError::PrecisionUnsupported(format!(
+            "conv input entries do not fit {} {}-bit",
+            if prec.lsigned { "signed" } else { "unsigned" },
+            prec.wbits
+        )));
+    }
+    let (batch, oh, ow) = (input.n, spec.out_h(), spec.out_w());
+    let svc = session.service();
+    match mode {
+        LoweringMode::Im2col => {
+            let la = Arc::new(pack_im2col(input, spec, prec.wbits, prec.lsigned));
+            let resp = svc.submit_lowered(la, subs[0].clone(), prec, opts).wait()?;
+            let output = Tensor::from_gemm_rows(&resp.result, batch, oh, ow);
+            Ok(ConvResponse {
+                output,
+                gemms: vec![resp],
+                shape: spec.gemm_shape(batch),
+                mode,
+            })
+        }
+        LoweringMode::Kn2row => {
+            let shape = spec.kn2row_shape(batch);
+            let handles: Vec<RequestHandle> = (0..spec.kh)
+                .flat_map(|r| (0..spec.kw).map(move |s| (r, s)))
+                .zip(subs)
+                .map(|((r, s), sub)| {
+                    let la = Arc::new(pack_kn2row_tap(input, spec, r, s, prec.wbits, prec.lsigned));
+                    svc.submit_lowered(la, sub.clone(), prec, opts)
+                })
+                .collect();
+            let mut acc = IntMatrix::zeros(shape.m, shape.n);
+            let mut gemms = Vec::with_capacity(handles.len());
+            for h in handles {
+                let resp = h.wait()?;
+                for i in 0..shape.m {
+                    for j in 0..shape.n {
+                        acc.set(i, j, acc.get(i, j) + resp.result.get(i, j));
+                    }
+                }
+                gemms.push(resp);
+            }
+            let output = Tensor::from_gemm_rows(&acc, batch, oh, ow);
+            Ok(ConvResponse {
+                output,
+                gemms,
+                shape,
+                mode,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowering::conv2d_direct;
+    use crate::util::Rng;
+
+    fn session() -> Session {
+        Session::with_defaults().unwrap()
+    }
+
+    fn prec() -> Precision {
+        Precision {
+            wbits: 2,
+            abits: 3,
+            lsigned: false,
+            rsigned: true,
+        }
+    }
+
+    #[test]
+    fn conv_run_matches_direct_oracle_on_both_backends_and_modes() {
+        let s = session();
+        let mut rng = Rng::new(0xC4A);
+        let spec = ConvSpec::simple(7, 6, 3, 4, 3, 1);
+        let x = Tensor::random(&mut rng, 2, 7, 6, 3, 2, false);
+        let w = spec.weights_from_fn(|_, _, _, _| rng.operand(3, true));
+        let want = conv2d_direct(&x, &w, &spec);
+        for backend in [Backend::Engine, Backend::Sim] {
+            for mode in [LoweringMode::Im2col, LoweringMode::Kn2row] {
+                let resp = s
+                    .conv(spec, prec())
+                    .backend(backend)
+                    .lowering(mode)
+                    .verify(true)
+                    .run(&x, w.clone())
+                    .unwrap();
+                assert_eq!(resp.output, want, "{} {:?}", backend.name(), mode);
+                let expect_gemms = match mode {
+                    LoweringMode::Im2col => 1,
+                    LoweringMode::Kn2row => 9,
+                };
+                assert_eq!(resp.gemms.len(), expect_gemms);
+                if backend == Backend::Sim {
+                    assert!(resp.sim_cycles() > 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_conv_reuses_weight_packings() {
+        let s = session();
+        let mut rng = Rng::new(0xC4B);
+        let spec = ConvSpec::simple(6, 6, 2, 3, 3, 1);
+        let w = spec.weights_from_fn(|_, _, _, _| rng.operand(3, true));
+        let prepared = s.conv(spec, prec()).prepare(w.clone()).unwrap();
+        let after_prepare = s.cache_stats();
+        for i in 0..3 {
+            let x = Tensor::random(&mut rng, 1, 6, 6, 2, 2, false);
+            let resp = prepared.execute(&x).unwrap();
+            assert_eq!(resp.output, conv2d_direct(&x, &w, &spec), "execute {i}");
+            assert!(resp.weights_cached(), "execute {i} reuses the packing");
+        }
+        let after = s.cache_stats();
+        assert_eq!(after.misses, after_prepare.misses, "no repacks after prepare");
+    }
+
+    #[test]
+    fn per_execute_precision_override_is_bit_exact() {
+        let s = session();
+        let mut rng = Rng::new(0xC4C);
+        let spec = ConvSpec::simple(5, 5, 2, 2, 3, 1);
+        let w = spec.weights_from_fn(|_, _, _, _| rng.operand(2, true));
+        let x = Tensor::random(&mut rng, 1, 5, 5, 2, 2, false);
+        let want = conv2d_direct(&x, &w, &spec);
+        let base = Precision {
+            wbits: 2,
+            abits: 2,
+            lsigned: false,
+            rsigned: true,
+        };
+        let prepared = s.conv(spec, base).prepare(w).unwrap();
+        assert_eq!(prepared.execute(&x).unwrap().output, want);
+        // Serve the same resident weights at a wider declared
+        // precision: distinct cache entry, identical result.
+        let wider = Precision {
+            wbits: 3,
+            abits: 4,
+            lsigned: false,
+            rsigned: true,
+        };
+        let r = prepared.execute_with(&x, wider).unwrap();
+        assert_eq!(r.output, want, "declared headroom changes nothing");
+        let r2 = prepared.execute_with(&x, wider).unwrap();
+        assert!(r2.weights_cached(), "override precision cached after first use");
+    }
+
+    #[test]
+    fn conv_errors_are_typed_and_precede_queueing() {
+        let s = session();
+        let spec = ConvSpec::simple(6, 6, 2, 3, 3, 1);
+        let submitted = s.service().submitted();
+        // Illegal spec: pad >= kernel extent.
+        let mut bad = spec;
+        bad.pad = (3, 3);
+        let x = Tensor::zeros(1, 6, 6, 2);
+        let w = spec.weights_from_fn(|_, _, _, _| 0);
+        let r = s.conv(bad, prec()).run(&x, w.clone());
+        assert!(matches!(r, Err(BismoError::InvalidConfig(_))), "{r:?}");
+        // Zero channels.
+        let bad = ConvSpec { in_c: 0, ..spec };
+        let r = s.conv(bad, prec()).run(&x, w.clone());
+        assert!(matches!(r, Err(BismoError::InvalidConfig(_))), "{r:?}");
+        // Wrong weight layout.
+        let r = s.conv(spec, prec()).run(&x, IntMatrix::zeros(4, 3));
+        assert!(matches!(r, Err(BismoError::ShapeMismatch(_))), "{r:?}");
+        // Wrong input geometry.
+        let r = s.conv(spec, prec()).run(&Tensor::zeros(1, 5, 6, 2), w.clone());
+        assert!(matches!(r, Err(BismoError::ShapeMismatch(_))), "{r:?}");
+        // Input outside the declared activation precision.
+        let hot = Tensor::from_fn(1, 6, 6, 2, |_, _, _, _| 9);
+        let r = s.conv(spec, prec()).run(&hot, w);
+        assert!(matches!(r, Err(BismoError::PrecisionUnsupported(_))), "{r:?}");
+        assert_eq!(s.service().submitted(), submitted, "nothing was queued");
+    }
+
+    #[test]
+    fn sharded_conv_stays_exact() {
+        let s = session();
+        let mut rng = Rng::new(0xC4D);
+        let spec = ConvSpec::simple(8, 8, 2, 4, 3, 1);
+        let x = Tensor::random(&mut rng, 2, 8, 8, 2, 2, false);
+        let w = spec.weights_from_fn(|_, _, _, _| rng.operand(3, true));
+        let want = conv2d_direct(&x, &w, &spec);
+        let resp = s.conv(spec, prec()).instances(4).verify(true).run(&x, w).unwrap();
+        assert_eq!(resp.output, want);
+        assert!(resp.gemms[0].shards > 1, "the lowered GEMM actually sharded");
+    }
+}

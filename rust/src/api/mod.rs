@@ -20,6 +20,11 @@
 //!   override for variable-precision workloads (cf. the run-time
 //!   reconfigurable multi-precision designs this crate's ROADMAP
 //!   tracks).
+//! * [`ConvBuilder`] / [`PreparedConv`] — the same contract for 2-D
+//!   convolutions: a [`ConvSpec`] is validated, lowered
+//!   ([`crate::lowering`], im2col or kn2row) and served through the
+//!   identical GEMM machinery, with the lowered weight matrices as the
+//!   weight-stationary cached side.
 //!
 //! Every fallible call returns the typed [`BismoError`], so callers
 //! branch on failure kinds instead of parsing strings.
@@ -38,9 +43,11 @@
 //! # Ok::<(), bismo::api::BismoError>(())
 //! ```
 
+mod conv;
 mod error;
 mod session;
 
+pub use conv::{ConvBuilder, ConvResponse, PreparedConv};
 pub use error::BismoError;
 pub use session::{MatmulBuilder, Prepared, Session, SessionConfig};
 
@@ -50,4 +57,5 @@ pub use crate::coordinator::{
     Backend, CacheStats, GemmResponse, Precision, RequestHandle, RunReport, Sharding,
 };
 pub use crate::costmodel::ResourceBudget;
+pub use crate::lowering::{ConvSpec, LoweringMode, Tensor};
 pub use crate::scheduler::Overlap;

@@ -135,6 +135,58 @@ impl BitSerialMatrix {
         out
     }
 
+    /// Decompose a *virtual* matrix given by a value function, without
+    /// materializing it: produces exactly
+    /// `from_int(&IntMatrix::from_fn(rows, cols, f), ...)` but never
+    /// allocates the dense `i64` matrix. This is the zero-copy hook the
+    /// convolution lowering layer packs its im2col patch matrix
+    /// through ([`crate::lowering::pack_im2col`]): the patch matrix is
+    /// `kh·kw` times larger than the input tensor, so sampling it
+    /// per-element straight into packed planes skips the largest
+    /// allocation on the conv hot path. Word-wise packing, same as
+    /// [`BitSerialMatrix::from_int`]; panics if any produced value does
+    /// not fit the requested precision.
+    pub fn from_int_fn<F: FnMut(usize, usize) -> i64>(
+        rows: usize,
+        cols: usize,
+        bits: u32,
+        signed: bool,
+        mut f: F,
+    ) -> Self {
+        let (lo, hi) = if signed {
+            (-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1)
+        } else {
+            (0, ((1u128 << bits) - 1) as i64)
+        };
+        let mask = ((1u128 << bits) - 1) as u64;
+        let mut out = Self::zeros(rows, cols, bits, signed);
+        let mut words = vec![0u64; bits as usize];
+        for r in 0..rows {
+            for (wi, chunk) in (0..cols).step_by(64).enumerate() {
+                words.iter_mut().for_each(|w| *w = 0);
+                for bi in 0..(cols - chunk).min(64) {
+                    let v = f(r, chunk + bi);
+                    assert!(
+                        v >= lo && v <= hi,
+                        "matrix entry {v} does not fit {} {}-bit",
+                        if signed { "signed" } else { "unsigned" },
+                        bits
+                    );
+                    let mut p = (v as u64) & mask;
+                    while p != 0 {
+                        words[p.trailing_zeros() as usize] |= 1u64 << bi;
+                        p &= p - 1;
+                    }
+                }
+                for (i, &w) in words.iter().enumerate() {
+                    let idx = out.idx(i as u32, r, wi);
+                    out.data[idx] = w;
+                }
+            }
+        }
+        out
+    }
+
     /// Recompose to integers — exact inverse of [`BitSerialMatrix::from_int`].
     pub fn to_int(&self) -> IntMatrix {
         IntMatrix::from_fn(self.rows, self.cols, |r, c| {
@@ -289,6 +341,19 @@ mod tests {
             let fused = BitSerialMatrix::from_int_transposed(&m, bits, signed);
             let naive = BitSerialMatrix::from_int(&m.transpose(), bits, signed);
             assert_eq!(fused, naive);
+        });
+    }
+
+    #[test]
+    fn from_int_fn_equals_materialize_then_pack() {
+        property_sweep(0xF7, 20, |rng, _| {
+            let rows = rng.index(12) + 1;
+            let cols = rng.index(150) + 1; // frequently crosses word boundaries
+            let bits = rng.index(8) as u32 + 1;
+            let signed = rng.chance(0.5);
+            let m = IntMatrix::random(rng, rows, cols, bits, signed);
+            let virt = BitSerialMatrix::from_int_fn(rows, cols, bits, signed, |r, c| m.get(r, c));
+            assert_eq!(virt, BitSerialMatrix::from_int(&m, bits, signed));
         });
     }
 

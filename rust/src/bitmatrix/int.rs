@@ -153,11 +153,7 @@ impl IntMatrix {
 
     /// Does every entry fit in `bits` (signed or unsigned)?
     pub fn fits(&self, bits: u32, signed: bool) -> bool {
-        let (lo, hi) = if signed {
-            (-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1)
-        } else {
-            (0, (1i64 << bits) - 1)
-        };
+        let (lo, hi) = super::value_bounds(bits, signed);
         self.data.iter().all(|&v| v >= lo && v <= hi)
     }
 }

@@ -35,6 +35,21 @@ pub fn pair_weight(i: u32, lbits: u32, lsigned: bool, j: u32, rbits: u32, rsigne
     plane_sign(i, lbits, lsigned) * plane_sign(j, rbits, rsigned) * (1i64 << (i + j))
 }
 
+/// Inclusive value range of a `bits`-wide (optionally signed) operand —
+/// the single statement of the precision-bounds convention, shared by
+/// every range check ([`IntMatrix::fits`],
+/// [`crate::lowering::Tensor::fits`]) so they cannot drift from one
+/// another. `bits` must be in `1..=32` (the packers' supported range).
+#[inline]
+pub fn value_bounds(bits: u32, signed: bool) -> (i64, i64) {
+    debug_assert!(bits >= 1 && bits <= 32);
+    if signed {
+        (-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1)
+    } else {
+        (0, (1i64 << bits) - 1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

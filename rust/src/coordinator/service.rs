@@ -467,8 +467,21 @@ struct Inner {
     completed: AtomicU64,
 }
 
+/// The LHS of a queued job: a dense matrix the service packs (and may
+/// cache), or an operand the caller already bit-plane-decomposed —
+/// the convolution lowering layer's zero-materialization path, where
+/// the im2col patch matrix is packed straight off the input tensor and
+/// a dense LHS never exists ([`BismoService::submit_lowered`]).
+enum LhsOperand {
+    Dense(Arc<IntMatrix>),
+    Packed(Arc<BitSerialMatrix>),
+}
+
 struct Pending {
-    req: GemmRequest,
+    lhs: LhsOperand,
+    rhs: Arc<IntMatrix>,
+    prec: Precision,
+    opts: RequestOptions,
     slot: Arc<Slot>,
     since: Instant,
 }
@@ -542,9 +555,47 @@ impl BismoService {
     /// entries are caught at packing time (the scan is skipped on
     /// cache hits, so reused weights are not rescanned per request).
     pub fn submit(&self, req: GemmRequest) -> RequestHandle {
+        let check = validate(&req);
+        let GemmRequest { a, b, prec, opts } = req;
+        self.enqueue(LhsOperand::Dense(a), b, prec, opts, check)
+    }
+
+    /// Enqueue one GEMM whose LHS the caller already bit-plane
+    /// decomposed (`la` in the [`BitSerialMatrix::from_int`] layout,
+    /// `m×k`). This is the convolution lowering layer's entry point:
+    /// [`crate::lowering::pack_im2col`] builds the patch matrix's
+    /// planes directly from the input tensor, so no dense LHS exists
+    /// to hand to [`BismoService::submit`]. The packed LHS bypasses
+    /// the packing cache (it is request-specific by construction);
+    /// the dense RHS is cached as usual — the weight-stationary side
+    /// of a lowered conv layer.
+    ///
+    /// The declared precision must match the packing: `la.bits ==
+    /// prec.wbits` and `la.signed == prec.lsigned`, checked before
+    /// anything is queued.
+    pub fn submit_lowered(
+        &self,
+        la: Arc<BitSerialMatrix>,
+        b: impl Into<Arc<IntMatrix>>,
+        prec: Precision,
+        opts: RequestOptions,
+    ) -> RequestHandle {
+        let b: Arc<IntMatrix> = b.into();
+        let check = validate_lowered(&la, &b, &prec, &opts);
+        self.enqueue(LhsOperand::Packed(la), b, prec, opts, check)
+    }
+
+    fn enqueue(
+        &self,
+        lhs: LhsOperand,
+        rhs: Arc<IntMatrix>,
+        prec: Precision,
+        opts: RequestOptions,
+        check: Result<(), BismoError>,
+    ) -> RequestHandle {
         let slot = Arc::new(Slot::default());
         let handle = RequestHandle { slot: slot.clone() };
-        if let Err(e) = validate(&req) {
+        if let Err(e) = check {
             slot.fill(Err(e));
             return handle;
         }
@@ -560,7 +611,10 @@ impl BismoService {
             }
             self.inner.submitted.fetch_add(1, Ordering::SeqCst);
             q.push_back(Pending {
-                req,
+                lhs,
+                rhs,
+                prec,
+                opts,
                 slot,
                 since: Instant::now(),
             });
@@ -677,6 +731,35 @@ fn validate(req: &GemmRequest) -> Result<(), BismoError> {
     req.prec.validate()
 }
 
+/// [`validate`] for a pre-packed LHS ([`BismoService::submit_lowered`]):
+/// the packing must agree with the declared precision, or the product
+/// would silently be computed at the wrong width.
+fn validate_lowered(
+    la: &BitSerialMatrix,
+    b: &IntMatrix,
+    prec: &Precision,
+    opts: &RequestOptions,
+) -> Result<(), BismoError> {
+    if la.cols != b.rows {
+        return Err(BismoError::ShapeMismatch(format!(
+            "{}×{} (packed) · {}×{}",
+            la.rows, la.cols, b.rows, b.cols
+        )));
+    }
+    opts.sharding.validate()?;
+    prec.validate()?;
+    if la.bits != prec.wbits || la.signed != prec.lsigned {
+        return Err(BismoError::PrecisionUnsupported(format!(
+            "packed lhs is {} {}-bit but the request declares {} {}-bit",
+            if la.signed { "signed" } else { "unsigned" },
+            la.bits,
+            if prec.lsigned { "signed" } else { "unsigned" },
+            prec.wbits
+        )));
+    }
+    Ok(())
+}
+
 impl Inner {
     /// Dispatcher: form a micro-batch from whatever is queued, drain it
     /// concurrently, repeat. Exits only once shutdown is flagged AND
@@ -719,12 +802,11 @@ impl Inner {
 
     fn execute_one(&self, p: &Pending) -> Result<GemmResponse, BismoError> {
         let queue_ns = p.since.elapsed().as_nanos() as u64;
-        let req = &p.req;
-        let packed = self.pack_operands(req)?;
+        let packed = self.pack_operands(p)?;
         let t_exec = Instant::now();
         let mopts = MatmulOptions {
-            overlap: req.opts.overlap,
-            bit_skip: req.opts.bit_skip,
+            overlap: p.opts.overlap,
+            bit_skip: p.opts.bit_skip,
             verify: false,
         };
         let shape = GemmShape {
@@ -732,18 +814,18 @@ impl Inner {
             k: packed.la.cols,
             n: packed.rb.rows,
         };
-        let resolved = resolve_sharding(&req.opts.sharding, &shape)?;
+        let resolved = resolve_sharding(&p.opts.sharding, &shape)?;
         // For the cost-model-driven path on the sim backend, execution
         // runs on instances of the *selected* configuration (validated
         // against the budget the caller named) — also when the
         // selection came out as a single instance.
-        let auto_sim: Option<SimBackend> = match (req.opts.backend, resolved.auto) {
+        let auto_sim: Option<SimBackend> = match (p.opts.backend, resolved.auto) {
             (Backend::Sim, Some((cfg, budget))) => {
                 Some(SimBackend::on_platform(cfg, budget.as_platform())?)
             }
             _ => None,
         };
-        let backend: &dyn ExecBackend = match req.opts.backend {
+        let backend: &dyn ExecBackend = match p.opts.backend {
             Backend::Engine => &self.engine,
             Backend::Sim => auto_sim
                 .as_ref()
@@ -757,12 +839,12 @@ impl Inner {
             self.execute_sharded(backend, &packed, &resolved, &mopts)?
         };
         let exec_ns = t_exec.elapsed().as_nanos() as u64;
-        if req.opts.verify {
+        if p.opts.verify {
             let expect = gemm_bitserial(&packed.la, &packed.rb);
             if result != expect {
                 return Err(BismoError::VerifyFailed(format!(
                     "{} backend != CPU oracle ({} shard(s))",
-                    req.opts.backend.name(),
+                    p.opts.backend.name(),
                     shards
                 )));
             }
@@ -770,7 +852,7 @@ impl Inner {
         Ok(GemmResponse {
             result,
             report,
-            backend: req.opts.backend,
+            backend: p.opts.backend,
             queue_ns,
             pack_ns: packed.pack_ns,
             exec_ns,
@@ -822,22 +904,28 @@ impl Inner {
         Ok((merged, RunReport::merge_parallel(&reports), shards.len()))
     }
 
-    fn pack_operands(&self, req: &GemmRequest) -> Result<PackedOperands, BismoError> {
+    fn pack_operands(&self, p: &Pending) -> Result<PackedOperands, BismoError> {
         let t0 = Instant::now();
-        let (la, lhs_cached) = self.pack_one(
-            &req.a,
-            req.prec.wbits,
-            req.prec.lsigned,
-            false,
-            req.opts.cache_lhs,
-            "lhs",
-        )?;
+        let (la, lhs_cached) = match &p.lhs {
+            // Already decomposed by the caller (conv lowering): no
+            // pack, no cache interaction — the packing is
+            // request-specific by construction.
+            LhsOperand::Packed(la) => (la.clone(), false),
+            LhsOperand::Dense(a) => self.pack_one(
+                a,
+                p.prec.wbits,
+                p.prec.lsigned,
+                false,
+                p.opts.cache_lhs,
+                "lhs",
+            )?,
+        };
         let (rb, rhs_cached) = self.pack_one(
-            &req.b,
-            req.prec.abits,
-            req.prec.rsigned,
+            &p.rhs,
+            p.prec.abits,
+            p.prec.rsigned,
             true,
-            req.opts.cache_rhs,
+            p.opts.cache_rhs,
             "rhs",
         )?;
         Ok(PackedOperands {
@@ -1230,6 +1318,68 @@ mod tests {
             .unwrap();
         assert_eq!(resp.result, IntMatrix::from_slice(1, 1, &[11]));
         assert_eq!(resp.shards, 1, "1×1 output cannot split");
+    }
+
+    #[test]
+    fn submit_lowered_executes_prepacked_lhs() {
+        let s = svc();
+        let mut rng = Rng::new(0x10E7);
+        let a = IntMatrix::random(&mut rng, 6, 90, 3, false);
+        let b = Arc::new(IntMatrix::random(&mut rng, 90, 5, 2, true));
+        let expect = a.matmul(&b);
+        let prec = Precision {
+            wbits: 3,
+            abits: 2,
+            lsigned: false,
+            rsigned: true,
+        };
+        let la = Arc::new(BitSerialMatrix::from_int(&a, 3, false));
+        for backend in [Backend::Engine, Backend::Sim] {
+            let opts = RequestOptions {
+                backend,
+                verify: true,
+                ..Default::default()
+            };
+            let resp = s.submit_lowered(la.clone(), b.clone(), prec, opts).wait().unwrap();
+            assert_eq!(resp.result, expect, "{}", backend.name());
+            assert!(!resp.lhs_cached, "pre-packed lhs never touches the cache");
+            assert_eq!(resp.report.is_some(), backend == Backend::Sim);
+        }
+        // Sharded lowered request merges bit-exactly too.
+        let opts = RequestOptions {
+            sharding: Sharding::Grid { rows: 2, cols: 2 },
+            ..Default::default()
+        };
+        let resp = s.submit_lowered(la, b, prec, opts).wait().unwrap();
+        assert_eq!(resp.result, expect);
+        assert_eq!(resp.shards, 4);
+    }
+
+    #[test]
+    fn submit_lowered_rejects_mismatched_packing() {
+        let s = svc();
+        let a = IntMatrix::from_slice(2, 3, &[1, 0, 1, 0, 1, 1]);
+        let b = Arc::new(IntMatrix::zeros(3, 2));
+        let la = Arc::new(BitSerialMatrix::from_int(&a, 2, false));
+        let prec = |wbits, lsigned| Precision {
+            wbits,
+            abits: 1,
+            lsigned,
+            rsigned: false,
+        };
+        // Declared width disagrees with the packing.
+        let r = s.submit_lowered(la.clone(), b.clone(), prec(3, false), RequestOptions::default());
+        assert!(matches!(r.wait(), Err(BismoError::PrecisionUnsupported(_))));
+        // Declared signedness disagrees.
+        let r = s.submit_lowered(la.clone(), b.clone(), prec(2, true), RequestOptions::default());
+        assert!(matches!(r.wait(), Err(BismoError::PrecisionUnsupported(_))));
+        // k mismatch.
+        let short = Arc::new(IntMatrix::zeros(2, 2));
+        let r = s.submit_lowered(la.clone(), short, prec(2, false), RequestOptions::default());
+        assert!(matches!(r.wait(), Err(BismoError::ShapeMismatch(_))));
+        // The matching request still completes.
+        let r = s.submit_lowered(la, b, prec(2, false), RequestOptions::default());
+        assert_eq!(r.wait().unwrap().result, IntMatrix::zeros(2, 2));
     }
 
     #[test]

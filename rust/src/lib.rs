@@ -30,6 +30,12 @@
 //! * [`kernel`] — the fast software path: tiled, plane-fused,
 //!   zero-plane-skipping bit-serial GEMM engine plus the persistent
 //!   worker pool shared by every parallel path in the crate.
+//! * [`lowering`] — convolution lowering: [`lowering::ConvSpec`] with
+//!   im2col / kn2row lowering onto the GEMM stack, a
+//!   zero-materialization packed-im2col path
+//!   ([`lowering::pack_im2col`]) and the naive direct-convolution
+//!   oracle ([`lowering::conv2d_direct`]) every lowered path is tested
+//!   against.
 //! * [`partition`] — the single owner of GEMM decomposition:
 //!   [`partition::TilePlan`] (the tiling arithmetic both the scheduler
 //!   and the kernel tiler consume) and [`partition::ShardPlan`]
@@ -63,6 +69,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod isa;
 pub mod kernel;
+pub mod lowering;
 pub mod partition;
 pub mod power;
 pub mod qnn;

@@ -1,0 +1,327 @@
+//! [`ConvSpec`]: the shape of one 2-D convolution, its validation
+//! rules, and the naive direct-convolution oracle every lowered path
+//! is tested against.
+
+use super::tensor::Tensor;
+use crate::api::BismoError;
+use crate::bitmatrix::IntMatrix;
+use crate::partition::GemmShape;
+
+/// One 2-D convolution layer: `in_c → out_c` channels through a
+/// `kh × kw` kernel with per-axis stride, zero padding and dilation.
+/// Input tensors are NHWC ([`Tensor`]); weights are carried in the
+/// *lowered* layout (see [`ConvSpec::weight_rows`]) so the same matrix
+/// feeds every lowering mode and the oracle without reshuffling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvSpec {
+    /// Input height and width.
+    pub in_h: usize,
+    pub in_w: usize,
+    /// Input and output channel counts.
+    pub in_c: usize,
+    pub out_c: usize,
+    /// Kernel height and width.
+    pub kh: usize,
+    pub kw: usize,
+    /// Stride `(vertical, horizontal)`.
+    pub stride: (usize, usize),
+    /// Zero padding `(vertical, horizontal)`, applied symmetrically.
+    pub pad: (usize, usize),
+    /// Dilation `(vertical, horizontal)`.
+    pub dilation: (usize, usize),
+}
+
+impl ConvSpec {
+    /// A stride-1, dilation-1 spec — the common case.
+    pub fn simple(
+        in_h: usize,
+        in_w: usize,
+        in_c: usize,
+        out_c: usize,
+        k: usize,
+        pad: usize,
+    ) -> Self {
+        ConvSpec {
+            in_h,
+            in_w,
+            in_c,
+            out_c,
+            kh: k,
+            kw: k,
+            stride: (1, 1),
+            pad: (pad, pad),
+            dilation: (1, 1),
+        }
+    }
+
+    /// Dilated kernel extent along one axis: `(k−1)·d + 1`.
+    fn extent(k: usize, d: usize) -> usize {
+        (k - 1) * d + 1
+    }
+
+    /// The spec-level legality gate shared by every lowering entry
+    /// point ([`crate::api::ConvBuilder::build`] runs it before any
+    /// work is queued). All-typed-error: zero channels / kernels /
+    /// strides / dilations, padding at or beyond the dilated kernel
+    /// extent (an output column made entirely of padding), and empty
+    /// outputs are all [`BismoError::InvalidConfig`].
+    pub fn validate(&self) -> Result<(), BismoError> {
+        let err = |m: String| Err(BismoError::InvalidConfig(m));
+        if self.in_c == 0 || self.out_c == 0 {
+            return err(format!(
+                "conv channels must be >= 1, got in_c={} out_c={}",
+                self.in_c, self.out_c
+            ));
+        }
+        if self.kh == 0 || self.kw == 0 {
+            return err(format!("conv kernel must be >= 1x1, got {}x{}", self.kh, self.kw));
+        }
+        if self.in_h == 0 || self.in_w == 0 {
+            return err(format!("conv input must be >= 1x1, got {}x{}", self.in_h, self.in_w));
+        }
+        if self.stride.0 == 0 || self.stride.1 == 0 {
+            return err(format!("conv stride must be >= 1, got {:?}", self.stride));
+        }
+        if self.dilation.0 == 0 || self.dilation.1 == 0 {
+            return err(format!("conv dilation must be >= 1, got {:?}", self.dilation));
+        }
+        let (eh, ew) = (
+            Self::extent(self.kh, self.dilation.0),
+            Self::extent(self.kw, self.dilation.1),
+        );
+        if self.pad.0 >= eh || self.pad.1 >= ew {
+            return err(format!(
+                "conv padding {:?} must stay below the dilated kernel extent {}x{}",
+                self.pad, eh, ew
+            ));
+        }
+        if self.in_h + 2 * self.pad.0 < eh || self.in_w + 2 * self.pad.1 < ew {
+            return err(format!(
+                "conv output is empty: padded input {}x{} smaller than dilated kernel {}x{}",
+                self.in_h + 2 * self.pad.0,
+                self.in_w + 2 * self.pad.1,
+                eh,
+                ew
+            ));
+        }
+        Ok(())
+    }
+
+    /// Output height (assumes [`ConvSpec::validate`] passed).
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad.0 - Self::extent(self.kh, self.dilation.0)) / self.stride.0 + 1
+    }
+
+    /// Output width (assumes [`ConvSpec::validate`] passed).
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad.1 - Self::extent(self.kw, self.dilation.1)) / self.stride.1 + 1
+    }
+
+    /// Rows of the lowered weight matrix: `kh·kw·in_c`. Row index
+    /// `(r·kw + s)·in_c + ci` holds the weight for kernel offset
+    /// `(r, s)` and input channel `ci`; columns are output channels —
+    /// exactly the RHS layout of the im2col GEMM, and the layout
+    /// kn2row slices its per-tap sub-matrices out of.
+    pub fn weight_rows(&self) -> usize {
+        self.kh * self.kw * self.in_c
+    }
+
+    /// Shape of the im2col-lowered GEMM for a `batch`-image input:
+    /// `(batch·out_h·out_w) × (kh·kw·in_c) × out_c`.
+    pub fn gemm_shape(&self, batch: usize) -> GemmShape {
+        GemmShape {
+            m: batch * self.out_h() * self.out_w(),
+            k: self.weight_rows(),
+            n: self.out_c,
+        }
+    }
+
+    /// Shape of *one* kn2row tap GEMM: same output rows, but `k` is
+    /// only `in_c` — the kernel spatial extent becomes `kh·kw`
+    /// separate GEMMs whose products sum.
+    pub fn kn2row_shape(&self, batch: usize) -> GemmShape {
+        GemmShape {
+            m: batch * self.out_h() * self.out_w(),
+            k: self.in_c,
+            n: self.out_c,
+        }
+    }
+
+    /// Validate that `input` matches this spec's geometry.
+    pub fn check_input(&self, input: &Tensor) -> Result<(), BismoError> {
+        if input.h != self.in_h || input.w != self.in_w || input.c != self.in_c {
+            return Err(BismoError::ShapeMismatch(format!(
+                "conv input {}x{}x{} does not match spec {}x{}x{}",
+                input.h, input.w, input.c, self.in_h, self.in_w, self.in_c
+            )));
+        }
+        if input.n == 0 {
+            return Err(BismoError::ShapeMismatch("conv input batch is empty".into()));
+        }
+        Ok(())
+    }
+
+    /// Validate that `weights` is the lowered `weight_rows() × out_c`
+    /// matrix this spec expects.
+    pub fn check_weights(&self, weights: &IntMatrix) -> Result<(), BismoError> {
+        if weights.rows != self.weight_rows() || weights.cols != self.out_c {
+            return Err(BismoError::ShapeMismatch(format!(
+                "conv weights {}x{} do not match lowered layout {}x{} (kh·kw·in_c × out_c)",
+                weights.rows,
+                weights.cols,
+                self.weight_rows(),
+                self.out_c
+            )));
+        }
+        Ok(())
+    }
+
+    /// Build a lowered weight matrix from a function of
+    /// `(out_channel, kernel_row, kernel_col, in_channel)`.
+    pub fn weights_from_fn<F: FnMut(usize, usize, usize, usize) -> i64>(
+        &self,
+        mut f: F,
+    ) -> IntMatrix {
+        IntMatrix::from_fn(self.weight_rows(), self.out_c, |row, co| {
+            let r = row / (self.kw * self.in_c);
+            let rem = row % (self.kw * self.in_c);
+            f(co, r, rem / self.in_c, rem % self.in_c)
+        })
+    }
+}
+
+/// Naive direct convolution in `i64` — the correctness oracle every
+/// lowered path (im2col, kn2row, packed, sharded, cached) is
+/// property-tested against. Deliberately the obvious sextuple loop;
+/// no lowering machinery is shared with the paths under test.
+pub fn conv2d_direct(input: &Tensor, weights: &IntMatrix, spec: &ConvSpec) -> Tensor {
+    spec.check_input(input).expect("input matches spec");
+    spec.check_weights(weights).expect("weights match spec");
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let mut out = Tensor::zeros(input.n, oh, ow, spec.out_c);
+    for b in 0..input.n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for co in 0..spec.out_c {
+                    let mut acc = 0i64;
+                    for r in 0..spec.kh {
+                        let iy = (oy * spec.stride.0 + r * spec.dilation.0) as i64
+                            - spec.pad.0 as i64;
+                        if iy < 0 || iy >= spec.in_h as i64 {
+                            continue;
+                        }
+                        for s in 0..spec.kw {
+                            let ix = (ox * spec.stride.1 + s * spec.dilation.1) as i64
+                                - spec.pad.1 as i64;
+                            if ix < 0 || ix >= spec.in_w as i64 {
+                                continue;
+                            }
+                            for ci in 0..spec.in_c {
+                                acc += input.get(b, iy as usize, ix as usize, ci)
+                                    * weights.get((r * spec.kw + s) * spec.in_c + ci, co);
+                            }
+                        }
+                    }
+                    out.set(b, oy, ox, co, acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn output_dims_match_the_textbook_formula() {
+        let spec = ConvSpec::simple(28, 28, 1, 8, 3, 1);
+        assert_eq!((spec.out_h(), spec.out_w()), (28, 28));
+        let strided = ConvSpec {
+            stride: (2, 2),
+            pad: (0, 0),
+            ..spec
+        };
+        assert_eq!((strided.out_h(), strided.out_w()), (13, 13));
+        let dilated = ConvSpec {
+            dilation: (2, 2),
+            pad: (2, 2),
+            ..spec
+        };
+        assert_eq!((dilated.out_h(), dilated.out_w()), (28, 28));
+    }
+
+    #[test]
+    fn illegal_specs_are_typed_errors() {
+        let ok = ConvSpec::simple(8, 8, 3, 4, 3, 1);
+        assert!(ok.validate().is_ok());
+        // Zero channels.
+        let r = ConvSpec { in_c: 0, ..ok }.validate();
+        assert!(matches!(r, Err(BismoError::InvalidConfig(_))), "{r:?}");
+        let r = ConvSpec { out_c: 0, ..ok }.validate();
+        assert!(matches!(r, Err(BismoError::InvalidConfig(_))), "{r:?}");
+        // Padding at/beyond the kernel extent.
+        let r = ConvSpec { pad: (3, 1), ..ok }.validate();
+        assert!(matches!(r, Err(BismoError::InvalidConfig(_))), "{r:?}");
+        // ... measured against the *dilated* extent: pad 3 is legal for
+        // a dilated 3x3 (extent 5), illegal undilated.
+        let dil = ConvSpec {
+            pad: (3, 3),
+            dilation: (2, 2),
+            ..ok
+        };
+        assert!(dil.validate().is_ok());
+        // Degenerate axes.
+        let mut zero_stride = ok;
+        zero_stride.stride = (0, 1);
+        let mut zero_dilation = ok;
+        zero_dilation.dilation = (1, 0);
+        let degenerate = [
+            ConvSpec { kh: 0, ..ok },
+            ConvSpec { in_h: 0, ..ok },
+            zero_stride,
+            zero_dilation,
+        ];
+        for bad in degenerate {
+            assert!(matches!(bad.validate(), Err(BismoError::InvalidConfig(_))));
+        }
+        // Kernel larger than the padded input: empty output.
+        let r = ConvSpec::simple(2, 2, 1, 1, 5, 1).validate();
+        assert!(matches!(r, Err(BismoError::InvalidConfig(_))), "{r:?}");
+    }
+
+    #[test]
+    fn direct_conv_identity_kernel_is_identity() {
+        // 1x1 kernel, identity weights: output == input per channel.
+        let mut rng = Rng::new(0x1D);
+        let spec = ConvSpec::simple(5, 4, 3, 3, 1, 0);
+        let x = Tensor::random(&mut rng, 2, 5, 4, 3, 3, false);
+        let w = spec.weights_from_fn(|co, _, _, ci| (co == ci) as i64);
+        let y = conv2d_direct(&x, &w, &spec);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn direct_conv_matches_hand_computed_example() {
+        // 1 image, 3x3 input, one channel, 2x2 kernel of ones, no pad:
+        // each output is the sum of a 2x2 window.
+        let x = Tensor::from_fn(1, 3, 3, 1, |_, y, xp, _| (y * 3 + xp) as i64);
+        let spec = ConvSpec::simple(3, 3, 1, 1, 2, 0);
+        let w = spec.weights_from_fn(|_, _, _, _| 1);
+        let y = conv2d_direct(&x, &w, &spec);
+        assert_eq!(y.get(0, 0, 0, 0), 8); // window {0,1,3,4}
+        assert_eq!(y.get(0, 1, 1, 0), 24); // window {4,5,7,8}
+        assert_eq!((y.h, y.w), (2, 2));
+    }
+
+    #[test]
+    fn weights_from_fn_uses_the_lowered_row_order() {
+        let spec = ConvSpec::simple(4, 4, 2, 3, 2, 0);
+        let w = spec.weights_from_fn(|co, r, s, ci| (co * 1000 + r * 100 + s * 10 + ci) as i64);
+        // Row (r·kw + s)·in_c + ci with r=1, s=0, ci=1, column co=2.
+        assert_eq!(w.get(5, 2), 2101);
+        assert_eq!(w.rows, spec.weight_rows());
+    }
+}

@@ -1,0 +1,205 @@
+//! Lowering proper: im2col and kn2row views of a convolution as
+//! bit-serial GEMM operands.
+//!
+//! Both modes share one patch sampler ([`patch_value`]), so the dense
+//! reference matrix ([`im2col_matrix`]) and the packed hot path
+//! ([`pack_im2col`]) cannot disagree: the packed path feeds the same
+//! sampler straight into [`BitSerialMatrix::from_int_fn`], building
+//! bit-planes directly from the input tensor without ever allocating
+//! the `kh·kw`-times-larger dense patch matrix.
+
+use super::conv::ConvSpec;
+use super::tensor::Tensor;
+use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
+
+/// How a convolution lowers onto the GEMM stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoweringMode {
+    /// One `(batch·oh·ow) × (kh·kw·in_c) × out_c` GEMM over the
+    /// (virtually sampled) patch matrix. One request per layer; the
+    /// widest `k` the stack sees.
+    Im2col,
+    /// `kh·kw` independent `(batch·oh·ow) × in_c × out_c` GEMMs — one
+    /// per kernel tap — whose products sum. No patch duplication at
+    /// all; many small concurrent requests instead of one wide one.
+    Kn2row,
+}
+
+impl LoweringMode {
+    /// Stable lowercase name (CLI flag value / JSON field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LoweringMode::Im2col => "im2col",
+            LoweringMode::Kn2row => "kn2row",
+        }
+    }
+}
+
+/// One element of the (virtual) im2col patch matrix: row `p` indexes
+/// `(batch, oy, ox)`, column `q` indexes `(r, s, ci)`; out-of-bounds
+/// samples are the zero padding.
+#[inline]
+pub fn patch_value(input: &Tensor, spec: &ConvSpec, p: usize, q: usize) -> i64 {
+    let per_img = spec.out_h() * spec.out_w();
+    let b = p / per_img;
+    let rem = p % per_img;
+    let (oy, ox) = (rem / spec.out_w(), rem % spec.out_w());
+    let r = q / (spec.kw * spec.in_c);
+    let rem = q % (spec.kw * spec.in_c);
+    let (s, ci) = (rem / spec.in_c, rem % spec.in_c);
+    shifted_value(input, spec, b, oy, ox, r, s, ci)
+}
+
+/// Input sample for output position `(oy, ox)` at kernel tap `(r, s)`,
+/// channel `ci` — zero where the tap lands in the padding.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn shifted_value(
+    input: &Tensor,
+    spec: &ConvSpec,
+    b: usize,
+    oy: usize,
+    ox: usize,
+    r: usize,
+    s: usize,
+    ci: usize,
+) -> i64 {
+    let iy = (oy * spec.stride.0 + r * spec.dilation.0) as i64 - spec.pad.0 as i64;
+    let ix = (ox * spec.stride.1 + s * spec.dilation.1) as i64 - spec.pad.1 as i64;
+    if iy < 0 || ix < 0 || iy >= spec.in_h as i64 || ix >= spec.in_w as i64 {
+        0
+    } else {
+        input.get(b, iy as usize, ix as usize, ci)
+    }
+}
+
+/// The dense im2col patch matrix, materialized — the reference the
+/// packed path is tested against (and a debugging aid). The serving
+/// path never builds this; use [`pack_im2col`] there.
+pub fn im2col_matrix(input: &Tensor, spec: &ConvSpec) -> IntMatrix {
+    let shape = spec.gemm_shape(input.n);
+    IntMatrix::from_fn(shape.m, shape.k, |p, q| patch_value(input, spec, p, q))
+}
+
+/// Bit-plane-decompose the im2col patch matrix directly from the input
+/// tensor: exactly `BitSerialMatrix::from_int(&im2col_matrix(..))`
+/// without the dense intermediate. This is the conv hot path's LHS —
+/// it goes straight into
+/// [`crate::coordinator::BismoService::submit_lowered`]. Panics if an
+/// input entry does not fit the precision; callers range-check the
+/// (much smaller) input tensor first.
+pub fn pack_im2col(input: &Tensor, spec: &ConvSpec, bits: u32, signed: bool) -> BitSerialMatrix {
+    let shape = spec.gemm_shape(input.n);
+    BitSerialMatrix::from_int_fn(shape.m, shape.k, bits, signed, |p, q| {
+        patch_value(input, spec, p, q)
+    })
+}
+
+/// Bit-plane-decompose the kn2row shifted-activation matrix for kernel
+/// tap `(r, s)`: `(batch·oh·ow) × in_c`, sampling the input at that
+/// tap's offset (zero in the padding). Like [`pack_im2col`], no dense
+/// intermediate.
+pub fn pack_kn2row_tap(
+    input: &Tensor,
+    spec: &ConvSpec,
+    r: usize,
+    s: usize,
+    bits: u32,
+    signed: bool,
+) -> BitSerialMatrix {
+    let shape = spec.kn2row_shape(input.n);
+    let per_img = spec.out_h() * spec.out_w();
+    BitSerialMatrix::from_int_fn(shape.m, shape.k, bits, signed, |p, ci| {
+        let b = p / per_img;
+        let rem = p % per_img;
+        shifted_value(input, spec, b, rem / spec.out_w(), rem % spec.out_w(), r, s, ci)
+    })
+}
+
+/// The `in_c × out_c` weight sub-matrix of kernel tap `(r, s)`: a row
+/// slice of the lowered weight matrix ([`ConvSpec::weight_rows`]
+/// layout), contiguous by construction.
+pub fn kn2row_tap_weights(weights: &IntMatrix, spec: &ConvSpec, r: usize, s: usize) -> IntMatrix {
+    let base = (r * spec.kw + s) * spec.in_c;
+    IntMatrix::from_fn(spec.in_c, spec.out_c, |ci, co| weights.get(base + ci, co))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowering::conv2d_direct;
+    use crate::util::{property_sweep, Rng};
+
+    fn random_spec(rng: &mut Rng) -> ConvSpec {
+        loop {
+            let spec = ConvSpec {
+                in_h: rng.index(9) + 2,
+                in_w: rng.index(9) + 2,
+                in_c: rng.index(4) + 1,
+                out_c: rng.index(5) + 1,
+                kh: rng.index(3) + 1,
+                kw: rng.index(3) + 1,
+                stride: (rng.index(3) + 1, rng.index(3) + 1),
+                pad: (rng.index(2), rng.index(2)),
+                dilation: (rng.index(2) + 1, rng.index(2) + 1),
+            };
+            if spec.validate().is_ok() {
+                return spec;
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_times_weights_equals_direct_conv() {
+        property_sweep(0xC0117, 25, |rng, _| {
+            let spec = random_spec(rng);
+            let batch = rng.index(3) + 1;
+            let x = Tensor::random(rng, batch, spec.in_h, spec.in_w, spec.in_c, 3, false);
+            let w = spec.weights_from_fn(|_, _, _, _| rng.operand(3, true));
+            let patches = im2col_matrix(&x, &spec);
+            let want = conv2d_direct(&x, &w, &spec);
+            let prod = patches.matmul(&w);
+            let got = Tensor::from_gemm_rows(&prod, batch, spec.out_h(), spec.out_w());
+            assert_eq!(got, want, "{spec:?}");
+        });
+    }
+
+    #[test]
+    fn packed_im2col_equals_materialize_then_pack() {
+        property_sweep(0x9AC2ED, 20, |rng, _| {
+            let spec = random_spec(rng);
+            let batch = rng.index(3) + 1;
+            let bits = rng.index(4) as u32 + 1;
+            let x = Tensor::random(rng, batch, spec.in_h, spec.in_w, spec.in_c, bits, false);
+            let packed = pack_im2col(&x, &spec, bits, false);
+            let dense = im2col_matrix(&x, &spec);
+            assert_eq!(packed, BitSerialMatrix::from_int(&dense, bits, false), "{spec:?}");
+        });
+    }
+
+    #[test]
+    fn kn2row_taps_sum_to_direct_conv() {
+        property_sweep(0x4273, 20, |rng, _| {
+            let spec = random_spec(rng);
+            let batch = rng.index(2) + 1;
+            let x = Tensor::random(rng, batch, spec.in_h, spec.in_w, spec.in_c, 2, false);
+            let w = spec.weights_from_fn(|_, _, _, _| rng.operand(3, true));
+            let shape = spec.kn2row_shape(batch);
+            let mut acc = IntMatrix::zeros(shape.m, shape.n);
+            for r in 0..spec.kh {
+                for s in 0..spec.kw {
+                    let lhs = pack_kn2row_tap(&x, &spec, r, s, 2, false).to_int();
+                    let part = lhs.matmul(&kn2row_tap_weights(&w, &spec, r, s));
+                    for i in 0..shape.m {
+                        for j in 0..shape.n {
+                            acc.set(i, j, acc.get(i, j) + part.get(i, j));
+                        }
+                    }
+                }
+            }
+            let want = conv2d_direct(&x, &w, &spec);
+            let got = Tensor::from_gemm_rows(&acc, batch, spec.out_h(), spec.out_w());
+            assert_eq!(got, want, "{spec:?}");
+        });
+    }
+}

@@ -1,0 +1,41 @@
+//! Convolution lowering: turning quantized conv layers into bit-serial
+//! GEMM on the existing overlay stack.
+//!
+//! The paper motivates BISMO with quantized neural network inference,
+//! and the journal follow-up (Umuroglu et al., 2019) shows convolution
+//! layers lowered to bit-serial GEMM dominate end-to-end QNN
+//! throughput. This module owns that lowering:
+//!
+//! * [`ConvSpec`] — the shape and legality rules of one 2-D
+//!   convolution (stride / padding / dilation / channels), plus its
+//!   lowered [`crate::partition::GemmShape`]s.
+//! * [`Tensor`] — the NHWC integer activation tensor; chosen so the
+//!   lowered GEMM result *is* the output tensor (no per-element
+//!   reshape).
+//! * [`LoweringMode`] — im2col (one wide GEMM per layer) vs kn2row
+//!   (`kh·kw` narrow GEMMs per layer whose products sum); see
+//!   `DESIGN.md` §9 for the tradeoff.
+//! * [`pack_im2col`] / [`pack_kn2row_tap`] — the zero-materialization
+//!   packed paths: bit-planes are built *directly from the input
+//!   tensor* via [`crate::bitmatrix::BitSerialMatrix::from_int_fn`],
+//!   so the `kh·kw`-times-inflated dense patch matrix never exists on
+//!   the hot path. The packed operand enters the serving layer through
+//!   [`crate::coordinator::BismoService::submit_lowered`].
+//! * [`conv2d_direct`] — the naive `i64` direct-convolution oracle the
+//!   whole lowering stack is property-tested against
+//!   (`rust/tests/conv_lowering.rs`).
+//!
+//! Layering: `lowering` sits beside `partition` (it depends only on
+//! `bitmatrix` / `partition` / `api::BismoError` / `util`); the
+//! serving layer and the [`crate::api::ConvBuilder`] facade consume it
+//! from above.
+
+mod conv;
+mod lower;
+mod tensor;
+
+pub use conv::{conv2d_direct, ConvSpec};
+pub use lower::{
+    im2col_matrix, kn2row_tap_weights, pack_im2col, pack_kn2row_tap, patch_value, LoweringMode,
+};
+pub use tensor::Tensor;

@@ -1,0 +1,178 @@
+//! [`Tensor`]: the 4-D integer activation tensor convolution layers
+//! consume and produce.
+
+use crate::bitmatrix::IntMatrix;
+use crate::util::Rng;
+
+/// A dense `n × h × w × c` integer tensor in NHWC layout (channels
+/// innermost). NHWC is chosen deliberately: one im2col patch element
+/// run (all channels of one input pixel) is contiguous, and the
+/// lowered GEMM result — rows indexed `(batch, y, x)`, columns indexed
+/// by output channel — is *already* an NHWC tensor, so reshaping
+/// between the GEMM domain and the tensor domain never copies
+/// per-element.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tensor {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    data: Vec<i64>,
+}
+
+impl Tensor {
+    /// All-zero tensor.
+    pub fn zeros(n: usize, h: usize, w: usize, c: usize) -> Tensor {
+        Tensor {
+            n,
+            h,
+            w,
+            c,
+            data: vec![0; n * h * w * c],
+        }
+    }
+
+    /// Build from a function of `(batch, y, x, channel)`.
+    pub fn from_fn<F: FnMut(usize, usize, usize, usize) -> i64>(
+        n: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        mut f: F,
+    ) -> Tensor {
+        let mut data = Vec::with_capacity(n * h * w * c);
+        for ni in 0..n {
+            for y in 0..h {
+                for x in 0..w {
+                    for ci in 0..c {
+                        data.push(f(ni, y, x, ci));
+                    }
+                }
+            }
+        }
+        Tensor { n, h, w, c, data }
+    }
+
+    /// Uniformly random tensor of `bits`-wide (optionally signed)
+    /// entries.
+    pub fn random(
+        rng: &mut Rng,
+        n: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        bits: u32,
+        signed: bool,
+    ) -> Tensor {
+        Self::from_fn(n, h, w, c, |_, _, _, _| rng.operand(bits, signed))
+    }
+
+    /// Reinterpret an `n × (h·w·c)` matrix (one flattened NHWC image
+    /// per row) as a tensor. The inverse of [`Tensor::flatten`].
+    pub fn from_matrix(m: &IntMatrix, h: usize, w: usize, c: usize) -> Tensor {
+        assert_eq!(m.cols, h * w * c, "matrix width != h·w·c");
+        Tensor {
+            n: m.rows,
+            h,
+            w,
+            c,
+            data: m.data().to_vec(),
+        }
+    }
+
+    /// Reinterpret a lowered-GEMM result — rows indexed
+    /// `(batch, y, x)`, columns indexed by output channel — as an NHWC
+    /// tensor. Pure reshape: the row-major `(n·h·w) × c` matrix and
+    /// the NHWC tensor share one memory order.
+    pub fn from_gemm_rows(m: &IntMatrix, n: usize, h: usize, w: usize) -> Tensor {
+        assert_eq!(m.rows, n * h * w, "matrix rows != n·h·w");
+        Tensor {
+            n,
+            h,
+            w,
+            c: m.cols,
+            data: m.data().to_vec(),
+        }
+    }
+
+    #[inline]
+    fn idx(&self, n: usize, y: usize, x: usize, c: usize) -> usize {
+        debug_assert!(n < self.n && y < self.h && x < self.w && c < self.c);
+        ((n * self.h + y) * self.w + x) * self.c + c
+    }
+
+    #[inline]
+    pub fn get(&self, n: usize, y: usize, x: usize, c: usize) -> i64 {
+        self.data[self.idx(n, y, x, c)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, n: usize, y: usize, x: usize, c: usize, v: i64) {
+        let i = self.idx(n, y, x, c);
+        self.data[i] = v;
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Is the tensor empty (any zero-sized axis)?
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Raw NHWC data.
+    pub fn data(&self) -> &[i64] {
+        &self.data
+    }
+
+    /// Elementwise map (requantization, thresholding).
+    pub fn map<F: FnMut(i64) -> i64>(&self, mut f: F) -> Tensor {
+        Tensor {
+            n: self.n,
+            h: self.h,
+            w: self.w,
+            c: self.c,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Flatten to an `n × (h·w·c)` matrix, one NHWC image per row —
+    /// the dense-layer input shape. Pure reshape: NHWC rows are
+    /// already contiguous.
+    pub fn flatten(&self) -> IntMatrix {
+        IntMatrix::from_slice(self.n, self.h * self.w * self.c, &self.data)
+    }
+
+    /// Does every entry fit in `bits` (signed or unsigned)? Same
+    /// bounds convention as [`IntMatrix::fits`], by construction.
+    pub fn fits(&self, bits: u32, signed: bool) -> bool {
+        let (lo, hi) = crate::bitmatrix::value_bounds(bits, signed);
+        self.data.iter().all(|&v| v >= lo && v <= hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nhwc_layout_round_trips_through_flatten() {
+        let t = Tensor::from_fn(2, 3, 4, 5, |n, y, x, c| (n * 1000 + y * 100 + x * 10 + c) as i64);
+        assert_eq!(t.get(1, 2, 3, 4), 1234);
+        let m = t.flatten();
+        assert_eq!(m.rows, 2);
+        assert_eq!(m.cols, 60);
+        assert_eq!(Tensor::from_matrix(&m, 3, 4, 5), t);
+    }
+
+    #[test]
+    fn fits_and_map() {
+        let t = Tensor::from_fn(1, 2, 2, 1, |_, y, x, _| (y * 2 + x) as i64);
+        assert!(t.fits(2, false));
+        assert!(!t.fits(1, false));
+        let doubled = t.map(|v| v * 2);
+        assert_eq!(doubled.get(0, 1, 1, 0), 6);
+    }
+}

@@ -21,6 +21,15 @@
 //!                sweep shard count (multi-instance execution) on one
 //!                workload -> BENCH_shard.json scaling curve, plus the
 //!                cost model's Auto pick under the budget
+//! bismo cnn-bench [--quick] [--batch B] [--reps N] [--out PATH]
+//!                quantized-CNN serving benchmark: both conv lowerings
+//!                (im2col / kn2row) end to end on the engine backend
+//!                (throughput) and the sim backend (per-layer cycles)
+//!                -> BENCH_cnn.json
+//! bismo bench-check --baseline PATH --current PATH [--tolerance F]
+//!                CI regression gate: compares two BENCH_gemm.json
+//!                files, failing on schema drift or on per-case
+//!                speedup regression beyond the tolerance
 //! bismo costmodel [--instance N]            LUT/BRAM prediction
 //! bismo synth [--dk N]                      DPU virtual synthesis
 //! bismo power                               Table V power model
@@ -916,6 +925,457 @@ fn cmd_shard_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     Ok(())
 }
 
+/// `bismo cnn-bench`: end-to-end quantized-CNN serving benchmark.
+///
+/// The 28×28 [`QnnCnn`](bismo::qnn::QnnCnn) preset (conv–pool–conv–
+/// pool–dense, per-layer precisions w3/w2/w3 at 2-bit activations) is
+/// prepared once per lowering mode and served through a
+/// [`Session`]: the engine backend measures end-to-end wall-clock
+/// throughput over `--reps` repetitions, the sim backend reports
+/// per-layer cycle counts. Every timed inference is gated bit-exact
+/// against the direct-convolution reference first. Results go to
+/// `BENCH_cnn.json` (schema in the README).
+fn cmd_cnn_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
+    use bismo::baseline::binary_ops;
+    use bismo::lowering::{LoweringMode, Tensor};
+    use bismo::qnn::QnnCnn;
+    use bismo::util::bench::Samples;
+    use bismo::util::Json;
+    use std::collections::BTreeMap;
+    use std::time::Instant;
+
+    let quick = flags.contains_key("quick");
+    let batch = get(flags, "batch", if quick { 2usize } else { 8 }).max(1);
+    let reps = get(flags, "reps", if quick { 2usize } else { 5 }).max(1);
+    let seed = get(flags, "seed", 0xC2215u64);
+    let out_path = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "BENCH_cnn.json".to_string());
+    let overlay = config_from(flags)?;
+    let session = Session::new(SessionConfig {
+        overlay,
+        ..Default::default()
+    })?;
+    let cnn = QnnCnn::digits(seed);
+    let mut rng = Rng::new(seed.wrapping_add(1));
+    let spec1 = cnn.conv1.spec;
+    let x = Tensor::random(&mut rng, batch, spec1.in_h, spec1.in_w, 1, cnn.abits, false);
+    let want = cnn.forward_reference(&x);
+
+    // Static per-layer facts (identical across lowering modes: kn2row
+    // splits k across taps, the total work is the same).
+    struct Layer {
+        name: &'static str,
+        m: usize,
+        k: usize,
+        n: usize,
+        wbits: u32,
+        abits: u32,
+    }
+    let shape1 = spec1.gemm_shape(batch);
+    let shape2 = cnn.conv2.spec.gemm_shape(batch);
+    let layers = [
+        Layer {
+            name: "conv1",
+            m: shape1.m,
+            k: shape1.k,
+            n: shape1.n,
+            wbits: cnn.conv1.prec.wbits,
+            abits: cnn.conv1.prec.abits,
+        },
+        Layer {
+            name: "conv2",
+            m: shape2.m,
+            k: shape2.k,
+            n: shape2.n,
+            wbits: cnn.conv2.prec.wbits,
+            abits: cnn.conv2.prec.abits,
+        },
+        Layer {
+            name: "fc",
+            m: batch,
+            k: cnn.fc.rows,
+            n: cnn.fc.cols,
+            wbits: cnn.fc_prec.wbits,
+            abits: cnn.fc_prec.abits,
+        },
+    ];
+
+    println!(
+        "cnn-bench: 28x28 QnnCnn preset, batch {batch}, {reps} reps per lowering mode \
+         (engine throughput + sim cycles)"
+    );
+    let mut layers_json = Vec::new();
+    let mut modes_json = BTreeMap::new();
+    let mut headline_rate = 0.0f64;
+    for mode in [LoweringMode::Im2col, LoweringMode::Kn2row] {
+        // Engine: bit-exactness gate, per-layer exec attribution, then
+        // end-to-end timing.
+        let served = cnn.serve(&session, mode, Backend::Engine)?;
+        let (logits, gemms) = served.infer(&x)?;
+        if logits != want {
+            return Err(BismoError::VerifyFailed(format!(
+                "served CNN logits != direct-conv reference ({} engine)",
+                mode.name()
+            )));
+        }
+        // gemms order: conv1 taps, conv2 taps, fc — tap counts derived
+        // per layer from its own kernel, so the attribution stays right
+        // if the preset's kernel sizes ever diverge.
+        let tap_count = |spec: &bismo::lowering::ConvSpec| match mode {
+            LoweringMode::Im2col => 1,
+            LoweringMode::Kn2row => spec.kh * spec.kw,
+        };
+        let (taps1, taps2) = (tap_count(&spec1), tap_count(&cnn.conv2.spec));
+        let split = [0, taps1, taps1 + taps2, taps1 + taps2 + 1];
+        let engine_ns: Vec<u64> = (0..3)
+            .map(|li| gemms[split[li]..split[li + 1]].iter().map(|g| g.exec_ns).sum())
+            .collect();
+        let mut lat = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let (l, _) = served.infer(&x)?;
+            lat.push(t0.elapsed().as_nanos() as f64);
+            if l != want {
+                return Err(BismoError::VerifyFailed(format!(
+                    "served CNN logits drifted during timing ({})",
+                    mode.name()
+                )));
+            }
+        }
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let samples = Samples { ns: lat };
+        let median_ns = samples.median();
+        let rate = batch as f64 / (median_ns / 1e9);
+        if mode == LoweringMode::Im2col {
+            headline_rate = rate;
+        }
+
+        // Sim: per-layer cycle counts (and the same exactness gate).
+        let sim_served = cnn.serve(&session, mode, Backend::Sim)?;
+        let (sim_logits, sim_gemms) = sim_served.infer(&x)?;
+        if sim_logits != want {
+            return Err(BismoError::VerifyFailed(format!(
+                "served CNN logits != direct-conv reference ({} sim)",
+                mode.name()
+            )));
+        }
+        let sim_cycles: Vec<u64> = (0..3)
+            .map(|li| {
+                sim_gemms[split[li]..split[li + 1]]
+                    .iter()
+                    .filter_map(|g| g.report.as_ref().map(|r| r.cycles))
+                    .sum()
+            })
+            .collect();
+        let total_cycles: u64 = sim_cycles.iter().sum();
+
+        for (li, layer) in layers.iter().enumerate() {
+            let lowering = if layer.name == "fc" { "dense" } else { mode.name() };
+            if layer.name == "fc" && mode == LoweringMode::Kn2row {
+                continue; // the dense head is identical across modes
+            }
+            let ops = binary_ops(
+                layer.m as u64,
+                layer.k as u64,
+                layer.n as u64,
+                layer.wbits,
+                layer.abits,
+            ) as f64;
+            println!(
+                "  {:<6} [{}] {}x{}x{} w{}a{}: {} GEMM(s), engine {:>9} ns, sim {:>9} cycles",
+                layer.name,
+                lowering,
+                layer.m,
+                layer.k,
+                layer.n,
+                layer.abits,
+                layer.wbits,
+                split[li + 1] - split[li],
+                engine_ns[li],
+                sim_cycles[li]
+            );
+            let mut jl = BTreeMap::new();
+            jl.insert("name".to_string(), Json::str(layer.name));
+            jl.insert("lowering".to_string(), Json::str(lowering));
+            jl.insert("m".to_string(), Json::num(layer.m as f64));
+            jl.insert("k".to_string(), Json::num(layer.k as f64));
+            jl.insert("n".to_string(), Json::num(layer.n as f64));
+            // Explicit role names: the crate-internal Precision struct
+            // calls the LHS width `wbits`, which for a QNN layer is the
+            // *activation* side — emitting role names avoids the
+            // w-means-weights ambiguity in the workload shorthand.
+            jl.insert(
+                "activation_bits".to_string(),
+                Json::num(layer.wbits as f64),
+            );
+            jl.insert("weight_bits".to_string(), Json::num(layer.abits as f64));
+            jl.insert(
+                "gemms".to_string(),
+                Json::num((split[li + 1] - split[li]) as f64),
+            );
+            jl.insert("binary_ops".to_string(), Json::num(ops));
+            jl.insert("engine_exec_ns".to_string(), Json::num(engine_ns[li] as f64));
+            jl.insert(
+                "engine_gops".to_string(),
+                Json::num(ops / (engine_ns[li].max(1) as f64)),
+            );
+            jl.insert("sim_cycles".to_string(), Json::num(sim_cycles[li] as f64));
+            layers_json.push(Json::Obj(jl));
+        }
+
+        let sim_s_per_batch = total_cycles as f64 / (overlay.fclk_mhz as f64 * 1e6);
+        println!(
+            "  {} end to end: median {:.2} ms/batch on the engine ({:.0} inf/s), \
+             {} sim cycles ({:.2} ms at {} MHz)",
+            mode.name(),
+            median_ns / 1e6,
+            rate,
+            total_cycles,
+            sim_s_per_batch * 1e3,
+            overlay.fclk_mhz
+        );
+        let mut jm = BTreeMap::new();
+        jm.insert("engine_median_ns".to_string(), Json::num(median_ns));
+        jm.insert("engine_mean_ns".to_string(), Json::num(samples.mean()));
+        jm.insert("inferences_per_s".to_string(), Json::num(rate));
+        jm.insert("sim_total_cycles".to_string(), Json::num(total_cycles as f64));
+        jm.insert(
+            "sim_ms_per_batch".to_string(),
+            Json::num(sim_s_per_batch * 1e3),
+        );
+        modes_json.insert(mode.name().to_string(), Json::Obj(jm));
+    }
+
+    let cs = session.cache_stats();
+    let mut cache = BTreeMap::new();
+    cache.insert("hits".to_string(), Json::num(cs.hits as f64));
+    cache.insert("misses".to_string(), Json::num(cs.misses as f64));
+    cache.insert("hit_rate".to_string(), Json::num(cs.hit_rate()));
+
+    let mut headline = BTreeMap::new();
+    headline.insert("lowering".to_string(), Json::str("im2col"));
+    headline.insert("inferences_per_s".to_string(), Json::num(headline_rate));
+
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), Json::str("bismo-bench-cnn/v1"));
+    root.insert(
+        "mode".to_string(),
+        Json::str(if quick { "quick" } else { "full" }),
+    );
+    root.insert("batch".to_string(), Json::num(batch as f64));
+    root.insert("reps".to_string(), Json::num(reps as f64));
+    root.insert("seed".to_string(), Json::num(seed as f64));
+    root.insert(
+        "generated_unix".to_string(),
+        Json::num(
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs() as f64)
+                .unwrap_or(0.0),
+        ),
+    );
+    root.insert("layers".to_string(), Json::Arr(layers_json));
+    root.insert("end_to_end".to_string(), Json::Obj(modes_json));
+    root.insert("cache".to_string(), Json::Obj(cache));
+    root.insert("headline".to_string(), Json::Obj(headline));
+    let doc = Json::Obj(root);
+    std::fs::write(&out_path, doc.pretty(2) + "\n")
+        .map_err(|e| BismoError::Io(format!("writing {out_path}: {e}")))?;
+    println!(
+        "wrote {out_path}: headline {:.0} inferences/s (im2col, engine backend)",
+        headline_rate
+    );
+    Ok(())
+}
+
+/// `bismo bench-check`: the CI bench-regression gate.
+///
+/// Compares a committed baseline `BENCH_gemm.json` against a freshly
+/// generated one. Two failure classes, both fatal (non-zero exit):
+///
+/// * **Schema drift** — different schema/mode, a case set that does
+///   not match one-to-one by name, per-case shape facts
+///   (`m/k/n/wbits/abits/binary_ops`) that disagree, or missing
+///   required fields. Catches silent bench rewrites that would make
+///   the regression comparison meaningless.
+/// * **Regression** — a case's `speedup_1t` (tiled kernel vs naive
+///   baseline, single-threaded — a machine-relative ratio, so the
+///   gate is portable across runner hardware) dropping below
+///   `baseline · (1 − tolerance)`; likewise the headline speedup.
+fn cmd_bench_check(flags: &HashMap<String, String>) -> Result<(), BismoError> {
+    use bismo::util::Json;
+    use std::collections::BTreeMap;
+
+    let path_of = |key: &str| -> Result<String, BismoError> {
+        flags
+            .get(key)
+            .filter(|v| !v.is_empty())
+            .cloned()
+            .ok_or_else(|| BismoError::Parse(format!("--{key} PATH is required")))
+    };
+    let baseline_path = path_of("baseline")?;
+    let current_path = path_of("current")?;
+    // An explicitly supplied but unparsable tolerance must fail, not
+    // silently loosen the gate to the default.
+    let tolerance: f64 = match flags.get("tolerance") {
+        None => 0.35,
+        Some(v) => v.parse().map_err(|_| {
+            BismoError::Parse(format!("bad --tolerance {v:?} (expect a fraction)"))
+        })?,
+    };
+    if !(0.0..1.0).contains(&tolerance) {
+        return Err(BismoError::InvalidConfig(format!(
+            "--tolerance must be in [0, 1), got {tolerance}"
+        )));
+    }
+    let read = |p: &str| -> Result<Json, BismoError> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| BismoError::Io(format!("reading {p}: {e}")))?;
+        Json::parse(&text).map_err(|e| BismoError::Parse(format!("{p}: {e}")))
+    };
+    let base = read(&baseline_path)?;
+    let cur = read(&current_path)?;
+
+    const SCHEMA: &str = "bismo-bench-gemm/v1";
+    // Shape facts that must be *identical* (deterministic workload
+    // identity) vs timing fields that must merely be present.
+    const IDENTITY_NUM: [&str; 6] = ["m", "k", "n", "wbits", "abits", "binary_ops"];
+    const TIMING_NUM: [&str; 8] = [
+        "baseline_ns",
+        "tiled_ns",
+        "tiled_mt_ns",
+        "baseline_gops",
+        "tiled_gops",
+        "tiled_mt_gops",
+        "speedup_1t",
+        "speedup_mt",
+    ];
+
+    let mut drift: Vec<String> = Vec::new();
+    for (which, doc) in [("baseline", &base), ("current", &cur)] {
+        match doc.get("schema").and_then(Json::as_str) {
+            Some(SCHEMA) => {}
+            other => drift.push(format!("{which}: schema {other:?}, expected {SCHEMA:?}")),
+        }
+    }
+    let mode = |doc: &Json| doc.get("mode").and_then(Json::as_str).map(str::to_string);
+    if mode(&base) != mode(&cur) {
+        drift.push(format!(
+            "bench mode differs: baseline {:?} vs current {:?}",
+            mode(&base),
+            mode(&cur)
+        ));
+    }
+
+    // Index cases by name, validating required fields as we go.
+    let index = |doc: &Json, which: &str, drift: &mut Vec<String>| {
+        let mut by_name: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
+        let cases = doc.get("cases").and_then(Json::as_arr).unwrap_or(&[]);
+        if cases.is_empty() {
+            drift.push(format!("{which}: no cases array"));
+        }
+        for case in cases {
+            let Some(name) = case.get("name").and_then(Json::as_str) else {
+                drift.push(format!("{which}: case without a name"));
+                continue;
+            };
+            let mut fields = BTreeMap::new();
+            for f in IDENTITY_NUM.iter().chain(TIMING_NUM.iter()) {
+                match case.get(f).and_then(Json::as_f64) {
+                    Some(v) => {
+                        fields.insert(f.to_string(), v);
+                    }
+                    None => drift.push(format!("{which}: case {name} missing field {f}")),
+                }
+            }
+            by_name.insert(name.to_string(), fields);
+        }
+        by_name
+    };
+    let base_cases = index(&base, "baseline", &mut drift);
+    let cur_cases = index(&cur, "current", &mut drift);
+    for name in base_cases.keys() {
+        if !cur_cases.contains_key(name) {
+            drift.push(format!("case {name} present in baseline, missing in current"));
+        }
+    }
+    for name in cur_cases.keys() {
+        if !base_cases.contains_key(name) {
+            drift.push(format!("case {name} present in current, not in baseline"));
+        }
+    }
+    for (name, bf) in &base_cases {
+        let Some(cf) = cur_cases.get(name) else { continue };
+        for f in IDENTITY_NUM.iter() {
+            if let (Some(bv), Some(cv)) = (bf.get(*f), cf.get(*f)) {
+                if bv != cv {
+                    drift.push(format!("case {name}: {f} drifted ({bv} -> {cv})"));
+                }
+            }
+        }
+    }
+    if !drift.is_empty() {
+        for d in &drift {
+            eprintln!("schema drift: {d}");
+        }
+        return Err(BismoError::VerifyFailed(format!(
+            "bench-check: {} schema drift issue(s) between {baseline_path} and {current_path}",
+            drift.len()
+        )));
+    }
+
+    // Regression gate on the machine-relative speedups.
+    let mut t = Table::new(
+        &format!("bench-check (tolerance {tolerance})"),
+        &["case", "baseline speedup", "current speedup", "floor", "status"],
+    );
+    let mut regressions = 0usize;
+    let mut check = |name: &str, basev: f64, curv: f64| {
+        let floor = basev * (1.0 - tolerance);
+        let ok = curv >= floor;
+        t.rowf(&[
+            &name,
+            &f(basev, 3),
+            &f(curv, 3),
+            &f(floor, 3),
+            &if ok { "ok" } else { "REGRESSION" },
+        ]);
+        if !ok {
+            regressions += 1;
+        }
+    };
+    for (name, bf) in &base_cases {
+        let cf = &cur_cases[name];
+        check(name, bf["speedup_1t"], cf["speedup_1t"]);
+    }
+    let headline_speedup = |doc: &Json, which: &str| -> Result<f64, BismoError> {
+        doc.get("headline")
+            .and_then(|h| h.get("speedup_1t"))
+            .and_then(Json::as_f64)
+            .ok_or_else(|| {
+                BismoError::Parse(format!("{which}: headline.speedup_1t missing"))
+            })
+    };
+    check(
+        "headline",
+        headline_speedup(&base, "baseline")?,
+        headline_speedup(&cur, "current")?,
+    );
+    t.print();
+    if regressions > 0 {
+        return Err(BismoError::VerifyFailed(format!(
+            "bench-check: {regressions} case(s) regressed beyond tolerance {tolerance}"
+        )));
+    }
+    println!(
+        "bench-check OK: {} case(s) + headline within tolerance {tolerance}",
+        base_cases.len()
+    );
+    Ok(())
+}
+
 fn cmd_costmodel(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     let model = CostModel::paper();
     let fitted = CostModel::fit_from_synth();
@@ -1054,11 +1514,13 @@ fn cmd_info() -> Result<(), BismoError> {
     Ok(())
 }
 
-const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|bench|serve-bench|shard-bench|costmodel|synth|power|instances|info> [flags]
+const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|bench|serve-bench|shard-bench|cnn-bench|bench-check|costmodel|synth|power|instances|info> [flags]
 flags: --instance N  --m M --k K --n N  --wbits W --abits A  --signed --no-overlap --bit-skip  --seed S  --dk N
 bench: --quick  --out PATH (default BENCH_gemm.json)  --threads N
 serve-bench: --quick  --backend engine|sim  --requests N  --rate RPS  --layers L  --workers W  --batch B  --out PATH (default BENCH_serve.json)
-shard-bench: --quick  --backend engine|sim  --reps N  --max-shards S  --budget-luts L --budget-brams B  --out PATH (default BENCH_shard.json)";
+shard-bench: --quick  --backend engine|sim  --reps N  --max-shards S  --budget-luts L --budget-brams B  --out PATH (default BENCH_shard.json)
+cnn-bench: --quick  --batch B  --reps N  --out PATH (default BENCH_cnn.json)
+bench-check: --baseline PATH  --current PATH  --tolerance F (default 0.35)";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -1071,6 +1533,8 @@ fn main() {
         "bench" => cmd_bench(&flags),
         "serve-bench" => cmd_serve_bench(&flags),
         "shard-bench" => cmd_shard_bench(&flags),
+        "cnn-bench" => cmd_cnn_bench(&flags),
+        "bench-check" => cmd_bench_check(&flags),
         "costmodel" => cmd_costmodel(&flags),
         "synth" => cmd_synth(&flags),
         "power" => cmd_power(),

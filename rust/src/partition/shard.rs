@@ -15,6 +15,13 @@ pub struct GemmShape {
     pub n: usize,
 }
 
+impl std::fmt::Display for GemmShape {
+    /// The `MxKxN` form every bench table and report uses.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.m, self.k, self.n)
+    }
+}
+
 /// One shard of a [`ShardPlan`]: an output block (`rows × cols`),
 /// optionally restricted to a group of LHS bit-planes.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -185,6 +192,12 @@ impl ShardPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn gemm_shape_displays_in_bench_form() {
+        let s = GemmShape { m: 16, k: 784, n: 10 };
+        assert_eq!(s.to_string(), "16x784x10");
+    }
 
     #[test]
     fn grid_covers_output_disjointly() {

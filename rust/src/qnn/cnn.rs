@@ -1,0 +1,425 @@
+//! Quantized CNN layers on the overlay: the convolution-dominated
+//! workload the paper motivates BISMO with.
+//!
+//! [`QnnCnn`] is a small conv–pool–conv–pool–dense classifier whose
+//! conv layers lower onto the GEMM stack through [`crate::lowering`]
+//! and whose every GEMM is served by [`crate::coordinator::BismoService`].
+//! Layer weights are prepared once ([`QnnCnn::serve`] →
+//! [`crate::api::PreparedConv`] / [`crate::api::Prepared`]) and reused
+//! across inferences — the weight-stationary pattern — and each layer
+//! carries its *own* operand precision, exercising the paper's claim
+//! that "precision requirements may vary between different application
+//! phases" at layer granularity.
+//!
+//! Weights are synthetic (seeded random): the claim under test is
+//! bit-exactness of the full lowered serving path against the naive
+//! direct-convolution reference ([`QnnCnn::forward_reference`]), plus
+//! the serving-layer properties (cache reuse, per-layer precision
+//! override) — not classification accuracy.
+
+use crate::api::{BismoError, Prepared, PreparedConv, Session};
+use crate::bitmatrix::IntMatrix;
+use crate::coordinator::{Backend, GemmResponse, Precision};
+use crate::lowering::{conv2d_direct, ConvSpec, LoweringMode, Tensor};
+use crate::qnn::quantize::quantize_activations;
+use crate::util::Rng;
+use std::sync::Arc;
+
+/// One quantized convolution layer: spec, lowered-layout weights and
+/// the layer's operand precision (`wbits` = activation bits, unsigned
+/// LHS; `abits` = weight bits, signed RHS — the same orientation the
+/// MLP layers use).
+#[derive(Clone)]
+pub struct Conv2d {
+    pub spec: ConvSpec,
+    pub weights: Arc<IntMatrix>,
+    pub prec: Precision,
+}
+
+impl Conv2d {
+    /// Random signed `wbits`-bit weights for `spec`, served at
+    /// `abits`-bit unsigned activations.
+    pub fn random(rng: &mut Rng, spec: ConvSpec, abits: u32, wbits: u32) -> Conv2d {
+        let weights = spec.weights_from_fn(|_, _, _, _| rng.operand(wbits, true));
+        Conv2d {
+            spec,
+            weights: Arc::new(weights),
+            prec: Precision {
+                wbits: abits,
+                abits: wbits,
+                lsigned: false,
+                rsigned: true,
+            },
+        }
+    }
+
+    /// Direct-convolution reference for this layer.
+    pub fn forward_reference(&self, x: &Tensor) -> Tensor {
+        conv2d_direct(x, &self.weights, &self.spec)
+    }
+}
+
+/// 2-D max pooling (per channel, no padding).
+#[derive(Clone, Copy, Debug)]
+pub struct MaxPool2d {
+    pub kernel: usize,
+    pub stride: usize,
+}
+
+impl MaxPool2d {
+    pub fn new(kernel: usize, stride: usize) -> MaxPool2d {
+        assert!(kernel >= 1 && stride >= 1, "pool kernel/stride must be >= 1");
+        MaxPool2d { kernel, stride }
+    }
+
+    /// Output height/width for an input of `h × w`.
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        assert!(h >= self.kernel && w >= self.kernel, "pool window exceeds input");
+        (
+            (h - self.kernel) / self.stride + 1,
+            (w - self.kernel) / self.stride + 1,
+        )
+    }
+
+    /// Apply the pool to every image and channel.
+    pub fn apply(&self, t: &Tensor) -> Tensor {
+        let (oh, ow) = self.out_hw(t.h, t.w);
+        Tensor::from_fn(t.n, oh, ow, t.c, |b, oy, ox, c| {
+            let mut best = i64::MIN;
+            for dy in 0..self.kernel {
+                for dx in 0..self.kernel {
+                    best = best.max(t.get(b, oy * self.stride + dy, ox * self.stride + dx, c));
+                }
+            }
+            best
+        })
+    }
+}
+
+/// FINN-style thresholding activation: the output is the number of
+/// thresholds the accumulator meets or exceeds — a monotonic staircase
+/// that folds ReLU and requantization into one integer comparison
+/// chain. With `2^bits − 1` thresholds the output fits unsigned
+/// `bits`-bit, i.e. the next layer's activation precision.
+#[derive(Clone, Debug)]
+pub struct Thresholding {
+    pub thresholds: Vec<i64>,
+}
+
+impl Thresholding {
+    /// Uniformly spaced thresholds `j · 2^shift` for
+    /// `j = 1 ..= 2^bits − 1`.
+    pub fn uniform(shift: u32, bits: u32) -> Thresholding {
+        Thresholding {
+            thresholds: (1..(1i64 << bits)).map(|j| j << shift).collect(),
+        }
+    }
+
+    /// Threshold one accumulator.
+    #[inline]
+    pub fn value(&self, v: i64) -> i64 {
+        self.thresholds.iter().filter(|&&t| v >= t).count() as i64
+    }
+
+    /// Threshold every element.
+    pub fn apply(&self, t: &Tensor) -> Tensor {
+        t.map(|v| self.value(v))
+    }
+}
+
+/// A quantized conv–pool–conv–pool–dense classifier, every GEMM of
+/// which runs on the overlay stack.
+pub struct QnnCnn {
+    pub conv1: Conv2d,
+    pub t1: Thresholding,
+    pub pool1: MaxPool2d,
+    pub conv2: Conv2d,
+    pub t2: Thresholding,
+    pub pool2: MaxPool2d,
+    /// Dense head: `(h·w·c after pool2) × classes`, lowered-GEMM RHS.
+    pub fc: Arc<IntMatrix>,
+    pub fc_prec: Precision,
+    /// Activation precision (network input and thresholded layers).
+    pub abits: u32,
+}
+
+/// Threshold shift placing the top threshold just under the layer's
+/// worst-case accumulator, so the staircase actually spreads.
+fn shift_for(spec: &ConvSpec, abits: u32, wbits: u32) -> u32 {
+    let max_acc =
+        (spec.weight_rows() as i64) * ((1i64 << abits) - 1) * (1i64 << (wbits - 1));
+    let levels = (1i64 << abits) - 1;
+    let mut shift = 0u32;
+    while (levels << (shift + 1)) <= max_acc {
+        shift += 1;
+    }
+    shift
+}
+
+impl QnnCnn {
+    /// Build a seeded-random CNN for `in_h × in_w` single-channel
+    /// inputs: 3×3/pad-1 convs to `c1` then `c2` channels (each
+    /// followed by thresholding and 2×2/2 max-pool), then a dense head
+    /// to 10 classes. Per-layer precision: conv1 weights are 3-bit,
+    /// conv2 weights 2-bit, dense weights 3-bit — three different
+    /// precisions served by one session.
+    pub fn new(seed: u64, in_h: usize, in_w: usize, c1: usize, c2: usize, abits: u32) -> QnnCnn {
+        let mut rng = Rng::new(seed);
+        let pool = MaxPool2d::new(2, 2);
+        let spec1 = ConvSpec::simple(in_h, in_w, 1, c1, 3, 1);
+        let conv1 = Conv2d::random(&mut rng, spec1, abits, 3);
+        let (h1, w1) = pool.out_hw(spec1.out_h(), spec1.out_w());
+        let spec2 = ConvSpec::simple(h1, w1, c1, c2, 3, 1);
+        let conv2 = Conv2d::random(&mut rng, spec2, abits, 2);
+        let (h2, w2) = pool.out_hw(spec2.out_h(), spec2.out_w());
+        let fc_in = h2 * w2 * c2;
+        let fc = IntMatrix::from_fn(fc_in, 10, |_, _| rng.operand(3, true));
+        QnnCnn {
+            t1: Thresholding::uniform(shift_for(&spec1, abits, 3), abits),
+            t2: Thresholding::uniform(shift_for(&spec2, abits, 2), abits),
+            conv1,
+            conv2,
+            pool1: pool,
+            pool2: pool,
+            fc: Arc::new(fc),
+            fc_prec: Precision {
+                wbits: abits,
+                abits: 3,
+                lsigned: false,
+                rsigned: true,
+            },
+            abits,
+        }
+    }
+
+    /// The 28×28 "digits" preset matching [`super::SyntheticDigits`]:
+    /// 1→8→16 channels, 7·7·16 = 784 dense inputs.
+    pub fn digits(seed: u64) -> QnnCnn {
+        QnnCnn::new(seed, 28, 28, 8, 16, 2)
+    }
+
+    /// Quantize a batch of float images (row-major `in_h · in_w`
+    /// pixels in `[0,1]`) to the network's activation precision.
+    pub fn quantize_input(&self, xs: &[Vec<f32>]) -> Tensor {
+        let (h, w) = (self.conv1.spec.in_h, self.conv1.spec.in_w);
+        let quant: Vec<Vec<i64>> = xs
+            .iter()
+            .map(|x| {
+                assert_eq!(x.len(), h * w, "image size mismatch");
+                quantize_activations(x, self.abits)
+            })
+            .collect();
+        Tensor::from_fn(xs.len(), h, w, 1, |b, y, x, _| quant[b][y * w + x])
+    }
+
+    /// Pure-integer reference forward pass: direct convolution, no
+    /// lowering machinery. Returns `batch × 10` logits.
+    pub fn forward_reference(&self, x: &Tensor) -> IntMatrix {
+        let a1 = self.t1.apply(&self.conv1.forward_reference(x));
+        let p1 = self.pool1.apply(&a1);
+        let a2 = self.t2.apply(&self.conv2.forward_reference(&p1));
+        let p2 = self.pool2.apply(&a2);
+        p2.flatten().matmul(&self.fc)
+    }
+
+    /// Prepare every layer's weights in `session`'s cache once and
+    /// return the serving handle. `mode` selects the conv lowering,
+    /// `backend` the execution backend for all layers.
+    pub fn serve<'s>(
+        &self,
+        session: &'s Session,
+        mode: LoweringMode,
+        backend: Backend,
+    ) -> Result<CnnSession<'s>, BismoError> {
+        let conv1 = session
+            .conv(self.conv1.spec, self.conv1.prec)
+            .lowering(mode)
+            .backend(backend)
+            .prepare(self.conv1.weights.clone())?;
+        let conv2 = session
+            .conv(self.conv2.spec, self.conv2.prec)
+            .lowering(mode)
+            .backend(backend)
+            .prepare(self.conv2.weights.clone())?;
+        let fc = session.matmul(self.fc_prec).backend(backend).prepare(self.fc.clone())?;
+        Ok(CnnSession {
+            conv1,
+            conv2,
+            fc,
+            t1: self.t1.clone(),
+            t2: self.t2.clone(),
+            pool1: self.pool1,
+            pool2: self.pool2,
+        })
+    }
+
+    /// Argmax predictions from logits.
+    pub fn predictions(logits: &IntMatrix) -> Vec<usize> {
+        super::QnnMlp::predictions(logits)
+    }
+}
+
+/// A [`QnnCnn`] whose weights are resident in a session's packing
+/// cache: the prepare-once-execute-many handle for whole-network
+/// inference.
+pub struct CnnSession<'s> {
+    conv1: PreparedConv<'s>,
+    conv2: PreparedConv<'s>,
+    fc: Prepared<'s>,
+    t1: Thresholding,
+    t2: Thresholding,
+    pool1: MaxPool2d,
+    pool2: MaxPool2d,
+}
+
+impl CnnSession<'_> {
+    /// One batched inference at the layers' prepared precisions.
+    /// Returns `batch × 10` logits and the per-GEMM responses (conv1
+    /// taps, conv2 taps, dense — in execution order).
+    pub fn infer(&self, x: &Tensor) -> Result<(IntMatrix, Vec<GemmResponse>), BismoError> {
+        self.infer_inner(x, None)
+    }
+
+    /// [`CnnSession::infer`] with a per-layer precision override on
+    /// the second conv layer: the same resident weights served at a
+    /// different declared precision — the variable-precision serving
+    /// case at layer granularity.
+    pub fn infer_with_conv2(
+        &self,
+        x: &Tensor,
+        conv2_prec: Precision,
+    ) -> Result<(IntMatrix, Vec<GemmResponse>), BismoError> {
+        self.infer_inner(x, Some(conv2_prec))
+    }
+
+    fn infer_inner(
+        &self,
+        x: &Tensor,
+        conv2_prec: Option<Precision>,
+    ) -> Result<(IntMatrix, Vec<GemmResponse>), BismoError> {
+        let r1 = self.conv1.execute(x)?;
+        let p1 = self.pool1.apply(&self.t1.apply(&r1.output));
+        let r2 = match conv2_prec {
+            None => self.conv2.execute(&p1)?,
+            Some(p) => self.conv2.execute_with(&p1, p)?,
+        };
+        let p2 = self.pool2.apply(&self.t2.apply(&r2.output));
+        let r3 = self.fc.execute(p2.flatten())?;
+        let logits = r3.result.clone();
+        let mut gemms = r1.gemms;
+        gemms.extend(r2.gemms);
+        gemms.push(r3);
+        Ok((logits, gemms))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::SessionConfig;
+
+    fn tiny() -> QnnCnn {
+        QnnCnn::new(0xC22, 8, 8, 3, 4, 2)
+    }
+
+    fn random_input(rng: &mut Rng, cnn: &QnnCnn, batch: usize) -> Tensor {
+        let spec = cnn.conv1.spec;
+        Tensor::random(rng, batch, spec.in_h, spec.in_w, 1, cnn.abits, false)
+    }
+
+    #[test]
+    fn geometry_chains_through_the_network() {
+        let cnn = tiny();
+        assert_eq!(cnn.conv1.spec.out_h(), 8);
+        assert_eq!(cnn.conv2.spec.in_h, 4);
+        assert_eq!(cnn.fc.rows, 2 * 2 * 4);
+        let digits = QnnCnn::digits(1);
+        assert_eq!(digits.fc.rows, 7 * 7 * 16, "28→14→7 spatial chain");
+    }
+
+    #[test]
+    fn thresholding_is_a_monotonic_staircase_that_fits() {
+        let t = Thresholding::uniform(3, 2);
+        assert_eq!(t.thresholds, vec![8, 16, 24]);
+        assert_eq!(t.value(-5), 0);
+        assert_eq!(t.value(7), 0);
+        assert_eq!(t.value(8), 1);
+        assert_eq!(t.value(1000), 3);
+        let x = Tensor::from_fn(1, 2, 2, 1, |_, y, xp, _| (y * 16 + xp * 8) as i64);
+        assert!(t.apply(&x).fits(2, false));
+    }
+
+    #[test]
+    fn maxpool_matches_hand_example() {
+        let x = Tensor::from_fn(1, 4, 4, 1, |_, y, xp, _| (y * 4 + xp) as i64);
+        let p = MaxPool2d::new(2, 2).apply(&x);
+        assert_eq!((p.h, p.w), (2, 2));
+        assert_eq!(p.get(0, 0, 0, 0), 5);
+        assert_eq!(p.get(0, 1, 1, 0), 15);
+    }
+
+    #[test]
+    fn served_cnn_is_bit_exact_on_both_backends_and_modes() {
+        let cnn = tiny();
+        let mut rng = Rng::new(0x11F);
+        let session = Session::new(SessionConfig::default()).unwrap();
+        let x = random_input(&mut rng, &cnn, 2);
+        let want = cnn.forward_reference(&x);
+        for backend in [Backend::Engine, Backend::Sim] {
+            for mode in [LoweringMode::Im2col, LoweringMode::Kn2row] {
+                let served = cnn.serve(&session, mode, backend).unwrap();
+                let (logits, gemms) = served.infer(&x).unwrap();
+                assert_eq!(logits, want, "{} {:?}", backend.name(), mode);
+                let conv_gemms = match mode {
+                    LoweringMode::Im2col => 2,
+                    LoweringMode::Kn2row => 18,
+                };
+                assert_eq!(gemms.len(), conv_gemms + 1);
+                if backend == Backend::Sim {
+                    assert!(gemms.iter().all(|g| g.report.is_some()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_inference_reuses_every_weight_packing() {
+        let cnn = tiny();
+        let mut rng = Rng::new(0x120);
+        let session = Session::new(SessionConfig::default()).unwrap();
+        let served = cnn.serve(&session, LoweringMode::Im2col, Backend::Engine).unwrap();
+        let after_prepare = session.cache_stats();
+        for i in 0..3 {
+            let x = random_input(&mut rng, &cnn, 1);
+            let (logits, gemms) = served.infer(&x).unwrap();
+            assert_eq!(logits, cnn.forward_reference(&x), "inference {i}");
+            assert!(gemms.iter().all(|g| g.rhs_cached), "inference {i} hits the cache");
+        }
+        let after = session.cache_stats();
+        assert_eq!(after.misses, after_prepare.misses, "no repacks after prepare");
+    }
+
+    #[test]
+    fn conv2_precision_override_serves_same_weights_wider() {
+        let cnn = tiny();
+        let mut rng = Rng::new(0x121);
+        let session = Session::new(SessionConfig::default()).unwrap();
+        let served = cnn.serve(&session, LoweringMode::Im2col, Backend::Engine).unwrap();
+        let x = random_input(&mut rng, &cnn, 2);
+        let (base_logits, _) = served.infer(&x).unwrap();
+        // Declared headroom on conv2 (activations 3-bit, weights
+        // 4-bit) must not change a single logit.
+        let wider = Precision {
+            wbits: 3,
+            abits: 4,
+            lsigned: false,
+            rsigned: true,
+        };
+        let (logits, _) = served.infer_with_conv2(&x, wider).unwrap();
+        assert_eq!(logits, base_logits);
+        // The override packing is resident from its first use.
+        let (logits2, gemms) = served.infer_with_conv2(&x, wider).unwrap();
+        assert_eq!(logits2, base_logits);
+        assert!(gemms.iter().all(|g| g.rhs_cached));
+    }
+}

@@ -15,12 +15,18 @@
 //!   weights are weight-stationary, so the service's packing cache
 //!   skips repacking them per request); all must agree bit-exactly
 //!   with the AOT-compiled JAX artifact.
+//! * [`cnn`] — quantized CNN layers ([`Conv2d`] lowered onto the GEMM
+//!   stack via [`crate::lowering`], [`MaxPool2d`], [`Thresholding`])
+//!   and the [`QnnCnn`] conv–pool–conv–pool–dense classifier served
+//!   end to end with per-layer precision.
 
+pub mod cnn;
 pub mod dataset;
 pub mod infer;
 pub mod mlp;
 pub mod quantize;
 
+pub use cnn::{CnnSession, Conv2d, MaxPool2d, QnnCnn, Thresholding};
 pub use dataset::SyntheticDigits;
 pub use infer::QnnMlp;
 pub use mlp::FloatMlp;

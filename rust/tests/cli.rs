@@ -191,6 +191,137 @@ fn shard_bench_quick_writes_scaling_curve() {
 }
 
 #[test]
+fn cnn_bench_quick_writes_json() {
+    let out = std::env::temp_dir().join(format!("bismo_cnn_{}.json", std::process::id()));
+    let out_str = out.to_str().unwrap().to_string();
+    // Minimal batch/reps: this test checks plumbing and schema; the CI
+    // smoke step runs the real quick suite.
+    let (ok, text) = bismo(&[
+        "cnn-bench", "--quick", "--batch", "1", "--reps", "1", "--out", &out_str,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("inferences/s"), "{text}");
+    let json = std::fs::read_to_string(&out).expect("cnn bench json written");
+    let _ = std::fs::remove_file(&out);
+    let doc = bismo::util::Json::parse(&json).expect("valid json");
+    assert_eq!(
+        doc.get("schema").and_then(|s| s.as_str()),
+        Some("bismo-bench-cnn/v1")
+    );
+    assert_eq!(doc.get("mode").and_then(|s| s.as_str()), Some("quick"));
+    let layers = doc.get("layers").and_then(|l| l.as_arr()).expect("layers");
+    // conv1/conv2 for both lowerings + the dense head once.
+    assert_eq!(layers.len(), 5, "{json}");
+    for l in layers {
+        for key in [
+            "name",
+            "lowering",
+            "m",
+            "k",
+            "n",
+            "activation_bits",
+            "weight_bits",
+            "gemms",
+            "binary_ops",
+            "engine_exec_ns",
+            "sim_cycles",
+        ] {
+            assert!(l.get(key).is_some(), "layer missing {key}: {json}");
+        }
+        let cycles = l.get("sim_cycles").and_then(|v| v.as_f64()).unwrap();
+        assert!(cycles > 0.0, "sim cycles must be positive: {json}");
+    }
+    let e2e = doc.get("end_to_end").expect("end_to_end");
+    for mode in ["im2col", "kn2row"] {
+        let m = e2e.get(mode).expect(mode);
+        assert!(m.get("inferences_per_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(m.get("sim_total_cycles").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    }
+    assert!(doc.get("headline").and_then(|h| h.get("inferences_per_s")).is_some());
+}
+
+/// Write a minimal-but-schema-complete BENCH_gemm.json for bench-check
+/// tests, with one case named `c1` at the given speedup.
+fn write_bench_file(tag: &str, speedup: f64, binary_ops: f64) -> String {
+    let name = format!("bismo_check_{}_{}.json", tag, std::process::id());
+    let path = std::env::temp_dir().join(name);
+    let text = format!(
+        r#"{{
+  "schema": "bismo-bench-gemm/v1",
+  "mode": "quick",
+  "threads": 2,
+  "generated_unix": 0,
+  "cases": [
+    {{
+      "name": "c1", "m": 8, "k": 64, "n": 8, "wbits": 2, "abits": 2, "signed": false,
+      "binary_ops": {binary_ops},
+      "baseline_ns": 1000, "tiled_ns": 500, "tiled_mt_ns": 250,
+      "baseline_gops": 1.0, "tiled_gops": 2.0, "tiled_mt_gops": 4.0,
+      "speedup_1t": {speedup}, "speedup_mt": 4.0
+    }}
+  ],
+  "headline": {{ "case": "c1", "speedup_1t": {speedup} }}
+}}
+"#
+    );
+    std::fs::write(&path, text).expect("write bench file");
+    path.to_str().unwrap().to_string()
+}
+
+#[test]
+fn bench_check_passes_within_tolerance_and_fails_beyond() {
+    let base = write_bench_file("base", 2.0, 65536.0);
+    let same = write_bench_file("same", 1.9, 65536.0);
+    let (ok, text) = bismo(&[
+        "bench-check", "--baseline", &base, "--current", &same, "--tolerance", "0.35",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("bench-check OK"), "{text}");
+    // A 2.0 -> 1.0 speedup collapse is beyond a 35% tolerance.
+    let slow = write_bench_file("slow", 1.0, 65536.0);
+    let (ok, text) = bismo(&[
+        "bench-check", "--baseline", &base, "--current", &slow, "--tolerance", "0.35",
+    ]);
+    assert!(!ok, "regression must fail the gate: {text}");
+    assert!(text.contains("REGRESSION"), "{text}");
+    for p in [base, same, slow] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn bench_check_rejects_schema_drift() {
+    // Same case name but different workload identity (binary_ops):
+    // the comparison is meaningless, so the gate must fail loudly.
+    let base = write_bench_file("dbase", 2.0, 65536.0);
+    let drifted = write_bench_file("ddrift", 2.0, 131072.0);
+    let (ok, text) = bismo(&["bench-check", "--baseline", &base, "--current", &drifted]);
+    assert!(!ok, "{text}");
+    assert!(text.contains("schema drift"), "{text}");
+    // Missing --current is a parse error, not a panic.
+    let (ok, text) = bismo(&["bench-check", "--baseline", &base]);
+    assert!(!ok);
+    assert!(text.contains("--current"), "{text}");
+    // An explicit but unparsable tolerance fails instead of silently
+    // loosening the gate to the default.
+    let (ok, text) = bismo(&[
+        "bench-check", "--baseline", &base, "--current", &base, "--tolerance", "10%",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("bad --tolerance"), "{text}");
+    // The committed CI baseline itself must be schema-complete: checked
+    // against itself it passes at any tolerance.
+    let committed = concat!(env!("CARGO_MANIFEST_DIR"), "/../ci/bench_baseline.json");
+    let (ok, text) = bismo(&[
+        "bench-check", "--baseline", committed, "--current", committed, "--tolerance", "0.0",
+    ]);
+    assert!(ok, "committed baseline must self-validate: {text}");
+    for p in [base, drifted] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
 fn unknown_instance_is_a_clean_error_not_a_panic() {
     // `try_instance` behind the CLI: a bad Table IV id must exit 1 with
     // a typed-error message, not a panic/abort backtrace.

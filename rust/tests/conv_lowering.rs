@@ -1,0 +1,224 @@
+//! Property suite for the convolution lowering stack: every lowered
+//! execution path — im2col and kn2row, engine and sim backends,
+//! sharded, prepared-weight reuse — must be bit-exact against the
+//! naive `i64` direct-convolution oracle across stride / padding /
+//! dilation / ragged channel counts. Plus the typed-error contract
+//! for illegal specs.
+
+use bismo::api::{Backend, BismoError, Precision, Session, SessionConfig};
+use bismo::lowering::{conv2d_direct, im2col_matrix, pack_im2col, ConvSpec, LoweringMode, Tensor};
+use bismo::util::{property_sweep, Rng};
+
+fn random_spec(rng: &mut Rng) -> ConvSpec {
+    loop {
+        let spec = ConvSpec {
+            in_h: rng.index(10) + 2,
+            in_w: rng.index(10) + 2,
+            // Raggedy channel counts on purpose: 1, 3, 5, ... never a
+            // friendly power of two beyond chance.
+            in_c: rng.index(5) + 1,
+            out_c: rng.index(6) + 1,
+            kh: rng.index(3) + 1,
+            kw: rng.index(3) + 1,
+            stride: (rng.index(3) + 1, rng.index(3) + 1),
+            pad: (rng.index(3), rng.index(3)),
+            dilation: (rng.index(2) + 1, rng.index(2) + 1),
+        };
+        if spec.validate().is_ok() {
+            return spec;
+        }
+    }
+}
+
+fn random_prec(rng: &mut Rng) -> Precision {
+    Precision {
+        wbits: rng.index(3) as u32 + 1,
+        abits: rng.index(3) as u32 + 1,
+        lsigned: false,
+        rsigned: rng.chance(0.7),
+    }
+}
+
+#[test]
+fn lowered_conv_matches_direct_oracle_across_spec_space() {
+    let session = Session::with_defaults().unwrap();
+    property_sweep(0xC09F, 18, |rng, i| {
+        let spec = random_spec(rng);
+        let prec = random_prec(rng);
+        let batch = rng.index(3) + 1;
+        let x = Tensor::random(rng, batch, spec.in_h, spec.in_w, spec.in_c, prec.wbits, false);
+        let w = spec.weights_from_fn(|_, _, _, _| rng.operand(prec.abits, prec.rsigned));
+        let want = conv2d_direct(&x, &w, &spec);
+        // Alternate backend/mode per case to keep the sweep fast while
+        // covering the full matrix over the run.
+        let backend = if i % 2 == 0 { Backend::Engine } else { Backend::Sim };
+        let mode = if i % 4 < 2 {
+            LoweringMode::Im2col
+        } else {
+            LoweringMode::Kn2row
+        };
+        let resp = session
+            .conv(spec, prec)
+            .backend(backend)
+            .lowering(mode)
+            .verify(true)
+            .run(&x, w)
+            .unwrap();
+        assert_eq!(resp.output, want, "case {i}: {spec:?} {prec:?} {mode:?}");
+    });
+}
+
+#[test]
+fn sharded_lowered_conv_matches_oracle_on_both_backends() {
+    let session = Session::with_defaults().unwrap();
+    property_sweep(0x54AC, 6, |rng, i| {
+        let spec = random_spec(rng);
+        let prec = random_prec(rng);
+        let batch = rng.index(2) + 2;
+        let x = Tensor::random(rng, batch, spec.in_h, spec.in_w, spec.in_c, prec.wbits, false);
+        let w = spec.weights_from_fn(|_, _, _, _| rng.operand(prec.abits, prec.rsigned));
+        let want = conv2d_direct(&x, &w, &spec);
+        let backend = if i % 2 == 0 { Backend::Engine } else { Backend::Sim };
+        let resp = session
+            .conv(spec, prec)
+            .backend(backend)
+            .instances(4)
+            .verify(true)
+            .run(&x, w)
+            .unwrap();
+        assert_eq!(resp.output, want, "case {i}: {spec:?}");
+        assert!(
+            resp.gemms.iter().all(|g| g.shards >= 1),
+            "sharding metadata present"
+        );
+    });
+}
+
+#[test]
+fn prepared_weights_reused_across_inputs_and_modes() {
+    let session = Session::with_defaults().unwrap();
+    let mut rng = Rng::new(0x9E9C);
+    let spec = ConvSpec {
+        in_h: 9,
+        in_w: 7,
+        in_c: 3,
+        out_c: 5,
+        kh: 3,
+        kw: 2,
+        stride: (2, 1),
+        pad: (1, 1),
+        dilation: (1, 1),
+    };
+    let prec = Precision {
+        wbits: 2,
+        abits: 3,
+        lsigned: false,
+        rsigned: true,
+    };
+    let w = spec.weights_from_fn(|_, _, _, _| rng.operand(3, true));
+    for mode in [LoweringMode::Im2col, LoweringMode::Kn2row] {
+        let prepared = session.conv(spec, prec).lowering(mode).prepare(w.clone()).unwrap();
+        let after_prepare = session.cache_stats();
+        for rep in 0..3 {
+            let x = Tensor::random(&mut rng, 2, spec.in_h, spec.in_w, spec.in_c, 2, false);
+            let resp = prepared.execute(&x).unwrap();
+            assert_eq!(resp.output, conv2d_direct(&x, &w, &spec), "{mode:?} rep {rep}");
+            assert!(resp.weights_cached(), "{mode:?} rep {rep} served from cache");
+        }
+        let after = session.cache_stats();
+        assert_eq!(after.misses, after_prepare.misses, "{mode:?}: no repacks");
+    }
+}
+
+#[test]
+fn packed_im2col_never_diverges_from_dense_lowering() {
+    // The zero-materialization path vs materialize-then-pack, across
+    // the whole spec space including dilation and asymmetric strides.
+    property_sweep(0x1A2C, 25, |rng, _| {
+        let spec = random_spec(rng);
+        let bits = rng.index(4) as u32 + 1;
+        let batch = rng.index(2) + 1;
+        let x = Tensor::random(rng, batch, spec.in_h, spec.in_w, spec.in_c, bits, false);
+        let packed = pack_im2col(&x, &spec, bits, false);
+        let dense = im2col_matrix(&x, &spec);
+        assert_eq!(packed.to_int(), dense, "{spec:?}");
+    });
+}
+
+#[test]
+fn illegal_specs_surface_as_typed_errors_through_the_facade() {
+    let session = Session::with_defaults().unwrap();
+    let ok = ConvSpec::simple(6, 6, 2, 3, 3, 1);
+    let prec = Precision {
+        wbits: 2,
+        abits: 2,
+        lsigned: false,
+        rsigned: true,
+    };
+    let x = Tensor::zeros(1, 6, 6, 2);
+    let w = ok.weights_from_fn(|_, _, _, _| 0);
+    let submitted = session.service().submitted();
+    // Padding at/beyond the kernel extent.
+    let r = session.conv(ConvSpec { pad: (3, 1), ..ok }, prec).run(&x, w.clone());
+    assert!(matches!(r, Err(BismoError::InvalidConfig(_))), "{r:?}");
+    // Zero channels, both sides.
+    for bad in [ConvSpec { in_c: 0, ..ok }, ConvSpec { out_c: 0, ..ok }] {
+        let r = session.conv(bad, prec).run(&x, w.clone());
+        assert!(matches!(r, Err(BismoError::InvalidConfig(_))), "{r:?}");
+    }
+    // prepare() validates identically — nothing is packed for an
+    // illegal spec.
+    let r = session.conv(ConvSpec { kh: 0, ..ok }, prec).prepare(w.clone());
+    assert!(r.is_err());
+    // Bad precision is rejected before lowering.
+    let bad_prec = Precision {
+        wbits: 0,
+        abits: 2,
+        lsigned: false,
+        rsigned: true,
+    };
+    let r = session.conv(ok, bad_prec).run(&x, w);
+    assert!(matches!(r, Err(BismoError::PrecisionUnsupported(_))), "{r:?}");
+    assert_eq!(session.service().submitted(), submitted, "nothing was queued");
+}
+
+#[test]
+fn strided_dilated_asymmetric_spec_exercises_every_knob_at_once() {
+    // One deliberately awkward spec: asymmetric kernel, stride,
+    // padding and dilation together, on both backends and modes.
+    let session = Session::new(SessionConfig::default()).unwrap();
+    let mut rng = Rng::new(0xD11A);
+    let spec = ConvSpec {
+        in_h: 11,
+        in_w: 8,
+        in_c: 3,
+        out_c: 2,
+        kh: 3,
+        kw: 2,
+        stride: (2, 3),
+        pad: (2, 1),
+        dilation: (2, 1),
+    };
+    spec.validate().unwrap();
+    let prec = Precision {
+        wbits: 3,
+        abits: 2,
+        lsigned: false,
+        rsigned: true,
+    };
+    let x = Tensor::random(&mut rng, 3, 11, 8, 3, 3, false);
+    let w = spec.weights_from_fn(|_, _, _, _| rng.operand(2, true));
+    let want = conv2d_direct(&x, &w, &spec);
+    for backend in [Backend::Engine, Backend::Sim] {
+        for mode in [LoweringMode::Im2col, LoweringMode::Kn2row] {
+            let resp = session
+                .conv(spec, prec)
+                .backend(backend)
+                .lowering(mode)
+                .verify(true)
+                .run(&x, w.clone())
+                .unwrap();
+            assert_eq!(resp.output, want, "{} {mode:?}", backend.name());
+        }
+    }
+}
