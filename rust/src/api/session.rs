@@ -173,6 +173,15 @@ impl<'s> MatmulBuilder<'s> {
         self
     }
 
+    /// Instruction-budget watchdog for the sim backend: fail the
+    /// request with a typed [`crate::sim::SimError::BudgetExceeded`]
+    /// once the simulation has retired `n` instructions, instead of
+    /// letting a mis-scheduled job occupy a worker indefinitely.
+    pub fn max_instrs(mut self, n: u64) -> Self {
+        self.opts.max_instrs = Some(n);
+        self
+    }
+
     /// Cache the packed LHS (off by default: fresh activations would
     /// churn the cache).
     pub fn cache_lhs(mut self, on: bool) -> Self {

@@ -128,6 +128,9 @@ impl BismoConfig {
                 self.dk, self.fetch_bits
             ));
         }
+        if self.acc_bits == 0 {
+            return bad("accumulator width must be at least 1 bit".into());
+        }
         if self.acc_bits > 64 {
             return bad("accumulator width above 64 bits is unsupported".into());
         }
@@ -187,6 +190,9 @@ mod tests {
         assert!(BismoConfig { dm: 0, ..BismoConfig::small() }.validate().is_err());
         assert!(BismoConfig { bm: 0, ..BismoConfig::small() }.validate().is_err());
         assert!(BismoConfig { fclk_mhz: 0, ..BismoConfig::small() }.validate().is_err());
+        assert!(BismoConfig { acc_bits: 0, ..BismoConfig::small() }.validate().is_err());
+        assert!(BismoConfig { acc_bits: 65, ..BismoConfig::small() }.validate().is_err());
+        assert!(BismoConfig { acc_bits: 64, ..BismoConfig::small() }.validate().is_ok());
     }
 
     #[test]

@@ -43,6 +43,36 @@ impl DramImage {
         u64::from_le_bytes(b)
     }
 
+    /// Bounds-checked [`DramImage::read_u64`]: the stage units use this
+    /// on program-derived addresses so an out-of-range DMA becomes a
+    /// typed stage fault instead of a slice-index panic.
+    pub fn try_read_u64(&self, addr: u64) -> Result<u64, String> {
+        match addr.checked_add(8) {
+            Some(end) if end <= self.bytes.len() as u64 => Ok(self.read_u64(addr)),
+            _ => Err(format!(
+                "DRAM read of 8 bytes at {:#x} out of range ({} byte image)",
+                addr,
+                self.bytes.len()
+            )),
+        }
+    }
+
+    /// Bounds-checked [`DramImage::write_i32`] (see
+    /// [`DramImage::try_read_u64`]).
+    pub fn try_write_i32(&mut self, addr: u64, v: i32) -> Result<(), String> {
+        match addr.checked_add(4) {
+            Some(end) if end <= self.bytes.len() as u64 => {
+                self.write_i32(addr, v);
+                Ok(())
+            }
+            _ => Err(format!(
+                "DRAM write of 4 bytes at {:#x} out of range ({} byte image)",
+                addr,
+                self.bytes.len()
+            )),
+        }
+    }
+
     pub fn write_u64(&mut self, addr: u64, v: u64) {
         let a = addr as usize;
         self.bytes[a..a + 8].copy_from_slice(&v.to_le_bytes());
@@ -62,6 +92,16 @@ impl DramImage {
 
     pub fn read_bytes(&self, addr: u64, len: usize) -> &[u8] {
         &self.bytes[addr as usize..addr as usize + len]
+    }
+
+    /// The full backing store (snapshot capture).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Rebuild an image from raw bytes (snapshot restore).
+    pub fn from_bytes(bytes: Vec<u8>) -> Self {
+        DramImage { bytes }
     }
 }
 

@@ -94,6 +94,12 @@ pub struct MatmulOptions {
     /// Cross-check the simulator result against the CPU bit-serial
     /// oracle (costs an extra software gemm).
     pub verify: bool,
+    /// Abort the simulation with a typed
+    /// [`crate::sim::SimError::BudgetExceeded`] after this many retired
+    /// instructions (`None` = unbounded). A watchdog for serving paths:
+    /// a mis-scheduled or hostile job fails fast instead of occupying a
+    /// worker for an unbounded run.
+    pub max_instrs: Option<u64>,
 }
 
 impl Default for MatmulOptions {
@@ -102,6 +108,7 @@ impl Default for MatmulOptions {
             overlap: Overlap::Full,
             bit_skip: false,
             verify: false,
+            max_instrs: None,
         }
     }
 }
@@ -400,7 +407,18 @@ impl BismoContext {
         let instructions = prog.stats();
 
         let mut sim = Simulation::new(self.cfg, &self.platform, dram)?;
-        let stats = sim.run(&prog)?;
+        let stats = match opts.max_instrs {
+            None => sim.run(&prog)?,
+            Some(budget) => {
+                sim.begin(&prog)?;
+                match sim.step(&prog, budget)? {
+                    crate::sim::StepOutcome::Completed(stats) => stats,
+                    crate::sim::StepOutcome::Suspended => {
+                        return Err(crate::sim::SimError::BudgetExceeded { budget }.into());
+                    }
+                }
+            }
+        };
         let result = res.load(&sim.dram);
 
         if opts.verify {

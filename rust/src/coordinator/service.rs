@@ -297,6 +297,12 @@ pub struct RequestOptions {
     /// on worker lanes, sim shards on independent simulator instances)
     /// and merge bit-exactly before the response completes.
     pub sharding: Sharding,
+    /// Instruction-budget watchdog for the sim backend: a request whose
+    /// simulation retires more than this many instructions fails with a
+    /// typed [`crate::sim::SimError::BudgetExceeded`] instead of
+    /// occupying a worker indefinitely (`None` = unbounded; engine
+    /// backend ignores it).
+    pub max_instrs: Option<u64>,
 }
 
 impl Default for RequestOptions {
@@ -309,6 +315,7 @@ impl Default for RequestOptions {
             cache_lhs: false,
             cache_rhs: true,
             sharding: Sharding::Single,
+            max_instrs: None,
         }
     }
 }
@@ -808,6 +815,7 @@ impl Inner {
             overlap: p.opts.overlap,
             bit_skip: p.opts.bit_skip,
             verify: false,
+            max_instrs: p.opts.max_instrs,
         };
         let shape = GemmShape {
             m: packed.la.rows,

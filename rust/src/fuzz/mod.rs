@@ -1,0 +1,833 @@
+//! Structured fuzzing of the ISA, the cycle-accurate simulator and the
+//! serving backends — plus the deterministic golden-snapshot report the
+//! CI ratchet checks.
+//!
+//! Everything here is driven by the repo's seeded [`Rng`] (xoshiro256**)
+//! and never touches wall-clock time or OS randomness, so **every
+//! failure is replayable from a one-line seed**: case `i` of a run with
+//! seed `S` uses `case_seed(S, i)`, which the failure report prints.
+//!
+//! Three modes, mirrored by `bismo fuzz --mode`:
+//!
+//! * **legal** — [`generate_legal_program`] emits arbitrary-but-legal
+//!   programs (token-causal generation order + a result-buffer credit
+//!   protocol make them deadlock- and fault-free by construction). They
+//!   must run to completion: no panic, no deadlock, no stage fault. The
+//!   same case is then re-run to check determinism, and run a third
+//!   time through a mid-run `snapshot → JSON → restore` cycle that must
+//!   be bit- and cycle-exact.
+//! * **mutation** — the same legal programs are serialized with
+//!   [`Program::to_bytes`] and corrupted (bit flips, truncation,
+//!   extension, garbage splices). Decoding and running the corpse must
+//!   yield typed errors ([`BismoError::Parse`] /
+//!   [`BismoError::IllegalProgram`] / [`BismoError::SimFault`]) — never
+//!   a panic.
+//! * **differential** — random shapes / precisions / sharding configs
+//!   are served through both [`Backend::Engine`] and [`Backend::Sim`]
+//!   on one [`BismoService`] and compared against the
+//!   [`IntMatrix::matmul`] oracle. Failing cases are greedily minimized
+//!   before being reported.
+
+use crate::api::BismoError;
+use crate::arch::{BismoConfig, PYNQ_Z1};
+use crate::bitmatrix::dram::{DramImage, OperandLayout, ResultLayout};
+use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
+use crate::coordinator::{
+    Backend, BismoService, GemmRequest, Precision, RequestOptions, ServiceConfig, Sharding,
+};
+use crate::isa::{ExecuteRun, FetchRun, Instr, Program, ResultRun, Stage, SyncChannel};
+use crate::scheduler::{self, MatmulJob, Overlap};
+use crate::sim::{digest_bytes, SimSnapshot, Simulation, StepOutcome};
+use crate::util::json::Json;
+use crate::util::{ceil_div, round_up, splitmix64, Rng};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// DRAM image size used by the legal/mutation modes. Big enough for any
+/// generated access pattern, small enough to snapshot cheaply.
+const FUZZ_DRAM_BYTES: usize = 1 << 16;
+
+/// Derive the per-case seed printed in failure reports. Case `i` of a
+/// run seeded `S` is fully reproduced by `Rng::new(case_seed(S, i))`.
+pub fn case_seed(seed: u64, index: u64) -> u64 {
+    splitmix64(seed ^ (index.wrapping_add(1)).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+}
+
+/// One replayable fuzz failure.
+#[derive(Clone, Debug)]
+pub struct FuzzFailure {
+    /// Mode name: `legal`, `mutation` or `differential`.
+    pub mode: &'static str,
+    /// Case index within the run.
+    pub index: u64,
+    /// The derived per-case seed — the one-line repro handle.
+    pub seed: u64,
+    /// What went wrong (panic payload, mismatch diff, minimized case).
+    pub detail: String,
+}
+
+/// Result of one fuzz mode run.
+#[derive(Clone, Debug)]
+pub struct FuzzOutcome {
+    pub mode: &'static str,
+    pub iters: u64,
+    pub failures: Vec<FuzzFailure>,
+}
+
+impl FuzzOutcome {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Render failure lists as the JSON artifact CI uploads.
+pub fn failures_to_json(outcomes: &[FuzzOutcome]) -> String {
+    let list: Vec<Json> = outcomes
+        .iter()
+        .flat_map(|o| o.failures.iter())
+        .map(|f| {
+            Json::Obj(
+                [
+                    ("mode".to_string(), Json::str(f.mode)),
+                    ("index".to_string(), Json::num(f.index as f64)),
+                    ("seed".to_string(), Json::Str(format!("{:#x}", f.seed))),
+                    ("detail".to_string(), Json::str(&f.detail)),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        })
+        .collect();
+    Json::Arr(list).pretty(2)
+}
+
+/// Random overlay configuration drawn from the small end of the design
+/// space (§V instances are too large to fuzz densely).
+pub fn random_fuzz_config(rng: &mut Rng) -> BismoConfig {
+    BismoConfig {
+        dm: *rng.pick(&[2, 4]),
+        dk: *rng.pick(&[64, 128]),
+        dn: *rng.pick(&[2, 4]),
+        bm: 64,
+        bn: 64,
+        br: *rng.pick(&[1, 2, 4]),
+        acc_bits: *rng.pick(&[16, 32, 64]),
+        ..BismoConfig::small()
+    }
+}
+
+/// Generate an arbitrary-but-legal program for `cfg` over a
+/// `dram_len`-byte image.
+///
+/// Legality by construction:
+///
+/// * **Token causality** — the generation order is itself a valid
+///   sequential execution: a `Wait` is only emitted while its channel
+///   has a pending generated `Signal`. Any concurrent stage
+///   interleaving therefore has at least one runnable instruction until
+///   the program drains (no deadlock).
+/// * **Result-buffer credits** — the first `B_r` commits are free;
+///   every later commit is preceded (in the execute queue) by a
+///   `Wait(result→execute)` whose token is only ever produced by a
+///   drained `RunResult`, so at commit *i* at least `i − B_r + 1` sets
+///   have drained and occupancy stays below `B_r` under *any* runtime
+///   interleaving (no overflow). Symmetrically every `RunResult` is
+///   gated on a commit's `Signal(execute→result)` (no underflow).
+/// * **Bounded addresses** — fetch/execute/result operand ranges are
+///   drawn inside the buffer depths and the DRAM image.
+pub fn generate_legal_program(rng: &mut Rng, cfg: &BismoConfig, dram_len: usize) -> Program {
+    use SyncChannel::{ExecuteToFetch, ExecuteToResult, FetchToExecute, ResultToExecute};
+    let wpc = ceil_div(cfg.dk as u64, 64);
+    let chunk_bytes = wpc * 8;
+    let num_bufs = (cfg.dm + cfg.dn) as usize;
+    let depth = cfg.bm as i64; // bm == bn in fuzz configs
+    let br = cfg.br as u64;
+
+    let mut p = Program::new();
+    // Pending generated-but-unconsumed tokens per channel
+    // [F→E, E→F, E→R, R→E].
+    let mut pending = [0u64; 4];
+    let mut commits = 0u64;
+    let mut drained = 0u64;
+
+    let push_exec = |p: &mut Program, rng: &mut Rng, commit: bool| {
+        let chunks = rng.range(1, 8) as u32;
+        p.push(
+            Stage::Execute,
+            Instr::Execute(ExecuteRun {
+                lhs_offset: rng.range(0, depth - chunks as i64) as u32,
+                rhs_offset: rng.range(0, depth - chunks as i64) as u32,
+                num_chunks: chunks,
+                shift: rng.range(0, 20) as u8,
+                negate: rng.chance(0.3),
+                acc_reset: rng.chance(0.3),
+                commit_result: commit,
+            }),
+        );
+    };
+
+    let ops = rng.range(8, 48);
+    for _ in 0..ops {
+        match rng.index(8) {
+            0 => {
+                p.push(Stage::Fetch, Instr::Signal(FetchToExecute));
+                pending[0] += 1;
+            }
+            1 if pending[0] > 0 => {
+                p.push(Stage::Execute, Instr::Wait(FetchToExecute));
+                pending[0] -= 1;
+            }
+            2 => {
+                p.push(Stage::Execute, Instr::Signal(ExecuteToFetch));
+                pending[1] += 1;
+            }
+            3 if pending[1] > 0 => {
+                p.push(Stage::Fetch, Instr::Wait(ExecuteToFetch));
+                pending[1] -= 1;
+            }
+            4 => {
+                // RunFetch: W words/block × B blocks, all cursors bounded
+                // by buf_offset + W·B ≤ depth.
+                let w = rng.range(1, 4) as u64;
+                let b = rng.range(1, 4) as u64;
+                let total_words = w * b; // ≤ 16
+                let block_bytes = w * chunk_bytes;
+                let stride = rng.range(0, 3) as u64 * chunk_bytes;
+                let extent = (b - 1) * stride + block_bytes;
+                let base = rng.below((dram_len as u64 - extent) / 8 + 1) * 8;
+                let range = rng.range(1, (num_bufs as i64).min(4)) as u8;
+                p.push(
+                    Stage::Fetch,
+                    Instr::Fetch(FetchRun {
+                        dram_base: base,
+                        block_bytes: block_bytes as u32,
+                        block_stride_bytes: stride as u32,
+                        num_blocks: b as u32,
+                        buf_offset: rng.range(0, depth - total_words as i64) as u32,
+                        buf_start: rng.range(0, num_bufs as i64 - range as i64) as u8,
+                        buf_range: range,
+                        words_per_buf: rng.range(1, 8) as u32,
+                    }),
+                );
+            }
+            5 => push_exec(&mut p, rng, false),
+            6 => {
+                // Commit: past the first B_r free slots, spend a
+                // result→execute credit first.
+                if commits >= br {
+                    if pending[3] == 0 {
+                        continue;
+                    }
+                    p.push(Stage::Execute, Instr::Wait(ResultToExecute));
+                    pending[3] -= 1;
+                }
+                push_exec(&mut p, rng, true);
+                p.push(Stage::Execute, Instr::Signal(ExecuteToResult));
+                pending[2] += 1;
+                commits += 1;
+            }
+            _ => {
+                // RunResult triple, gated on a committed set.
+                if drained >= commits || pending[2] == 0 {
+                    continue;
+                }
+                p.push(Stage::Result, Instr::Wait(ExecuteToResult));
+                pending[2] -= 1;
+                let rows = rng.range(1, cfg.dm as i64);
+                let cols = rng.range(1, cfg.dn as i64);
+                let stride = 4 * rng.range(cols, cols + 16) as u64;
+                let extent = (rows as u64 - 1) * stride + cols as u64 * 4;
+                let base = rng.below((dram_len as u64 - extent) / 4 + 1) * 4;
+                p.push(
+                    Stage::Result,
+                    Instr::Result(ResultRun {
+                        dram_base: base,
+                        offset: 0,
+                        rows: rows as u8,
+                        cols: cols as u8,
+                        row_stride_bytes: stride as u32,
+                    }),
+                );
+                p.push(Stage::Result, Instr::Signal(ResultToExecute));
+                pending[3] += 1;
+                drained += 1;
+            }
+        }
+    }
+
+    // Drain every committed-but-unwritten set (pending[2] == commits −
+    // drained holds as an invariant of the cases above).
+    while drained < commits {
+        p.push(Stage::Result, Instr::Wait(ExecuteToResult));
+        pending[2] -= 1;
+        p.push(
+            Stage::Result,
+            Instr::Result(ResultRun {
+                dram_base: 0,
+                offset: 0,
+                rows: 1,
+                cols: 1,
+                row_stride_bytes: 4,
+            }),
+        );
+        p.push(Stage::Result, Instr::Signal(ResultToExecute));
+        pending[3] += 1;
+        drained += 1;
+    }
+    // Balance the remaining channels so `Program::validate` passes; all
+    // these waits consume already-generated tokens, so they never stall
+    // forever.
+    for _ in 0..pending[0] {
+        p.push(Stage::Execute, Instr::Wait(FetchToExecute));
+    }
+    for _ in 0..pending[1] {
+        p.push(Stage::Fetch, Instr::Wait(ExecuteToFetch));
+    }
+    for _ in 0..pending[3] {
+        p.push(Stage::Execute, Instr::Wait(ResultToExecute));
+    }
+    p
+}
+
+/// Seeded DRAM image for legal/mutation cases.
+fn fuzz_dram(seed: u64) -> DramImage {
+    let mut img = DramImage::new(FUZZ_DRAM_BYTES);
+    for i in 0..(FUZZ_DRAM_BYTES as u64 / 8) {
+        img.write_u64(i * 8, splitmix64(seed ^ i));
+    }
+    img
+}
+
+fn panic_payload(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        format!("panic: {s}")
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        format!("panic: {s}")
+    } else {
+        "panic: <non-string payload>".to_string()
+    }
+}
+
+/// Run one legal-mode case; `Err(detail)` on any violation.
+fn legal_case(seed: u64) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    let cfg = random_fuzz_config(&mut rng);
+    let prog = generate_legal_program(&mut rng, &cfg, FUZZ_DRAM_BYTES);
+    prog.validate()
+        .map_err(|e| format!("generated program invalid: {e}"))?;
+
+    // 1. Must run to completion with no fault and no deadlock.
+    let mut sim = Simulation::new(cfg, &PYNQ_Z1, fuzz_dram(seed))
+        .map_err(|e| format!("config rejected: {e}"))?;
+    let stats = sim
+        .run(&prog)
+        .map_err(|e| format!("legal program errored: {e}"))?;
+
+    // 2. Determinism: an identical fresh run is bit- and cycle-exact.
+    let mut sim2 = Simulation::new(cfg, &PYNQ_Z1, fuzz_dram(seed)).unwrap();
+    let stats2 = sim2.run(&prog).map_err(|e| format!("re-run errored: {e}"))?;
+    if stats != stats2 || sim.dram.as_bytes() != sim2.dram.as_bytes() {
+        return Err("two identical runs diverged (non-determinism)".to_string());
+    }
+
+    // 3. Mid-run snapshot → JSON → restore must converge to the same
+    //    final state.
+    let cut = rng.below(prog.stats().total as u64 + 1);
+    let mut sim3 = Simulation::new(cfg, &PYNQ_Z1, fuzz_dram(seed)).unwrap();
+    sim3.begin(&prog).unwrap();
+    if let StepOutcome::Suspended = sim3
+        .step(&prog, cut)
+        .map_err(|e| format!("budgeted run errored: {e}"))?
+    {
+        let text = sim3.snapshot().to_json();
+        let snap = SimSnapshot::from_json(&text)
+            .map_err(|e| format!("snapshot JSON roundtrip failed: {e}"))?;
+        let mut resumed = Simulation::restore(&snap, &PYNQ_Z1)
+            .map_err(|e| format!("snapshot restore failed: {e}"))?;
+        match resumed
+            .step(&prog, u64::MAX)
+            .map_err(|e| format!("resumed run errored: {e}"))?
+        {
+            StepOutcome::Completed(rstats) => {
+                if rstats != stats || resumed.dram.as_bytes() != sim.dram.as_bytes() {
+                    return Err(format!(
+                        "resume after snapshot at instr {cut} diverged from uninterrupted run"
+                    ));
+                }
+            }
+            StepOutcome::Suspended => return Err("unbounded resume suspended".to_string()),
+        }
+    }
+    Ok(())
+}
+
+/// Legal mode: arbitrary-but-legal programs must complete, be
+/// deterministic and survive a snapshot/restore cycle.
+pub fn fuzz_legal(iters: u64, seed: u64) -> FuzzOutcome {
+    run_mode("legal", iters, seed, legal_case)
+}
+
+/// Corrupt `bytes` in 1–4 structured ways.
+fn mutate_bytes(rng: &mut Rng, bytes: &mut Vec<u8>) {
+    for _ in 0..rng.range(1, 4) {
+        match rng.index(4) {
+            0 if !bytes.is_empty() => {
+                // Flip one bit.
+                let i = rng.index(bytes.len());
+                bytes[i] ^= 1 << rng.index(8);
+            }
+            1 if !bytes.is_empty() => {
+                // Truncate a random suffix (often mid-word).
+                let keep = rng.index(bytes.len());
+                bytes.truncate(keep);
+            }
+            2 => {
+                // Append garbage.
+                for _ in 0..rng.range(1, 24) {
+                    bytes.push(rng.below(256) as u8);
+                }
+            }
+            _ => {
+                // Splice a whole garbage word over a random offset.
+                let word = rng.next_u64() as u128 | (rng.next_u64() as u128) << 64;
+                let start = if bytes.len() >= 16 {
+                    rng.index(bytes.len() - 15)
+                } else {
+                    bytes.resize(16, 0);
+                    0
+                };
+                bytes[start..start + 16].copy_from_slice(&word.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Run one mutation-mode case; `Err(detail)` only on a panic or an
+/// untyped escape — typed errors are the expected outcome.
+fn mutation_case(seed: u64) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    let cfg = random_fuzz_config(&mut rng);
+    let prog = generate_legal_program(&mut rng, &cfg, FUZZ_DRAM_BYTES);
+    let mut bytes = prog.to_bytes();
+    mutate_bytes(&mut rng, &mut bytes);
+
+    match Program::from_bytes(&bytes) {
+        Err(BismoError::Parse(_)) | Err(BismoError::IllegalProgram(_)) => Ok(()),
+        Err(e) => Err(format!("unexpected error class from decode: {e}")),
+        Ok(decoded) => {
+            // The corruption produced a decodable, validated program —
+            // running it must end in a typed outcome (ok, fault or
+            // deadlock), never a panic (the catch_unwind wrapper in
+            // `run_mode` converts panics into failures).
+            let mut sim = Simulation::new(cfg, &PYNQ_Z1, fuzz_dram(seed))
+                .map_err(|e| format!("config rejected: {e}"))?;
+            match sim.run(&decoded) {
+                Ok(_) | Err(BismoError::SimFault(_)) | Err(BismoError::IllegalProgram(_)) => Ok(()),
+                Err(e) => Err(format!("unexpected error class from run: {e}")),
+            }
+        }
+    }
+}
+
+/// Mutation mode: corrupted encodings must always yield typed errors.
+pub fn fuzz_mutation(iters: u64, seed: u64) -> FuzzOutcome {
+    run_mode("mutation", iters, seed, mutation_case)
+}
+
+/// One differential-fuzz case, fully determined by its fields (all
+/// randomness is re-derived from `data_seed`).
+#[derive(Clone, Copy, Debug)]
+struct DiffCase {
+    m: usize,
+    k: usize,
+    n: usize,
+    wbits: u32,
+    abits: u32,
+    lsigned: bool,
+    rsigned: bool,
+    /// 0 = Single, 1 = Grid(gr×gc), 2 = Instances(ni).
+    shard_kind: u8,
+    gr: usize,
+    gc: usize,
+    ni: usize,
+    data_seed: u64,
+}
+
+impl DiffCase {
+    fn random(rng: &mut Rng) -> DiffCase {
+        DiffCase {
+            m: rng.range(1, 8) as usize,
+            k: rng.range(1, 96) as usize,
+            n: rng.range(1, 8) as usize,
+            wbits: rng.range(1, 3) as u32,
+            abits: rng.range(1, 3) as u32,
+            lsigned: rng.chance(0.5),
+            rsigned: rng.chance(0.5),
+            shard_kind: rng.index(3) as u8,
+            gr: rng.range(1, 2) as usize,
+            gc: rng.range(1, 2) as usize,
+            ni: rng.range(1, 3) as usize,
+            data_seed: rng.next_u64(),
+        }
+    }
+
+    fn sharding(&self) -> Sharding {
+        match self.shard_kind {
+            0 => Sharding::Single,
+            1 => Sharding::Grid {
+                rows: self.gr,
+                cols: self.gc,
+            },
+            _ => Sharding::Instances(self.ni),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "{}x{}x{} w{}{} a{}{} sharding={:?}",
+            self.m,
+            self.k,
+            self.n,
+            self.wbits,
+            if self.lsigned { "s" } else { "u" },
+            self.abits,
+            if self.rsigned { "s" } else { "u" },
+            self.sharding()
+        )
+    }
+
+    /// Serve the case through both backends; `Err(detail)` on any
+    /// disagreement with the integer-matmul oracle.
+    fn check(&self, svc: &BismoService) -> Result<(), String> {
+        let mut rng = Rng::new(self.data_seed);
+        let a = IntMatrix::random(&mut rng, self.m, self.k, self.wbits, self.lsigned);
+        let b = IntMatrix::random(&mut rng, self.k, self.n, self.abits, self.rsigned);
+        let expect = a.matmul(&b);
+        let prec = Precision {
+            wbits: self.wbits,
+            abits: self.abits,
+            lsigned: self.lsigned,
+            rsigned: self.rsigned,
+        };
+        for backend in [Backend::Engine, Backend::Sim] {
+            let opts = RequestOptions {
+                backend,
+                sharding: self.sharding(),
+                ..RequestOptions::default()
+            };
+            let resp = svc
+                .submit(GemmRequest::with_opts(a.clone(), b.clone(), prec, opts))
+                .wait()
+                .map_err(|e| format!("{} backend errored: {e}", backend.name()))?;
+            if resp.result != expect {
+                return Err(format!(
+                    "{} backend disagrees with the integer oracle",
+                    backend.name()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Greedy minimization: repeatedly try shrinking transformations,
+    /// keeping any that still fail, until a fixed point.
+    fn minimize(mut self, svc: &BismoService) -> DiffCase {
+        for _ in 0..32 {
+            let mut shrunk = false;
+            let mut candidates: Vec<DiffCase> = Vec::new();
+            for f in [
+                (|c: &mut DiffCase| c.m = (c.m / 2).max(1)) as fn(&mut DiffCase),
+                |c| c.k = (c.k / 2).max(1),
+                |c| c.n = (c.n / 2).max(1),
+                |c| c.wbits = 1,
+                |c| c.abits = 1,
+                |c| c.lsigned = false,
+                |c| c.rsigned = false,
+                |c| c.shard_kind = 0,
+            ] {
+                let mut cand = self;
+                f(&mut cand);
+                candidates.push(cand);
+            }
+            for cand in candidates {
+                let differs = cand.m != self.m
+                    || cand.k != self.k
+                    || cand.n != self.n
+                    || cand.wbits != self.wbits
+                    || cand.abits != self.abits
+                    || cand.lsigned != self.lsigned
+                    || cand.rsigned != self.rsigned
+                    || cand.shard_kind != self.shard_kind;
+                if differs
+                    && catch_unwind(AssertUnwindSafe(|| cand.check(svc).is_err())).unwrap_or(true)
+                {
+                    self = cand;
+                    shrunk = true;
+                }
+            }
+            if !shrunk {
+                break;
+            }
+        }
+        self
+    }
+}
+
+/// Differential mode: engine vs sim vs integer oracle, minimized repros.
+pub fn fuzz_differential(iters: u64, seed: u64) -> FuzzOutcome {
+    let svc = match BismoService::new(ServiceConfig {
+        workers: 2,
+        max_batch: 8,
+        cache_bytes: 1 << 20,
+        overlay: BismoConfig::small(),
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            return FuzzOutcome {
+                mode: "differential",
+                iters,
+                failures: vec![FuzzFailure {
+                    mode: "differential",
+                    index: 0,
+                    seed,
+                    detail: format!("service construction failed: {e}"),
+                }],
+            }
+        }
+    };
+    let mut failures = Vec::new();
+    for i in 0..iters {
+        let cs = case_seed(seed, i);
+        let case = DiffCase::random(&mut Rng::new(cs));
+        let outcome = catch_unwind(AssertUnwindSafe(|| case.check(&svc)));
+        let detail = match outcome {
+            Ok(Ok(())) => continue,
+            Ok(Err(d)) => d,
+            Err(e) => panic_payload(e),
+        };
+        let min = case.minimize(&svc);
+        failures.push(FuzzFailure {
+            mode: "differential",
+            index: i,
+            seed: cs,
+            detail: format!("{detail}; minimized to [{}]", min.describe()),
+        });
+    }
+    svc.shutdown();
+    FuzzOutcome {
+        mode: "differential",
+        iters,
+        failures,
+    }
+}
+
+/// Shared driver: run `case` under `catch_unwind` for each index.
+fn run_mode(
+    mode: &'static str,
+    iters: u64,
+    seed: u64,
+    case: fn(u64) -> Result<(), String>,
+) -> FuzzOutcome {
+    let mut failures = Vec::new();
+    for i in 0..iters {
+        let cs = case_seed(seed, i);
+        let detail = match catch_unwind(AssertUnwindSafe(|| case(cs))) {
+            Ok(Ok(())) => continue,
+            Ok(Err(d)) => d,
+            Err(e) => panic_payload(e),
+        };
+        failures.push(FuzzFailure {
+            mode,
+            index: i,
+            seed: cs,
+            detail,
+        });
+    }
+    FuzzOutcome {
+        mode,
+        iters,
+        failures,
+    }
+}
+
+/// Schema tag of the golden snapshot report in `ci/sim_snapshots.json`.
+pub const GOLDEN_SCHEMA: &str = "bismo-sim-golden/v1";
+
+/// Build the deterministic golden snapshot report the CI ratchet
+/// compares against `ci/sim_snapshots.json` (regenerate with
+/// `bismo snapshot --regen`).
+///
+/// The scenario is fixed: a seeded 6×96×5 signed 3-bit × unsigned 2-bit
+/// job compiled by the real scheduler on the `small()` overlay, stepped
+/// to a ladder of suspend points. At each cut the full simulator
+/// snapshot is serialized and digested; the final entry records the
+/// completed run's stats and a digest of the result DRAM. Any
+/// externally visible timing or data change moves at least one digest.
+pub fn golden_snapshot_report() -> Result<String, BismoError> {
+    let cfg = BismoConfig::small();
+    let mut rng = Rng::new(0xB150);
+    let a = IntMatrix::random(&mut rng, 6, 96, 3, true);
+    let b = IntMatrix::random(&mut rng, 96, 5, 2, false);
+    let la = BitSerialMatrix::from_int(&a, 3, true);
+    let rb = BitSerialMatrix::from_int_transposed(&b, 2, false);
+
+    let lhs = OperandLayout::new(0, 6, 96, 3, cfg.dk);
+    let rhs = OperandLayout::new(round_up(lhs.total_bytes(), 8), 5, 96, 2, cfg.dk);
+    let res = ResultLayout::new(round_up(rhs.base + rhs.total_bytes(), 8), 6, 5);
+    let mut dram = DramImage::new((res.base + res.total_bytes()) as usize);
+    lhs.store(&mut dram, &la);
+    rhs.store(&mut dram, &rb);
+    let job = MatmulJob {
+        m: 6,
+        k: 96,
+        n: 5,
+        wbits: 3,
+        abits: 2,
+        lsigned: true,
+        rsigned: false,
+        lhs,
+        rhs,
+        res,
+    };
+    let prog = scheduler::compile(&job, &cfg, Overlap::Full)?;
+    let total = prog.stats().total as u64;
+
+    // Uninterrupted reference run.
+    let mut reference = Simulation::new(cfg, &PYNQ_Z1, dram.clone())?;
+    let ref_stats = reference.run(&prog)?;
+    if res.load(&reference.dram) != a.matmul(&b) {
+        return Err(BismoError::VerifyFailed(
+            "golden scenario result != integer oracle".into(),
+        ));
+    }
+
+    let hex = |v: u64| Json::Str(format!("{v:#x}"));
+    let mut cuts = Vec::new();
+    for cut in [1, total / 4, total / 2, total - 1] {
+        let mut sim = Simulation::new(cfg, &PYNQ_Z1, dram.clone())?;
+        sim.begin(&prog)?;
+        match sim.step(&prog, cut)? {
+            StepOutcome::Completed(_) => {
+                return Err(BismoError::VerifyFailed(format!(
+                    "golden scenario completed within {cut} of {total} instructions"
+                )))
+            }
+            StepOutcome::Suspended => {}
+        }
+        let snap = sim.snapshot();
+        let text = snap.to_json();
+        // Internal consistency: the captured state must restore and
+        // converge to the reference run before we publish its digest.
+        let mut resumed = Simulation::restore(&SimSnapshot::from_json(&text)?, &PYNQ_Z1)?;
+        match resumed.step(&prog, u64::MAX)? {
+            StepOutcome::Completed(s) if s == ref_stats => {}
+            _ => {
+                return Err(BismoError::VerifyFailed(format!(
+                    "restore from cut {cut} diverged from the uninterrupted run"
+                )))
+            }
+        }
+        cuts.push(Json::Obj(
+            [
+                ("instrs".to_string(), hex(cut)),
+                (
+                    "snapshot_digest".to_string(),
+                    hex(digest_bytes(text.as_bytes())),
+                ),
+            ]
+            .into_iter()
+            .collect(),
+        ));
+    }
+
+    let final_obj = Json::Obj(
+        [
+            ("cycles".to_string(), hex(ref_stats.cycles)),
+            ("commits".to_string(), hex(ref_stats.commits)),
+            ("bytes_fetched".to_string(), hex(ref_stats.bytes_fetched)),
+            ("bytes_written".to_string(), hex(ref_stats.bytes_written)),
+            ("binary_ops".to_string(), hex(ref_stats.binary_ops)),
+            (
+                "dram_digest".to_string(),
+                hex(digest_bytes(reference.dram.as_bytes())),
+            ),
+        ]
+        .into_iter()
+        .collect(),
+    );
+    let report = Json::Obj(
+        [
+            ("schema".to_string(), Json::str(GOLDEN_SCHEMA)),
+            ("instructions".to_string(), hex(total)),
+            ("cuts".to_string(), Json::Arr(cuts)),
+            ("final".to_string(), final_obj),
+        ]
+        .into_iter()
+        .collect(),
+    );
+    Ok(report.pretty(2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legal_generator_emits_valid_programs() {
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let cfg = random_fuzz_config(&mut rng);
+            let p = generate_legal_program(&mut rng, &cfg, FUZZ_DRAM_BYTES);
+            p.validate().expect("generated program must validate");
+        }
+    }
+
+    #[test]
+    fn legal_mode_smoke() {
+        let out = fuzz_legal(8, 0xF00D);
+        assert!(out.ok(), "failures: {:?}", out.failures);
+    }
+
+    #[test]
+    fn mutation_mode_smoke() {
+        let out = fuzz_mutation(16, 0xF00D);
+        assert!(out.ok(), "failures: {:?}", out.failures);
+    }
+
+    #[test]
+    fn differential_mode_smoke() {
+        let out = fuzz_differential(3, 0xF00D);
+        assert!(out.ok(), "failures: {:?}", out.failures);
+    }
+
+    #[test]
+    fn case_seeds_are_distinct_and_stable() {
+        assert_eq!(case_seed(42, 0), case_seed(42, 0));
+        assert_ne!(case_seed(42, 0), case_seed(42, 1));
+        assert_ne!(case_seed(42, 0), case_seed(43, 0));
+    }
+
+    #[test]
+    fn golden_report_is_deterministic_and_tagged() {
+        let a = golden_snapshot_report().unwrap();
+        let b = golden_snapshot_report().unwrap();
+        assert_eq!(a, b);
+        let v = Json::parse(&a).unwrap();
+        assert_eq!(v.get("schema").and_then(Json::as_str), Some(GOLDEN_SCHEMA));
+    }
+
+    #[test]
+    fn failure_json_lists_seeds() {
+        let out = FuzzOutcome {
+            mode: "legal",
+            iters: 1,
+            failures: vec![FuzzFailure {
+                mode: "legal",
+                index: 3,
+                seed: 0xabc,
+                detail: "boom".into(),
+            }],
+        };
+        let text = failures_to_json(&[out]);
+        assert!(text.contains("0xabc") && text.contains("boom"));
+    }
+}

@@ -125,6 +125,11 @@ pub fn encode(instr: &Instr, stage: Stage) -> u128 {
 
 /// Decode a 128-bit instruction word. Returns the instruction and the
 /// stage whose queue it belongs to.
+///
+/// Permissive, like a hardware decoder that simply taps field wires:
+/// reserved opcodes alias onto defined ones and reserved bits are
+/// ignored. Software paths that ingest *untrusted* words (e.g.
+/// [`super::Program::from_words`]) must use [`try_decode`] instead.
 pub fn decode(w: u128) -> (Instr, Stage) {
     let kind = get(w, 0, 2);
     let stage = match get(w, 2, 2) {
@@ -132,7 +137,48 @@ pub fn decode(w: u128) -> (Instr, Stage) {
         1 => Stage::Execute,
         _ => Stage::Result,
     };
-    let instr = match kind {
+    (decode_fields(w, kind, stage), stage)
+}
+
+/// Strict decode: rejects reserved opcode/stage codes and any set bit
+/// outside the fields defined for the instruction's layout, so a
+/// corrupted word is detected instead of silently aliasing onto a
+/// different instruction. This is the entry point for untrusted words.
+pub fn try_decode(w: u128) -> Result<(Instr, Stage), String> {
+    let kind = get(w, 0, 2);
+    if kind == 3 {
+        return Err(format!("reserved instruction kind code 3 in word {w:#034x}"));
+    }
+    let stage = match get(w, 2, 2) {
+        0 => Stage::Fetch,
+        1 => Stage::Execute,
+        2 => Stage::Result,
+        c => return Err(format!("reserved stage code {c} in word {w:#034x}")),
+    };
+    // Union of defined field slots for this (kind, stage) layout.
+    let low = |bits: u32| -> u128 { (1u128 << bits) - 1 };
+    let mask: u128 = match (kind, stage) {
+        // Wait/Signal: kind, stage, channel.
+        (0, _) | (1, _) => low(6),
+        // Run instructions (see the module-level field map).
+        (_, Stage::Fetch) => low(126),
+        (_, Stage::Execute) => low(61),
+        (_, Stage::Result) => low(104),
+    };
+    if w & !mask != 0 {
+        return Err(format!(
+            "reserved bits set in {} instruction word {w:#034x}",
+            stage.name()
+        ));
+    }
+    Ok((decode_fields(w, kind, stage), stage))
+}
+
+/// Field extraction shared by [`decode`] and [`try_decode`]. `kind` is
+/// 0 (Wait), 1 (Signal) or anything else (Run); `stage` selects the Run
+/// layout.
+fn decode_fields(w: u128, kind: u64, stage: Stage) -> Instr {
+    match kind {
         0 => Instr::Wait(chan_from(get(w, 4, 2))),
         1 => Instr::Signal(chan_from(get(w, 4, 2))),
         _ => match stage {
@@ -163,8 +209,7 @@ pub fn decode(w: u128) -> (Instr, Stage) {
                 row_stride_bytes: get(w, 80, 24) as u32 * 4,
             }),
         },
-    };
-    (instr, stage)
+    }
 }
 
 #[cfg(test)]
@@ -235,6 +280,102 @@ mod tests {
             };
             roundtrip(Instr::Result(r), Stage::Result);
         });
+    }
+
+    #[test]
+    fn try_decode_accepts_every_legal_encoding() {
+        property_sweep(0x7D3C, 100, |rng, _| {
+            let (i, s) = match rng.index(5) {
+                0 => {
+                    let c = *rng.pick(&SyncChannel::ALL);
+                    (Instr::Wait(c), c.consumer())
+                }
+                1 => {
+                    let c = *rng.pick(&SyncChannel::ALL);
+                    (Instr::Signal(c), c.producer())
+                }
+                2 => (Instr::Fetch(rand_fetch(rng)), Stage::Fetch),
+                3 => (
+                    Instr::Execute(ExecuteRun {
+                        lhs_offset: rng.below(1 << 16) as u32,
+                        rhs_offset: rng.below(1 << 16) as u32,
+                        num_chunks: rng.below(1 << 16) as u32 + 1,
+                        shift: rng.below(63) as u8,
+                        negate: rng.chance(0.5),
+                        acc_reset: rng.chance(0.5),
+                        commit_result: rng.chance(0.5),
+                    }),
+                    Stage::Execute,
+                ),
+                _ => (
+                    Instr::Result(ResultRun {
+                        dram_base: rng.below(1 << 28) * 4,
+                        offset: rng.below(1 << 24) * 4,
+                        rows: rng.below(255) as u8 + 1,
+                        cols: rng.below(255) as u8 + 1,
+                        row_stride_bytes: rng.below(1 << 20) as u32 * 4,
+                    }),
+                    Stage::Result,
+                ),
+            };
+            let w = encode(&i, s);
+            let (i2, s2) = try_decode(w).expect("legal encoding rejected");
+            assert_eq!((i2, s2), (i, s));
+        });
+    }
+
+    #[test]
+    fn try_decode_rejects_reserved_codes_and_bits() {
+        // Reserved kind code 3.
+        assert!(try_decode(3).unwrap_err().contains("kind"));
+        // Reserved stage code 3 on a Run instruction.
+        assert!(try_decode(2 | (3 << 2)).unwrap_err().contains("stage"));
+        // Reserved high bit on each Run layout.
+        let f = encode(
+            &Instr::Fetch(FetchRun {
+                dram_base: 0,
+                block_bytes: 8,
+                block_stride_bytes: 0,
+                num_blocks: 1,
+                buf_offset: 0,
+                buf_start: 0,
+                buf_range: 1,
+                words_per_buf: 1,
+            }),
+            Stage::Fetch,
+        );
+        assert!(try_decode(f | (1u128 << 127)).is_err());
+        let e = encode(
+            &Instr::Execute(ExecuteRun {
+                lhs_offset: 0,
+                rhs_offset: 0,
+                num_chunks: 1,
+                shift: 0,
+                negate: false,
+                acc_reset: false,
+                commit_result: false,
+            }),
+            Stage::Execute,
+        );
+        assert!(try_decode(e | (1u128 << 61)).is_err());
+        assert!(try_decode(e).is_ok());
+        let r = encode(
+            &Instr::Result(ResultRun {
+                dram_base: 0,
+                offset: 0,
+                rows: 1,
+                cols: 1,
+                row_stride_bytes: 4,
+            }),
+            Stage::Result,
+        );
+        assert!(try_decode(r | (1u128 << 104)).is_err());
+        // Reserved bits on a Wait word (anything above bit 6).
+        let wait = encode(&Instr::Wait(SyncChannel::FetchToExecute), Stage::Execute);
+        assert!(try_decode(wait | (1u128 << 40)).is_err());
+        // The permissive decoder still accepts all of these.
+        let _ = decode(f | (1u128 << 127));
+        let _ = decode(wait | (1u128 << 40));
     }
 
     #[test]

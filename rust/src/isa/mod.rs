@@ -21,7 +21,7 @@
 mod encode;
 mod program;
 
-pub use encode::{decode, encode};
+pub use encode::{decode, encode, try_decode};
 pub use program::{Program, ProgramStats};
 
 /// Pipeline stage that owns an instruction queue.

@@ -122,13 +122,33 @@ impl Program {
         out
     }
 
+    /// Upper bound on the instruction words [`Program::from_words`]
+    /// accepts — far above any scheduler output (the largest bench
+    /// programs are ~10^4 instructions) but small enough that a
+    /// corrupted length field cannot drive a multi-GiB allocation.
+    pub const MAX_WORDS: usize = 1 << 20;
+
     /// Rebuild a program from encoded instruction words — the path a
     /// host driver uses when loading a stored binary program into the
-    /// accelerator's instruction queues. Validates after decoding.
+    /// accelerator's instruction queues.
+    ///
+    /// This is an untrusted-input boundary: words are decoded with the
+    /// strict [`super::try_decode`] (reserved opcodes / set reserved
+    /// bits are [`BismoError::Parse`]), oversized streams are rejected,
+    /// and the decoded program is fully validated — corrupt bytes can
+    /// never panic, only return a typed error.
     pub fn from_words(words: &[u128]) -> Result<Self, BismoError> {
+        if words.len() > Self::MAX_WORDS {
+            return Err(BismoError::Parse(format!(
+                "instruction stream of {} words exceeds the {} cap",
+                words.len(),
+                Self::MAX_WORDS
+            )));
+        }
         let mut p = Program::new();
         for (i, &w) in words.iter().enumerate() {
-            let (instr, stage) = super::decode(w);
+            let (instr, stage) =
+                super::try_decode(w).map_err(|e| BismoError::Parse(format!("word {i}: {e}")))?;
             instr
                 .legality(stage)
                 .map_err(|e| BismoError::IllegalProgram(format!("word {i}: {e}")))?;
@@ -136,6 +156,100 @@ impl Program {
         }
         p.validate()?;
         Ok(p)
+    }
+
+    /// Serialize to the binary on-disk / over-the-wire form: the
+    /// assembled 128-bit words, little-endian, 16 bytes each.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_bytes());
+        for w in self.assemble() {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse the binary form produced by [`Program::to_bytes`].
+    /// Truncated streams (length not a multiple of the 16-byte
+    /// instruction word) are [`BismoError::Parse`]; word-level
+    /// corruption is diagnosed by [`Program::from_words`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, BismoError> {
+        if bytes.len() % 16 != 0 {
+            return Err(BismoError::Parse(format!(
+                "truncated instruction stream: {} bytes is not a multiple of the 16-byte word",
+                bytes.len()
+            )));
+        }
+        let words: Vec<u128> = bytes
+            .chunks_exact(16)
+            .map(|c| {
+                let mut b = [0u8; 16];
+                b.copy_from_slice(c);
+                u128::from_le_bytes(b)
+            })
+            .collect();
+        Self::from_words(&words)
+    }
+
+    /// Order-sensitive 64-bit fingerprint over all three queues.
+    ///
+    /// Used by the suspendable simulator to verify that `step()` /
+    /// `restore()` are driven with the same program that was armed.
+    /// Hashes the in-memory instruction fields directly (not the binary
+    /// encoding) so it is total: programs whose fields exceed their
+    /// encoding slots still fingerprint fine, whereas `assemble()`
+    /// would panic on them.
+    pub fn fingerprint(&self) -> u64 {
+        use crate::util::splitmix64;
+        fn mix(h: &mut u64, v: u64) {
+            *h = splitmix64(*h ^ v.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        }
+        let mut h = 0xb15_0f1d_u64;
+        for s in Stage::ALL {
+            mix(&mut h, self.queue(s).len() as u64);
+            for i in self.queue(s) {
+                match i {
+                    Instr::Wait(c) => {
+                        mix(&mut h, 1);
+                        mix(&mut h, *c as u64);
+                    }
+                    Instr::Signal(c) => {
+                        mix(&mut h, 2);
+                        mix(&mut h, *c as u64);
+                    }
+                    Instr::Fetch(f) => {
+                        mix(&mut h, 3);
+                        mix(&mut h, f.dram_base);
+                        mix(&mut h, f.block_bytes as u64);
+                        mix(&mut h, f.block_stride_bytes as u64);
+                        mix(&mut h, f.num_blocks as u64);
+                        mix(&mut h, f.buf_offset as u64);
+                        mix(&mut h, f.buf_start as u64);
+                        mix(&mut h, f.buf_range as u64);
+                        mix(&mut h, f.words_per_buf as u64);
+                    }
+                    Instr::Execute(e) => {
+                        mix(&mut h, 4);
+                        mix(&mut h, e.lhs_offset as u64);
+                        mix(&mut h, e.rhs_offset as u64);
+                        mix(&mut h, e.num_chunks as u64);
+                        mix(&mut h, e.shift as u64);
+                        let flags = e.negate as u64
+                            | (e.acc_reset as u64) << 1
+                            | (e.commit_result as u64) << 2;
+                        mix(&mut h, flags);
+                    }
+                    Instr::Result(r) => {
+                        mix(&mut h, 5);
+                        mix(&mut h, r.dram_base);
+                        mix(&mut h, r.offset);
+                        mix(&mut h, r.rows as u64);
+                        mix(&mut h, r.cols as u64);
+                        mix(&mut h, r.row_stride_bytes as u64);
+                    }
+                }
+            }
+        }
+        h
     }
 
     /// Human-readable disassembly of all three queues, in the style of
@@ -278,5 +392,87 @@ mod tests {
         assert!(d.contains("RunExecute"));
         assert!(d.contains("RunResult"));
         assert!(d.contains("fetch queue"));
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let p = tiny_program();
+        let bytes = p.to_bytes();
+        assert_eq!(bytes.len() % 16, 0);
+        let q = Program::from_bytes(&bytes).unwrap();
+        assert_eq!(p.fetch, q.fetch);
+        assert_eq!(p.execute, q.execute);
+        assert_eq!(p.result, q.result);
+        assert_eq!(p.fingerprint(), q.fingerprint());
+    }
+
+    #[test]
+    fn truncated_byte_stream_is_parse_error() {
+        let mut bytes = tiny_program().to_bytes();
+        bytes.pop(); // no longer a whole number of 16-byte words
+        match Program::from_bytes(&bytes) {
+            Err(BismoError::Parse(msg)) => assert!(msg.contains("truncated"), "{msg}"),
+            other => panic!("expected Parse error, got {other:?}"),
+        }
+        // Chopping mid-word anywhere is equally rejected.
+        assert!(Program::from_bytes(&bytes[..7]).is_err());
+    }
+
+    #[test]
+    fn corrupt_words_are_parse_errors_never_panics() {
+        let p = tiny_program();
+        let mut words = p.assemble();
+        // Reserved instruction-kind code 3.
+        let orig = words[0];
+        words[0] = (orig & !0b11) | 0b11;
+        assert!(matches!(
+            Program::from_words(&words),
+            Err(BismoError::Parse(_))
+        ));
+        // Reserved stage code 3.
+        words[0] = orig | 0b1100;
+        assert!(matches!(
+            Program::from_words(&words),
+            Err(BismoError::Parse(_))
+        ));
+        // Reserved high bit set on a fetch Run word.
+        words[0] = orig | (1u128 << 127);
+        match Program::from_words(&words) {
+            Err(BismoError::Parse(msg)) => assert!(msg.contains("word 0"), "{msg}"),
+            other => panic!("expected Parse error, got {other:?}"),
+        }
+        words[0] = orig;
+        assert!(Program::from_words(&words).is_ok());
+    }
+
+    #[test]
+    fn oversized_stream_is_parse_error() {
+        // Length alone must reject before any decode work happens.
+        let words = vec![0u128; Program::MAX_WORDS + 1];
+        match Program::from_words(&words) {
+            Err(BismoError::Parse(msg)) => assert!(msg.contains("cap"), "{msg}"),
+            other => panic!("expected Parse error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_order_and_field_sensitive() {
+        let p = tiny_program();
+        let base = p.fingerprint();
+        assert_eq!(base, tiny_program().fingerprint(), "must be deterministic");
+
+        // Changing one field changes the fingerprint.
+        let mut q = tiny_program();
+        if let Some(Instr::Fetch(f)) = q.queue_mut(Stage::Fetch).first_mut() {
+            f.dram_base += 8;
+        }
+        assert_ne!(base, q.fingerprint());
+
+        // Moving an instruction between queues changes it too, even
+        // though the multiset of instructions is identical.
+        let mut r = tiny_program();
+        let moved = r.queue_mut(Stage::Fetch).pop().unwrap();
+        r.queue_mut(Stage::Execute).push(moved);
+        assert_ne!(base, r.fingerprint());
     }
 }

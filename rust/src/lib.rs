@@ -58,6 +58,9 @@
 //!   with dynamic micro-batching, per-request backend selection and a
 //!   weight-stationary packing cache (`DESIGN.md` §Serving-Layer).
 //! * [`qnn`] — quantized-neural-network layers running on the overlay.
+//! * [`fuzz`] — seeded structured fuzzing (legal / mutation /
+//!   differential) and the golden snapshot report behind `bismo fuzz`
+//!   and `bismo snapshot` (`DESIGN.md` §10).
 //! * [`report`] — table/figure formatting used by the benchmark harness.
 //! * [`util`] — PRNG, CSV, timing helpers (offline build: no external deps).
 
@@ -67,6 +70,7 @@ pub mod baseline;
 pub mod bitmatrix;
 pub mod coordinator;
 pub mod costmodel;
+pub mod fuzz;
 pub mod isa;
 pub mod kernel;
 pub mod lowering;

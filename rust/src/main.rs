@@ -30,6 +30,16 @@
 //!                CI regression gate: compares two BENCH_gemm.json
 //!                files, failing on schema drift or on per-case
 //!                speedup regression beyond the tolerance
+//! bismo fuzz [--iters N] [--seed S] [--mode legal|mutation|differential|all]
+//!                [--out PATH]               seeded structured fuzzing of
+//!                the ISA decoder, simulator and serving backends; every
+//!                failure prints a one-line replay seed and the full
+//!                list is written to PATH (default FUZZ_failures.json)
+//!                on failure
+//! bismo snapshot [--regen]                  golden simulator-snapshot
+//!                gate: compares the deterministic snapshot/replay
+//!                report against ci/sim_snapshots.json (--regen
+//!                rewrites the baseline)
 //! bismo costmodel [--instance N]            LUT/BRAM prediction
 //! bismo synth [--dk N]                      DPU virtual synthesis
 //! bismo power                               Table V power model
@@ -56,7 +66,7 @@ fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
         if let Some(name) = a.strip_prefix("--") {
             let is_bool = matches!(
                 name,
-                "signed" | "no-overlap" | "bit-skip" | "verify" | "help" | "quick"
+                "signed" | "no-overlap" | "bit-skip" | "verify" | "help" | "quick" | "regen"
             );
             if is_bool {
                 flags.insert(name.to_string(), "true".to_string());
@@ -1514,13 +1524,111 @@ fn cmd_info() -> Result<(), BismoError> {
     Ok(())
 }
 
-const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|bench|serve-bench|shard-bench|cnn-bench|bench-check|costmodel|synth|power|instances|info> [flags]
+/// `bismo fuzz`: run the seeded fuzz modes; on any failure, write the
+/// replayable failure list to `--out` and exit non-zero.
+fn cmd_fuzz(flags: &HashMap<String, String>) -> Result<(), BismoError> {
+    use bismo::fuzz::{failures_to_json, fuzz_differential, fuzz_legal, fuzz_mutation};
+
+    let iters: u64 = get(flags, "iters", 200u64);
+    let seed: u64 = get(flags, "seed", 42u64);
+    let mode = flags.get("mode").map(|s| s.as_str()).unwrap_or("all");
+    let out = flags
+        .get("out")
+        .filter(|v| !v.is_empty())
+        .cloned()
+        .unwrap_or_else(|| "FUZZ_failures.json".to_string());
+
+    let runs: Vec<fn(u64, u64) -> bismo::fuzz::FuzzOutcome> = match mode {
+        "legal" => vec![fuzz_legal],
+        "mutation" => vec![fuzz_mutation],
+        "differential" => vec![fuzz_differential],
+        "all" => vec![fuzz_legal, fuzz_mutation, fuzz_differential],
+        other => {
+            return Err(BismoError::Parse(format!(
+                "bad --mode {other:?} (expect legal|mutation|differential|all)"
+            )))
+        }
+    };
+
+    let mut outcomes = Vec::new();
+    let mut failed = 0usize;
+    for run in runs {
+        let o = run(iters, seed);
+        println!(
+            "fuzz {:<13} {} iters  {} failures",
+            o.mode,
+            o.iters,
+            o.failures.len()
+        );
+        for f in &o.failures {
+            println!(
+                "  FAIL {} case {}: replay seed {:#x}: {}",
+                f.mode, f.index, f.seed, f.detail
+            );
+        }
+        failed += o.failures.len();
+        outcomes.push(o);
+    }
+    if failed > 0 {
+        let text = failures_to_json(&outcomes);
+        std::fs::write(&out, &text).map_err(|e| BismoError::Io(format!("writing {out}: {e}")))?;
+        return Err(BismoError::VerifyFailed(format!(
+            "{failed} fuzz failure(s); replay seeds written to {out}"
+        )));
+    }
+    println!("all fuzz modes clean (seed {seed}, {iters} iters each)");
+    Ok(())
+}
+
+/// `bismo snapshot`: golden snapshot/replay gate against
+/// `ci/sim_snapshots.json` (`--regen` rewrites the baseline).
+fn cmd_snapshot(flags: &HashMap<String, String>) -> Result<(), BismoError> {
+    use bismo::util::Json;
+
+    let path = flags
+        .get("baseline")
+        .filter(|v| !v.is_empty())
+        .cloned()
+        .unwrap_or_else(|| "ci/sim_snapshots.json".to_string());
+    let report = bismo::fuzz::golden_snapshot_report()?;
+
+    if flags.contains_key("regen") {
+        std::fs::write(&path, &report)
+            .map_err(|e| BismoError::Io(format!("writing {path}: {e}")))?;
+        println!("golden snapshot baseline regenerated -> {path}");
+        return Ok(());
+    }
+
+    let baseline_text = std::fs::read_to_string(&path)
+        .map_err(|e| BismoError::Io(format!("reading {path}: {e}")))?;
+    let baseline =
+        Json::parse(&baseline_text).map_err(|e| BismoError::Parse(format!("{path}: {e}")))?;
+    if baseline.get("status").and_then(Json::as_str) == Some("bootstrap") {
+        println!("golden snapshot baseline is a bootstrap placeholder; run");
+        println!("  bismo snapshot --regen");
+        println!("on a trusted build to commit real goldens. Gate skipped.");
+        return Ok(());
+    }
+    let current = Json::parse(&report).expect("generated report is valid JSON");
+    if baseline.dump() != current.dump() {
+        return Err(BismoError::VerifyFailed(format!(
+            "simulator snapshot/replay state drifted from the golden baseline {path}; \
+             if the change is intended, regenerate with `bismo snapshot --regen`"
+        )));
+    }
+    println!("golden snapshot gate clean ({path})");
+    Ok(())
+}
+
+const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|bench|serve-bench|shard-bench|cnn-bench|bench-check|fuzz|snapshot|costmodel|synth|power|instances|info> [flags]
 flags: --instance N  --m M --k K --n N  --wbits W --abits A  --signed --no-overlap --bit-skip  --seed S  --dk N
 bench: --quick  --out PATH (default BENCH_gemm.json)  --threads N
 serve-bench: --quick  --backend engine|sim  --requests N  --rate RPS  --layers L  --workers W  --batch B  --out PATH (default BENCH_serve.json)
 shard-bench: --quick  --backend engine|sim  --reps N  --max-shards S  --budget-luts L --budget-brams B  --out PATH (default BENCH_shard.json)
 cnn-bench: --quick  --batch B  --reps N  --out PATH (default BENCH_cnn.json)
-bench-check: --baseline PATH  --current PATH  --tolerance F (default 0.35)";
+bench-check: --baseline PATH  --current PATH  --tolerance F (default 0.35)
+fuzz: --iters N (default 200)  --seed S (default 42)  --mode legal|mutation|differential|all  --out PATH (default FUZZ_failures.json)
+snapshot: --regen  --baseline PATH (default ci/sim_snapshots.json)";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -1535,6 +1643,8 @@ fn main() {
         "shard-bench" => cmd_shard_bench(&flags),
         "cnn-bench" => cmd_cnn_bench(&flags),
         "bench-check" => cmd_bench_check(&flags),
+        "fuzz" => cmd_fuzz(&flags),
+        "snapshot" => cmd_snapshot(&flags),
         "costmodel" => cmd_costmodel(&flags),
         "synth" => cmd_synth(&flags),
         "power" => cmd_power(),

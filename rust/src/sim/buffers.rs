@@ -78,7 +78,13 @@ impl MatrixBuffers {
 
     /// Write one `D_k`-bit buffer word (as `wpc` u64s).
     pub fn write_word(&mut self, buf: usize, word: usize, data: &[u64]) -> Result<(), StageFault> {
-        assert_eq!(data.len(), self.wpc);
+        if data.len() != self.wpc {
+            return Err(StageFault(format!(
+                "buffer write of {} words does not match the {}-word D_k chunk",
+                data.len(),
+                self.wpc
+            )));
+        }
         let s = self.slot(buf, word)?;
         let dst = if buf < self.dm {
             &mut self.lhs[s..s + self.wpc]
@@ -160,6 +166,29 @@ impl MatrixBuffers {
         debug_assert!(j < self.dn);
         self.dm + j
     }
+
+    /// The raw LHS storage (snapshot capture; mirrors
+    /// [`MatrixBuffers::rhs_data`]).
+    pub fn lhs_data(&self) -> &[u64] {
+        &self.lhs
+    }
+
+    /// Overwrite both storages from captured state (snapshot restore).
+    /// Lengths must match the geometry this instance was built with.
+    pub fn restore_contents(&mut self, lhs: &[u64], rhs: &[u64]) -> Result<(), StageFault> {
+        if lhs.len() != self.lhs.len() || rhs.len() != self.rhs.len() {
+            return Err(StageFault(format!(
+                "buffer snapshot shape mismatch: lhs {} (want {}), rhs {} (want {})",
+                lhs.len(),
+                self.lhs.len(),
+                rhs.len(),
+                self.rhs.len()
+            )));
+        }
+        self.lhs.copy_from_slice(lhs);
+        self.rhs.copy_from_slice(rhs);
+        Ok(())
+    }
 }
 
 /// The result buffer: a FIFO of up to `B_r` committed `D_m × D_n`
@@ -188,7 +217,14 @@ impl ResultBuffer {
     /// Execute-side: commit an accumulator set. Errors on overflow —
     /// a scheduler bug (missing `Wait(ResultToExecute)`).
     pub fn commit(&mut self, accs: Vec<i32>) -> Result<(), StageFault> {
-        assert_eq!(accs.len(), self.dm * self.dn);
+        if accs.len() != self.dm * self.dn {
+            return Err(StageFault(format!(
+                "committed set of {} accumulators does not match the {}×{} DPA",
+                accs.len(),
+                self.dm,
+                self.dn
+            )));
+        }
         if self.slots.len() == self.capacity {
             return Err(StageFault(format!(
                 "result buffer overflow (B_r = {}): execute committed without a drained slot",
@@ -214,6 +250,37 @@ impl ResultBuffer {
     /// Accumulators per committed set.
     pub fn set_len(&self) -> usize {
         self.dm * self.dn
+    }
+
+    /// Committed-but-undrained sets, oldest first (snapshot capture).
+    pub fn committed(&self) -> Vec<Vec<i32>> {
+        self.slots.iter().cloned().collect()
+    }
+
+    /// Overwrite the FIFO from captured state (snapshot restore).
+    pub fn restore_contents(
+        &mut self,
+        slots: Vec<Vec<i32>>,
+        max_occupancy: usize,
+    ) -> Result<(), StageFault> {
+        if slots.len() > self.capacity {
+            return Err(StageFault(format!(
+                "result-buffer snapshot holds {} sets but B_r = {}",
+                slots.len(),
+                self.capacity
+            )));
+        }
+        if let Some(bad) = slots.iter().find(|s| s.len() != self.set_len()) {
+            return Err(StageFault(format!(
+                "result-buffer snapshot set of {} accumulators does not match the {}×{} DPA",
+                bad.len(),
+                self.dm,
+                self.dn
+            )));
+        }
+        self.slots = slots.into();
+        self.max_occupancy = max_occupancy.max(self.slots.len());
+        Ok(())
     }
 }
 
@@ -276,6 +343,38 @@ mod tests {
         }
         assert!(b.rhs_word_range(0, 1023, 2).is_err()); // end out of range
         assert_eq!(b.rhs_word_range(1, 0, 0).unwrap(), 0..0);
+    }
+
+    #[test]
+    fn wrong_width_write_is_typed_fault() {
+        let mut b = MatrixBuffers::new(&cfg());
+        let e = b.write_word(0, 0, &[1, 2]).unwrap_err(); // wpc = 1
+        assert!(e.0.contains("does not match"), "{e}");
+        let mut r = ResultBuffer::new(&cfg());
+        let e = r.commit(vec![1, 2, 3]).unwrap_err(); // set_len = 4
+        assert!(e.0.contains("does not match"), "{e}");
+    }
+
+    #[test]
+    fn snapshot_state_roundtrip() {
+        let mut b = MatrixBuffers::new(&cfg());
+        b.write_word(1, 7, &[0x77]).unwrap();
+        b.write_word(2, 9, &[0x99]).unwrap();
+        let (lhs, rhs) = (b.lhs_data().to_vec(), b.rhs_data().to_vec());
+        let mut b2 = MatrixBuffers::new(&cfg());
+        b2.restore_contents(&lhs, &rhs).unwrap();
+        assert_eq!(b2.read_word(1, 7).unwrap(), &[0x77]);
+        assert_eq!(b2.read_word(2, 9).unwrap(), &[0x99]);
+        assert!(b2.restore_contents(&lhs[1..], &rhs).is_err());
+
+        let mut r = ResultBuffer::new(&cfg());
+        r.commit(vec![1, 2, 3, 4]).unwrap();
+        let sets = r.committed();
+        let mut r2 = ResultBuffer::new(&cfg());
+        r2.restore_contents(sets, r.max_occupancy).unwrap();
+        assert_eq!(r2.drain().unwrap(), vec![1, 2, 3, 4]);
+        assert!(r2.restore_contents(vec![vec![0; 4]; 3], 3).is_err()); // over capacity
+        assert!(r2.restore_contents(vec![vec![0; 3]], 1).is_err()); // bad set
     }
 
     #[test]

@@ -10,13 +10,23 @@
 //! region execute is still reading) are schedule bugs in hardware too;
 //! the engine executes them deterministically (fetch → execute → result
 //! priority) rather than diagnosing them.
+//!
+//! The engine is *suspendable*: [`Simulation::begin`] arms a program and
+//! [`Simulation::step`] advances it by a bounded number of instructions,
+//! so a long job can be paused mid-run, snapshotted
+//! ([`Simulation::snapshot`]), persisted, and later resumed bit- and
+//! cycle-exactly from [`Simulation::restore`]. The scheduler is a
+//! persistent round-robin cursor that executes instructions in exactly
+//! the same greedy order as an uninterrupted run, which is what makes
+//! suspension invisible to the result (DESIGN.md §10).
 
 use super::buffers::{MatrixBuffers, ResultBuffer};
 use super::dram::DmaTiming;
 use super::execute::ExecuteUnit;
 use super::fetch::FetchUnit;
 use super::result::ResultUnit;
-use super::{RunStats, TokenFifo};
+use super::snapshot::{FifoState, SimSnapshot};
+use super::{RunStats, StageFault, TokenFifo};
 use crate::api::BismoError;
 use crate::arch::{BismoConfig, Platform};
 use crate::bitmatrix::dram::DramImage;
@@ -42,6 +52,13 @@ pub enum SimError {
         pc: usize,
         msg: String,
     },
+    /// An instruction budget ran out before the program completed
+    /// (see `MatmulOptions::max_instrs`): the caller asked for a bounded
+    /// run and the bound was hit.
+    BudgetExceeded {
+        /// The instruction budget that was exhausted.
+        budget: u64,
+    },
 }
 
 impl std::fmt::Display for SimError {
@@ -56,6 +73,12 @@ impl std::fmt::Display for SimError {
             }
             SimError::Fault { stage, pc, msg } => {
                 write!(f, "fault in {stage} queue at {pc}: {msg}")
+            }
+            SimError::BudgetExceeded { budget } => {
+                write!(
+                    f,
+                    "instruction budget of {budget} exhausted before the program completed"
+                )
             }
         }
     }
@@ -77,6 +100,16 @@ pub struct TraceEvent {
     pub stalled: bool,
 }
 
+/// Outcome of one bounded [`Simulation::step`] call.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepOutcome {
+    /// The program ran to completion; final statistics attached.
+    Completed(RunStats),
+    /// The instruction budget ran out first; the simulation is paused at
+    /// a consistent point and can be stepped again (or snapshotted).
+    Suspended,
+}
+
 /// One overlay instance simulating programs against a DRAM image.
 pub struct Simulation {
     cfg: BismoConfig,
@@ -89,6 +122,11 @@ pub struct Simulation {
     result_buf: ResultBuffer,
     fifos: [TokenFifo; 4],
     trace: Option<Vec<TraceEvent>>,
+    /// Scheduler state of the in-flight program (persistent so a run can
+    /// suspend between [`Simulation::step`] calls).
+    state: EngineState,
+    /// Statistics accumulated so far by the in-flight program.
+    stats: RunStats,
 }
 
 fn fifo_idx(ch: SyncChannel) -> usize {
@@ -100,9 +138,24 @@ fn fifo_idx(ch: SyncChannel) -> usize {
     }
 }
 
-struct StageState {
-    pc: usize,
-    t: u64,
+/// Persistent scheduler state: per-stage program counters and local
+/// clocks, the round-robin cursor, and the no-progress streak used for
+/// deadlock detection. Captured verbatim by snapshots.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+struct EngineState {
+    /// Per-stage next-instruction index (fetch, execute, result).
+    pc: [usize; 3],
+    /// Per-stage local clocks.
+    t: [u64; 3],
+    /// Round-robin cursor: which stage to try next.
+    cur: usize,
+    /// Consecutive stages that failed to advance; 3 means deadlock.
+    stall_streak: usize,
+    /// A program is armed (begin() called, not yet completed/faulted).
+    running: bool,
+    /// Fingerprint of the armed program — step() and restore() verify
+    /// they are driven with the same program the state belongs to.
+    fingerprint: u64,
 }
 
 impl Simulation {
@@ -128,6 +181,8 @@ impl Simulation {
             result_buf: ResultBuffer::new(&cfg),
             fifos: Default::default(),
             trace: None,
+            state: EngineState::default(),
+            stats: RunStats::default(),
             cfg,
             dram,
         })
@@ -148,7 +203,15 @@ impl Simulation {
         self.trace.as_deref().unwrap_or(&[])
     }
 
-    fn record(&mut self, stage: Stage, pc: usize, instr: &Instr, start: u64, end: u64, stalled: bool) {
+    fn record(
+        &mut self,
+        stage: Stage,
+        pc: usize,
+        instr: &Instr,
+        start: u64,
+        end: u64,
+        stalled: bool,
+    ) {
         if let Some(t) = self.trace.as_mut() {
             let kind = match instr {
                 Instr::Wait(_) => "Wait",
@@ -181,116 +244,245 @@ impl Simulation {
     /// front as [`BismoError::IllegalProgram`]; run-time deadlocks and
     /// stage faults surface as [`BismoError::SimFault`].
     pub fn run(&mut self, prog: &Program) -> Result<RunStats, BismoError> {
+        self.begin(prog)?;
+        match self.step(prog, u64::MAX)? {
+            StepOutcome::Completed(stats) => Ok(stats),
+            // Unreachable: u64::MAX instructions cannot be exhausted by
+            // a validated (bounded-length) program.
+            StepOutcome::Suspended => Err(SimError::BudgetExceeded { budget: u64::MAX }.into()),
+        }
+    }
+
+    /// Arm `prog` for bounded execution via [`Simulation::step`].
+    /// Validates the program and resets the scheduler state and per-run
+    /// statistics; buffer/DRAM/accumulator contents persist (exactly as
+    /// consecutive [`Simulation::run`] calls always behaved).
+    pub fn begin(&mut self, prog: &Program) -> Result<(), BismoError> {
         prog.validate()?;
-        let mut stats = RunStats::default();
-        let mut st = [
-            StageState { pc: 0, t: 0 },
-            StageState { pc: 0, t: 0 },
-            StageState { pc: 0, t: 0 },
-        ];
+        self.state = EngineState {
+            running: true,
+            fingerprint: prog.fingerprint(),
+            ..EngineState::default()
+        };
+        self.stats = RunStats::default();
+        Ok(())
+    }
+
+    /// Advance the armed program by at most `budget` instructions.
+    ///
+    /// Returns [`StepOutcome::Completed`] with the final statistics when
+    /// the program finishes, or [`StepOutcome::Suspended`] when the
+    /// budget runs out first — in which case the simulation can be
+    /// stepped again, or captured with [`Simulation::snapshot`] and
+    /// resumed later. Instructions are executed in exactly the same
+    /// order as an uninterrupted run, so suspension never changes the
+    /// result or the cycle counts.
+    pub fn step(&mut self, prog: &Program, mut budget: u64) -> Result<StepOutcome, BismoError> {
+        if !self.state.running {
+            return Err(BismoError::IllegalProgram(
+                "no program armed: call begin() before step()".into(),
+            ));
+        }
+        if self.state.fingerprint != prog.fingerprint() {
+            return Err(BismoError::IllegalProgram(
+                "step() driven with a different program than begin()".into(),
+            ));
+        }
         let queues = [&prog.fetch, &prog.execute, &prog.result];
         let stage_of = [Stage::Fetch, Stage::Execute, Stage::Result];
-
         loop {
-            let mut progress = false;
-            for s in 0..3 {
-                // Advance stage `s` as far as it can go.
-                while st[s].pc < queues[s].len() {
-                    let instr = &queues[s][st[s].pc];
-                    let t_before = st[s].t;
-                    let mut stalled = false;
-                    match instr {
-                        Instr::Signal(ch) => {
-                            st[s].t += 1;
-                            self.fifos[fifo_idx(*ch)].push(st[s].t);
-                        }
-                        Instr::Wait(ch) => {
-                            let fifo = &mut self.fifos[fifo_idx(*ch)];
-                            match fifo.front() {
-                                Some(tok_t) => {
-                                    fifo.pop();
-                                    let ready = st[s].t.max(tok_t);
-                                    let stall = ready - st[s].t;
-                                    stalled = stall > 0;
-                                    match stage_of[s] {
-                                        Stage::Fetch => stats.fetch_stall += stall,
-                                        Stage::Execute => stats.execute_stall += stall,
-                                        Stage::Result => stats.result_stall += stall,
-                                    }
-                                    st[s].t = ready + 1;
-                                }
-                                None => break, // blocked; retry after others advance
-                            }
-                        }
-                        Instr::Fetch(fr) => {
-                            let (cy, bytes) = self
-                                .fetch_unit
-                                .run(fr, &self.dram, &mut self.bufs)
-                                .map_err(|e| SimError::Fault {
-                                    stage: "fetch",
-                                    pc: st[s].pc,
-                                    msg: e.0,
-                                })?;
-                            st[s].t += cy;
-                            stats.fetch_busy += cy;
-                            stats.bytes_fetched += bytes;
-                        }
-                        Instr::Execute(er) => {
-                            let (cy, ops, fill, committed) = self
-                                .exec
-                                .run(er, &self.bufs, &mut self.result_buf)
-                                .map_err(|e| SimError::Fault {
-                                    stage: "execute",
-                                    pc: st[s].pc,
-                                    msg: e.0,
-                                })?;
-                            st[s].t += cy;
-                            stats.execute_busy += cy;
-                            stats.binary_ops += ops;
-                            stats.pipeline_fill_cycles += fill;
-                            stats.commits += committed as u64;
-                        }
-                        Instr::Result(rr) => {
-                            let (cy, bytes) = self
-                                .result_unit
-                                .run(rr, &mut self.result_buf, &mut self.dram)
-                                .map_err(|e| SimError::Fault {
-                                    stage: "result",
-                                    pc: st[s].pc,
-                                    msg: e.0,
-                                })?;
-                            st[s].t += cy;
-                            stats.result_busy += cy;
-                            stats.bytes_written += bytes;
-                        }
+            if (0..3).all(|s| self.state.pc[s] >= queues[s].len()) {
+                self.state.running = false;
+                self.stats.cycles = self.state.t.iter().copied().max().unwrap_or(0);
+                self.stats.acc_overflows = self.exec.overflows;
+                return Ok(StepOutcome::Completed(self.stats));
+            }
+            if budget == 0 {
+                return Ok(StepOutcome::Suspended);
+            }
+            let s = self.state.cur;
+            let advanced = if self.state.pc[s] < queues[s].len() {
+                match self.try_advance(s, stage_of[s], queues[s]) {
+                    Ok(a) => a,
+                    Err(e) => {
+                        self.state.running = false;
+                        return Err(e);
                     }
-                    self.record(stage_of[s], st[s].pc, instr, t_before, st[s].t, stalled);
-                    st[s].pc += 1;
-                    progress = true;
                 }
-            }
-            let done = (0..3).all(|s| st[s].pc >= queues[s].len());
-            if done {
-                break;
-            }
-            if !progress {
-                let blocked = (0..3)
-                    .filter(|&s| st[s].pc < queues[s].len())
-                    .map(|s| {
-                        let what = match &queues[s][st[s].pc] {
-                            Instr::Wait(ch) => format!("waiting on {}", ch.name()),
-                            other => format!("stuck at {other}"),
-                        };
-                        (stage_of[s].name(), st[s].pc, what)
-                    })
-                    .collect();
-                return Err(SimError::Deadlock { blocked }.into());
+            } else {
+                false
+            };
+            if advanced {
+                // Stay on this stage — the greedy engine drains a stage
+                // before moving on, matching hardware stage autonomy.
+                budget -= 1;
+                self.state.stall_streak = 0;
+            } else {
+                self.state.stall_streak += 1;
+                if self.state.stall_streak >= 3 {
+                    // All three stages failed in a row with no progress
+                    // in between: classic token deadlock.
+                    self.state.running = false;
+                    let blocked = (0..3)
+                        .filter(|&s| self.state.pc[s] < queues[s].len())
+                        .map(|s| {
+                            let what = match &queues[s][self.state.pc[s]] {
+                                Instr::Wait(ch) => format!("waiting on {}", ch.name()),
+                                other => format!("stuck at {other}"),
+                            };
+                            (stage_of[s].name(), self.state.pc[s], what)
+                        })
+                        .collect();
+                    return Err(SimError::Deadlock { blocked }.into());
+                }
+                self.state.cur = (s + 1) % 3;
             }
         }
+    }
 
-        stats.cycles = st.iter().map(|x| x.t).max().unwrap_or(0);
-        stats.acc_overflows = self.exec.overflows;
-        Ok(stats)
+    /// Execute the next instruction of stage `s` if it is not blocked.
+    /// Returns `Ok(true)` on progress, `Ok(false)` if the stage is
+    /// blocked on an empty token FIFO.
+    fn try_advance(&mut self, s: usize, stage: Stage, queue: &[Instr]) -> Result<bool, BismoError> {
+        let pc = self.state.pc[s];
+        let instr = &queue[pc];
+        let t_before = self.state.t[s];
+        let mut stalled = false;
+        match instr {
+            Instr::Signal(ch) => {
+                self.state.t[s] += 1;
+                let t = self.state.t[s];
+                self.fifos[fifo_idx(*ch)].push(t);
+            }
+            Instr::Wait(ch) => {
+                let fifo = &mut self.fifos[fifo_idx(*ch)];
+                match fifo.front() {
+                    Some(tok_t) => {
+                        fifo.pop();
+                        let ready = self.state.t[s].max(tok_t);
+                        let stall = ready - self.state.t[s];
+                        stalled = stall > 0;
+                        match stage {
+                            Stage::Fetch => self.stats.fetch_stall += stall,
+                            Stage::Execute => self.stats.execute_stall += stall,
+                            Stage::Result => self.stats.result_stall += stall,
+                        }
+                        self.state.t[s] = ready + 1;
+                    }
+                    None => return Ok(false), // blocked; retry after others advance
+                }
+            }
+            Instr::Fetch(fr) => {
+                let (cy, bytes) = self
+                    .fetch_unit
+                    .run(fr, &self.dram, &mut self.bufs)
+                    .map_err(|e| SimError::Fault {
+                        stage: "fetch",
+                        pc,
+                        msg: e.0,
+                    })?;
+                self.state.t[s] += cy;
+                self.stats.fetch_busy += cy;
+                self.stats.bytes_fetched += bytes;
+            }
+            Instr::Execute(er) => {
+                let (cy, ops, fill, committed) = self
+                    .exec
+                    .run(er, &self.bufs, &mut self.result_buf)
+                    .map_err(|e| SimError::Fault {
+                        stage: "execute",
+                        pc,
+                        msg: e.0,
+                    })?;
+                self.state.t[s] += cy;
+                self.stats.execute_busy += cy;
+                self.stats.binary_ops += ops;
+                self.stats.pipeline_fill_cycles += fill;
+                self.stats.commits += committed as u64;
+            }
+            Instr::Result(rr) => {
+                let (cy, bytes) = self
+                    .result_unit
+                    .run(rr, &mut self.result_buf, &mut self.dram)
+                    .map_err(|e| SimError::Fault {
+                        stage: "result",
+                        pc,
+                        msg: e.0,
+                    })?;
+                self.state.t[s] += cy;
+                self.stats.result_busy += cy;
+                self.stats.bytes_written += bytes;
+            }
+        }
+        self.record(stage, pc, instr, t_before, self.state.t[s], stalled);
+        self.state.pc[s] += 1;
+        Ok(true)
+    }
+
+    /// Capture the complete simulation state: scheduler position, local
+    /// clocks, token FIFOs, matrix/result buffer contents, accumulators
+    /// and the full DRAM image. The trace (if enabled) is *not*
+    /// captured — it is a debugging aid, not simulation state.
+    pub fn snapshot(&self) -> SimSnapshot {
+        SimSnapshot {
+            cfg: self.cfg,
+            running: self.state.running,
+            cur: self.state.cur,
+            stall_streak: self.state.stall_streak,
+            pc: self.state.pc,
+            t: self.state.t,
+            fingerprint: self.state.fingerprint,
+            stats: self.stats,
+            fifos: std::array::from_fn(|i| FifoState {
+                tokens: self.fifos[i].tokens(),
+                max_depth: self.fifos[i].max_depth,
+                total: self.fifos[i].total,
+            }),
+            lhs: self.bufs.lhs_data().to_vec(),
+            rhs: self.bufs.rhs_data().to_vec(),
+            result_slots: self.result_buf.committed(),
+            result_max_occupancy: self.result_buf.max_occupancy,
+            accs: self.exec.accumulators().to_vec(),
+            overflows: self.exec.overflows,
+            dram: self.dram.as_bytes().to_vec(),
+        }
+    }
+
+    /// Rebuild a simulation from a snapshot. The resumed instance
+    /// continues bit- and cycle-exactly where [`Simulation::snapshot`]
+    /// left off (drive it with the same program via
+    /// [`Simulation::step`]). Inconsistent snapshots are rejected as
+    /// [`BismoError::Parse`].
+    pub fn restore(snap: &SimSnapshot, platform: &Platform) -> Result<Self, BismoError> {
+        let bad = |e: StageFault| BismoError::Parse(format!("snapshot: {e}"));
+        let mut sim =
+            Simulation::new(snap.cfg, platform, DramImage::from_bytes(snap.dram.clone()))?;
+        if snap.cur >= 3 {
+            return Err(BismoError::Parse(format!(
+                "snapshot: round-robin cursor {} out of range",
+                snap.cur
+            )));
+        }
+        sim.bufs.restore_contents(&snap.lhs, &snap.rhs).map_err(bad)?;
+        sim.result_buf
+            .restore_contents(snap.result_slots.clone(), snap.result_max_occupancy)
+            .map_err(bad)?;
+        sim.exec
+            .restore_state(&snap.accs, snap.overflows)
+            .map_err(bad)?;
+        for (i, f) in snap.fifos.iter().enumerate() {
+            sim.fifos[i] = TokenFifo::from_parts(f.tokens.clone(), f.max_depth, f.total);
+        }
+        sim.state = EngineState {
+            pc: snap.pc,
+            t: snap.t,
+            cur: snap.cur,
+            stall_streak: snap.stall_streak,
+            running: snap.running,
+            fingerprint: snap.fingerprint,
+        };
+        sim.stats = snap.stats;
+        Ok(sim)
     }
 }
 
@@ -453,6 +645,84 @@ mod tests {
         p.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
         let mut sim = Simulation::new(cfg(), &PYNQ_Z1, DramImage::new(64)).unwrap();
         assert!(matches!(sim.run(&p), Err(BismoError::IllegalProgram(_))));
+    }
+
+    #[test]
+    fn budgeted_step_suspends_and_resumes_in_place() {
+        let (p, dram, expect, res_lay) = binary_2x64x2();
+        // Uninterrupted reference.
+        let mut base = Simulation::new(cfg(), &PYNQ_Z1, dram.clone()).unwrap();
+        let ref_stats = base.run(&p).unwrap();
+        // One instruction at a time.
+        let mut sim = Simulation::new(cfg(), &PYNQ_Z1, dram).unwrap();
+        sim.begin(&p).unwrap();
+        let mut steps = 0;
+        let stats = loop {
+            match sim.step(&p, 1).unwrap() {
+                StepOutcome::Completed(s) => break s,
+                StepOutcome::Suspended => steps += 1,
+            }
+            assert!(steps < 10_000, "budgeted run failed to terminate");
+        };
+        assert_eq!(stats, ref_stats);
+        assert_eq!(res_lay.load(&sim.dram), expect);
+        // Every call retires exactly one instruction; the final call
+        // sees completion, so it suspends total − 1 times.
+        assert_eq!(steps as usize + 1, p.stats().total);
+    }
+
+    #[test]
+    fn snapshot_restore_is_bit_and_cycle_exact_across_suspend_points() {
+        let (p, dram, expect, res_lay) = binary_2x64x2();
+        let mut base = Simulation::new(cfg(), &PYNQ_Z1, dram.clone()).unwrap();
+        let ref_stats = base.run(&p).unwrap();
+        let total = p.stats().total as u64;
+        // Suspend at every possible instruction boundary, snapshot,
+        // restore into a fresh instance, and finish there.
+        for cut in 0..=total {
+            let mut sim = Simulation::new(cfg(), &PYNQ_Z1, dram.clone()).unwrap();
+            sim.begin(&p).unwrap();
+            match sim.step(&p, cut).unwrap() {
+                StepOutcome::Completed(s) => {
+                    assert_eq!(cut, total);
+                    assert_eq!(s, ref_stats);
+                    continue;
+                }
+                StepOutcome::Suspended => {}
+            }
+            let snap = sim.snapshot();
+            let mut resumed = Simulation::restore(&snap, &PYNQ_Z1).unwrap();
+            match resumed.step(&p, u64::MAX).unwrap() {
+                StepOutcome::Completed(s) => assert_eq!(s, ref_stats, "cut at {cut}"),
+                StepOutcome::Suspended => panic!("unbounded step suspended"),
+            }
+            assert_eq!(res_lay.load(&resumed.dram), expect, "cut at {cut}");
+            assert_eq!(
+                resumed.dram.as_bytes(),
+                base.dram.as_bytes(),
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn step_requires_begin_and_matching_program() {
+        let (p, dram, _, _) = binary_2x64x2();
+        let mut sim = Simulation::new(cfg(), &PYNQ_Z1, dram).unwrap();
+        assert!(matches!(
+            sim.step(&p, 1),
+            Err(BismoError::IllegalProgram(_))
+        ));
+        sim.begin(&p).unwrap();
+        let mut other = Program::new();
+        other.push(Stage::Fetch, Instr::Signal(SyncChannel::FetchToExecute));
+        other.push(Stage::Execute, Instr::Wait(SyncChannel::FetchToExecute));
+        assert!(matches!(
+            sim.step(&other, 1),
+            Err(BismoError::IllegalProgram(_))
+        ));
+        // The armed program still steps fine.
+        assert!(sim.step(&p, 1).is_ok());
     }
 
     #[test]

@@ -59,11 +59,14 @@ impl ExecuteUnit {
     }
 
     /// Wrap `v` into the two's-complement range of an `acc_bits`-wide
-    /// register (`acc_bits < 64`).
+    /// register (`1 <= acc_bits < 64`). Implemented as a shift-out /
+    /// sign-extending shift-in so it is total over all i64 inputs —
+    /// fuzzed programs reach this with extreme shift weights.
     #[inline]
     fn wrap_value(acc_bits: u32, v: i64) -> i64 {
-        let m = 1i64 << (acc_bits - 1);
-        ((v + m).rem_euclid(1i64 << acc_bits)) - m
+        debug_assert!(acc_bits >= 1 && acc_bits < 64);
+        let sh = 64 - acc_bits;
+        (((v as u64) << sh) as i64) >> sh
     }
 
     /// Execute one `RunExecute`. Returns
@@ -106,7 +109,10 @@ impl ExecuteUnit {
                     .map_err(|err| StageFault(format!("execute lhs: {err}")))?;
                 for (j, range) in self.rhs_scratch.iter().enumerate() {
                     let pc = popcount_and(lw, &rhs_data[range.clone()]);
-                    self.accs[i * self.dn + j] += weight * pc as i64;
+                    let idx = i * self.dn + j;
+                    // A 64-bit register wraps mod 2^64 — exactly
+                    // i64 wrapping arithmetic.
+                    self.accs[idx] = self.accs[idx].wrapping_add(weight.wrapping_mul(pc as i64));
                 }
             }
         } else {
@@ -117,7 +123,11 @@ impl ExecuteUnit {
                 for (j, range) in self.rhs_scratch.iter().enumerate() {
                     let pc = popcount_and(lw, &rhs_data[range.clone()]);
                     let idx = i * self.dn + j;
-                    let updated = self.accs[idx] + weight * pc as i64;
+                    // Wrapping arithmetic: 2^acc_bits divides 2^64, so
+                    // reducing the wrapped i64 sum mod 2^acc_bits gives
+                    // the exact register value even when the ideal sum
+                    // exceeds i64 range (shift can be up to 62).
+                    let updated = self.accs[idx].wrapping_add(weight.wrapping_mul(pc as i64));
                     let wrapped = Self::wrap_value(self.acc_bits, updated);
                     if wrapped != updated {
                         self.overflows += 1;
@@ -147,6 +157,21 @@ impl ExecuteUnit {
     /// Current accumulator values (wrapped to `A` bits), row-major.
     pub fn accumulators(&self) -> &[i64] {
         &self.accs
+    }
+
+    /// Overwrite accumulator state from a snapshot.
+    pub fn restore_state(&mut self, accs: &[i64], overflows: u64) -> Result<(), StageFault> {
+        if accs.len() != self.accs.len() {
+            return Err(StageFault(format!(
+                "accumulator snapshot of {} values does not match the {}×{} DPA",
+                accs.len(),
+                self.dm,
+                self.dn
+            )));
+        }
+        self.accs.copy_from_slice(accs);
+        self.overflows = overflows;
+        Ok(())
     }
 }
 
@@ -289,6 +314,55 @@ mod tests {
             exec(&mut unit, &bufs, &mut rb, basic_run(1, 0, false, true));
             assert_eq!(unit.accumulators(), &first[..]);
         }
+    }
+
+    #[test]
+    fn extreme_shift_weights_never_panic() {
+        // shift = 62 with dense data drives |weight·popcount| far past
+        // i64 range after a few accumulations; wrapping arithmetic must
+        // keep going (the register wraps, it does not trap).
+        let c = BismoConfig {
+            acc_bits: 32,
+            ..cfg()
+        };
+        let mut bufs = MatrixBuffers::new(&c);
+        for b in 0..4 {
+            bufs.write_word(b, 0, &[u64::MAX]).unwrap();
+        }
+        let mut unit = ExecuteUnit::new(&c);
+        let mut rb = ResultBuffer::new(&c);
+        exec(&mut unit, &bufs, &mut rb, basic_run(1, 62, false, true));
+        for _ in 0..4 {
+            exec(&mut unit, &bufs, &mut rb, basic_run(1, 62, true, false));
+        }
+        assert!(unit.overflows > 0);
+        // Same for the 64-bit full-width path.
+        let c64 = BismoConfig {
+            acc_bits: 64,
+            ..cfg()
+        };
+        let mut u64unit = ExecuteUnit::new(&c64);
+        exec(&mut u64unit, &bufs, &mut rb, basic_run(1, 62, false, true));
+        exec(&mut u64unit, &bufs, &mut rb, basic_run(1, 62, false, false));
+    }
+
+    #[test]
+    fn wrap_value_total_over_extremes() {
+        assert_eq!(ExecuteUnit::wrap_value(8, 128), -128);
+        assert_eq!(ExecuteUnit::wrap_value(8, -129), 127);
+        assert_eq!(ExecuteUnit::wrap_value(1, 3), 1 - 2); // 1-bit reg: {-1, 0}
+        assert_eq!(ExecuteUnit::wrap_value(63, i64::MAX), -1);
+        assert_eq!(ExecuteUnit::wrap_value(32, i64::MIN), 0);
+    }
+
+    #[test]
+    fn restore_state_roundtrip() {
+        let c = cfg();
+        let mut unit = ExecuteUnit::new(&c);
+        unit.restore_state(&[1, -2, 3, -4], 7).unwrap();
+        assert_eq!(unit.accumulators(), &[1, -2, 3, -4]);
+        assert_eq!(unit.overflows, 7);
+        assert!(unit.restore_state(&[1, 2], 0).is_err());
     }
 
     #[test]

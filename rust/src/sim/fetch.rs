@@ -35,6 +35,9 @@ impl FetchUnit {
                 f.block_bytes, chunk_bytes
             )));
         }
+        if f.buf_range == 0 {
+            return Err(StageFault("fetch buffer range must be non-empty".into()));
+        }
         if f.buf_start as usize + f.buf_range as usize > bufs.num_buffers() {
             return Err(StageFault(format!(
                 "fetch target buffers [{}, {}) out of range ({} buffers)",
@@ -55,12 +58,24 @@ impl FetchUnit {
         let mut dst_buf = 0usize; // index within the range
         let mut words_in_buf = 0u32;
 
+        // Program-derived addresses: all arithmetic is checked and all
+        // DRAM accesses bounds-checked so a wild pointer is a typed
+        // fault, not a panic (fuzzed programs reach this).
+        let oob = |addr: u64| StageFault(format!("fetch: source address {addr:#x} overflows"));
         let mut word = vec![0u64; self.words_per_chunk];
         for blk in 0..f.num_blocks as u64 {
-            let src = f.dram_base + blk * f.block_stride_bytes as u64;
+            let src = f
+                .dram_base
+                .checked_add(blk.wrapping_mul(f.block_stride_bytes as u64))
+                .ok_or_else(|| oob(f.dram_base))?;
             for w in 0..words_per_block {
                 for j in 0..self.words_per_chunk {
-                    word[j] = dram.read_u64(src + w * chunk_bytes + j as u64 * 8);
+                    let addr = src
+                        .checked_add(w * chunk_bytes + j as u64 * 8)
+                        .ok_or_else(|| oob(src))?;
+                    word[j] = dram
+                        .try_read_u64(addr)
+                        .map_err(|e| StageFault(format!("fetch: {e}")))?;
                 }
                 let buf = f.buf_start as usize + dst_buf;
                 bufs.write_word(buf, cursors[dst_buf], &word)
@@ -182,6 +197,29 @@ mod tests {
             block_bytes: 12,
             buf_start: 0,
             buf_range: 1,
+            ..f
+        };
+        assert!(unit.run(&f2, &dram, &mut bufs).is_err());
+    }
+
+    #[test]
+    fn out_of_range_dram_read_is_typed_fault() {
+        let (unit, dram, mut bufs, _) = setup(); // 4096-byte image
+        let f = FetchRun {
+            dram_base: 4096, // first read already past the end
+            block_bytes: 8,
+            block_stride_bytes: 0,
+            num_blocks: 1,
+            buf_offset: 0,
+            buf_start: 0,
+            buf_range: 1,
+            words_per_buf: 1,
+        };
+        let e = unit.run(&f, &dram, &mut bufs).unwrap_err();
+        assert!(e.0.contains("out of range"), "{e}");
+        // Address arithmetic that wraps u64 must also fault, not panic.
+        let f2 = FetchRun {
+            dram_base: u64::MAX - 4,
             ..f
         };
         assert!(unit.run(&f2, &dram, &mut bufs).is_err());

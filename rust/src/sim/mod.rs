@@ -28,13 +28,15 @@ mod engine;
 mod execute;
 mod fetch;
 mod result;
+pub mod snapshot;
 
 pub use buffers::{MatrixBuffers, ResultBuffer};
 pub use dram::DmaTiming;
-pub use engine::{SimError, Simulation, TraceEvent};
+pub use engine::{SimError, Simulation, StepOutcome, TraceEvent};
 pub use execute::ExecuteUnit;
 pub use fetch::FetchUnit;
 pub use result::ResultUnit;
+pub use snapshot::{digest_bytes, SimSnapshot};
 
 /// A localized failure inside one stage unit: out-of-range buffer
 /// access, result-FIFO over/underflow, misaligned fetch. The engine
@@ -96,6 +98,20 @@ impl TokenFifo {
 
     pub fn is_empty(&self) -> bool {
         self.tokens.is_empty()
+    }
+
+    /// Tokens currently queued, oldest first (snapshot capture).
+    pub fn tokens(&self) -> Vec<u64> {
+        self.tokens.iter().copied().collect()
+    }
+
+    /// Rebuild a FIFO from captured state (snapshot restore).
+    pub fn from_parts(tokens: Vec<u64>, max_depth: usize, total: u64) -> Self {
+        TokenFifo {
+            tokens: tokens.into(),
+            max_depth,
+            total,
+        }
     }
 }
 

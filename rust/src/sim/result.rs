@@ -42,11 +42,20 @@ impl ResultUnit {
                 self.dn
             )));
         }
-        let base = r.dram_base + r.offset;
+        // Program-derived addresses: checked arithmetic + bounds-checked
+        // writes so a wild destination is a typed fault, not a panic.
+        let oob =
+            |addr: u64| StageFault(format!("result: destination address {addr:#x} overflows"));
+        let base = r.dram_base.checked_add(r.offset).ok_or_else(|| oob(r.dram_base))?;
         for tr in 0..rows {
             for tc in 0..cols {
                 let v = set[tr * self.dn + tc];
-                dram.write_i32(base + (tr as u64) * r.row_stride_bytes as u64 + tc as u64 * 4, v);
+                let addr = base
+                    .checked_add((tr as u64).wrapping_mul(r.row_stride_bytes as u64))
+                    .and_then(|a| a.checked_add(tc as u64 * 4))
+                    .ok_or_else(|| oob(base))?;
+                dram.try_write_i32(addr, v)
+                    .map_err(|e| StageFault(format!("result: {e}")))?;
             }
         }
         let bytes = (rows * cols * 4) as u64;
@@ -121,6 +130,29 @@ mod tests {
             row_stride_bytes: 4,
         };
         assert!(unit.run(&r, &mut rb, &mut dram).is_err());
+    }
+
+    #[test]
+    fn out_of_range_dram_write_is_typed_fault() {
+        let (unit, mut rb, mut dram) = setup(); // 4096-byte image
+        rb.commit(vec![1, 2, 3, 4]).unwrap();
+        let r = ResultRun {
+            dram_base: 4096,
+            offset: 0,
+            rows: 1,
+            cols: 1,
+            row_stride_bytes: 4,
+        };
+        let e = unit.run(&r, &mut rb, &mut dram).unwrap_err();
+        assert!(e.0.contains("out of range"), "{e}");
+        // u64-wrapping destination arithmetic must also fault.
+        rb.commit(vec![1, 2, 3, 4]).unwrap();
+        let r2 = ResultRun {
+            dram_base: u64::MAX - 3,
+            offset: 3,
+            ..r
+        };
+        assert!(unit.run(&r2, &mut rb, &mut dram).is_err());
     }
 
     #[test]

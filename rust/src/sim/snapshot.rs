@@ -1,0 +1,526 @@
+//! Serializable simulation state (`bismo-sim-snapshot/v1`).
+//!
+//! A [`SimSnapshot`] is a complete, self-contained capture of one
+//! [`super::Simulation`] between two instructions: scheduler position
+//! (per-stage PCs, local clocks, round-robin cursor), partial run
+//! statistics, the four token FIFOs, the LHS/RHS matrix buffers, the
+//! result buffer, the DPA accumulators and the full DRAM image. A
+//! restored snapshot resumes bit- and cycle-exactly (property-tested in
+//! `tests/sim_snapshot.rs`).
+//!
+//! The JSON encoding (via `util::json`, no serde) represents every
+//! 64-bit quantity as a `"0x…"` hex string: the JSON number type is an
+//! f64, which silently loses precision above 2^53 — cycle counters and
+//! DRAM addresses can legitimately exceed that. i64 accumulators are
+//! stored via their two's-complement bit pattern; the DRAM image is one
+//! contiguous hex string. Malformed input is rejected as
+//! [`BismoError::Parse`], never a panic.
+
+use super::RunStats;
+use crate::api::BismoError;
+use crate::arch::BismoConfig;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Schema tag embedded in every serialized snapshot.
+pub const SNAPSHOT_SCHEMA: &str = "bismo-sim-snapshot/v1";
+
+/// Captured state of one token FIFO.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FifoState {
+    /// Queued producer timestamps, oldest first.
+    pub tokens: Vec<u64>,
+    /// High-water mark.
+    pub max_depth: usize,
+    /// Total tokens ever pushed.
+    pub total: u64,
+}
+
+/// Complete state of a [`super::Simulation`] between two instructions.
+///
+/// Produced by [`super::Simulation::snapshot`], consumed by
+/// [`super::Simulation::restore`]. The instruction trace (if tracing was
+/// enabled) is deliberately *not* part of the snapshot: it is a
+/// debugging aid and does not influence simulation results.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimSnapshot {
+    /// Overlay configuration the state belongs to.
+    pub cfg: BismoConfig,
+    /// A program is armed and unfinished.
+    pub running: bool,
+    /// Round-robin scheduler cursor (0 = fetch, 1 = execute, 2 = result).
+    pub cur: usize,
+    /// Consecutive no-progress stage attempts (deadlock detector).
+    pub stall_streak: usize,
+    /// Per-stage next-instruction indices (fetch, execute, result).
+    pub pc: [usize; 3],
+    /// Per-stage local clocks.
+    pub t: [u64; 3],
+    /// Fingerprint of the armed program.
+    pub fingerprint: u64,
+    /// Statistics accumulated so far.
+    pub stats: RunStats,
+    /// The four sync FIFOs, in `fifo_idx` order (F→E, E→F, E→R, R→E).
+    pub fifos: [FifoState; 4],
+    /// LHS matrix-buffer storage (`dm × bm × words_per_chunk` u64s).
+    pub lhs: Vec<u64>,
+    /// RHS matrix-buffer storage (`dn × bn × words_per_chunk` u64s).
+    pub rhs: Vec<u64>,
+    /// Committed-but-undrained result sets, oldest first.
+    pub result_slots: Vec<Vec<i32>>,
+    /// Result-buffer occupancy high-water mark.
+    pub result_max_occupancy: usize,
+    /// DPA accumulator registers, row-major.
+    pub accs: Vec<i64>,
+    /// Accumulator wrap events so far.
+    pub overflows: u64,
+    /// The full DRAM image.
+    pub dram: Vec<u8>,
+}
+
+fn hex(v: u64) -> Json {
+    Json::Str(format!("{v:#x}"))
+}
+
+fn parse_hex(j: &Json, what: &str) -> Result<u64, BismoError> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| BismoError::Parse(format!("snapshot: {what} is not a hex string")))?;
+    let digits = s
+        .strip_prefix("0x")
+        .ok_or_else(|| BismoError::Parse(format!("snapshot: {what} lacks the 0x prefix")))?;
+    u64::from_str_radix(digits, 16)
+        .map_err(|e| BismoError::Parse(format!("snapshot: {what}: {e}")))
+}
+
+fn field<'a>(obj: &'a Json, key: &str) -> Result<&'a Json, BismoError> {
+    obj.get(key)
+        .ok_or_else(|| BismoError::Parse(format!("snapshot: missing field '{key}'")))
+}
+
+fn parse_u32(j: &Json, what: &str) -> Result<u32, BismoError> {
+    let f = j
+        .as_f64()
+        .ok_or_else(|| BismoError::Parse(format!("snapshot: {what} is not a number")))?;
+    if f < 0.0 || f > u32::MAX as f64 || f.fract() != 0.0 {
+        return Err(BismoError::Parse(format!(
+            "snapshot: {what} = {f} is not a u32"
+        )));
+    }
+    Ok(f as u32)
+}
+
+fn parse_usize(j: &Json, what: &str) -> Result<usize, BismoError> {
+    Ok(parse_u32(j, what)? as usize)
+}
+
+fn dram_to_hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+fn dram_from_hex(s: &str) -> Result<Vec<u8>, BismoError> {
+    let b = s.as_bytes();
+    if b.len() % 2 != 0 {
+        return Err(BismoError::Parse(
+            "snapshot: dram hex string has odd length".into(),
+        ));
+    }
+    let nib = |c: u8| -> Result<u8, BismoError> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(BismoError::Parse(format!(
+                "snapshot: invalid dram hex digit '{}'",
+                c as char
+            ))),
+        }
+    };
+    let mut out = Vec::with_capacity(b.len() / 2);
+    for pair in b.chunks_exact(2) {
+        out.push((nib(pair[0])? << 4) | nib(pair[1])?);
+    }
+    Ok(out)
+}
+
+/// Fold a byte slice into a 64-bit digest (splitmix64 chaining). Used by
+/// the golden-snapshot report to summarize the final DRAM image without
+/// storing it twice.
+pub fn digest_bytes(bytes: &[u8]) -> u64 {
+    // Arbitrary non-zero seed so the empty slice has a distinctive digest.
+    let mut h = 0x0b15_0d1e_57a7_e5ee_u64;
+    for chunk in bytes.chunks(8) {
+        let mut w = [0u8; 8];
+        w[..chunk.len()].copy_from_slice(chunk);
+        h = crate::util::splitmix64(h ^ u64::from_le_bytes(w));
+    }
+    // Length-extension guard: [0] and [0, 0] must differ.
+    crate::util::splitmix64(h ^ bytes.len() as u64)
+}
+
+impl SimSnapshot {
+    /// Encode as a `util::json` value (schema `bismo-sim-snapshot/v1`).
+    pub fn to_json_value(&self) -> Json {
+        let cfgv = |v: u32| Json::num(v as f64);
+        let cfg = Json::Obj(BTreeMap::from([
+            ("dm".into(), cfgv(self.cfg.dm)),
+            ("dk".into(), cfgv(self.cfg.dk)),
+            ("dn".into(), cfgv(self.cfg.dn)),
+            ("bm".into(), cfgv(self.cfg.bm)),
+            ("bn".into(), cfgv(self.cfg.bn)),
+            ("br".into(), cfgv(self.cfg.br)),
+            ("acc_bits".into(), cfgv(self.cfg.acc_bits)),
+            ("fetch_bits".into(), cfgv(self.cfg.fetch_bits)),
+            ("res_bits".into(), cfgv(self.cfg.res_bits)),
+            ("fclk_mhz".into(), cfgv(self.cfg.fclk_mhz)),
+        ]));
+        let engine = Json::Obj(BTreeMap::from([
+            ("running".into(), Json::Bool(self.running)),
+            ("cur".into(), Json::num(self.cur as f64)),
+            ("stall_streak".into(), Json::num(self.stall_streak as f64)),
+            (
+                "pc".into(),
+                Json::Arr(self.pc.iter().map(|&p| Json::num(p as f64)).collect()),
+            ),
+            (
+                "t".into(),
+                Json::Arr(self.t.iter().map(|&t| hex(t)).collect()),
+            ),
+            ("fingerprint".into(), hex(self.fingerprint)),
+        ]));
+        let s = &self.stats;
+        let stats = Json::Obj(BTreeMap::from([
+            ("cycles".into(), hex(s.cycles)),
+            ("fetch_busy".into(), hex(s.fetch_busy)),
+            ("execute_busy".into(), hex(s.execute_busy)),
+            ("result_busy".into(), hex(s.result_busy)),
+            ("fetch_stall".into(), hex(s.fetch_stall)),
+            ("execute_stall".into(), hex(s.execute_stall)),
+            ("result_stall".into(), hex(s.result_stall)),
+            ("bytes_fetched".into(), hex(s.bytes_fetched)),
+            ("bytes_written".into(), hex(s.bytes_written)),
+            ("binary_ops".into(), hex(s.binary_ops)),
+            ("pipeline_fill_cycles".into(), hex(s.pipeline_fill_cycles)),
+            ("commits".into(), hex(s.commits)),
+            ("acc_overflows".into(), hex(s.acc_overflows)),
+        ]));
+        let fifos = Json::Arr(
+            self.fifos
+                .iter()
+                .map(|f| {
+                    Json::Obj(BTreeMap::from([
+                        (
+                            "tokens".into(),
+                            Json::Arr(f.tokens.iter().map(|&t| hex(t)).collect()),
+                        ),
+                        ("max_depth".into(), Json::num(f.max_depth as f64)),
+                        ("total".into(), hex(f.total)),
+                    ]))
+                })
+                .collect(),
+        );
+        let words = |ws: &[u64]| Json::Arr(ws.iter().map(|&w| hex(w)).collect());
+        let result = Json::Obj(BTreeMap::from([
+            (
+                "slots".into(),
+                Json::Arr(
+                    self.result_slots
+                        .iter()
+                        .map(|set| Json::Arr(set.iter().map(|&v| Json::num(v as f64)).collect()))
+                        .collect(),
+                ),
+            ),
+            (
+                "max_occupancy".into(),
+                Json::num(self.result_max_occupancy as f64),
+            ),
+        ]));
+        let exec = Json::Obj(BTreeMap::from([
+            (
+                "accs".into(),
+                Json::Arr(self.accs.iter().map(|&a| hex(a as u64)).collect()),
+            ),
+            ("overflows".into(), hex(self.overflows)),
+        ]));
+        Json::Obj(BTreeMap::from([
+            ("schema".into(), Json::str(SNAPSHOT_SCHEMA)),
+            ("cfg".into(), cfg),
+            ("engine".into(), engine),
+            ("stats".into(), stats),
+            ("fifos".into(), fifos),
+            ("lhs".into(), words(&self.lhs)),
+            ("rhs".into(), words(&self.rhs)),
+            ("result".into(), result),
+            ("exec".into(), exec),
+            ("dram".into(), Json::Str(dram_to_hex(&self.dram))),
+        ]))
+    }
+
+    /// Serialize to pretty-printed JSON.
+    pub fn to_json(&self) -> String {
+        self.to_json_value().pretty(2)
+    }
+
+    /// Decode from a `util::json` value. Any structural problem —
+    /// missing fields, wrong types, bad hex — is a
+    /// [`BismoError::Parse`].
+    pub fn from_json_value(v: &Json) -> Result<Self, BismoError> {
+        let schema = field(v, "schema")?.as_str().unwrap_or("");
+        if schema != SNAPSHOT_SCHEMA {
+            return Err(BismoError::Parse(format!(
+                "snapshot: unsupported schema '{schema}' (want {SNAPSHOT_SCHEMA})"
+            )));
+        }
+        let c = field(v, "cfg")?;
+        let cfg = BismoConfig {
+            dm: parse_u32(field(c, "dm")?, "cfg.dm")?,
+            dk: parse_u32(field(c, "dk")?, "cfg.dk")?,
+            dn: parse_u32(field(c, "dn")?, "cfg.dn")?,
+            bm: parse_u32(field(c, "bm")?, "cfg.bm")?,
+            bn: parse_u32(field(c, "bn")?, "cfg.bn")?,
+            br: parse_u32(field(c, "br")?, "cfg.br")?,
+            acc_bits: parse_u32(field(c, "acc_bits")?, "cfg.acc_bits")?,
+            fetch_bits: parse_u32(field(c, "fetch_bits")?, "cfg.fetch_bits")?,
+            res_bits: parse_u32(field(c, "res_bits")?, "cfg.res_bits")?,
+            fclk_mhz: parse_u32(field(c, "fclk_mhz")?, "cfg.fclk_mhz")?,
+        };
+        let e = field(v, "engine")?;
+        let running = match field(e, "running")? {
+            Json::Bool(b) => *b,
+            _ => return Err(BismoError::Parse("snapshot: engine.running not bool".into())),
+        };
+        let pcs = field(e, "pc")?
+            .as_arr()
+            .ok_or_else(|| BismoError::Parse("snapshot: engine.pc not an array".into()))?;
+        let ts = field(e, "t")?
+            .as_arr()
+            .ok_or_else(|| BismoError::Parse("snapshot: engine.t not an array".into()))?;
+        if pcs.len() != 3 || ts.len() != 3 {
+            return Err(BismoError::Parse(
+                "snapshot: engine.pc / engine.t must have 3 entries".into(),
+            ));
+        }
+        let mut pc = [0usize; 3];
+        let mut t = [0u64; 3];
+        for i in 0..3 {
+            pc[i] = parse_usize(&pcs[i], "engine.pc[]")?;
+            t[i] = parse_hex(&ts[i], "engine.t[]")?;
+        }
+        let s = field(v, "stats")?;
+        let stat = |k: &str| parse_hex(field(s, k)?, k);
+        let stats = RunStats {
+            cycles: stat("cycles")?,
+            fetch_busy: stat("fetch_busy")?,
+            execute_busy: stat("execute_busy")?,
+            result_busy: stat("result_busy")?,
+            fetch_stall: stat("fetch_stall")?,
+            execute_stall: stat("execute_stall")?,
+            result_stall: stat("result_stall")?,
+            bytes_fetched: stat("bytes_fetched")?,
+            bytes_written: stat("bytes_written")?,
+            binary_ops: stat("binary_ops")?,
+            pipeline_fill_cycles: stat("pipeline_fill_cycles")?,
+            commits: stat("commits")?,
+            acc_overflows: stat("acc_overflows")?,
+        };
+        let fs = field(v, "fifos")?
+            .as_arr()
+            .ok_or_else(|| BismoError::Parse("snapshot: fifos not an array".into()))?;
+        if fs.len() != 4 {
+            return Err(BismoError::Parse("snapshot: want exactly 4 fifos".into()));
+        }
+        let mut fifos: Vec<FifoState> = Vec::with_capacity(4);
+        for f in fs {
+            let toks = field(f, "tokens")?
+                .as_arr()
+                .ok_or_else(|| BismoError::Parse("snapshot: fifo tokens not an array".into()))?
+                .iter()
+                .map(|t| parse_hex(t, "fifo token"))
+                .collect::<Result<Vec<u64>, _>>()?;
+            fifos.push(FifoState {
+                tokens: toks,
+                max_depth: parse_usize(field(f, "max_depth")?, "fifo max_depth")?,
+                total: parse_hex(field(f, "total")?, "fifo total")?,
+            });
+        }
+        let fifos: [FifoState; 4] = match fifos.try_into() {
+            Ok(a) => a,
+            Err(_) => unreachable!("length checked above"),
+        };
+        let words = |k: &str| -> Result<Vec<u64>, BismoError> {
+            field(v, k)?
+                .as_arr()
+                .ok_or_else(|| BismoError::Parse(format!("snapshot: {k} not an array")))?
+                .iter()
+                .map(|w| parse_hex(w, k))
+                .collect()
+        };
+        let r = field(v, "result")?;
+        let mut result_slots = Vec::new();
+        for set in r
+            .get("slots")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| BismoError::Parse("snapshot: result.slots not an array".into()))?
+        {
+            let vals = set
+                .as_arr()
+                .ok_or_else(|| BismoError::Parse("snapshot: result set not an array".into()))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .filter(|f| {
+                            f.fract() == 0.0 && *f >= i32::MIN as f64 && *f <= i32::MAX as f64
+                        })
+                        .map(|f| f as i32)
+                        .ok_or_else(|| {
+                            BismoError::Parse("snapshot: result value not an i32".into())
+                        })
+                })
+                .collect::<Result<Vec<i32>, _>>()?;
+            result_slots.push(vals);
+        }
+        let x = field(v, "exec")?;
+        let accs = field(x, "accs")?
+            .as_arr()
+            .ok_or_else(|| BismoError::Parse("snapshot: exec.accs not an array".into()))?
+            .iter()
+            .map(|a| parse_hex(a, "exec.accs[]").map(|u| u as i64))
+            .collect::<Result<Vec<i64>, _>>()?;
+        let dram = dram_from_hex(
+            field(v, "dram")?
+                .as_str()
+                .ok_or_else(|| BismoError::Parse("snapshot: dram not a string".into()))?,
+        )?;
+        Ok(SimSnapshot {
+            cfg,
+            running,
+            cur: parse_usize(field(e, "cur")?, "engine.cur")?,
+            stall_streak: parse_usize(field(e, "stall_streak")?, "engine.stall_streak")?,
+            pc,
+            t,
+            fingerprint: parse_hex(field(e, "fingerprint")?, "engine.fingerprint")?,
+            stats,
+            fifos,
+            lhs: words("lhs")?,
+            rhs: words("rhs")?,
+            result_slots,
+            result_max_occupancy: parse_usize(
+                r.get("max_occupancy").ok_or_else(|| {
+                    BismoError::Parse("snapshot: missing result.max_occupancy".into())
+                })?,
+                "result.max_occupancy",
+            )?,
+            accs,
+            overflows: parse_hex(field(x, "overflows")?, "exec.overflows")?,
+            dram,
+        })
+    }
+
+    /// Parse from serialized JSON text.
+    pub fn from_json(text: &str) -> Result<Self, BismoError> {
+        let v = Json::parse(text).map_err(|e| BismoError::Parse(format!("snapshot: {e}")))?;
+        Self::from_json_value(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SimSnapshot {
+        SimSnapshot {
+            cfg: BismoConfig::small(),
+            running: true,
+            cur: 1,
+            stall_streak: 2,
+            pc: [3, 1, 0],
+            t: [u64::MAX, 1 << 60, 7],
+            fingerprint: 0xDEAD_BEEF_DEAD_BEEF,
+            stats: RunStats {
+                cycles: 1 << 55,
+                binary_ops: u64::MAX - 1,
+                ..RunStats::default()
+            },
+            fifos: [
+                FifoState {
+                    tokens: vec![1, u64::MAX],
+                    max_depth: 2,
+                    total: 9,
+                },
+                FifoState {
+                    tokens: vec![],
+                    max_depth: 0,
+                    total: 0,
+                },
+                FifoState {
+                    tokens: vec![5],
+                    max_depth: 1,
+                    total: 1,
+                },
+                FifoState {
+                    tokens: vec![],
+                    max_depth: 3,
+                    total: 8,
+                },
+            ],
+            lhs: vec![0, u64::MAX, 0x1234],
+            rhs: vec![42; 5],
+            result_slots: vec![vec![i32::MIN, -1, 0, i32::MAX]],
+            result_max_occupancy: 2,
+            accs: vec![i64::MIN, -3, 0, i64::MAX],
+            overflows: 17,
+            dram: vec![0x00, 0xFF, 0xA5, 0x5A],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_64_bit_extremes() {
+        let snap = sample();
+        let text = snap.to_json();
+        let back = SimSnapshot::from_json(&text).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn malformed_inputs_are_typed_parse_errors() {
+        assert!(matches!(
+            SimSnapshot::from_json("not json"),
+            Err(BismoError::Parse(_))
+        ));
+        assert!(matches!(
+            SimSnapshot::from_json("{\"schema\": \"bogus/v9\"}"),
+            Err(BismoError::Parse(_))
+        ));
+        // Drop a required field: serialize, surgically remove "dram".
+        let text = sample().to_json();
+        let v = Json::parse(&text).unwrap();
+        if let Json::Obj(mut m) = v {
+            m.remove("dram");
+            let crippled = Json::Obj(m).dump();
+            assert!(matches!(
+                SimSnapshot::from_json(&crippled),
+                Err(BismoError::Parse(_))
+            ));
+        } else {
+            panic!("snapshot did not serialize to an object");
+        }
+        // Corrupt the hex encoding.
+        let bad_hex = text.replace("0x", "0z");
+        assert!(matches!(
+            SimSnapshot::from_json(&bad_hex),
+            Err(BismoError::Parse(_))
+        ));
+    }
+
+    #[test]
+    fn digest_is_stable_and_content_sensitive() {
+        let a = digest_bytes(&[1, 2, 3, 4]);
+        assert_eq!(a, digest_bytes(&[1, 2, 3, 4]));
+        assert_ne!(a, digest_bytes(&[1, 2, 3, 5]));
+        assert_ne!(digest_bytes(&[]), digest_bytes(&[0]));
+    }
+}

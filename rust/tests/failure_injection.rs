@@ -172,6 +172,97 @@ fn bad_config_rejected_before_running() {
 }
 
 #[test]
+fn budget_exhaustion_is_typed_through_the_service() {
+    // A sim-backend request with an absurdly small instruction budget
+    // must fail with a typed BudgetExceeded, not hang or panic.
+    use bismo::bitmatrix::IntMatrix;
+    use bismo::coordinator::{
+        Backend, BismoService, GemmRequest, Precision, RequestOptions, ServiceConfig,
+    };
+    use bismo::util::Rng;
+
+    let svc = BismoService::new(ServiceConfig {
+        workers: 2,
+        ..ServiceConfig::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(11);
+    let a = IntMatrix::random(&mut rng, 4, 64, 2, false);
+    let b = IntMatrix::random(&mut rng, 64, 4, 2, false);
+    let opts = RequestOptions {
+        backend: Backend::Sim,
+        max_instrs: Some(1),
+        ..RequestOptions::default()
+    };
+    let r = svc
+        .submit(GemmRequest::with_opts(a, b, Precision::unsigned(2, 2), opts))
+        .wait();
+    match r {
+        Err(BismoError::SimFault(SimError::BudgetExceeded { budget: 1 })) => {}
+        other => panic!("expected BudgetExceeded {{1}}, got {other:?}"),
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn mid_batch_fault_poisons_only_the_offending_request() {
+    // One poisoned request (budget watchdog trips mid-simulation) rides
+    // in the same worker pool as concurrent well-formed requests on
+    // both backends; the healthy requests must complete bit-exactly.
+    use bismo::bitmatrix::IntMatrix;
+    use bismo::coordinator::{
+        Backend, BismoService, GemmRequest, Precision, RequestOptions, ServiceConfig,
+    };
+    use bismo::util::Rng;
+
+    let svc = BismoService::new(ServiceConfig {
+        workers: 3,
+        ..ServiceConfig::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(23);
+    let prec = Precision::unsigned(2, 2);
+
+    let poisoned = {
+        let a = IntMatrix::random(&mut rng, 4, 64, 2, false);
+        let b = IntMatrix::random(&mut rng, 64, 4, 2, false);
+        let opts = RequestOptions {
+            backend: Backend::Sim,
+            max_instrs: Some(2),
+            ..RequestOptions::default()
+        };
+        svc.submit(GemmRequest::with_opts(a, b, prec, opts))
+    };
+    let healthy: Vec<_> = (0..6)
+        .map(|i| {
+            let a = IntMatrix::random(&mut rng, 4, 64, 2, false);
+            let b = IntMatrix::random(&mut rng, 64, 4, 2, false);
+            let expect = a.matmul(&b);
+            let opts = RequestOptions {
+                backend: if i % 2 == 0 {
+                    Backend::Engine
+                } else {
+                    Backend::Sim
+                },
+                ..RequestOptions::default()
+            };
+            let h = svc.submit(GemmRequest::with_opts(a, b, prec, opts));
+            (h, expect)
+        })
+        .collect();
+
+    match poisoned.wait() {
+        Err(BismoError::SimFault(SimError::BudgetExceeded { .. })) => {}
+        other => panic!("poisoned request: expected BudgetExceeded, got {other:?}"),
+    }
+    for (h, expect) in healthy {
+        let resp = h.wait().expect("healthy request must complete");
+        assert_eq!(resp.result, expect, "healthy request result corrupted");
+    }
+    svc.shutdown();
+}
+
+#[test]
 fn error_display_is_informative() {
     let e = SimError::Fault {
         stage: "fetch",

@@ -1,0 +1,121 @@
+//! Snapshot/replay: suspended simulations must resume bit- and
+//! cycle-exactly, snapshots must survive a JSON roundtrip, and the
+//! committed golden fixture must match what this build produces.
+
+use bismo::arch::{BismoConfig, PYNQ_Z1};
+use bismo::bitmatrix::dram::DramImage;
+use bismo::fuzz::{generate_legal_program, golden_snapshot_report, random_fuzz_config};
+use bismo::sim::{SimSnapshot, Simulation, StepOutcome};
+use bismo::util::{splitmix64, Json, Rng};
+
+fn seeded_dram(seed: u64, len: usize) -> DramImage {
+    let mut img = DramImage::new(len);
+    for i in 0..(len as u64 / 8) {
+        img.write_u64(i * 8, splitmix64(seed ^ i));
+    }
+    img
+}
+
+/// Property: for random programs and random suspend points, suspending,
+/// serializing, restoring and resuming converges to the exact final
+/// state of the uninterrupted run.
+#[test]
+fn random_suspend_points_resume_bit_and_cycle_exact() {
+    for case in 0..12u64 {
+        let mut rng = Rng::new(0x5EED ^ case);
+        let cfg = random_fuzz_config(&mut rng);
+        let prog = generate_legal_program(&mut rng, &cfg, 1 << 16);
+
+        let mut reference = Simulation::new(cfg, &PYNQ_Z1, seeded_dram(case, 1 << 16)).unwrap();
+        let ref_stats = reference.run(&prog).unwrap();
+
+        let total = prog.stats().total as u64;
+        let cut = rng.below(total); // strictly before completion
+        let mut sim = Simulation::new(cfg, &PYNQ_Z1, seeded_dram(case, 1 << 16)).unwrap();
+        sim.begin(&prog).unwrap();
+        assert_eq!(
+            sim.step(&prog, cut).unwrap(),
+            StepOutcome::Suspended,
+            "case {case}: cut {cut} of {total} must suspend"
+        );
+
+        // Serialize, drop the live simulator, restore from text alone.
+        let text = sim.snapshot().to_json();
+        drop(sim);
+        let snap = SimSnapshot::from_json(&text).unwrap();
+        let mut resumed = Simulation::restore(&snap, &PYNQ_Z1).unwrap();
+        match resumed.step(&prog, u64::MAX).unwrap() {
+            StepOutcome::Completed(stats) => {
+                assert_eq!(stats, ref_stats, "case {case}: stats diverged after resume");
+            }
+            StepOutcome::Suspended => panic!("case {case}: unbounded resume suspended"),
+        }
+        assert_eq!(
+            resumed.dram.as_bytes(),
+            reference.dram.as_bytes(),
+            "case {case}: DRAM contents diverged after resume"
+        );
+    }
+}
+
+/// A snapshot of one config cannot be restored into a different world:
+/// mismatched programs are rejected by the fingerprint check.
+#[test]
+fn restored_simulation_rejects_a_different_program() {
+    let mut rng = Rng::new(77);
+    let cfg = random_fuzz_config(&mut rng);
+    let prog = generate_legal_program(&mut rng, &cfg, 1 << 16);
+    let mut sim = Simulation::new(cfg, &PYNQ_Z1, seeded_dram(7, 1 << 16)).unwrap();
+    sim.begin(&prog).unwrap();
+    if sim.step(&prog, 1).unwrap() == StepOutcome::Suspended {
+        let snap = sim.snapshot();
+        let mut restored = Simulation::restore(&snap, &PYNQ_Z1).unwrap();
+        let other = generate_legal_program(&mut rng, &cfg, 1 << 16);
+        assert!(
+            restored.step(&other, u64::MAX).is_err(),
+            "stepping a restored sim with a different program must fail"
+        );
+    }
+}
+
+/// Golden fixture gate (mirrors `bismo snapshot` in CI): the
+/// deterministic report this build produces must match the committed
+/// baseline, unless the baseline is still the bootstrap placeholder.
+#[test]
+fn golden_fixture_matches_committed_baseline() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../ci/sim_snapshots.json");
+    let baseline_text = std::fs::read_to_string(path).expect("ci/sim_snapshots.json must exist");
+    let baseline = Json::parse(&baseline_text).expect("golden baseline must be valid JSON");
+    assert_eq!(
+        baseline.get("schema").and_then(Json::as_str),
+        Some("bismo-sim-golden/v1"),
+        "golden baseline schema tag"
+    );
+    if baseline.get("status").and_then(Json::as_str) == Some("bootstrap") {
+        // Not yet ratcheted: `bismo snapshot --regen` on a trusted
+        // build commits the first real baseline.
+        return;
+    }
+    let current = Json::parse(&golden_snapshot_report().unwrap()).unwrap();
+    assert_eq!(
+        baseline.dump(),
+        current.dump(),
+        "snapshot/replay behaviour drifted from the committed golden \
+         (regenerate deliberately with `bismo snapshot --regen`)"
+    );
+}
+
+/// The config is carried inside the snapshot: restore works without
+/// re-supplying it, and a default-config snapshot of a fresh simulator
+/// roundtrips through JSON unchanged.
+#[test]
+fn fresh_simulation_snapshot_roundtrips() {
+    let cfg = BismoConfig::small();
+    let sim = Simulation::new(cfg, &PYNQ_Z1, DramImage::new(4096)).unwrap();
+    let snap = sim.snapshot();
+    let text = snap.to_json();
+    let back = SimSnapshot::from_json(&text).unwrap();
+    assert_eq!(back.to_json(), text, "JSON form must be a fixed point");
+    let restored = Simulation::restore(&back, &PYNQ_Z1).unwrap();
+    assert_eq!(restored.config(), &cfg);
+}
