@@ -2,7 +2,31 @@
 
 use super::int::IntMatrix;
 use super::plane_sign;
+use crate::simd::{self, DispatchTier};
 use crate::util::ceil_div;
+
+/// Inclusive value range of a `bits`-wide operand.
+fn operand_range(bits: u32, signed: bool) -> (i64, i64) {
+    if signed {
+        (-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1)
+    } else {
+        (0, ((1u128 << bits) - 1) as i64)
+    }
+}
+
+/// Reproduce the exact packing panic for the first out-of-range value
+/// in `chunk` (called only after `simd::pack_chunk` reports one).
+fn bad_entry_panic(chunk: &[i64], lo: i64, hi: i64, bits: u32, signed: bool) -> ! {
+    let v = chunk.iter().copied().find(|&v| v < lo || v > hi).unwrap();
+    if bits == 1 {
+        panic!("entry {v} does not fit 1-bit");
+    }
+    panic!(
+        "matrix entry {v} does not fit {} {}-bit",
+        if signed { "signed" } else { "unsigned" },
+        bits
+    );
+}
 
 /// A matrix decomposed into `bits` binary bit-planes, each bit-packed
 /// into `u64` words along the columns (`k`) dimension.
@@ -43,53 +67,30 @@ impl BitSerialMatrix {
     }
 
     /// Decompose an integer matrix. Panics if any entry does not fit the
-    /// requested precision (validated inline — single pass).
+    /// requested precision (validated inline — single pass). Packs with
+    /// the process-wide [`DispatchTier`]; every tier produces
+    /// word-identical planes (property-tested in
+    /// `rust/tests/simd_dispatch.rs`).
     pub fn from_int(m: &IntMatrix, bits: u32, signed: bool) -> Self {
-        let (lo, hi) = if signed {
-            (-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1)
-        } else {
-            (0, ((1u128 << bits) - 1) as i64)
-        };
+        Self::from_int_tier(m, bits, signed, DispatchTier::active())
+    }
+
+    /// [`BitSerialMatrix::from_int`] pinned to an explicit
+    /// [`DispatchTier`] — the packing half of the forced-dispatch test
+    /// matrix and the cross-tier fuzz mode.
+    pub fn from_int_tier(m: &IntMatrix, bits: u32, signed: bool, tier: DispatchTier) -> Self {
+        let (lo, hi) = operand_range(bits, signed);
         let mut out = Self::zeros(m.rows, m.cols, bits, signed);
-        let mask = ((1u128 << bits) - 1) as u64;
-        // Word-wise packing: accumulate 64 columns per plane into local
-        // words, then store — ~10x faster than per-bit set_bit (this is
-        // on the coordinator's request path).
-        if bits == 1 {
-            // Binary fast path (the peak-performance workloads).
-            for r in 0..m.rows {
-                let row = m.row(r);
-                for (wi, colchunk) in row.chunks(64).enumerate() {
-                    let mut w = 0u64;
-                    for (bi, &v) in colchunk.iter().enumerate() {
-                        assert!(v >= lo && v <= hi, "entry {v} does not fit 1-bit");
-                        w |= ((v as u64) & 1) << bi;
-                    }
-                    let idx = out.idx(0, r, wi);
-                    out.data[idx] = w;
-                }
-            }
-            return out;
-        }
+        // Word-wise packing: 64 columns per plane at a time through the
+        // shared chunk packer (scalar set-bit walk or the AVX2
+        // sign-bit-movemask path) — this is on the coordinator's
+        // request path.
         let mut words = vec![0u64; bits as usize];
         for r in 0..m.rows {
             let row = m.row(r);
             for (wi, colchunk) in row.chunks(64).enumerate() {
-                words.iter_mut().for_each(|w| *w = 0);
-                for (bi, &v) in colchunk.iter().enumerate() {
-                    assert!(
-                        v >= lo && v <= hi,
-                        "matrix entry {v} does not fit {} {}-bit",
-                        if signed { "signed" } else { "unsigned" },
-                        bits
-                    );
-                    // Two's-complement bit pattern within `bits`; walk
-                    // only the set bits.
-                    let mut p = (v as u64) & mask;
-                    while p != 0 {
-                        words[p.trailing_zeros() as usize] |= 1u64 << bi;
-                        p &= p - 1;
-                    }
+                if !simd::pack_chunk(tier, colchunk, lo, hi, &mut words) {
+                    bad_entry_panic(colchunk, lo, hi, bits, signed);
                 }
                 for (i, &w) in words.iter().enumerate() {
                     let idx = out.idx(i as u32, r, wi);
@@ -104,12 +105,14 @@ impl BitSerialMatrix {
     /// produces exactly `from_int(&m.transpose(), ...)` but in one pass
     /// over `m` (the coordinator packs the RHS this way — fusing the
     /// transpose saves a full 16-byte-per-element round trip).
+    ///
+    /// Stays scalar on every tier: it packs *along* `m.rows` (output
+    /// bit position `r % 64` varies per input row, not per input
+    /// column), so the 64-column chunk packer's access pattern does
+    /// not apply. The fuzz differential mode still cross-checks it
+    /// against scalar-packed transposes.
     pub fn from_int_transposed(m: &IntMatrix, bits: u32, signed: bool) -> Self {
-        let (lo, hi) = if signed {
-            (-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1)
-        } else {
-            (0, ((1u128 << bits) - 1) as i64)
-        };
+        let (lo, hi) = operand_range(bits, signed);
         let mask = ((1u128 << bits) - 1) as u64;
         // Output: rows = m.cols, cols = m.rows (packed along m.rows).
         let mut out = Self::zeros(m.cols, m.rows, bits, signed);
@@ -144,39 +147,44 @@ impl BitSerialMatrix {
     /// `kh·kw` times larger than the input tensor, so sampling it
     /// per-element straight into packed planes skips the largest
     /// allocation on the conv hot path. Word-wise packing, same as
-    /// [`BitSerialMatrix::from_int`]; panics if any produced value does
-    /// not fit the requested precision.
+    /// [`BitSerialMatrix::from_int`] (and the same [`DispatchTier`]);
+    /// panics if any produced value does not fit the requested
+    /// precision.
     pub fn from_int_fn<F: FnMut(usize, usize) -> i64>(
         rows: usize,
         cols: usize,
         bits: u32,
         signed: bool,
+        f: F,
+    ) -> Self {
+        Self::from_int_fn_tier(rows, cols, bits, signed, DispatchTier::active(), f)
+    }
+
+    /// [`BitSerialMatrix::from_int_fn`] pinned to an explicit
+    /// [`DispatchTier`]. The value function is sampled a whole
+    /// 64-column chunk at a time into a stack buffer before the chunk
+    /// is validated and packed, so `f` may be called for a few columns
+    /// past the first out-of-range value before the panic fires.
+    pub fn from_int_fn_tier<F: FnMut(usize, usize) -> i64>(
+        rows: usize,
+        cols: usize,
+        bits: u32,
+        signed: bool,
+        tier: DispatchTier,
         mut f: F,
     ) -> Self {
-        let (lo, hi) = if signed {
-            (-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1)
-        } else {
-            (0, ((1u128 << bits) - 1) as i64)
-        };
-        let mask = ((1u128 << bits) - 1) as u64;
+        let (lo, hi) = operand_range(bits, signed);
         let mut out = Self::zeros(rows, cols, bits, signed);
         let mut words = vec![0u64; bits as usize];
+        let mut vals = [0i64; 64];
         for r in 0..rows {
             for (wi, chunk) in (0..cols).step_by(64).enumerate() {
-                words.iter_mut().for_each(|w| *w = 0);
-                for bi in 0..(cols - chunk).min(64) {
-                    let v = f(r, chunk + bi);
-                    assert!(
-                        v >= lo && v <= hi,
-                        "matrix entry {v} does not fit {} {}-bit",
-                        if signed { "signed" } else { "unsigned" },
-                        bits
-                    );
-                    let mut p = (v as u64) & mask;
-                    while p != 0 {
-                        words[p.trailing_zeros() as usize] |= 1u64 << bi;
-                        p &= p - 1;
-                    }
+                let len = (cols - chunk).min(64);
+                for (bi, slot) in vals[..len].iter_mut().enumerate() {
+                    *slot = f(r, chunk + bi);
+                }
+                if !simd::pack_chunk(tier, &vals[..len], lo, hi, &mut words) {
+                    bad_entry_panic(&vals[..len], lo, hi, bits, signed);
                 }
                 for (i, &w) in words.iter().enumerate() {
                     let idx = out.idx(i as u32, r, wi);

@@ -534,6 +534,10 @@ impl BismoService {
                 "service workers and max_batch must be >= 1".into(),
             ));
         }
+        // Resolve the SIMD dispatch tier up front so an invalid
+        // BISMO_SIMD override surfaces as a typed error instead of a
+        // panic on the first kernel call.
+        crate::simd::DispatchTier::resolve()?;
         let inner = Arc::new(Inner {
             engine: EngineBackend::default(),
             sim: SimBackend::new(cfg.overlay)?,

@@ -25,8 +25,11 @@
 //! * **differential** — random shapes / precisions / sharding configs
 //!   are served through both [`Backend::Engine`] and [`Backend::Sim`]
 //!   on one [`BismoService`] and compared against the
-//!   [`IntMatrix::matmul`] oracle. Failing cases are greedily minimized
-//!   before being reported.
+//!   [`IntMatrix::matmul`] oracle, then re-run through the kernel
+//!   pinned to the forced-scalar [`DispatchTier`] and to the best tier
+//!   the host supports (packing compared word-for-word, results
+//!   bit-exact). Failing cases are greedily minimized before being
+//!   reported.
 
 use crate::api::BismoError;
 use crate::arch::{BismoConfig, PYNQ_Z1};
@@ -36,8 +39,10 @@ use crate::coordinator::{
     Backend, BismoService, GemmRequest, Precision, RequestOptions, ServiceConfig, Sharding,
 };
 use crate::isa::{ExecuteRun, FetchRun, Instr, Program, ResultRun, Stage, SyncChannel};
+use crate::kernel::gemm_tiled_tier;
 use crate::scheduler::{self, MatmulJob, Overlap};
 use crate::sim::{digest_bytes, SimSnapshot, Simulation, StepOutcome};
+use crate::simd::DispatchTier;
 use crate::util::json::Json;
 use crate::util::{ceil_div, round_up, splitmix64, Rng};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -522,6 +527,30 @@ impl DiffCase {
                 return Err(format!(
                     "{} backend disagrees with the integer oracle",
                     backend.name()
+                ));
+            }
+        }
+        // Cross-tier differential: the engine pinned to the scalar strip
+        // vs the engine pinned to the best tier this host supports, with
+        // packing compared word-for-word. On scalar-only hosts this
+        // degenerates to one extra oracle check.
+        let best = DispatchTier::detect();
+        let l_scalar =
+            BitSerialMatrix::from_int_tier(&a, self.wbits, self.lsigned, DispatchTier::Scalar);
+        let r_t = BitSerialMatrix::from_int_transposed(&b, self.abits, self.rsigned);
+        let scalar = gemm_tiled_tier(&l_scalar, &r_t, DispatchTier::Scalar);
+        if scalar != expect {
+            return Err("engine at forced-scalar tier disagrees with the integer oracle".into());
+        }
+        if best != DispatchTier::Scalar {
+            let l_best = BitSerialMatrix::from_int_tier(&a, self.wbits, self.lsigned, best);
+            if l_best != l_scalar {
+                return Err(format!("{best} packing differs from scalar packing"));
+            }
+            let fast = gemm_tiled_tier(&l_best, &r_t, best);
+            if fast != scalar {
+                return Err(format!(
+                    "engine at {best} tier disagrees with forced-scalar engine"
                 ));
             }
         }

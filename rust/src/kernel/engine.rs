@@ -21,8 +21,12 @@
 //!   single owner of tiling arithmetic); the RHS tile (all planes of
 //!   `tile_n` packed rows) stays L1/L2-resident across the `tile_m`
 //!   LHS rows instead of being restreamed per output row.
-//! * **Unrolled strips** — the AND+popcount inner loop runs over 4-word
-//!   strips with independent accumulator chains.
+//! * **SIMD strips** — the AND+popcount inner loop runs the strip of
+//!   the process-wide [`crate::simd::DispatchTier`] (AVX-512 / AVX2
+//!   Harley–Seal / NEON / scalar), resolved once per block so the hot
+//!   loop never re-reads the dispatch state. The `*_tier` entry points
+//!   pin an explicit tier — the hook the forced-dispatch test matrix
+//!   and the cross-tier fuzz mode drive.
 //!
 //! [`gemm_tiled_block`] computes any output block (a row range × column
 //! range, optionally restricted to a group of LHS bit-planes) without
@@ -34,9 +38,9 @@
 //! persistent [`WorkerPool`] distributes.
 
 use super::pool::WorkerPool;
-use super::popcount_and;
 use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
 use crate::partition::{BlockSplit, TilePlan};
+use crate::simd::{popcount_and_tier, DispatchTier};
 use std::ops::Range;
 use std::sync::Mutex;
 
@@ -123,6 +127,23 @@ pub fn gemm_tiled(l: &BitSerialMatrix, r_t: &BitSerialMatrix) -> IntMatrix {
     gemm_tiled_with(l, r_t, &KernelConfig::default(), None)
 }
 
+/// [`gemm_tiled`] pinned to an explicit [`DispatchTier`] instead of
+/// the process-wide one — the entry point of the forced-dispatch test
+/// matrix and the cross-tier fuzz mode. The tier must be supported on
+/// this host (see [`DispatchTier::supported`]).
+pub fn gemm_tiled_tier(l: &BitSerialMatrix, r_t: &BitSerialMatrix, tier: DispatchTier) -> IntMatrix {
+    gemm_tiled_block_tier(
+        l,
+        r_t,
+        0..l.rows,
+        0..r_t.rows,
+        None,
+        &KernelConfig::default(),
+        None,
+        tier,
+    )
+}
+
 /// Full-control entry point: explicit tile geometry and an optional
 /// `(pool, lane limit)` to parallelize over row tiles.
 pub fn gemm_tiled_with(
@@ -156,6 +177,25 @@ pub fn gemm_tiled_block(
     lhs_planes: Option<Range<u32>>,
     cfg: &KernelConfig,
     pool: Option<(&WorkerPool, usize)>,
+) -> IntMatrix {
+    // The dispatch tier is resolved once per block, not per strip: the
+    // inner loop sees a plain function parameter.
+    gemm_tiled_block_tier(l, r_t, rows, cols, lhs_planes, cfg, pool, DispatchTier::active())
+}
+
+/// [`gemm_tiled_block`] pinned to an explicit [`DispatchTier`] — see
+/// [`gemm_tiled_tier`]. The extra parameter is the whole point of this
+/// variant, hence the argument count.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tiled_block_tier(
+    l: &BitSerialMatrix,
+    r_t: &BitSerialMatrix,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    lhs_planes: Option<Range<u32>>,
+    cfg: &KernelConfig,
+    pool: Option<(&WorkerPool, usize)>,
+    tier: DispatchTier,
 ) -> IntMatrix {
     assert_eq!(
         l.cols, r_t.cols,
@@ -197,7 +237,7 @@ pub fn gemm_tiled_block(
     match pool {
         None => {
             for (t, chunk) in data.chunks_mut(cfg.tile_m * bn).enumerate() {
-                row_tile_kernel(&lp, &rp, &pairw, tiles.rows.span(t), bn, &tiles.cols, chunk);
+                row_tile_kernel(&lp, &rp, &pairw, tiles.rows.span(t), bn, &tiles.cols, chunk, tier);
             }
         }
         Some((pool, threads)) => {
@@ -206,7 +246,7 @@ pub fn gemm_tiled_block(
             pool.run_limited(tiles.row_tiles(), threads.max(1), &|t| {
                 let mut guard = slots[t].lock().unwrap();
                 let chunk: &mut [i64] = &mut guard;
-                row_tile_kernel(&lp, &rp, &pairw, tiles.rows.span(t), bn, &tiles.cols, chunk);
+                row_tile_kernel(&lp, &rp, &pairw, tiles.rows.span(t), bn, &tiles.cols, chunk, tier);
             });
         }
     }
@@ -216,7 +256,9 @@ pub fn gemm_tiled_block(
 /// Compute output rows `rows` into `out` (row-major,
 /// `rows.len() × n`, relative to `rows.start`), walking the column
 /// tiles of `cols` so the packed RHS tile stays cache-resident across
-/// the rows of this tile.
+/// the rows of this tile. The dispatch tier arrives pre-resolved as a
+/// plain parameter (hence the argument count).
+#[allow(clippy::too_many_arguments)]
 fn row_tile_kernel(
     lp: &PackedOperand,
     rp: &PackedOperand,
@@ -225,6 +267,7 @@ fn row_tile_kernel(
     n: usize,
     cols: &BlockSplit,
     out: &mut [i64],
+    tier: DispatchTier,
 ) {
     let words = lp.words;
     let lnp = lp.planes();
@@ -238,7 +281,7 @@ fn row_tile_kernel(
                 let mut acc = 0i64;
                 for (lrow, wrow) in lrow_all.chunks_exact(words).zip(pairw.chunks_exact(rnp)) {
                     for (rrow, &w) in rrow_all.chunks_exact(words).zip(wrow) {
-                        acc += w * popcount_and(lrow, rrow) as i64;
+                        acc += w * popcount_and_tier(tier, lrow, rrow) as i64;
                     }
                 }
                 out_row[c] = acc;
@@ -399,6 +442,16 @@ mod tests {
                 })
                 .collect();
             assert_eq!(plan.assemble(&parts).unwrap(), expect, "groups={groups}");
+        }
+    }
+
+    #[test]
+    fn explicit_tier_paths_match_the_default_dispatch() {
+        let mut rng = Rng::new(0x71E6);
+        let (la, rb, expect) = random_pair(&mut rng, 11, 130, 9, 3, 2, true, false);
+        assert_eq!(gemm_tiled(&la, &rb), expect);
+        for tier in DispatchTier::supported() {
+            assert_eq!(gemm_tiled_tier(&la, &rb, tier), expect, "tier={tier}");
         }
     }
 

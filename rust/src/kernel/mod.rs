@@ -18,38 +18,33 @@
 //!   the engine, [`crate::baseline::gemm_bitserial_parallel`],
 //!   [`crate::coordinator::BismoBatchRunner`] and the micro-batches of
 //!   [`crate::coordinator::BismoService`] (see [`pool`]).
-//! * [`popcount_and`] — the unrolled AND+popcount word-strip primitive,
-//!   also used by the simulator's execute stage.
+//! * [`popcount_and`] — the AND+popcount word-strip primitive, also
+//!   used by the simulator's execute stage. Since the SIMD datapath
+//!   landed it dispatches through the process-wide
+//!   [`crate::simd::DispatchTier`]; the explicit-tier entry points
+//!   ([`gemm_tiled_tier`], [`gemm_tiled_block_tier`]) exist so the
+//!   forced-dispatch test matrix and the cross-tier fuzz mode can pin
+//!   a tier per call.
 
 pub mod engine;
 pub mod pool;
 
-pub use engine::{gemm_tiled, gemm_tiled_block, gemm_tiled_with, KernelConfig};
+pub use engine::{
+    gemm_tiled, gemm_tiled_block, gemm_tiled_block_tier, gemm_tiled_tier, gemm_tiled_with,
+    KernelConfig,
+};
 pub use pool::WorkerPool;
 
+use crate::simd::{self, DispatchTier};
+
 /// Binary dot product of two equal-length packed words slices:
-/// `Σ popcount(a[i] & b[i])`. Unrolled over 4-word strips with
-/// independent counter chains so the popcounts pipeline instead of
-/// serializing on one accumulator.
+/// `Σ popcount(a[i] & b[i])`, computed by the process-wide
+/// [`DispatchTier`]'s strip (see [`crate::simd`] — AVX-512 / AVX2
+/// Harley–Seal / NEON, with the 4-word unrolled scalar strip as the
+/// portable fallback and bit-exactness reference).
 #[inline]
 pub fn popcount_and(a: &[u64], b: &[u64]) -> u64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut c0 = 0u64;
-    let mut c1 = 0u64;
-    let mut c2 = 0u64;
-    let mut c3 = 0u64;
-    let mut astrips = a.chunks_exact(4);
-    let mut bstrips = b.chunks_exact(4);
-    for (wa, wb) in (&mut astrips).zip(&mut bstrips) {
-        c0 += (wa[0] & wb[0]).count_ones() as u64;
-        c1 += (wa[1] & wb[1]).count_ones() as u64;
-        c2 += (wa[2] & wb[2]).count_ones() as u64;
-        c3 += (wa[3] & wb[3]).count_ones() as u64;
-    }
-    for (&x, &y) in astrips.remainder().iter().zip(bstrips.remainder()) {
-        c0 += (x & y).count_ones() as u64;
-    }
-    c0 + c1 + c2 + c3
+    simd::popcount_and_tier(DispatchTier::active(), a, b)
 }
 
 #[cfg(test)]

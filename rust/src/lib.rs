@@ -57,6 +57,11 @@
 //!   [`coordinator::BismoService`] — the asynchronous serving layer
 //!   with dynamic micro-batching, per-request backend selection and a
 //!   weight-stationary packing cache (`DESIGN.md` §Serving-Layer).
+//! * [`simd`] — runtime-dispatched SIMD strips for the AND+popcount
+//!   datapath and bit-plane packing ([`simd::DispatchTier`]: AVX-512 /
+//!   AVX2 Harley–Seal / NEON / scalar, overridable via `BISMO_SIMD`),
+//!   property-tested bit-exact against the scalar reference strip at
+//!   every host-supported tier (`DESIGN.md` §11).
 //! * [`qnn`] — quantized-neural-network layers running on the overlay.
 //! * [`fuzz`] — seeded structured fuzzing (legal / mutation /
 //!   differential) and the golden snapshot report behind `bismo fuzz`
@@ -82,6 +87,7 @@ pub mod report;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
+pub mod simd;
 pub mod synth;
 pub mod util;
 

@@ -265,6 +265,12 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     use bismo::util::Json;
     use std::collections::BTreeMap;
 
+    // Resolve the SIMD tier before timing anything: an invalid
+    // BISMO_SIMD override becomes a typed CLI error here, and the
+    // resolved tier is recorded in the report.
+    let tier = bismo::simd::DispatchTier::resolve()?;
+    println!("simd tier: {tier}");
+
     let quick = flags.contains_key("quick");
     let out_path = flags
         .get("out")
@@ -400,6 +406,7 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
         "mode".to_string(),
         Json::str(if quick { "quick" } else { "full" }),
     );
+    root.insert("simd_tier".to_string(), Json::str(tier.name()));
     root.insert("threads".to_string(), Json::num(threads as f64));
     root.insert(
         "generated_unix".to_string(),
@@ -683,6 +690,10 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     );
     root.insert("backend".to_string(), Json::str(backend.name()));
     root.insert(
+        "simd_tier".to_string(),
+        Json::str(bismo::simd::DispatchTier::active().name()),
+    );
+    root.insert(
         "generated_unix".to_string(),
         Json::num(
             std::time::SystemTime::now()
@@ -912,6 +923,10 @@ fn cmd_shard_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
         Json::str(if quick { "quick" } else { "full" }),
     );
     root.insert("backend".to_string(), Json::str(backend.name()));
+    root.insert(
+        "simd_tier".to_string(),
+        Json::str(bismo::simd::DispatchTier::active().name()),
+    );
     root.insert(
         "generated_unix".to_string(),
         Json::num(
@@ -1177,6 +1192,10 @@ fn cmd_cnn_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     root.insert("batch".to_string(), Json::num(batch as f64));
     root.insert("reps".to_string(), Json::num(reps as f64));
     root.insert("seed".to_string(), Json::num(seed as f64));
+    root.insert(
+        "simd_tier".to_string(),
+        Json::str(bismo::simd::DispatchTier::active().name()),
+    );
     root.insert(
         "generated_unix".to_string(),
         Json::num(
@@ -1500,8 +1519,19 @@ fn cmd_instances() -> Result<(), BismoError> {
 }
 
 fn cmd_info() -> Result<(), BismoError> {
+    use bismo::simd::DispatchTier;
     println!("bismo — bit-serial matrix multiplication overlay (reproduction)");
     println!("platform model: {}", PYNQ_Z1.name);
+    let tier = DispatchTier::resolve()?;
+    let supported: Vec<&str> = DispatchTier::supported()
+        .into_iter()
+        .map(|t| t.name())
+        .collect();
+    println!(
+        "simd tier: {tier} (detected {}; host supports {}; override with BISMO_SIMD=auto|avx512|avx2|neon|scalar)",
+        DispatchTier::detect(),
+        supported.join(", ")
+    );
     #[cfg(feature = "xla")]
     {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -1628,7 +1658,8 @@ shard-bench: --quick  --backend engine|sim  --reps N  --max-shards S  --budget-l
 cnn-bench: --quick  --batch B  --reps N  --out PATH (default BENCH_cnn.json)
 bench-check: --baseline PATH  --current PATH  --tolerance F (default 0.35)
 fuzz: --iters N (default 200)  --seed S (default 42)  --mode legal|mutation|differential|all  --out PATH (default FUZZ_failures.json)
-snapshot: --regen  --baseline PATH (default ci/sim_snapshots.json)";
+snapshot: --regen  --baseline PATH (default ci/sim_snapshots.json)
+env: BISMO_SIMD=auto|avx512|avx2|neon|scalar forces the SIMD dispatch tier (default auto-detect; see `bismo info`)";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();

@@ -1,0 +1,642 @@
+//! Runtime-dispatched SIMD strips for the bit-serial datapath.
+//!
+//! BISMO's performance claim rests on the AND+popcount binary dot
+//! product; this module is the software analogue of the journal
+//! follow-up's widened datapath (Umuroglu et al., 2019): the inner
+//! word-strip primitive and the bit-plane packing loop, each written
+//! over explicit SIMD with a portable scalar fallback, selected **once
+//! per process** into a [`DispatchTier`].
+//!
+//! Tiers (best-first): AVX-512 (`vpandq` + `vpopcntq`), AVX2 (`vpand` +
+//! Harley–Seal compressor tree over the `vpshufb` nibble popcount),
+//! NEON (`cnt` + widening pairwise adds), and the scalar 4-word
+//! unrolled strip every other tier is property-tested against.
+//!
+//! Selection: [`DispatchTier::detect`] picks the best tier the host
+//! CPU reports (`is_x86_feature_detected!` /
+//! `is_aarch64_feature_detected!`); the `BISMO_SIMD` env var
+//! (`auto|avx512|avx2|neon|scalar`) overrides it, so every tier the
+//! host supports is testable — the forced-dispatch test matrix in
+//! `rust/tests/simd_dispatch.rs` and the CI forced-scalar job both
+//! lean on this. Unknown or host-unsupported override values are a
+//! typed [`BismoError::InvalidConfig`], never a silent fallback.
+//!
+//! Every SIMD path is bit-exact with the scalar strip by contract:
+//! the packing helpers produce word-identical planes and the popcount
+//! strips produce identical sums, across tails (`k` not a multiple of
+//! the vector width), single-word rows and all-zero planes. See
+//! `DESIGN.md` §11 for the layout rationale.
+
+use crate::api::BismoError;
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Environment variable that overrides tier selection:
+/// `auto|avx512|avx2|neon|scalar`.
+pub const ENV_VAR: &str = "BISMO_SIMD";
+
+/// One SIMD implementation tier of the AND+popcount datapath, resolved
+/// once per process (see [`DispatchTier::active`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum DispatchTier {
+    /// Portable 4-word unrolled `u64::count_ones` strip — the reference
+    /// implementation every other tier must match bit-exactly.
+    Scalar,
+    /// AArch64 NEON: `cnt` byte popcount + widening pairwise adds.
+    Neon,
+    /// x86-64 AVX2: `vpand` + Harley–Seal carry-save compressor over
+    /// the `vpshufb` nibble-LUT popcount.
+    Avx2,
+    /// x86-64 AVX-512F + AVX-512VPOPCNTDQ: `vpandq` + `vpopcntq`.
+    Avx512,
+}
+
+impl DispatchTier {
+    /// Lower-case tier name, as accepted by `BISMO_SIMD` and reported
+    /// in the `simd_tier` field of every BENCH_*.json.
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchTier::Scalar => "scalar",
+            DispatchTier::Neon => "neon",
+            DispatchTier::Avx2 => "avx2",
+            DispatchTier::Avx512 => "avx512",
+        }
+    }
+
+    /// Best tier the host CPU supports, ignoring the env override.
+    pub fn detect() -> DispatchTier {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512vpopcntdq") {
+                return DispatchTier::Avx512;
+            }
+            if is_x86_feature_detected!("avx2") {
+                return DispatchTier::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return DispatchTier::Neon;
+            }
+        }
+        DispatchTier::Scalar
+    }
+
+    /// Can this tier execute on the current host?
+    pub fn is_available(self) -> bool {
+        match self {
+            DispatchTier::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            DispatchTier::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            DispatchTier::Avx512 => {
+                is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512vpopcntdq")
+            }
+            #[cfg(target_arch = "aarch64")]
+            DispatchTier::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            _ => false,
+        }
+    }
+
+    /// Every tier the host can run, scalar first — the axis of the
+    /// forced-dispatch differential test matrix. Always non-empty:
+    /// scalar runs everywhere.
+    pub fn supported() -> Vec<DispatchTier> {
+        [
+            DispatchTier::Scalar,
+            DispatchTier::Neon,
+            DispatchTier::Avx2,
+            DispatchTier::Avx512,
+        ]
+        .into_iter()
+        .filter(|t| t.is_available())
+        .collect()
+    }
+
+    /// Parse a `BISMO_SIMD` override value (case-insensitive,
+    /// whitespace-trimmed). `Ok(None)` means auto-detect; an unknown
+    /// name is a typed error, never a silent fallback.
+    pub fn parse_override(value: &str) -> Result<Option<DispatchTier>, BismoError> {
+        match value.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => Ok(None),
+            "scalar" => Ok(Some(DispatchTier::Scalar)),
+            "neon" => Ok(Some(DispatchTier::Neon)),
+            "avx2" => Ok(Some(DispatchTier::Avx2)),
+            "avx512" => Ok(Some(DispatchTier::Avx512)),
+            other => Err(BismoError::InvalidConfig(format!(
+                "{ENV_VAR} must be auto|avx512|avx2|neon|scalar, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Read and parse the `BISMO_SIMD` env var. `Ok(None)` when unset
+    /// or `auto`.
+    pub fn from_env() -> Result<Option<DispatchTier>, BismoError> {
+        match std::env::var(ENV_VAR) {
+            Ok(v) => Self::parse_override(&v),
+            Err(std::env::VarError::NotPresent) => Ok(None),
+            Err(std::env::VarError::NotUnicode(_)) => Err(BismoError::InvalidConfig(format!(
+                "{ENV_VAR} is not valid UTF-8"
+            ))),
+        }
+    }
+
+    /// The tier this process should run: the `BISMO_SIMD` override when
+    /// set (which must name a tier the host actually supports), else
+    /// [`DispatchTier::detect`].
+    pub fn resolve() -> Result<DispatchTier, BismoError> {
+        match Self::from_env()? {
+            None => Ok(Self::detect()),
+            Some(t) if t.is_available() => Ok(t),
+            Some(t) => Err(BismoError::InvalidConfig(format!(
+                "{ENV_VAR}={} requested but this host supports only {:?}",
+                t.name(),
+                Self::supported().iter().map(|s| s.name()).collect::<Vec<_>>()
+            ))),
+        }
+    }
+
+    /// The process-wide tier, resolved once and cached for the life of
+    /// the process (the strips are on the innermost hot path; the env
+    /// var is not re-read). Panics if the `BISMO_SIMD` override is
+    /// invalid — the CLI and the service constructors call
+    /// [`DispatchTier::resolve`] first, so user-facing paths report the
+    /// typed [`BismoError::InvalidConfig`] instead of panicking.
+    pub fn active() -> DispatchTier {
+        static ACTIVE: OnceLock<DispatchTier> = OnceLock::new();
+        *ACTIVE.get_or_init(|| Self::resolve().unwrap_or_else(|e| panic!("{e}")))
+    }
+}
+
+impl fmt::Display for DispatchTier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Binary dot product `Σ popcount(a[i] & b[i])` over equal-length word
+/// strips, computed by the strip implementation of `tier`.
+///
+/// Callers must pass a tier that [`DispatchTier::is_available`] on this
+/// host — the public selection paths ([`DispatchTier::active`],
+/// [`DispatchTier::resolve`], [`DispatchTier::supported`]) never
+/// produce one that isn't. Passing a tier that is compiled in but not
+/// supported by the CPU is undefined behavior (illegal instruction);
+/// a tier not compiled for this target panics.
+#[inline]
+pub fn popcount_and_tier(tier: DispatchTier, a: &[u64], b: &[u64]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(tier.is_available(), "tier {tier} not available on this host");
+    match tier {
+        DispatchTier::Scalar => popcount_and_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        DispatchTier::Avx2 => unsafe { x86::popcount_and_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        DispatchTier::Avx512 => unsafe { x86::popcount_and_avx512(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        DispatchTier::Neon => unsafe { neon::popcount_and_neon(a, b) },
+        other => panic!("dispatch tier {other} is not compiled into this binary"),
+    }
+}
+
+/// The portable scalar strip: 4-word unrolled with independent counter
+/// chains so the popcounts pipeline instead of serializing on one
+/// accumulator. This is the reference implementation every SIMD tier is
+/// property-tested against, and the `BISMO_SIMD=scalar` fallback.
+#[inline]
+pub fn popcount_and_scalar(a: &[u64], b: &[u64]) -> u64 {
+    let mut c0 = 0u64;
+    let mut c1 = 0u64;
+    let mut c2 = 0u64;
+    let mut c3 = 0u64;
+    let mut astrips = a.chunks_exact(4);
+    let mut bstrips = b.chunks_exact(4);
+    for (wa, wb) in (&mut astrips).zip(&mut bstrips) {
+        c0 += (wa[0] & wb[0]).count_ones() as u64;
+        c1 += (wa[1] & wb[1]).count_ones() as u64;
+        c2 += (wa[2] & wb[2]).count_ones() as u64;
+        c3 += (wa[3] & wb[3]).count_ones() as u64;
+    }
+    for (&x, &y) in astrips.remainder().iter().zip(bstrips.remainder()) {
+        c0 += (x & y).count_ones() as u64;
+    }
+    c0 + c1 + c2 + c3
+}
+
+/// Pack one ≤64-column chunk of row values into per-plane words:
+/// `words[p]` receives bit `bi` iff bit `p` of the two's-complement
+/// pattern of `vals[bi]` is set (`words.len()` is the operand width in
+/// bits). All of `words` is overwritten.
+///
+/// Returns `false` if any value falls outside `[lo, hi]` — the caller
+/// re-walks the chunk scalarly to produce its exact panic message, so
+/// the packed output of a failed call is never used.
+///
+/// Word order is identical across tiers by construction: bit `bi` of a
+/// plane word always corresponds to column `chunk_base + bi`, which is
+/// exactly the order [`popcount_and_tier`] strips consume. The AVX2
+/// packer (also used by the `Avx512` tier) extracts four columns per
+/// plane per step via sign-bit movemasks; NEON uses the scalar packer —
+/// per-lane bit extraction on NEON costs more than the scalar set-bit
+/// walk it would replace.
+#[inline]
+pub fn pack_chunk(tier: DispatchTier, vals: &[i64], lo: i64, hi: i64, words: &mut [u64]) -> bool {
+    debug_assert!(vals.len() <= 64, "chunk wider than one packed word");
+    debug_assert!(!words.is_empty() && words.len() <= 32);
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        DispatchTier::Avx2 | DispatchTier::Avx512 => unsafe {
+            x86::pack_chunk_avx2(vals, lo, hi, words)
+        },
+        _ => pack_chunk_scalar(vals, lo, hi, words),
+    }
+}
+
+/// Scalar reference packer: per-value range check, then a set-bit walk
+/// over the masked two's-complement pattern (cheap for the sparse
+/// low-precision operands BISMO targets).
+pub fn pack_chunk_scalar(vals: &[i64], lo: i64, hi: i64, words: &mut [u64]) -> bool {
+    for w in words.iter_mut() {
+        *w = 0;
+    }
+    let mask = ((1u128 << words.len()) - 1) as u64;
+    for (bi, &v) in vals.iter().enumerate() {
+        if v < lo || v > hi {
+            return false;
+        }
+        let mut p = (v as u64) & mask;
+        while p != 0 {
+            words[p.trailing_zeros() as usize] |= 1u64 << bi;
+            p &= p - 1;
+        }
+    }
+    true
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// AND two 4-word blocks at word offset `i`.
+    ///
+    /// # Safety
+    /// Requires AVX2; `a.add(i)..a.add(i + 4)` and likewise for `b`
+    /// must be readable.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn and_load(a: *const u64, b: *const u64, i: usize) -> __m256i {
+        _mm256_and_si256(
+            _mm256_loadu_si256(a.add(i) as *const __m256i),
+            _mm256_loadu_si256(b.add(i) as *const __m256i),
+        )
+    }
+
+    /// Per-byte popcount via the `vpshufb` nibble lookup (Muła).
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt_bytes(v: __m256i) -> __m256i {
+        // Nibble-indexed popcount table, one 16-byte copy per lane:
+        // bytes [0,1,1,2, 1,2,2,3, 1,2,2,3, 2,3,3,4].
+        let lo_q = 0x0302_0201_0201_0100u64 as i64;
+        let hi_q = 0x0403_0302_0302_0201u64 as i64;
+        let lut = _mm256_set_epi64x(hi_q, lo_q, hi_q, lo_q);
+        let low = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low);
+        _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi))
+    }
+
+    /// Carry-save full adder of `(*l, a, b)`: the sum bit stays in `l`,
+    /// the carry bit overwrites `h`.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn csa(h: &mut __m256i, l: &mut __m256i, a: __m256i, b: __m256i) {
+        let u = _mm256_xor_si256(*l, a);
+        *h = _mm256_or_si256(_mm256_and_si256(*l, a), _mm256_and_si256(u, b));
+        *l = _mm256_xor_si256(u, b);
+    }
+
+    /// Sum of the four u64 lanes.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi64(v: __m256i) -> u64 {
+        let s = _mm_add_epi64(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
+        let s = _mm_add_epi64(s, _mm_unpackhi_epi64(s, s));
+        _mm_cvtsi128_si64(s) as u64
+    }
+
+    /// AND+popcount over word strips: Harley–Seal carry-save
+    /// accumulation over 16-word (4-vector) blocks, so only the
+    /// weight-4 partial is popcounted per block; the weight-1/2
+    /// residues are popcounted once at the end and `vpsadbw` folds byte
+    /// counts into u64 lanes. Whole-vector then word-wise tails.
+    ///
+    /// # Safety
+    /// Requires AVX2 at runtime; `a` and `b` must be equal-length.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn popcount_and_avx2(a: &[u64], b: &[u64]) -> u64 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let zero = _mm256_setzero_si256();
+        let mut sad = zero;
+        let mut ones = zero;
+        let mut twos = zero;
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let mut twos_a = zero;
+            let mut twos_b = zero;
+            let mut fours = zero;
+            csa(&mut twos_a, &mut ones, and_load(ap, bp, i), and_load(ap, bp, i + 4));
+            csa(&mut twos_b, &mut ones, and_load(ap, bp, i + 8), and_load(ap, bp, i + 12));
+            csa(&mut fours, &mut twos, twos_a, twos_b);
+            sad = _mm256_add_epi64(sad, _mm256_sad_epu8(popcnt_bytes(fours), zero));
+            i += 16;
+        }
+        let mut total = 4 * hsum_epi64(sad)
+            + 2 * hsum_epi64(_mm256_sad_epu8(popcnt_bytes(twos), zero))
+            + hsum_epi64(_mm256_sad_epu8(popcnt_bytes(ones), zero));
+        let mut tail = zero;
+        while i + 4 <= n {
+            let v = popcnt_bytes(and_load(ap, bp, i));
+            tail = _mm256_add_epi64(tail, _mm256_sad_epu8(v, zero));
+            i += 4;
+        }
+        total += hsum_epi64(tail);
+        while i < n {
+            total += (*ap.add(i) & *bp.add(i)).count_ones() as u64;
+            i += 1;
+        }
+        total
+    }
+
+    /// AND+popcount over word strips with the AVX-512 `vpopcntq`
+    /// instruction: 8 words per step, per-qword popcount, one reduce at
+    /// the end.
+    ///
+    /// # Safety
+    /// Requires AVX-512F and AVX-512VPOPCNTDQ at runtime; `a` and `b`
+    /// must be equal-length.
+    #[target_feature(enable = "avx512f,avx512vpopcntdq")]
+    pub unsafe fn popcount_and_avx512(a: &[u64], b: &[u64]) -> u64 {
+        let n = a.len();
+        let ap = a.as_ptr() as *const i64;
+        let bp = b.as_ptr() as *const i64;
+        let mut acc = _mm512_setzero_si512();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let l = _mm512_loadu_epi64(ap.add(i));
+            let r = _mm512_loadu_epi64(bp.add(i));
+            acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(_mm512_and_si512(l, r)));
+            i += 8;
+        }
+        let mut total = _mm512_reduce_add_epi64(acc) as u64;
+        while i < n {
+            total += (a[i] & b[i]).count_ones() as u64;
+            i += 1;
+        }
+        total
+    }
+
+    /// AVX2 chunk packer: for each plane `p`, shift bit `p` of four
+    /// lanes up to the sign bit (`vpsllq` with a runtime count — the
+    /// plane index is not a compile-time constant) and gather the four
+    /// sign bits with `vmovmskpd`, building each plane word four
+    /// columns at a time. Range checking is vectorized alongside with
+    /// signed 64-bit compares; any violation reports `false` and the
+    /// caller re-walks the chunk scalarly for its exact panic message.
+    ///
+    /// # Safety
+    /// Requires AVX2 at runtime; `vals.len() <= 64` and
+    /// `1 <= words.len() <= 32`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn pack_chunk_avx2(vals: &[i64], lo: i64, hi: i64, words: &mut [u64]) -> bool {
+        for w in words.iter_mut() {
+            *w = 0;
+        }
+        let vlo = _mm256_set1_epi64x(lo);
+        let vhi = _mm256_set1_epi64x(hi);
+        let mut bad = _mm256_setzero_si256();
+        let vp = vals.as_ptr();
+        let n = vals.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let v = _mm256_loadu_si256(vp.add(i) as *const __m256i);
+            bad = _mm256_or_si256(bad, _mm256_cmpgt_epi64(vlo, v));
+            bad = _mm256_or_si256(bad, _mm256_cmpgt_epi64(v, vhi));
+            for (p, w) in words.iter_mut().enumerate() {
+                let sh = _mm256_sll_epi64(v, _mm_cvtsi32_si128(63 - p as i32));
+                let nib = _mm256_movemask_pd(_mm256_castsi256_pd(sh)) as u64;
+                *w |= nib << i;
+            }
+            i += 4;
+        }
+        if _mm256_testz_si256(bad, bad) == 0 {
+            return false;
+        }
+        // Word-wise tail, identical to the scalar packer.
+        let mask = ((1u128 << words.len()) - 1) as u64;
+        while i < n {
+            let v = *vp.add(i);
+            if v < lo || v > hi {
+                return false;
+            }
+            let mut p = (v as u64) & mask;
+            while p != 0 {
+                words[p.trailing_zeros() as usize] |= 1u64 << i;
+                p &= p - 1;
+            }
+            i += 1;
+        }
+        true
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// AND+popcount over word strips: `cnt` byte popcount + the
+    /// widening pairwise-add chain, two words per step.
+    ///
+    /// # Safety
+    /// Requires NEON at runtime (baseline on AArch64); `a` and `b` must
+    /// be equal-length.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn popcount_and_neon(a: &[u64], b: &[u64]) -> u64 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc = vdupq_n_u64(0);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let v = vandq_u64(vld1q_u64(ap.add(i)), vld1q_u64(bp.add(i)));
+            let c = vcntq_u8(vreinterpretq_u8_u64(v));
+            acc = vaddq_u64(acc, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(c))));
+            i += 2;
+        }
+        let mut total = vaddvq_u64(acc);
+        while i < n {
+            total += (a[i] & b[i]).count_ones() as u64;
+            i += 1;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{property_sweep, Rng};
+
+    fn naive(a: &[u64], b: &[u64]) -> u64 {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| (x & y).count_ones() as u64)
+            .sum()
+    }
+
+    fn range_of(bits: u32, signed: bool) -> (i64, i64) {
+        if signed {
+            (-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1)
+        } else {
+            (0, (1i64 << bits) - 1)
+        }
+    }
+
+    #[test]
+    fn every_supported_tier_matches_the_naive_strip() {
+        let tiers = DispatchTier::supported();
+        assert!(tiers.contains(&DispatchTier::Scalar));
+        property_sweep(0x51D0, 40, |rng, _| {
+            // Lengths straddling every vector boundary: empty, below
+            // the widest vector (8 words), around the 16-word
+            // Harley–Seal block, and odd tails beyond it.
+            let len = *rng.pick(&[0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 47, 100]);
+            let a: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let want = naive(&a, &b);
+            for &t in &tiers {
+                assert_eq!(popcount_and_tier(t, &a, &b), want, "tier={t} len={len}");
+            }
+        });
+    }
+
+    #[test]
+    fn strip_extremes_on_every_tier() {
+        for &t in &DispatchTier::supported() {
+            assert_eq!(popcount_and_tier(t, &[], &[]), 0, "tier={t}");
+            for len in [1usize, 3, 4, 15, 16, 17, 33] {
+                let ones = vec![u64::MAX; len];
+                let zero = vec![0u64; len];
+                assert_eq!(popcount_and_tier(t, &ones, &ones), 64 * len as u64, "tier={t}");
+                assert_eq!(popcount_and_tier(t, &ones, &zero), 0, "tier={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_chunk_is_word_identical_across_tiers() {
+        property_sweep(0x9ACC, 60, |rng, _| {
+            let bits = rng.index(8) as u32 + 1;
+            let signed = rng.chance(0.5);
+            let (lo, hi) = range_of(bits, signed);
+            // Chunk lengths cover empty, sub-vector, vector-aligned and
+            // the full 64-column word.
+            let n = *rng.pick(&[0usize, 1, 3, 4, 5, 8, 17, 31, 32, 63, 64]);
+            let vals: Vec<i64> = (0..n).map(|_| rng.operand(bits, signed)).collect();
+            let mut want = vec![0u64; bits as usize];
+            assert!(pack_chunk_scalar(&vals, lo, hi, &mut want));
+            for &t in &DispatchTier::supported() {
+                // Poisoned output buffer: the packer must overwrite it.
+                let mut got = vec![0xDEAD_BEEF_DEAD_BEEFu64; bits as usize];
+                assert!(pack_chunk(t, &vals, lo, hi, &mut got));
+                assert_eq!(got, want, "tier={t} bits={bits} signed={signed} n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn pack_chunk_rejects_out_of_range_on_every_tier() {
+        for bits in [1u32, 4, 8] {
+            for signed in [false, true] {
+                let (lo, hi) = range_of(bits, signed);
+                // Bad value both inside the vector body and in the tail.
+                for pos in [0usize, 2, 5, 62] {
+                    let mut vals = vec![0i64; 63];
+                    vals[pos] = hi + 1;
+                    for &t in &DispatchTier::supported() {
+                        let mut words = vec![0u64; bits as usize];
+                        assert!(
+                            !pack_chunk(t, &vals, lo, hi, &mut words),
+                            "tier={t} bits={bits} signed={signed} pos={pos}"
+                        );
+                    }
+                    if signed {
+                        vals[pos] = lo - 1;
+                        for &t in &DispatchTier::supported() {
+                            let mut words = vec![0u64; bits as usize];
+                            assert!(!pack_chunk(t, &vals, lo, hi, &mut words));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_override_accepts_known_names_and_rejects_garbage() {
+        assert_eq!(DispatchTier::parse_override("auto").unwrap(), None);
+        assert_eq!(DispatchTier::parse_override("").unwrap(), None);
+        let scalar = DispatchTier::parse_override(" Scalar ").unwrap();
+        assert_eq!(scalar, Some(DispatchTier::Scalar));
+        assert_eq!(DispatchTier::parse_override("AVX2").unwrap(), Some(DispatchTier::Avx2));
+        let a512 = DispatchTier::parse_override("avx512").unwrap();
+        assert_eq!(a512, Some(DispatchTier::Avx512));
+        assert_eq!(DispatchTier::parse_override("neon").unwrap(), Some(DispatchTier::Neon));
+        for garbage in ["sse9", "AVX-512", "fast", "scalar,avx2"] {
+            let err = DispatchTier::parse_override(garbage).unwrap_err();
+            assert!(matches!(err, BismoError::InvalidConfig(_)), "{garbage}: {err}");
+            assert!(err.to_string().contains(ENV_VAR), "{garbage}: {err}");
+        }
+    }
+
+    #[test]
+    fn detect_and_active_are_supported_and_consistent() {
+        let detected = DispatchTier::detect();
+        assert!(detected.is_available());
+        assert!(DispatchTier::supported().contains(&detected));
+        // Under both CI jobs (BISMO_SIMD unset/auto and =scalar) the
+        // cached process-wide tier equals what resolve() derives.
+        let active = DispatchTier::active();
+        assert_eq!(active, DispatchTier::resolve().unwrap());
+        assert!(active.is_available());
+        match DispatchTier::from_env().unwrap() {
+            Some(forced) => assert_eq!(active, forced),
+            None => assert_eq!(active, detected),
+        }
+    }
+
+    #[test]
+    fn tier_names_round_trip_through_parse() {
+        for t in [
+            DispatchTier::Scalar,
+            DispatchTier::Neon,
+            DispatchTier::Avx2,
+            DispatchTier::Avx512,
+        ] {
+            assert_eq!(DispatchTier::parse_override(t.name()).unwrap(), Some(t));
+            assert_eq!(format!("{t}"), t.name());
+        }
+    }
+}

@@ -3,8 +3,16 @@
 use std::process::Command;
 
 fn bismo(args: &[&str]) -> (bool, String) {
+    bismo_env(args, &[])
+}
+
+/// Spawn `bismo` with extra environment variables — the process-level
+/// way to exercise `BISMO_SIMD`, free of the env races in-process env
+/// mutation would cause across test threads.
+fn bismo_env(args: &[&str], envs: &[(&str, &str)]) -> (bool, String) {
     let out = Command::new(env!("CARGO_BIN_EXE_bismo"))
         .args(args)
+        .envs(envs.iter().map(|&(k, v)| (k, v)))
         .output()
         .expect("spawn bismo");
     let text = format!(
@@ -83,6 +91,9 @@ fn bench_quick_writes_json() {
         Some("bismo-bench-gemm/v1")
     );
     assert_eq!(doc.get("mode").and_then(|s| s.as_str()), Some("quick"));
+    // Every bench report records which SIMD tier produced it.
+    let tier = doc.get("simd_tier").and_then(|s| s.as_str()).expect("simd_tier");
+    assert!(["scalar", "neon", "avx2", "avx512"].contains(&tier), "{json}");
     let cases = doc.get("cases").and_then(|c| c.as_arr()).expect("cases");
     assert!(!cases.is_empty());
     for c in cases {
@@ -341,4 +352,48 @@ fn unknown_command_usage() {
     let (ok, text) = bismo(&["frobnicate"]);
     assert!(!ok);
     assert!(text.contains("usage:"), "{text}");
+}
+
+#[test]
+fn bismo_simd_garbage_is_a_typed_cli_error() {
+    let (ok, text) = bismo_env(&["bench", "--quick"], &[("BISMO_SIMD", "warp9")]);
+    assert!(!ok, "garbage BISMO_SIMD must fail: {text}");
+    assert!(text.contains("invalid config"), "{text}");
+    assert!(text.contains("BISMO_SIMD"), "{text}");
+    assert!(!text.contains("panicked"), "typed error, not a panic: {text}");
+    // The serving path rejects it through the same typed error.
+    let (ok, text) = bismo_env(
+        &["serve-bench", "--quick", "--requests", "4", "--rate", "8000"],
+        &[("BISMO_SIMD", "avx1024")],
+    );
+    assert!(!ok, "{text}");
+    assert!(text.contains("invalid config"), "{text}");
+}
+
+#[test]
+fn bismo_simd_scalar_forces_the_scalar_tier_end_to_end() {
+    let out = std::env::temp_dir().join(format!("bismo_bench_scalar_{}.json", std::process::id()));
+    let out_str = out.to_str().unwrap().to_string();
+    let (ok, text) = bismo_env(
+        &["bench", "--quick", "--threads", "2", "--out", &out_str],
+        &[("BISMO_SIMD", "scalar")],
+    );
+    assert!(ok, "{text}");
+    assert!(text.contains("simd tier: scalar"), "{text}");
+    let json = std::fs::read_to_string(&out).expect("bench json written");
+    let _ = std::fs::remove_file(&out);
+    let doc = bismo::util::Json::parse(&json).expect("valid json");
+    assert_eq!(doc.get("simd_tier").and_then(|s| s.as_str()), Some("scalar"), "{json}");
+}
+
+#[test]
+fn info_reports_the_dispatch_tier_and_override_knob() {
+    let (ok, text) = bismo(&["info"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("simd tier:"), "{text}");
+    assert!(text.contains("BISMO_SIMD"), "{text}");
+    // Forcing a tier is reflected verbatim.
+    let (ok, text) = bismo_env(&["info"], &[("BISMO_SIMD", "scalar")]);
+    assert!(ok, "{text}");
+    assert!(text.contains("simd tier: scalar"), "{text}");
 }

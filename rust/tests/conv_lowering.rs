@@ -6,7 +6,9 @@
 //! for illegal specs.
 
 use bismo::api::{Backend, BismoError, Precision, Session, SessionConfig};
+use bismo::bitmatrix::BitSerialMatrix;
 use bismo::lowering::{conv2d_direct, im2col_matrix, pack_im2col, ConvSpec, LoweringMode, Tensor};
+use bismo::simd::DispatchTier;
 use bismo::util::{property_sweep, Rng};
 
 fn random_spec(rng: &mut Rng) -> ConvSpec {
@@ -142,6 +144,38 @@ fn packed_im2col_never_diverges_from_dense_lowering() {
         let packed = pack_im2col(&x, &spec, bits, false);
         let dense = im2col_matrix(&x, &spec);
         assert_eq!(packed.to_int(), dense, "{spec:?}");
+    });
+}
+
+#[test]
+fn im2col_packing_is_word_identical_on_every_dispatch_tier() {
+    // The conv hot path packs the virtual im2col patch matrix through
+    // `from_int_fn`, which now runs the SIMD chunk packer — verify the
+    // planes it produces are word-identical to both the scalar packer
+    // and the materialize-then-pack route at every supported tier.
+    property_sweep(0x1A2C_71E6, 10, |rng, _| {
+        let spec = random_spec(rng);
+        let bits = rng.index(4) as u32 + 1;
+        let batch = rng.index(2) + 1;
+        let x = Tensor::random(rng, batch, spec.in_h, spec.in_w, spec.in_c, bits, false);
+        let dense = im2col_matrix(&x, &spec);
+        let want = pack_im2col(&x, &spec, bits, false);
+        for tier in DispatchTier::supported() {
+            let via_fn = BitSerialMatrix::from_int_fn_tier(
+                dense.rows,
+                dense.cols,
+                bits,
+                false,
+                tier,
+                |r, c| dense.get(r, c),
+            );
+            assert_eq!(
+                via_fn,
+                BitSerialMatrix::from_int_tier(&dense, bits, false, tier),
+                "tier={tier}: {spec:?}"
+            );
+            assert_eq!(via_fn, want, "tier={tier} vs active-tier pack_im2col: {spec:?}");
+        }
     });
 }
 

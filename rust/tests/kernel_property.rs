@@ -8,7 +8,8 @@ use bismo::arch::BismoConfig;
 use bismo::baseline::{gemm_bitserial, gemm_bitserial_parallel};
 use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
 use bismo::coordinator::{BismoBatchRunner, BismoContext, MatmulOptions, Precision};
-use bismo::kernel::{gemm_tiled, gemm_tiled_with, KernelConfig, WorkerPool};
+use bismo::kernel::{gemm_tiled, gemm_tiled_tier, gemm_tiled_with, KernelConfig, WorkerPool};
+use bismo::simd::DispatchTier;
 use bismo::util::{property_sweep, Rng};
 
 /// Random matrix with controllable plane sparsity: `mode 0` = dense,
@@ -56,6 +57,36 @@ fn tiled_engine_matches_oracle_everywhere() {
             "case {case}: m={m} k={k} n={n} w={wbits} a={abits} \
              ls={lsigned} rs={rsigned} lmode={lmode} rmode={rmode}"
         );
+    });
+}
+
+#[test]
+fn tiled_engine_matches_oracle_on_every_dispatch_tier() {
+    // The same oracle property as above, re-run at every SIMD tier the
+    // host supports (forced dispatch, sparse planes included) — the
+    // engine half of the forced-dispatch test matrix.
+    let tiers = DispatchTier::supported();
+    property_sweep(0xB17_51D0, 25, |rng, case| {
+        let m = rng.index(17) + 1;
+        let k = rng.index(300) + 1;
+        let n = rng.index(17) + 1;
+        let wbits = rng.index(8) as u32 + 1;
+        let abits = rng.index(8) as u32 + 1;
+        let lsigned = rng.chance(0.5);
+        let rsigned = rng.chance(0.5);
+        let lmode = rng.index(4);
+        let a = sparse_random(rng, m, k, wbits, lsigned, lmode);
+        let b = sparse_random(rng, k, n, abits, rsigned, rng.index(3));
+        let expect = a.matmul(&b);
+        let rb = BitSerialMatrix::from_int_transposed(&b, abits, rsigned);
+        for &tier in &tiers {
+            let la = BitSerialMatrix::from_int_tier(&a, wbits, lsigned, tier);
+            assert_eq!(
+                gemm_tiled_tier(&la, &rb, tier),
+                expect,
+                "case {case}: tier={tier} m={m} k={k} n={n} w={wbits} a={abits} lmode={lmode}"
+            );
+        }
     });
 }
 

@@ -7,8 +7,9 @@ use bismo::api::{Backend, BismoError, Session, SessionConfig};
 use bismo::baseline::gemm_bitserial;
 use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
 use bismo::coordinator::Precision;
-use bismo::kernel::{gemm_tiled_block, KernelConfig};
+use bismo::kernel::{gemm_tiled_block, gemm_tiled_block_tier, KernelConfig};
 use bismo::partition::ShardPlan;
+use bismo::simd::DispatchTier;
 use bismo::util::{property_sweep, Rng};
 
 fn random_case(
@@ -162,6 +163,42 @@ fn plane_group_shards_assemble_exactly() {
                 expect,
                 "case {case}: m={m} k={k} n={n} w={wbits} grid {gr}x{gc} groups={groups}"
             );
+        }
+    });
+}
+
+#[test]
+fn sharded_blocks_assemble_exactly_on_every_dispatch_tier() {
+    // Shard-level forced dispatch: run every block of a grid + plane
+    // group split through gemm_tiled_block_tier at each supported SIMD
+    // tier; reassembly must be bit-exact against the oracle on all of
+    // them (mixing packing tier and strip tier is legal by the
+    // word-identity contract).
+    property_sweep(0x54A2D_71, 6, |rng, case| {
+        let (a, b, prec, expect) = random_case(rng, 16, 180, 5);
+        let la = BitSerialMatrix::from_int(&a, prec.wbits, prec.lsigned);
+        let rb = BitSerialMatrix::from_int_transposed(&b, prec.abits, prec.rsigned);
+        for tier in DispatchTier::supported() {
+            let la_t = BitSerialMatrix::from_int_tier(&a, prec.wbits, prec.lsigned, tier);
+            assert_eq!(la_t, la, "case {case}: tier={tier} packing differs");
+            let plan = ShardPlan::grid(a.rows, b.cols, 2, 2).with_plane_groups(prec.wbits, 2);
+            let parts: Vec<IntMatrix> = plan
+                .shards()
+                .iter()
+                .map(|s| {
+                    gemm_tiled_block_tier(
+                        &la_t,
+                        &rb,
+                        s.rows.clone(),
+                        s.cols.clone(),
+                        s.planes.clone(),
+                        &KernelConfig::default(),
+                        None,
+                        tier,
+                    )
+                })
+                .collect();
+            assert_eq!(plan.assemble(&parts).unwrap(), expect, "case {case}: tier={tier}");
         }
     });
 }

@@ -1,0 +1,160 @@
+//! Forced-dispatch test matrix for the SIMD datapath: every tier the
+//! host supports must be bit-exact with the scalar reference — same
+//! packed plane words out of the packers, same GEMM results out of the
+//! engine — across precisions, signedness, ragged shapes, vector-width
+//! tails, single-word rows and all-zero (skippable) planes. Tier
+//! selection itself is covered too: garbage `BISMO_SIMD` values are a
+//! typed `InvalidConfig`, never a silent fallback (the process-level
+//! env behavior is exercised by the CLI suite and the CI forced-scalar
+//! job; here we test the pure parsing layer to stay race-free across
+//! test threads).
+
+use bismo::api::BismoError;
+use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
+use bismo::kernel::gemm_tiled_tier;
+use bismo::simd::{self, DispatchTier};
+use bismo::util::{property_sweep, Rng};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Pack with an explicit tier and check word-identity against the
+/// scalar packer — both the dense and the virtual (`from_int_fn`)
+/// entry points.
+fn assert_packing_matches_scalar(m: &IntMatrix, bits: u32, signed: bool) {
+    let want = BitSerialMatrix::from_int_tier(m, bits, signed, DispatchTier::Scalar);
+    let want_fn = BitSerialMatrix::from_int_fn_tier(m.rows, m.cols, bits, signed, DispatchTier::Scalar, |r, c| {
+        m.get(r, c)
+    });
+    assert_eq!(want, want_fn, "scalar from_int vs from_int_fn");
+    for tier in DispatchTier::supported() {
+        let got = BitSerialMatrix::from_int_tier(m, bits, signed, tier);
+        assert_eq!(got, want, "from_int tier={tier} bits={bits} signed={signed}");
+        let got_fn =
+            BitSerialMatrix::from_int_fn_tier(m.rows, m.cols, bits, signed, tier, |r, c| m.get(r, c));
+        assert_eq!(got_fn, want, "from_int_fn tier={tier} bits={bits} signed={signed}");
+    }
+}
+
+#[test]
+fn every_supported_tier_is_bit_exact_against_the_oracle() {
+    let tiers = DispatchTier::supported();
+    assert!(tiers.contains(&DispatchTier::Scalar), "scalar always runs");
+    property_sweep(0x51D_0D15, 40, |rng, case| {
+        let m = rng.index(17) + 1;
+        let k = rng.index(260) + 1; // usually not a multiple of 64 or the vector width
+        let n = rng.index(17) + 1;
+        let wbits = rng.index(8) as u32 + 1;
+        let abits = rng.index(8) as u32 + 1;
+        let lsigned = rng.chance(0.5);
+        let rsigned = rng.chance(0.5);
+        let a = IntMatrix::random(rng, m, k, wbits, lsigned);
+        let b = IntMatrix::random(rng, k, n, abits, rsigned);
+        let expect = a.matmul(&b);
+        let rb = BitSerialMatrix::from_int_transposed(&b, abits, rsigned);
+        for &tier in &tiers {
+            let la = BitSerialMatrix::from_int_tier(&a, wbits, lsigned, tier);
+            assert_eq!(
+                gemm_tiled_tier(&la, &rb, tier),
+                expect,
+                "case {case}: tier={tier} m={m} k={k} n={n} w={wbits} a={abits} \
+                 ls={lsigned} rs={rsigned}"
+            );
+        }
+    });
+}
+
+#[test]
+fn packing_is_word_identical_across_tiers() {
+    property_sweep(0x9ACC_ED, 40, |rng, _| {
+        let rows = rng.index(9) + 1;
+        // Straddle the 64-column word boundary and the 4-column AVX2
+        // packer step: tails of every phase.
+        let cols = *rng.pick(&[1usize, 3, 4, 5, 31, 63, 64, 65, 100, 128, 130]);
+        let bits = rng.index(8) as u32 + 1;
+        let signed = rng.chance(0.5);
+        let m = IntMatrix::random(rng, rows, cols, bits, signed);
+        assert_packing_matches_scalar(&m, bits, signed);
+    });
+}
+
+#[test]
+fn strip_tails_shorter_than_every_vector_width() {
+    // k below / at / just past each vector width (NEON 2 words, AVX2 4,
+    // AVX-512 8, Harley–Seal block 16) — in *words*, so k in bits spans
+    // 1..=17 words. Single-word rows (k <= 64) are the smallest case.
+    let mut rng = Rng::new(0x7A11);
+    for kwords in [1usize, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17] {
+        let k = kwords * 64 - rng.index(5); // ragged: not always word-aligned
+        let a = IntMatrix::random(&mut rng, 3, k, 2, true);
+        let b = IntMatrix::random(&mut rng, k, 3, 3, false);
+        let expect = a.matmul(&b);
+        let rb = BitSerialMatrix::from_int_transposed(&b, 3, false);
+        for tier in DispatchTier::supported() {
+            let la = BitSerialMatrix::from_int_tier(&a, 2, true, tier);
+            assert_eq!(gemm_tiled_tier(&la, &rb, tier), expect, "tier={tier} k={k}");
+        }
+    }
+}
+
+#[test]
+fn all_zero_and_skippable_planes_agree_on_every_tier() {
+    let mut rng = Rng::new(0x5C1F);
+    let (m, k, n) = (5, 150, 6);
+    // Even values: LSB plane all-zero (zero-plane skip path). All-zero
+    // operand: every plane skippable. Dense control alongside.
+    let dense = IntMatrix::random(&mut rng, m, k, 4, false);
+    let even = IntMatrix::from_fn(m, k, |r, c| (dense.get(r, c) / 2) * 2);
+    let zero = IntMatrix::zeros(m, k);
+    let b = IntMatrix::random(&mut rng, k, n, 3, true);
+    let rb = BitSerialMatrix::from_int_transposed(&b, 3, true);
+    for a in [&dense, &even, &zero] {
+        let expect = a.matmul(&b);
+        assert_packing_matches_scalar(a, 4, false);
+        for tier in DispatchTier::supported() {
+            let la = BitSerialMatrix::from_int_tier(a, 4, false, tier);
+            assert_eq!(gemm_tiled_tier(&la, &rb, tier), expect, "tier={tier}");
+        }
+    }
+}
+
+#[test]
+fn packing_panics_carry_the_same_message_on_every_tier() {
+    for tier in DispatchTier::supported() {
+        let bad = IntMatrix::from_slice(1, 70, &[3; 70]); // 3 does not fit 1 bit
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            BitSerialMatrix::from_int_tier(&bad, 1, false, tier)
+        }))
+        .expect_err("out-of-range entry must panic");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("does not fit"), "tier={tier}: {msg}");
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            BitSerialMatrix::from_int_fn_tier(1, 70, 2, true, tier, |_, c| c as i64)
+        }))
+        .expect_err("out-of-range produced value must panic");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("does not fit"), "tier={tier}: {msg}");
+    }
+}
+
+#[test]
+fn override_parsing_rejects_garbage_with_a_typed_error() {
+    for garbage in ["sse4", "AVX512VNNI", "fastest", "scalar avx2", "1"] {
+        let err = DispatchTier::parse_override(garbage).unwrap_err();
+        assert!(
+            matches!(err, BismoError::InvalidConfig(_)),
+            "{garbage}: wrong error class: {err}"
+        );
+        let text = err.to_string();
+        assert!(text.contains(simd::ENV_VAR), "{garbage}: {text}");
+        assert!(text.contains("scalar"), "{garbage}: lists valid names: {text}");
+    }
+    // from_env under the CI matrix: whatever BISMO_SIMD is set to
+    // (unset, auto or a forced tier), it must parse and resolve, and
+    // the cached process-wide tier must agree.
+    let over = DispatchTier::from_env().expect("CI sets only valid BISMO_SIMD values");
+    let resolved = DispatchTier::resolve().unwrap();
+    match over {
+        Some(t) => assert_eq!(resolved, t),
+        None => assert_eq!(resolved, DispatchTier::detect()),
+    }
+    assert_eq!(DispatchTier::active(), resolved);
+}
