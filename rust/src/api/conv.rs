@@ -119,6 +119,13 @@ impl<'s> ConvBuilder<'s> {
         self
     }
 
+    /// Scope cache interactions to tenant namespace `ns` (see
+    /// [`super::MatmulBuilder::cache_namespace`]).
+    pub fn cache_namespace(mut self, ns: u64) -> Self {
+        self.opts.cache_namespace = ns;
+        self
+    }
+
     /// The builder's spec.
     pub fn spec(&self) -> ConvSpec {
         self.spec
@@ -163,9 +170,13 @@ impl<'s> ConvBuilder<'s> {
         self.spec.check_weights(&weights)?;
         let subs = lower_weights(&self.spec, &weights, self.mode);
         for sub in &subs {
-            self.session
-                .service()
-                .prepare_operand(sub, self.prec.abits, self.prec.rsigned, true)?;
+            self.session.service().prepare_operand_in(
+                self.opts.cache_namespace,
+                sub,
+                self.prec.abits,
+                self.prec.rsigned,
+                true,
+            )?;
         }
         Ok(PreparedConv {
             session: self.session,

@@ -45,6 +45,15 @@ pub enum BismoError {
     VerifyFailed(String),
     /// The service is shutting down and no longer accepts submissions.
     ServiceShutdown,
+    /// The serving front door shed this request under load: its
+    /// admission queue (global or per-tenant) is saturated. The payload
+    /// is a back-off hint in milliseconds — clients should retry no
+    /// sooner than that. Scales with queue depth at shed time, so it
+    /// doubles as a congestion signal.
+    Overloaded {
+        /// Suggested client back-off before retrying, in milliseconds.
+        retry_after_ms: u64,
+    },
     /// A request outcome was already consumed (e.g. `try_take` followed
     /// by `wait` on the same handle).
     ResultConsumed,
@@ -69,6 +78,7 @@ impl BismoError {
             BismoError::SimFault(_) => "sim_fault",
             BismoError::VerifyFailed(_) => "verify_failed",
             BismoError::ServiceShutdown => "service_shutdown",
+            BismoError::Overloaded { .. } => "overloaded",
             BismoError::ResultConsumed => "result_consumed",
             BismoError::WorkerPanicked(_) => "worker_panicked",
             BismoError::Io(_) => "io",
@@ -88,6 +98,9 @@ impl std::fmt::Display for BismoError {
             BismoError::SimFault(e) => write!(f, "simulation: {e}"),
             BismoError::VerifyFailed(m) => write!(f, "verification failed: {m}"),
             BismoError::ServiceShutdown => write!(f, "service is shutting down"),
+            BismoError::Overloaded { retry_after_ms } => {
+                write!(f, "overloaded: retry after {retry_after_ms} ms")
+            }
             BismoError::ResultConsumed => write!(f, "request outcome already taken"),
             BismoError::WorkerPanicked(m) => write!(f, "request panicked: {m}"),
             BismoError::Io(m) => write!(f, "io: {m}"),
@@ -135,6 +148,19 @@ mod tests {
         assert!(s.contains("wbits"), "{s}");
         assert_eq!(e.kind(), "precision_unsupported");
         assert_eq!(BismoError::ServiceShutdown.kind(), "service_shutdown");
+    }
+
+    #[test]
+    fn overloaded_carries_the_backoff_hint() {
+        let e = BismoError::Overloaded { retry_after_ms: 25 };
+        assert_eq!(e.kind(), "overloaded");
+        assert!(e.to_string().contains("retry after 25 ms"), "{e}");
+        // Shed responses are matchable so clients can implement typed
+        // back-off instead of string-sniffing.
+        match e {
+            BismoError::Overloaded { retry_after_ms } => assert_eq!(retry_after_ms, 25),
+            other => panic!("wrong kind: {other:?}"),
+        }
     }
 
     #[test]

@@ -196,6 +196,16 @@ impl<'s> MatmulBuilder<'s> {
         self
     }
 
+    /// Scope this builder's cache interactions to tenant namespace `ns`
+    /// (`0` — the default — is the shared in-process namespace).
+    /// Tenants share the session cache's byte budget but can never hit
+    /// each other's packed operands; the network front door
+    /// ([`crate::net`]) sets this per connection.
+    pub fn cache_namespace(mut self, ns: u64) -> Self {
+        self.opts.cache_namespace = ns;
+        self
+    }
+
     /// Execute each job across (up to) `n` overlay instances: the
     /// output splits into a shard grid factored per job shape, the
     /// shards run concurrently and merge bit-exactly. `n = 1` is the
@@ -278,7 +288,8 @@ impl<'s> MatmulBuilder<'s> {
             ));
         }
         let weights: Arc<IntMatrix> = weights.into();
-        let (packed, _resident) = self.session.svc.prepare_operand(
+        let (packed, _resident) = self.session.svc.prepare_operand_in(
+            self.opts.cache_namespace,
             &weights,
             self.prec.abits,
             self.prec.rsigned,

@@ -35,10 +35,17 @@ pub struct PackKey {
     /// Packed via [`BitSerialMatrix::from_int_transposed`] (RHS layout)
     /// rather than [`BitSerialMatrix::from_int`] (LHS layout).
     pub transposed: bool,
+    /// Tenant namespace the packing belongs to. Part of the identity:
+    /// tenants share this cache's byte budget and LRU order but can
+    /// never address each other's entries — identical weights uploaded
+    /// by two tenants are two entries. `0` is the default (in-process)
+    /// namespace used by every non-network caller.
+    pub namespace: u64,
 }
 
 impl PackKey {
-    /// Key for packing `m` at `bits`/`signed`, direct or transposed.
+    /// Key for packing `m` at `bits`/`signed`, direct or transposed, in
+    /// the default namespace `0`.
     pub fn of(m: &IntMatrix, bits: u32, signed: bool, transposed: bool) -> PackKey {
         PackKey {
             content: m.content_hash(),
@@ -47,7 +54,15 @@ impl PackKey {
             bits,
             signed,
             transposed,
+            namespace: 0,
         }
+    }
+
+    /// The same key scoped to tenant namespace `ns` (the network front
+    /// door derives `ns` from the tenant name; see `bismo::net`).
+    pub fn in_namespace(mut self, ns: u64) -> PackKey {
+        self.namespace = ns;
+        self
     }
 }
 
@@ -391,6 +406,29 @@ mod tests {
         // The range is re-derived per precision: same matrix fits 7-bit.
         let (_, hit) = c.get_or_pack(&m, 7, false, false).unwrap();
         assert!(!hit);
+    }
+
+    #[test]
+    fn namespaces_partition_identity_not_storage() {
+        let mut c = PackingCache::new(1 << 20);
+        let mut rng = Rng::new(6);
+        let m = mat(&mut rng, 4, 64, 2, false);
+        let k0 = PackKey::of(&m, 2, false, true);
+        let ka = k0.in_namespace(0xA);
+        let kb = k0.in_namespace(0xB);
+        assert_ne!(ka, kb);
+        let packed = Arc::new(pack_operand(&m, 2, false, true));
+        c.insert(ka, packed.clone());
+        // Tenant B (and the default namespace) miss on tenant A's entry
+        // even though content/shape/precision are identical.
+        assert!(c.get(&kb).is_none());
+        assert!(c.get(&k0).is_none());
+        assert!(c.get(&ka).is_some());
+        // Same backing store: both tenants' entries count against one
+        // byte budget.
+        c.insert(kb, packed.clone());
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.bytes(), 2 * packed.packed_bytes());
     }
 
     #[test]

@@ -76,21 +76,40 @@ impl BismoBatchRunner {
     }
 
     /// Aggregate throughput of a batch: total binary ops / total
-    /// simulated seconds (jobs run on `workers` parallel overlays).
+    /// simulated seconds (jobs run on `workers` parallel overlays),
+    /// counted over the *successful* outcomes only. Convenience
+    /// wrapper over [`BismoBatchRunner::batch_throughput`], which also
+    /// reports how many outcomes were excluded — an all-failures batch
+    /// returns `0.0` here, indistinguishable from an empty one, so
+    /// callers that care must check the failure count.
     pub fn batch_gops(&self, outcomes: &[BatchOutcome]) -> f64 {
+        self.batch_throughput(outcomes).0
+    }
+
+    /// Aggregate throughput of a batch plus its failure count:
+    /// `(gops, failed)`. Failed outcomes contribute no ops and no
+    /// simulated time — they are excluded, not zero-counted — and the
+    /// second element makes that exclusion explicit instead of letting
+    /// an all-failures batch masquerade as an empty one.
+    pub fn batch_throughput(&self, outcomes: &[BatchOutcome]) -> (f64, usize) {
         let mut total_ops = 0.0;
         let mut total_secs = 0.0f64;
+        let mut failed = 0usize;
         for o in outcomes {
-            if let Ok((_, rep)) = &o.result {
-                total_ops += rep.gops * rep.seconds * 1e9;
-                total_secs += rep.seconds;
+            match &o.result {
+                Ok((_, rep)) => {
+                    total_ops += rep.gops * rep.seconds * 1e9;
+                    total_secs += rep.seconds;
+                }
+                Err(_) => failed += 1,
             }
         }
-        if total_secs == 0.0 {
+        let gops = if total_secs == 0.0 {
             0.0
         } else {
             total_ops / (total_secs / self.workers as f64) / 1e9
-        }
+        };
+        (gops, failed)
     }
 }
 
@@ -192,5 +211,38 @@ mod tests {
         let outcomes = runner.run_batch(&[]);
         assert!(outcomes.is_empty());
         assert_eq!(runner.batch_gops(&outcomes), 0.0);
+        assert_eq!(runner.batch_throughput(&outcomes), (0.0, 0));
+    }
+
+    #[test]
+    fn failed_outcomes_are_counted_not_silently_skipped() {
+        let runner = BismoBatchRunner::new(BismoConfig::small(), 2).unwrap();
+        let mut rng = Rng::new(0xFA11);
+        // A mixed batch: healthy jobs plus one with mismatched shapes.
+        let jobs: Vec<_> = (0..3)
+            .map(|_| {
+                let a = IntMatrix::random(&mut rng, 2, 64, 1, false);
+                let b = IntMatrix::random(&mut rng, 64, 2, 1, false);
+                (a, b, Precision::unsigned(1, 1), MatmulOptions::default())
+            })
+            .chain(std::iter::once((
+                IntMatrix::zeros(2, 64),
+                IntMatrix::zeros(63, 2),
+                Precision::unsigned(1, 1),
+                MatmulOptions::default(),
+            )))
+            .collect();
+        let outcomes = runner.run_batch(&jobs);
+        let (gops, failed) = runner.batch_throughput(&outcomes);
+        assert!(gops > 0.0, "healthy jobs still report throughput");
+        assert_eq!(failed, 1, "the shape-mismatch job is counted");
+        assert_eq!(runner.batch_gops(&outcomes), gops, "wrapper agrees");
+        // All-failures: 0.0 gops like an empty batch, but the failure
+        // count disambiguates the two.
+        let bad: Vec<_> = outcomes
+            .into_iter()
+            .filter(|o| o.result.is_err())
+            .collect();
+        assert_eq!(runner.batch_throughput(&bad), (0.0, 1));
     }
 }

@@ -303,6 +303,12 @@ pub struct RequestOptions {
     /// occupying a worker indefinitely (`None` = unbounded; engine
     /// backend ignores it).
     pub max_instrs: Option<u64>,
+    /// Tenant namespace for this request's cache interactions (both
+    /// sides). `0` — the default — is the shared in-process namespace;
+    /// the network front door (`bismo::net`) assigns each tenant a
+    /// nonzero namespace so tenants share the cache's byte budget but
+    /// can never hit each other's packed operands.
+    pub cache_namespace: u64,
 }
 
 impl Default for RequestOptions {
@@ -316,6 +322,7 @@ impl Default for RequestOptions {
             cache_rhs: true,
             sharding: Sharding::Single,
             max_instrs: None,
+            cache_namespace: 0,
         }
     }
 }
@@ -654,12 +661,28 @@ impl BismoService {
         signed: bool,
         transposed: bool,
     ) -> Result<(Arc<BitSerialMatrix>, bool), BismoError> {
+        self.prepare_operand_in(0, m, bits, signed, transposed)
+    }
+
+    /// [`BismoService::prepare_operand`] scoped to a tenant cache
+    /// namespace (`0` is the default in-process namespace). The network
+    /// front door uses this for prepared-weight uploads so one tenant's
+    /// packings are invisible to every other tenant.
+    pub fn prepare_operand_in(
+        &self,
+        namespace: u64,
+        m: &IntMatrix,
+        bits: u32,
+        signed: bool,
+        transposed: bool,
+    ) -> Result<(Arc<BitSerialMatrix>, bool), BismoError> {
         self.inner.pack_one(
             m,
             bits,
             signed,
             transposed,
             true,
+            namespace,
             "prepared operand",
         )
     }
@@ -929,6 +952,7 @@ impl Inner {
                 p.prec.lsigned,
                 false,
                 p.opts.cache_lhs,
+                p.opts.cache_namespace,
                 "lhs",
             )?,
         };
@@ -938,6 +962,7 @@ impl Inner {
             p.prec.rsigned,
             true,
             p.opts.cache_rhs,
+            p.opts.cache_namespace,
             "rhs",
         )?;
         Ok(PackedOperands {
@@ -963,13 +988,14 @@ impl Inner {
         signed: bool,
         transposed: bool,
         use_cache: bool,
+        namespace: u64,
         side: &str,
     ) -> Result<(Arc<BitSerialMatrix>, bool), BismoError> {
         if !use_cache || self.cfg.cache_bytes == 0 {
             check_fits(m, bits, signed, side)?;
             return Ok((Arc::new(pack_operand(m, bits, signed, transposed)), false));
         }
-        let key = PackKey::of(m, bits, signed, transposed);
+        let key = PackKey::of(m, bits, signed, transposed).in_namespace(namespace);
         if let Some(hit) = self.cache.lock().unwrap().get(&key) {
             return Ok((hit, true));
         }
@@ -1197,6 +1223,42 @@ mod tests {
         let resp = s.run(GemmRequest::new(x.clone(), w.clone(), prec)).unwrap();
         assert!(resp.rhs_cached, "prepared packing served the request");
         assert_eq!(resp.result, x.matmul(&w));
+    }
+
+    #[test]
+    fn cache_namespaces_isolate_tenants_end_to_end() {
+        let s = svc();
+        let mut rng = Rng::new(0x7E4A);
+        let w = Arc::new(IntMatrix::random(&mut rng, 64, 4, 3, true));
+        // Tenant A uploads weights into its namespace.
+        let (_, resident) = s.prepare_operand_in(0xA, &w, 3, true, true).unwrap();
+        assert!(!resident);
+        let (_, resident_a) = s.prepare_operand_in(0xA, &w, 3, true, true).unwrap();
+        assert!(resident_a, "tenant A re-prepare hits its own entry");
+        // Tenant B preparing the *identical* weights misses: namespaces
+        // partition identity even for bit-identical content.
+        let (_, resident_b) = s.prepare_operand_in(0xB, &w, 3, true, true).unwrap();
+        assert!(!resident_b, "tenant B must not see tenant A's packing");
+        // Requests tagged with a namespace only hit that namespace.
+        let x = IntMatrix::random(&mut rng, 2, 64, 2, false);
+        let prec = Precision {
+            wbits: 2,
+            abits: 3,
+            lsigned: false,
+            rsigned: true,
+        };
+        let opts_a = RequestOptions {
+            cache_namespace: 0xA,
+            ..Default::default()
+        };
+        let resp = s
+            .run(GemmRequest::with_opts(x.clone(), w.clone(), prec, opts_a))
+            .unwrap();
+        assert!(resp.rhs_cached, "tenant A request served from its upload");
+        assert_eq!(resp.result, x.matmul(&w));
+        // The default namespace sees neither tenant's entries.
+        let resp0 = s.run(GemmRequest::new(x.clone(), w.clone(), prec)).unwrap();
+        assert!(!resp0.rhs_cached, "default namespace is its own partition");
     }
 
     #[test]

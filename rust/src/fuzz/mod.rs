@@ -7,7 +7,7 @@
 //! failure is replayable from a one-line seed**: case `i` of a run with
 //! seed `S` uses `case_seed(S, i)`, which the failure report prints.
 //!
-//! Three modes, mirrored by `bismo fuzz --mode`:
+//! Four modes, mirrored by `bismo fuzz --mode`:
 //!
 //! * **legal** — [`generate_legal_program`] emits arbitrary-but-legal
 //!   programs (token-causal generation order + a result-buffer credit
@@ -30,6 +30,12 @@
 //!   the host supports (packing compared word-for-word, results
 //!   bit-exact). Failing cases are greedily minimized before being
 //!   reported.
+//! * **wire** — random legal [`crate::net::wire`] frames (every
+//!   request and response kind) are round-tripped, then corrupted with
+//!   the same byte mutations as the ISA mutation mode. Decoding the
+//!   corpse must yield a typed [`BismoError::Parse`] or a valid decode
+//!   — never a panic, an over-allocation or any other error class
+//!   (the front door's frame-robustness guarantee).
 
 use crate::api::BismoError;
 use crate::arch::{BismoConfig, PYNQ_Z1};
@@ -60,7 +66,7 @@ pub fn case_seed(seed: u64, index: u64) -> u64 {
 /// One replayable fuzz failure.
 #[derive(Clone, Debug)]
 pub struct FuzzFailure {
-    /// Mode name: `legal`, `mutation` or `differential`.
+    /// Mode name: `legal`, `mutation`, `differential` or `wire`.
     pub mode: &'static str,
     /// Case index within the run.
     pub index: u64,
@@ -436,6 +442,171 @@ fn mutation_case(seed: u64) -> Result<(), String> {
 /// Mutation mode: corrupted encodings must always yield typed errors.
 pub fn fuzz_mutation(iters: u64, seed: u64) -> FuzzOutcome {
     run_mode("mutation", iters, seed, mutation_case)
+}
+
+/// One random legal wire frame: every request/response kind, with
+/// small random payload shapes.
+fn random_wire_frame(rng: &mut Rng) -> Result<Vec<u8>, BismoError> {
+    use crate::lowering::{ConvSpec, Tensor};
+    use crate::net::wire::{self, Request, Response, WireStats};
+    let mat = |rng: &mut Rng| {
+        let rows = rng.index(6) + 1;
+        let cols = rng.index(80) + 1;
+        let signed = rng.chance(0.5);
+        IntMatrix::random(rng, rows, cols, 3, signed)
+    };
+    let prec = |rng: &mut Rng| Precision {
+        wbits: rng.range(1, 4) as u32,
+        abits: rng.range(1, 4) as u32,
+        lsigned: rng.chance(0.5),
+        rsigned: rng.chance(0.5),
+    };
+    let backend = |rng: &mut Rng| {
+        if rng.chance(0.5) {
+            Backend::Engine
+        } else {
+            Backend::Sim
+        }
+    };
+    let req_id = rng.next_u64() as u32;
+    match rng.index(12) {
+        0 => wire::encode_request(
+            req_id,
+            &Request::Hello {
+                tenant: format!("tenant-{}", rng.index(100)),
+            },
+        ),
+        1 => wire::encode_request(
+            req_id,
+            &Request::Matmul {
+                prec: prec(rng),
+                backend: backend(rng),
+                verify: rng.chance(0.5),
+                a: mat(rng),
+                b: mat(rng),
+            },
+        ),
+        2 => wire::encode_request(
+            req_id,
+            &Request::PrepareWeights {
+                bits: rng.range(1, 8) as u32,
+                signed: rng.chance(0.5),
+                weights: mat(rng),
+            },
+        ),
+        3 => wire::encode_request(
+            req_id,
+            &Request::MatmulPrepared {
+                weight_id: rng.next_u64(),
+                prec: prec(rng),
+                backend: backend(rng),
+                verify: rng.chance(0.5),
+                a: mat(rng),
+            },
+        ),
+        4 => {
+            let spec = ConvSpec::simple(
+                rng.index(6) + 3,
+                rng.index(6) + 3,
+                rng.index(3) + 1,
+                rng.index(3) + 1,
+                3,
+                1,
+            );
+            let input = Tensor::random(rng, 1, spec.in_h, spec.in_w, spec.in_c, 2, false);
+            let weights = spec.weights_from_fn(|_, _, _, _| rng.operand(2, true));
+            wire::encode_request(
+                req_id,
+                &Request::Conv {
+                    spec,
+                    mode: if rng.chance(0.5) {
+                        crate::lowering::LoweringMode::Im2col
+                    } else {
+                        crate::lowering::LoweringMode::Kn2row
+                    },
+                    prec: prec(rng),
+                    backend: backend(rng),
+                    verify: rng.chance(0.5),
+                    weights,
+                    input,
+                },
+            )
+        }
+        5 => wire::encode_request(req_id, &Request::Stats),
+        6 => wire::encode_response(
+            req_id,
+            &Response::HelloOk {
+                namespace: rng.next_u64(),
+            },
+        ),
+        7 => wire::encode_response(
+            req_id,
+            &Response::MatmulOk {
+                lhs_cached: rng.chance(0.5),
+                rhs_cached: rng.chance(0.5),
+                shards: rng.index(16) as u32 + 1,
+                total_ns: rng.next_u64() >> 20,
+                result: mat(rng),
+            },
+        ),
+        8 => wire::encode_response(
+            req_id,
+            &Response::PrepareOk {
+                weight_id: rng.next_u64(),
+                resident: rng.chance(0.5),
+            },
+        ),
+        9 => {
+            let (h, w) = (rng.index(5) + 1, rng.index(5) + 1);
+            let t = Tensor::random(rng, 1, h, w, 2, 3, true);
+            wire::encode_response(
+                req_id,
+                &Response::ConvOk {
+                    gemms: rng.index(9) as u32 + 1,
+                    weights_cached: rng.chance(0.5),
+                    output: t,
+                },
+            )
+        }
+        10 => wire::encode_response(
+            req_id,
+            &Response::StatsOk(WireStats {
+                cache_hits: rng.next_u64() >> 32,
+                cache_misses: rng.next_u64() >> 32,
+                ..WireStats::default()
+            }),
+        ),
+        _ => wire::encode_response(
+            req_id,
+            &wire::error_frame(&BismoError::Overloaded {
+                retry_after_ms: rng.index(1000) as u64,
+            }),
+        ),
+    }
+}
+
+/// Run one wire-mode case; `Err(detail)` only on a panic, an untyped
+/// escape or a broken clean round trip.
+fn wire_case(seed: u64) -> Result<(), String> {
+    use crate::net::wire::decode_frame;
+    let mut rng = Rng::new(seed);
+    let clean = random_wire_frame(&mut rng).map_err(|e| format!("encode failed: {e}"))?;
+    // A clean frame must decode (round-trip sanity before corruption).
+    decode_frame(&clean).map_err(|e| format!("clean frame failed to decode: {e}"))?;
+    let mut bytes = clean;
+    mutate_bytes(&mut rng, &mut bytes);
+    match decode_frame(&bytes) {
+        // The corruption may cancel out or land in a don't-care field
+        // (req_id, flag payloads) — a valid decode is fine.
+        Ok(_) => Ok(()),
+        Err(BismoError::Parse(_)) => Ok(()),
+        Err(e) => Err(format!("unexpected error class from wire decode: {e}")),
+    }
+}
+
+/// Wire mode: corrupted frames must decode typed or not at all.
+pub fn fuzz_wire(iters: u64, seed: u64) -> FuzzOutcome {
+    run_mode("wire", iters, seed, wire_case)
 }
 
 /// One differential-fuzz case, fully determined by its fields (all
@@ -826,6 +997,22 @@ mod tests {
     fn differential_mode_smoke() {
         let out = fuzz_differential(3, 0xF00D);
         assert!(out.ok(), "failures: {:?}", out.failures);
+    }
+
+    #[test]
+    fn wire_mode_smoke() {
+        let out = fuzz_wire(64, 0xF00D);
+        assert!(out.ok(), "failures: {:?}", out.failures);
+    }
+
+    #[test]
+    fn wire_cases_are_deterministic() {
+        // Same case seed → same verdict, twice over: the replay
+        // promise the failure report makes.
+        for i in 0..8 {
+            let s = case_seed(0x31BE, i);
+            assert_eq!(wire_case(s), wire_case(s), "case {i}");
+        }
     }
 
     #[test]

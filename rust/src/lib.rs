@@ -62,6 +62,12 @@
 //!   AVX2 Harley–Seal / NEON / scalar, overridable via `BISMO_SIMD`),
 //!   property-tested bit-exact against the scalar reference strip at
 //!   every host-supported tier (`DESIGN.md` §11).
+//! * [`net`] — the network serving front door: length-prefixed binary
+//!   wire protocol ([`net::wire`]) over std TCP, multi-tenant sessions
+//!   with per-tenant cache namespaces and quotas, admission control
+//!   with typed [`api::BismoError::Overloaded`] load shedding
+//!   ([`net::NetServer`] / [`net::NetClient`], hosted by
+//!   `bismo serve`; `DESIGN.md` §12).
 //! * [`qnn`] — quantized-neural-network layers running on the overlay.
 //! * [`fuzz`] — seeded structured fuzzing (legal / mutation /
 //!   differential) and the golden snapshot report behind `bismo fuzz`
@@ -79,6 +85,7 @@ pub mod fuzz;
 pub mod isa;
 pub mod kernel;
 pub mod lowering;
+pub mod net;
 pub mod partition;
 pub mod power;
 pub mod qnn;

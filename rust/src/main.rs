@@ -9,12 +9,25 @@
 //! bismo schedule [--instance N] [--m M --k K --n N ...]   dump queues
 //! bismo bench [--quick] [--out PATH] [--threads N]   CPU kernel suite
 //!                                           -> BENCH_gemm.json
+//! bismo serve [--host H] [--port P] [--workers W] [--batch B]
+//!                [--cache-mb M] [--max-in-flight N] [--tenant-in-flight N]
+//!                [--tenant-weight-mb M] [--instance N]
+//!                host the TCP front door (binary wire protocol,
+//!                multi-tenant cache namespaces, admission control);
+//!                prints the bound address, serves until stdin closes,
+//!                then drains gracefully
 //! bismo serve-bench [--quick] [--backend engine|sim] [--requests N]
 //!                [--rate RPS] [--layers L] [--workers W] [--batch B]
 //!                [--m M --k K --n N --wbits W --abits A] [--out PATH]
+//!                [--remote] [--clients C] [--addr HOST:PORT]
+//!                [--max-in-flight N] [--tenant-in-flight N]
 //!                open-loop load generator against the async serving
 //!                layer -> BENCH_serve.json (latency percentiles,
-//!                throughput, packing-cache repack-avoidance win)
+//!                throughput, packing-cache repack-avoidance win);
+//!                --remote adds a closed-loop phase over real TCP
+//!                sockets (self-hosted ephemeral port unless --addr)
+//!                reporting client-observed p50/p95/p99 and the shed
+//!                rate into a `remote` section
 //! bismo shard-bench [--quick] [--backend engine|sim] [--reps N]
 //!                [--max-shards S] [--m M --k K --n N --wbits W --abits A]
 //!                [--budget-luts L --budget-brams B] [--out PATH]
@@ -30,7 +43,7 @@
 //!                CI regression gate: compares two BENCH_gemm.json
 //!                files, failing on schema drift or on per-case
 //!                speedup regression beyond the tolerance
-//! bismo fuzz [--iters N] [--seed S] [--mode legal|mutation|differential|all]
+//! bismo fuzz [--iters N] [--seed S] [--mode legal|mutation|differential|wire|all]
 //!                [--out PATH]               seeded structured fuzzing of
 //!                the ISA decoder, simulator and serving backends; every
 //!                failure prints a one-line replay seed and the full
@@ -66,7 +79,14 @@ fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
         if let Some(name) = a.strip_prefix("--") {
             let is_bool = matches!(
                 name,
-                "signed" | "no-overlap" | "bit-skip" | "verify" | "help" | "quick" | "regen"
+                "signed"
+                    | "no-overlap"
+                    | "bit-skip"
+                    | "verify"
+                    | "help"
+                    | "quick"
+                    | "regen"
+                    | "remote"
             );
             if is_bool {
                 flags.insert(name.to_string(), "true".to_string());
@@ -593,6 +613,165 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     let on = run_phase(SERVE_CACHE_BYTES)?;
     let off = run_phase(0)?;
 
+    // `--remote`: a closed-loop phase over real TCP sockets. Each
+    // client thread owns one connection and one tenant; latency is
+    // client-observed (wire + serving stack), and requests the
+    // admission gate sheds are counted instead of retried blindly.
+    let remote_json = if flags.contains_key("remote") {
+        use bismo::net::{NetClient, NetServer, ServeConfig};
+
+        let clients = get(flags, "clients", 4usize).max(1);
+        let ext_addr = flags.get("addr").filter(|v| !v.is_empty()).cloned();
+        let mut server = None;
+        let addr = match &ext_addr {
+            Some(a) => a.clone(),
+            None => {
+                let s = NetServer::bind(
+                    "127.0.0.1:0",
+                    ServeConfig {
+                        session: SessionConfig {
+                            workers,
+                            max_batch,
+                            cache_bytes: SERVE_CACHE_BYTES,
+                            overlay,
+                        },
+                        max_in_flight: get(flags, "max-in-flight", 64usize).max(1),
+                        tenant_max_in_flight: get(flags, "tenant-in-flight", 16usize).max(1),
+                        ..ServeConfig::default()
+                    },
+                )?;
+                let a = s.local_addr().to_string();
+                server = Some(s);
+                a
+            }
+        };
+        let per_client = requests.div_ceil(clients);
+        let t0 = Instant::now();
+        let joined: Result<Vec<(Vec<f64>, u64)>, BismoError> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let addr = addr.clone();
+                    let acts = &acts;
+                    let weights = &weights;
+                    scope.spawn(move || -> Result<(Vec<f64>, u64), BismoError> {
+                        let mut cli = NetClient::connect(addr.as_str(), &format!("bench-{c}"))?;
+                        let mut lat = Vec::with_capacity(per_client);
+                        let mut shed = 0u64;
+                        for i in 0..per_client {
+                            let a = &acts[(c + i * clients) % acts.len()];
+                            let w = &weights[i % weights.len()];
+                            let t = Instant::now();
+                            match cli.matmul(a, w, prec, backend, false) {
+                                Ok(r) => {
+                                    lat.push(t.elapsed().as_nanos() as f64);
+                                    // One correctness gate per client:
+                                    // the wire path must be bit-exact.
+                                    if i == 0 && r.result != a.matmul(w) {
+                                        return Err(BismoError::VerifyFailed(format!(
+                                            "remote client {c}: result != reference"
+                                        )));
+                                    }
+                                }
+                                Err(BismoError::Overloaded { retry_after_ms }) => {
+                                    shed += 1;
+                                    std::thread::sleep(Duration::from_millis(
+                                        retry_after_ms.min(20),
+                                    ));
+                                }
+                                Err(e) => return Err(e),
+                            }
+                        }
+                        Ok((lat, shed))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("remote client thread panicked"))
+                .collect()
+        });
+        let per_client_results = joined?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut lat: Vec<f64> = Vec::new();
+        let mut shed = 0u64;
+        for (l, s) in per_client_results {
+            lat.extend(l);
+            shed += s;
+        }
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let completed = lat.len();
+        let attempts = completed as u64 + shed;
+        let samples = Samples { ns: lat };
+        let (server_served, server_shed) = match &mut server {
+            Some(s) => {
+                let pair = (s.served_total(), s.shed_total());
+                s.shutdown();
+                (Json::num(pair.0 as f64), Json::num(pair.1 as f64))
+            }
+            None => (Json::Null, Json::Null),
+        };
+
+        let mut remote = BTreeMap::new();
+        remote.insert("clients".to_string(), Json::num(clients as f64));
+        remote.insert(
+            "addr_kind".to_string(),
+            Json::str(if ext_addr.is_some() {
+                "external"
+            } else {
+                "self-hosted"
+            }),
+        );
+        remote.insert("attempts".to_string(), Json::num(attempts as f64));
+        remote.insert("completed".to_string(), Json::num(completed as f64));
+        remote.insert("shed".to_string(), Json::num(shed as f64));
+        remote.insert(
+            "shed_rate".to_string(),
+            Json::num(if attempts == 0 {
+                0.0
+            } else {
+                shed as f64 / attempts as f64
+            }),
+        );
+        // An all-shed run has no latency distribution; report zeros
+        // rather than panicking on an empty percentile.
+        let q = |p: f64| {
+            if samples.ns.is_empty() {
+                0.0
+            } else {
+                samples.percentile(p)
+            }
+        };
+        let mut l = BTreeMap::new();
+        l.insert("p50".to_string(), Json::num(q(50.0)));
+        l.insert("p95".to_string(), Json::num(q(95.0)));
+        l.insert("p99".to_string(), Json::num(q(99.0)));
+        l.insert("max".to_string(), Json::num(q(100.0)));
+        l.insert(
+            "mean".to_string(),
+            Json::num(if samples.ns.is_empty() {
+                0.0
+            } else {
+                samples.mean()
+            }),
+        );
+        remote.insert("latency_ns".to_string(), Json::Obj(l));
+        remote.insert(
+            "throughput_rps".to_string(),
+            Json::num(completed as f64 / wall_s),
+        );
+        remote.insert("server_served_total".to_string(), server_served);
+        remote.insert("server_shed_total".to_string(), server_shed);
+        println!(
+            "remote phase: {clients} clients, {completed}/{attempts} completed, {shed} shed, \
+             p50 {:.0} µs  p99 {:.0} µs",
+            q(50.0) / 1e3,
+            q(99.0) / 1e3,
+        );
+        Some(Json::Obj(remote))
+    } else {
+        None
+    };
+
     let repack_avoided_ns = off.pack_ns.saturating_sub(on.pack_ns);
     let pack_speedup = if on.pack_ns == 0 {
         0.0
@@ -710,6 +889,9 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     root.insert("pack".to_string(), Json::Obj(pack));
     root.insert("per_request".to_string(), Json::Obj(per_request));
     root.insert("cache_off".to_string(), Json::Obj(cache_off));
+    if let Some(remote) = remote_json {
+        root.insert("remote".to_string(), remote);
+    }
     let doc = Json::Obj(root);
     std::fs::write(&out_path, doc.pretty(2) + "\n")
         .map_err(|e| BismoError::Io(format!("writing {out_path}: {e}")))?;
@@ -728,6 +910,65 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
         on.cache.hit_rate() * 100.0,
         repack_avoided_ns as f64 / requests as f64 / 1e3,
         pack_speedup
+    );
+    Ok(())
+}
+
+/// `bismo serve`: host the TCP front door.
+///
+/// Prints the bound address (port 0 picks an ephemeral one — the line
+/// is machine-parseable for harnesses), serves until stdin reaches
+/// EOF, then drains gracefully: in-flight requests finish, new ones
+/// are refused, every thread is joined.
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), BismoError> {
+    use bismo::net::{NetServer, ServeConfig};
+
+    let host = flags
+        .get("host")
+        .filter(|v| !v.is_empty())
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1".to_string());
+    let port: u16 = get(flags, "port", 7410u16);
+    let default_threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4);
+    let workers = get(flags, "workers", default_threads)
+        .max(1)
+        .min(bismo::kernel::WorkerPool::global().lanes());
+    let defaults = ServeConfig::default();
+    let weight_mb = get(flags, "tenant-weight-mb", defaults.tenant_max_weight_bytes >> 20);
+    let cfg = ServeConfig {
+        session: SessionConfig {
+            workers,
+            max_batch: get(flags, "batch", 16usize).max(1),
+            cache_bytes: get(flags, "cache-mb", 256usize) << 20,
+            overlay: config_from(flags)?,
+        },
+        max_in_flight: get(flags, "max-in-flight", defaults.max_in_flight),
+        tenant_max_in_flight: get(flags, "tenant-in-flight", defaults.tenant_max_in_flight),
+        tenant_max_weight_bytes: weight_mb << 20,
+    };
+    let mut server = NetServer::bind(&format!("{host}:{port}"), cfg)?;
+    println!("bismo serve: listening on {}", server.local_addr());
+    println!(
+        "bismo serve: {} workers, {} global / {} per-tenant in flight; close stdin to drain",
+        workers, cfg.max_in_flight, cfg.tenant_max_in_flight
+    );
+    // The serving work all happens on the server's own threads; this
+    // thread just waits for the operator (or harness) to close stdin.
+    let mut sink = String::new();
+    loop {
+        sink.clear();
+        match std::io::stdin().read_line(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+    server.shutdown();
+    println!(
+        "bismo serve: drained ({} served, {} shed)",
+        server.served_total(),
+        server.shed_total()
     );
     Ok(())
 }
@@ -1557,7 +1798,7 @@ fn cmd_info() -> Result<(), BismoError> {
 /// `bismo fuzz`: run the seeded fuzz modes; on any failure, write the
 /// replayable failure list to `--out` and exit non-zero.
 fn cmd_fuzz(flags: &HashMap<String, String>) -> Result<(), BismoError> {
-    use bismo::fuzz::{failures_to_json, fuzz_differential, fuzz_legal, fuzz_mutation};
+    use bismo::fuzz::{failures_to_json, fuzz_differential, fuzz_legal, fuzz_mutation, fuzz_wire};
 
     let iters: u64 = get(flags, "iters", 200u64);
     let seed: u64 = get(flags, "seed", 42u64);
@@ -1572,10 +1813,11 @@ fn cmd_fuzz(flags: &HashMap<String, String>) -> Result<(), BismoError> {
         "legal" => vec![fuzz_legal],
         "mutation" => vec![fuzz_mutation],
         "differential" => vec![fuzz_differential],
-        "all" => vec![fuzz_legal, fuzz_mutation, fuzz_differential],
+        "wire" => vec![fuzz_wire],
+        "all" => vec![fuzz_legal, fuzz_mutation, fuzz_differential, fuzz_wire],
         other => {
             return Err(BismoError::Parse(format!(
-                "bad --mode {other:?} (expect legal|mutation|differential|all)"
+                "bad --mode {other:?} (expect legal|mutation|differential|wire|all)"
             )))
         }
     };
@@ -1650,14 +1892,15 @@ fn cmd_snapshot(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     Ok(())
 }
 
-const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|bench|serve-bench|shard-bench|cnn-bench|bench-check|fuzz|snapshot|costmodel|synth|power|instances|info> [flags]
+const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|bench|serve|serve-bench|shard-bench|cnn-bench|bench-check|fuzz|snapshot|costmodel|synth|power|instances|info> [flags]
 flags: --instance N  --m M --k K --n N  --wbits W --abits A  --signed --no-overlap --bit-skip  --seed S  --dk N
 bench: --quick  --out PATH (default BENCH_gemm.json)  --threads N
-serve-bench: --quick  --backend engine|sim  --requests N  --rate RPS  --layers L  --workers W  --batch B  --out PATH (default BENCH_serve.json)
+serve: --host H (default 127.0.0.1)  --port P (default 7410; 0 = ephemeral)  --workers W  --batch B  --cache-mb M  --max-in-flight N  --tenant-in-flight N  --tenant-weight-mb M
+serve-bench: --quick  --backend engine|sim  --requests N  --rate RPS  --layers L  --workers W  --batch B  --out PATH (default BENCH_serve.json)  --remote  --clients C  --addr HOST:PORT  --max-in-flight N  --tenant-in-flight N
 shard-bench: --quick  --backend engine|sim  --reps N  --max-shards S  --budget-luts L --budget-brams B  --out PATH (default BENCH_shard.json)
 cnn-bench: --quick  --batch B  --reps N  --out PATH (default BENCH_cnn.json)
 bench-check: --baseline PATH  --current PATH  --tolerance F (default 0.35)
-fuzz: --iters N (default 200)  --seed S (default 42)  --mode legal|mutation|differential|all  --out PATH (default FUZZ_failures.json)
+fuzz: --iters N (default 200)  --seed S (default 42)  --mode legal|mutation|differential|wire|all  --out PATH (default FUZZ_failures.json)
 snapshot: --regen  --baseline PATH (default ci/sim_snapshots.json)
 env: BISMO_SIMD=auto|avx512|avx2|neon|scalar forces the SIMD dispatch tier (default auto-detect; see `bismo info`)";
 
@@ -1670,6 +1913,7 @@ fn main() {
         "simulate" => cmd_simulate(&flags),
         "schedule" => cmd_schedule(&flags),
         "bench" => cmd_bench(&flags),
+        "serve" => cmd_serve(&flags),
         "serve-bench" => cmd_serve_bench(&flags),
         "shard-bench" => cmd_shard_bench(&flags),
         "cnn-bench" => cmd_cnn_bench(&flags),

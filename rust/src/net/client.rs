@@ -1,0 +1,253 @@
+//! [`NetClient`]: the blocking wire-protocol client.
+//!
+//! One client owns one connection and one tenant session. Calls are
+//! synchronous request/response pairs; errors the server reports come
+//! back as the same typed [`BismoError`] kinds an in-process caller
+//! would see — a shed request is a matchable
+//! [`BismoError::Overloaded`] with its `retry_after_ms` hint intact.
+
+use super::wire::{
+    decode_header, decode_payload, encode_request, Message, Request, Response, WireStats,
+    HEADER_BYTES,
+};
+use crate::api::BismoError;
+use crate::bitmatrix::IntMatrix;
+use crate::coordinator::{Backend, Precision};
+use crate::lowering::{ConvSpec, LoweringMode, Tensor};
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// What a remote matmul reports back (the wire subset of
+/// [`crate::coordinator::GemmResponse`]).
+#[derive(Clone, Debug)]
+pub struct RemoteGemm {
+    pub result: IntMatrix,
+    pub lhs_cached: bool,
+    pub rhs_cached: bool,
+    pub shards: u32,
+    /// Server-side submission-to-completion time, nanoseconds.
+    pub total_ns: u64,
+}
+
+/// What a remote conv reports back.
+#[derive(Clone, Debug)]
+pub struct RemoteConv {
+    pub output: Tensor,
+    /// Lowered GEMM count (1 for im2col, `kh·kw` for kn2row).
+    pub gemms: u32,
+    pub weights_cached: bool,
+}
+
+/// A prepared-weight handle on the server: upload once with
+/// [`NetClient::prepare_weights`], replay with
+/// [`NetClient::matmul_prepared`].
+#[derive(Clone, Copy, Debug)]
+pub struct RemotePrepared {
+    pub weight_id: u64,
+    /// Whether the packing was already resident in this tenant's
+    /// namespace at upload time.
+    pub resident: bool,
+}
+
+/// Blocking client over one TCP connection, bound to one tenant.
+pub struct NetClient {
+    stream: TcpStream,
+    next_id: u32,
+    namespace: u64,
+}
+
+impl NetClient {
+    /// Connect and establish the tenant session (the `Hello`
+    /// handshake).
+    pub fn connect(addr: impl ToSocketAddrs, tenant: &str) -> Result<NetClient, BismoError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let mut c = NetClient {
+            stream,
+            next_id: 1,
+            namespace: 0,
+        };
+        match c.call(&Request::Hello {
+            tenant: tenant.to_string(),
+        })? {
+            Response::HelloOk { namespace } => {
+                c.namespace = namespace;
+                Ok(c)
+            }
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// The cache namespace the server assigned this tenant
+    /// (observability only; it is never sent back).
+    pub fn namespace(&self) -> u64 {
+        self.namespace
+    }
+
+    /// One remote matmul `a · b`.
+    pub fn matmul(
+        &mut self,
+        a: &IntMatrix,
+        b: &IntMatrix,
+        prec: Precision,
+        backend: Backend,
+        verify: bool,
+    ) -> Result<RemoteGemm, BismoError> {
+        let resp = self.call(&Request::Matmul {
+            prec,
+            backend,
+            verify,
+            a: a.clone(),
+            b: b.clone(),
+        })?;
+        into_gemm(resp)
+    }
+
+    /// Upload weights once; the server packs them into this tenant's
+    /// namespace and returns a replayable id.
+    pub fn prepare_weights(
+        &mut self,
+        weights: &IntMatrix,
+        bits: u32,
+        signed: bool,
+    ) -> Result<RemotePrepared, BismoError> {
+        match self.call(&Request::PrepareWeights {
+            bits,
+            signed,
+            weights: weights.clone(),
+        })? {
+            Response::PrepareOk {
+                weight_id,
+                resident,
+            } => Ok(RemotePrepared {
+                weight_id,
+                resident,
+            }),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Matmul against previously uploaded weights. `prec.abits` /
+    /// `prec.rsigned` must match the upload.
+    pub fn matmul_prepared(
+        &mut self,
+        prepared: RemotePrepared,
+        a: &IntMatrix,
+        prec: Precision,
+        backend: Backend,
+        verify: bool,
+    ) -> Result<RemoteGemm, BismoError> {
+        let resp = self.call(&Request::MatmulPrepared {
+            weight_id: prepared.weight_id,
+            prec,
+            backend,
+            verify,
+            a: a.clone(),
+        })?;
+        into_gemm(resp)
+    }
+
+    /// One remote convolution layer, lowered server-side.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        &mut self,
+        spec: ConvSpec,
+        mode: LoweringMode,
+        input: &Tensor,
+        weights: &IntMatrix,
+        prec: Precision,
+        backend: Backend,
+        verify: bool,
+    ) -> Result<RemoteConv, BismoError> {
+        match self.call(&Request::Conv {
+            spec,
+            mode,
+            prec,
+            backend,
+            verify,
+            weights: weights.clone(),
+            input: input.clone(),
+        })? {
+            Response::ConvOk {
+                gemms,
+                weights_cached,
+                output,
+            } => Ok(RemoteConv {
+                output,
+                gemms,
+                weights_cached,
+            }),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Server-side cache and admission counters.
+    pub fn stats(&mut self) -> Result<WireStats, BismoError> {
+        match self.call(&Request::Stats)? {
+            Response::StatsOk(s) => Ok(s),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// One request/response round trip. Error frames come back as
+    /// `Err` with the server's typed error reconstructed.
+    fn call(&mut self, req: &Request) -> Result<Response, BismoError> {
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1);
+        let raw = encode_request(id, req)?;
+        self.stream.write_all(&raw)?;
+        self.stream.flush()?;
+        let mut hdr = [0u8; HEADER_BYTES];
+        self.stream.read_exact(&mut hdr)?;
+        let header = decode_header(&hdr)?;
+        let mut payload = vec![0u8; header.len];
+        self.stream.read_exact(&mut payload)?;
+        if header.req_id != id {
+            return Err(BismoError::Parse(format!(
+                "response for request {} while awaiting {}",
+                header.req_id, id
+            )));
+        }
+        let resp = match decode_payload(header.kind, &payload)? {
+            Message::Response(r) => r,
+            Message::Request(_) => {
+                return Err(BismoError::Parse("server sent a request frame".into()))
+            }
+        };
+        if let Some(e) = resp.to_error() {
+            return Err(e);
+        }
+        Ok(resp)
+    }
+}
+
+fn into_gemm(resp: Response) -> Result<RemoteGemm, BismoError> {
+    match resp {
+        Response::MatmulOk {
+            lhs_cached,
+            rhs_cached,
+            shards,
+            total_ns,
+            result,
+        } => Ok(RemoteGemm {
+            result,
+            lhs_cached,
+            rhs_cached,
+            shards,
+            total_ns,
+        }),
+        other => Err(unexpected(&other)),
+    }
+}
+
+fn unexpected(resp: &Response) -> BismoError {
+    let kind = match resp {
+        Response::HelloOk { .. } => "HelloOk",
+        Response::MatmulOk { .. } => "MatmulOk",
+        Response::PrepareOk { .. } => "PrepareOk",
+        Response::ConvOk { .. } => "ConvOk",
+        Response::StatsOk(_) => "StatsOk",
+        Response::Error { .. } => "Error",
+    };
+    BismoError::Parse(format!("unexpected response frame: {kind}"))
+}

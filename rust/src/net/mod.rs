@@ -1,0 +1,34 @@
+//! The network serving front door: a binary wire protocol, per-tenant
+//! cache namespaces and quotas, and admission control with load
+//! shedding over the in-process serving stack.
+//!
+//! Until this module, traffic could only originate in-process — the
+//! paper's host-driven accelerator service stopped at the
+//! [`crate::api::Session`] facade. `net` carries the same operations
+//! over std TCP:
+//!
+//! - [`wire`] — length-prefixed, versioned frames with a strict
+//!   `try_decode`-style parser (typed [`crate::api::BismoError::Parse`]
+//!   on any corruption, never a panic; mirrored after the ISA decoder
+//!   and property-fuzzed by `bismo fuzz --mode wire`).
+//! - [`NetServer`] — one reader/writer thread per connection
+//!   dispatching onto the shared worker lanes; multi-tenant sessions
+//!   whose weight uploads live in per-tenant cache namespaces; global
+//!   and per-tenant admission caps that shed excess load with typed
+//!   [`crate::api::BismoError::Overloaded`] back-off hints; graceful
+//!   drain on shutdown.
+//! - [`NetClient`] — the blocking client: matmul, prepared-weight
+//!   upload/replay, conv and stats, with server errors reconstructed
+//!   as typed [`crate::api::BismoError`] values.
+//!
+//! Hosted by `bismo serve --port`; driven under load by
+//! `bismo serve-bench --remote` (tail latency + shed rate into
+//! `BENCH_serve.json`).
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{NetClient, RemoteConv, RemoteGemm, RemotePrepared};
+pub use server::{NetServer, ServeConfig};
+pub use wire::{Message, Request, Response, WireStats};

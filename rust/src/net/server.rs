@@ -1,0 +1,587 @@
+//! [`NetServer`]: the TCP front door — tenant sessions, admission
+//! control and load shedding over one shared [`Session`].
+//!
+//! One OS thread per connection reads frames, dispatches onto the
+//! session's worker lanes and writes responses in request order.
+//! Concurrency comes from concurrent connections: the serving layer
+//! micro-batches across them exactly as it does for in-process
+//! callers.
+//!
+//! ## Tenancy
+//!
+//! The first frame on every connection must be [`Request::Hello`],
+//! naming a tenant. Each tenant name maps to a stable nonzero cache
+//! namespace; every cache interaction the connection triggers is
+//! scoped to it, so tenants share the packing cache's byte budget and
+//! LRU order but can never hit each other's entries — even for
+//! bit-identical weights.
+//!
+//! ## Admission control
+//!
+//! Work-bearing requests (matmul, prepared matmul, conv, weight
+//! upload) pass an admission gate before touching the service queue: a
+//! global in-flight cap and a per-tenant in-flight cap. A request
+//! arriving over either cap is *shed* — answered immediately with a
+//! typed [`BismoError::Overloaded`] carrying a depth-scaled
+//! `retry_after_ms` hint — never queued, hung or dropped. Per-tenant
+//! uploaded-weight bytes are capped separately
+//! ([`BismoError::CapacityExceeded`]).
+//!
+//! ## Shutdown
+//!
+//! [`NetServer::shutdown`] stops the acceptor, lets every connection
+//! finish its in-flight request, joins all threads and then drains the
+//! underlying service — the graceful half of the serving story.
+
+use super::wire::{
+    decode_header, decode_payload, encode_response, error_frame, Header, Message, Request,
+    Response, WireStats, HEADER_BYTES,
+};
+use crate::api::{BismoError, Session, SessionConfig};
+use crate::bitmatrix::IntMatrix;
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// Topology and QoS limits of one [`NetServer`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// The shared serving stack beneath the front door.
+    pub session: SessionConfig,
+    /// Global admission cap: work-bearing requests in flight across
+    /// all tenants. Arrivals over the cap are shed with
+    /// [`BismoError::Overloaded`].
+    pub max_in_flight: usize,
+    /// Per-tenant admission cap (one noisy tenant cannot occupy the
+    /// whole global window).
+    pub tenant_max_in_flight: usize,
+    /// Per-tenant cap on uploaded prepared-weight bytes (dense i64
+    /// bytes of the retained source matrices); exceeding it is a typed
+    /// [`BismoError::CapacityExceeded`].
+    pub tenant_max_weight_bytes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            session: SessionConfig::default(),
+            max_in_flight: 64,
+            tenant_max_in_flight: 16,
+            tenant_max_weight_bytes: 16 << 20,
+        }
+    }
+}
+
+/// One uploaded weight matrix, retained for prepared replay.
+struct StoredWeights {
+    namespace: u64,
+    bits: u32,
+    signed: bool,
+    weights: Arc<IntMatrix>,
+}
+
+/// All mutable server bookkeeping, under one mutex. Never held across
+/// request execution — admit, drop the lock, execute, re-lock to
+/// release — so the gate cannot serialize the actual GEMM work.
+#[derive(Default)]
+struct Book {
+    in_flight: usize,
+    tenant_in_flight: HashMap<u64, usize>,
+    tenant_weight_bytes: HashMap<u64, usize>,
+    /// Tenant name → namespace. Reconnects resolve to the same
+    /// namespace, so a tenant's uploads survive its connections.
+    tenants: HashMap<String, u64>,
+    next_namespace: u64,
+    weights: HashMap<u64, StoredWeights>,
+    next_weight_id: u64,
+    shed_total: u64,
+    served_total: u64,
+}
+
+struct Shared {
+    session: Session,
+    cfg: ServeConfig,
+    stop: AtomicBool,
+    book: Mutex<Book>,
+}
+
+/// Depth-scaled back-off hint: the further over the cap the gate is,
+/// the longer clients are told to wait. Bounded so a burst never turns
+/// into a minutes-long advisory.
+fn retry_hint_ms(in_flight: usize, cap: usize) -> u64 {
+    let over = in_flight.saturating_sub(cap) as u64;
+    (5 + 5 * over).min(1_000)
+}
+
+/// RAII admission slot: decrements the global and per-tenant gauges on
+/// drop, so every exit path (success, error, panic-mapped error)
+/// releases exactly once.
+struct AdmitGuard {
+    shared: Arc<Shared>,
+    namespace: u64,
+}
+
+impl Drop for AdmitGuard {
+    fn drop(&mut self) {
+        let mut book = self.shared.book.lock().unwrap();
+        book.in_flight -= 1;
+        if let Some(t) = book.tenant_in_flight.get_mut(&self.namespace) {
+            *t = t.saturating_sub(1);
+        }
+    }
+}
+
+fn try_admit(shared: &Arc<Shared>, namespace: u64) -> Result<AdmitGuard, BismoError> {
+    let mut book = shared.book.lock().unwrap();
+    let tenant_depth = book.tenant_in_flight.get(&namespace).copied().unwrap_or(0);
+    let shed = if book.in_flight >= shared.cfg.max_in_flight {
+        Some(retry_hint_ms(book.in_flight, shared.cfg.max_in_flight))
+    } else if tenant_depth >= shared.cfg.tenant_max_in_flight {
+        Some(retry_hint_ms(tenant_depth, shared.cfg.tenant_max_in_flight))
+    } else {
+        None
+    };
+    if let Some(retry_after_ms) = shed {
+        book.shed_total += 1;
+        return Err(BismoError::Overloaded { retry_after_ms });
+    }
+    book.in_flight += 1;
+    *book.tenant_in_flight.entry(namespace).or_insert(0) += 1;
+    Ok(AdmitGuard {
+        shared: shared.clone(),
+        namespace,
+    })
+}
+
+/// The TCP serving front door. Bind with [`NetServer::bind`]; drop (or
+/// call [`NetServer::shutdown`]) to stop accepting, drain and join.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    acceptor: Option<thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port), start
+    /// the serving stack and the acceptor thread.
+    pub fn bind(addr: &str, cfg: ServeConfig) -> Result<NetServer, BismoError> {
+        if cfg.max_in_flight == 0 || cfg.tenant_max_in_flight == 0 {
+            return Err(BismoError::InvalidConfig(
+                "admission caps must be at least 1".into(),
+            ));
+        }
+        let session = Session::new(cfg.session)?;
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            session,
+            cfg,
+            stop: AtomicBool::new(false),
+            book: Mutex::new(Book {
+                next_namespace: 1,
+                next_weight_id: 1,
+                ..Book::default()
+            }),
+        });
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let acceptor = {
+            let shared = shared.clone();
+            let conns = conns.clone();
+            thread::spawn(move || accept_loop(&listener, &shared, &conns))
+        };
+        Ok(NetServer {
+            shared,
+            local_addr,
+            acceptor: Some(acceptor),
+            conns,
+        })
+    }
+
+    /// The bound address (the actual port when bound to port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Requests shed with [`BismoError::Overloaded`] since startup.
+    pub fn shed_total(&self) -> u64 {
+        self.shared.book.lock().unwrap().shed_total
+    }
+
+    /// Work-bearing requests completed since startup.
+    pub fn served_total(&self) -> u64 {
+        self.shared.book.lock().unwrap().served_total
+    }
+
+    /// Packing-cache counters of the shared session (all tenants).
+    pub fn cache_stats(&self) -> crate::coordinator::CacheStats {
+        self.shared.session.cache_stats()
+    }
+
+    /// Graceful drain: stop accepting connections, let every
+    /// connection finish its in-flight request, join all threads, then
+    /// shut the serving layer down. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        self.shared.session.shutdown();
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    shared: &Arc<Shared>,
+    conns: &Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let shared = shared.clone();
+                let h = thread::spawn(move || handle_conn(&shared, stream));
+                conns.lock().unwrap().push(h);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(10));
+            }
+            // Transient accept errors (e.g. aborted handshakes) are
+            // not fatal to the server.
+            Err(_) => thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Outcome of one bounded read attempt.
+enum ReadStatus {
+    /// The buffer is full.
+    Full,
+    /// Clean EOF before any byte of this read (the peer closed).
+    Eof,
+    /// Timed out with zero bytes read (poll again after checking the
+    /// stop flag).
+    Idle,
+    /// The server is draining and nothing usable was read.
+    Stopped,
+}
+
+/// Fill `buf` from `stream`, tolerating read-timeout polls. A timeout
+/// with partial data keeps reading (the frame is mid-flight); a
+/// timeout with no data returns [`ReadStatus::Idle`] so the caller can
+/// check the stop flag between frames.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+) -> Result<ReadStatus, BismoError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(ReadStatus::Eof)
+                } else {
+                    Err(BismoError::Io("connection closed mid-frame".into()))
+                }
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if got == 0 {
+                    return Ok(ReadStatus::Idle);
+                }
+                if stop.load(Ordering::SeqCst) {
+                    // Draining with a half-received frame: give up on
+                    // it (it was never admitted).
+                    return Ok(ReadStatus::Stopped);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(ReadStatus::Full)
+}
+
+fn write_frame(stream: &mut TcpStream, req_id: u32, resp: &Response) -> Result<(), BismoError> {
+    let raw = encode_response(req_id, resp)?;
+    stream.write_all(&raw)?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn handle_conn(shared: &Arc<Shared>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    // The cache namespace this connection's Hello resolved to.
+    let mut tenant: Option<u64> = None;
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let mut hdr = [0u8; HEADER_BYTES];
+        let header: Header = match read_full(&mut stream, &mut hdr, &shared.stop) {
+            Ok(ReadStatus::Full) => match decode_header(&hdr) {
+                Ok(h) => h,
+                Err(e) => {
+                    // The stream cannot be resynchronized after a bad
+                    // header: report and close.
+                    let _ = write_frame(&mut stream, 0, &error_frame(&e));
+                    return;
+                }
+            },
+            Ok(ReadStatus::Idle) => continue,
+            Ok(ReadStatus::Eof | ReadStatus::Stopped) | Err(_) => return,
+        };
+        let mut payload = vec![0u8; header.len];
+        match read_full(&mut stream, &mut payload, &shared.stop) {
+            Ok(ReadStatus::Full) => {}
+            Ok(_) | Err(_) => return,
+        }
+        let req = match decode_payload(header.kind, &payload) {
+            Ok(Message::Request(r)) => r,
+            Ok(Message::Response(_)) => {
+                let e = BismoError::Parse("client sent a response frame".into());
+                let _ = write_frame(&mut stream, header.req_id, &error_frame(&e));
+                return;
+            }
+            Err(e) => {
+                let _ = write_frame(&mut stream, header.req_id, &error_frame(&e));
+                return;
+            }
+        };
+        // Panics inside request handling (none are expected — worker
+        // panics are already mapped by the service) must never take the
+        // server down; they become typed WorkerPanicked responses.
+        let resp = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            handle_request(shared, &mut tenant, req)
+        })) {
+            Ok(Ok(resp)) => resp,
+            Ok(Err(e)) => error_frame(&e),
+            Err(_) => error_frame(&BismoError::WorkerPanicked(
+                "request handler panicked".into(),
+            )),
+        };
+        if write_frame(&mut stream, header.req_id, &resp).is_err() {
+            return;
+        }
+    }
+}
+
+fn handle_request(
+    shared: &Arc<Shared>,
+    tenant: &mut Option<u64>,
+    req: Request,
+) -> Result<Response, BismoError> {
+    // Hello and Stats work before/without admission; everything else
+    // needs a tenant session first.
+    if let Request::Hello { tenant: name } = &req {
+        let mut book = shared.book.lock().unwrap();
+        let next = book.next_namespace;
+        let ns = *book.tenants.entry(name.clone()).or_insert(next);
+        if ns == next {
+            book.next_namespace += 1;
+        }
+        *tenant = Some(ns);
+        return Ok(Response::HelloOk { namespace: ns });
+    }
+    if let Request::Stats = &req {
+        let cache = shared.session.cache_stats();
+        let book = shared.book.lock().unwrap();
+        return Ok(Response::StatsOk(WireStats {
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+            cache_insertions: cache.insertions,
+            cache_evictions: cache.evictions,
+            cache_entries: shared.session.cache_entries() as u64,
+            cache_resident_bytes: shared.session.cache_bytes() as u64,
+            in_flight: book.in_flight as u64,
+            shed_total: book.shed_total,
+            served_total: book.served_total,
+        }));
+    }
+    let ns = tenant.ok_or_else(|| {
+        BismoError::IllegalProgram("first frame on a connection must be Hello".into())
+    })?;
+    // Admission gate: shed before anything reaches the service queue.
+    let _guard = try_admit(shared, ns)?;
+    let resp = match req {
+        Request::Matmul {
+            prec,
+            backend,
+            verify,
+            a,
+            b,
+        } => {
+            let r = shared
+                .session
+                .matmul(prec)
+                .backend(backend)
+                .verify(verify)
+                .cache_namespace(ns)
+                .run(a, b)?;
+            Response::MatmulOk {
+                lhs_cached: r.lhs_cached,
+                rhs_cached: r.rhs_cached,
+                shards: r.shards as u32,
+                total_ns: r.total_ns,
+                result: r.result,
+            }
+        }
+        Request::PrepareWeights {
+            bits,
+            signed,
+            weights,
+        } => {
+            let bytes = weights.data().len() * 8;
+            {
+                let mut book = shared.book.lock().unwrap();
+                let used = book.tenant_weight_bytes.entry(ns).or_insert(0);
+                if *used + bytes > shared.cfg.tenant_max_weight_bytes {
+                    return Err(BismoError::CapacityExceeded(format!(
+                        "tenant weight quota: {} + {} bytes exceeds the {} byte cap",
+                        used, bytes, shared.cfg.tenant_max_weight_bytes
+                    )));
+                }
+                *used += bytes;
+            }
+            let weights = Arc::new(weights);
+            let (_, resident) = shared
+                .session
+                .service()
+                .prepare_operand_in(ns, &weights, bits, signed, true)
+                .inspect_err(|_| {
+                    // A rejected upload (bad precision) must not eat
+                    // quota.
+                    let mut book = shared.book.lock().unwrap();
+                    if let Some(used) = book.tenant_weight_bytes.get_mut(&ns) {
+                        *used = used.saturating_sub(bytes);
+                    }
+                })?;
+            let mut book = shared.book.lock().unwrap();
+            let weight_id = book.next_weight_id;
+            book.next_weight_id += 1;
+            book.weights.insert(
+                weight_id,
+                StoredWeights {
+                    namespace: ns,
+                    bits,
+                    signed,
+                    weights,
+                },
+            );
+            Response::PrepareOk {
+                weight_id,
+                resident,
+            }
+        }
+        Request::MatmulPrepared {
+            weight_id,
+            prec,
+            backend,
+            verify,
+            a,
+        } => {
+            let (weights, bits, signed) = {
+                let book = shared.book.lock().unwrap();
+                match book.weights.get(&weight_id) {
+                    // A foreign tenant's id must be indistinguishable
+                    // from an unknown one — no cross-tenant probing.
+                    Some(w) if w.namespace == ns => (w.weights.clone(), w.bits, w.signed),
+                    _ => {
+                        return Err(BismoError::InvalidConfig(format!(
+                            "unknown weight id {weight_id}"
+                        )))
+                    }
+                }
+            };
+            if prec.abits != bits || prec.rsigned != signed {
+                return Err(BismoError::PrecisionUnsupported(format!(
+                    "weight id {weight_id} was prepared at {}-bit {}, requested {}-bit {}",
+                    bits,
+                    if signed { "signed" } else { "unsigned" },
+                    prec.abits,
+                    if prec.rsigned { "signed" } else { "unsigned" },
+                )));
+            }
+            let r = shared
+                .session
+                .matmul(prec)
+                .backend(backend)
+                .verify(verify)
+                .cache_namespace(ns)
+                .run(a, weights)?;
+            Response::MatmulOk {
+                lhs_cached: r.lhs_cached,
+                rhs_cached: r.rhs_cached,
+                shards: r.shards as u32,
+                total_ns: r.total_ns,
+                result: r.result,
+            }
+        }
+        Request::Conv {
+            spec,
+            mode,
+            prec,
+            backend,
+            verify,
+            weights,
+            input,
+        } => {
+            let r = shared
+                .session
+                .conv(spec, prec)
+                .lowering(mode)
+                .backend(backend)
+                .verify(verify)
+                .cache_namespace(ns)
+                .run(&input, weights)?;
+            Response::ConvOk {
+                gemms: r.gemms.len() as u32,
+                weights_cached: r.weights_cached(),
+                output: r.output,
+            }
+        }
+        Request::Hello { .. } | Request::Stats => unreachable!("handled above"),
+    };
+    shared.book.lock().unwrap().served_total += 1;
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_hint_scales_with_depth_and_saturates() {
+        assert_eq!(retry_hint_ms(4, 4), 5);
+        assert!(retry_hint_ms(10, 4) > retry_hint_ms(5, 4));
+        assert_eq!(retry_hint_ms(usize::MAX, 1), 1_000);
+    }
+
+    #[test]
+    fn zero_caps_are_rejected() {
+        let cfg = ServeConfig {
+            max_in_flight: 0,
+            ..ServeConfig::default()
+        };
+        assert!(matches!(
+            NetServer::bind("127.0.0.1:0", cfg),
+            Err(BismoError::InvalidConfig(_))
+        ));
+    }
+}

@@ -1,0 +1,991 @@
+//! The binary wire protocol: length-prefixed, versioned frames with a
+//! strict `try_decode`-style parser.
+//!
+//! Every frame is a fixed 16-byte header followed by a typed payload:
+//!
+//! | offset | field     | type  | meaning                              |
+//! |--------|-----------|-------|--------------------------------------|
+//! | 0      | magic     | `u32` | `0x4F4D5342` (`"BSMO"` little-endian)|
+//! | 4      | version   | `u16` | protocol version ([`VERSION`])       |
+//! | 6      | kind      | `u16` | frame kind (request or response)     |
+//! | 8      | req_id    | `u32` | echoed verbatim in the response      |
+//! | 12     | len       | `u32` | payload bytes ([`MAX_FRAME_BYTES`])  |
+//!
+//! All integers are little-endian. Matrices travel as
+//! `rows:u32 cols:u32` followed by `rows·cols` `i64` words; tensors as
+//! `n:u32 h:u32 w:u32 c:u32` plus NHWC-ordered `i64` words; strings as
+//! `len:u32` plus UTF-8 bytes.
+//!
+//! Decoding mirrors the ISA decoder discipline: every length is
+//! bounds-checked against the bytes actually present *before* any
+//! allocation (a corrupt `rows·cols` cannot trigger an out-of-memory
+//! grab), element counts use `checked_mul`, trailing bytes are an
+//! error, and every failure is a typed [`BismoError::Parse`] — the
+//! decoder never panics on corrupt input (property-fuzzed by the
+//! `wire` mode of `bismo fuzz`).
+
+use crate::api::BismoError;
+use crate::bitmatrix::IntMatrix;
+use crate::coordinator::{Backend, Precision};
+use crate::lowering::{ConvSpec, LoweringMode, Tensor};
+use crate::sim::SimError;
+
+/// `"BSMO"` read little-endian.
+pub const MAGIC: u32 = 0x4F4D_5342;
+/// Protocol version carried in every header; a mismatch is a typed
+/// [`BismoError::Parse`], not a guess.
+pub const VERSION: u16 = 1;
+/// Upper bound on one frame's payload. Rejected at the header, before
+/// the payload is read or buffered.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+/// Upper bound on a tenant name.
+pub const MAX_TENANT_LEN: usize = 256;
+
+/// Header size in bytes.
+pub const HEADER_BYTES: usize = 16;
+
+// Frame kinds. Requests have the high bit clear, responses set.
+const K_HELLO: u16 = 0x01;
+const K_MATMUL: u16 = 0x02;
+const K_PREPARE: u16 = 0x03;
+const K_MATMUL_PREPARED: u16 = 0x04;
+const K_CONV: u16 = 0x05;
+const K_STATS: u16 = 0x06;
+const K_HELLO_OK: u16 = 0x81;
+const K_MATMUL_OK: u16 = 0x82;
+const K_PREPARE_OK: u16 = 0x83;
+const K_CONV_OK: u16 = 0x84;
+const K_STATS_OK: u16 = 0x86;
+const K_ERROR: u16 = 0xFF;
+
+/// One client→server request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// First frame on every connection: names the tenant. The server
+    /// answers [`Response::HelloOk`] with the tenant's cache namespace.
+    Hello { tenant: String },
+    /// One dense matmul `a · b`.
+    Matmul {
+        prec: Precision,
+        backend: Backend,
+        verify: bool,
+        a: IntMatrix,
+        b: IntMatrix,
+    },
+    /// Upload weights once; the server packs them into the tenant's
+    /// cache namespace and returns a `weight_id` for replay.
+    PrepareWeights {
+        bits: u32,
+        signed: bool,
+        weights: IntMatrix,
+    },
+    /// Matmul against previously uploaded weights.
+    MatmulPrepared {
+        weight_id: u64,
+        prec: Precision,
+        backend: Backend,
+        verify: bool,
+        a: IntMatrix,
+    },
+    /// One convolution layer, lowered server-side.
+    Conv {
+        spec: ConvSpec,
+        mode: LoweringMode,
+        prec: Precision,
+        backend: Backend,
+        verify: bool,
+        weights: IntMatrix,
+        input: Tensor,
+    },
+    /// Server-side cache and admission counters.
+    Stats,
+}
+
+/// Server-side cache/admission counters, as reported by
+/// [`Response::StatsOk`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_insertions: u64,
+    pub cache_evictions: u64,
+    pub cache_entries: u64,
+    pub cache_resident_bytes: u64,
+    /// Work-bearing requests currently admitted, server-wide.
+    pub in_flight: u64,
+    /// Requests shed with [`BismoError::Overloaded`] since startup.
+    pub shed_total: u64,
+    /// Work-bearing requests completed since startup.
+    pub served_total: u64,
+}
+
+/// One server→client response.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Response {
+    /// Session established; carries the tenant's cache namespace (for
+    /// observability — the client never sends it back).
+    HelloOk { namespace: u64 },
+    /// A matmul completed.
+    MatmulOk {
+        lhs_cached: bool,
+        rhs_cached: bool,
+        shards: u32,
+        total_ns: u64,
+        result: IntMatrix,
+    },
+    /// Weights uploaded and packed. `resident` is true when the
+    /// packing was already in the tenant's namespace.
+    PrepareOk { weight_id: u64, resident: bool },
+    /// A convolution completed.
+    ConvOk {
+        gemms: u32,
+        weights_cached: bool,
+        output: Tensor,
+    },
+    /// Counters snapshot.
+    StatsOk(WireStats),
+    /// The request failed; `code`/`retry_after_ms`/`message` round-trip
+    /// to a typed [`BismoError`] via [`Response::to_error`].
+    Error {
+        code: u16,
+        retry_after_ms: u64,
+        message: String,
+    },
+}
+
+/// Either side of the conversation, as decoded off the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    Request(Request),
+    Response(Response),
+}
+
+/// Stable wire code for each [`BismoError`] kind.
+pub fn error_code(e: &BismoError) -> u16 {
+    match e {
+        BismoError::InvalidConfig(_) => 1,
+        BismoError::ShapeMismatch(_) => 2,
+        BismoError::PrecisionUnsupported(_) => 3,
+        BismoError::CapacityExceeded(_) => 4,
+        BismoError::IllegalProgram(_) => 5,
+        BismoError::SimFault(_) => 6,
+        BismoError::VerifyFailed(_) => 7,
+        BismoError::ServiceShutdown => 8,
+        BismoError::ResultConsumed => 9,
+        BismoError::WorkerPanicked(_) => 10,
+        BismoError::Io(_) => 11,
+        BismoError::Parse(_) => 12,
+        BismoError::Overloaded { .. } => 13,
+    }
+}
+
+/// Build the error-frame payload fields for `e`.
+pub fn error_frame(e: &BismoError) -> Response {
+    let retry_after_ms = match e {
+        BismoError::Overloaded { retry_after_ms } => *retry_after_ms,
+        _ => 0,
+    };
+    Response::Error {
+        code: error_code(e),
+        retry_after_ms,
+        message: e.to_string(),
+    }
+}
+
+impl Response {
+    /// Reconstruct the typed error an [`Response::Error`] frame
+    /// carries; `None` for non-error responses. Round-trips every
+    /// [`BismoError`] kind (a `SimFault` comes back as a remote-stage
+    /// fault carrying the original message).
+    pub fn to_error(&self) -> Option<BismoError> {
+        let (code, retry, msg) = match self {
+            Response::Error {
+                code,
+                retry_after_ms,
+                message,
+            } => (*code, *retry_after_ms, message.clone()),
+            _ => return None,
+        };
+        Some(match code {
+            1 => BismoError::InvalidConfig(msg),
+            2 => BismoError::ShapeMismatch(msg),
+            3 => BismoError::PrecisionUnsupported(msg),
+            4 => BismoError::CapacityExceeded(msg),
+            5 => BismoError::IllegalProgram(msg),
+            6 => BismoError::SimFault(SimError::Fault {
+                stage: "remote",
+                pc: 0,
+                msg,
+            }),
+            7 => BismoError::VerifyFailed(msg),
+            8 => BismoError::ServiceShutdown,
+            9 => BismoError::ResultConsumed,
+            10 => BismoError::WorkerPanicked(msg),
+            11 => BismoError::Io(msg),
+            13 => BismoError::Overloaded {
+                retry_after_ms: retry,
+            },
+            // 12 and anything a newer server might send degrade to
+            // Parse, keeping the message.
+            _ => BismoError::Parse(msg),
+        })
+    }
+}
+
+fn perr(msg: impl Into<String>) -> BismoError {
+    BismoError::Parse(msg.into())
+}
+
+// ---------------------------------------------------------------- encode
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn dim(&mut self, v: usize) -> Result<(), BismoError> {
+        let v = u32::try_from(v)
+            .map_err(|_| BismoError::CapacityExceeded(format!("dimension {v} exceeds the wire")))?;
+        self.u32(v);
+        Ok(())
+    }
+    fn string(&mut self, s: &str) -> Result<(), BismoError> {
+        self.dim(s.len())?;
+        self.buf.extend_from_slice(s.as_bytes());
+        Ok(())
+    }
+    fn words(&mut self, words: &[i64]) {
+        for w in words {
+            self.buf.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    fn matrix(&mut self, m: &IntMatrix) -> Result<(), BismoError> {
+        self.dim(m.rows)?;
+        self.dim(m.cols)?;
+        self.words(m.data());
+        Ok(())
+    }
+    fn tensor(&mut self, t: &Tensor) -> Result<(), BismoError> {
+        self.dim(t.n)?;
+        self.dim(t.h)?;
+        self.dim(t.w)?;
+        self.dim(t.c)?;
+        self.words(t.data());
+        Ok(())
+    }
+    fn prec(&mut self, p: Precision) -> Result<(), BismoError> {
+        for (name, bits) in [("wbits", p.wbits), ("abits", p.abits)] {
+            if bits > u8::MAX as u32 {
+                return Err(BismoError::PrecisionUnsupported(format!(
+                    "{name} {bits} exceeds the wire's u8 field"
+                )));
+            }
+        }
+        self.u8(p.wbits as u8);
+        self.u8(p.abits as u8);
+        self.u8(u8::from(p.lsigned) | (u8::from(p.rsigned) << 1));
+        Ok(())
+    }
+    fn backend(&mut self, b: Backend) {
+        self.u8(match b {
+            Backend::Engine => 0,
+            Backend::Sim => 1,
+        });
+    }
+    fn spec(&mut self, s: &ConvSpec) -> Result<(), BismoError> {
+        for d in [
+            s.in_h, s.in_w, s.in_c, s.out_c, s.kh, s.kw, s.stride.0, s.stride.1, s.pad.0, s.pad.1,
+            s.dilation.0, s.dilation.1,
+        ] {
+            self.dim(d)?;
+        }
+        Ok(())
+    }
+}
+
+fn frame(kind: u16, req_id: u32, payload: Vec<u8>) -> Result<Vec<u8>, BismoError> {
+    if payload.len() > MAX_FRAME_BYTES {
+        return Err(BismoError::CapacityExceeded(format!(
+            "frame payload {} bytes exceeds the {} byte cap",
+            payload.len(),
+            MAX_FRAME_BYTES
+        )));
+    }
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&kind.to_le_bytes());
+    out.extend_from_slice(&req_id.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Encode one request as a complete frame (header + payload).
+pub fn encode_request(req_id: u32, req: &Request) -> Result<Vec<u8>, BismoError> {
+    let mut e = Enc::new();
+    let kind = match req {
+        Request::Hello { tenant } => {
+            e.string(tenant)?;
+            K_HELLO
+        }
+        Request::Matmul {
+            prec,
+            backend,
+            verify,
+            a,
+            b,
+        } => {
+            e.prec(*prec)?;
+            e.backend(*backend);
+            e.u8(u8::from(*verify));
+            e.matrix(a)?;
+            e.matrix(b)?;
+            K_MATMUL
+        }
+        Request::PrepareWeights {
+            bits,
+            signed,
+            weights,
+        } => {
+            if *bits > u8::MAX as u32 {
+                return Err(BismoError::PrecisionUnsupported(format!(
+                    "bits {bits} exceeds the wire's u8 field"
+                )));
+            }
+            e.u8(*bits as u8);
+            e.u8(u8::from(*signed));
+            e.matrix(weights)?;
+            K_PREPARE
+        }
+        Request::MatmulPrepared {
+            weight_id,
+            prec,
+            backend,
+            verify,
+            a,
+        } => {
+            e.u64(*weight_id);
+            e.prec(*prec)?;
+            e.backend(*backend);
+            e.u8(u8::from(*verify));
+            e.matrix(a)?;
+            K_MATMUL_PREPARED
+        }
+        Request::Conv {
+            spec,
+            mode,
+            prec,
+            backend,
+            verify,
+            weights,
+            input,
+        } => {
+            e.spec(spec)?;
+            e.u8(match mode {
+                LoweringMode::Im2col => 0,
+                LoweringMode::Kn2row => 1,
+            });
+            e.prec(*prec)?;
+            e.backend(*backend);
+            e.u8(u8::from(*verify));
+            e.matrix(weights)?;
+            e.tensor(input)?;
+            K_CONV
+        }
+        Request::Stats => K_STATS,
+    };
+    frame(kind, req_id, e.buf)
+}
+
+/// Encode one response as a complete frame (header + payload).
+pub fn encode_response(req_id: u32, resp: &Response) -> Result<Vec<u8>, BismoError> {
+    let mut e = Enc::new();
+    let kind = match resp {
+        Response::HelloOk { namespace } => {
+            e.u64(*namespace);
+            K_HELLO_OK
+        }
+        Response::MatmulOk {
+            lhs_cached,
+            rhs_cached,
+            shards,
+            total_ns,
+            result,
+        } => {
+            e.u8(u8::from(*lhs_cached) | (u8::from(*rhs_cached) << 1));
+            e.u32(*shards);
+            e.u64(*total_ns);
+            e.matrix(result)?;
+            K_MATMUL_OK
+        }
+        Response::PrepareOk {
+            weight_id,
+            resident,
+        } => {
+            e.u64(*weight_id);
+            e.u8(u8::from(*resident));
+            K_PREPARE_OK
+        }
+        Response::ConvOk {
+            gemms,
+            weights_cached,
+            output,
+        } => {
+            e.u32(*gemms);
+            e.u8(u8::from(*weights_cached));
+            e.tensor(output)?;
+            K_CONV_OK
+        }
+        Response::StatsOk(s) => {
+            for v in [
+                s.cache_hits,
+                s.cache_misses,
+                s.cache_insertions,
+                s.cache_evictions,
+                s.cache_entries,
+                s.cache_resident_bytes,
+                s.in_flight,
+                s.shed_total,
+                s.served_total,
+            ] {
+                e.u64(v);
+            }
+            K_STATS_OK
+        }
+        Response::Error {
+            code,
+            retry_after_ms,
+            message,
+        } => {
+            e.u16(*code);
+            e.u64(*retry_after_ms);
+            e.string(message)?;
+            K_ERROR
+        }
+    };
+    frame(kind, req_id, e.buf)
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked cursor over one payload.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, pos: 0 }
+    }
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8], BismoError> {
+        if self.remaining() < n {
+            return Err(perr(format!(
+                "payload truncated: needed {n} bytes at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, BismoError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, BismoError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, BismoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, BismoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    /// A bit-flags byte where only the low `used` bits are defined:
+    /// set undefined bits are corruption, not silently-ignored noise.
+    fn flags(&mut self, used: u32) -> Result<u8, BismoError> {
+        let v = self.u8()?;
+        if u32::from(v) >> used != 0 {
+            return Err(perr(format!("undefined flag bits set: {v:#04x}")));
+        }
+        Ok(v)
+    }
+    /// `count` i64 words, bounds-checked before allocation.
+    fn words(&mut self, count: usize) -> Result<Vec<i64>, BismoError> {
+        let bytes = count
+            .checked_mul(8)
+            .ok_or_else(|| perr("element count overflows"))?;
+        let raw = self.take(bytes)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn string(&mut self, what: &str, max: usize) -> Result<String, BismoError> {
+        let len = self.u32()? as usize;
+        if len > max {
+            return Err(perr(format!("{what} length {len} exceeds the {max} cap")));
+        }
+        let raw = self.take(len)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| perr(format!("{what} is not UTF-8")))
+    }
+    fn matrix(&mut self) -> Result<IntMatrix, BismoError> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let count = rows
+            .checked_mul(cols)
+            .ok_or_else(|| perr("matrix shape overflows"))?;
+        Ok(IntMatrix::from_slice(rows, cols, &self.words(count)?))
+    }
+    fn tensor(&mut self) -> Result<Tensor, BismoError> {
+        let n = self.u32()? as usize;
+        let h = self.u32()? as usize;
+        let w = self.u32()? as usize;
+        let c = self.u32()? as usize;
+        let count = n
+            .checked_mul(h)
+            .and_then(|v| v.checked_mul(w))
+            .and_then(|v| v.checked_mul(c))
+            .ok_or_else(|| perr("tensor shape overflows"))?;
+        let hwc = h * w * c; // factors of `count`, so no overflow
+        let m = IntMatrix::from_slice(n, hwc, &self.words(count)?);
+        Ok(Tensor::from_matrix(&m, h, w, c))
+    }
+    fn prec(&mut self) -> Result<Precision, BismoError> {
+        let wbits = u32::from(self.u8()?);
+        let abits = u32::from(self.u8()?);
+        let flags = self.flags(2)?;
+        // Range validation (1..=32, accumulator fit) is the server's
+        // Precision::validate gate, which reports the typed
+        // PrecisionUnsupported the client expects.
+        Ok(Precision {
+            wbits,
+            abits,
+            lsigned: flags & 1 != 0,
+            rsigned: flags & 2 != 0,
+        })
+    }
+    fn backend(&mut self) -> Result<Backend, BismoError> {
+        match self.u8()? {
+            0 => Ok(Backend::Engine),
+            1 => Ok(Backend::Sim),
+            other => Err(perr(format!("unknown backend tag {other}"))),
+        }
+    }
+    fn spec(&mut self) -> Result<ConvSpec, BismoError> {
+        let mut d = [0usize; 12];
+        for slot in &mut d {
+            *slot = self.u32()? as usize;
+        }
+        Ok(ConvSpec {
+            in_h: d[0],
+            in_w: d[1],
+            in_c: d[2],
+            out_c: d[3],
+            kh: d[4],
+            kw: d[5],
+            stride: (d[6], d[7]),
+            pad: (d[8], d[9]),
+            dilation: (d[10], d[11]),
+        })
+    }
+    fn done(&self) -> Result<(), BismoError> {
+        if self.remaining() != 0 {
+            return Err(perr(format!(
+                "{} trailing bytes after payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A parsed frame header.
+#[derive(Clone, Copy, Debug)]
+pub struct Header {
+    pub kind: u16,
+    pub req_id: u32,
+    pub len: usize,
+}
+
+/// Parse and validate one 16-byte header. Magic, version and the
+/// payload-length cap are all checked here, *before* any payload is
+/// read — a corrupt length field cannot make the reader buffer 4 GiB.
+pub fn decode_header(raw: &[u8; HEADER_BYTES]) -> Result<Header, BismoError> {
+    let magic = u32::from_le_bytes(raw[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(perr(format!("bad magic {magic:#010x}")));
+    }
+    let version = u16::from_le_bytes(raw[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(perr(format!(
+            "protocol version {version} (this side speaks {VERSION})"
+        )));
+    }
+    let kind = u16::from_le_bytes(raw[6..8].try_into().unwrap());
+    let req_id = u32::from_le_bytes(raw[8..12].try_into().unwrap());
+    let len = u32::from_le_bytes(raw[12..16].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(perr(format!(
+            "payload length {len} exceeds the {MAX_FRAME_BYTES} byte cap"
+        )));
+    }
+    Ok(Header { kind, req_id, len })
+}
+
+/// Decode one payload against its header `kind`. Strict: unknown
+/// kinds, truncation, overrun, undefined flag bits and trailing bytes
+/// are all typed [`BismoError::Parse`] errors.
+pub fn decode_payload(kind: u16, payload: &[u8]) -> Result<Message, BismoError> {
+    let mut c = Cur::new(payload);
+    let msg = match kind {
+        K_HELLO => Message::Request(Request::Hello {
+            tenant: c.string("tenant name", MAX_TENANT_LEN)?,
+        }),
+        K_MATMUL => Message::Request(Request::Matmul {
+            prec: c.prec()?,
+            backend: c.backend()?,
+            verify: c.flags(1)? != 0,
+            a: c.matrix()?,
+            b: c.matrix()?,
+        }),
+        K_PREPARE => Message::Request(Request::PrepareWeights {
+            bits: u32::from(c.u8()?),
+            signed: c.flags(1)? != 0,
+            weights: c.matrix()?,
+        }),
+        K_MATMUL_PREPARED => Message::Request(Request::MatmulPrepared {
+            weight_id: c.u64()?,
+            prec: c.prec()?,
+            backend: c.backend()?,
+            verify: c.flags(1)? != 0,
+            a: c.matrix()?,
+        }),
+        K_CONV => Message::Request(Request::Conv {
+            spec: c.spec()?,
+            mode: match c.u8()? {
+                0 => LoweringMode::Im2col,
+                1 => LoweringMode::Kn2row,
+                other => return Err(perr(format!("unknown lowering tag {other}"))),
+            },
+            prec: c.prec()?,
+            backend: c.backend()?,
+            verify: c.flags(1)? != 0,
+            weights: c.matrix()?,
+            input: c.tensor()?,
+        }),
+        K_STATS => Message::Request(Request::Stats),
+        K_HELLO_OK => Message::Response(Response::HelloOk {
+            namespace: c.u64()?,
+        }),
+        K_MATMUL_OK => {
+            let flags = c.flags(2)?;
+            Message::Response(Response::MatmulOk {
+                lhs_cached: flags & 1 != 0,
+                rhs_cached: flags & 2 != 0,
+                shards: c.u32()?,
+                total_ns: c.u64()?,
+                result: c.matrix()?,
+            })
+        }
+        K_PREPARE_OK => Message::Response(Response::PrepareOk {
+            weight_id: c.u64()?,
+            resident: c.flags(1)? != 0,
+        }),
+        K_CONV_OK => Message::Response(Response::ConvOk {
+            gemms: c.u32()?,
+            weights_cached: c.flags(1)? != 0,
+            output: c.tensor()?,
+        }),
+        K_STATS_OK => Message::Response(Response::StatsOk(WireStats {
+            cache_hits: c.u64()?,
+            cache_misses: c.u64()?,
+            cache_insertions: c.u64()?,
+            cache_evictions: c.u64()?,
+            cache_entries: c.u64()?,
+            cache_resident_bytes: c.u64()?,
+            in_flight: c.u64()?,
+            shed_total: c.u64()?,
+            served_total: c.u64()?,
+        })),
+        K_ERROR => Message::Response(Response::Error {
+            code: c.u16()?,
+            retry_after_ms: c.u64()?,
+            message: c.string("error message", MAX_FRAME_BYTES)?,
+        }),
+        other => return Err(perr(format!("unknown frame kind {other:#06x}"))),
+    };
+    c.done()?;
+    Ok(msg)
+}
+
+/// Decode one complete frame (header + payload) from a byte slice —
+/// the in-memory path the fuzz harness drives. The streaming reader in
+/// the server/client splits this into [`decode_header`] +
+/// [`decode_payload`] so the length check happens before buffering.
+pub fn decode_frame(raw: &[u8]) -> Result<(u32, Message), BismoError> {
+    if raw.len() < HEADER_BYTES {
+        return Err(perr(format!("frame shorter than a header: {}", raw.len())));
+    }
+    let header: &[u8; HEADER_BYTES] = raw[..HEADER_BYTES].try_into().unwrap();
+    let h = decode_header(header)?;
+    let payload = &raw[HEADER_BYTES..];
+    if payload.len() != h.len {
+        return Err(perr(format!(
+            "header declares {} payload bytes, frame carries {}",
+            h.len,
+            payload.len()
+        )));
+    }
+    Ok((h.req_id, decode_payload(h.kind, payload)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn roundtrip_request(req: &Request) -> Request {
+        let raw = encode_request(7, req).unwrap();
+        let (id, msg) = decode_frame(&raw).unwrap();
+        assert_eq!(id, 7);
+        match msg {
+            Message::Request(r) => r,
+            other => panic!("decoded as {other:?}"),
+        }
+    }
+
+    fn roundtrip_response(resp: &Response) -> Response {
+        let raw = encode_response(9, resp).unwrap();
+        let (id, msg) = decode_frame(&raw).unwrap();
+        assert_eq!(id, 9);
+        match msg {
+            Message::Response(r) => r,
+            other => panic!("decoded as {other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_request_kind_roundtrips() {
+        let mut rng = Rng::new(0x31A);
+        let a = IntMatrix::random(&mut rng, 3, 70, 3, true);
+        let b = IntMatrix::random(&mut rng, 70, 4, 2, false);
+        let spec = ConvSpec::simple(5, 5, 2, 3, 3, 1);
+        let input = Tensor::random(&mut rng, 1, 5, 5, 2, 2, false);
+        let w = spec.weights_from_fn(|_, _, _, _| rng.operand(2, true));
+        let reqs = [
+            Request::Hello {
+                tenant: "tenant-a".into(),
+            },
+            Request::Matmul {
+                prec: Precision::signed(3, 2),
+                backend: Backend::Sim,
+                verify: true,
+                a: a.clone(),
+                b: b.clone(),
+            },
+            Request::PrepareWeights {
+                bits: 2,
+                signed: false,
+                weights: b.clone(),
+            },
+            Request::MatmulPrepared {
+                weight_id: 0xDEAD_BEEF,
+                prec: Precision::unsigned(2, 2),
+                backend: Backend::Engine,
+                verify: false,
+                a: a.clone(),
+            },
+            Request::Conv {
+                spec,
+                mode: LoweringMode::Kn2row,
+                prec: Precision {
+                    wbits: 2,
+                    abits: 2,
+                    lsigned: false,
+                    rsigned: true,
+                },
+                backend: Backend::Engine,
+                verify: false,
+                weights: w,
+                input,
+            },
+            Request::Stats,
+        ];
+        for req in &reqs {
+            assert_eq!(&roundtrip_request(req), req);
+        }
+    }
+
+    #[test]
+    fn every_response_kind_roundtrips() {
+        let mut rng = Rng::new(0x31B);
+        let m = IntMatrix::random(&mut rng, 2, 5, 4, true);
+        let t = Tensor::random(&mut rng, 1, 3, 3, 2, 3, false);
+        let resps = [
+            Response::HelloOk { namespace: 42 },
+            Response::MatmulOk {
+                lhs_cached: false,
+                rhs_cached: true,
+                shards: 4,
+                total_ns: 123_456,
+                result: m,
+            },
+            Response::PrepareOk {
+                weight_id: 7,
+                resident: true,
+            },
+            Response::ConvOk {
+                gemms: 9,
+                weights_cached: false,
+                output: t,
+            },
+            Response::StatsOk(WireStats {
+                cache_hits: 1,
+                cache_misses: 2,
+                cache_insertions: 3,
+                cache_evictions: 4,
+                cache_entries: 5,
+                cache_resident_bytes: 6,
+                in_flight: 7,
+                shed_total: 8,
+                served_total: 9,
+            }),
+            Response::Error {
+                code: 13,
+                retry_after_ms: 25,
+                message: "overloaded: retry after 25 ms".into(),
+            },
+        ];
+        for resp in &resps {
+            assert_eq!(&roundtrip_response(resp), resp);
+        }
+    }
+
+    #[test]
+    fn typed_errors_roundtrip_through_error_frames() {
+        let errs = [
+            BismoError::InvalidConfig("zero workers".into()),
+            BismoError::ShapeMismatch("2x3 · 4x2".into()),
+            BismoError::PrecisionUnsupported("wbits 0".into()),
+            BismoError::CapacityExceeded("quota".into()),
+            BismoError::VerifyFailed("mismatch at (0,0)".into()),
+            BismoError::ServiceShutdown,
+            BismoError::Overloaded { retry_after_ms: 40 },
+        ];
+        for e in errs {
+            let resp = roundtrip_response(&error_frame(&e));
+            let back = resp.to_error().unwrap();
+            assert_eq!(back.kind(), e.kind(), "{e:?}");
+            if let BismoError::Overloaded { retry_after_ms } = back {
+                assert_eq!(retry_after_ms, 40);
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_fail_typed() {
+        let good = encode_request(
+            1,
+            &Request::Matmul {
+                prec: Precision::unsigned(2, 2),
+                backend: Backend::Engine,
+                verify: false,
+                a: IntMatrix::from_slice(1, 2, &[1, 2]),
+                b: IntMatrix::from_slice(2, 1, &[3, 4]),
+            },
+        )
+        .unwrap();
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(
+            decode_frame(&bad),
+            Err(BismoError::Parse(ref m)) if m.contains("magic")
+        ));
+        // Future protocol version.
+        let mut bad = good.clone();
+        bad[4] = 99;
+        assert!(matches!(
+            decode_frame(&bad),
+            Err(BismoError::Parse(ref m)) if m.contains("version")
+        ));
+        // Truncated payload.
+        let bad = &good[..good.len() - 3];
+        assert!(decode_frame(bad).is_err());
+        // Trailing garbage.
+        let mut bad = good.clone();
+        bad.extend_from_slice(&[0, 1, 2]);
+        assert!(decode_frame(&bad).is_err());
+        // Unknown kind.
+        let mut bad = good.clone();
+        bad[6] = 0x77;
+        assert!(matches!(
+            decode_frame(&bad),
+            Err(BismoError::Parse(ref m)) if m.contains("kind")
+        ));
+        // Shorter than a header.
+        assert!(decode_frame(&good[..7]).is_err());
+    }
+
+    #[test]
+    fn hostile_lengths_are_rejected_before_allocation() {
+        // A matmul frame whose matrix header claims u32::MAX × u32::MAX
+        // elements with no backing bytes: must fail Parse, not OOM.
+        let mut e = Enc::new();
+        e.prec(Precision::unsigned(2, 2)).unwrap();
+        e.backend(Backend::Engine);
+        e.u8(0);
+        e.u32(u32::MAX);
+        e.u32(u32::MAX);
+        let raw = frame(K_MATMUL, 1, e.buf).unwrap();
+        let err = decode_frame(&raw).unwrap_err();
+        assert!(matches!(err, BismoError::Parse(_)), "{err:?}");
+        // Header payload length beyond the cap is rejected at the
+        // header, before any payload byte is consumed.
+        let mut hdr = [0u8; HEADER_BYTES];
+        hdr[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+        hdr[4..6].copy_from_slice(&VERSION.to_le_bytes());
+        hdr[6..8].copy_from_slice(&K_STATS.to_le_bytes());
+        hdr[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_header(&hdr),
+            Err(BismoError::Parse(ref m)) if m.contains("cap")
+        ));
+    }
+
+    #[test]
+    fn oversized_tenant_name_is_rejected() {
+        let raw = encode_request(
+            0,
+            &Request::Hello {
+                tenant: "x".repeat(MAX_TENANT_LEN + 1),
+            },
+        )
+        .unwrap();
+        assert!(matches!(
+            decode_frame(&raw),
+            Err(BismoError::Parse(ref m)) if m.contains("cap")
+        ));
+    }
+}

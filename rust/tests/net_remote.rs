@@ -1,0 +1,347 @@
+//! End-to-end tests of the network serving front door: real TCP
+//! sockets against a [`NetServer`], proving bit-exactness, tenant
+//! isolation, typed load shedding, prepared-weight replay and frame
+//! robustness under garbage input.
+
+use bismo::api::BismoError;
+use bismo::arch::BismoConfig;
+use bismo::bitmatrix::IntMatrix;
+use bismo::coordinator::{Backend, Precision};
+use bismo::lowering::{conv2d_direct, ConvSpec, LoweringMode, Tensor};
+use bismo::net::{NetClient, NetServer, ServeConfig};
+use bismo::util::Rng;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+fn small_server(cfg_mut: impl FnOnce(&mut ServeConfig)) -> NetServer {
+    let mut cfg = ServeConfig::default();
+    cfg.session.overlay = BismoConfig::small();
+    cfg.session.workers = 2;
+    cfg_mut(&mut cfg);
+    NetServer::bind("127.0.0.1:0", cfg).unwrap()
+}
+
+#[test]
+fn remote_matmul_is_bit_exact_on_both_backends() {
+    let server = small_server(|_| {});
+    let addr = server.local_addr();
+    let mut cli = NetClient::connect(addr, "exactness").unwrap();
+    let mut rng = Rng::new(0x7C9);
+    for (i, backend) in [Backend::Engine, Backend::Sim, Backend::Engine, Backend::Sim]
+        .into_iter()
+        .enumerate()
+    {
+        let k = rng.index(200) + 1;
+        let prec = Precision {
+            wbits: rng.index(3) as u32 + 1,
+            abits: rng.index(3) as u32 + 1,
+            lsigned: true,
+            rsigned: false,
+        };
+        let a = IntMatrix::random(&mut rng, 3 + i, k, prec.wbits, true);
+        let b = IntMatrix::random(&mut rng, k, 4, prec.abits, false);
+        let r = cli.matmul(&a, &b, prec, backend, true).unwrap();
+        assert_eq!(r.result, a.matmul(&b), "case {i} vs i64 oracle");
+        assert!(r.shards >= 1);
+    }
+    assert_eq!(server.served_total(), 4);
+    assert_eq!(server.shed_total(), 0);
+}
+
+#[test]
+fn tenants_cannot_hit_each_others_cached_weights() {
+    let server = small_server(|_| {});
+    let addr = server.local_addr();
+    let mut alice = NetClient::connect(addr, "alice").unwrap();
+    let mut bob = NetClient::connect(addr, "bob").unwrap();
+    assert_ne!(alice.namespace(), bob.namespace());
+
+    let mut rng = Rng::new(0x15_01A7E);
+    let prec = Precision::unsigned(2, 3);
+    let w = IntMatrix::random(&mut rng, 96, 4, 3, false);
+    let a1 = IntMatrix::random(&mut rng, 2, 96, 2, false);
+    let a2 = IntMatrix::random(&mut rng, 2, 96, 2, false);
+
+    // Alice warms her namespace, then hits on the second call.
+    let first = alice.matmul(&a1, &w, prec, Backend::Engine, false).unwrap();
+    assert!(!first.rhs_cached, "first sight of these weights");
+    let again = alice.matmul(&a2, &w, prec, Backend::Engine, false).unwrap();
+    assert!(again.rhs_cached, "alice's second call hits her entry");
+
+    let misses_before = alice.stats().unwrap().cache_misses;
+    // Bob sends bit-identical weights: a shared-content cache would
+    // hit; the namespaced cache must miss and repack.
+    let bobs = bob.matmul(&a1, &w, prec, Backend::Engine, false).unwrap();
+    assert!(!bobs.rhs_cached, "bob cannot reuse alice's packing");
+    let misses_after = bob.stats().unwrap().cache_misses;
+    assert!(
+        misses_after > misses_before,
+        "bob's identical weights were a real cache miss ({misses_before} -> {misses_after})"
+    );
+    assert_eq!(bobs.result, a1.matmul(&w), "isolation does not cost correctness");
+
+    // A reconnect under the same name resolves to the same namespace,
+    // so alice's cache entries outlive her connection.
+    drop(alice);
+    let mut alice2 = NetClient::connect(addr, "alice").unwrap();
+    assert_eq!(alice2.namespace(), 1);
+    let back = alice2.matmul(&a1, &w, prec, Backend::Engine, false).unwrap();
+    assert!(back.rhs_cached, "same tenant name, same namespace, warm cache");
+}
+
+#[test]
+fn prepared_weights_replay_and_stay_private() {
+    let server = small_server(|_| {});
+    let addr = server.local_addr();
+    let mut alice = NetClient::connect(addr, "alice").unwrap();
+    let mut bob = NetClient::connect(addr, "bob").unwrap();
+
+    let mut rng = Rng::new(0xBEEF);
+    let w = IntMatrix::random(&mut rng, 128, 5, 3, true);
+    let a = IntMatrix::random(&mut rng, 4, 128, 2, false);
+    let prec = Precision {
+        wbits: 2,
+        abits: 3,
+        lsigned: false,
+        rsigned: true,
+    };
+
+    let prepared = alice.prepare_weights(&w, 3, true).unwrap();
+    let r = alice
+        .matmul_prepared(prepared, &a, prec, Backend::Engine, true)
+        .unwrap();
+    assert_eq!(r.result, a.matmul(&w));
+    assert!(r.rhs_cached, "prepared weights are resident at replay");
+
+    // Bob guessing alice's weight id must look exactly like a missing
+    // id — no cross-tenant probing.
+    let stolen = bob.matmul_prepared(prepared, &a, prec, Backend::Engine, false);
+    assert!(
+        matches!(stolen, Err(BismoError::InvalidConfig(_))),
+        "foreign weight id must be rejected, got {stolen:?}"
+    );
+
+    // A precision mismatch against the upload is typed, not silent.
+    let bad = alice.matmul_prepared(
+        prepared,
+        &a,
+        Precision {
+            wbits: 2,
+            abits: 2,
+            lsigned: false,
+            rsigned: true,
+        },
+        Backend::Engine,
+        false,
+    );
+    assert!(matches!(bad, Err(BismoError::PrecisionUnsupported(_))));
+}
+
+#[test]
+fn weight_quota_is_enforced_per_tenant() {
+    // ~10 KiB quota: the first small upload fits, the second overflows.
+    let server = small_server(|cfg| cfg.tenant_max_weight_bytes = 10 << 10);
+    let addr = server.local_addr();
+    let mut cli = NetClient::connect(addr, "hoarder").unwrap();
+    let mut rng = Rng::new(3);
+    let w = IntMatrix::random(&mut rng, 128, 8, 2, false); // 8 KiB dense
+    cli.prepare_weights(&w, 2, false).unwrap();
+    let over = cli.prepare_weights(&w, 2, false);
+    assert!(
+        matches!(over, Err(BismoError::CapacityExceeded(_))),
+        "quota overflow must be typed, got {over:?}"
+    );
+    // Another tenant's quota is untouched.
+    let mut other = NetClient::connect(addr, "frugal").unwrap();
+    other.prepare_weights(&w, 2, false).unwrap();
+}
+
+#[test]
+fn saturated_admission_queue_sheds_with_typed_overloaded() {
+    // One admission slot total; several clients race closed-loop. The
+    // losers must get typed Overloaded with a backoff hint — never a
+    // hang, a panic or a dropped connection.
+    let server = small_server(|cfg| {
+        cfg.max_in_flight = 1;
+        cfg.tenant_max_in_flight = 1;
+    });
+    let addr = server.local_addr();
+    let shed_seen = std::sync::atomic::AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for t in 0..4u64 {
+            let shed_seen = &shed_seen;
+            scope.spawn(move || {
+                let mut cli = NetClient::connect(addr, &format!("t{t}")).unwrap();
+                let mut rng = Rng::new(t);
+                let a = IntMatrix::random(&mut rng, 8, 256, 2, false);
+                let b = IntMatrix::random(&mut rng, 256, 8, 2, false);
+                let prec = Precision::unsigned(2, 2);
+                let mut done = 0;
+                while done < 3 {
+                    // The sim backend is slow enough to hold the slot.
+                    match cli.matmul(&a, &b, prec, Backend::Sim, false) {
+                        Ok(r) => {
+                            assert_eq!(r.result, a.matmul(&b));
+                            done += 1;
+                        }
+                        Err(BismoError::Overloaded { retry_after_ms }) => {
+                            assert!(retry_after_ms > 0, "hint must be actionable");
+                            shed_seen.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            std::thread::sleep(std::time::Duration::from_millis(
+                                retry_after_ms.min(10),
+                            ));
+                        }
+                        Err(e) => panic!("unexpected error under saturation: {e}"),
+                    }
+                }
+            });
+        }
+    });
+    let shed = shed_seen.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(
+        shed > 0,
+        "4 clients racing 1 slot must shed at least once (got {shed})"
+    );
+    assert_eq!(server.shed_total(), shed, "server counted every shed");
+    assert_eq!(server.served_total(), 12, "every request eventually served");
+}
+
+#[test]
+fn corrupt_frames_never_take_the_server_down() {
+    let server = small_server(|_| {});
+    let addr = server.local_addr();
+
+    // A volley of hostile byte streams straight at the socket.
+    let payloads: Vec<Vec<u8>> = vec![
+        b"GET / HTTP/1.1\r\n\r\n".to_vec(),
+        vec![0u8; 64],
+        vec![0xFF; 256],
+        // Valid magic+version, absurd declared length.
+        {
+            let mut v = 0x4F4D_5342u32.to_le_bytes().to_vec();
+            v.extend(1u16.to_le_bytes());
+            v.extend(0x02u16.to_le_bytes());
+            v.extend(7u32.to_le_bytes());
+            v.extend(u32::MAX.to_le_bytes());
+            v
+        },
+        // Valid header, truncated payload then EOF.
+        {
+            let mut v = 0x4F4D_5342u32.to_le_bytes().to_vec();
+            v.extend(1u16.to_le_bytes());
+            v.extend(0x02u16.to_le_bytes());
+            v.extend(8u32.to_le_bytes());
+            v.extend(1024u32.to_le_bytes());
+            v.extend([0xAB; 10]);
+            v
+        },
+    ];
+    for (i, p) in payloads.iter().enumerate() {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(p).unwrap();
+        let _ = s.flush();
+        // The server either answers an error frame or closes; it must
+        // never hang us forever.
+        s.set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        let mut buf = [0u8; 256];
+        let _ = s.read(&mut buf); // Err/0 both fine — just not a hang.
+        drop(s);
+        // After every corpse the server still serves real clients.
+        let mut cli = NetClient::connect(addr, "survivor").unwrap();
+        let mut rng = Rng::new(i as u64);
+        let a = IntMatrix::random(&mut rng, 2, 64, 2, false);
+        let b = IntMatrix::random(&mut rng, 64, 2, 2, false);
+        let r = cli
+            .matmul(&a, &b, Precision::unsigned(2, 2), Backend::Engine, false)
+            .unwrap();
+        assert_eq!(r.result, a.matmul(&b), "server healthy after corpse {i}");
+    }
+}
+
+#[test]
+fn work_before_hello_is_rejected_typed() {
+    use bismo::net::wire::{self, Message, Request};
+    let server = small_server(|_| {});
+    let mut s = TcpStream::connect(server.local_addr()).unwrap();
+    // Hand-roll a matmul request with no Hello first; the server must
+    // answer a typed error frame, not execute it or hang.
+    let mut rng = Rng::new(4);
+    let a = IntMatrix::random(&mut rng, 2, 32, 1, false);
+    let b = IntMatrix::random(&mut rng, 32, 2, 1, false);
+    let raw = wire::encode_request(
+        9,
+        &Request::Matmul {
+            prec: Precision::unsigned(1, 1),
+            backend: Backend::Engine,
+            verify: false,
+            a,
+            b,
+        },
+    )
+    .unwrap();
+    s.write_all(&raw).unwrap();
+    s.flush().unwrap();
+    let mut hdr = [0u8; wire::HEADER_BYTES];
+    s.read_exact(&mut hdr).unwrap();
+    let header = wire::decode_header(&hdr).unwrap();
+    assert_eq!(header.req_id, 9, "error frame echoes the request id");
+    let mut payload = vec![0u8; header.len];
+    s.read_exact(&mut payload).unwrap();
+    let resp = match wire::decode_payload(header.kind, &payload).unwrap() {
+        Message::Response(r) => r,
+        Message::Request(_) => panic!("server sent a request frame"),
+    };
+    let err = resp.to_error().expect("must be an error frame");
+    assert!(
+        matches!(err, BismoError::IllegalProgram(_)),
+        "work before Hello must be IllegalProgram, got {err:?}"
+    );
+}
+
+#[test]
+fn conv_over_the_wire_matches_direct_convolution() {
+    let server = small_server(|_| {});
+    let mut cli = NetClient::connect(server.local_addr(), "convnet").unwrap();
+    let mut rng = Rng::new(0xC0147);
+    let spec = ConvSpec::simple(6, 6, 3, 4, 3, 1);
+    let input = Tensor::random(&mut rng, 2, 6, 6, 3, 2, false);
+    let weights = spec.weights_from_fn(|_, _, _, _| rng.operand(2, true));
+    let prec = Precision {
+        wbits: 2,
+        abits: 2,
+        lsigned: false,
+        rsigned: true,
+    };
+    for (mode, gemms) in [(LoweringMode::Im2col, 1u32), (LoweringMode::Kn2row, 9u32)] {
+        let r = cli
+            .conv(spec, mode, &input, &weights, prec, Backend::Engine, true)
+            .unwrap();
+        assert_eq!(r.gemms, gemms, "{mode:?} lowering shape");
+        assert_eq!(
+            r.output,
+            conv2d_direct(&input, &weights, &spec),
+            "{mode:?} over the wire vs direct oracle"
+        );
+    }
+}
+
+#[test]
+fn graceful_shutdown_drains_and_refuses_new_connections() {
+    let mut server = small_server(|_| {});
+    let addr = server.local_addr();
+    let mut cli = NetClient::connect(addr, "drainee").unwrap();
+    let mut rng = Rng::new(9);
+    let a = IntMatrix::random(&mut rng, 2, 64, 2, false);
+    let b = IntMatrix::random(&mut rng, 64, 2, 2, false);
+    cli.matmul(&a, &b, Precision::unsigned(2, 2), Backend::Engine, false)
+        .unwrap();
+    server.shutdown();
+    // Post-drain the port no longer accepts (the listener is gone), or
+    // an accepted-then-dropped connection errors out immediately.
+    let late = NetClient::connect(addr, "late");
+    assert!(late.is_err() || {
+        let mut c = late.unwrap();
+        c.stats().is_err()
+    });
+}
