@@ -24,7 +24,7 @@ fn main() {
         ys.push(r.luts);
     }
     table.print();
-    let (slope, icept) = linear_fit(&xs, &ys);
+    let (slope, icept) = linear_fit(&xs, &ys).expect("width sweep is well-conditioned");
     println!(
         "least-squares: LUTs = {slope:.3}·width + {icept:.1}   (paper: ~1 LUT/bit)"
     );

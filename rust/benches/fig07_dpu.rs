@@ -29,7 +29,7 @@ fn main() {
         ys.push(r.luts);
     }
     table.print();
-    let (alpha, beta) = linear_fit(&xs, &ys);
+    let (alpha, beta) = linear_fit(&xs, &ys).expect("D_k sweep is well-conditioned");
     println!("fitted: LUT_DPU = {alpha:.2}·D_k + {beta:.1}   (paper: 2.04·D_k + 109.41)");
     println!("paper: 2.8 LUT/op @ D_k=32 -> 1.07 @ D_k=1024; Fmax 300–350 MHz");
     let path = csv.finish().expect("csv");

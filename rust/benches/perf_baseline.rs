@@ -39,7 +39,7 @@ fn main() {
         );
         // The tiled engine on the same operands, for context (the full
         // sweep lives in perf_kernel / `bismo bench`).
-        let s = t.run(|| gemm_tiled(&la, &rb));
+        let s = t.run(|| gemm_tiled(&la, &rb).unwrap());
         report(
             &format!("tiled_kernel_{m}x{k}x{n}_w{w}a{a}_1t"),
             &s,

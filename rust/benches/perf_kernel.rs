@@ -27,7 +27,7 @@ fn main() {
         let bm = IntMatrix::random(&mut rng, k, n, a, false);
         let la = BitSerialMatrix::from_int(&am, w, false);
         let rb = BitSerialMatrix::from_int_transposed(&bm, a, false);
-        assert_eq!(gemm_tiled(&la, &rb), gemm_bitserial(&la, &rb));
+        assert_eq!(gemm_tiled(&la, &rb).unwrap(), gemm_bitserial(&la, &rb));
         let ops = binary_ops(m as u64, k as u64, n as u64, w, a) as f64;
         let t = BenchTimer::heavy();
 
@@ -38,7 +38,7 @@ fn main() {
             &s,
             Some((ops, "binop")),
         );
-        let s = t.run(|| gemm_tiled(&la, &rb));
+        let s = t.run(|| gemm_tiled(&la, &rb).unwrap());
         report(
             &format!("tiled_{m}x{k}x{n}_w{w}a{a}_1t"),
             &s,
@@ -55,6 +55,7 @@ fn main() {
                 &KernelConfig::default(),
                 Some((WorkerPool::global(), threads)),
             )
+            .unwrap()
         });
         report(
             &format!("tiled_{m}x{k}x{n}_w{w}a{a}_{threads}t"),
@@ -72,12 +73,12 @@ fn main() {
     let bm = IntMatrix::from_fn(k, n, |r, c| ((r * c) % 2) as i64); // only LSB populated
     let la = BitSerialMatrix::from_int(&am, 6, false);
     let rb = BitSerialMatrix::from_int_transposed(&bm, 6, false);
-    assert_eq!(gemm_tiled(&la, &rb), gemm_bitserial(&la, &rb));
+    assert_eq!(gemm_tiled(&la, &rb).unwrap(), gemm_bitserial(&la, &rb));
     let t = BenchTimer::heavy();
     let s = t.run(|| gemm_bitserial(&la, &rb));
     let base_ns = s.median();
     report("baseline_sparse_128x2048x128_w6a6", &s, None);
-    let s = t.run(|| gemm_tiled(&la, &rb));
+    let s = t.run(|| gemm_tiled(&la, &rb).unwrap());
     report("tiled_sparse_128x2048x128_w6a6", &s, None);
     println!(
         "  -> zero-plane skip speedup {:.2}x (w6a6 with 4+5 empty planes)",
@@ -93,15 +94,16 @@ fn main() {
         let cfg = KernelConfig {
             tile_m: tm,
             tile_n: tn,
+            ..KernelConfig::default()
         };
-        let s = t.run(|| gemm_tiled_with(&la, &rb, &cfg, None));
+        let s = t.run(|| gemm_tiled_with(&la, &rb, &cfg, None).unwrap());
         report(&format!("tiled_256x2048x256_w8a8_tile{tm}x{tn}"), &s, None);
     }
 
     // Shard scaling on the headline shape: the partition layer splits
     // the output and every shard runs as one pool lane — the engine
     // half of `bismo shard-bench`, without the serving layer around it.
-    let expect = gemm_tiled(&la, &rb);
+    let expect = gemm_tiled(&la, &rb).unwrap();
     let ops = binary_ops(256, 2048, 256, 8, 8) as f64;
     let mut single_ns = 0.0;
     for shards in [1usize, 2, 4, 8] {
@@ -122,7 +124,8 @@ fn main() {
                         s.planes.clone(),
                         &kcfg,
                         None,
-                    );
+                    )
+                    .unwrap();
                     *slots[i].lock().unwrap() = Some(part);
                 });
                 slots

@@ -56,6 +56,7 @@ pub use session::{MatmulBuilder, Prepared, Session, SessionConfig};
 pub use crate::coordinator::{
     Backend, CacheStats, GemmResponse, Precision, RequestHandle, RunReport, Sharding,
 };
-pub use crate::costmodel::ResourceBudget;
+pub use crate::costmodel::{ResourceBudget, TunedProfile};
+pub use crate::kernel::KernelConfig;
 pub use crate::lowering::{ConvSpec, LoweringMode, Tensor};
 pub use crate::scheduler::Overlap;

@@ -6,7 +6,8 @@ use crate::coordinator::{
     Backend, BismoService, CacheStats, GemmRequest, GemmResponse, Precision, RequestHandle,
     RequestOptions, ServiceConfig, Sharding,
 };
-use crate::costmodel::ResourceBudget;
+use crate::costmodel::{ResourceBudget, TunedProfile};
+use crate::kernel::KernelConfig;
 use crate::scheduler::Overlap;
 use std::sync::Arc;
 
@@ -36,6 +37,26 @@ impl Session {
         Ok(Session {
             svc: BismoService::new(cfg)?,
         })
+    }
+
+    /// Start a session with an explicit tuned profile (or `None` to
+    /// force the analytical defaults), bypassing the on-disk lookup
+    /// that [`Session::new`] performs. Tests and benchmark harnesses
+    /// use this to pin behavior regardless of the host's profile
+    /// directory.
+    pub fn with_profile(
+        cfg: SessionConfig,
+        tuned: Option<TunedProfile>,
+    ) -> Result<Session, BismoError> {
+        Ok(Session {
+            svc: BismoService::with_profile(cfg, tuned)?,
+        })
+    }
+
+    /// The tuned profile this session loaded at startup, if any.
+    /// `None` means every job runs on the analytical defaults.
+    pub fn tuned_profile(&self) -> Option<&TunedProfile> {
+        self.svc.tuned_profile()
     }
 
     /// A session with the default topology (4 workers, 64 MiB cache,
@@ -237,6 +258,15 @@ impl<'s> MatmulBuilder<'s> {
         self
     }
 
+    /// Pin the engine's tile geometry for this builder's jobs,
+    /// overriding both the built-in default and any tuned-profile
+    /// selection. Degenerate tiles (any dimension zero) are rejected
+    /// by [`MatmulBuilder::build`]. Sim-backend jobs ignore this.
+    pub fn tile(mut self, cfg: KernelConfig) -> Self {
+        self.opts.kernel = Some(cfg);
+        self
+    }
+
     /// The builder's precision.
     pub fn precision(&self) -> Precision {
         self.prec
@@ -246,7 +276,7 @@ impl<'s> MatmulBuilder<'s> {
     /// "build" step. `run`/`submit`/`prepare` all call this first.
     pub fn build(&self) -> Result<(), BismoError> {
         self.prec.validate()?;
-        self.opts.sharding.validate()
+        self.opts.validate()
     }
 
     /// Run one job synchronously.

@@ -54,6 +54,7 @@ use crate::api::BismoError;
 use crate::arch::{BismoConfig, Platform};
 use crate::baseline::gemm_bitserial;
 use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
+use crate::costmodel::tune::{load_host_profile, TunedProfile};
 use crate::costmodel::{select_sharding, CostModel, ResourceBudget};
 use crate::kernel::{gemm_tiled_block, gemm_tiled_with, KernelConfig, WorkerPool};
 use crate::partition::{GemmShape, Shard, ShardPlan};
@@ -173,7 +174,7 @@ impl ExecBackend for EngineBackend {
         // Single-lane inside the request: the micro-batch already runs
         // `workers` requests concurrently on the pool, so per-request
         // parallelism would only oversubscribe it.
-        Ok((gemm_tiled_with(la, rb, &self.kernel, None), None))
+        Ok((gemm_tiled_with(la, rb, &self.kernel, None)?, None))
     }
 
     fn execute_block(
@@ -196,7 +197,7 @@ impl ExecBackend for EngineBackend {
                 shard.planes.clone(),
                 &self.kernel,
                 None,
-            ),
+            )?,
             None,
         ))
     }
@@ -309,6 +310,25 @@ pub struct RequestOptions {
     /// nonzero namespace so tenants share the cache's byte budget but
     /// can never hit each other's packed operands.
     pub cache_namespace: u64,
+    /// Explicit engine tile geometry for this request. `None` — the
+    /// default — selects from the service's loaded [`TunedProfile`]
+    /// (by the request's [`crate::costmodel::ShapeClass`]), falling
+    /// back to [`KernelConfig::default`] when nothing is tuned. The
+    /// sim backend ignores it (its tiling is the overlay's `D_m×D_n`).
+    pub kernel: Option<KernelConfig>,
+}
+
+impl RequestOptions {
+    /// Reject degenerate options before anything is queued: sharding
+    /// parameters and — now that tile geometry is user-reachable — the
+    /// explicit kernel config, if any.
+    pub fn validate(&self) -> Result<(), BismoError> {
+        self.sharding.validate()?;
+        if let Some(kernel) = &self.kernel {
+            kernel.validate()?;
+        }
+        Ok(())
+    }
 }
 
 impl Default for RequestOptions {
@@ -323,6 +343,7 @@ impl Default for RequestOptions {
             sharding: Sharding::Single,
             max_instrs: None,
             cache_namespace: 0,
+            kernel: None,
         }
     }
 }
@@ -471,7 +492,13 @@ impl Default for ServiceConfig {
 
 struct Inner {
     cfg: ServiceConfig,
-    engine: EngineBackend,
+    /// This host's tuned profile, if one was loaded at startup — the
+    /// source of per-shape-class tile picks and the measured cost
+    /// model. `None` = analytical defaults throughout.
+    tuned: Option<TunedProfile>,
+    /// What `Sharding::Auto` scores candidates with: the tuned
+    /// profile's measured-constant model, or [`CostModel::paper`].
+    cost_model: CostModel,
     sim: SimBackend,
     queue: Mutex<VecDeque<Pending>>,
     queue_cv: Condvar,
@@ -533,9 +560,23 @@ pub struct BismoService {
 }
 
 impl BismoService {
-    /// Start the service: validates the overlay configuration and
-    /// spawns the dispatcher thread.
+    /// Start the service: validates the overlay configuration, loads
+    /// this host's [`TunedProfile`] if one exists (see
+    /// [`load_host_profile`] — any missing/corrupt/mismatched profile
+    /// silently falls back to analytical defaults), and spawns the
+    /// dispatcher thread.
     pub fn new(cfg: ServiceConfig) -> Result<BismoService, BismoError> {
+        Self::with_profile(cfg, load_host_profile())
+    }
+
+    /// [`BismoService::new`] with an explicit tuned profile (or an
+    /// explicit `None` for pure analytical defaults) instead of the
+    /// host-profile lookup — the deterministic entry point for tests
+    /// and for callers managing profiles themselves.
+    pub fn with_profile(
+        cfg: ServiceConfig,
+        tuned: Option<TunedProfile>,
+    ) -> Result<BismoService, BismoError> {
         if cfg.workers == 0 || cfg.max_batch == 0 {
             return Err(BismoError::InvalidConfig(
                 "service workers and max_batch must be >= 1".into(),
@@ -545,8 +586,13 @@ impl BismoService {
         // BISMO_SIMD override surfaces as a typed error instead of a
         // panic on the first kernel call.
         crate::simd::DispatchTier::resolve()?;
+        let cost_model = tuned
+            .as_ref()
+            .map(|t| t.cost_model)
+            .unwrap_or_else(CostModel::paper);
         let inner = Arc::new(Inner {
-            engine: EngineBackend::default(),
+            tuned,
+            cost_model,
             sim: SimBackend::new(cfg.overlay)?,
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
@@ -735,6 +781,12 @@ impl BismoService {
     pub fn queue_depth(&self) -> usize {
         self.inner.queue.lock().unwrap().len()
     }
+
+    /// The tuned profile this service loaded at startup, if any —
+    /// `None` means every request runs on analytical defaults.
+    pub fn tuned_profile(&self) -> Option<&TunedProfile> {
+        self.inner.tuned.as_ref()
+    }
 }
 
 impl Drop for BismoService {
@@ -761,7 +813,7 @@ fn validate(req: &GemmRequest) -> Result<(), BismoError> {
             req.a.rows, req.a.cols, req.b.rows, req.b.cols
         )));
     }
-    req.opts.sharding.validate()?;
+    req.opts.validate()?;
     req.prec.validate()
 }
 
@@ -780,7 +832,7 @@ fn validate_lowered(
             la.rows, la.cols, b.rows, b.cols
         )));
     }
-    opts.sharding.validate()?;
+    opts.validate()?;
     prec.validate()?;
     if la.bits != prec.wbits || la.signed != prec.lsigned {
         return Err(BismoError::PrecisionUnsupported(format!(
@@ -849,7 +901,17 @@ impl Inner {
             k: packed.la.cols,
             n: packed.rb.rows,
         };
-        let resolved = resolve_sharding(&p.opts.sharding, &shape)?;
+        let resolved = resolve_sharding(&p.opts.sharding, &shape, &self.cost_model)?;
+        // Tile geometry: the request's explicit pick wins, else the
+        // tuned profile's entry for this shape's class, else the
+        // analytical default. The backend is per-request and cheap
+        // (a `Copy` config) — mirroring the auto_sim pattern below.
+        let kernel = p
+            .opts
+            .kernel
+            .or_else(|| self.tuned.as_ref().and_then(|t| t.tile_for(&shape)))
+            .unwrap_or_default();
+        let engine = EngineBackend { kernel };
         // For the cost-model-driven path on the sim backend, execution
         // runs on instances of the *selected* configuration (validated
         // against the budget the caller named) — also when the
@@ -861,7 +923,7 @@ impl Inner {
             _ => None,
         };
         let backend: &dyn ExecBackend = match p.opts.backend {
-            Backend::Engine => &self.engine,
+            Backend::Engine => &engine,
             Backend::Sim => auto_sim
                 .as_ref()
                 .map(|b| b as &dyn ExecBackend)
@@ -1014,7 +1076,11 @@ struct ResolvedSharding {
     auto: Option<(BismoConfig, ResourceBudget)>,
 }
 
-fn resolve_sharding(s: &Sharding, shape: &GemmShape) -> Result<ResolvedSharding, BismoError> {
+fn resolve_sharding(
+    s: &Sharding,
+    shape: &GemmShape,
+    model: &CostModel,
+) -> Result<ResolvedSharding, BismoError> {
     Ok(match *s {
         Sharding::Single => ResolvedSharding {
             plan: ShardPlan::single(shape.m, shape.n),
@@ -1029,7 +1095,9 @@ fn resolve_sharding(s: &Sharding, shape: &GemmShape) -> Result<ResolvedSharding,
             auto: None,
         },
         Sharding::Auto(budget) => {
-            let choice = select_sharding(&CostModel::paper(), shape, budget)?;
+            // The model is the tuned profile's measured-constant fit
+            // when one is loaded, the paper constants otherwise.
+            let choice = select_sharding(model, shape, budget)?;
             ResolvedSharding {
                 plan: ShardPlan::grid(shape.m, shape.n, choice.grid.0, choice.grid.1),
                 auto: Some((choice.config, budget)),

@@ -1,15 +1,57 @@
 //! Linear least squares via normal equations + Gaussian elimination.
-//! Used to fit the cost-model constants (paper §IV-A) and the power
-//! model (Table V).
+//! Used to fit the cost-model constants (paper §IV-A), the power
+//! model (Table V) and the autotuner's measured software cost fit
+//! (`costmodel::tune`).
+//!
+//! Degenerate inputs — empty systems, ragged rows, under-determined
+//! systems, non-finite samples, collinear features — are typed
+//! [`BismoError::InvalidConfig`] errors, never panics and never
+//! silently-garbage coefficients: the autotuner persists whatever this
+//! module returns, so a bad fit must be impossible to save.
+
+use crate::api::BismoError;
 
 /// Solve `min ‖X·β − y‖²` for β. `xs[i]` is the feature row of sample
 /// `i` (include a constant-1 column for an intercept).
-pub fn least_squares(xs: &[Vec<f64>], ys: &[f64]) -> Vec<f64> {
-    assert_eq!(xs.len(), ys.len());
-    assert!(!xs.is_empty());
+///
+/// Errs with [`BismoError::InvalidConfig`] when the system is empty,
+/// ragged, under-determined (fewer samples than features), contains a
+/// non-finite value, or is singular (collinear features).
+pub fn least_squares(xs: &[Vec<f64>], ys: &[f64]) -> Result<Vec<f64>, BismoError> {
+    if xs.len() != ys.len() {
+        return Err(BismoError::InvalidConfig(format!(
+            "least squares: {} feature rows vs {} observations",
+            xs.len(),
+            ys.len()
+        )));
+    }
+    if xs.is_empty() {
+        return Err(BismoError::InvalidConfig(
+            "least squares: no samples".into(),
+        ));
+    }
     let p = xs[0].len();
-    assert!(xs.iter().all(|r| r.len() == p), "ragged feature rows");
-    assert!(xs.len() >= p, "need at least as many samples as features");
+    if p == 0 {
+        return Err(BismoError::InvalidConfig(
+            "least squares: zero-width feature rows".into(),
+        ));
+    }
+    if !xs.iter().all(|r| r.len() == p) {
+        return Err(BismoError::InvalidConfig(
+            "least squares: ragged feature rows".into(),
+        ));
+    }
+    if xs.len() < p {
+        return Err(BismoError::InvalidConfig(format!(
+            "least squares: under-determined system ({} samples < {p} features)",
+            xs.len()
+        )));
+    }
+    if xs.iter().flatten().any(|v| !v.is_finite()) || ys.iter().any(|v| !v.is_finite()) {
+        return Err(BismoError::InvalidConfig(
+            "least squares: non-finite sample (NaN/inf)".into(),
+        ));
+    }
 
     // Normal equations: (XᵀX) β = Xᵀy.
     let mut a = vec![vec![0.0; p]; p];
@@ -25,21 +67,25 @@ pub fn least_squares(xs: &[Vec<f64>], ys: &[f64]) -> Vec<f64> {
     solve(a, b)
 }
 
-/// Gaussian elimination with partial pivoting.
-fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+/// Gaussian elimination with partial pivoting. Inputs are finite by
+/// the time this runs (checked in [`least_squares`]), so the only
+/// remaining failure is a singular pivot.
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Result<Vec<f64>, BismoError> {
     let n = b.len();
     for col in 0..n {
-        // Pivot.
+        // Pivot. Finite inputs make the total_cmp/partial_cmp question
+        // moot, but total_cmp keeps this panic-free by construction.
         let piv = (col..n)
-            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))
             .unwrap();
         a.swap(col, piv);
         b.swap(col, piv);
         let d = a[col][col];
-        assert!(
-            d.abs() > 1e-12,
-            "singular system (collinear features) at column {col}"
-        );
+        if d.abs() <= 1e-12 {
+            return Err(BismoError::InvalidConfig(format!(
+                "least squares: singular system (collinear features) at column {col}"
+            )));
+        }
         for r in (col + 1)..n {
             let f = a[r][col] / d;
             for c in col..n {
@@ -56,14 +102,17 @@ fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
         }
         x[r] = s / a[r][r];
     }
-    x
+    Ok(x)
 }
 
-/// Convenience: fit `y = slope·x + intercept`. Returns (slope, intercept).
-pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+/// Convenience: fit `y = slope·x + intercept`. Returns
+/// `(slope, intercept)`, or the same typed errors as
+/// [`least_squares`] (identical xs are collinear with the intercept
+/// column and reported as singular).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> Result<(f64, f64), BismoError> {
     let rows: Vec<Vec<f64>> = xs.iter().map(|&x| vec![x, 1.0]).collect();
-    let beta = least_squares(&rows, ys);
-    (beta[0], beta[1])
+    let beta = least_squares(&rows, ys)?;
+    Ok((beta[0], beta[1]))
 }
 
 #[cfg(test)]
@@ -74,7 +123,7 @@ mod tests {
     fn exact_line_recovered() {
         let xs = [1.0, 2.0, 3.0, 4.0];
         let ys: Vec<f64> = xs.iter().map(|x| 2.5 * x - 1.0).collect();
-        let (m, c) = linear_fit(&xs, &ys);
+        let (m, c) = linear_fit(&xs, &ys).unwrap();
         assert!((m - 2.5).abs() < 1e-9);
         assert!((c + 1.0).abs() < 1e-9);
     }
@@ -87,7 +136,7 @@ mod tests {
             .enumerate()
             .map(|(i, x)| 3.0 * x + 10.0 + if i % 2 == 0 { 0.5 } else { -0.5 })
             .collect();
-        let (m, c) = linear_fit(&xs, &ys);
+        let (m, c) = linear_fit(&xs, &ys).unwrap();
         assert!((m - 3.0).abs() < 0.01);
         assert!((c - 10.0).abs() < 0.6);
     }
@@ -103,17 +152,67 @@ mod tests {
                 ys.push(2.0 * a as f64 + 3.0 * b as f64 + 5.0);
             }
         }
-        let beta = least_squares(&xs, &ys);
+        let beta = least_squares(&xs, &ys).unwrap();
         assert!((beta[0] - 2.0).abs() < 1e-9);
         assert!((beta[1] - 3.0).abs() < 1e-9);
         assert!((beta[2] - 5.0).abs() < 1e-9);
     }
 
     #[test]
-    #[should_panic(expected = "singular")]
-    fn collinear_detected() {
+    fn collinear_is_typed_error() {
         let xs = vec![vec![1.0, 2.0], vec![2.0, 4.0], vec![3.0, 6.0]];
         let ys = vec![1.0, 2.0, 3.0];
-        let _ = least_squares(&xs, &ys);
+        let r = least_squares(&xs, &ys);
+        assert!(matches!(r, Err(BismoError::InvalidConfig(_))), "{r:?}");
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.contains("singular"), "{msg}");
+    }
+
+    #[test]
+    fn degenerate_inputs_are_typed_errors() {
+        // Empty system.
+        assert!(matches!(
+            least_squares(&[], &[]),
+            Err(BismoError::InvalidConfig(_))
+        ));
+        // Row/observation count mismatch.
+        assert!(matches!(
+            least_squares(&[vec![1.0]], &[1.0, 2.0]),
+            Err(BismoError::InvalidConfig(_))
+        ));
+        // Ragged rows.
+        assert!(matches!(
+            least_squares(&[vec![1.0, 2.0], vec![1.0]], &[1.0, 2.0]),
+            Err(BismoError::InvalidConfig(_))
+        ));
+        // Zero-width rows.
+        assert!(matches!(
+            least_squares(&[vec![], vec![]], &[1.0, 2.0]),
+            Err(BismoError::InvalidConfig(_))
+        ));
+        // Under-determined: one sample, two features.
+        assert!(matches!(
+            least_squares(&[vec![1.0, 2.0]], &[1.0]),
+            Err(BismoError::InvalidConfig(_))
+        ));
+        // Non-finite samples on either side.
+        assert!(matches!(
+            least_squares(&[vec![f64::NAN, 1.0], vec![2.0, 1.0]], &[1.0, 2.0]),
+            Err(BismoError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            least_squares(&[vec![1.0, 1.0], vec![2.0, 1.0]], &[1.0, f64::INFINITY]),
+            Err(BismoError::InvalidConfig(_))
+        ));
+        // linear_fit surfaces the same errors.
+        assert!(matches!(
+            linear_fit(&[1.0, f64::NAN], &[1.0, 2.0]),
+            Err(BismoError::InvalidConfig(_))
+        ));
+        // Constant xs are collinear with the intercept column.
+        assert!(matches!(
+            linear_fit(&[3.0, 3.0, 3.0], &[1.0, 2.0, 3.0]),
+            Err(BismoError::InvalidConfig(_))
+        ));
     }
 }

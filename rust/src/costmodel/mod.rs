@@ -16,8 +16,13 @@
 //! [`crate::synth::synth_instance`].
 
 pub mod fit;
+pub mod tune;
 
 pub use fit::{least_squares, linear_fit};
+pub use tune::{
+    load_host_profile, profile_dir, tune_host, ClassTuning, CpuFingerprint, ShapeClass, SwFit,
+    TuneConfig, TuneOutcome, TunedProfile,
+};
 
 use crate::api::BismoError;
 use crate::arch::{BismoConfig, Platform, PYNQ_Z1};
@@ -58,7 +63,8 @@ impl CostModel {
         let dks = [32u32, 64, 128, 256, 512, 1024];
         let xs: Vec<f64> = dks.iter().map(|&d| d as f64).collect();
         let ys: Vec<f64> = dks.iter().map(|&d| synth_dpu(d, 32).luts).collect();
-        let (alpha, beta) = linear_fit(&xs, &ys);
+        let (alpha, beta) =
+            linear_fit(&xs, &ys).expect("synthesis sweep is well-conditioned");
         CostModel {
             alpha_dpu: alpha,
             beta_dpu: beta,

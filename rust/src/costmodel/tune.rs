@@ -1,0 +1,881 @@
+//! Closed-loop autotuning: measured tile/shard search plus cost-model
+//! calibration, persisted as per-machine profiles.
+//!
+//! The paper prices configurations analytically (Eqs 1–2) and the
+//! journal follow-up (Umuroglu et al., 2019) shows those predictions
+//! only become actionable once calibrated against measurements. This
+//! module is that loop for the software port:
+//!
+//! 1. **Measure** — [`tune_host`] benchmarks candidate
+//!    [`KernelConfig`] tile shapes (`tile_m × tile_n × tile_k`) and
+//!    [`ShardPlan`] instance counts on the actual host, across one
+//!    representative workload per [`ShapeClass`]. Every candidate is
+//!    verified bit-exact against the [`gemm_bitserial`] oracle *before*
+//!    its timing counts — a fast-but-wrong configuration must be
+//!    impossible to persist.
+//! 2. **Fit** — the hardware cost model is re-fitted from the virtual
+//!    synthesis sweep ([`CostModel::fit_from_synth`], the paper's own
+//!    procedure) and a software-side linear cost `ns ≈ ns_per_op ·
+//!    binary_ops + ns_base` is fitted over the measured best times via
+//!    [`linear_fit`](super::fit::linear_fit).
+//! 3. **Persist** — the result is a [`TunedProfile`] JSON file,
+//!    content-addressed by CPU identity ([`CpuFingerprint`]: detected
+//!    [`DispatchTier`] + core count). [`crate::api::Session`] loads the
+//!    host's profile at startup (see [`load_host_profile`]), so kernel
+//!    tile selection and `Sharding::Auto` pick from measured data; any
+//!    missing, corrupt, or foreign-machine profile falls back to the
+//!    analytical defaults.
+//!
+//! The profile directory is `tuned/` under the working directory, or
+//! `$BISMO_TUNE_DIR` when set. Corrupt or fingerprint-mismatched files
+//! are typed [`BismoError::Parse`] errors from the explicit loaders;
+//! the implicit session-startup path swallows them into the fallback.
+
+use super::CostModel;
+use crate::api::BismoError;
+use crate::baseline::{binary_ops, gemm_bitserial};
+use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
+use crate::kernel::{gemm_tiled_block, gemm_tiled_with, KernelConfig, WorkerPool};
+use crate::partition::{GemmShape, ShardPlan};
+use crate::simd::DispatchTier;
+use crate::util::{BenchTimer, Json, Rng};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Profile file schema identifier; bumped on breaking layout changes.
+pub const PROFILE_SCHEMA: &str = "bismo-tune-profile/v1";
+
+/// Environment variable overriding the profile directory.
+pub const TUNE_DIR_ENV: &str = "BISMO_TUNE_DIR";
+
+/// The default profile directory (relative to the working directory).
+pub const TUNE_DIR_DEFAULT: &str = "tuned";
+
+/// Coarse GEMM shape classes the tuner sweeps — tile preferences are
+/// driven by aspect ratio and depth far more than by exact sizes, so a
+/// handful of classes covers the request space without a per-shape
+/// database.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShapeClass {
+    /// Tiny outputs (`m·n ≤ 256`): tiling overhead dominates.
+    Small,
+    /// Roughly square outputs at moderate depth.
+    Square,
+    /// Many more output rows than columns (`m ≥ 4n`).
+    Tall,
+    /// Many more output columns than rows (`n ≥ 4m`).
+    Wide,
+    /// Inner dimension dwarfs the output (`k > 8·max(m,n)`).
+    Deep,
+}
+
+/// All classes, in sweep order.
+pub const SHAPE_CLASSES: [ShapeClass; 5] = [
+    ShapeClass::Small,
+    ShapeClass::Square,
+    ShapeClass::Tall,
+    ShapeClass::Wide,
+    ShapeClass::Deep,
+];
+
+impl ShapeClass {
+    /// Stable lowercase name (profile files, bench reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShapeClass::Small => "small",
+            ShapeClass::Square => "square",
+            ShapeClass::Tall => "tall",
+            ShapeClass::Wide => "wide",
+            ShapeClass::Deep => "deep",
+        }
+    }
+
+    /// Inverse of [`ShapeClass::name`].
+    pub fn parse(s: &str) -> Result<ShapeClass, BismoError> {
+        SHAPE_CLASSES
+            .into_iter()
+            .find(|c| c.name() == s)
+            .ok_or_else(|| BismoError::Parse(format!("unknown shape class {s:?}")))
+    }
+
+    /// Classify a request shape. Total order: tiny outputs are Small
+    /// regardless of aspect; then depth beats aspect; then aspect.
+    pub fn classify(shape: &GemmShape) -> ShapeClass {
+        let (m, k, n) = (shape.m, shape.k, shape.n);
+        if m * n <= 256 {
+            ShapeClass::Small
+        } else if k > 8 * m.max(n) {
+            ShapeClass::Deep
+        } else if m >= 4 * n {
+            ShapeClass::Tall
+        } else if n >= 4 * m {
+            ShapeClass::Wide
+        } else {
+            ShapeClass::Square
+        }
+    }
+}
+
+impl std::fmt::Display for ShapeClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What makes one machine's measurements transferable to another:
+/// the resolved SIMD tier and the core count. Profiles are
+/// content-addressed by this pair — a profile tuned on an AVX-512
+/// 32-core box is rejected (typed, with fallback) on a NEON laptop.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CpuFingerprint {
+    /// Resolved [`DispatchTier`] name (`"avx2"`, `"scalar"`, ...) —
+    /// honors the `BISMO_SIMD` override, so a forced-scalar run tunes
+    /// (and later loads) a scalar profile.
+    pub simd_tier: String,
+    /// Available hardware parallelism.
+    pub cores: usize,
+}
+
+impl CpuFingerprint {
+    /// Detect this host's fingerprint.
+    pub fn detect() -> Result<CpuFingerprint, BismoError> {
+        Ok(CpuFingerprint {
+            simd_tier: DispatchTier::resolve()?.name().to_string(),
+            cores: std::thread::available_parallelism().map_or(1, |n| n.get()),
+        })
+    }
+
+    /// The content-address: `"<tier>-<cores>c"`, used in the profile
+    /// filename and echoed by `bismo info`.
+    pub fn key(&self) -> String {
+        format!("{}-{}c", self.simd_tier, self.cores)
+    }
+}
+
+/// Measured software cost fit: `ns ≈ ns_per_op · binary_ops + ns_base`
+/// over the per-class best configurations.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SwFit {
+    pub ns_per_op: f64,
+    pub ns_base: f64,
+}
+
+impl SwFit {
+    /// Predicted wall time for a workload of `ops` binary operations.
+    pub fn predict_ns(&self, ops: u64) -> f64 {
+        self.ns_per_op * ops as f64 + self.ns_base
+    }
+}
+
+/// The winning configuration for one shape class.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClassTuning {
+    pub class: ShapeClass,
+    /// Best-measured tile geometry (verified bit-exact before timing).
+    pub tile: KernelConfig,
+    /// Best-measured shard count (1 = no sharding won).
+    pub shards: usize,
+    /// Shard grid behind `shards` (`rows × cols`).
+    pub grid: (usize, usize),
+    /// Throughput of the winning configuration (binary GOPS).
+    pub measured_gops: f64,
+    /// Throughput of the analytical default on the same workload.
+    pub default_gops: f64,
+}
+
+/// A persisted per-machine tuning profile: the measured tile/shard
+/// picks per shape class, the re-fitted hardware cost model, and the
+/// measured software cost fit, all keyed by [`CpuFingerprint`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunedProfile {
+    pub fingerprint: CpuFingerprint,
+    /// Measured-constant replacement for [`CostModel::paper`] — what
+    /// `Sharding::Auto` scores candidates with when this profile is
+    /// loaded.
+    pub cost_model: CostModel,
+    pub sw_fit: SwFit,
+    pub classes: Vec<ClassTuning>,
+    /// Unix seconds at tuning time (provenance only; never compared).
+    pub generated_unix: u64,
+}
+
+impl TunedProfile {
+    /// The content-address of this profile (its fingerprint's key).
+    pub fn key(&self) -> String {
+        self.fingerprint.key()
+    }
+
+    /// The measured tile geometry for `shape`'s class, if tuned.
+    pub fn tile_for(&self, shape: &GemmShape) -> Option<KernelConfig> {
+        let class = ShapeClass::classify(shape);
+        self.classes.iter().find(|c| c.class == class).map(|c| c.tile)
+    }
+
+    /// Serialize to the `bismo-tune-profile/v1` JSON document.
+    pub fn to_json(&self) -> Json {
+        let mut fp = BTreeMap::new();
+        fp.insert("simd_tier".into(), Json::str(&self.fingerprint.simd_tier));
+        fp.insert("cores".into(), Json::num(self.fingerprint.cores as f64));
+        let mut cm = BTreeMap::new();
+        cm.insert("alpha_dpu".into(), Json::num(self.cost_model.alpha_dpu));
+        cm.insert("beta_dpu".into(), Json::num(self.cost_model.beta_dpu));
+        cm.insert("lut_base".into(), Json::num(self.cost_model.lut_base));
+        cm.insert("lut_res".into(), Json::num(self.cost_model.lut_res));
+        cm.insert("bram_base".into(), Json::num(self.cost_model.bram_base as f64));
+        let mut sw = BTreeMap::new();
+        sw.insert("ns_per_op".into(), Json::num(self.sw_fit.ns_per_op));
+        sw.insert("ns_base".into(), Json::num(self.sw_fit.ns_base));
+        let classes: Vec<Json> = self
+            .classes
+            .iter()
+            .map(|c| {
+                let mut o = BTreeMap::new();
+                o.insert("class".into(), Json::str(c.class.name()));
+                o.insert("tile_m".into(), Json::num(c.tile.tile_m as f64));
+                o.insert("tile_n".into(), Json::num(c.tile.tile_n as f64));
+                // `usize::MAX` ("stream whole k") has no faithful f64;
+                // 0 is illegal as a real tile size, so it is the
+                // on-disk sentinel for "unchunked".
+                o.insert("tile_k".into(), Json::num(tile_k_to_disk(c.tile.tile_k)));
+                o.insert("shards".into(), Json::num(c.shards as f64));
+                o.insert("grid_rows".into(), Json::num(c.grid.0 as f64));
+                o.insert("grid_cols".into(), Json::num(c.grid.1 as f64));
+                o.insert("measured_gops".into(), Json::num(c.measured_gops));
+                o.insert("default_gops".into(), Json::num(c.default_gops));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut doc = BTreeMap::new();
+        doc.insert("schema".into(), Json::str(PROFILE_SCHEMA));
+        doc.insert("fingerprint".into(), Json::Obj(fp));
+        doc.insert("cost_model".into(), Json::Obj(cm));
+        doc.insert("sw_fit".into(), Json::Obj(sw));
+        doc.insert("classes".into(), Json::Arr(classes));
+        doc.insert("generated_unix".into(), Json::num(self.generated_unix as f64));
+        Json::Obj(doc)
+    }
+
+    /// Parse a `bismo-tune-profile/v1` document. Every missing or
+    /// ill-typed field is a [`BismoError::Parse`]; tile sizes are
+    /// additionally validated so a hand-edited `tile_m: 0` cannot
+    /// smuggle an invalid kernel config past the typed boundary.
+    pub fn from_json(doc: &Json) -> Result<TunedProfile, BismoError> {
+        let schema = req_str(doc, "schema")?;
+        if schema != PROFILE_SCHEMA {
+            return Err(BismoError::Parse(format!(
+                "tune profile: schema {schema:?}, expected {PROFILE_SCHEMA:?}"
+            )));
+        }
+        let fp = doc
+            .get("fingerprint")
+            .ok_or_else(|| missing("fingerprint"))?;
+        let fingerprint = CpuFingerprint {
+            simd_tier: req_str(fp, "simd_tier")?.to_string(),
+            cores: req_usize(fp, "cores")?,
+        };
+        let cm = doc.get("cost_model").ok_or_else(|| missing("cost_model"))?;
+        let cost_model = CostModel {
+            alpha_dpu: req_f64(cm, "alpha_dpu")?,
+            beta_dpu: req_f64(cm, "beta_dpu")?,
+            lut_base: req_f64(cm, "lut_base")?,
+            lut_res: req_f64(cm, "lut_res")?,
+            bram_base: req_f64(cm, "bram_base")? as u64,
+        };
+        let sw = doc.get("sw_fit").ok_or_else(|| missing("sw_fit"))?;
+        let sw_fit = SwFit {
+            ns_per_op: req_f64(sw, "ns_per_op")?,
+            ns_base: req_f64(sw, "ns_base")?,
+        };
+        let mut classes = Vec::new();
+        for (i, c) in doc
+            .get("classes")
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| missing("classes"))?
+            .iter()
+            .enumerate()
+        {
+            let class = ShapeClass::parse(req_str(c, "class")?)?;
+            let tile = KernelConfig {
+                tile_m: req_usize(c, "tile_m")?,
+                tile_n: req_usize(c, "tile_n")?,
+                tile_k: tile_k_from_disk(req_usize(c, "tile_k")?),
+            };
+            tile.validate().map_err(|e| {
+                BismoError::Parse(format!("tune profile: classes[{i}]: {e}"))
+            })?;
+            let shards = req_usize(c, "shards")?;
+            if shards < 1 {
+                return Err(BismoError::Parse(format!(
+                    "tune profile: classes[{i}]: shards must be >= 1"
+                )));
+            }
+            classes.push(ClassTuning {
+                class,
+                tile,
+                shards,
+                grid: (req_usize(c, "grid_rows")?, req_usize(c, "grid_cols")?),
+                measured_gops: req_f64(c, "measured_gops")?,
+                default_gops: req_f64(c, "default_gops")?,
+            });
+        }
+        Ok(TunedProfile {
+            fingerprint,
+            cost_model,
+            sw_fit,
+            classes,
+            generated_unix: req_f64(doc, "generated_unix")? as u64,
+        })
+    }
+
+    /// Load and parse one profile file. I/O problems are
+    /// [`BismoError::Io`]; malformed content is [`BismoError::Parse`].
+    pub fn load(path: &Path) -> Result<TunedProfile, BismoError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| BismoError::Io(format!("read {}: {e}", path.display())))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| BismoError::Parse(format!("{}: {e}", path.display())))?;
+        TunedProfile::from_json(&doc)
+    }
+
+    /// Write this profile into `dir` under its content-addressed
+    /// filename (`bismo-tune-<key>.json`), creating the directory.
+    pub fn save_in(&self, dir: &Path) -> Result<PathBuf, BismoError> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| BismoError::Io(format!("create {}: {e}", dir.display())))?;
+        let path = dir.join(profile_filename(&self.fingerprint));
+        std::fs::write(&path, self.to_json().pretty(2) + "\n")
+            .map_err(|e| BismoError::Io(format!("write {}: {e}", path.display())))?;
+        Ok(path)
+    }
+
+    /// Load the profile addressed by `fp` from `dir`. A missing file is
+    /// `Ok(None)` (nothing tuned yet — not an error); a file whose
+    /// *content* names a different machine than its address is a typed
+    /// [`BismoError::Parse`] (the file was copied or tampered with).
+    pub fn load_for(dir: &Path, fp: &CpuFingerprint) -> Result<Option<TunedProfile>, BismoError> {
+        let path = dir.join(profile_filename(fp));
+        if !path.exists() {
+            return Ok(None);
+        }
+        let profile = TunedProfile::load(&path)?;
+        if &profile.fingerprint != fp {
+            return Err(BismoError::Parse(format!(
+                "tune profile {}: fingerprint mismatch (file says {}, host is {})",
+                path.display(),
+                profile.key(),
+                fp.key()
+            )));
+        }
+        Ok(Some(profile))
+    }
+}
+
+/// `usize::MAX` (unchunked) serializes as the illegal-as-real-size 0.
+fn tile_k_to_disk(tile_k: usize) -> f64 {
+    if tile_k == usize::MAX {
+        0.0
+    } else {
+        tile_k as f64
+    }
+}
+
+fn tile_k_from_disk(v: usize) -> usize {
+    if v == 0 {
+        usize::MAX
+    } else {
+        v
+    }
+}
+
+fn profile_filename(fp: &CpuFingerprint) -> String {
+    format!("bismo-tune-{}.json", fp.key())
+}
+
+fn missing(key: &str) -> BismoError {
+    BismoError::Parse(format!("tune profile: missing field {key:?}"))
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, BismoError> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| BismoError::Parse(format!("tune profile: field {key:?} must be a string")))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64, BismoError> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| BismoError::Parse(format!("tune profile: field {key:?} must be a number")))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize, BismoError> {
+    j.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| BismoError::Parse(format!("tune profile: field {key:?} must be a number")))
+}
+
+/// The profile directory: `$BISMO_TUNE_DIR`, else `tuned/`.
+pub fn profile_dir() -> PathBuf {
+    std::env::var_os(TUNE_DIR_ENV)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(TUNE_DIR_DEFAULT))
+}
+
+/// The clean-fallback loader [`crate::api::Session`] startup uses:
+/// this host's profile from [`profile_dir`], or `None` when anything —
+/// fingerprint detection, the file, its schema, its fingerprint —
+/// doesn't line up. Never errs: an unreadable profile must degrade to
+/// the analytical defaults, not take the service down.
+pub fn load_host_profile() -> Option<TunedProfile> {
+    load_host_profile_in(&profile_dir())
+}
+
+/// [`load_host_profile`] against an explicit directory.
+pub fn load_host_profile_in(dir: &Path) -> Option<TunedProfile> {
+    let fp = CpuFingerprint::detect().ok()?;
+    TunedProfile::load_for(dir, &fp).ok().flatten()
+}
+
+/// Tuning-run knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct TuneConfig {
+    /// Smoke sweep: smaller candidate grid, one-sample timing. What CI
+    /// runs; full mode is for generating a real profile.
+    pub quick: bool,
+    /// Worker threads for the shard sweep (0 = all cores).
+    pub threads: usize,
+    /// Workload RNG seed.
+    pub seed: u64,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            quick: false,
+            threads: 0,
+            seed: 0xB15_707E,
+        }
+    }
+}
+
+/// Everything measured for one shape class — the bench-report view of
+/// a [`ClassTuning`] (which keeps only what the runtime needs).
+#[derive(Clone, Copy, Debug)]
+pub struct ClassOutcome {
+    pub class: ShapeClass,
+    pub shape: GemmShape,
+    pub wbits: u32,
+    pub abits: u32,
+    pub binary_ops: u64,
+    pub candidates: usize,
+    pub default_ns: f64,
+    pub default_gops: f64,
+    pub tuned_ns: f64,
+    pub tuned_gops: f64,
+    pub tile: KernelConfig,
+    pub shards: usize,
+    pub grid: (usize, usize),
+}
+
+impl ClassOutcome {
+    /// Tuned-over-default throughput ratio (≥ 1 by construction: the
+    /// default is always in the candidate set).
+    pub fn speedup(&self) -> f64 {
+        self.tuned_gops / self.default_gops
+    }
+}
+
+/// A completed tuning run: the persistable profile plus the full
+/// per-class measurement record for `BENCH_tune.json`.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub profile: TunedProfile,
+    pub classes: Vec<ClassOutcome>,
+}
+
+/// One representative workload per class. Sizes are chosen so quick
+/// mode finishes in CI seconds while every [`ShapeClass::classify`]
+/// branch maps its own workload back to itself (asserted in tests).
+fn class_workload(class: ShapeClass, quick: bool) -> (GemmShape, u32, u32) {
+    let (m, k, n, w, a) = if quick {
+        match class {
+            ShapeClass::Small => (12, 128, 12, 2, 2),
+            ShapeClass::Square => (64, 256, 64, 4, 4),
+            ShapeClass::Tall => (128, 256, 16, 3, 3),
+            ShapeClass::Wide => (16, 256, 128, 3, 3),
+            ShapeClass::Deep => (64, 4096, 64, 2, 2),
+        }
+    } else {
+        match class {
+            ShapeClass::Small => (16, 256, 16, 3, 3),
+            ShapeClass::Square => (128, 512, 128, 4, 4),
+            ShapeClass::Tall => (256, 512, 32, 3, 3),
+            ShapeClass::Wide => (32, 512, 256, 3, 3),
+            ShapeClass::Deep => (96, 8192, 96, 2, 2),
+        }
+    };
+    (GemmShape { m, k, n }, w, a)
+}
+
+/// Candidate tile geometries for one sweep. Always contains the
+/// analytical default — the tuned pick is an argmax over a set that
+/// includes it, so the tuned throughput can never fall below the
+/// default's on the same measurement.
+fn tile_candidates(quick: bool) -> Vec<KernelConfig> {
+    let (dims, ks): (&[usize], &[usize]) = if quick {
+        (&[4, 8, 16], &[usize::MAX, 4096])
+    } else {
+        (&[2, 4, 8, 16, 32], &[2048, 8192, usize::MAX])
+    };
+    let mut out = vec![KernelConfig::default()];
+    for &tm in dims {
+        for &tn in dims {
+            for &tk in ks {
+                let cfg = KernelConfig {
+                    tile_m: tm,
+                    tile_n: tn,
+                    tile_k: tk,
+                };
+                if !out.contains(&cfg) {
+                    out.push(cfg);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run the closed loop on this host: sweep every shape class, verify
+/// and time each candidate, fit the models, and return the profile
+/// (not yet saved — the caller decides the directory).
+pub fn tune_host(cfg: &TuneConfig) -> Result<TuneOutcome, BismoError> {
+    let fingerprint = CpuFingerprint::detect()?;
+    let threads = if cfg.threads == 0 {
+        fingerprint.cores
+    } else {
+        cfg.threads
+    };
+    let timer = if cfg.quick {
+        BenchTimer::smoke()
+    } else {
+        BenchTimer::heavy()
+    };
+    let pool = WorkerPool::global();
+
+    let mut classes = Vec::new();
+    let mut tunings = Vec::new();
+    let mut fit_ops = Vec::new();
+    let mut fit_ns = Vec::new();
+    for (ci, &class) in SHAPE_CLASSES.iter().enumerate() {
+        let (shape, wbits, abits) = class_workload(class, cfg.quick);
+        debug_assert_eq!(ShapeClass::classify(&shape), class);
+        let mut rng = Rng::new(cfg.seed ^ (0x5EED << 8) ^ ci as u64);
+        let a = IntMatrix::random(&mut rng, shape.m, shape.k, wbits, true);
+        let b = IntMatrix::random(&mut rng, shape.k, shape.n, abits, false);
+        let la = BitSerialMatrix::from_int(&a, wbits, true);
+        let rb = BitSerialMatrix::from_int_transposed(&b, abits, false);
+        let oracle = gemm_bitserial(&la, &rb);
+        let ops = binary_ops(
+            shape.m as u64,
+            shape.k as u64,
+            shape.n as u64,
+            wbits,
+            abits,
+        );
+
+        // Tile sweep, single-threaded: every candidate proves itself
+        // bit-exact before its timing counts.
+        let candidates = tile_candidates(cfg.quick);
+        let mut default_ns = f64::INFINITY;
+        let mut best: Option<(f64, KernelConfig)> = None;
+        for tile in &candidates {
+            let got = gemm_tiled_with(&la, &rb, tile, None)?;
+            if got != oracle {
+                return Err(BismoError::VerifyFailed(format!(
+                    "tune {class}: tile {}x{}x{} disagrees with the oracle on {shape}",
+                    tile.tile_m, tile.tile_n, tile.tile_k
+                )));
+            }
+            let ns = timer
+                .run(|| gemm_tiled_with(&la, &rb, tile, None).expect("verified above"))
+                .median();
+            if *tile == KernelConfig::default() {
+                default_ns = ns;
+            }
+            if best.is_none_or(|(b_ns, _)| ns < b_ns) {
+                best = Some((ns, *tile));
+            }
+        }
+        let (best_tile_ns, best_tile) = best.expect("candidate set is never empty");
+
+        // Shard sweep with the winning tile: the plan each count
+        // produces is assembled and verified once, then timed.
+        let mut tuned_ns = best_tile_ns;
+        let mut shards = 1usize;
+        let mut grid = (1usize, 1usize);
+        for count in [2usize, 4, 8] {
+            if count > threads || count > shape.m.max(shape.n) {
+                continue;
+            }
+            let plan = ShardPlan::for_instances(shape.m, shape.n, count);
+            let run_shards = || -> Result<IntMatrix, BismoError> {
+                let shard_list = plan.shards();
+                let slots: Vec<Mutex<Option<Result<IntMatrix, BismoError>>>> =
+                    shard_list.iter().map(|_| Mutex::new(None)).collect();
+                pool.run_limited(shard_list.len(), threads, &|i| {
+                    let s = &shard_list[i];
+                    let r = gemm_tiled_block(
+                        &la,
+                        &rb,
+                        s.rows.clone(),
+                        s.cols.clone(),
+                        s.planes.clone(),
+                        &best_tile,
+                        None,
+                    );
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+                let mut parts = Vec::with_capacity(slots.len());
+                for slot in &slots {
+                    parts.push(slot.lock().unwrap().take().expect("shard ran")?);
+                }
+                plan.assemble(&parts)
+            };
+            if run_shards()? != oracle {
+                return Err(BismoError::VerifyFailed(format!(
+                    "tune {class}: {count}-shard plan disagrees with the oracle on {shape}"
+                )));
+            }
+            let ns = timer.run(|| run_shards().expect("verified above")).median();
+            if ns < tuned_ns {
+                tuned_ns = ns;
+                shards = plan.count();
+                grid = (plan.rows.count(), plan.cols.count());
+            }
+        }
+
+        let outcome = ClassOutcome {
+            class,
+            shape,
+            wbits,
+            abits,
+            binary_ops: ops,
+            candidates: candidates.len(),
+            default_ns,
+            default_gops: ops as f64 / default_ns,
+            tuned_ns,
+            tuned_gops: ops as f64 / tuned_ns,
+            tile: best_tile,
+            shards,
+            grid,
+        };
+        tunings.push(ClassTuning {
+            class,
+            tile: best_tile,
+            shards,
+            grid,
+            measured_gops: outcome.tuned_gops,
+            default_gops: outcome.default_gops,
+        });
+        fit_ops.push(ops as f64);
+        fit_ns.push(tuned_ns);
+        classes.push(outcome);
+    }
+
+    // Software cost fit over the measured best times. One-sample quick
+    // timings can be noisy enough to turn the fit degenerate; fall back
+    // to a through-origin mean-rate fit rather than failing the run.
+    let sw_fit = match super::fit::linear_fit(&fit_ops, &fit_ns) {
+        Ok((ns_per_op, ns_base)) => SwFit { ns_per_op, ns_base },
+        Err(_) => SwFit {
+            ns_per_op: fit_ns.iter().sum::<f64>() / fit_ops.iter().sum::<f64>(),
+            ns_base: 0.0,
+        },
+    };
+
+    let generated_unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map_or(0, |d| d.as_secs());
+    Ok(TuneOutcome {
+        profile: TunedProfile {
+            fingerprint,
+            cost_model: CostModel::fit_from_synth(),
+            sw_fit,
+            classes: tunings,
+            generated_unix,
+        },
+        classes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_profile() -> TunedProfile {
+        TunedProfile {
+            fingerprint: CpuFingerprint {
+                simd_tier: "scalar".into(),
+                cores: 4,
+            },
+            cost_model: CostModel::paper(),
+            sw_fit: SwFit {
+                ns_per_op: 0.002,
+                ns_base: 1500.0,
+            },
+            classes: vec![
+                ClassTuning {
+                    class: ShapeClass::Square,
+                    tile: KernelConfig {
+                        tile_m: 16,
+                        tile_n: 8,
+                        tile_k: usize::MAX,
+                    },
+                    shards: 1,
+                    grid: (1, 1),
+                    measured_gops: 12.5,
+                    default_gops: 10.0,
+                },
+                ClassTuning {
+                    class: ShapeClass::Deep,
+                    tile: KernelConfig {
+                        tile_m: 8,
+                        tile_n: 16,
+                        tile_k: 4096,
+                    },
+                    shards: 4,
+                    grid: (2, 2),
+                    measured_gops: 30.0,
+                    default_gops: 22.0,
+                },
+            ],
+            generated_unix: 1_700_000_000,
+        }
+    }
+
+    #[test]
+    fn classify_covers_every_class() {
+        let cases = [
+            (GemmShape { m: 8, k: 64, n: 8 }, ShapeClass::Small),
+            (GemmShape { m: 64, k: 256, n: 64 }, ShapeClass::Square),
+            (GemmShape { m: 256, k: 256, n: 32 }, ShapeClass::Tall),
+            (GemmShape { m: 32, k: 256, n: 256 }, ShapeClass::Wide),
+            (GemmShape { m: 64, k: 4096, n: 64 }, ShapeClass::Deep),
+        ];
+        for (shape, want) in cases {
+            assert_eq!(ShapeClass::classify(&shape), want, "{shape}");
+        }
+        // Each swept workload must classify back to its own class, in
+        // both modes — otherwise `tile_for` would never find the entry
+        // the tuner just measured.
+        for quick in [false, true] {
+            for class in SHAPE_CLASSES {
+                let (shape, _, _) = class_workload(class, quick);
+                assert_eq!(ShapeClass::classify(&shape), class, "quick={quick} {shape}");
+            }
+        }
+    }
+
+    #[test]
+    fn class_names_roundtrip() {
+        for class in SHAPE_CLASSES {
+            assert_eq!(ShapeClass::parse(class.name()).unwrap(), class);
+        }
+        assert!(matches!(
+            ShapeClass::parse("enormous"),
+            Err(BismoError::Parse(_))
+        ));
+    }
+
+    #[test]
+    fn profile_json_roundtrips() {
+        let p = sample_profile();
+        let doc = p.to_json();
+        // Through the parser too, not just the in-memory value.
+        let reparsed = Json::parse(&doc.pretty(2)).unwrap();
+        assert_eq!(TunedProfile::from_json(&reparsed).unwrap(), p);
+        // The unchunked sentinel really is 0 on disk.
+        let class0 = &doc.get("classes").unwrap().as_arr().unwrap()[0];
+        assert_eq!(class0.get("tile_k").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn tile_for_selects_by_class() {
+        let p = sample_profile();
+        let sq = p
+            .tile_for(&GemmShape { m: 64, k: 256, n: 64 })
+            .expect("square is tuned");
+        assert_eq!((sq.tile_m, sq.tile_n), (16, 8));
+        let deep = p
+            .tile_for(&GemmShape { m: 64, k: 4096, n: 64 })
+            .expect("deep is tuned");
+        assert_eq!(deep.tile_k, 4096);
+        // Untuned class: fall back (None) instead of guessing.
+        assert!(p.tile_for(&GemmShape { m: 256, k: 256, n: 32 }).is_none());
+    }
+
+    #[test]
+    fn malformed_documents_are_parse_errors() {
+        let good = sample_profile().to_json();
+        // Wrong schema string.
+        let mut doc = good.as_obj().unwrap().clone();
+        doc.insert("schema".into(), Json::str("bismo-bench-gemm/v1"));
+        assert!(matches!(
+            TunedProfile::from_json(&Json::Obj(doc)),
+            Err(BismoError::Parse(_))
+        ));
+        // Missing section.
+        let mut doc = good.as_obj().unwrap().clone();
+        doc.remove("cost_model");
+        assert!(matches!(
+            TunedProfile::from_json(&Json::Obj(doc)),
+            Err(BismoError::Parse(_))
+        ));
+        // Ill-typed field.
+        let mut doc = good.as_obj().unwrap().clone();
+        doc.insert("sw_fit".into(), Json::str("fast"));
+        assert!(matches!(
+            TunedProfile::from_json(&Json::Obj(doc)),
+            Err(BismoError::Parse(_))
+        ));
+        // A zero tile size must not survive parsing as a legal config.
+        let text = good.pretty(2).replace("\"tile_m\": 16", "\"tile_m\": 0");
+        let doc = Json::parse(&text).unwrap();
+        assert!(matches!(
+            TunedProfile::from_json(&doc),
+            Err(BismoError::Parse(_))
+        ));
+    }
+
+    #[test]
+    fn fingerprint_key_shape() {
+        let fp = CpuFingerprint {
+            simd_tier: "avx2".into(),
+            cores: 16,
+        };
+        assert_eq!(fp.key(), "avx2-16c");
+        assert_eq!(profile_filename(&fp), "bismo-tune-avx2-16c.json");
+    }
+
+    #[test]
+    fn candidate_set_always_contains_the_default() {
+        for quick in [false, true] {
+            let c = tile_candidates(quick);
+            assert!(c.contains(&KernelConfig::default()), "quick={quick}");
+            // No duplicate work in the sweep.
+            for (i, a) in c.iter().enumerate() {
+                assert!(!c[i + 1..].contains(a), "duplicate candidate {a:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sw_fit_predicts_linearly() {
+        let fit = SwFit {
+            ns_per_op: 0.5,
+            ns_base: 100.0,
+        };
+        assert_eq!(fit.predict_ns(0), 100.0);
+        assert_eq!(fit.predict_ns(1000), 600.0);
+    }
+}

@@ -709,7 +709,8 @@ impl DiffCase {
         let l_scalar =
             BitSerialMatrix::from_int_tier(&a, self.wbits, self.lsigned, DispatchTier::Scalar);
         let r_t = BitSerialMatrix::from_int_transposed(&b, self.abits, self.rsigned);
-        let scalar = gemm_tiled_tier(&l_scalar, &r_t, DispatchTier::Scalar);
+        let scalar = gemm_tiled_tier(&l_scalar, &r_t, DispatchTier::Scalar)
+            .map_err(|e| format!("forced-scalar engine rejected a legal case: {e}"))?;
         if scalar != expect {
             return Err("engine at forced-scalar tier disagrees with the integer oracle".into());
         }
@@ -718,7 +719,8 @@ impl DiffCase {
             if l_best != l_scalar {
                 return Err(format!("{best} packing differs from scalar packing"));
             }
-            let fast = gemm_tiled_tier(&l_best, &r_t, best);
+            let fast = gemm_tiled_tier(&l_best, &r_t, best)
+                .map_err(|e| format!("{best} engine rejected a legal case: {e}"))?;
             if fast != scalar {
                 return Err(format!(
                     "engine at {best} tier disagrees with forced-scalar engine"

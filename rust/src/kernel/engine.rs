@@ -21,6 +21,13 @@
 //!   single owner of tiling arithmetic); the RHS tile (all planes of
 //!   `tile_n` packed rows) stays L1/L2-resident across the `tile_m`
 //!   LHS rows instead of being restreamed per output row.
+//! * **k-chunking** — when [`KernelConfig::tile_k`] is finite, packed
+//!   rows are streamed in `⌈tile_k/64⌉`-word strips and partial products
+//!   accumulate into the output tile, so very deep operands (`k` beyond
+//!   L1/L2) reuse each RHS strip across the whole tile before moving on.
+//!   The default streams whole rows — today's behavior and the right
+//!   choice for moderate `k`. Integer accumulation makes the chunked
+//!   walk bit-exact regardless of split.
 //! * **SIMD strips** — the AND+popcount inner loop runs the strip of
 //!   the process-wide [`crate::simd::DispatchTier`] (AVX-512 / AVX2
 //!   Harley–Seal / NEON / scalar), resolved once per block so the hot
@@ -36,8 +43,14 @@
 //!
 //! Row tiles are independent, which is exactly the granularity the
 //! persistent [`WorkerPool`] distributes.
+//!
+//! Tile geometry is user-reachable (per-request via
+//! [`crate::coordinator::RequestOptions`], per-host via tuned profiles
+//! from [`crate::costmodel::tune`]), so malformed configurations are
+//! typed [`BismoError::InvalidConfig`] returns, not panics.
 
 use super::pool::WorkerPool;
+use crate::api::BismoError;
 use crate::bitmatrix::{BitSerialMatrix, IntMatrix};
 use crate::partition::{BlockSplit, TilePlan};
 use crate::simd::{popcount_and_tier, DispatchTier};
@@ -46,13 +59,18 @@ use std::sync::Mutex;
 
 /// Tile geometry of the engine. Defaults hold one RHS tile
 /// (`tile_n · abits` packed rows) plus one LHS row strip comfortably in
-/// L1 for 8-bit operands at `k ≤ 16384`.
-#[derive(Clone, Copy, Debug)]
+/// L1 for 8-bit operands at `k ≤ 16384`, streaming `k` unchunked —
+/// the analytical fallback when no tuned profile overrides it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct KernelConfig {
     /// Output rows per tile (the parallel work unit).
     pub tile_m: usize,
     /// Output columns per tile.
     pub tile_n: usize,
+    /// Inner-dimension elements per chunk; `usize::MAX` streams whole
+    /// packed rows (no chunking). Rounded up to a whole number of
+    /// 64-bit words internally.
+    pub tile_k: usize,
 }
 
 impl Default for KernelConfig {
@@ -60,7 +78,23 @@ impl Default for KernelConfig {
         KernelConfig {
             tile_m: 8,
             tile_n: 8,
+            tile_k: usize::MAX,
         }
+    }
+}
+
+impl KernelConfig {
+    /// Tile geometry must be at least 1 on every axis. Tile sizes are
+    /// user-reachable (request options, tuned profiles), so violations
+    /// are typed errors rather than panics.
+    pub fn validate(&self) -> Result<(), BismoError> {
+        if self.tile_m < 1 || self.tile_n < 1 || self.tile_k < 1 {
+            return Err(BismoError::InvalidConfig(format!(
+                "tile sizes must be >= 1 (got tile_m={}, tile_n={}, tile_k={})",
+                self.tile_m, self.tile_n, self.tile_k
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -111,6 +145,9 @@ impl PackedOperand {
 /// (`m×k`) and `r_t` the transposed RHS (`n×k`), both bit-plane
 /// decomposed. Bit-exact against [`crate::baseline::gemm_bitserial`].
 ///
+/// Errs with [`BismoError::ShapeMismatch`] when the operands disagree
+/// on `k`.
+///
 /// ```
 /// use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
 /// use bismo::kernel::gemm_tiled;
@@ -121,9 +158,9 @@ impl PackedOperand {
 /// let la = BitSerialMatrix::from_int(&a, 2, false);
 /// // The RHS is packed transposed (rows along k), in one fused pass.
 /// let rb = BitSerialMatrix::from_int_transposed(&b, 2, false);
-/// assert_eq!(gemm_tiled(&la, &rb), a.matmul(&b));
+/// assert_eq!(gemm_tiled(&la, &rb).unwrap(), a.matmul(&b));
 /// ```
-pub fn gemm_tiled(l: &BitSerialMatrix, r_t: &BitSerialMatrix) -> IntMatrix {
+pub fn gemm_tiled(l: &BitSerialMatrix, r_t: &BitSerialMatrix) -> Result<IntMatrix, BismoError> {
     gemm_tiled_with(l, r_t, &KernelConfig::default(), None)
 }
 
@@ -131,7 +168,11 @@ pub fn gemm_tiled(l: &BitSerialMatrix, r_t: &BitSerialMatrix) -> IntMatrix {
 /// the process-wide one — the entry point of the forced-dispatch test
 /// matrix and the cross-tier fuzz mode. The tier must be supported on
 /// this host (see [`DispatchTier::supported`]).
-pub fn gemm_tiled_tier(l: &BitSerialMatrix, r_t: &BitSerialMatrix, tier: DispatchTier) -> IntMatrix {
+pub fn gemm_tiled_tier(
+    l: &BitSerialMatrix,
+    r_t: &BitSerialMatrix,
+    tier: DispatchTier,
+) -> Result<IntMatrix, BismoError> {
     gemm_tiled_block_tier(
         l,
         r_t,
@@ -151,7 +192,7 @@ pub fn gemm_tiled_with(
     r_t: &BitSerialMatrix,
     cfg: &KernelConfig,
     pool: Option<(&WorkerPool, usize)>,
-) -> IntMatrix {
+) -> Result<IntMatrix, BismoError> {
     gemm_tiled_block(l, r_t, 0..l.rows, 0..r_t.rows, None, cfg, pool)
 }
 
@@ -177,7 +218,7 @@ pub fn gemm_tiled_block(
     lhs_planes: Option<Range<u32>>,
     cfg: &KernelConfig,
     pool: Option<(&WorkerPool, usize)>,
-) -> IntMatrix {
+) -> Result<IntMatrix, BismoError> {
     // The dispatch tier is resolved once per block, not per strip: the
     // inner loop sees a plain function parameter.
     gemm_tiled_block_tier(l, r_t, rows, cols, lhs_planes, cfg, pool, DispatchTier::active())
@@ -196,29 +237,30 @@ pub fn gemm_tiled_block_tier(
     cfg: &KernelConfig,
     pool: Option<(&WorkerPool, usize)>,
     tier: DispatchTier,
-) -> IntMatrix {
-    assert_eq!(
-        l.cols, r_t.cols,
-        "k mismatch: lhs {}×{}, rhs(T) {}×{}",
-        l.rows, l.cols, r_t.rows, r_t.cols
-    );
-    assert!(
-        rows.end <= l.rows && cols.end <= r_t.rows,
-        "output block {rows:?}×{cols:?} out of range for {}×{}",
-        l.rows,
-        r_t.rows
-    );
-    assert!(cfg.tile_m >= 1 && cfg.tile_n >= 1, "tile sizes must be >= 1");
+) -> Result<IntMatrix, BismoError> {
+    if l.cols != r_t.cols {
+        return Err(BismoError::ShapeMismatch(format!(
+            "k mismatch: lhs {}×{}, rhs(T) {}×{}",
+            l.rows, l.cols, r_t.rows, r_t.cols
+        )));
+    }
+    if rows.end > l.rows || cols.end > r_t.rows {
+        return Err(BismoError::InvalidConfig(format!(
+            "output block {rows:?}×{cols:?} out of range for {}×{}",
+            l.rows, r_t.rows
+        )));
+    }
+    cfg.validate()?;
     let bm = rows.len();
     let bn = cols.len();
     if bm == 0 || bn == 0 {
-        return IntMatrix::zeros(bm, bn);
+        return Ok(IntMatrix::zeros(bm, bn));
     }
     let lp = PackedOperand::pack(l, rows, lhs_planes.unwrap_or(0..l.bits));
     let rp = PackedOperand::pack(r_t, cols, 0..r_t.bits);
     if lp.planes() == 0 || rp.planes() == 0 {
         // Every scheduled plane zero: this block of the product is zero.
-        return IntMatrix::zeros(bm, bn);
+        return Ok(IntMatrix::zeros(bm, bn));
     }
     // Fused plane-pair weight table: pairw[i·rnp + j] = ±2^{i+j}.
     let mut pairw = Vec::with_capacity(lp.planes() * rp.planes());
@@ -230,33 +272,73 @@ pub fn gemm_tiled_block_tier(
 
     // The single source of tiling arithmetic: block rows in `tile_m`
     // strips (the parallel work unit), block columns in `tile_n` strips
-    // (the cache-residency unit). The kernel never chunks `k` — packed
-    // rows stream whole.
-    let tiles = TilePlan::new(bm, bn, l.cols, cfg.tile_m, cfg.tile_n, l.cols.max(1));
+    // (the cache-residency unit), packed words in `⌈tile_k/64⌉`-word
+    // chunks (whole rows when tile_k is MAX). Oversized tile requests
+    // clamp to the block extent, so any tile >= the axis behaves
+    // identically to "one tile".
+    let tm = cfg.tile_m.min(bm);
+    let tn = cfg.tile_n.min(bn);
+    let words = lp.words;
+    let chunk_words = if cfg.tile_k == usize::MAX {
+        words.max(1)
+    } else {
+        cfg.tile_k.div_ceil(64).clamp(1, words.max(1))
+    };
+    let tiles = TilePlan::new(
+        bm,
+        bn,
+        l.cols,
+        tm,
+        tn,
+        (chunk_words * 64).min(l.cols.max(1)),
+    );
+    let kplan = BlockSplit::new(words, chunk_words);
     let mut data = vec![0i64; bm * bn];
     match pool {
         None => {
-            for (t, chunk) in data.chunks_mut(cfg.tile_m * bn).enumerate() {
-                row_tile_kernel(&lp, &rp, &pairw, tiles.rows.span(t), bn, &tiles.cols, chunk, tier);
+            for (t, chunk) in data.chunks_mut(tm * bn).enumerate() {
+                row_tile_kernel(
+                    &lp,
+                    &rp,
+                    &pairw,
+                    tiles.rows.span(t),
+                    bn,
+                    &tiles.cols,
+                    &kplan,
+                    chunk,
+                    tier,
+                );
             }
         }
         Some((pool, threads)) => {
             let slots: Vec<Mutex<&mut [i64]>> =
-                data.chunks_mut(cfg.tile_m * bn).map(Mutex::new).collect();
+                data.chunks_mut(tm * bn).map(Mutex::new).collect();
             pool.run_limited(tiles.row_tiles(), threads.max(1), &|t| {
                 let mut guard = slots[t].lock().unwrap();
                 let chunk: &mut [i64] = &mut guard;
-                row_tile_kernel(&lp, &rp, &pairw, tiles.rows.span(t), bn, &tiles.cols, chunk, tier);
+                row_tile_kernel(
+                    &lp,
+                    &rp,
+                    &pairw,
+                    tiles.rows.span(t),
+                    bn,
+                    &tiles.cols,
+                    &kplan,
+                    chunk,
+                    tier,
+                );
             });
         }
     }
-    IntMatrix::from_slice(bm, bn, &data)
+    Ok(IntMatrix::from_slice(bm, bn, &data))
 }
 
-/// Compute output rows `rows` into `out` (row-major,
-/// `rows.len() × n`, relative to `rows.start`), walking the column
-/// tiles of `cols` so the packed RHS tile stays cache-resident across
-/// the rows of this tile. The dispatch tier arrives pre-resolved as a
+/// Accumulate output rows `rows` into `out` (row-major,
+/// `rows.len() × n`, relative to `rows.start`, pre-zeroed by the
+/// caller), walking the column tiles of `cols` so the packed RHS tile
+/// stays cache-resident across the rows of this tile, and the packed
+/// words in the strips of `kplan` so deep operands reuse each strip
+/// across the whole tile. The dispatch tier arrives pre-resolved as a
 /// plain parameter (hence the argument count).
 #[allow(clippy::too_many_arguments)]
 fn row_tile_kernel(
@@ -266,25 +348,30 @@ fn row_tile_kernel(
     rows: Range<usize>,
     n: usize,
     cols: &BlockSplit,
+    kplan: &BlockSplit,
     out: &mut [i64],
     tier: DispatchTier,
 ) {
     let words = lp.words;
     let lnp = lp.planes();
     let rnp = rp.planes();
-    for ctile in cols.iter() {
-        for r in rows.clone() {
-            let lrow_all = &lp.data[r * lnp * words..(r + 1) * lnp * words];
-            let out_row = &mut out[(r - rows.start) * n..(r - rows.start + 1) * n];
-            for c in ctile.clone() {
-                let rrow_all = &rp.data[c * rnp * words..(c + 1) * rnp * words];
-                let mut acc = 0i64;
-                for (lrow, wrow) in lrow_all.chunks_exact(words).zip(pairw.chunks_exact(rnp)) {
-                    for (rrow, &w) in rrow_all.chunks_exact(words).zip(wrow) {
-                        acc += w * popcount_and_tier(tier, lrow, rrow) as i64;
+    for kw in kplan.iter() {
+        for ctile in cols.iter() {
+            for r in rows.clone() {
+                let lrow_all = &lp.data[r * lnp * words..(r + 1) * lnp * words];
+                let out_row = &mut out[(r - rows.start) * n..(r - rows.start + 1) * n];
+                for c in ctile.clone() {
+                    let rrow_all = &rp.data[c * rnp * words..(c + 1) * rnp * words];
+                    let mut acc = 0i64;
+                    for (li, wrow) in pairw.chunks_exact(rnp).enumerate() {
+                        let lstrip = &lrow_all[li * words + kw.start..li * words + kw.end];
+                        for (ri, &w) in wrow.iter().enumerate() {
+                            let rstrip = &rrow_all[ri * words + kw.start..ri * words + kw.end];
+                            acc += w * popcount_and_tier(tier, lstrip, rstrip) as i64;
+                        }
                     }
+                    out_row[c] += acc;
                 }
-                out_row[c] = acc;
             }
         }
     }
@@ -325,7 +412,7 @@ mod tests {
             let a = rng.index(8) as u32 + 1;
             let (ls, rs) = (rng.chance(0.5), rng.chance(0.5));
             let (la, rb, expect) = random_pair(rng, m, k, n, w, a, ls, rs);
-            let tiled = gemm_tiled(&la, &rb);
+            let tiled = gemm_tiled(&la, &rb).unwrap();
             assert_eq!(tiled, expect, "m={m} k={k} n={n} w={w} a={a}");
             assert_eq!(tiled, gemm_bitserial(&la, &rb));
         });
@@ -343,14 +430,83 @@ mod tests {
                 let cfg = KernelConfig {
                     tile_m: tm,
                     tile_n: tn,
+                    ..KernelConfig::default()
                 };
                 assert_eq!(
-                    gemm_tiled_with(&la, &rb, &cfg, None),
+                    gemm_tiled_with(&la, &rb, &cfg, None).unwrap(),
                     expect,
                     "m={m} k={k} n={n} tile={tm}x{tn}"
                 );
             }
         }
+    }
+
+    #[test]
+    fn k_chunked_matches_whole_k() {
+        // Finite tile_k strips must accumulate to exactly the unchunked
+        // product for every chunk/word alignment: chunks smaller than a
+        // word (round up to one), word-aligned, straddling, and larger
+        // than k (degenerate to whole-row).
+        let mut rng = Rng::new(0xC4A);
+        for (m, k, n) in [(5, 63, 7), (9, 64, 5), (7, 129, 9), (6, 500, 8)] {
+            let (la, rb, expect) = random_pair(&mut rng, m, k, n, 4, 3, true, true);
+            assert_eq!(gemm_tiled(&la, &rb).unwrap(), expect);
+            for tk in [1usize, 64, 100, 128, 192, 4096] {
+                let cfg = KernelConfig {
+                    tile_k: tk,
+                    ..KernelConfig::default()
+                };
+                assert_eq!(
+                    gemm_tiled_with(&la, &rb, &cfg, None).unwrap(),
+                    expect,
+                    "m={m} k={k} n={n} tile_k={tk}"
+                );
+                // Chunking must also hold on the pool path (accumulation
+                // happens per row-tile slot).
+                assert_eq!(
+                    gemm_tiled_with(&la, &rb, &cfg, Some((WorkerPool::global(), 4))).unwrap(),
+                    expect,
+                    "pooled m={m} k={k} n={n} tile_k={tk}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_tiles_are_typed_errors() {
+        let mut rng = Rng::new(0xBAD);
+        let (la, rb, _) = random_pair(&mut rng, 4, 70, 4, 2, 2, false, false);
+        for cfg in [
+            KernelConfig {
+                tile_m: 0,
+                ..KernelConfig::default()
+            },
+            KernelConfig {
+                tile_n: 0,
+                ..KernelConfig::default()
+            },
+            KernelConfig {
+                tile_k: 0,
+                ..KernelConfig::default()
+            },
+        ] {
+            assert!(cfg.validate().is_err());
+            let r = gemm_tiled_with(&la, &rb, &cfg, None);
+            assert!(matches!(r, Err(BismoError::InvalidConfig(_))), "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn shape_and_range_violations_are_typed_errors() {
+        let mut rng = Rng::new(0xBAD2);
+        let (la, rb, _) = random_pair(&mut rng, 4, 70, 4, 2, 2, false, false);
+        let (lb, _, _) = random_pair(&mut rng, 4, 71, 4, 2, 2, false, false);
+        assert!(matches!(
+            gemm_tiled(&lb, &rb),
+            Err(BismoError::ShapeMismatch(_))
+        ));
+        let r = gemm_tiled_block(&la, &rb, 0..5, 0..4, None, &KernelConfig::default(), None);
+        assert!(matches!(r, Err(BismoError::InvalidConfig(_))), "{r:?}");
     }
 
     #[test]
@@ -363,7 +519,7 @@ mod tests {
         let rb = BitSerialMatrix::from_int_transposed(&b, 4, false);
         assert!(la.plane_is_zero(0) && la.plane_is_zero(4));
         assert!(rb.plane_is_zero(1));
-        assert_eq!(gemm_tiled(&la, &rb), a.matmul(&b));
+        assert_eq!(gemm_tiled(&la, &rb).unwrap(), a.matmul(&b));
     }
 
     #[test]
@@ -373,7 +529,7 @@ mod tests {
         let b = IntMatrix::random(&mut rng, 70, 6, 3, false);
         let lz = BitSerialMatrix::from_int(&z, 4, false);
         let rb = BitSerialMatrix::from_int_transposed(&b, 3, false);
-        assert_eq!(gemm_tiled(&lz, &rb), IntMatrix::zeros(5, 6));
+        assert_eq!(gemm_tiled(&lz, &rb).unwrap(), IntMatrix::zeros(5, 6));
     }
 
     #[test]
@@ -383,12 +539,13 @@ mod tests {
             let k = rng.index(300) + 1;
             let n = rng.index(25) + 1;
             let (la, rb, expect) = random_pair(rng, m, k, n, 4, 3, true, true);
-            let serial = gemm_tiled(&la, &rb);
+            let serial = gemm_tiled(&la, &rb).unwrap();
             assert_eq!(serial, expect);
             let cfg = KernelConfig::default();
             for threads in [1, 2, 3, 8] {
                 assert_eq!(
-                    gemm_tiled_with(&la, &rb, &cfg, Some((WorkerPool::global(), threads))),
+                    gemm_tiled_with(&la, &rb, &cfg, Some((WorkerPool::global(), threads)))
+                        .unwrap(),
                     serial
                 );
             }
@@ -414,7 +571,8 @@ mod tests {
                 None,
                 &KernelConfig::default(),
                 None,
-            );
+            )
+            .unwrap();
             let want = IntMatrix::from_fn(r1 - r0, c1 - c0, |r, c| expect.get(r0 + r, c0 + c));
             assert_eq!(block, want, "m={m} k={k} n={n} block {r0}..{r1}×{c0}..{c1}");
         });
@@ -439,6 +597,7 @@ mod tests {
                         &KernelConfig::default(),
                         None,
                     )
+                    .unwrap()
                 })
                 .collect();
             assert_eq!(plan.assemble(&parts).unwrap(), expect, "groups={groups}");
@@ -449,9 +608,9 @@ mod tests {
     fn explicit_tier_paths_match_the_default_dispatch() {
         let mut rng = Rng::new(0x71E6);
         let (la, rb, expect) = random_pair(&mut rng, 11, 130, 9, 3, 2, true, false);
-        assert_eq!(gemm_tiled(&la, &rb), expect);
+        assert_eq!(gemm_tiled(&la, &rb).unwrap(), expect);
         for tier in DispatchTier::supported() {
-            assert_eq!(gemm_tiled_tier(&la, &rb, tier), expect, "tier={tier}");
+            assert_eq!(gemm_tiled_tier(&la, &rb, tier).unwrap(), expect, "tier={tier}");
         }
     }
 
@@ -463,7 +622,7 @@ mod tests {
             let b = IntMatrix::from_fn(70, 3, |_, _| lo);
             let la = BitSerialMatrix::from_int(&a, bits, true);
             let rb = BitSerialMatrix::from_int_transposed(&b, bits, true);
-            assert_eq!(gemm_tiled(&la, &rb), a.matmul(&b), "bits={bits}");
+            assert_eq!(gemm_tiled(&la, &rb).unwrap(), a.matmul(&b), "bits={bits}");
         }
     }
 }

@@ -9,6 +9,14 @@
 //! bismo schedule [--instance N] [--m M --k K --n N ...]   dump queues
 //! bismo bench [--quick] [--out PATH] [--threads N]   CPU kernel suite
 //!                                           -> BENCH_gemm.json
+//! bismo tune [--quick] [--out PATH] [--dir DIR] [--threads N] [--seed S]
+//!                closed-loop autotuner: measures candidate tile
+//!                geometries and shard plans per shape class (each
+//!                verified bit-exact before timing), refits the cost
+//!                model, persists the per-machine profile under DIR
+//!                (default tuned/, override BISMO_TUNE_DIR) keyed by
+//!                CPU identity, and writes BENCH_tune.json; sessions
+//!                load the profile automatically at startup
 //! bismo serve [--host H] [--port P] [--workers W] [--batch B]
 //!                [--cache-mb M] [--max-in-flight N] [--tenant-in-flight N]
 //!                [--tenant-weight-mb M] [--instance N]
@@ -41,8 +49,9 @@
 //!                -> BENCH_cnn.json
 //! bismo bench-check --baseline PATH --current PATH [--tolerance F]
 //!                CI regression gate: compares two BENCH_gemm.json
-//!                files, failing on schema drift or on per-case
-//!                speedup regression beyond the tolerance
+//!                (or two BENCH_tune.json) files, failing on schema
+//!                drift or on per-case speedup regression beyond the
+//!                tolerance
 //! bismo fuzz [--iters N] [--seed S] [--mode legal|mutation|differential|wire|all]
 //!                [--out PATH]               seeded structured fuzzing of
 //!                the ISA decoder, simulator and serving backends; every
@@ -280,6 +289,7 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     use bismo::kernel::{gemm_tiled, gemm_tiled_with, KernelConfig, WorkerPool};
     let mt = |la: &BitSerialMatrix, rb: &BitSerialMatrix, threads: usize| {
         gemm_tiled_with(la, rb, &KernelConfig::default(), Some((WorkerPool::global(), threads)))
+            .expect("bench shapes are valid")
     };
     use bismo::util::bench::{report, BenchTimer};
     use bismo::util::Json;
@@ -352,7 +362,7 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
         // Correctness gate first: the engine must be bit-exact against
         // the oracle on every case it is timed on.
         let oracle = gemm_bitserial(&la, &rb);
-        if gemm_tiled(&la, &rb) != oracle {
+        if gemm_tiled(&la, &rb)? != oracle {
             return Err(BismoError::VerifyFailed(format!(
                 "tiled kernel mismatch on {}",
                 case.name()
@@ -375,7 +385,7 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
         let name = case.name();
         let base = timer.run(|| gemm_bitserial(&la, &rb));
         report(&format!("baseline_{name}_1t"), &base, Some((ops, "binop")));
-        let tiled = timer.run(|| gemm_tiled(&la, &rb));
+        let tiled = timer.run(|| gemm_tiled(&la, &rb).expect("verified above"));
         report(&format!("tiled_{name}_1t"), &tiled, Some((ops, "binop")));
         let tiled_mt = timer.run(|| mt(&la, &rb, threads));
         report(
@@ -1460,6 +1470,163 @@ fn cmd_cnn_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     Ok(())
 }
 
+/// `bismo tune`: the closed-loop autotuner. Benchmarks candidate tile
+/// geometries and shard plans on *this* host across the shape classes
+/// (every candidate verified bit-exact against the software oracle
+/// before it is timed), refits the cost-model constants, persists the
+/// per-machine profile content-addressed by CPU identity, and writes
+/// the measurement record to `BENCH_tune.json`. Sessions pick the
+/// profile up automatically on their next start.
+fn cmd_tune(flags: &HashMap<String, String>) -> Result<(), BismoError> {
+    use bismo::costmodel::{profile_dir, tune_host, TuneConfig};
+    use bismo::kernel::KernelConfig;
+    use bismo::util::Json;
+    use std::collections::BTreeMap;
+
+    let quick = flags.contains_key("quick");
+    let out_path = flags
+        .get("out")
+        .filter(|v| !v.is_empty())
+        .cloned()
+        .unwrap_or_else(|| "BENCH_tune.json".to_string());
+    let dir = flags
+        .get("dir")
+        .filter(|v| !v.is_empty())
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(profile_dir);
+    let cfg = TuneConfig {
+        quick,
+        threads: get(flags, "threads", 0usize),
+        seed: get(flags, "seed", TuneConfig::default().seed),
+    };
+
+    println!(
+        "tuning ({} mode) — every candidate is verified against the bit-serial oracle before timing",
+        if quick { "quick" } else { "full" }
+    );
+    let outcome = tune_host(&cfg)?;
+    let profile = &outcome.profile;
+    let profile_path = profile.save_in(&dir)?;
+
+    // `tile_k == usize::MAX` is the whole-k sentinel; rendered as "K"
+    // in the table and as 0 in JSON (the profile's disk convention).
+    let tile_name = |t: &KernelConfig| {
+        if t.tile_k == usize::MAX {
+            format!("{}x{}xK", t.tile_m, t.tile_n)
+        } else {
+            format!("{}x{}x{}", t.tile_m, t.tile_n, t.tile_k)
+        }
+    };
+    let tile_k_json = |t: &KernelConfig| {
+        Json::num(if t.tile_k == usize::MAX {
+            0.0
+        } else {
+            t.tile_k as f64
+        })
+    };
+
+    let mut t = Table::new(
+        &format!("tuned picks ({})", profile.key()),
+        &["class", "workload", "default GOPS", "tuned GOPS", "tile", "shards", "speedup"],
+    );
+    let mut jclasses = Vec::new();
+    for c in &outcome.classes {
+        t.rowf(&[
+            &c.class,
+            &format!("{} w{}a{}", c.shape, c.wbits, c.abits),
+            &f(c.default_gops, 3),
+            &f(c.tuned_gops, 3),
+            &tile_name(&c.tile),
+            &format!("{} ({}x{})", c.shards, c.grid.0, c.grid.1),
+            &f(c.speedup(), 3),
+        ]);
+
+        let mut dflt = BTreeMap::new();
+        let default_tile = KernelConfig::default();
+        dflt.insert("tile_m".into(), Json::num(default_tile.tile_m as f64));
+        dflt.insert("tile_n".into(), Json::num(default_tile.tile_n as f64));
+        dflt.insert("tile_k".into(), tile_k_json(&default_tile));
+        dflt.insert("ns".into(), Json::num(c.default_ns));
+        dflt.insert("gops".into(), Json::num(c.default_gops));
+        let mut tuned = BTreeMap::new();
+        tuned.insert("tile_m".into(), Json::num(c.tile.tile_m as f64));
+        tuned.insert("tile_n".into(), Json::num(c.tile.tile_n as f64));
+        tuned.insert("tile_k".into(), tile_k_json(&c.tile));
+        tuned.insert("shards".into(), Json::num(c.shards as f64));
+        tuned.insert("grid_rows".into(), Json::num(c.grid.0 as f64));
+        tuned.insert("grid_cols".into(), Json::num(c.grid.1 as f64));
+        tuned.insert("ns".into(), Json::num(c.tuned_ns));
+        tuned.insert("gops".into(), Json::num(c.tuned_gops));
+        let mut jc = BTreeMap::new();
+        jc.insert("class".into(), Json::str(c.class.name()));
+        jc.insert("m".into(), Json::num(c.shape.m as f64));
+        jc.insert("k".into(), Json::num(c.shape.k as f64));
+        jc.insert("n".into(), Json::num(c.shape.n as f64));
+        jc.insert("wbits".into(), Json::num(c.wbits as f64));
+        jc.insert("abits".into(), Json::num(c.abits as f64));
+        jc.insert("binary_ops".into(), Json::num(c.binary_ops as f64));
+        jc.insert("candidates".into(), Json::num(c.candidates as f64));
+        jc.insert("default".into(), Json::Obj(dflt));
+        jc.insert("tuned".into(), Json::Obj(tuned));
+        jc.insert("speedup".into(), Json::num(c.speedup()));
+        jclasses.push(Json::Obj(jc));
+    }
+    t.print();
+
+    let mut jmodel = BTreeMap::new();
+    jmodel.insert("alpha_dpu".into(), Json::num(profile.cost_model.alpha_dpu));
+    jmodel.insert("beta_dpu".into(), Json::num(profile.cost_model.beta_dpu));
+    jmodel.insert("lut_base".into(), Json::num(profile.cost_model.lut_base));
+    jmodel.insert("lut_res".into(), Json::num(profile.cost_model.lut_res));
+    jmodel.insert(
+        "bram_base".into(),
+        Json::num(profile.cost_model.bram_base as f64),
+    );
+    let mut jfit = BTreeMap::new();
+    jfit.insert("ns_per_op".into(), Json::num(profile.sw_fit.ns_per_op));
+    jfit.insert("ns_base".into(), Json::num(profile.sw_fit.ns_base));
+
+    let mut root = BTreeMap::new();
+    root.insert("schema".into(), Json::str("bismo-tune/v1"));
+    root.insert(
+        "mode".into(),
+        Json::str(if quick { "quick" } else { "full" }),
+    );
+    root.insert(
+        "simd_tier".into(),
+        Json::str(&profile.fingerprint.simd_tier),
+    );
+    root.insert("cores".into(), Json::num(profile.fingerprint.cores as f64));
+    root.insert(
+        "generated_unix".into(),
+        Json::num(profile.generated_unix as f64),
+    );
+    root.insert("profile_key".into(), Json::str(&profile.key()));
+    root.insert(
+        "profile_path".into(),
+        Json::str(&profile_path.display().to_string()),
+    );
+    root.insert("cost_model".into(), Json::Obj(jmodel));
+    root.insert("sw_fit".into(), Json::Obj(jfit));
+    root.insert("classes".into(), Json::Arr(jclasses));
+    let doc = Json::Obj(root);
+    std::fs::write(&out_path, doc.pretty(2) + "\n")
+        .map_err(|e| BismoError::Io(format!("writing {out_path}: {e}")))?;
+
+    let worst = outcome
+        .classes
+        .iter()
+        .map(|c| c.speedup())
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "wrote {out_path}; profile {} -> {} (worst-class tuned/default ratio {:.3})",
+        profile.key(),
+        profile_path.display(),
+        worst
+    );
+    Ok(())
+}
+
 /// `bismo bench-check`: the CI bench-regression gate.
 ///
 /// Compares a committed baseline `BENCH_gemm.json` against a freshly
@@ -1507,6 +1674,15 @@ fn cmd_bench_check(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     };
     let base = read(&baseline_path)?;
     let cur = read(&current_path)?;
+
+    // `bench-check` gates two report schemas: the GEMM suite
+    // (bismo-bench-gemm/v1) and the autotuner record (bismo-tune/v1).
+    // The documents' schema fields select the comparison.
+    if base.get("schema").and_then(Json::as_str) == Some("bismo-tune/v1")
+        || cur.get("schema").and_then(Json::as_str) == Some("bismo-tune/v1")
+    {
+        return bench_check_tune(&base, &cur, &baseline_path, &current_path, tolerance);
+    }
 
     const SCHEMA: &str = "bismo-bench-gemm/v1";
     // Shape facts that must be *identical* (deterministic workload
@@ -1646,6 +1822,157 @@ fn cmd_bench_check(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     Ok(())
 }
 
+/// The `bismo-tune/v1` arm of the bench-check gate. Same two failure
+/// classes as the GEMM arm — schema drift (mode/class set/workload
+/// identity) and regression — but with two regression conditions per
+/// class: the tuned/default speedup must not drop below
+/// `baseline · (1 − tolerance)`, and it must never drop below 1.0
+/// (the tuned pick is an argmax over a candidate set that contains
+/// the analytical default, so tuned ≥ default holds by construction;
+/// anything less means the sweep itself is broken).
+fn bench_check_tune(
+    base: &bismo::util::Json,
+    cur: &bismo::util::Json,
+    baseline_path: &str,
+    current_path: &str,
+    tolerance: f64,
+) -> Result<(), BismoError> {
+    use bismo::util::Json;
+    use std::collections::BTreeMap;
+
+    const SCHEMA: &str = "bismo-tune/v1";
+    const IDENTITY_NUM: [&str; 6] = ["m", "k", "n", "wbits", "abits", "binary_ops"];
+
+    let mut drift: Vec<String> = Vec::new();
+    for (which, doc) in [("baseline", base), ("current", cur)] {
+        match doc.get("schema").and_then(Json::as_str) {
+            Some(SCHEMA) => {}
+            other => drift.push(format!("{which}: schema {other:?}, expected {SCHEMA:?}")),
+        }
+    }
+    let mode = |doc: &Json| doc.get("mode").and_then(Json::as_str).map(str::to_string);
+    if mode(base) != mode(cur) {
+        drift.push(format!(
+            "tune mode differs: baseline {:?} vs current {:?}",
+            mode(base),
+            mode(cur)
+        ));
+    }
+
+    // Per class: the identity facts, the speedup, and the tuned/default
+    // throughputs (present-check only; absolute GOPS are not compared
+    // across documents — they are machine-local).
+    let index = |doc: &Json, which: &str, drift: &mut Vec<String>| {
+        let mut by_class: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
+        let classes = doc.get("classes").and_then(Json::as_arr).unwrap_or(&[]);
+        if classes.is_empty() {
+            drift.push(format!("{which}: no classes array"));
+        }
+        for class in classes {
+            let Some(name) = class.get("class").and_then(Json::as_str) else {
+                drift.push(format!("{which}: class entry without a class name"));
+                continue;
+            };
+            let mut fields = BTreeMap::new();
+            for f in IDENTITY_NUM.iter() {
+                match class.get(f).and_then(Json::as_f64) {
+                    Some(v) => {
+                        fields.insert(f.to_string(), v);
+                    }
+                    None => drift.push(format!("{which}: class {name} missing field {f}")),
+                }
+            }
+            match class.get("speedup").and_then(Json::as_f64) {
+                Some(v) => {
+                    fields.insert("speedup".to_string(), v);
+                }
+                None => drift.push(format!("{which}: class {name} missing field speedup")),
+            }
+            for (section, field) in [("default", "gops"), ("tuned", "gops")] {
+                match class
+                    .get(section)
+                    .and_then(|s| s.get(field))
+                    .and_then(Json::as_f64)
+                {
+                    Some(v) => {
+                        fields.insert(format!("{section}_{field}"), v);
+                    }
+                    None => drift.push(format!(
+                        "{which}: class {name} missing field {section}.{field}"
+                    )),
+                }
+            }
+            by_class.insert(name.to_string(), fields);
+        }
+        by_class
+    };
+    let base_classes = index(base, "baseline", &mut drift);
+    let cur_classes = index(cur, "current", &mut drift);
+    for name in base_classes.keys() {
+        if !cur_classes.contains_key(name) {
+            drift.push(format!("class {name} present in baseline, missing in current"));
+        }
+    }
+    for name in cur_classes.keys() {
+        if !base_classes.contains_key(name) {
+            drift.push(format!("class {name} present in current, not in baseline"));
+        }
+    }
+    for (name, bf) in &base_classes {
+        let Some(cf) = cur_classes.get(name) else { continue };
+        for f in IDENTITY_NUM.iter() {
+            if let (Some(bv), Some(cv)) = (bf.get(*f), cf.get(*f)) {
+                if bv != cv {
+                    drift.push(format!("class {name}: {f} drifted ({bv} -> {cv})"));
+                }
+            }
+        }
+    }
+    if !drift.is_empty() {
+        for d in &drift {
+            eprintln!("schema drift: {d}");
+        }
+        return Err(BismoError::VerifyFailed(format!(
+            "bench-check: {} schema drift issue(s) between {baseline_path} and {current_path}",
+            drift.len()
+        )));
+    }
+
+    let mut t = Table::new(
+        &format!("bench-check tune (tolerance {tolerance})"),
+        &["class", "baseline speedup", "current speedup", "floor", "status"],
+    );
+    let mut regressions = 0usize;
+    for (name, bf) in &base_classes {
+        let cf = &cur_classes[name];
+        // The 1.0 floor is absolute: tuned < default means the argmax
+        // invariant broke, regardless of how lenient the tolerance is.
+        let floor = (bf["speedup"] * (1.0 - tolerance)).max(1.0);
+        let ok = cf["speedup"] >= floor;
+        t.rowf(&[
+            name,
+            &f(bf["speedup"], 3),
+            &f(cf["speedup"], 3),
+            &f(floor, 3),
+            &if ok { "ok" } else { "REGRESSION" },
+        ]);
+        if !ok {
+            regressions += 1;
+        }
+    }
+    t.print();
+    if regressions > 0 {
+        return Err(BismoError::VerifyFailed(format!(
+            "bench-check: {regressions} tuned class(es) regressed beyond tolerance {tolerance}"
+        )));
+    }
+    println!(
+        "bench-check OK: {} tuned class(es) within tolerance {tolerance}",
+        base_classes.len()
+    );
+    Ok(())
+}
+
 fn cmd_costmodel(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     let model = CostModel::paper();
     let fitted = CostModel::fit_from_synth();
@@ -1773,6 +2100,31 @@ fn cmd_info() -> Result<(), BismoError> {
         DispatchTier::detect(),
         supported.join(", ")
     );
+    {
+        use bismo::costmodel::{profile_dir, CpuFingerprint, TunedProfile};
+        let dir = profile_dir();
+        match CpuFingerprint::detect() {
+            Ok(fp) => match TunedProfile::load_for(&dir, &fp) {
+                Ok(Some(p)) => println!(
+                    "tuned profile: {} ({} classes, fitted alpha={:.2} beta={:.1}) loaded from {}",
+                    p.key(),
+                    p.classes.len(),
+                    p.cost_model.alpha_dpu,
+                    p.cost_model.beta_dpu,
+                    dir.display()
+                ),
+                Ok(None) => println!(
+                    "tuned profile: none for {} in {} — analytical defaults in use (run `bismo tune`; BISMO_TUNE_DIR overrides the directory)",
+                    fp.key(),
+                    dir.display()
+                ),
+                Err(e) => println!(
+                    "tuned profile: rejected ({e}) — analytical defaults in use"
+                ),
+            },
+            Err(e) => println!("tuned profile: fingerprint unavailable ({e})"),
+        }
+    }
     #[cfg(feature = "xla")]
     {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -1892,9 +2244,10 @@ fn cmd_snapshot(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     Ok(())
 }
 
-const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|bench|serve|serve-bench|shard-bench|cnn-bench|bench-check|fuzz|snapshot|costmodel|synth|power|instances|info> [flags]
+const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|bench|tune|serve|serve-bench|shard-bench|cnn-bench|bench-check|fuzz|snapshot|costmodel|synth|power|instances|info> [flags]
 flags: --instance N  --m M --k K --n N  --wbits W --abits A  --signed --no-overlap --bit-skip  --seed S  --dk N
 bench: --quick  --out PATH (default BENCH_gemm.json)  --threads N
+tune: --quick  --out PATH (default BENCH_tune.json)  --dir DIR (default tuned/ or $BISMO_TUNE_DIR)  --threads N  --seed S
 serve: --host H (default 127.0.0.1)  --port P (default 7410; 0 = ephemeral)  --workers W  --batch B  --cache-mb M  --max-in-flight N  --tenant-in-flight N  --tenant-weight-mb M
 serve-bench: --quick  --backend engine|sim  --requests N  --rate RPS  --layers L  --workers W  --batch B  --out PATH (default BENCH_serve.json)  --remote  --clients C  --addr HOST:PORT  --max-in-flight N  --tenant-in-flight N
 shard-bench: --quick  --backend engine|sim  --reps N  --max-shards S  --budget-luts L --budget-brams B  --out PATH (default BENCH_shard.json)
@@ -1913,6 +2266,7 @@ fn main() {
         "simulate" => cmd_simulate(&flags),
         "schedule" => cmd_schedule(&flags),
         "bench" => cmd_bench(&flags),
+        "tune" => cmd_tune(&flags),
         "serve" => cmd_serve(&flags),
         "serve-bench" => cmd_serve_bench(&flags),
         "shard-bench" => cmd_shard_bench(&flags),

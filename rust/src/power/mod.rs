@@ -79,7 +79,7 @@ impl PowerModel {
             })
             .collect();
         let idle_y: Vec<f64> = TABLE_V.iter().map(|r| r.idle_w).collect();
-        let bi = least_squares(&idle_x, &idle_y);
+        let bi = least_squares(&idle_x, &idle_y).expect("Table V idle fit is well-conditioned");
 
         // Exec increment: c3·(Dm·Dn·Dk)·f (single coefficient).
         let ex: Vec<f64> = TABLE_V
@@ -105,7 +105,7 @@ impl PowerModel {
             .map(|r| vec![1.0, r.fclk_mhz as f64])
             .collect();
         let fr_y: Vec<f64> = TABLE_V.iter().map(|r| r.fr_inc_w).collect();
-        let bf = least_squares(&fr_x, &fr_y);
+        let bf = least_squares(&fr_x, &fr_y).expect("Table V fetch/result fit is well-conditioned");
 
         PowerModel {
             c0: bi[0],

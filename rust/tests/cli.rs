@@ -333,6 +333,51 @@ fn bench_check_rejects_schema_drift() {
 }
 
 #[test]
+fn tune_quick_persists_a_profile_and_self_validates_through_bench_check() {
+    let base = std::env::temp_dir().join(format!("bismo_tune_cli_{}", std::process::id()));
+    let dir = base.join("profiles");
+    let out = base.join("BENCH_tune.json");
+    let dir_str = dir.to_str().unwrap().to_string();
+    let out_str = out.to_str().unwrap().to_string();
+    let (ok, text) = bismo(&[
+        "tune", "--quick", "--threads", "2", "--out", &out_str, "--dir", &dir_str,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("tuned picks"), "{text}");
+    let json = std::fs::read_to_string(&out).expect("tune json written");
+    let doc = bismo::util::Json::parse(&json).expect("valid json");
+    assert_eq!(
+        doc.get("schema").and_then(|s| s.as_str()),
+        Some("bismo-tune/v1")
+    );
+    assert_eq!(doc.get("mode").and_then(|s| s.as_str()), Some("quick"));
+    let key = doc
+        .get("profile_key")
+        .and_then(|s| s.as_str())
+        .expect("profile_key present");
+    // The profile landed at its content address and re-parses as the
+    // runtime will read it.
+    let profile_path = dir.join(format!("bismo-tune-{key}.json"));
+    assert!(profile_path.exists(), "{}", profile_path.display());
+    let classes = doc.get("classes").and_then(|c| c.as_arr()).unwrap();
+    assert_eq!(classes.len(), 5, "{json}");
+    for class in classes {
+        let speedup = class.get("speedup").and_then(|s| s.as_f64()).unwrap();
+        assert!(
+            speedup >= 1.0,
+            "tuned pick must be at least the measured default: {json}"
+        );
+    }
+    // The tune report self-validates through the regression gate.
+    let (ok, text) = bismo(&[
+        "bench-check", "--baseline", &out_str, "--current", &out_str, "--tolerance", "0.0",
+    ]);
+    assert!(ok, "tune report must self-validate: {text}");
+    assert!(text.contains("bench-check OK"), "{text}");
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
 fn unknown_instance_is_a_clean_error_not_a_panic() {
     // `try_instance` behind the CLI: a bad Table IV id must exit 1 with
     // a typed-error message, not a panic/abort backtrace.
@@ -392,6 +437,9 @@ fn info_reports_the_dispatch_tier_and_override_knob() {
     assert!(ok, "{text}");
     assert!(text.contains("simd tier:"), "{text}");
     assert!(text.contains("BISMO_SIMD"), "{text}");
+    // Tuned-profile status is always reported (loaded, none, or
+    // rejected), including the directory override knob when absent.
+    assert!(text.contains("tuned profile:"), "{text}");
     // Forcing a tier is reflected verbatim.
     let (ok, text) = bismo_env(&["info"], &[("BISMO_SIMD", "scalar")]);
     assert!(ok, "{text}");

@@ -51,7 +51,7 @@ fn tiled_engine_matches_oracle_everywhere() {
         let oracle = gemm_bitserial(&la, &rb);
         assert_eq!(oracle, expect, "oracle vs reference, case {case}");
 
-        let tiled = gemm_tiled(&la, &rb);
+        let tiled = gemm_tiled(&la, &rb).unwrap();
         assert_eq!(
             tiled, oracle,
             "case {case}: m={m} k={k} n={n} w={wbits} a={abits} \
@@ -82,7 +82,7 @@ fn tiled_engine_matches_oracle_on_every_dispatch_tier() {
         for &tier in &tiers {
             let la = BitSerialMatrix::from_int_tier(&a, wbits, lsigned, tier);
             assert_eq!(
-                gemm_tiled_tier(&la, &rb, tier),
+                gemm_tiled_tier(&la, &rb, tier).unwrap(),
                 expect,
                 "case {case}: tier={tier} m={m} k={k} n={n} w={wbits} a={abits} lmode={lmode}"
             );
@@ -101,15 +101,18 @@ fn tiled_engine_handles_ragged_tiles() {
         let rb = BitSerialMatrix::from_int_transposed(&b, 3, false);
         let expect = a.matmul(&b);
         for (tm, tn) in [(1, 1), (2, 7), (8, 8), (64, 64)] {
-            let cfg = KernelConfig {
-                tile_m: tm,
-                tile_n: tn,
-            };
-            assert_eq!(
-                gemm_tiled_with(&la, &rb, &cfg, None),
-                expect,
-                "m={m} k={k} n={n} tile {tm}x{tn}"
-            );
+            for tk in [64, 128, usize::MAX] {
+                let cfg = KernelConfig {
+                    tile_m: tm,
+                    tile_n: tn,
+                    tile_k: tk,
+                };
+                assert_eq!(
+                    gemm_tiled_with(&la, &rb, &cfg, None).unwrap(),
+                    expect,
+                    "m={m} k={k} n={n} tile {tm}x{tn}x{tk}"
+                );
+            }
         }
     }
 }
@@ -129,7 +132,7 @@ fn parallel_paths_match_serial_on_shared_pool() {
         for threads in [1, 2, 3, 8] {
             assert_eq!(gemm_bitserial_parallel(&la, &rb, threads), serial);
             assert_eq!(
-                gemm_tiled_with(&la, &rb, &cfg, Some((WorkerPool::global(), threads))),
+                gemm_tiled_with(&la, &rb, &cfg, Some((WorkerPool::global(), threads))).unwrap(),
                 serial
             );
         }
@@ -147,8 +150,11 @@ fn dedicated_pool_usable_alongside_global() {
     let expect = a.matmul(&b);
     let cfg = KernelConfig::default();
     for _ in 0..5 {
-        assert_eq!(gemm_tiled_with(&la, &rb, &cfg, Some((&pool, 3))), expect);
-        assert_eq!(gemm_tiled_with(&la, &rb, &cfg, Some((WorkerPool::global(), 2))), expect);
+        assert_eq!(gemm_tiled_with(&la, &rb, &cfg, Some((&pool, 3))).unwrap(), expect);
+        assert_eq!(
+            gemm_tiled_with(&la, &rb, &cfg, Some((WorkerPool::global(), 2))).unwrap(),
+            expect
+        );
     }
 }
 

@@ -156,6 +156,7 @@ fn plane_group_shards_assemble_exactly() {
                         &KernelConfig::default(),
                         None,
                     )
+                    .unwrap()
                 })
                 .collect();
             assert_eq!(
@@ -196,6 +197,7 @@ fn sharded_blocks_assemble_exactly_on_every_dispatch_tier() {
                         None,
                         tier,
                     )
+                    .unwrap()
                 })
                 .collect();
             assert_eq!(plan.assemble(&parts).unwrap(), expect, "case {case}: tier={tier}");

@@ -1,0 +1,255 @@
+//! Tuned-profile integration: persisted profiles round-trip through
+//! their content-addressed files, corrupt or mis-addressed profiles
+//! are rejected with typed errors (and degrade to the analytical
+//! defaults on the implicit startup path), and sessions running under
+//! arbitrary legal tuned tile picks stay bit-exact against the oracle
+//! on both backends and every supported SIMD tier.
+
+use bismo::api::{Backend, BismoError, KernelConfig, Session, SessionConfig, TunedProfile};
+use bismo::bitmatrix::{BitSerialMatrix, IntMatrix};
+use bismo::coordinator::Precision;
+use bismo::costmodel::tune::{load_host_profile_in, SHAPE_CLASSES};
+use bismo::costmodel::{ClassTuning, CostModel, CpuFingerprint, SwFit};
+use bismo::kernel::gemm_tiled_block_tier;
+use bismo::simd::DispatchTier;
+use bismo::util::{property_sweep, Rng};
+use std::path::PathBuf;
+
+/// A scratch directory unique to this test run (the tests never touch
+/// the process environment, so `BISMO_TUNE_DIR` races cannot occur).
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bismo_tune_test_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn random_tile(rng: &mut Rng) -> KernelConfig {
+    KernelConfig {
+        tile_m: rng.index(32) + 1,
+        tile_n: rng.index(32) + 1,
+        tile_k: *rng.pick(&[usize::MAX, 1, 37, 64, 128, 1000]),
+    }
+}
+
+/// A profile whose every shape class carries an arbitrary (legal)
+/// tile pick — the shape a real `bismo tune` run would persist.
+fn profile_with_tiles(fp: CpuFingerprint, rng: &mut Rng) -> TunedProfile {
+    let classes = SHAPE_CLASSES
+        .iter()
+        .map(|&class| ClassTuning {
+            class,
+            tile: random_tile(rng),
+            shards: rng.index(4) + 1,
+            grid: (rng.index(2) + 1, rng.index(2) + 1),
+            measured_gops: 2.0,
+            default_gops: 1.0,
+        })
+        .collect();
+    TunedProfile {
+        fingerprint: fp,
+        cost_model: CostModel::paper(),
+        sw_fit: SwFit {
+            ns_per_op: 0.01,
+            ns_base: 50.0,
+        },
+        classes,
+        generated_unix: 0,
+    }
+}
+
+fn host_fp() -> CpuFingerprint {
+    CpuFingerprint::detect().unwrap()
+}
+
+#[test]
+fn sessions_under_arbitrary_tuned_tiles_stay_bit_exact() {
+    property_sweep(0x7E57_70E, 8, |rng, case| {
+        let profile = profile_with_tiles(host_fp(), rng);
+        let session = Session::with_profile(SessionConfig::default(), Some(profile)).unwrap();
+        let m = rng.index(10) + 1;
+        let k = rng.index(128) + 1;
+        let n = rng.index(10) + 1;
+        let prec = Precision {
+            wbits: rng.index(3) as u32 + 1,
+            abits: rng.index(3) as u32 + 1,
+            lsigned: rng.chance(0.5),
+            rsigned: rng.chance(0.5),
+        };
+        let a = IntMatrix::random(rng, m, k, prec.wbits, prec.lsigned);
+        let b = IntMatrix::random(rng, k, n, prec.abits, prec.rsigned);
+        let expect = a.matmul(&b);
+        for backend in [Backend::Engine, Backend::Sim] {
+            let resp = session
+                .matmul(prec)
+                .backend(backend)
+                .run(a.clone(), b.clone())
+                .unwrap();
+            assert_eq!(resp.result, expect, "case {case}: {}", backend.name());
+        }
+        // An explicit builder tile overrides the profile pick and must
+        // be just as exact.
+        let resp = session
+            .matmul(prec)
+            .tile(random_tile(rng))
+            .run(a.clone(), b.clone())
+            .unwrap();
+        assert_eq!(resp.result, expect, "case {case}: explicit tile");
+    });
+}
+
+#[test]
+fn block_paths_match_oracle_under_arbitrary_tiles_on_every_tier() {
+    // The raw engine half of the property: any legal tile geometry
+    // (k-chunking included), any supported forced tier, full-output
+    // block — bit-exact against the i64 reference.
+    let tiers = DispatchTier::supported();
+    property_sweep(0x7E57_B10C, 12, |rng, case| {
+        let m = rng.index(20) + 1;
+        let k = rng.index(300) + 1;
+        let n = rng.index(20) + 1;
+        let wbits = rng.index(6) as u32 + 1;
+        let abits = rng.index(6) as u32 + 1;
+        let a = IntMatrix::random(rng, m, k, wbits, true);
+        let b = IntMatrix::random(rng, k, n, abits, false);
+        let expect = a.matmul(&b);
+        let rb = BitSerialMatrix::from_int_transposed(&b, abits, false);
+        let cfg = random_tile(rng);
+        for &tier in &tiers {
+            let la = BitSerialMatrix::from_int_tier(&a, wbits, true, tier);
+            let got = gemm_tiled_block_tier(&la, &rb, 0..m, 0..n, None, &cfg, None, tier).unwrap();
+            assert_eq!(
+                got, expect,
+                "case {case}: tier={tier} tile {}x{}x{}",
+                cfg.tile_m, cfg.tile_n, cfg.tile_k
+            );
+        }
+    });
+}
+
+#[test]
+fn profile_roundtrips_through_its_content_addressed_file() {
+    let dir = scratch_dir("roundtrip");
+    let mut rng = Rng::new(0x0F11E);
+    let profile = profile_with_tiles(host_fp(), &mut rng);
+    let path = profile.save_in(&dir).unwrap();
+    assert!(path.ends_with(format!("bismo-tune-{}.json", profile.key())));
+    let loaded = TunedProfile::load_for(&dir, &profile.fingerprint)
+        .unwrap()
+        .expect("profile present");
+    assert_eq!(loaded, profile);
+    // The implicit startup loader finds it too.
+    assert_eq!(load_host_profile_in(&dir), Some(profile));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_profile_is_a_typed_parse_error_and_startup_falls_back() {
+    let dir = scratch_dir("corrupt");
+    let fp = host_fp();
+    let path = dir.join(format!("bismo-tune-{}.json", fp.key()));
+    std::fs::write(&path, "{\"schema\": \"bismo-tune-profile/v1\", \"oops").unwrap();
+    match TunedProfile::load_for(&dir, &fp) {
+        Err(BismoError::Parse(_)) => {}
+        other => panic!("expected a typed Parse error, got {other:?}"),
+    }
+    // The session startup path swallows the error: analytical defaults,
+    // fully working service.
+    assert_eq!(load_host_profile_in(&dir), None);
+    let session = Session::with_profile(SessionConfig::default(), load_host_profile_in(&dir)).unwrap();
+    assert!(session.tuned_profile().is_none());
+    let a = IntMatrix::from_slice(2, 2, &[2, 0, 1, 3]);
+    let b = IntMatrix::from_slice(2, 2, &[0, 1, 1, 2]);
+    let expect = a.matmul(&b);
+    let resp = session.run(a, b, Precision::unsigned(2, 2)).unwrap();
+    assert_eq!(resp.result, expect);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn profile_copied_between_machines_is_rejected() {
+    // A profile whose *content* names another machine, sitting at this
+    // host's content address (somebody copied a profile file across
+    // machines): typed Parse rejection, None from the startup loader.
+    let dir = scratch_dir("mismatch");
+    let host = host_fp();
+    let other = CpuFingerprint {
+        simd_tier: "imaginary-tier".to_string(),
+        cores: host.cores + 7,
+    };
+    let mut rng = Rng::new(0xC0_7F);
+    let foreign = profile_with_tiles(other, &mut rng);
+    let path = dir.join(format!("bismo-tune-{}.json", host.key()));
+    std::fs::write(&path, foreign.to_json().pretty(2) + "\n").unwrap();
+    match TunedProfile::load_for(&dir, &host) {
+        Err(BismoError::Parse(msg)) => {
+            assert!(msg.contains("fingerprint mismatch"), "{msg}");
+        }
+        other => panic!("expected a typed Parse error, got {other:?}"),
+    }
+    assert_eq!(load_host_profile_in(&dir), None);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn missing_profile_dir_degrades_to_analytical_defaults() {
+    let dir = std::env::temp_dir().join(format!(
+        "bismo_tune_test_absent_{}_never_created",
+        std::process::id()
+    ));
+    assert_eq!(load_host_profile_in(&dir), None);
+    let session = Session::with_profile(SessionConfig::default(), None).unwrap();
+    assert!(session.tuned_profile().is_none());
+}
+
+#[test]
+fn degenerate_builder_tile_is_rejected_before_queueing() {
+    let session = Session::with_profile(SessionConfig::default(), None).unwrap();
+    let a = IntMatrix::from_slice(2, 2, &[1, 0, 0, 1]);
+    let b = IntMatrix::from_slice(2, 2, &[1, 2, 3, 4]);
+    for bad in [
+        KernelConfig {
+            tile_m: 0,
+            ..KernelConfig::default()
+        },
+        KernelConfig {
+            tile_n: 0,
+            ..KernelConfig::default()
+        },
+        KernelConfig {
+            tile_k: 0,
+            ..KernelConfig::default()
+        },
+    ] {
+        let err = session
+            .matmul(Precision::unsigned(2, 2))
+            .tile(bad)
+            .submit(a.clone(), b.clone())
+            .expect_err("degenerate tile must be rejected");
+        assert!(
+            matches!(err, BismoError::InvalidConfig(_)),
+            "expected InvalidConfig, got {err:?}"
+        );
+    }
+}
+
+#[test]
+fn zero_tile_k_parses_back_as_whole_k() {
+    // The disk convention: `tile_k = 0` in the JSON is the unchunked
+    // sentinel (`usize::MAX`) in memory, so a persisted default tile
+    // round-trips to the default.
+    let dir = scratch_dir("tilek");
+    let mut rng = Rng::new(0x71E_0);
+    let mut profile = profile_with_tiles(host_fp(), &mut rng);
+    for c in &mut profile.classes {
+        c.tile = KernelConfig::default();
+    }
+    profile.save_in(&dir).unwrap();
+    let loaded = TunedProfile::load_for(&dir, &profile.fingerprint)
+        .unwrap()
+        .unwrap();
+    for c in &loaded.classes {
+        assert_eq!(c.tile, KernelConfig::default());
+        assert_eq!(c.tile.tile_k, usize::MAX);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
