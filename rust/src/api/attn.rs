@@ -1,0 +1,371 @@
+//! [`AttnBuilder`] and [`PreparedAttn`]: serving a quantized
+//! transformer encoder block ([`QnnAttn`]) through the session.
+//!
+//! The builder follows the same contract as [`crate::api::MatmulBuilder`]
+//! and [`crate::api::ConvBuilder`] — the identical [`ExecOpts`] knob
+//! surface (stamped on by the same macro), validation at `build()`
+//! before anything is queued, and a prepare-once-execute-many handle.
+//! `prepare()` packs all six weight matrices into the session cache at
+//! their per-matrix precisions; every execute then only packs the
+//! request's fresh activations.
+//!
+//! Execution plugs the session into the model's [`GemmExec`]
+//! abstraction: each layer's independent GEMMs (three Q/K/V
+//! projections, `heads` score GEMMs, `heads` attention·V GEMMs) are
+//! all submitted before any is waited on, so they micro-batch onto the
+//! session's worker lanes together.
+//!
+//! [`PreparedAttn::execute_with_policy`] adds the input-adaptive
+//! precision layer: per GEMM layer, the activation operands' pooled
+//! [`ActivationStats`] are shown to a [`PrecisionPolicy`], which picks
+//! the effective bit width for that side. Bit-serial work scales with
+//! the product of operand widths, so a request whose activations only
+//! populate 1 of 3 calibrated bits runs its GEMMs at a third of the
+//! bit-plane work — with *no* result change when the policy is
+//! exactness-preserving (the declared width shrinks only down to the
+//! bits actually in use). Policies may also clip (lossy, flagged per
+//! decision); weights are never adjusted — their packing is the cached
+//! side. Every decision is logged in the [`AttnResponse`].
+
+use super::opts::{impl_exec_opts_knobs, ExecOpts};
+use super::session::{Prepared, Session};
+use super::BismoError;
+use crate::bitmatrix::IntMatrix;
+use crate::coordinator::{GemmResponse, Precision, RequestHandle};
+use crate::qnn::attn::{AttnGemm, GemmExec, QnnAttn};
+use crate::qnn::policy::{clip_unsigned, ActivationStats, PolicyDecision, PrecisionPolicy};
+
+impl Session {
+    /// Begin configuring the serving of one quantized attention block.
+    /// The model is cloned into the builder (weights are `Arc`-shared,
+    /// not copied).
+    pub fn attn(&self, model: &QnnAttn) -> AttnBuilder<'_> {
+        AttnBuilder {
+            session: self,
+            model: model.clone(),
+            opts: ExecOpts::new(),
+        }
+    }
+}
+
+/// Per-block execution configuration, built off [`Session::attn`].
+/// Carries the same [`ExecOpts`] knob surface as the matmul and conv
+/// builders; the options apply to every GEMM the block lowers.
+#[derive(Clone)]
+pub struct AttnBuilder<'s> {
+    session: &'s Session,
+    model: QnnAttn,
+    opts: ExecOpts,
+}
+
+// The shared knob surface, byte-identical with MatmulBuilder and
+// ConvBuilder.
+impl_exec_opts_knobs!(AttnBuilder<'_>, opts.req);
+
+impl<'s> AttnBuilder<'s> {
+    /// Validate the model (architecture, weight shapes, per-GEMM
+    /// precisions) and the execution options without queueing anything.
+    pub fn build(&self) -> Result<(), BismoError> {
+        self.model.validate()?;
+        self.opts.validate()
+    }
+
+    /// The builder's execution options, as the shared [`ExecOpts`]
+    /// value.
+    pub fn options(&self) -> ExecOpts {
+        self.opts
+    }
+
+    /// Pack all six weight matrices into the session cache at their
+    /// per-matrix precisions, returning the serving handle.
+    ///
+    /// Preparing *is* weight-side caching, so — exactly like
+    /// [`crate::api::MatmulBuilder::prepare`] — it contradicts
+    /// `cache_rhs(false)` and that combination is rejected as
+    /// [`BismoError::InvalidConfig`].
+    pub fn prepare(self) -> Result<PreparedAttn<'s>, BismoError> {
+        self.build()?;
+        let m = &self.model;
+        let prep = |w: &std::sync::Arc<IntMatrix>, prec: Precision| {
+            self.session.matmul_opts(prec, self.opts).prepare(w.clone())
+        };
+        Ok(PreparedAttn {
+            wq: prep(&m.wq, m.proj_prec)?,
+            wk: prep(&m.wk, m.proj_prec)?,
+            wv: prep(&m.wv, m.proj_prec)?,
+            wo: prep(&m.wo, m.out_prec)?,
+            w1: prep(&m.w1, m.ffn1_prec)?,
+            w2: prep(&m.w2, m.ffn2_prec)?,
+            session: self.session,
+            model: self.model,
+            opts: self.opts,
+        })
+    }
+}
+
+/// An attention block whose weights are resident in the session cache,
+/// executable against many inputs — optionally under an adaptive
+/// precision policy.
+///
+/// Deliberately *not* a [`crate::api::PreparedOp`]: the block is a
+/// GEMM DAG with data-dependent staircases between layers, so its
+/// response is a structured [`AttnResponse`] rather than one
+/// [`GemmResponse`], and its precision story is per-layer rather than
+/// per-call (see DESIGN.md §14).
+pub struct PreparedAttn<'s> {
+    session: &'s Session,
+    model: QnnAttn,
+    wq: Prepared<'s>,
+    wk: Prepared<'s>,
+    wv: Prepared<'s>,
+    wo: Prepared<'s>,
+    w1: Prepared<'s>,
+    w2: Prepared<'s>,
+    opts: ExecOpts,
+}
+
+impl PreparedAttn<'_> {
+    /// The model this handle serves.
+    pub fn model(&self) -> &QnnAttn {
+        &self.model
+    }
+
+    /// The prepared handle behind a weight name.
+    fn prepared(&self, name: &str) -> &Prepared<'_> {
+        match name {
+            "wq" => &self.wq,
+            "wk" => &self.wk,
+            "wv" => &self.wv,
+            "wo" => &self.wo,
+            "w1" => &self.w1,
+            "w2" => &self.w2,
+            other => panic!("unknown attention weight {other:?}"),
+        }
+    }
+
+    /// Options for the dynamic (activation × activation) GEMMs: both
+    /// operands are fresh per request, so neither side is cached —
+    /// caching them would churn the weight-stationary cache for zero
+    /// reuse.
+    fn dynamic_opts(&self) -> ExecOpts {
+        self.opts.cache_lhs(false).cache_rhs(false)
+    }
+
+    /// One forward pass at the calibrated precisions. No statistics
+    /// are gathered and no policy consulted — this is the static
+    /// serving path (`decisions` comes back empty).
+    pub fn execute(&self, x: &IntMatrix) -> Result<AttnResponse, BismoError> {
+        self.run(x, None)
+    }
+
+    /// One forward pass with `policy` choosing the effective
+    /// activation bit width per layer from the observed operand
+    /// statistics. Exactness-preserving policies (e.g.
+    /// [`crate::qnn::RangeAdaptivePolicy`]) return bit-identical
+    /// output to [`PreparedAttn::execute`] at less bit-plane work;
+    /// lossy policies flag each clipping decision in the response.
+    pub fn execute_with_policy(
+        &self,
+        x: &IntMatrix,
+        policy: &dyn PrecisionPolicy,
+    ) -> Result<AttnResponse, BismoError> {
+        self.run(x, Some(policy))
+    }
+
+    fn run(
+        &self,
+        x: &IntMatrix,
+        policy: Option<&dyn PrecisionPolicy>,
+    ) -> Result<AttnResponse, BismoError> {
+        let mut exec = ServeExec {
+            attn: self,
+            policy,
+            gemms: Vec::with_capacity(self.model.gemms_per_pass()),
+            decisions: Vec::new(),
+        };
+        let output = self.model.forward_with(x, &mut exec)?;
+        Ok(AttnResponse {
+            output,
+            gemms: exec.gemms,
+            decisions: exec.decisions,
+        })
+    }
+}
+
+/// One served GEMM of a block pass: which layer it belonged to, the
+/// *effective* precision it ran at (after any policy adjustment) and
+/// the full serving response.
+pub struct AttnGemmRecord {
+    pub layer: &'static str,
+    pub prec: Precision,
+    pub resp: GemmResponse,
+}
+
+/// What one block pass reports: the output logits, every GEMM's
+/// serving record, and the policy decision log (empty on the static
+/// path).
+pub struct AttnResponse {
+    /// `seq × d_model` raw accumulators of the final FFN GEMM.
+    pub output: IntMatrix,
+    /// Per-GEMM serving records, in submission order.
+    pub gemms: Vec<AttnGemmRecord>,
+    /// One entry per (layer, operand side) the policy ruled on.
+    pub decisions: Vec<PolicyDecision>,
+}
+
+impl AttnResponse {
+    /// Total simulated cycles, when every GEMM ran on the simulator
+    /// backend (`None` otherwise — the engine backend has no cycle
+    /// notion).
+    pub fn sim_cycles(&self) -> Option<u64> {
+        self.gemms
+            .iter()
+            .map(|g| g.resp.report.as_ref().map(|r| r.cycles))
+            .sum()
+    }
+
+    /// Whether every weight-stationary GEMM was served from the cache
+    /// (true from the first pass after `prepare()`).
+    pub fn weights_cached(&self) -> bool {
+        self.gemms
+            .iter()
+            .filter(|g| matches!(g.layer, "qkv" | "out" | "ffn1" | "ffn2"))
+            .all(|g| g.resp.rhs_cached)
+    }
+
+    /// Mean effective LHS (activation) width across the pass's GEMMs —
+    /// the bench's one-number summary of how much bit-plane work the
+    /// policy shed.
+    pub fn mean_lhs_bits(&self) -> f64 {
+        if self.gemms.is_empty() {
+            return 0.0;
+        }
+        self.gemms.iter().map(|g| g.prec.wbits as f64).sum::<f64>() / self.gemms.len() as f64
+    }
+}
+
+/// The session-backed [`GemmExec`]: per layer, consult the policy once
+/// per operand side (pooled stats across the layer's GEMMs), then
+/// submit every job before waiting on any.
+struct ServeExec<'p, 's> {
+    attn: &'p PreparedAttn<'s>,
+    policy: Option<&'p dyn PrecisionPolicy>,
+    gemms: Vec<AttnGemmRecord>,
+    decisions: Vec<PolicyDecision>,
+}
+
+impl ServeExec<'_, '_> {
+    /// Ask the policy for one side's effective width. Only unsigned
+    /// activation sides are ever adjusted; the signed weight side of
+    /// projection/FFN GEMMs keeps its calibrated width (its packing is
+    /// the cached asset).
+    fn decide(
+        &mut self,
+        layer: &'static str,
+        side: &'static str,
+        base_bits: u32,
+        operands: &[&IntMatrix],
+    ) -> (u32, bool) {
+        match self.policy {
+            None => (base_bits, false),
+            Some(p) => {
+                let stats = ActivationStats::of_many(operands);
+                let d = p.decide(layer, side, base_bits, &stats);
+                let out = (d.chosen_bits.clamp(1, base_bits), d.clip);
+                self.decisions.push(d);
+                out
+            }
+        }
+    }
+}
+
+impl GemmExec for ServeExec<'_, '_> {
+    fn run_layer(
+        &mut self,
+        layer: &'static str,
+        jobs: Vec<AttnGemm>,
+    ) -> Result<Vec<IntMatrix>, BismoError> {
+        let Some(first) = jobs.first() else {
+            return Ok(Vec::new());
+        };
+        let base = first.precision();
+        let dynamic = matches!(first, AttnGemm::Dynamic { .. });
+        // One decision per operand side per layer, on stats pooled
+        // across the layer's GEMMs (per-head operands are slices of
+        // one tensor; a single decision keeps the log bounded and the
+        // layer homogeneous).
+        let (lhs_bits, lhs_clip) = if base.lsigned {
+            (base.wbits, false)
+        } else {
+            let lhs: Vec<&IntMatrix> = jobs
+                .iter()
+                .map(|j| match j {
+                    AttnGemm::Weight { lhs, .. } | AttnGemm::Dynamic { lhs, .. } => lhs,
+                })
+                .collect();
+            self.decide(layer, "lhs", base.wbits, &lhs)
+        };
+        let (rhs_bits, rhs_clip) = if dynamic && !base.rsigned {
+            let rhs: Vec<&IntMatrix> = jobs
+                .iter()
+                .filter_map(|j| match j {
+                    AttnGemm::Dynamic { rhs, .. } => Some(rhs),
+                    AttnGemm::Weight { .. } => None,
+                })
+                .collect();
+            self.decide(layer, "rhs", base.abits, &rhs)
+        } else {
+            (base.abits, false)
+        };
+        // Submit the whole layer before waiting on anything, so the
+        // independent GEMMs micro-batch onto the worker lanes.
+        let mut pending: Vec<(RequestHandle, Precision)> = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            match job {
+                AttnGemm::Weight { weight, lhs, prec } => {
+                    let prec = Precision {
+                        wbits: lhs_bits,
+                        ..prec
+                    };
+                    let lhs = if lhs_clip {
+                        clip_unsigned(&lhs, lhs_bits)
+                    } else {
+                        lhs
+                    };
+                    pending.push((self.attn.prepared(weight).submit_with(lhs, prec)?, prec));
+                }
+                AttnGemm::Dynamic { lhs, rhs, prec } => {
+                    let prec = Precision {
+                        wbits: lhs_bits,
+                        abits: rhs_bits,
+                        ..prec
+                    };
+                    let lhs = if lhs_clip {
+                        clip_unsigned(&lhs, lhs_bits)
+                    } else {
+                        lhs
+                    };
+                    let rhs = if rhs_clip {
+                        clip_unsigned(&rhs, rhs_bits)
+                    } else {
+                        rhs
+                    };
+                    pending.push((
+                        self.attn
+                            .session
+                            .matmul_opts(prec, self.attn.dynamic_opts())
+                            .submit(lhs, rhs)?,
+                        prec,
+                    ));
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(pending.len());
+        for (handle, prec) in pending {
+            let resp = handle.wait()?;
+            out.push(resp.result.clone());
+            self.gemms.push(AttnGemmRecord { layer, prec, resp });
+        }
+        Ok(out)
+    }
+}

@@ -1,20 +1,25 @@
-//! [`ConvBuilder`], [`PreparedConv`] and [`ConvResponse`]: the
-//! convolution entry points of the facade.
+//! [`ConvBuilder`], [`PreparedConv`], [`ConvHandle`] and
+//! [`ConvResponse`]: the convolution entry points of the facade.
 //!
 //! A conv job is validated like a matmul job — spec, precision and
-//! sharding checked *before* anything is queued — then lowered
-//! ([`crate::lowering`]) and served through the same
+//! execution options checked *before* anything is queued — then
+//! lowered ([`crate::lowering`]) and served through the same
 //! [`crate::coordinator::BismoService`] machinery as every GEMM:
 //! micro-batched worker lanes, per-request backend selection, the
 //! weight-stationary packing cache (lowered weight matrices are the
 //! cached side), and optional multi-instance sharding.
+//!
+//! The builder's knob surface is the shared [`super::ExecOpts`] core,
+//! so every option a [`super::MatmulBuilder`] accepts — including
+//! `max_instrs`, `overlap`, `shard_grid`, `auto_shard` and `tile` — is
+//! accepted here with identical semantics and identical build-time
+//! validation.
 
+use super::opts::{impl_exec_opts_knobs, ExecOpts};
 use super::session::Session;
 use super::BismoError;
 use crate::bitmatrix::IntMatrix;
-use crate::coordinator::{
-    Backend, GemmResponse, Precision, RequestHandle, RequestOptions, Sharding,
-};
+use crate::coordinator::{GemmResponse, Precision, RequestHandle, RequestOptions};
 use crate::lowering::{
     kn2row_tap_weights, pack_im2col, pack_kn2row_tap, ConvSpec, LoweringMode, Tensor,
 };
@@ -57,16 +62,16 @@ impl ConvResponse {
 
 /// Per-job convolution configuration, built off [`Session::conv`].
 /// Mirrors [`super::MatmulBuilder`]: knob methods chain, terminal
-/// methods ([`ConvBuilder::run`], [`ConvBuilder::prepare`]) take
-/// `&self`, and [`ConvBuilder::build`] validates everything before any
-/// work is queued.
+/// methods ([`ConvBuilder::run`], [`ConvBuilder::submit`],
+/// [`ConvBuilder::prepare`]) take `&self`, and [`ConvBuilder::build`]
+/// validates everything before any work is queued.
 #[derive(Clone, Copy)]
 pub struct ConvBuilder<'s> {
     session: &'s Session,
     spec: ConvSpec,
     prec: Precision,
     mode: LoweringMode,
-    opts: RequestOptions,
+    opts: ExecOpts,
 }
 
 impl Session {
@@ -80,10 +85,14 @@ impl Session {
             spec,
             prec,
             mode: LoweringMode::Im2col,
-            opts: RequestOptions::default(),
+            opts: ExecOpts::new(),
         }
     }
 }
+
+// The shared knob surface, byte-identical with the matmul and
+// attention builders.
+impl_exec_opts_knobs!(ConvBuilder<'_>, opts.req);
 
 impl<'s> ConvBuilder<'s> {
     /// Select the lowering: one wide im2col GEMM (default) or `kh·kw`
@@ -93,49 +102,24 @@ impl<'s> ConvBuilder<'s> {
         self
     }
 
-    /// Select the execution backend (engine default; sim additionally
-    /// yields per-GEMM [`crate::coordinator::RunReport`]s).
-    pub fn backend(mut self, backend: Backend) -> Self {
-        self.opts.backend = backend;
-        self
-    }
-
-    /// Execute each lowered GEMM across (up to) `n` overlay instances
-    /// (see [`super::MatmulBuilder::instances`]).
-    pub fn instances(mut self, n: usize) -> Self {
-        self.opts.sharding = if n == 1 {
-            Sharding::Single
-        } else {
-            Sharding::Instances(n)
-        };
-        self
-    }
-
-    /// Cross-check every lowered GEMM against the CPU bit-serial
-    /// oracle (conv-level correctness against the direct-convolution
-    /// oracle lives in the property suite).
-    pub fn verify(mut self, on: bool) -> Self {
-        self.opts.verify = on;
-        self
-    }
-
-    /// Scope cache interactions to tenant namespace `ns` (see
-    /// [`super::MatmulBuilder::cache_namespace`]).
-    pub fn cache_namespace(mut self, ns: u64) -> Self {
-        self.opts.cache_namespace = ns;
-        self
-    }
-
     /// The builder's spec.
     pub fn spec(&self) -> ConvSpec {
         self.spec
     }
 
-    /// Validate spec, precision and sharding without running anything.
+    /// The builder's execution options, as the shared [`ExecOpts`]
+    /// value.
+    pub fn options(&self) -> ExecOpts {
+        self.opts
+    }
+
+    /// Validate spec, precision and the full execution-option set
+    /// (sharding shape *and* pinned tile geometry) without running
+    /// anything.
     pub fn build(&self) -> Result<(), BismoError> {
         self.spec.validate()?;
         self.prec.validate()?;
-        self.opts.sharding.validate()
+        self.opts.validate()
     }
 
     /// Run one convolution synchronously.
@@ -144,11 +128,23 @@ impl<'s> ConvBuilder<'s> {
         input: &Tensor,
         weights: impl Into<Arc<IntMatrix>>,
     ) -> Result<ConvResponse, BismoError> {
+        self.submit(input, weights)?.wait()
+    }
+
+    /// Enqueue one convolution asynchronously: every lowered GEMM is
+    /// submitted (micro-batched across the worker lanes) before the
+    /// returned [`ConvHandle`] is waited on. Configuration errors are
+    /// reported here, before anything is queued.
+    pub fn submit(
+        &self,
+        input: &Tensor,
+        weights: impl Into<Arc<IntMatrix>>,
+    ) -> Result<ConvHandle, BismoError> {
         self.build()?;
         let weights: Arc<IntMatrix> = weights.into();
         self.spec.check_weights(&weights)?;
         let subs = lower_weights(&self.spec, &weights, self.mode);
-        execute_conv(self.session, &self.spec, self.mode, self.prec, self.opts, input, &subs)
+        submit_conv(self.session, &self.spec, self.mode, self.prec, self.opts.req, input, &subs)
     }
 
     /// Lower `weights` and pack them into the session cache once,
@@ -161,7 +157,7 @@ impl<'s> ConvBuilder<'s> {
         weights: impl Into<Arc<IntMatrix>>,
     ) -> Result<PreparedConv<'s>, BismoError> {
         self.build()?;
-        if !self.opts.cache_rhs {
+        if !self.opts.req.cache_rhs {
             return Err(BismoError::InvalidConfig(
                 "prepare() requires weight-side caching; remove cache_rhs(false)".into(),
             ));
@@ -171,7 +167,7 @@ impl<'s> ConvBuilder<'s> {
         let subs = lower_weights(&self.spec, &weights, self.mode);
         for sub in &subs {
             self.session.service().prepare_operand_in(
-                self.opts.cache_namespace,
+                self.opts.req.cache_namespace,
                 sub,
                 self.prec.abits,
                 self.prec.rsigned,
@@ -192,15 +188,16 @@ impl<'s> ConvBuilder<'s> {
 /// Conv weights lowered and packed once, executable against many input
 /// tensors — the weight-stationary serving pattern for CNN layers.
 /// Like [`super::Prepared`], evicted packings are transparently
-/// rebuilt, and [`PreparedConv::execute_with`] serves the same
-/// resident weights at a per-execute precision (the paper's
-/// variable-precision claim, per layer).
+/// rebuilt, [`PreparedConv::execute_with`] serves the same resident
+/// weights at a per-execute precision (the paper's variable-precision
+/// claim, per layer), and [`PreparedConv::submit`] rides the
+/// micro-batcher asynchronously exactly like a prepared GEMM.
 pub struct PreparedConv<'s> {
     session: &'s Session,
     spec: ConvSpec,
     mode: LoweringMode,
     prec: Precision,
-    opts: RequestOptions,
+    opts: ExecOpts,
     /// The lowered weight matrices: one for im2col, `kh·kw` for
     /// kn2row — `Arc`-shared with every request, never copied.
     subs: Vec<Arc<IntMatrix>>,
@@ -219,7 +216,7 @@ impl PreparedConv<'_> {
 
     /// Execute against one input tensor at the prepare-time precision.
     pub fn execute(&self, input: &Tensor) -> Result<ConvResponse, BismoError> {
-        execute_conv(self.session, &self.spec, self.mode, self.prec, self.opts, input, &self.subs)
+        self.submit(input)?.wait()
     }
 
     /// [`PreparedConv::execute`] with a per-execute precision override:
@@ -231,8 +228,68 @@ impl PreparedConv<'_> {
         input: &Tensor,
         prec: Precision,
     ) -> Result<ConvResponse, BismoError> {
+        self.submit_with(input, prec)?.wait()
+    }
+
+    /// Asynchronous [`PreparedConv::execute`]: every lowered GEMM is
+    /// enqueued and the in-flight [`ConvHandle`] returned, so prepared
+    /// conv weights ride the micro-batcher the way prepared GEMM
+    /// weights do.
+    pub fn submit(&self, input: &Tensor) -> Result<ConvHandle, BismoError> {
+        submit_conv(
+            self.session,
+            &self.spec,
+            self.mode,
+            self.prec,
+            self.opts.req,
+            input,
+            &self.subs,
+        )
+    }
+
+    /// Asynchronous [`PreparedConv::execute_with`].
+    pub fn submit_with(&self, input: &Tensor, prec: Precision) -> Result<ConvHandle, BismoError> {
         prec.validate()?;
-        execute_conv(self.session, &self.spec, self.mode, prec, self.opts, input, &self.subs)
+        submit_conv(self.session, &self.spec, self.mode, prec, self.opts.req, input, &self.subs)
+    }
+}
+
+/// One in-flight convolution: every lowered GEMM has already been
+/// submitted to the serving layer. [`ConvHandle::wait`] collects the
+/// per-GEMM results, accumulates the kn2row taps and reshapes the
+/// product rows back into an NHWC tensor.
+pub struct ConvHandle {
+    handles: Vec<RequestHandle>,
+    shape: GemmShape,
+    mode: LoweringMode,
+    batch: usize,
+    oh: usize,
+    ow: usize,
+}
+
+impl ConvHandle {
+    /// Block until every lowered GEMM completes and assemble the
+    /// convolution output. Consumes the handle (each underlying result
+    /// is delivered exactly once).
+    pub fn wait(self) -> Result<ConvResponse, BismoError> {
+        let mut acc = IntMatrix::zeros(self.shape.m, self.shape.n);
+        let mut gemms = Vec::with_capacity(self.handles.len());
+        for h in self.handles {
+            let resp = h.wait()?;
+            for i in 0..self.shape.m {
+                for j in 0..self.shape.n {
+                    acc.set(i, j, acc.get(i, j) + resp.result.get(i, j));
+                }
+            }
+            gemms.push(resp);
+        }
+        let output = Tensor::from_gemm_rows(&acc, self.batch, self.oh, self.ow);
+        Ok(ConvResponse {
+            output,
+            gemms,
+            shape: self.shape,
+            mode: self.mode,
+        })
     }
 }
 
@@ -252,12 +309,12 @@ fn lower_weights(
     }
 }
 
-/// The shared execute path: pack the lowered LHS directly off the
-/// input tensor (zero materialization), submit through the serving
-/// layer, reshape the product rows back into an NHWC tensor. Kn2row
-/// submits all taps before waiting on any, so the taps micro-batch
-/// across the session's worker lanes.
-fn execute_conv(
+/// The shared submit path: pack the lowered LHS directly off the
+/// input tensor (zero materialization) and enqueue every lowered GEMM
+/// through the serving layer without waiting on any — im2col submits
+/// its one wide GEMM, kn2row submits all `kh·kw` taps so they
+/// micro-batch across the session's worker lanes.
+fn submit_conv(
     session: &Session,
     spec: &ConvSpec,
     mode: LoweringMode,
@@ -265,7 +322,7 @@ fn execute_conv(
     opts: RequestOptions,
     input: &Tensor,
     subs: &[Arc<IntMatrix>],
-) -> Result<ConvResponse, BismoError> {
+) -> Result<ConvHandle, BismoError> {
     spec.check_input(input)?;
     if !input.fits(prec.wbits, prec.lsigned) {
         return Err(BismoError::PrecisionUnsupported(format!(
@@ -276,21 +333,14 @@ fn execute_conv(
     }
     let (batch, oh, ow) = (input.n, spec.out_h(), spec.out_w());
     let svc = session.service();
-    match mode {
+    let (shape, handles) = match mode {
         LoweringMode::Im2col => {
             let la = Arc::new(pack_im2col(input, spec, prec.wbits, prec.lsigned));
-            let resp = svc.submit_lowered(la, subs[0].clone(), prec, opts).wait()?;
-            let output = Tensor::from_gemm_rows(&resp.result, batch, oh, ow);
-            Ok(ConvResponse {
-                output,
-                gemms: vec![resp],
-                shape: spec.gemm_shape(batch),
-                mode,
-            })
+            let h = svc.submit_lowered(la, subs[0].clone(), prec, opts);
+            (spec.gemm_shape(batch), vec![h])
         }
         LoweringMode::Kn2row => {
-            let shape = spec.kn2row_shape(batch);
-            let handles: Vec<RequestHandle> = (0..spec.kh)
+            let handles = (0..spec.kh)
                 .flat_map(|r| (0..spec.kw).map(move |s| (r, s)))
                 .zip(subs)
                 .map(|((r, s), sub)| {
@@ -298,31 +348,23 @@ fn execute_conv(
                     svc.submit_lowered(la, sub.clone(), prec, opts)
                 })
                 .collect();
-            let mut acc = IntMatrix::zeros(shape.m, shape.n);
-            let mut gemms = Vec::with_capacity(handles.len());
-            for h in handles {
-                let resp = h.wait()?;
-                for i in 0..shape.m {
-                    for j in 0..shape.n {
-                        acc.set(i, j, acc.get(i, j) + resp.result.get(i, j));
-                    }
-                }
-                gemms.push(resp);
-            }
-            let output = Tensor::from_gemm_rows(&acc, batch, oh, ow);
-            Ok(ConvResponse {
-                output,
-                gemms,
-                shape,
-                mode,
-            })
+            (spec.kn2row_shape(batch), handles)
         }
-    }
+    };
+    Ok(ConvHandle {
+        handles,
+        shape,
+        mode,
+        batch,
+        oh,
+        ow,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Backend;
     use crate::lowering::conv2d_direct;
     use crate::util::Rng;
 
@@ -457,5 +499,24 @@ mod tests {
         let resp = s.conv(spec, prec()).instances(4).verify(true).run(&x, w).unwrap();
         assert_eq!(resp.output, want);
         assert!(resp.gemms[0].shards > 1, "the lowered GEMM actually sharded");
+    }
+
+    #[test]
+    fn async_conv_submit_matches_run() {
+        let s = session();
+        let mut rng = Rng::new(0xC4E);
+        let spec = ConvSpec::simple(6, 6, 2, 3, 3, 1);
+        let w = spec.weights_from_fn(|_, _, _, _| rng.operand(3, true));
+        let prepared = s.conv(spec, prec()).prepare(w.clone()).unwrap();
+        // Submit several inputs before waiting on any: the lowered
+        // GEMMs of all of them micro-batch together.
+        let inputs: Vec<Tensor> = (0..3)
+            .map(|_| Tensor::random(&mut rng, 1, 6, 6, 2, 2, false))
+            .collect();
+        let handles: Vec<ConvHandle> =
+            inputs.iter().map(|x| prepared.submit(x).unwrap()).collect();
+        for (h, x) in handles.into_iter().zip(&inputs).rev() {
+            assert_eq!(h.wait().unwrap().output, conv2d_direct(x, &w, &spec));
+        }
     }
 }

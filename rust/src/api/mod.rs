@@ -25,6 +25,18 @@
 //!   ([`crate::lowering`], im2col or kn2row) and served through the
 //!   identical GEMM machinery, with the lowered weight matrices as the
 //!   weight-stationary cached side.
+//! * [`AttnBuilder`] / [`PreparedAttn`] — the same contract again for
+//!   a quantized transformer encoder block
+//!   ([`crate::qnn::QnnAttn`]): six weight matrices prepared at
+//!   per-matrix precisions, per-head GEMMs micro-batched, optionally
+//!   served under an input-adaptive
+//!   [`crate::qnn::PrecisionPolicy`].
+//!
+//! Every builder carries the same [`ExecOpts`] knob surface (stamped
+//! on by one macro, so the three stay byte-identical), and the
+//! prepared handles share the [`PreparedOp`] submit/execute contract
+//! (conv included — [`PreparedConv::submit`] returns an async
+//! [`ConvHandle`]).
 //!
 //! Every fallible call returns the typed [`BismoError`], so callers
 //! branch on failure kinds instead of parsing strings.
@@ -43,12 +55,18 @@
 //! # Ok::<(), bismo::api::BismoError>(())
 //! ```
 
+mod attn;
 mod conv;
 mod error;
+mod opts;
+mod prepared;
 mod session;
 
-pub use conv::{ConvBuilder, ConvResponse, PreparedConv};
+pub use attn::{AttnBuilder, AttnGemmRecord, AttnResponse, PreparedAttn};
+pub use conv::{ConvBuilder, ConvHandle, ConvResponse, PreparedConv};
 pub use error::BismoError;
+pub use opts::ExecOpts;
+pub use prepared::{OpHandle, PreparedOp};
 pub use session::{MatmulBuilder, Prepared, Session, SessionConfig};
 
 // The vocabulary types a facade caller needs, re-exported so

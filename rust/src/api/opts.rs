@@ -1,0 +1,260 @@
+//! [`ExecOpts`]: the shared execution-option core behind every facade
+//! builder.
+//!
+//! The matmul, conv and attention builders all expose the same knob
+//! surface — backend, stage overlap, bit-skip, verification, cache
+//! policy, sharding, instruction budget, tile pinning. Before this
+//! module each builder re-implemented the subset its author remembered,
+//! and the subsets drifted ([`super::ConvBuilder`] shipped without
+//! `max_instrs`, `overlap`, `shard_grid`, `auto_shard` or `tile`).
+//! `ExecOpts` holds the knobs exactly once; the
+//! [`impl_exec_opts_knobs!`] macro stamps the identical chainable
+//! methods — same names, same docs, same validation — onto each
+//! builder, so the knob surface cannot drift again.
+//!
+//! `ExecOpts` is also a public value type: APIs that previously took a
+//! positional run of `backend, verify, …` arguments (the network
+//! client's conv entry point, for one) now take `&ExecOpts`.
+
+use super::BismoError;
+use crate::coordinator::{Backend, RequestOptions, Sharding};
+use crate::costmodel::ResourceBudget;
+use crate::kernel::KernelConfig;
+use crate::scheduler::Overlap;
+
+/// The execution options shared by every facade builder, as a
+/// standalone value.
+///
+/// Construct with [`ExecOpts::new`] (engine backend, weight-side
+/// caching on — the same defaults every builder starts from), chain
+/// the same knob methods the builders expose, and pass the result to
+/// APIs that accept options by value:
+///
+/// ```
+/// use bismo::api::{Backend, ExecOpts};
+///
+/// let opts = ExecOpts::new().backend(Backend::Sim).verify(true).max_instrs(1_000_000);
+/// assert!(opts.validate().is_ok());
+/// ```
+#[derive(Clone, Copy, Default)]
+pub struct ExecOpts {
+    pub(crate) req: RequestOptions,
+}
+
+impl ExecOpts {
+    /// Options with the facade defaults: engine backend, full stage
+    /// overlap, weight-side caching on, activation-side caching off,
+    /// single-instance execution, no instruction budget, no pinned
+    /// tile.
+    pub fn new() -> ExecOpts {
+        ExecOpts::default()
+    }
+
+    /// Validate the combination — sharding shape and pinned tile
+    /// geometry. Every builder's `build()` funnels through this, which
+    /// is what makes the three builders reject degenerate knob values
+    /// with *identical* typed errors.
+    pub fn validate(&self) -> Result<(), BismoError> {
+        self.req.validate()
+    }
+
+    /// The underlying per-request options, for layers beneath the
+    /// facade (the serving layer's request structs take
+    /// [`RequestOptions`] directly).
+    pub fn request_options(&self) -> RequestOptions {
+        self.req
+    }
+}
+
+/// Stamps the shared [`ExecOpts`] knob surface onto a builder (or onto
+/// `ExecOpts` itself). The single source of truth for knob names,
+/// semantics and documentation; invoke as
+/// `impl_exec_opts_knobs!(Builder<'_>, opts.req);` where the second
+/// argument is the field path from `self` to the inner
+/// [`crate::coordinator::RequestOptions`].
+macro_rules! impl_exec_opts_knobs {
+    ($ty:ty, $($field:ident).+) => {
+        impl $ty {
+            /// Select the execution backend: the fast tiled engine
+            /// (default) or the cycle-accurate overlay simulator (which
+            /// additionally yields a [`crate::coordinator::RunReport`]
+            /// per GEMM).
+            pub fn backend(mut self, backend: $crate::coordinator::Backend) -> Self {
+                self.$($field).+.backend = backend;
+                self
+            }
+
+            /// Stage-overlap mode of the simulated pipeline (sim
+            /// backend only).
+            pub fn overlap(mut self, overlap: $crate::scheduler::Overlap) -> Self {
+                self.$($field).+.overlap = overlap;
+                self
+            }
+
+            /// Skip all-zero bit-planes (the paper's sparse extension;
+            /// sim backend — the engine always skips).
+            pub fn bit_skip(mut self, on: bool) -> Self {
+                self.$($field).+.bit_skip = on;
+                self
+            }
+
+            /// Cross-check every result against the CPU bit-serial
+            /// oracle (costs an extra software GEMM; failures surface
+            /// as [`crate::api::BismoError::VerifyFailed`]).
+            pub fn verify(mut self, on: bool) -> Self {
+                self.$($field).+.verify = on;
+                self
+            }
+
+            /// Instruction-budget watchdog for the sim backend: fail
+            /// the request with a typed
+            /// [`crate::sim::SimError::BudgetExceeded`] once the
+            /// simulation has retired `n` instructions, instead of
+            /// letting a mis-scheduled job occupy a worker
+            /// indefinitely.
+            pub fn max_instrs(mut self, n: u64) -> Self {
+                self.$($field).+.max_instrs = Some(n);
+                self
+            }
+
+            /// Cache the packed LHS (off by default: fresh activations
+            /// would churn the cache).
+            pub fn cache_lhs(mut self, on: bool) -> Self {
+                self.$($field).+.cache_lhs = on;
+                self
+            }
+
+            /// Cache the packed RHS — the weight-stationary side (on
+            /// by default).
+            pub fn cache_rhs(mut self, on: bool) -> Self {
+                self.$($field).+.cache_rhs = on;
+                self
+            }
+
+            /// Scope cache interactions to tenant namespace `ns` (`0`
+            /// — the default — is the shared in-process namespace).
+            /// Tenants share the cache's byte budget but can never hit
+            /// each other's packed operands; the network front door
+            /// ([`crate::net`]) sets this per connection.
+            pub fn cache_namespace(mut self, ns: u64) -> Self {
+                self.$($field).+.cache_namespace = ns;
+                self
+            }
+
+            /// Execute each job across (up to) `n` overlay instances:
+            /// the output splits into a shard grid factored per job
+            /// shape, the shards run concurrently and merge
+            /// bit-exactly. `n = 1` is the plain single-instance path;
+            /// `n = 0` is rejected at `build()`.
+            pub fn instances(mut self, n: usize) -> Self {
+                self.$($field).+.sharding = if n == 1 {
+                    $crate::coordinator::Sharding::Single
+                } else {
+                    $crate::coordinator::Sharding::Instances(n)
+                };
+                self
+            }
+
+            /// Execute each job over an explicit `rows × cols` shard
+            /// grid (each axis clamped so no shard is empty; a zero
+            /// axis is rejected at `build()`).
+            pub fn shard_grid(mut self, rows: usize, cols: usize) -> Self {
+                self.$($field).+.sharding = $crate::coordinator::Sharding::Grid { rows, cols };
+                self
+            }
+
+            /// Cost-model-driven sharding: for each job,
+            /// [`crate::costmodel::select_sharding`] picks the shard
+            /// count and per-shard instance configuration that maximize
+            /// predicted throughput under `budget` (paper Eqs 1–2).
+            pub fn auto_shard(mut self, budget: $crate::costmodel::ResourceBudget) -> Self {
+                self.$($field).+.sharding = $crate::coordinator::Sharding::Auto(budget);
+                self
+            }
+
+            /// Pin the engine's tile geometry for this builder's jobs,
+            /// overriding both the built-in default and any
+            /// tuned-profile selection. Degenerate tiles (any dimension
+            /// zero) are rejected at `build()`. Sim-backend jobs ignore
+            /// this.
+            pub fn tile(mut self, cfg: $crate::kernel::KernelConfig) -> Self {
+                self.$($field).+.kernel = Some(cfg);
+                self
+            }
+        }
+    };
+}
+
+impl_exec_opts_knobs!(ExecOpts, req);
+
+pub(crate) use impl_exec_opts_knobs;
+
+// Referenced by the macro-generated docs and signatures; re-assert the
+// imports are used even when the macro is only expanded elsewhere.
+const _: fn() = || {
+    let _ = |_: Backend, _: Overlap, _: Sharding, _: ResourceBudget, _: KernelConfig| {};
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, Sharding};
+    use crate::kernel::KernelConfig;
+    use crate::scheduler::Overlap;
+
+    #[test]
+    fn defaults_match_request_options() {
+        let d = ExecOpts::new().request_options();
+        let r = RequestOptions::default();
+        assert_eq!(d.backend, r.backend);
+        assert_eq!(d.cache_lhs, r.cache_lhs);
+        assert_eq!(d.cache_rhs, r.cache_rhs);
+        assert_eq!(d.max_instrs, r.max_instrs);
+        assert!(d.kernel.is_none());
+    }
+
+    #[test]
+    fn every_knob_lands_in_request_options() {
+        let o = ExecOpts::new()
+            .backend(Backend::Sim)
+            .overlap(Overlap::None)
+            .bit_skip(true)
+            .verify(true)
+            .max_instrs(123)
+            .cache_lhs(true)
+            .cache_rhs(false)
+            .cache_namespace(7)
+            .shard_grid(2, 3)
+            .tile(KernelConfig {
+                tile_m: 4,
+                tile_n: 4,
+                tile_k: 64,
+            })
+            .request_options();
+        assert_eq!(o.backend, Backend::Sim);
+        assert_eq!(o.overlap, Overlap::None);
+        assert!(o.bit_skip);
+        assert!(o.verify);
+        assert_eq!(o.max_instrs, Some(123));
+        assert!(o.cache_lhs);
+        assert!(!o.cache_rhs);
+        assert_eq!(o.cache_namespace, 7);
+        assert!(matches!(o.sharding, Sharding::Grid { rows: 2, cols: 3 }));
+        assert_eq!(o.kernel.unwrap().tile_m, 4);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_knobs() {
+        assert!(ExecOpts::new().instances(0).validate().is_err());
+        assert!(ExecOpts::new().shard_grid(0, 2).validate().is_err());
+        assert!(ExecOpts::new()
+            .tile(KernelConfig {
+                tile_m: 0,
+                tile_n: 1,
+                tile_k: 1,
+            })
+            .validate()
+            .is_err());
+        assert!(ExecOpts::new().instances(1).validate().is_ok());
+    }
+}

@@ -1,0 +1,146 @@
+//! [`PreparedOp`] and [`OpHandle`]: the common contract behind every
+//! prepare-once-execute-many handle.
+//!
+//! [`super::Prepared`] (matmul) and [`super::PreparedConv`] grew the
+//! same surface independently — execute at the prepare-time precision,
+//! execute with a per-request precision override, submit
+//! asynchronously onto the micro-batcher. This module names that
+//! contract once, so layer code (a QNN model walking heterogeneous
+//! layers, a load generator, a test harness) can be written generically
+//! over *any* prepared operator:
+//!
+//! ```
+//! use bismo::api::{PreparedOp, OpHandle, Session, SessionConfig};
+//! use bismo::coordinator::Precision;
+//! use bismo::bitmatrix::IntMatrix;
+//!
+//! // Generic over the operator kind: works for prepared matmuls and
+//! // prepared convolutions alike.
+//! fn serve_twice<P: PreparedOp>(op: &P, x: &P::Input) -> Result<P::Output, bismo::api::BismoError> {
+//!     let first = op.submit(x)?;     // in flight
+//!     let _second = op.execute(x)?;  // synchronous
+//!     first.wait()
+//! }
+//!
+//! let session = Session::new(SessionConfig::default())?;
+//! let prepared = session.prepare(IntMatrix::from_slice(2, 2, &[0, 1, 1, 2]), Precision::unsigned(2, 2))?;
+//! let resp = serve_twice(&prepared, &IntMatrix::from_slice(2, 2, &[2, 0, 1, 3]))?;
+//! assert_eq!(resp.result, IntMatrix::from_slice(2, 2, &[0, 2, 3, 7]));
+//! # Ok::<(), bismo::api::BismoError>(())
+//! ```
+//!
+//! The attention handle ([`super::PreparedAttn`]) deliberately does
+//! *not* implement [`PreparedOp`]: an attention block is a DAG of
+//! GEMMs with data-dependent integer staircases between stages, so it
+//! has no single submit-then-wait handle — only its per-stage GEMMs
+//! ride the micro-batcher (see DESIGN.md §14).
+
+use super::conv::{ConvHandle, ConvResponse, PreparedConv};
+use super::session::Prepared;
+use super::BismoError;
+use crate::bitmatrix::IntMatrix;
+use crate::coordinator::{GemmResponse, Precision, RequestHandle};
+use crate::lowering::Tensor;
+
+/// One in-flight prepared-operator job: consume it to collect the
+/// result (each result is delivered exactly once).
+pub trait OpHandle {
+    /// What the completed job yields.
+    type Output;
+
+    /// Block until the job completes.
+    fn wait(self) -> Result<Self::Output, BismoError>;
+}
+
+impl OpHandle for RequestHandle {
+    type Output = GemmResponse;
+
+    fn wait(self) -> Result<GemmResponse, BismoError> {
+        RequestHandle::wait(self)
+    }
+}
+
+impl OpHandle for ConvHandle {
+    type Output = ConvResponse;
+
+    fn wait(self) -> Result<ConvResponse, BismoError> {
+        ConvHandle::wait(self)
+    }
+}
+
+/// The prepare-once-execute-many contract: weights resident in the
+/// session cache, served against many inputs, with consistent
+/// `execute` / `execute_with` / `submit` / `submit_with` signatures
+/// across operator kinds.
+///
+/// `execute` and `execute_with` have default implementations in terms
+/// of the submit paths, so every implementor's synchronous and
+/// asynchronous results agree by construction.
+pub trait PreparedOp {
+    /// The per-request input (activation matrix, input tensor, …).
+    type Input: ?Sized;
+    /// The per-request result.
+    type Output;
+    /// The in-flight handle returned by the submit paths.
+    type Handle: OpHandle<Output = Self::Output>;
+
+    /// Declared precision of the prepare-time packing.
+    fn precision(&self) -> Precision;
+
+    /// Enqueue one job at the prepare-time precision and return the
+    /// in-flight handle.
+    fn submit(&self, x: &Self::Input) -> Result<Self::Handle, BismoError>;
+
+    /// Enqueue one job at a per-execute precision override.
+    fn submit_with(&self, x: &Self::Input, prec: Precision) -> Result<Self::Handle, BismoError>;
+
+    /// Execute one job synchronously at the prepare-time precision.
+    fn execute(&self, x: &Self::Input) -> Result<Self::Output, BismoError> {
+        self.submit(x)?.wait()
+    }
+
+    /// Execute one job synchronously at a per-execute precision
+    /// override.
+    fn execute_with(&self, x: &Self::Input, prec: Precision) -> Result<Self::Output, BismoError> {
+        self.submit_with(x, prec)?.wait()
+    }
+}
+
+impl PreparedOp for Prepared<'_> {
+    type Input = IntMatrix;
+    type Output = GemmResponse;
+    type Handle = RequestHandle;
+
+    fn precision(&self) -> Precision {
+        Prepared::precision(self)
+    }
+
+    // The inherent paths take `impl Into<Arc<IntMatrix>>` so owning
+    // callers avoid a copy; the generic contract takes a borrow, so
+    // this clones the activation matrix into the request.
+    fn submit(&self, x: &IntMatrix) -> Result<RequestHandle, BismoError> {
+        Prepared::submit(self, x.clone())
+    }
+
+    fn submit_with(&self, x: &IntMatrix, prec: Precision) -> Result<RequestHandle, BismoError> {
+        Prepared::submit_with(self, x.clone(), prec)
+    }
+}
+
+impl PreparedOp for PreparedConv<'_> {
+    type Input = Tensor;
+    type Output = ConvResponse;
+    type Handle = ConvHandle;
+
+    fn precision(&self) -> Precision {
+        PreparedConv::precision(self)
+    }
+
+    fn submit(&self, x: &Tensor) -> Result<ConvHandle, BismoError> {
+        PreparedConv::submit(self, x)
+    }
+
+    fn submit_with(&self, x: &Tensor, prec: Precision) -> Result<ConvHandle, BismoError> {
+        PreparedConv::submit_with(self, x, prec)
+    }
+}

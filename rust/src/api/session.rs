@@ -1,14 +1,12 @@
 //! [`Session`], [`MatmulBuilder`] and [`Prepared`]: the facade types.
 
+use super::opts::{impl_exec_opts_knobs, ExecOpts};
 use super::BismoError;
 use crate::bitmatrix::IntMatrix;
 use crate::coordinator::{
-    Backend, BismoService, CacheStats, GemmRequest, GemmResponse, Precision, RequestHandle,
-    RequestOptions, ServiceConfig, Sharding,
+    BismoService, CacheStats, GemmRequest, GemmResponse, Precision, RequestHandle, ServiceConfig,
 };
-use crate::costmodel::{ResourceBudget, TunedProfile};
-use crate::kernel::KernelConfig;
-use crate::scheduler::Overlap;
+use crate::costmodel::TunedProfile;
 use std::sync::Arc;
 
 /// Topology and resource limits of a [`Session`] — worker lanes,
@@ -70,10 +68,18 @@ impl Session {
     /// when the builder runs, submits or prepares — before any work is
     /// queued.
     pub fn matmul(&self, prec: Precision) -> MatmulBuilder<'_> {
+        self.matmul_opts(prec, ExecOpts::new())
+    }
+
+    /// [`Session::matmul`] starting from an explicit [`ExecOpts`]
+    /// value instead of the defaults — how composite workloads (the
+    /// attention block) propagate one configured option set onto every
+    /// GEMM they lower.
+    pub fn matmul_opts(&self, prec: Precision, opts: ExecOpts) -> MatmulBuilder<'_> {
         MatmulBuilder {
             session: self,
             prec,
-            opts: RequestOptions::default(),
+            opts,
         }
     }
 
@@ -161,112 +167,16 @@ impl Session {
 pub struct MatmulBuilder<'s> {
     session: &'s Session,
     prec: Precision,
-    opts: RequestOptions,
+    opts: ExecOpts,
 }
 
+// The shared knob surface (backend / overlap / bit_skip / verify /
+// max_instrs / cache_* / instances / shard_grid / auto_shard / tile)
+// is stamped on by the macro so it stays byte-identical with the conv
+// and attention builders.
+impl_exec_opts_knobs!(MatmulBuilder<'_>, opts.req);
+
 impl<'s> MatmulBuilder<'s> {
-    /// Select the execution backend: the fast tiled engine (default)
-    /// or the cycle-accurate overlay simulator (which also yields a
-    /// [`crate::coordinator::RunReport`]).
-    pub fn backend(mut self, backend: Backend) -> Self {
-        self.opts.backend = backend;
-        self
-    }
-
-    /// Stage-overlap mode of the simulated pipeline (sim backend only).
-    pub fn overlap(mut self, overlap: Overlap) -> Self {
-        self.opts.overlap = overlap;
-        self
-    }
-
-    /// Skip all-zero bit-planes (the paper's sparse extension; sim
-    /// backend — the engine always skips).
-    pub fn bit_skip(mut self, on: bool) -> Self {
-        self.opts.bit_skip = on;
-        self
-    }
-
-    /// Cross-check every result against the CPU bit-serial oracle
-    /// (costs an extra software GEMM; failures surface as
-    /// [`BismoError::VerifyFailed`]).
-    pub fn verify(mut self, on: bool) -> Self {
-        self.opts.verify = on;
-        self
-    }
-
-    /// Instruction-budget watchdog for the sim backend: fail the
-    /// request with a typed [`crate::sim::SimError::BudgetExceeded`]
-    /// once the simulation has retired `n` instructions, instead of
-    /// letting a mis-scheduled job occupy a worker indefinitely.
-    pub fn max_instrs(mut self, n: u64) -> Self {
-        self.opts.max_instrs = Some(n);
-        self
-    }
-
-    /// Cache the packed LHS (off by default: fresh activations would
-    /// churn the cache).
-    pub fn cache_lhs(mut self, on: bool) -> Self {
-        self.opts.cache_lhs = on;
-        self
-    }
-
-    /// Cache the packed RHS — the weight-stationary side (on by
-    /// default).
-    pub fn cache_rhs(mut self, on: bool) -> Self {
-        self.opts.cache_rhs = on;
-        self
-    }
-
-    /// Scope this builder's cache interactions to tenant namespace `ns`
-    /// (`0` — the default — is the shared in-process namespace).
-    /// Tenants share the session cache's byte budget but can never hit
-    /// each other's packed operands; the network front door
-    /// ([`crate::net`]) sets this per connection.
-    pub fn cache_namespace(mut self, ns: u64) -> Self {
-        self.opts.cache_namespace = ns;
-        self
-    }
-
-    /// Execute each job across (up to) `n` overlay instances: the
-    /// output splits into a shard grid factored per job shape, the
-    /// shards run concurrently and merge bit-exactly. `n = 1` is the
-    /// plain single-instance path; `n = 0` is rejected by
-    /// [`MatmulBuilder::build`].
-    pub fn instances(mut self, n: usize) -> Self {
-        self.opts.sharding = if n == 1 {
-            Sharding::Single
-        } else {
-            Sharding::Instances(n)
-        };
-        self
-    }
-
-    /// Execute each job over an explicit `rows × cols` shard grid
-    /// (each axis clamped so no shard is empty).
-    pub fn shard_grid(mut self, rows: usize, cols: usize) -> Self {
-        self.opts.sharding = Sharding::Grid { rows, cols };
-        self
-    }
-
-    /// Cost-model-driven sharding: for each job,
-    /// [`crate::costmodel::select_sharding`] picks the shard count and
-    /// per-shard instance configuration that maximize predicted
-    /// throughput under `budget` (paper Eqs 1–2). On the sim backend
-    /// the shards run on instances of the selected configuration.
-    pub fn auto_shard(mut self, budget: ResourceBudget) -> Self {
-        self.opts.sharding = Sharding::Auto(budget);
-        self
-    }
-
-    /// Pin the engine's tile geometry for this builder's jobs,
-    /// overriding both the built-in default and any tuned-profile
-    /// selection. Degenerate tiles (any dimension zero) are rejected
-    /// by [`MatmulBuilder::build`]. Sim-backend jobs ignore this.
-    pub fn tile(mut self, cfg: KernelConfig) -> Self {
-        self.opts.kernel = Some(cfg);
-        self
-    }
-
     /// The builder's precision.
     pub fn precision(&self) -> Precision {
         self.prec
@@ -277,6 +187,13 @@ impl<'s> MatmulBuilder<'s> {
     pub fn build(&self) -> Result<(), BismoError> {
         self.prec.validate()?;
         self.opts.validate()
+    }
+
+    /// The builder's execution options, as the shared [`ExecOpts`]
+    /// value (composite workloads forward these onto the GEMMs they
+    /// lower).
+    pub fn options(&self) -> ExecOpts {
+        self.opts
     }
 
     /// Run one job synchronously.
@@ -300,7 +217,7 @@ impl<'s> MatmulBuilder<'s> {
         Ok(self
             .session
             .svc
-            .submit(GemmRequest::with_opts(a, b, self.prec, self.opts)))
+            .submit(GemmRequest::with_opts(a, b, self.prec, self.opts.req)))
     }
 
     /// Pack `weights` (the RHS) into the session cache once, returning
@@ -312,14 +229,14 @@ impl<'s> MatmulBuilder<'s> {
     /// repacking on every execute.
     pub fn prepare(&self, weights: impl Into<Arc<IntMatrix>>) -> Result<Prepared<'s>, BismoError> {
         self.build()?;
-        if !self.opts.cache_rhs {
+        if !self.opts.req.cache_rhs {
             return Err(BismoError::InvalidConfig(
                 "prepare() requires weight-side caching; remove cache_rhs(false)".into(),
             ));
         }
         let weights: Arc<IntMatrix> = weights.into();
         let (packed, _resident) = self.session.svc.prepare_operand_in(
-            self.opts.cache_namespace,
+            self.opts.req.cache_namespace,
             &weights,
             self.prec.abits,
             self.prec.rsigned,
@@ -348,7 +265,7 @@ pub struct Prepared<'s> {
     weights: Arc<IntMatrix>,
     packed_rows: usize,
     prec: Precision,
-    opts: RequestOptions,
+    opts: ExecOpts,
 }
 
 impl Prepared<'_> {
@@ -385,21 +302,31 @@ impl Prepared<'_> {
         x: impl Into<Arc<IntMatrix>>,
         prec: Precision,
     ) -> Result<GemmResponse, BismoError> {
-        prec.validate()?;
-        self.session
-            .svc
-            .submit(GemmRequest::with_opts(x, self.weights.clone(), prec, self.opts))
-            .wait()
+        self.submit_with(x, prec)?.wait()
     }
 
     /// Asynchronous [`Prepared::execute`]: enqueue and return the
     /// handle.
     pub fn submit(&self, x: impl Into<Arc<IntMatrix>>) -> Result<RequestHandle, BismoError> {
+        self.submit_with(x, self.prec)
+    }
+
+    /// Asynchronous [`Prepared::execute_with`]: enqueue at a
+    /// per-execute precision override and return the handle. This is
+    /// how variable-precision composite workloads (the attention
+    /// block's policy-adjusted layers) keep independent GEMMs in
+    /// flight together on the micro-batcher.
+    pub fn submit_with(
+        &self,
+        x: impl Into<Arc<IntMatrix>>,
+        prec: Precision,
+    ) -> Result<RequestHandle, BismoError> {
+        prec.validate()?;
         Ok(self.session.svc.submit(GemmRequest::with_opts(
             x,
             self.weights.clone(),
-            self.prec,
-            self.opts,
+            prec,
+            self.opts.req,
         )))
     }
 }
@@ -409,6 +336,8 @@ mod tests {
     use super::*;
     use crate::baseline::gemm_bitserial;
     use crate::bitmatrix::BitSerialMatrix;
+    use crate::coordinator::Backend;
+    use crate::costmodel::ResourceBudget;
     use crate::util::Rng;
 
     fn session() -> Session {

@@ -724,12 +724,14 @@ impl BismoService {
     ) -> Result<(Arc<BitSerialMatrix>, bool), BismoError> {
         self.inner.pack_one(
             m,
-            bits,
-            signed,
-            transposed,
-            true,
-            namespace,
-            "prepared operand",
+            PackParams {
+                bits,
+                signed,
+                transposed,
+                use_cache: true,
+                namespace,
+                side: "prepared operand",
+            },
         )
     }
 
@@ -1008,25 +1010,9 @@ impl Inner {
             // pack, no cache interaction — the packing is
             // request-specific by construction.
             LhsOperand::Packed(la) => (la.clone(), false),
-            LhsOperand::Dense(a) => self.pack_one(
-                a,
-                p.prec.wbits,
-                p.prec.lsigned,
-                false,
-                p.opts.cache_lhs,
-                p.opts.cache_namespace,
-                "lhs",
-            )?,
+            LhsOperand::Dense(a) => self.pack_one(a, PackParams::lhs(&p.prec, &p.opts))?,
         };
-        let (rb, rhs_cached) = self.pack_one(
-            &p.rhs,
-            p.prec.abits,
-            p.prec.rsigned,
-            true,
-            p.opts.cache_rhs,
-            p.opts.cache_namespace,
-            "rhs",
-        )?;
+        let (rb, rhs_cached) = self.pack_one(&p.rhs, PackParams::rhs(&p.prec, &p.opts))?;
         Ok(PackedOperands {
             la,
             rb,
@@ -1042,29 +1028,66 @@ impl Inner {
     /// first, and both results are identical by construction). A cache
     /// hit proves the operand fit its declared precision when first
     /// packed, so the range scan only runs on actual packs.
-    #[allow(clippy::too_many_arguments)]
     fn pack_one(
         &self,
         m: &IntMatrix,
-        bits: u32,
-        signed: bool,
-        transposed: bool,
-        use_cache: bool,
-        namespace: u64,
-        side: &str,
+        p: PackParams,
     ) -> Result<(Arc<BitSerialMatrix>, bool), BismoError> {
-        if !use_cache || self.cfg.cache_bytes == 0 {
-            check_fits(m, bits, signed, side)?;
-            return Ok((Arc::new(pack_operand(m, bits, signed, transposed)), false));
+        if !p.use_cache || self.cfg.cache_bytes == 0 {
+            check_fits(m, p.bits, p.signed, p.side)?;
+            return Ok((Arc::new(pack_operand(m, p.bits, p.signed, p.transposed)), false));
         }
-        let key = PackKey::of(m, bits, signed, transposed).in_namespace(namespace);
+        let key = PackKey::of(m, p.bits, p.signed, p.transposed).in_namespace(p.namespace);
         if let Some(hit) = self.cache.lock().unwrap().get(&key) {
             return Ok((hit, true));
         }
-        check_fits(m, bits, signed, side)?;
-        let packed = Arc::new(pack_operand(m, bits, signed, transposed));
+        check_fits(m, p.bits, p.signed, p.side)?;
+        let packed = Arc::new(pack_operand(m, p.bits, p.signed, p.transposed));
         self.cache.lock().unwrap().insert(key, packed.clone());
         Ok((packed, false))
+    }
+}
+
+/// The slice of one request's [`Precision`] + [`RequestOptions`] that
+/// applies to a single operand side. Each side's routing — which bit
+/// width, which signedness, whether the packing is transposed, which
+/// cache policy — is derived in exactly one constructor, so the
+/// option-to-side mapping cannot drift between call sites.
+struct PackParams {
+    bits: u32,
+    signed: bool,
+    transposed: bool,
+    use_cache: bool,
+    namespace: u64,
+    side: &'static str,
+}
+
+impl PackParams {
+    /// LHS (activation side): `wbits`/`lsigned`, packed row-major,
+    /// cached only on request (fresh activations would churn the
+    /// cache).
+    fn lhs(prec: &Precision, opts: &RequestOptions) -> PackParams {
+        PackParams {
+            bits: prec.wbits,
+            signed: prec.lsigned,
+            transposed: false,
+            use_cache: opts.cache_lhs,
+            namespace: opts.cache_namespace,
+            side: "lhs",
+        }
+    }
+
+    /// RHS (weight-stationary side): `abits`/`rsigned`, packed
+    /// transposed, cached by default.
+    fn rhs(prec: &Precision, opts: &RequestOptions) -> PackParams {
+        PackParams {
+            bits: prec.abits,
+            signed: prec.rsigned,
+            transposed: true,
+            use_cache: opts.cache_rhs,
+            namespace: opts.cache_namespace,
+            side: "rhs",
+        }
     }
 }
 

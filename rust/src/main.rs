@@ -47,11 +47,18 @@
 //!                (im2col / kn2row) end to end on the engine backend
 //!                (throughput) and the sim backend (per-layer cycles)
 //!                -> BENCH_cnn.json
+//! bismo attn-bench [--quick] [--seq S] [--requests N] [--reps N] [--out PATH]
+//!                quantized transformer encoder block serving
+//!                benchmark: static vs input-adaptive precision arms
+//!                over a request mix of varying activation range,
+//!                every static/range-adaptive pass gated bit-exact
+//!                against the i64 oracle on both backends
+//!                -> BENCH_attn.json
 //! bismo bench-check --baseline PATH --current PATH [--tolerance F]
 //!                CI regression gate: compares two BENCH_gemm.json
-//!                (or two BENCH_tune.json) files, failing on schema
-//!                drift or on per-case speedup regression beyond the
-//!                tolerance
+//!                (or BENCH_tune.json / BENCH_attn.json) files,
+//!                failing on schema drift or on speedup regression
+//!                beyond the tolerance
 //! bismo fuzz [--iters N] [--seed S] [--mode legal|mutation|differential|wire|all]
 //!                [--out PATH]               seeded structured fuzzing of
 //!                the ISA decoder, simulator and serving backends; every
@@ -1470,6 +1477,318 @@ fn cmd_cnn_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     Ok(())
 }
 
+/// `bismo attn-bench`: quantized transformer encoder block serving
+/// benchmark, static vs input-adaptive precision.
+///
+/// The [`QnnAttn::demo`](bismo::qnn::QnnAttn::demo) preset (32-wide
+/// model, 4 heads, 48-wide FFN, 3-bit activations, per-matrix weight
+/// precisions) is prepared once and served a request mix whose
+/// activation dynamic range cycles over 1..=abits populated bits —
+/// the headroom an input-adaptive policy converts into fewer bit
+/// planes. Every arm is measured on the engine backend
+/// (tokens/second) and the static and range-adaptive arms are gated
+/// bit-exact against the pure-i64 reference oracle on *both*
+/// backends; the sim backend additionally reports the deterministic
+/// cycle reduction. Results go to `BENCH_attn.json` (schema in the
+/// README).
+fn cmd_attn_bench(flags: &HashMap<String, String>) -> Result<(), BismoError> {
+    use bismo::api::AttnResponse;
+    use bismo::qnn::{
+        ClampPolicy, EntropyAdaptivePolicy, PrecisionPolicy, QnnAttn, RangeAdaptivePolicy,
+    };
+    use bismo::util::bench::Samples;
+    use bismo::util::Json;
+    use std::collections::BTreeMap;
+    use std::time::Instant;
+
+    let quick = flags.contains_key("quick");
+    let seq = get(flags, "seq", if quick { 8usize } else { 16 }).max(1);
+    let requests = get(flags, "requests", if quick { 4usize } else { 12 }).max(1);
+    let reps = get(flags, "reps", if quick { 2usize } else { 5 }).max(1);
+    let seed = get(flags, "seed", 0xA77Bu64);
+    let out_path = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "BENCH_attn.json".to_string());
+    let overlay = config_from(flags)?;
+    let session = Session::new(SessionConfig {
+        overlay,
+        ..Default::default()
+    })?;
+    let model = QnnAttn::demo(seed, seq);
+    let prepared = session.attn(&model).backend(Backend::Engine).prepare()?;
+
+    // The request mix: per-request activation dynamic range cycles
+    // over 1..=abits populated bits, so some requests only use a
+    // subset of the calibrated bit planes.
+    let mut rng = Rng::new(seed ^ 1);
+    let inputs: Vec<IntMatrix> = (0..requests)
+        .map(|i| model.random_input(&mut rng, seq, (i as u32 % model.abits) + 1))
+        .collect();
+    let refs: Vec<IntMatrix> = inputs
+        .iter()
+        .map(|x| model.forward_reference(x))
+        .collect::<Result<_, _>>()?;
+    let tokens = (requests * seq) as f64;
+
+    println!(
+        "attn-bench: QnnAttn demo preset (d_model {}, {} heads, d_ff {}), seq {seq}, \
+         {requests} requests x {reps} reps per arm",
+        model.spec.d_model, model.spec.heads, model.spec.d_ff
+    );
+
+    // Per-layer GEMM shape table (identical across arms).
+    let mut layers_json = Vec::new();
+    for l in model.layer_shapes(seq) {
+        println!(
+            "  {:<7} {} GEMM(s) {}x{}x{} a{}w{}",
+            l.name, l.gemms, l.m, l.k, l.n, l.activation_bits, l.weight_bits
+        );
+        let mut jl = BTreeMap::new();
+        jl.insert("name".to_string(), Json::str(l.name));
+        jl.insert("gemms".to_string(), Json::num(l.gemms as f64));
+        jl.insert("m".to_string(), Json::num(l.m as f64));
+        jl.insert("k".to_string(), Json::num(l.k as f64));
+        jl.insert("n".to_string(), Json::num(l.n as f64));
+        jl.insert(
+            "activation_bits".to_string(),
+            Json::num(l.activation_bits as f64),
+        );
+        jl.insert("weight_bits".to_string(), Json::num(l.weight_bits as f64));
+        layers_json.push(Json::Obj(jl));
+    }
+
+    // Simulator: the same bit-exactness gate, plus the deterministic
+    // cycle count — the machine-independent proof that the adaptive
+    // policy sheds real bit-plane work.
+    let sim_prepared = session.attn(&model).backend(Backend::Sim).prepare()?;
+    let range_policy = RangeAdaptivePolicy::default();
+    let cycles_of = |r: &AttnResponse, what: &str| -> Result<u64, BismoError> {
+        r.sim_cycles().ok_or_else(|| {
+            BismoError::VerifyFailed(format!("{what}: sim pass missing cycle reports"))
+        })
+    };
+    let mut static_cycles = 0u64;
+    let mut adaptive_cycles = 0u64;
+    for (i, x) in inputs.iter().enumerate() {
+        let s = sim_prepared.execute(x)?;
+        if s.output != refs[i] {
+            return Err(BismoError::VerifyFailed(format!(
+                "served attention output != i64 reference (sim static, request {i})"
+            )));
+        }
+        static_cycles += cycles_of(&s, "sim static")?;
+        let a = sim_prepared.execute_with_policy(x, &range_policy)?;
+        if a.output != refs[i] {
+            return Err(BismoError::VerifyFailed(format!(
+                "served attention output != i64 reference (sim adaptive, request {i})"
+            )));
+        }
+        adaptive_cycles += cycles_of(&a, "sim adaptive")?;
+    }
+    let cycle_ratio = static_cycles as f64 / adaptive_cycles.max(1) as f64;
+    println!(
+        "  sim: static {static_cycles} cycles, adaptive {adaptive_cycles} cycles \
+         ({cycle_ratio:.2}x fewer under the range policy, bit-exact)"
+    );
+
+    // The measured arms: static full precision, a lossy static clamp
+    // (accuracy contrast), and the two adaptive policies. `exact`
+    // arms are gated bit-identical to the oracle.
+    struct Arm {
+        name: &'static str,
+        policy: Option<Box<dyn PrecisionPolicy>>,
+        exact: bool,
+    }
+    let arms: Vec<Arm> = vec![
+        Arm {
+            name: "static_full",
+            policy: None,
+            exact: true,
+        },
+        Arm {
+            name: "static_low",
+            policy: Some(Box::new(ClampPolicy { bits: 2 })),
+            exact: false,
+        },
+        Arm {
+            name: "adaptive",
+            policy: Some(Box::new(RangeAdaptivePolicy::default())),
+            exact: true,
+        },
+        Arm {
+            name: "adaptive_entropy",
+            policy: Some(Box::new(EntropyAdaptivePolicy::default())),
+            exact: false,
+        },
+    ];
+
+    let run_one = |arm: &Arm, x: &IntMatrix| -> Result<AttnResponse, BismoError> {
+        match &arm.policy {
+            None => prepared.execute(x),
+            Some(p) => prepared.execute_with_policy(x, p.as_ref()),
+        }
+    };
+    let mut t = Table::new(
+        "attn-bench (engine backend)",
+        &["arm", "tokens/s", "accuracy proxy", "mean lhs bits"],
+    );
+    let mut arms_json = BTreeMap::new();
+    let mut rate_of: BTreeMap<&str, f64> = BTreeMap::new();
+    let mut adaptive_accuracy = 0.0f64;
+    let mut decisions_json = Vec::new();
+    for arm in &arms {
+        // One untimed pass per request: exactness gate, accuracy
+        // proxy, effective precision, decision log.
+        let outs: Vec<AttnResponse> = inputs
+            .iter()
+            .map(|x| run_one(arm, x))
+            .collect::<Result<_, _>>()?;
+        for (i, o) in outs.iter().enumerate() {
+            if arm.exact && o.output != refs[i] {
+                return Err(BismoError::VerifyFailed(format!(
+                    "served attention output != i64 reference (engine {}, request {i})",
+                    arm.name
+                )));
+            }
+        }
+        // Accuracy proxy: fraction of output elements identical to
+        // the full-precision reference (1.0 = bit-exact).
+        let (mut same, mut total) = (0usize, 0usize);
+        for (o, want) in outs.iter().zip(&refs) {
+            total += want.data().len();
+            same += o
+                .output
+                .data()
+                .iter()
+                .zip(want.data())
+                .filter(|(a, b)| a == b)
+                .count();
+        }
+        let accuracy = same as f64 / total.max(1) as f64;
+        let mean_bits =
+            outs.iter().map(AttnResponse::mean_lhs_bits).sum::<f64>() / outs.len() as f64;
+        if arm.name == "adaptive" {
+            adaptive_accuracy = accuracy;
+            for d in &outs[0].decisions {
+                let mut jd = BTreeMap::new();
+                jd.insert("layer".to_string(), Json::str(d.layer));
+                jd.insert("side".to_string(), Json::str(d.side));
+                jd.insert("base_bits".to_string(), Json::num(d.base_bits as f64));
+                jd.insert("chosen_bits".to_string(), Json::num(d.chosen_bits as f64));
+                jd.insert("clip".to_string(), Json::Bool(d.clip));
+                jd.insert("reason".to_string(), Json::str(&d.reason));
+                decisions_json.push(Json::Obj(jd));
+            }
+        }
+
+        // Timed passes over the whole request mix.
+        let mut lat = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            for x in &inputs {
+                run_one(arm, x)?;
+            }
+            lat.push(t0.elapsed().as_nanos() as f64);
+        }
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let samples = Samples { ns: lat };
+        let rate = tokens / (samples.median() / 1e9);
+        rate_of.insert(arm.name, rate);
+        t.rowf(&[&arm.name, &f(rate, 0), &f(accuracy, 4), &f(mean_bits, 2)]);
+
+        let mut ja = BTreeMap::new();
+        ja.insert(
+            "policy".to_string(),
+            Json::str(arm.policy.as_ref().map_or("none", |p| p.name())),
+        );
+        ja.insert("tokens_per_s".to_string(), Json::num(rate));
+        ja.insert("median_ns".to_string(), Json::num(samples.median()));
+        ja.insert("mean_ns".to_string(), Json::num(samples.mean()));
+        ja.insert("accuracy_proxy".to_string(), Json::num(accuracy));
+        ja.insert("mean_lhs_bits".to_string(), Json::num(mean_bits));
+        arms_json.insert(arm.name.to_string(), Json::Obj(ja));
+    }
+    t.print();
+
+    let adaptive_speedup = rate_of["adaptive"] / rate_of["static_full"].max(f64::MIN_POSITIVE);
+    println!(
+        "  adaptive vs static_full: {adaptive_speedup:.2}x tokens/s at accuracy proxy \
+         {adaptive_accuracy:.4} (floor 1.0), sim cycle ratio {cycle_ratio:.2}x"
+    );
+
+    let cs = session.cache_stats();
+    let mut cache = BTreeMap::new();
+    cache.insert("hits".to_string(), Json::num(cs.hits as f64));
+    cache.insert("misses".to_string(), Json::num(cs.misses as f64));
+    cache.insert("hit_rate".to_string(), Json::num(cs.hit_rate()));
+
+    let mut jmodel = BTreeMap::new();
+    jmodel.insert("d_model".to_string(), Json::num(model.spec.d_model as f64));
+    jmodel.insert("heads".to_string(), Json::num(model.spec.heads as f64));
+    jmodel.insert("d_ff".to_string(), Json::num(model.spec.d_ff as f64));
+    jmodel.insert("abits".to_string(), Json::num(model.abits as f64));
+    jmodel.insert("max_seq".to_string(), Json::num(model.spec.max_seq as f64));
+
+    let mut sim_j = BTreeMap::new();
+    sim_j.insert("static_cycles".to_string(), Json::num(static_cycles as f64));
+    sim_j.insert(
+        "adaptive_cycles".to_string(),
+        Json::num(adaptive_cycles as f64),
+    );
+    sim_j.insert("cycle_ratio".to_string(), Json::num(cycle_ratio));
+
+    let mut headline = BTreeMap::new();
+    headline.insert("adaptive_speedup".to_string(), Json::num(adaptive_speedup));
+    headline.insert("sim_cycle_ratio".to_string(), Json::num(cycle_ratio));
+    headline.insert(
+        "accuracy_proxy".to_string(),
+        Json::num(adaptive_accuracy),
+    );
+    headline.insert("accuracy_floor".to_string(), Json::num(1.0));
+    headline.insert("tokens_per_s".to_string(), Json::num(rate_of["adaptive"]));
+
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), Json::str("bismo-bench-attn/v1"));
+    root.insert(
+        "mode".to_string(),
+        Json::str(if quick { "quick" } else { "full" }),
+    );
+    root.insert("seq".to_string(), Json::num(seq as f64));
+    root.insert("requests".to_string(), Json::num(requests as f64));
+    root.insert("reps".to_string(), Json::num(reps as f64));
+    root.insert("seed".to_string(), Json::num(seed as f64));
+    root.insert(
+        "simd_tier".to_string(),
+        Json::str(bismo::simd::DispatchTier::active().name()),
+    );
+    root.insert(
+        "generated_unix".to_string(),
+        Json::num(
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs() as f64)
+                .unwrap_or(0.0),
+        ),
+    );
+    root.insert("model".to_string(), Json::Obj(jmodel));
+    root.insert("layers".to_string(), Json::Arr(layers_json));
+    root.insert("arms".to_string(), Json::Obj(arms_json));
+    root.insert("sim".to_string(), Json::Obj(sim_j));
+    root.insert("decisions".to_string(), Json::Arr(decisions_json));
+    root.insert("cache".to_string(), Json::Obj(cache));
+    root.insert("headline".to_string(), Json::Obj(headline));
+    let doc = Json::Obj(root);
+    std::fs::write(&out_path, doc.pretty(2) + "\n")
+        .map_err(|e| BismoError::Io(format!("writing {out_path}: {e}")))?;
+    println!(
+        "wrote {out_path}: adaptive {:.0} tokens/s, {adaptive_speedup:.2}x vs static_full \
+         (bit-exact on both backends)",
+        rate_of["adaptive"]
+    );
+    Ok(())
+}
+
 /// `bismo tune`: the closed-loop autotuner. Benchmarks candidate tile
 /// geometries and shard plans on *this* host across the shape classes
 /// (every candidate verified bit-exact against the software oracle
@@ -1675,13 +1994,19 @@ fn cmd_bench_check(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     let base = read(&baseline_path)?;
     let cur = read(&current_path)?;
 
-    // `bench-check` gates two report schemas: the GEMM suite
-    // (bismo-bench-gemm/v1) and the autotuner record (bismo-tune/v1).
-    // The documents' schema fields select the comparison.
+    // `bench-check` gates three report schemas: the GEMM suite
+    // (bismo-bench-gemm/v1), the autotuner record (bismo-tune/v1) and
+    // the attention serving benchmark (bismo-bench-attn/v1). The
+    // documents' schema fields select the comparison.
     if base.get("schema").and_then(Json::as_str) == Some("bismo-tune/v1")
         || cur.get("schema").and_then(Json::as_str) == Some("bismo-tune/v1")
     {
         return bench_check_tune(&base, &cur, &baseline_path, &current_path, tolerance);
+    }
+    if base.get("schema").and_then(Json::as_str) == Some("bismo-bench-attn/v1")
+        || cur.get("schema").and_then(Json::as_str) == Some("bismo-bench-attn/v1")
+    {
+        return bench_check_attn(&base, &cur, &baseline_path, &current_path, tolerance);
     }
 
     const SCHEMA: &str = "bismo-bench-gemm/v1";
@@ -1973,6 +2298,226 @@ fn bench_check_tune(
     Ok(())
 }
 
+/// The `bismo-bench-attn/v1` arm of the bench-check gate. Schema
+/// drift covers the workload identity (seq/requests/seed, the model
+/// architecture, the per-layer GEMM shape table, the arm set);
+/// regression covers three headline numbers:
+///
+/// * `adaptive_speedup` (adaptive vs static_full tokens/s, same run,
+///   so machine-relative) must not drop below
+///   `max(baseline, 1.0) · (1 − tolerance)` — adaptive serving must
+///   keep beating the highest static precision, up to noise;
+/// * `sim_cycle_ratio` (deterministic bit-plane work reduction on the
+///   simulator) must not drop below `baseline · (1 − tolerance)`;
+/// * the adaptive arm's `accuracy_proxy` must meet the *current*
+///   document's `accuracy_floor` absolutely — the range policy is
+///   exactness-preserving by construction, so any loss is a bug, not
+///   a regression to tolerate.
+fn bench_check_attn(
+    base: &bismo::util::Json,
+    cur: &bismo::util::Json,
+    baseline_path: &str,
+    current_path: &str,
+    tolerance: f64,
+) -> Result<(), BismoError> {
+    use bismo::util::Json;
+    use std::collections::BTreeMap;
+
+    const SCHEMA: &str = "bismo-bench-attn/v1";
+    const ROOT_IDENTITY: [&str; 4] = ["seq", "requests", "reps", "seed"];
+    const MODEL_IDENTITY: [&str; 5] = ["d_model", "heads", "d_ff", "abits", "max_seq"];
+    const LAYER_IDENTITY: [&str; 6] = ["gemms", "m", "k", "n", "activation_bits", "weight_bits"];
+
+    let mut drift: Vec<String> = Vec::new();
+    for (which, doc) in [("baseline", base), ("current", cur)] {
+        match doc.get("schema").and_then(Json::as_str) {
+            Some(SCHEMA) => {}
+            other => drift.push(format!("{which}: schema {other:?}, expected {SCHEMA:?}")),
+        }
+    }
+    let mode = |doc: &Json| doc.get("mode").and_then(Json::as_str).map(str::to_string);
+    if mode(base) != mode(cur) {
+        drift.push(format!(
+            "bench mode differs: baseline {:?} vs current {:?}",
+            mode(base),
+            mode(cur)
+        ));
+    }
+    // Workload identity: root facts and model architecture must be
+    // numerically identical.
+    let ident = |doc: &Json, which: &str, drift: &mut Vec<String>| {
+        let mut out: BTreeMap<String, f64> = BTreeMap::new();
+        for k in ROOT_IDENTITY {
+            match doc.get(k).and_then(Json::as_f64) {
+                Some(v) => {
+                    out.insert(k.to_string(), v);
+                }
+                None => drift.push(format!("{which}: missing field {k}")),
+            }
+        }
+        for k in MODEL_IDENTITY {
+            match doc.get("model").and_then(|m| m.get(k)).and_then(Json::as_f64) {
+                Some(v) => {
+                    out.insert(format!("model.{k}"), v);
+                }
+                None => drift.push(format!("{which}: missing field model.{k}")),
+            }
+        }
+        out
+    };
+    let bi = ident(base, "baseline", &mut drift);
+    let ci = ident(cur, "current", &mut drift);
+    for (k, bv) in &bi {
+        if let Some(cv) = ci.get(k) {
+            if bv != cv {
+                drift.push(format!("{k} drifted ({bv} -> {cv})"));
+            }
+        }
+    }
+    // Per-layer GEMM shape table: matched one-to-one by name.
+    let layers = |doc: &Json, which: &str, drift: &mut Vec<String>| {
+        let mut by_name: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
+        let arr = doc.get("layers").and_then(Json::as_arr).unwrap_or(&[]);
+        if arr.is_empty() {
+            drift.push(format!("{which}: no layers array"));
+        }
+        for l in arr {
+            let Some(name) = l.get("name").and_then(Json::as_str) else {
+                drift.push(format!("{which}: layer without a name"));
+                continue;
+            };
+            let mut fields = BTreeMap::new();
+            for f in LAYER_IDENTITY {
+                match l.get(f).and_then(Json::as_f64) {
+                    Some(v) => {
+                        fields.insert(f.to_string(), v);
+                    }
+                    None => drift.push(format!("{which}: layer {name} missing field {f}")),
+                }
+            }
+            by_name.insert(name.to_string(), fields);
+        }
+        by_name
+    };
+    let base_layers = layers(base, "baseline", &mut drift);
+    let cur_layers = layers(cur, "current", &mut drift);
+    for name in base_layers.keys() {
+        if !cur_layers.contains_key(name) {
+            drift.push(format!("layer {name} present in baseline, missing in current"));
+        }
+    }
+    for name in cur_layers.keys() {
+        if !base_layers.contains_key(name) {
+            drift.push(format!("layer {name} present in current, not in baseline"));
+        }
+    }
+    for (name, bf) in &base_layers {
+        let Some(cf) = cur_layers.get(name) else { continue };
+        for f in LAYER_IDENTITY {
+            if let (Some(bv), Some(cv)) = (bf.get(f), cf.get(f)) {
+                if bv != cv {
+                    drift.push(format!("layer {name}: {f} drifted ({bv} -> {cv})"));
+                }
+            }
+        }
+    }
+    // Arm set: same names, each with throughput + accuracy present.
+    let arm_names = |doc: &Json, which: &str, drift: &mut Vec<String>| -> Vec<String> {
+        match doc.get("arms") {
+            Some(Json::Obj(m)) => {
+                for (name, arm) in m {
+                    for f in ["tokens_per_s", "accuracy_proxy"] {
+                        if arm.get(f).and_then(Json::as_f64).is_none() {
+                            drift.push(format!("{which}: arm {name} missing field {f}"));
+                        }
+                    }
+                }
+                m.keys().cloned().collect()
+            }
+            _ => {
+                drift.push(format!("{which}: no arms object"));
+                Vec::new()
+            }
+        }
+    };
+    let base_arms = arm_names(base, "baseline", &mut drift);
+    let cur_arms = arm_names(cur, "current", &mut drift);
+    if base_arms != cur_arms {
+        drift.push(format!(
+            "arm set differs: baseline {base_arms:?} vs current {cur_arms:?}"
+        ));
+    }
+    if !drift.is_empty() {
+        for d in &drift {
+            eprintln!("schema drift: {d}");
+        }
+        return Err(BismoError::VerifyFailed(format!(
+            "bench-check: {} schema drift issue(s) between {baseline_path} and {current_path}",
+            drift.len()
+        )));
+    }
+
+    let headline_num = |doc: &Json, which: &str, field: &str| -> Result<f64, BismoError> {
+        doc.get("headline")
+            .and_then(|h| h.get(field))
+            .and_then(Json::as_f64)
+            .ok_or_else(|| BismoError::Parse(format!("{which}: headline.{field} missing")))
+    };
+    let mut t = Table::new(
+        &format!("bench-check attn (tolerance {tolerance})"),
+        &["metric", "baseline", "current", "floor", "status"],
+    );
+    let mut regressions = 0usize;
+    let mut check = |name: &str, basev: f64, curv: f64, floor: f64| {
+        let ok = curv >= floor;
+        t.rowf(&[
+            &name,
+            &f(basev, 3),
+            &f(curv, 3),
+            &f(floor, 3),
+            &if ok { "ok" } else { "REGRESSION" },
+        ]);
+        if !ok {
+            regressions += 1;
+        }
+    };
+    // Adaptive must keep beating static_full: the floor never drops
+    // below (1 − tolerance) even from a weak baseline.
+    let b_speed = headline_num(base, "baseline", "adaptive_speedup")?;
+    let c_speed = headline_num(cur, "current", "adaptive_speedup")?;
+    check(
+        "adaptive_speedup",
+        b_speed,
+        c_speed,
+        b_speed.max(1.0) * (1.0 - tolerance),
+    );
+    let b_cycles = headline_num(base, "baseline", "sim_cycle_ratio")?;
+    let c_cycles = headline_num(cur, "current", "sim_cycle_ratio")?;
+    check(
+        "sim_cycle_ratio",
+        b_cycles,
+        c_cycles,
+        b_cycles * (1.0 - tolerance),
+    );
+    // Accuracy is absolute: the floor is the current document's own
+    // declared floor, not tolerance-scaled.
+    let floor = headline_num(cur, "current", "accuracy_floor")?;
+    check(
+        "accuracy_proxy",
+        headline_num(base, "baseline", "accuracy_proxy")?,
+        headline_num(cur, "current", "accuracy_proxy")?,
+        floor,
+    );
+    t.print();
+    if regressions > 0 {
+        return Err(BismoError::VerifyFailed(format!(
+            "bench-check: {regressions} attention metric(s) regressed beyond tolerance {tolerance}"
+        )));
+    }
+    println!("bench-check OK: attention headline metrics within tolerance {tolerance}");
+    Ok(())
+}
+
 fn cmd_costmodel(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     let model = CostModel::paper();
     let fitted = CostModel::fit_from_synth();
@@ -2244,7 +2789,7 @@ fn cmd_snapshot(flags: &HashMap<String, String>) -> Result<(), BismoError> {
     Ok(())
 }
 
-const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|bench|tune|serve|serve-bench|shard-bench|cnn-bench|bench-check|fuzz|snapshot|costmodel|synth|power|instances|info> [flags]
+const USAGE: &str = "usage: bismo <quickstart|simulate|schedule|bench|tune|serve|serve-bench|shard-bench|cnn-bench|attn-bench|bench-check|fuzz|snapshot|costmodel|synth|power|instances|info> [flags]
 flags: --instance N  --m M --k K --n N  --wbits W --abits A  --signed --no-overlap --bit-skip  --seed S  --dk N
 bench: --quick  --out PATH (default BENCH_gemm.json)  --threads N
 tune: --quick  --out PATH (default BENCH_tune.json)  --dir DIR (default tuned/ or $BISMO_TUNE_DIR)  --threads N  --seed S
@@ -2252,6 +2797,7 @@ serve: --host H (default 127.0.0.1)  --port P (default 7410; 0 = ephemeral)  --w
 serve-bench: --quick  --backend engine|sim  --requests N  --rate RPS  --layers L  --workers W  --batch B  --out PATH (default BENCH_serve.json)  --remote  --clients C  --addr HOST:PORT  --max-in-flight N  --tenant-in-flight N
 shard-bench: --quick  --backend engine|sim  --reps N  --max-shards S  --budget-luts L --budget-brams B  --out PATH (default BENCH_shard.json)
 cnn-bench: --quick  --batch B  --reps N  --out PATH (default BENCH_cnn.json)
+attn-bench: --quick  --seq S  --requests N  --reps N  --seed S  --out PATH (default BENCH_attn.json)
 bench-check: --baseline PATH  --current PATH  --tolerance F (default 0.35)
 fuzz: --iters N (default 200)  --seed S (default 42)  --mode legal|mutation|differential|wire|all  --out PATH (default FUZZ_failures.json)
 snapshot: --regen  --baseline PATH (default ci/sim_snapshots.json)
@@ -2271,6 +2817,7 @@ fn main() {
         "serve-bench" => cmd_serve_bench(&flags),
         "shard-bench" => cmd_shard_bench(&flags),
         "cnn-bench" => cmd_cnn_bench(&flags),
+        "attn-bench" => cmd_attn_bench(&flags),
         "bench-check" => cmd_bench_check(&flags),
         "fuzz" => cmd_fuzz(&flags),
         "snapshot" => cmd_snapshot(&flags),

@@ -10,7 +10,7 @@ use super::wire::{
     decode_header, decode_payload, encode_request, Message, Request, Response, WireStats,
     HEADER_BYTES,
 };
-use crate::api::BismoError;
+use crate::api::{BismoError, ExecOpts};
 use crate::bitmatrix::IntMatrix;
 use crate::coordinator::{Backend, Precision};
 use crate::lowering::{ConvSpec, LoweringMode, Tensor};
@@ -147,8 +147,11 @@ impl NetClient {
         into_gemm(resp)
     }
 
-    /// One remote convolution layer, lowered server-side.
-    #[allow(clippy::too_many_arguments)]
+    /// One remote convolution layer, lowered server-side. Execution
+    /// options travel as the shared [`ExecOpts`] value; the wire
+    /// protocol carries the subset the server honors per request
+    /// (backend and verification — cache policy is the server's
+    /// per-tenant concern).
     pub fn conv(
         &mut self,
         spec: ConvSpec,
@@ -156,15 +159,14 @@ impl NetClient {
         input: &Tensor,
         weights: &IntMatrix,
         prec: Precision,
-        backend: Backend,
-        verify: bool,
+        opts: &ExecOpts,
     ) -> Result<RemoteConv, BismoError> {
         match self.call(&Request::Conv {
             spec,
             mode,
             prec,
-            backend,
-            verify,
+            backend: opts.req.backend,
+            verify: opts.req.verify,
             weights: weights.clone(),
             input: input.clone(),
         })? {

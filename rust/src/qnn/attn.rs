@@ -1,0 +1,827 @@
+//! Quantized transformer encoder block on the overlay: the
+//! heterogeneous-precision GEMM workload the BISMO journal extension
+//! argues bit-serial hardware is built for.
+//!
+//! One [`QnnAttn`] block is a DAG of integer GEMMs — Q/K/V
+//! projections, per-head `Q·Kᵀ` score GEMMs, attention·V, an output
+//! projection and a two-layer FFN — each with its *own*
+//! [`Precision`]: activations are unsigned `abits`-bit on the LHS,
+//! weights signed at per-matrix widths on the RHS, and the score /
+//! attention·V GEMMs multiply two activation operands. Every float
+//! non-linearity of the textbook block is substituted by an integer
+//! construction in the spirit of FINN-style [`Thresholding`]:
+//!
+//! * softmax → [`SoftmaxStaircase`]: a row-wise fixed-point staircase
+//!   on `score − rowmax` producing unsigned `abits`-bit attention
+//!   weights (monotone in the score, row maximum saturates; the
+//!   row-sum normalization is dropped — it rescales every product of
+//!   a row identically, and the requantizing staircase after
+//!   attention·V absorbs scale, so the *integer* pipeline stays
+//!   deterministic and exactly reproducible);
+//! * layernorm + activation → per-stage [`Thresholding`] staircases,
+//!   data-calibrated (FINN-style) to the accumulator range the
+//!   producing GEMM emits on a seeded calibration batch;
+//! * residual adds are omitted: raw accumulator scales differ per
+//!   branch and integer residual rescaling is a calibration concern,
+//!   orthogonal to the serving claims under test (see DESIGN.md §14).
+//!
+//! The block's forward pass is written once, over an abstract
+//! [`GemmExec`] — [`QnnAttn::forward_reference`] plugs in the pure
+//! i64 [`IntMatrix::matmul`] oracle, the serving path
+//! ([`crate::api::PreparedAttn`]) plugs in the session. The two
+//! executions run the *same* staircase/slicing code, so any result
+//! divergence is attributable to the GEMM engine alone — that is the
+//! bit-exactness claim the tests and `bismo attn-bench` gate on.
+
+use crate::api::BismoError;
+use crate::bitmatrix::IntMatrix;
+use crate::coordinator::Precision;
+use crate::qnn::cnn::Thresholding;
+use crate::util::Rng;
+use std::sync::Arc;
+
+/// Architecture of one encoder block, plus the serving-time sequence
+/// bound the integer staircases are calibrated against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AttnSpec {
+    /// Model (embedding) width; the per-head width is
+    /// `d_model / heads`.
+    pub d_model: usize,
+    /// Attention heads.
+    pub heads: usize,
+    /// FFN hidden width.
+    pub d_ff: usize,
+    /// Largest sequence length this block serves. The staircases are
+    /// data-calibrated on inputs of this length; longer inputs are
+    /// rejected at execute time.
+    pub max_seq: usize,
+}
+
+impl AttnSpec {
+    /// Per-head width.
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    /// Reject degenerate architectures with a typed error before any
+    /// weight is allocated or packed.
+    pub fn validate(&self) -> Result<(), BismoError> {
+        if self.d_model == 0 || self.heads == 0 || self.d_ff == 0 || self.max_seq == 0 {
+            return Err(BismoError::InvalidConfig(format!(
+                "attention spec dimensions must be >= 1 (got d_model={}, heads={}, d_ff={}, max_seq={})",
+                self.d_model, self.heads, self.d_ff, self.max_seq
+            )));
+        }
+        if self.d_model % self.heads != 0 {
+            return Err(BismoError::InvalidConfig(format!(
+                "d_model ({}) must divide evenly into {} heads",
+                self.d_model, self.heads
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Integer softmax substitute: a row-wise staircase on the score gap
+/// to the row maximum.
+///
+/// For a score `s` in a row with maximum `m`, the attention weight is
+/// `max(0, levels − ((m − s) >> shift))` with `levels = 2^abits − 1`:
+/// the row maximum always maps to `levels`, scores fade linearly (in
+/// `2^shift`-sized steps) to zero, and every weight fits unsigned
+/// `abits`-bit — the declared LHS precision of the attention·V GEMM.
+/// Monotone in `s`, pure integer, and calibrated once from the
+/// worst-case score spread (like the [`Thresholding`] staircases).
+#[derive(Clone, Copy, Debug)]
+pub struct SoftmaxStaircase {
+    /// log2 of the score gap per attention-weight step.
+    pub shift: u32,
+    /// `2^abits − 1`: the weight of the row maximum.
+    pub levels: i64,
+}
+
+impl SoftmaxStaircase {
+    /// Calibrate for `abits`-bit attention weights against a score
+    /// spread bound, placing the staircase's reach just under it so
+    /// the weights actually spread (the same rule the thresholding
+    /// staircases use).
+    pub fn for_bounds(abits: u32, max_spread: i64) -> SoftmaxStaircase {
+        let levels = (1i64 << abits) - 1;
+        let mut shift = 0u32;
+        while (levels << (shift + 1)) <= max_spread {
+            shift += 1;
+        }
+        SoftmaxStaircase { shift, levels }
+    }
+
+    /// Attention weight for one score `gap = rowmax − s` (`gap >= 0`).
+    #[inline]
+    pub fn weight(&self, gap: i64) -> i64 {
+        (self.levels - (gap >> self.shift)).max(0)
+    }
+
+    /// Apply row-wise to a score matrix.
+    pub fn apply(&self, scores: &IntMatrix) -> IntMatrix {
+        IntMatrix::from_fn(scores.rows, scores.cols, |r, c| {
+            let rowmax = scores.row(r).iter().copied().max().unwrap_or(0);
+            self.weight(rowmax - scores.get(r, c))
+        })
+    }
+}
+
+/// Per-matrix weight widths of one block (signed weights; the
+/// activation side is the block-wide unsigned `abits`).
+#[derive(Clone, Copy, Debug)]
+pub struct AttnWeightBits {
+    /// Q/K/V projection weights.
+    pub proj: u32,
+    /// Output projection weights.
+    pub out: u32,
+    /// FFN first layer weights.
+    pub ffn1: u32,
+    /// FFN second layer weights.
+    pub ffn2: u32,
+}
+
+impl Default for AttnWeightBits {
+    fn default() -> Self {
+        // Four GEMM families at three different weight widths: the
+        // heterogeneous-precision workload in one block.
+        AttnWeightBits {
+            proj: 3,
+            out: 2,
+            ffn1: 3,
+            ffn2: 2,
+        }
+    }
+}
+
+/// One GEMM of an attention layer, as seen by a [`GemmExec`].
+pub enum AttnGemm {
+    /// Activations against one of the block's weight matrices,
+    /// identified by name (`"wq"`, `"wk"`, `"wv"`, `"wo"`, `"w1"`,
+    /// `"w2"`) — the weight-stationary side.
+    Weight {
+        weight: &'static str,
+        lhs: IntMatrix,
+        prec: Precision,
+    },
+    /// Activation × activation (scores, attention·V): both operands
+    /// fresh per request.
+    Dynamic {
+        lhs: IntMatrix,
+        rhs: IntMatrix,
+        prec: Precision,
+    },
+}
+
+impl AttnGemm {
+    /// The declared precision of this GEMM.
+    pub fn precision(&self) -> Precision {
+        match self {
+            AttnGemm::Weight { prec, .. } | AttnGemm::Dynamic { prec, .. } => *prec,
+        }
+    }
+}
+
+/// The GEMM engine a [`QnnAttn`] forward pass runs on. One layer's
+/// jobs are independent, so an implementation may (and the serving
+/// path does) submit them all before waiting on any; results come
+/// back in job order.
+pub trait GemmExec {
+    /// Execute one layer's independent GEMMs.
+    fn run_layer(
+        &mut self,
+        layer: &'static str,
+        jobs: Vec<AttnGemm>,
+    ) -> Result<Vec<IntMatrix>, BismoError>;
+}
+
+/// A quantized transformer encoder block: six weight matrices, four
+/// threshold staircases, an integer softmax, and a distinct
+/// [`Precision`] per GEMM family.
+#[derive(Clone)]
+pub struct QnnAttn {
+    pub spec: AttnSpec,
+    /// `d_model × d_model` Q/K/V/output projection weights.
+    pub wq: Arc<IntMatrix>,
+    pub wk: Arc<IntMatrix>,
+    pub wv: Arc<IntMatrix>,
+    pub wo: Arc<IntMatrix>,
+    /// `d_model × d_ff` and `d_ff × d_model` FFN weights.
+    pub w1: Arc<IntMatrix>,
+    pub w2: Arc<IntMatrix>,
+    /// Q/K/V projection GEMMs: unsigned `abits` LHS, signed
+    /// `wbits.proj` RHS.
+    pub proj_prec: Precision,
+    /// Per-head `Q·Kᵀ`: both sides unsigned `abits` activations.
+    pub score_prec: Precision,
+    /// Per-head attention·V: both sides unsigned `abits`.
+    pub av_prec: Precision,
+    /// Output projection.
+    pub out_prec: Precision,
+    /// FFN layers.
+    pub ffn1_prec: Precision,
+    pub ffn2_prec: Precision,
+    /// Requantizing staircases after the projection, context, output
+    /// and FFN-hidden accumulators.
+    pub t_qkv: Thresholding,
+    pub t_ctx: Thresholding,
+    pub t_out: Thresholding,
+    pub t_ffn: Thresholding,
+    /// The integer softmax substitute.
+    pub softmax: SoftmaxStaircase,
+    /// Activation width (unsigned) throughout the block.
+    pub abits: u32,
+}
+
+/// Threshold shift placing the staircase's reach just under `max_acc`
+/// (the same rule the CNN staircases use).
+fn staircase_shift(max_acc: i64, abits: u32) -> u32 {
+    let levels = (1i64 << abits) - 1;
+    let mut shift = 0u32;
+    while (levels << (shift + 1)) <= max_acc {
+        shift += 1;
+    }
+    shift
+}
+
+impl QnnAttn {
+    /// Build a seeded-random block: weights uniform in their signed
+    /// width, staircases data-calibrated on a seeded batch.
+    pub fn random(seed: u64, spec: AttnSpec, abits: u32, wbits: AttnWeightBits) -> QnnAttn {
+        let mut rng = Rng::new(seed);
+        let d = spec.d_model;
+        let mut w = |rows: usize, cols: usize, bits: u32| {
+            Arc::new(IntMatrix::from_fn(rows, cols, |_, _| rng.operand(bits, true)))
+        };
+        let wq = w(d, d, wbits.proj);
+        let wk = w(d, d, wbits.proj);
+        let wv = w(d, d, wbits.proj);
+        let wo = w(d, d, wbits.out);
+        let w1 = w(d, spec.d_ff, wbits.ffn1);
+        let w2 = w(spec.d_ff, d, wbits.ffn2);
+        let dh = spec.d_head();
+        // Staircase calibration, FINN-style, on a small seeded batch.
+        // A worst-case accumulator bound (k · max|lhs| · max|rhs|)
+        // would put the first threshold far above anything a zero-mean
+        // signed-weight GEMM actually produces, silencing the block —
+        // so each staircase is instead placed just under the largest
+        // accumulator its producing GEMM emits on the batch, stage by
+        // stage (inputs past the observed range saturate to the top
+        // step, exactly like FINN thresholds on unseen data).
+        let cal: Vec<IntMatrix> = (0..4)
+            .map(|_| IntMatrix::random(&mut rng, spec.max_seq, d, abits, false))
+            .collect();
+        let observed = |ms: &[IntMatrix]| {
+            ms.iter()
+                .flat_map(|m| m.data().iter().copied())
+                .max()
+                .unwrap_or(0)
+                .max(1)
+        };
+        let mut qkv_accs = Vec::new();
+        for x in &cal {
+            for w in [&wq, &wk, &wv] {
+                qkv_accs.push(x.matmul(w));
+            }
+        }
+        let t_qkv = Thresholding::uniform(staircase_shift(observed(&qkv_accs), abits), abits);
+        // Per-head score spread (the gap to the row maximum is the
+        // softmax staircase's input domain).
+        let mut spread = 1i64;
+        let mut score_mats: Vec<Vec<IntMatrix>> = Vec::new();
+        let mut vs: Vec<IntMatrix> = Vec::new();
+        for x in &cal {
+            let q = t_qkv.apply_matrix(&x.matmul(&wq));
+            let k = t_qkv.apply_matrix(&x.matmul(&wk));
+            vs.push(t_qkv.apply_matrix(&x.matmul(&wv)));
+            let mut per_head = Vec::new();
+            for h in 0..spec.heads {
+                let s = col_block(&q, h * dh, dh).matmul(&col_block(&k, h * dh, dh).transpose());
+                for r in 0..s.rows {
+                    let row = s.row(r);
+                    let hi = row.iter().copied().max().unwrap_or(0);
+                    let lo = row.iter().copied().min().unwrap_or(0);
+                    spread = spread.max(hi - lo);
+                }
+                per_head.push(s);
+            }
+            score_mats.push(per_head);
+        }
+        let softmax = SoftmaxStaircase::for_bounds(abits, spread);
+        let mut ctx_accs = Vec::new();
+        for (per_head, v) in score_mats.iter().zip(&vs) {
+            let heads: Vec<IntMatrix> = per_head
+                .iter()
+                .enumerate()
+                .map(|(h, s)| softmax.apply(s).matmul(&col_block(v, h * dh, dh)))
+                .collect();
+            ctx_accs.push(concat_cols(&heads));
+        }
+        let t_ctx = Thresholding::uniform(staircase_shift(observed(&ctx_accs), abits), abits);
+        let o_accs: Vec<IntMatrix> = ctx_accs
+            .iter()
+            .map(|ctx| t_ctx.apply_matrix(ctx).matmul(&wo))
+            .collect();
+        let t_out = Thresholding::uniform(staircase_shift(observed(&o_accs), abits), abits);
+        let h1_accs: Vec<IntMatrix> = o_accs
+            .iter()
+            .map(|o| t_out.apply_matrix(o).matmul(&w1))
+            .collect();
+        let t_ffn = Thresholding::uniform(staircase_shift(observed(&h1_accs), abits), abits);
+        let unsigned_pair = Precision::unsigned(abits, abits);
+        QnnAttn {
+            spec,
+            wq,
+            wk,
+            wv,
+            wo,
+            w1,
+            w2,
+            proj_prec: Precision {
+                wbits: abits,
+                abits: wbits.proj,
+                lsigned: false,
+                rsigned: true,
+            },
+            score_prec: unsigned_pair,
+            av_prec: unsigned_pair,
+            out_prec: Precision {
+                wbits: abits,
+                abits: wbits.out,
+                lsigned: false,
+                rsigned: true,
+            },
+            ffn1_prec: Precision {
+                wbits: abits,
+                abits: wbits.ffn1,
+                lsigned: false,
+                rsigned: true,
+            },
+            ffn2_prec: Precision {
+                wbits: abits,
+                abits: wbits.ffn2,
+                lsigned: false,
+                rsigned: true,
+            },
+            t_qkv,
+            t_ctx,
+            t_out,
+            t_ffn,
+            softmax,
+            abits,
+        }
+    }
+
+    /// The benchmark/demo preset: 32-wide model, 4 heads, 48-wide FFN,
+    /// 3-bit activations, weights at 3/2/3/2 bits.
+    pub fn demo(seed: u64, max_seq: usize) -> QnnAttn {
+        QnnAttn::random(
+            seed,
+            AttnSpec {
+                d_model: 32,
+                heads: 4,
+                d_ff: 48,
+                max_seq,
+            },
+            3,
+            AttnWeightBits::default(),
+        )
+    }
+
+    /// Validate architecture, weight shapes and per-GEMM precisions.
+    pub fn validate(&self) -> Result<(), BismoError> {
+        self.spec.validate()?;
+        let d = self.spec.d_model;
+        for (name, m, rows, cols) in [
+            ("wq", &self.wq, d, d),
+            ("wk", &self.wk, d, d),
+            ("wv", &self.wv, d, d),
+            ("wo", &self.wo, d, d),
+            ("w1", &self.w1, d, self.spec.d_ff),
+            ("w2", &self.w2, self.spec.d_ff, d),
+        ] {
+            if (m.rows, m.cols) != (rows, cols) {
+                return Err(BismoError::ShapeMismatch(format!(
+                    "{name} is {}×{}, expected {rows}×{cols}",
+                    m.rows, m.cols
+                )));
+            }
+        }
+        for prec in [
+            self.proj_prec,
+            self.score_prec,
+            self.av_prec,
+            self.out_prec,
+            self.ffn1_prec,
+            self.ffn2_prec,
+        ] {
+            prec.validate()?;
+        }
+        Ok(())
+    }
+
+    /// The weight matrix behind a [`AttnGemm::Weight`] name.
+    pub fn weight(&self, name: &str) -> &Arc<IntMatrix> {
+        match name {
+            "wq" => &self.wq,
+            "wk" => &self.wk,
+            "wv" => &self.wv,
+            "wo" => &self.wo,
+            "w1" => &self.w1,
+            "w2" => &self.w2,
+            other => panic!("unknown attention weight {other:?}"),
+        }
+    }
+
+    /// Reject inputs this block was not calibrated for: wrong width,
+    /// sequence over the staircase bound, or entries outside the
+    /// activation precision.
+    pub fn check_input(&self, x: &IntMatrix) -> Result<(), BismoError> {
+        if x.cols != self.spec.d_model || x.rows == 0 || x.rows > self.spec.max_seq {
+            return Err(BismoError::ShapeMismatch(format!(
+                "attention input is {}×{}, expected seq×{} with 1 <= seq <= {}",
+                x.rows, x.cols, self.spec.d_model, self.spec.max_seq
+            )));
+        }
+        if !x.fits(self.abits, false) {
+            return Err(BismoError::PrecisionUnsupported(format!(
+                "attention input entries do not fit unsigned {}-bit",
+                self.abits
+            )));
+        }
+        Ok(())
+    }
+
+    /// A random valid input: `seq × d_model` with unsigned `bits`-bit
+    /// entries (callers vary `bits <= abits` to model inputs of
+    /// varying dynamic range — what the adaptive precision policy
+    /// exploits).
+    pub fn random_input(&self, rng: &mut Rng, seq: usize, bits: u32) -> IntMatrix {
+        IntMatrix::random(rng, seq, self.spec.d_model, bits, false)
+    }
+
+    /// The forward pass, over an abstract GEMM engine. All slicing,
+    /// staircase and softmax arithmetic lives here — shared verbatim
+    /// by the oracle and the serving path — so executor results are
+    /// comparable bit for bit.
+    pub fn forward_with<E: GemmExec>(
+        &self,
+        x: &IntMatrix,
+        exec: &mut E,
+    ) -> Result<IntMatrix, BismoError> {
+        self.check_input(x)?;
+        let dh = self.spec.d_head();
+        // Q/K/V projections: three weight GEMMs off the same input.
+        let qkv = exec.run_layer(
+            "qkv",
+            ["wq", "wk", "wv"]
+                .into_iter()
+                .map(|weight| AttnGemm::Weight {
+                    weight,
+                    lhs: x.clone(),
+                    prec: self.proj_prec,
+                })
+                .collect(),
+        )?;
+        let [q_acc, k_acc, v_acc]: [IntMatrix; 3] = qkv
+            .try_into()
+            .map_err(|_| BismoError::ShapeMismatch("qkv layer must yield 3 results".into()))?;
+        let q = self.t_qkv.apply_matrix(&q_acc);
+        let k = self.t_qkv.apply_matrix(&k_acc);
+        let v = self.t_qkv.apply_matrix(&v_acc);
+        // Per-head scores Q_h · K_hᵀ — all heads submitted together.
+        let scores = exec.run_layer(
+            "scores",
+            (0..self.spec.heads)
+                .map(|h| AttnGemm::Dynamic {
+                    lhs: col_block(&q, h * dh, dh),
+                    rhs: col_block(&k, h * dh, dh).transpose(),
+                    prec: self.score_prec,
+                })
+                .collect(),
+        )?;
+        // Integer softmax per head, then attention·V — again all
+        // heads in flight together.
+        let ctx_heads = exec.run_layer(
+            "attn_v",
+            scores
+                .iter()
+                .enumerate()
+                .map(|(h, s)| AttnGemm::Dynamic {
+                    lhs: self.softmax.apply(s),
+                    rhs: col_block(&v, h * dh, dh),
+                    prec: self.av_prec,
+                })
+                .collect(),
+        )?;
+        let ctx = self.t_ctx.apply_matrix(&concat_cols(&ctx_heads));
+        // Output projection.
+        let o_acc = one(exec.run_layer(
+            "out",
+            vec![AttnGemm::Weight {
+                weight: "wo",
+                lhs: ctx,
+                prec: self.out_prec,
+            }],
+        )?)?;
+        let h0 = self.t_out.apply_matrix(&o_acc);
+        // Two-layer FFN; the final GEMM's raw accumulators are the
+        // block output (logit domain — requantization would belong to
+        // the next block).
+        let h1_acc = one(exec.run_layer(
+            "ffn1",
+            vec![AttnGemm::Weight {
+                weight: "w1",
+                lhs: h0,
+                prec: self.ffn1_prec,
+            }],
+        )?)?;
+        let h1 = self.t_ffn.apply_matrix(&h1_acc);
+        one(exec.run_layer(
+            "ffn2",
+            vec![AttnGemm::Weight {
+                weight: "w2",
+                lhs: h1,
+                prec: self.ffn2_prec,
+            }],
+        )?)
+    }
+
+    /// Pure-i64 reference forward pass: every GEMM is
+    /// [`IntMatrix::matmul`], everything else is the shared
+    /// [`QnnAttn::forward_with`] code. The oracle both backends and
+    /// every policy run are gated against.
+    pub fn forward_reference(&self, x: &IntMatrix) -> Result<IntMatrix, BismoError> {
+        struct RefExec<'m>(&'m QnnAttn);
+        impl GemmExec for RefExec<'_> {
+            fn run_layer(
+                &mut self,
+                _layer: &'static str,
+                jobs: Vec<AttnGemm>,
+            ) -> Result<Vec<IntMatrix>, BismoError> {
+                Ok(jobs
+                    .into_iter()
+                    .map(|j| match j {
+                        AttnGemm::Weight { weight, lhs, .. } => lhs.matmul(self.0.weight(weight)),
+                        AttnGemm::Dynamic { lhs, rhs, .. } => lhs.matmul(&rhs),
+                    })
+                    .collect())
+            }
+        }
+        self.forward_with(x, &mut RefExec(self))
+    }
+
+    /// GEMMs one forward pass performs: `6 + 2 · heads`.
+    pub fn gemms_per_pass(&self) -> usize {
+        6 + 2 * self.spec.heads
+    }
+
+    /// Shape table of the block's GEMM layers at sequence length
+    /// `seq` (the bench's per-layer identity record).
+    pub fn layer_shapes(&self, seq: usize) -> Vec<AttnLayerShape> {
+        let d = self.spec.d_model;
+        let dh = self.spec.d_head();
+        vec![
+            AttnLayerShape::new("qkv", 3, seq, d, d, self.proj_prec),
+            AttnLayerShape::new("scores", self.spec.heads, seq, dh, seq, self.score_prec),
+            AttnLayerShape::new("attn_v", self.spec.heads, seq, seq, dh, self.av_prec),
+            AttnLayerShape::new("out", 1, seq, d, d, self.out_prec),
+            AttnLayerShape::new("ffn1", 1, seq, d, self.spec.d_ff, self.ffn1_prec),
+            AttnLayerShape::new("ffn2", 1, seq, self.spec.d_ff, d, self.ffn2_prec),
+        ]
+    }
+}
+
+/// One row of [`QnnAttn::layer_shapes`].
+#[derive(Clone, Copy, Debug)]
+pub struct AttnLayerShape {
+    pub name: &'static str,
+    /// Independent GEMMs this layer submits per pass.
+    pub gemms: usize,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Declared LHS (activation) width.
+    pub activation_bits: u32,
+    /// Declared RHS width (weight width, or the activation width for
+    /// the dynamic scores/attention·V GEMMs).
+    pub weight_bits: u32,
+}
+
+impl AttnLayerShape {
+    fn new(
+        name: &'static str,
+        gemms: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        prec: Precision,
+    ) -> Self {
+        AttnLayerShape {
+            name,
+            gemms,
+            m,
+            k,
+            n,
+            activation_bits: prec.wbits,
+            weight_bits: prec.abits,
+        }
+    }
+}
+
+impl Thresholding {
+    /// Threshold every matrix element (the [`IntMatrix`] counterpart
+    /// of [`Thresholding::apply`]).
+    pub fn apply_matrix(&self, m: &IntMatrix) -> IntMatrix {
+        IntMatrix::from_fn(m.rows, m.cols, |r, c| self.value(m.get(r, c)))
+    }
+}
+
+/// Columns `[lo, lo + width)` of `m` — one head's slice.
+fn col_block(m: &IntMatrix, lo: usize, width: usize) -> IntMatrix {
+    IntMatrix::from_fn(m.rows, width, |r, c| m.get(r, lo + c))
+}
+
+/// Horizontal concatenation — reassembling the per-head contexts.
+fn concat_cols(parts: &[IntMatrix]) -> IntMatrix {
+    let rows = parts.first().map_or(0, |p| p.rows);
+    let cols: usize = parts.iter().map(|p| p.cols).sum();
+    let mut out = IntMatrix::zeros(rows, cols);
+    let mut at = 0;
+    for p in parts {
+        for r in 0..p.rows {
+            for c in 0..p.cols {
+                out.set(r, at + c, p.get(r, c));
+            }
+        }
+        at += p.cols;
+    }
+    out
+}
+
+/// Exactly-one-result helper for single-GEMM layers.
+fn one(mut v: Vec<IntMatrix>) -> Result<IntMatrix, BismoError> {
+    match v.pop() {
+        Some(m) if v.is_empty() => Ok(m),
+        _ => Err(BismoError::ShapeMismatch(
+            "single-GEMM layer must yield exactly 1 result".into(),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> AttnSpec {
+        AttnSpec {
+            d_model: 8,
+            heads: 2,
+            d_ff: 12,
+            max_seq: 6,
+        }
+    }
+
+    #[test]
+    fn spec_validation_is_typed() {
+        assert!(spec().validate().is_ok());
+        let r = AttnSpec { heads: 0, ..spec() }.validate();
+        assert!(matches!(r, Err(BismoError::InvalidConfig(_))), "{r:?}");
+        let r = AttnSpec { heads: 3, ..spec() }.validate();
+        assert!(matches!(r, Err(BismoError::InvalidConfig(_))), "{r:?}");
+    }
+
+    #[test]
+    fn softmax_staircase_is_monotone_bounded_and_saturating() {
+        let sm = SoftmaxStaircase::for_bounds(3, 1000);
+        assert_eq!(sm.levels, 7);
+        // The reach covers a meaningful part of the spread without
+        // overshooting: levels << (shift+1) > max_spread >= levels << shift.
+        assert!(7i64 << (sm.shift + 1) > 1000);
+        // Row maximum always gets full weight; weights never exceed
+        // levels, never go negative, and are monotone in the score.
+        let scores = IntMatrix::from_slice(2, 4, &[100, 40, 99, -900, 5, 5, 5, 5]);
+        let w = sm.apply(&scores);
+        assert_eq!(w.get(0, 0), 7, "rowmax saturates");
+        assert_eq!(w.get(1, 0), 7, "uniform row is all-max");
+        for r in 0..2 {
+            for c in 0..4 {
+                assert!((0..=7).contains(&w.get(r, c)), "weight in range");
+            }
+        }
+        assert!(w.get(0, 2) >= w.get(0, 1), "monotone in score");
+        assert_eq!(w.get(0, 3), 0, "distant score fades to zero");
+    }
+
+    #[test]
+    fn reference_forward_is_deterministic_and_shaped() {
+        let model = QnnAttn::random(7, spec(), 3, AttnWeightBits::default());
+        model.validate().unwrap();
+        let mut rng = Rng::new(11);
+        let x = model.random_input(&mut rng, 5, 3);
+        let y1 = model.forward_reference(&x).unwrap();
+        let y2 = model.forward_reference(&x).unwrap();
+        assert_eq!(y1, y2);
+        assert_eq!((y1.rows, y1.cols), (5, 8), "seq × d_model logits");
+        // Activations inside the block stay in the unsigned abits
+        // domain; the output is raw accumulators and may be signed.
+        assert!(y1.value_range().0 < 0 || y1.value_range().1 > 0, "non-trivial output");
+    }
+
+    #[test]
+    fn forward_counts_gemms_and_layers() {
+        struct Counting {
+            model: QnnAttn,
+            layers: Vec<(&'static str, usize)>,
+        }
+        impl GemmExec for Counting {
+            fn run_layer(
+                &mut self,
+                layer: &'static str,
+                jobs: Vec<AttnGemm>,
+            ) -> Result<Vec<IntMatrix>, BismoError> {
+                self.layers.push((layer, jobs.len()));
+                Ok(jobs
+                    .into_iter()
+                    .map(|j| match j {
+                        AttnGemm::Weight { weight, lhs, .. } => {
+                            lhs.matmul(self.model.weight(weight))
+                        }
+                        AttnGemm::Dynamic { lhs, rhs, .. } => lhs.matmul(&rhs),
+                    })
+                    .collect())
+            }
+        }
+        let model = QnnAttn::random(3, spec(), 2, AttnWeightBits::default());
+        let mut rng = Rng::new(4);
+        let x = model.random_input(&mut rng, 4, 2);
+        let mut exec = Counting {
+            model: model.clone(),
+            layers: Vec::new(),
+        };
+        model.forward_with(&x, &mut exec).unwrap();
+        assert_eq!(
+            exec.layers,
+            vec![
+                ("qkv", 3),
+                ("scores", 2),
+                ("attn_v", 2),
+                ("out", 1),
+                ("ffn1", 1),
+                ("ffn2", 1)
+            ]
+        );
+        assert_eq!(
+            exec.layers.iter().map(|(_, n)| n).sum::<usize>(),
+            model.gemms_per_pass()
+        );
+    }
+
+    #[test]
+    fn input_checks_are_typed() {
+        let model = QnnAttn::random(9, spec(), 3, AttnWeightBits::default());
+        // Wrong width.
+        let r = model.forward_reference(&IntMatrix::zeros(2, 7));
+        assert!(matches!(r, Err(BismoError::ShapeMismatch(_))), "{r:?}");
+        // Sequence over the calibration bound.
+        let r = model.forward_reference(&IntMatrix::zeros(7, 8));
+        assert!(matches!(r, Err(BismoError::ShapeMismatch(_))), "{r:?}");
+        // Entries outside the activation precision.
+        let hot = IntMatrix::from_fn(2, 8, |_, _| 9);
+        let r = model.forward_reference(&hot);
+        assert!(matches!(r, Err(BismoError::PrecisionUnsupported(_))), "{r:?}");
+    }
+
+    #[test]
+    fn staircases_keep_activations_in_range() {
+        let model = QnnAttn::random(21, spec(), 3, AttnWeightBits::default());
+        let mut rng = Rng::new(5);
+        // Full-range input: every intermediate staircase output must
+        // fit unsigned abits (checked indirectly — forward_reference
+        // would feed out-of-range values into matmuls whose declared
+        // precisions the serving path enforces; here we check the
+        // staircase outputs directly).
+        let x = model.random_input(&mut rng, 6, 3);
+        let acc = x.matmul(&model.wq);
+        let q = model.t_qkv.apply_matrix(&acc);
+        assert!(q.fits(3, false), "staircase output fits abits");
+        let (lo, hi) = q.value_range();
+        assert!(lo >= 0 && hi <= 7);
+    }
+
+    #[test]
+    fn layer_shapes_cover_every_gemm() {
+        let model = QnnAttn::random(2, spec(), 3, AttnWeightBits::default());
+        let shapes = model.layer_shapes(5);
+        assert_eq!(shapes.len(), 6);
+        assert_eq!(
+            shapes.iter().map(|l| l.gemms).sum::<usize>(),
+            model.gemms_per_pass()
+        );
+        let scores = shapes.iter().find(|l| l.name == "scores").unwrap();
+        assert_eq!((scores.m, scores.k, scores.n), (5, 4, 5));
+        assert_eq!(scores.gemms, 2);
+    }
+}

@@ -19,15 +19,31 @@
 //!   stack via [`crate::lowering`], [`MaxPool2d`], [`Thresholding`])
 //!   and the [`QnnCnn`] conv–pool–conv–pool–dense classifier served
 //!   end to end with per-layer precision.
+//! * [`attn`] — a quantized transformer encoder block ([`QnnAttn`]):
+//!   per-head attention + FFN as a DAG of integer GEMMs with a
+//!   distinct [`crate::coordinator::Precision`] per matrix, integer
+//!   softmax by fixed-point staircase, served via
+//!   [`crate::api::Session::attn`].
+//! * [`policy`] — input-adaptive precision: [`PrecisionPolicy`]
+//!   implementations that inspect per-request [`ActivationStats`] and
+//!   pick the activation bit width each layer actually needs (fewer
+//!   bit planes → proportionally less bit-serial work).
 
+pub mod attn;
 pub mod cnn;
 pub mod dataset;
 pub mod infer;
 pub mod mlp;
+pub mod policy;
 pub mod quantize;
 
+pub use attn::{AttnSpec, AttnWeightBits, QnnAttn, SoftmaxStaircase};
 pub use cnn::{CnnSession, Conv2d, MaxPool2d, QnnCnn, Thresholding};
 pub use dataset::SyntheticDigits;
 pub use infer::QnnMlp;
 pub use mlp::FloatMlp;
+pub use policy::{
+    ActivationStats, ClampPolicy, EntropyAdaptivePolicy, PolicyDecision, PrecisionPolicy,
+    RangeAdaptivePolicy, StaticPolicy,
+};
 pub use quantize::{quantize_activations, quantize_weights_symmetric};

@@ -1,0 +1,463 @@
+//! Input-adaptive precision policies: pick the *activation* bit width
+//! per layer, per request, from the statistics of the activations
+//! actually flowing through the network.
+//!
+//! The paper motivates bit-serial hardware with the observation that
+//! "precision requirements may vary between different application
+//! phases or depend on input data". The serving stack already supports
+//! the mechanism — every prepared operator takes a per-execute
+//! [`crate::coordinator::Precision`] override, and bit-serial work
+//! scales with `wbits · abits` — this module supplies the *decision*:
+//! a [`PrecisionPolicy`] inspects the [`ActivationStats`] of each
+//! layer's input (range, entropy, sparsity) and chooses how many
+//! bit-planes the activation side actually needs.
+//!
+//! Two regimes, deliberately separated:
+//!
+//! * **Exactness-preserving** ([`RangeAdaptivePolicy`]): never chooses
+//!   fewer bits than the observed values need, so the GEMM results are
+//!   bit-identical to the full-precision run — only the plane count
+//!   (and therefore the work) drops. Falls back to the declared width
+//!   whenever the statistics are degenerate (empty, negative, or
+//!   over-range inputs).
+//! * **Lossy** ([`ClampPolicy`], [`EntropyAdaptivePolicy`]): may
+//!   saturate outliers to reach a narrower width. The accuracy cost is
+//!   what `bismo attn-bench` measures as the accuracy proxy.
+//!
+//! Weight-side widths are never touched: weights are packed and cached
+//! at their declared precision, and repacking them per request would
+//! defeat the weight-stationary cache.
+//!
+//! Every choice is recorded as a [`PolicyDecision`] and surfaced in
+//! the response, so a serving operator can audit exactly which width
+//! served which layer of which request.
+
+use crate::bitmatrix::IntMatrix;
+use crate::util::ceil_log2;
+use std::collections::BTreeMap;
+
+/// Statistics of one layer's activation operand(s), the input to a
+/// [`PrecisionPolicy`].
+#[derive(Clone, Debug)]
+pub struct ActivationStats {
+    /// Total elements inspected.
+    pub elements: usize,
+    /// Smallest value observed.
+    pub min: i64,
+    /// Largest value observed.
+    pub max: i64,
+    /// Unsigned bits needed to represent every observed value exactly
+    /// (`>= 1`; meaningful only when `min >= 0`).
+    pub bits_needed: u32,
+    /// Shannon entropy of the value distribution, in bits. Bounded by
+    /// `bits_needed` for non-negative integer data, so it measures how
+    /// much of the representable range the distribution actually uses.
+    pub entropy_bits: f64,
+    /// Fraction of non-zero elements (bit-serial work also scales with
+    /// operand density when bit-skipping is on).
+    pub nonzero_frac: f64,
+}
+
+impl ActivationStats {
+    /// Statistics over one matrix.
+    pub fn of(m: &IntMatrix) -> ActivationStats {
+        ActivationStats::of_many(&[m])
+    }
+
+    /// Pooled statistics over several matrices — one layer's
+    /// independent GEMM operands (e.g. the per-head score matrices)
+    /// are decided together, so they pool.
+    pub fn of_many(ms: &[&IntMatrix]) -> ActivationStats {
+        let mut hist: BTreeMap<i64, usize> = BTreeMap::new();
+        let (mut min, mut max) = (i64::MAX, i64::MIN);
+        let mut elements = 0usize;
+        let mut nonzero = 0usize;
+        for m in ms {
+            for &v in m.data() {
+                elements += 1;
+                min = min.min(v);
+                max = max.max(v);
+                nonzero += (v != 0) as usize;
+                *hist.entry(v).or_insert(0) += 1;
+            }
+        }
+        if elements == 0 {
+            return ActivationStats {
+                elements: 0,
+                min: 0,
+                max: 0,
+                bits_needed: 1,
+                entropy_bits: 0.0,
+                nonzero_frac: 0.0,
+            };
+        }
+        let n = elements as f64;
+        let entropy_bits = hist
+            .values()
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.log2()
+            })
+            .sum::<f64>();
+        let bits_needed = if max <= 0 {
+            1
+        } else {
+            ceil_log2(max as u64 + 1).max(1)
+        };
+        ActivationStats {
+            elements,
+            min,
+            max,
+            bits_needed,
+            entropy_bits,
+            nonzero_frac: nonzero as f64 / n,
+        }
+    }
+
+    /// Degenerate statistics a conservative policy must not act on:
+    /// nothing observed, negative values (these layers are unsigned
+    /// activation domains), or values that do not even fit the
+    /// declared width (the service will reject them range-checked —
+    /// the policy must not mask that by clipping).
+    pub fn degenerate_for(&self, base_bits: u32) -> bool {
+        self.elements == 0 || self.min < 0 || self.bits_needed > base_bits
+    }
+}
+
+/// One audited width choice: which layer and operand side, what the
+/// declared width was, what was chosen, and why.
+#[derive(Clone, Debug)]
+pub struct PolicyDecision {
+    /// Layer name (e.g. `"qkv"`, `"scores"`, `"ffn1"`).
+    pub layer: &'static str,
+    /// Operand side the choice applies to (`"lhs"` or `"rhs"`).
+    pub side: &'static str,
+    /// The declared (static) activation width.
+    pub base_bits: u32,
+    /// The width this request's layer actually ran at.
+    pub chosen_bits: u32,
+    /// Whether values must be saturated to fit `chosen_bits` (lossy
+    /// policies only; exactness-preserving policies never set this).
+    pub clip: bool,
+    /// Largest activation observed when deciding.
+    pub observed_max: i64,
+    /// Entropy of the activation distribution, bits.
+    pub entropy_bits: f64,
+    /// Human-readable rationale (`"static"`, `"range"`, `"clamp"`,
+    /// `"entropy"`, `"fallback: …"`).
+    pub reason: String,
+}
+
+impl PolicyDecision {
+    fn keep(
+        layer: &'static str,
+        side: &'static str,
+        base_bits: u32,
+        stats: &ActivationStats,
+        reason: String,
+    ) -> PolicyDecision {
+        PolicyDecision {
+            layer,
+            side,
+            base_bits,
+            chosen_bits: base_bits,
+            clip: false,
+            observed_max: stats.max,
+            entropy_bits: stats.entropy_bits,
+            reason,
+        }
+    }
+}
+
+/// A per-request, per-layer activation-width chooser. Implementations
+/// must be deterministic in their inputs: the same statistics must
+/// yield the same decision, so replayed requests reproduce.
+pub trait PrecisionPolicy {
+    /// Stable policy name (decision logs, bench JSON).
+    fn name(&self) -> &'static str;
+
+    /// Choose the width for one layer's operand side. `base_bits` is
+    /// the declared static width; implementations return it unchanged
+    /// to opt out.
+    fn decide(
+        &self,
+        layer: &'static str,
+        side: &'static str,
+        base_bits: u32,
+        stats: &ActivationStats,
+    ) -> PolicyDecision;
+}
+
+/// The do-nothing policy: every layer runs at its declared width.
+/// This is also the conservative fallback the adaptive policies
+/// degrade to on degenerate statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StaticPolicy;
+
+impl PrecisionPolicy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn decide(
+        &self,
+        layer: &'static str,
+        side: &'static str,
+        base_bits: u32,
+        stats: &ActivationStats,
+    ) -> PolicyDecision {
+        PolicyDecision::keep(layer, side, base_bits, stats, "static".into())
+    }
+}
+
+/// Exactness-preserving adaptive policy: run each layer at exactly the
+/// bits its observed activation range needs (floored at `min_bits`,
+/// capped at the declared width). Because the chosen width always
+/// holds every observed value, the GEMM result is bit-identical to the
+/// full-width run — the policy changes the *work*, never the answer.
+#[derive(Clone, Copy, Debug)]
+pub struct RangeAdaptivePolicy {
+    /// Never go below this many bits (1 is the natural floor).
+    pub min_bits: u32,
+}
+
+impl Default for RangeAdaptivePolicy {
+    fn default() -> Self {
+        RangeAdaptivePolicy { min_bits: 1 }
+    }
+}
+
+impl PrecisionPolicy for RangeAdaptivePolicy {
+    fn name(&self) -> &'static str {
+        "adaptive-range"
+    }
+
+    fn decide(
+        &self,
+        layer: &'static str,
+        side: &'static str,
+        base_bits: u32,
+        stats: &ActivationStats,
+    ) -> PolicyDecision {
+        if stats.degenerate_for(base_bits) {
+            return PolicyDecision::keep(
+                layer,
+                side,
+                base_bits,
+                stats,
+                format!(
+                    "fallback: degenerate stats (elements={}, min={}, max={})",
+                    stats.elements, stats.min, stats.max
+                ),
+            );
+        }
+        let chosen = stats.bits_needed.max(self.min_bits).min(base_bits);
+        PolicyDecision {
+            layer,
+            side,
+            base_bits,
+            chosen_bits: chosen,
+            clip: false,
+            observed_max: stats.max,
+            entropy_bits: stats.entropy_bits,
+            reason: "range".into(),
+        }
+    }
+}
+
+/// Lossy static clamp: every layer runs at `bits` (capped at the
+/// declared width), saturating whatever does not fit. This is the
+/// "static low precision" arm of the bench — the thing an adaptive
+/// policy has to beat on accuracy at comparable throughput.
+#[derive(Clone, Copy, Debug)]
+pub struct ClampPolicy {
+    /// Target width.
+    pub bits: u32,
+}
+
+impl PrecisionPolicy for ClampPolicy {
+    fn name(&self) -> &'static str {
+        "static-clamp"
+    }
+
+    fn decide(
+        &self,
+        layer: &'static str,
+        side: &'static str,
+        base_bits: u32,
+        stats: &ActivationStats,
+    ) -> PolicyDecision {
+        let chosen = self.bits.max(1).min(base_bits);
+        PolicyDecision {
+            layer,
+            side,
+            base_bits,
+            chosen_bits: chosen,
+            clip: chosen < stats.bits_needed || stats.min < 0,
+            observed_max: stats.max,
+            entropy_bits: stats.entropy_bits,
+            reason: "clamp".into(),
+        }
+    }
+}
+
+/// Entropy-driven lossy policy: size the width to the *information* in
+/// the distribution rather than its range, saturating rare outliers.
+/// `ceil(entropy) + headroom` bits hold the bulk of a concentrated
+/// distribution; a heavy tail costs accuracy, which the bench's proxy
+/// makes visible. Falls back to the declared width on degenerate
+/// statistics, like the range policy.
+#[derive(Clone, Copy, Debug)]
+pub struct EntropyAdaptivePolicy {
+    /// Never go below this many bits.
+    pub min_bits: u32,
+    /// Extra bits on top of the measured entropy.
+    pub headroom_bits: u32,
+}
+
+impl Default for EntropyAdaptivePolicy {
+    fn default() -> Self {
+        EntropyAdaptivePolicy {
+            min_bits: 1,
+            headroom_bits: 1,
+        }
+    }
+}
+
+impl PrecisionPolicy for EntropyAdaptivePolicy {
+    fn name(&self) -> &'static str {
+        "adaptive-entropy"
+    }
+
+    fn decide(
+        &self,
+        layer: &'static str,
+        side: &'static str,
+        base_bits: u32,
+        stats: &ActivationStats,
+    ) -> PolicyDecision {
+        if stats.degenerate_for(base_bits) {
+            return PolicyDecision::keep(
+                layer,
+                side,
+                base_bits,
+                stats,
+                format!(
+                    "fallback: degenerate stats (elements={}, min={}, max={})",
+                    stats.elements, stats.min, stats.max
+                ),
+            );
+        }
+        let info = stats.entropy_bits.ceil() as u32 + self.headroom_bits;
+        let chosen = info.max(self.min_bits).min(base_bits);
+        PolicyDecision {
+            layer,
+            side,
+            base_bits,
+            chosen_bits: chosen,
+            clip: chosen < stats.bits_needed,
+            observed_max: stats.max,
+            entropy_bits: stats.entropy_bits,
+            reason: "entropy".into(),
+        }
+    }
+}
+
+/// Saturate every entry of `m` into unsigned `bits` range — how the
+/// serving path applies a lossy decision before packing (the packer
+/// itself range-checks and refuses, by design; clipping is an explicit
+/// policy choice, never an implicit truncation).
+pub fn clip_unsigned(m: &IntMatrix, bits: u32) -> IntMatrix {
+    let hi = (1i64 << bits) - 1;
+    IntMatrix::from_fn(m.rows, m.cols, |r, c| m.get(r, c).clamp(0, hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_measure_range_entropy_and_density() {
+        let m = IntMatrix::from_slice(2, 4, &[0, 1, 1, 0, 3, 1, 0, 1]);
+        let s = ActivationStats::of(&m);
+        assert_eq!(s.elements, 8);
+        assert_eq!((s.min, s.max), (0, 3));
+        assert_eq!(s.bits_needed, 2);
+        assert_eq!(s.nonzero_frac, 5.0 / 8.0);
+        // Three distinct values → entropy strictly between 0 and 2,
+        // and never above bits_needed.
+        assert!(s.entropy_bits > 0.0 && s.entropy_bits <= s.bits_needed as f64);
+        // Pooling two copies changes nothing distributional.
+        let pooled = ActivationStats::of_many(&[&m, &m]);
+        assert_eq!(pooled.elements, 16);
+        assert_eq!(pooled.bits_needed, 2);
+        assert!((pooled.entropy_bits - s.entropy_bits).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_edge_cases() {
+        let zero = ActivationStats::of(&IntMatrix::zeros(2, 2));
+        assert_eq!(zero.bits_needed, 1);
+        assert_eq!(zero.entropy_bits, 0.0);
+        assert_eq!(zero.nonzero_frac, 0.0);
+        let empty = ActivationStats::of(&IntMatrix::zeros(0, 4));
+        assert_eq!(empty.elements, 0);
+        assert!(empty.degenerate_for(8));
+        let neg = ActivationStats::of(&IntMatrix::from_slice(1, 2, &[-1, 2]));
+        assert!(neg.degenerate_for(8));
+    }
+
+    #[test]
+    fn range_policy_is_exactness_preserving() {
+        let p = RangeAdaptivePolicy::default();
+        // 2-bit data under an 8-bit declaration → 2 bits, no clip.
+        let narrow = ActivationStats::of(&IntMatrix::from_slice(1, 3, &[0, 1, 3]));
+        let d = p.decide("qkv", "lhs", 8, &narrow);
+        assert_eq!(d.chosen_bits, 2);
+        assert!(!d.clip);
+        assert_eq!(d.reason, "range");
+        // Full-range data → the declared width, still exact.
+        let wide = ActivationStats::of(&IntMatrix::from_slice(1, 2, &[0, 255]));
+        let d = p.decide("qkv", "lhs", 8, &wide);
+        assert_eq!(d.chosen_bits, 8);
+        assert!(!d.clip);
+        // Over-range / negative data → conservative fallback to base.
+        let over = ActivationStats::of(&IntMatrix::from_slice(1, 2, &[0, 300]));
+        let d = p.decide("qkv", "lhs", 8, &over);
+        assert_eq!(d.chosen_bits, 8);
+        assert!(!d.clip);
+        assert!(d.reason.starts_with("fallback"));
+    }
+
+    #[test]
+    fn lossy_policies_flag_the_clip() {
+        let stats = ActivationStats::of(&IntMatrix::from_slice(1, 4, &[0, 1, 2, 7]));
+        let d = ClampPolicy { bits: 2 }.decide("ffn1", "lhs", 3, &stats);
+        assert_eq!(d.chosen_bits, 2);
+        assert!(d.clip, "7 does not fit 2 bits");
+        // A clamp that happens to hold the data is not a clip.
+        let d = ClampPolicy { bits: 3 }.decide("ffn1", "lhs", 3, &stats);
+        assert_eq!(d.chosen_bits, 3);
+        assert!(!d.clip);
+        // Entropy policy on a concentrated distribution with one
+        // outlier narrows below bits_needed and flags the clip.
+        let spiky: Vec<i64> = std::iter::repeat_n(1, 63).chain([255]).collect();
+        let s = ActivationStats::of(&IntMatrix::from_slice(8, 8, &spiky));
+        let d = EntropyAdaptivePolicy::default().decide("scores", "lhs", 8, &s);
+        assert!(d.chosen_bits < s.bits_needed, "{d:?}");
+        assert!(d.clip);
+    }
+
+    #[test]
+    fn clip_unsigned_saturates() {
+        let m = IntMatrix::from_slice(1, 4, &[-2, 0, 3, 9]);
+        assert_eq!(clip_unsigned(&m, 2), IntMatrix::from_slice(1, 4, &[0, 0, 3, 3]));
+    }
+
+    #[test]
+    fn static_policy_never_deviates() {
+        let s = ActivationStats::of(&IntMatrix::from_slice(1, 2, &[0, 1]));
+        let d = StaticPolicy.decide("out", "lhs", 6, &s);
+        assert_eq!((d.base_bits, d.chosen_bits, d.clip), (6, 6, false));
+    }
+}

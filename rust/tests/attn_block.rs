@@ -1,0 +1,187 @@
+//! End-to-end tests for the served quantized attention block: the
+//! [`Session::attn`] path must be bit-exact against the pure-i64
+//! reference forward pass on *both* backends at every per-matrix
+//! precision combination, stay bit-exact under the exactness-preserving
+//! adaptive policy, flag (and bound) the damage of a lossy one, reuse
+//! the weight-stationary cache across executes, and fail typed.
+
+use bismo::api::{Backend, BismoError, Session};
+use bismo::bitmatrix::IntMatrix;
+use bismo::qnn::policy::clip_unsigned;
+use bismo::qnn::{AttnSpec, AttnWeightBits, ClampPolicy, QnnAttn, RangeAdaptivePolicy};
+use bismo::util::Rng;
+
+const SPEC: AttnSpec = AttnSpec {
+    d_model: 8,
+    heads: 2,
+    d_ff: 12,
+    max_seq: 6,
+};
+
+fn session() -> Session {
+    Session::with_defaults().unwrap()
+}
+
+#[test]
+fn block_is_bit_exact_on_both_backends_across_precisions() {
+    let s = session();
+    let mut rng = Rng::new(0xA77);
+    let flat = |b| AttnWeightBits {
+        proj: b,
+        out: b,
+        ffn1: b,
+        ffn2: b,
+    };
+    let combos: [(u32, AttnWeightBits); 4] = [
+        (2, flat(2)),
+        (3, AttnWeightBits::default()),
+        (1, flat(1)),
+        (
+            3,
+            AttnWeightBits {
+                proj: 1,
+                out: 2,
+                ffn1: 1,
+                ffn2: 2,
+            },
+        ),
+    ];
+    for (i, (abits, wbits)) in combos.into_iter().enumerate() {
+        let model = QnnAttn::random(0x5EED + i as u64, SPEC, abits, wbits);
+        // A full-length input and the seq=1 edge case.
+        for seq in [SPEC.max_seq, 1] {
+            let x = model.random_input(&mut rng, seq, abits);
+            let want = model.forward_reference(&x).unwrap();
+            for backend in [Backend::Engine, Backend::Sim] {
+                let prepared = s.attn(&model).backend(backend).prepare().unwrap();
+                let resp = prepared.execute(&x).unwrap();
+                assert_eq!(
+                    resp.output,
+                    want,
+                    "combo {i} (abits={abits}), seq {seq}, {}",
+                    backend.name()
+                );
+                assert_eq!(resp.gemms.len(), model.gemms_per_pass());
+                assert!(resp.decisions.is_empty(), "static path consults no policy");
+                assert_eq!(
+                    resp.sim_cycles().is_some(),
+                    backend == Backend::Sim,
+                    "cycles come from the simulator only"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn range_adaptive_policy_is_bit_exact_at_less_bitplane_work() {
+    let s = session();
+    let mut rng = Rng::new(0xA78);
+    let model = QnnAttn::random(7, SPEC, 3, AttnWeightBits::default());
+    let prepared = s.attn(&model).prepare().unwrap();
+    // Calibrated for 3-bit activations, fed a request that only uses 1
+    // bit: the range policy shrinks widths to what the operands hold.
+    let x = model.random_input(&mut rng, 4, 1);
+    let static_resp = prepared.execute(&x).unwrap();
+    let adaptive = prepared
+        .execute_with_policy(&x, &RangeAdaptivePolicy::default())
+        .unwrap();
+    assert_eq!(adaptive.output, static_resp.output, "exactness-preserving");
+    assert_eq!(adaptive.gemms.len(), model.gemms_per_pass());
+    assert!(!adaptive.decisions.is_empty(), "decisions are logged");
+    assert!(
+        adaptive.decisions.iter().all(|d| !d.clip),
+        "the range policy never clips"
+    );
+    assert!(
+        adaptive
+            .decisions
+            .iter()
+            .any(|d| d.chosen_bits < d.base_bits),
+        "a 1-bit request must shed declared bit planes somewhere"
+    );
+    assert!(
+        adaptive.mean_lhs_bits() < static_resp.mean_lhs_bits(),
+        "adaptive {} !< static {}",
+        adaptive.mean_lhs_bits(),
+        static_resp.mean_lhs_bits()
+    );
+    // Decisions name real layers and sides.
+    for d in &adaptive.decisions {
+        assert!(
+            matches!(d.layer, "qkv" | "scores" | "attn_v" | "out" | "ffn1" | "ffn2"),
+            "{}",
+            d.layer
+        );
+        assert!(matches!(d.side, "lhs" | "rhs"), "{}", d.side);
+    }
+}
+
+#[test]
+fn clamp_policy_flags_clipping_and_computes_the_clipped_product() {
+    let s = session();
+    let model = QnnAttn::random(11, SPEC, 3, AttnWeightBits::default());
+    let prepared = s.attn(&model).prepare().unwrap();
+    // Saturated 3-bit input, clamped to 1 bit: lossy by construction.
+    let x = IntMatrix::from_fn(4, SPEC.d_model, |_, _| 7);
+    let resp = prepared.execute_with_policy(&x, &ClampPolicy { bits: 1 }).unwrap();
+    assert!(
+        resp.decisions.iter().any(|d| d.clip && d.chosen_bits == 1),
+        "clipping is flagged per decision"
+    );
+    // The first projection GEMM served exactly the *clipped* operand —
+    // the clip is an explicit policy action, not silent truncation...
+    let q = &resp.gemms[0];
+    assert_eq!(q.layer, "qkv");
+    assert_eq!(q.prec.wbits, 1);
+    assert_eq!(q.resp.result, clip_unsigned(&x, 1).matmul(model.weight("wq")));
+    // ...and it genuinely diverges from the unclipped product.
+    assert_ne!(q.resp.result, x.matmul(model.weight("wq")));
+}
+
+#[test]
+fn prepared_weights_are_served_from_the_cache() {
+    let s = session();
+    let mut rng = Rng::new(0xA79);
+    let model = QnnAttn::random(13, SPEC, 2, AttnWeightBits::default());
+    let prepared = s.attn(&model).prepare().unwrap();
+    let hits0 = s.cache_stats().hits;
+    let x1 = model.random_input(&mut rng, 3, 2);
+    let r1 = prepared.execute(&x1).unwrap();
+    assert!(r1.weights_cached(), "prepare() packed every weight matrix");
+    let x2 = model.random_input(&mut rng, 5, 2);
+    let r2 = prepared.execute(&x2).unwrap();
+    assert!(r2.weights_cached());
+    assert!(
+        s.cache_stats().hits > hits0,
+        "weight-stationary serving hits the packing cache"
+    );
+}
+
+#[test]
+fn input_and_config_errors_are_typed() {
+    let s = session();
+    let model = QnnAttn::random(17, SPEC, 3, AttnWeightBits::default());
+    let prepared = s.attn(&model).prepare().unwrap();
+    // Wrong width.
+    let e = prepared.execute(&IntMatrix::zeros(2, SPEC.d_model + 1)).err();
+    assert!(matches!(e, Some(BismoError::ShapeMismatch(_))), "{e:?}");
+    // Too many tokens.
+    let e = prepared
+        .execute(&IntMatrix::zeros(SPEC.max_seq + 1, SPEC.d_model))
+        .err();
+    assert!(matches!(e, Some(BismoError::ShapeMismatch(_))), "{e:?}");
+    // Empty sequence.
+    let e = prepared.execute(&IntMatrix::zeros(0, SPEC.d_model)).err();
+    assert!(matches!(e, Some(BismoError::ShapeMismatch(_))), "{e:?}");
+    // Entries outside the calibrated activation range.
+    let hot = IntMatrix::from_fn(2, SPEC.d_model, |_, _| 9);
+    let e = prepared.execute(&hot).err();
+    assert!(matches!(e, Some(BismoError::PrecisionUnsupported(_))), "{e:?}");
+    // Preparing with weight-side caching disabled is contradictory.
+    let r = s.attn(&model).cache_rhs(false).prepare();
+    assert!(
+        matches!(r.err(), Some(BismoError::InvalidConfig(_))),
+        "cache_rhs(false) + prepare() is rejected"
+    );
+}

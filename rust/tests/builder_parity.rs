@@ -1,0 +1,329 @@
+//! Builder-parity matrix: the matmul, conv and attention builders
+//! expose the *same* [`ExecOpts`] knob surface (stamped on by one
+//! macro), validate it at `build()` with *identical* typed errors
+//! before anything is queued, and share the prepare-once contract —
+//! including the identical rejection of `cache_rhs(false)` + prepare.
+
+use bismo::api::{
+    Backend, BismoError, ConvSpec, ExecOpts, KernelConfig, LoweringMode, OpHandle, Overlap,
+    PreparedOp, Precision, ResourceBudget, Session, Tensor,
+};
+use bismo::bitmatrix::IntMatrix;
+use bismo::lowering::conv2d_direct;
+use bismo::qnn::{AttnSpec, AttnWeightBits, QnnAttn};
+use bismo::util::Rng;
+
+fn session() -> Session {
+    Session::with_defaults().unwrap()
+}
+
+fn conv_spec() -> ConvSpec {
+    ConvSpec::simple(6, 6, 2, 3, 3, 1)
+}
+
+fn conv_prec() -> Precision {
+    Precision {
+        wbits: 2,
+        abits: 3,
+        lsigned: false,
+        rsigned: true,
+    }
+}
+
+fn attn_model() -> QnnAttn {
+    QnnAttn::random(
+        5,
+        AttnSpec {
+            d_model: 8,
+            heads: 2,
+            d_ff: 12,
+            max_seq: 4,
+        },
+        2,
+        AttnWeightBits {
+            proj: 2,
+            out: 2,
+            ffn1: 2,
+            ffn2: 2,
+        },
+    )
+}
+
+fn budget() -> ResourceBudget {
+    ResourceBudget {
+        luts: 100_000,
+        brams: 300,
+    }
+}
+
+fn tile() -> KernelConfig {
+    KernelConfig {
+        tile_m: 4,
+        tile_n: 4,
+        tile_k: 64,
+    }
+}
+
+/// Error message of a failed result — the parity assertions compare
+/// these strings across builders, so "identical typed error" means
+/// identical down to the rendered text.
+fn msg<T>(r: Result<T, BismoError>) -> String {
+    match r {
+        Err(e) => format!("{e}"),
+        Ok(_) => panic!("expected an error"),
+    }
+}
+
+#[test]
+fn every_knob_is_accepted_by_all_three_builders() {
+    let s = session();
+    // The full knob surface on each builder. The sharding knobs
+    // (instances / shard_grid / auto_shard) all set the same option,
+    // so chaining them is legal (last one wins); everything must pass
+    // build-time validation.
+    s.matmul(Precision::unsigned(2, 2))
+        .backend(Backend::Sim)
+        .overlap(Overlap::None)
+        .bit_skip(true)
+        .verify(true)
+        .max_instrs(1_000_000)
+        .cache_lhs(true)
+        .cache_rhs(true)
+        .cache_namespace(3)
+        .instances(2)
+        .shard_grid(2, 2)
+        .auto_shard(budget())
+        .tile(tile())
+        .build()
+        .unwrap();
+    // ConvBuilder historically shipped without max_instrs / overlap /
+    // shard_grid / auto_shard / tile — the parity the shared core
+    // restores.
+    s.conv(conv_spec(), conv_prec())
+        .lowering(LoweringMode::Kn2row)
+        .backend(Backend::Sim)
+        .overlap(Overlap::None)
+        .bit_skip(true)
+        .verify(true)
+        .max_instrs(1_000_000)
+        .cache_lhs(true)
+        .cache_rhs(true)
+        .cache_namespace(3)
+        .instances(2)
+        .shard_grid(2, 2)
+        .auto_shard(budget())
+        .tile(tile())
+        .build()
+        .unwrap();
+    s.attn(&attn_model())
+        .backend(Backend::Sim)
+        .overlap(Overlap::None)
+        .bit_skip(true)
+        .verify(true)
+        .max_instrs(1_000_000)
+        .cache_lhs(true)
+        .cache_rhs(true)
+        .cache_namespace(3)
+        .instances(2)
+        .shard_grid(2, 2)
+        .auto_shard(budget())
+        .tile(tile())
+        .build()
+        .unwrap();
+    // A standalone ExecOpts value validates through the same path.
+    assert!(ExecOpts::new().shard_grid(2, 2).tile(tile()).validate().is_ok());
+}
+
+#[test]
+fn degenerate_knobs_fail_identically_and_queue_nothing() {
+    let s = session();
+    let model = attn_model();
+    let submitted = s.service().submitted();
+
+    // instances(0)
+    let m = msg(s.matmul(Precision::unsigned(2, 2)).instances(0).build());
+    let c = msg(s.conv(conv_spec(), conv_prec()).instances(0).build());
+    let a = msg(s.attn(&model).instances(0).build());
+    assert_eq!(m, c, "matmul vs conv: instances(0)");
+    assert_eq!(m, a, "matmul vs attn: instances(0)");
+    assert!(
+        matches!(
+            s.matmul(Precision::unsigned(2, 2)).instances(0).build(),
+            Err(BismoError::InvalidConfig(_))
+        ),
+        "typed as InvalidConfig"
+    );
+
+    // shard_grid with a zero axis
+    let m = msg(s.matmul(Precision::unsigned(2, 2)).shard_grid(2, 0).build());
+    let c = msg(s.conv(conv_spec(), conv_prec()).shard_grid(2, 0).build());
+    let a = msg(s.attn(&model).shard_grid(2, 0).build());
+    assert_eq!(m, c, "matmul vs conv: shard_grid(2, 0)");
+    assert_eq!(m, a, "matmul vs attn: shard_grid(2, 0)");
+
+    // degenerate pinned tile
+    let zero_tile = KernelConfig {
+        tile_m: 0,
+        tile_n: 1,
+        tile_k: 1,
+    };
+    let m = msg(s.matmul(Precision::unsigned(2, 2)).tile(zero_tile).build());
+    let c = msg(s.conv(conv_spec(), conv_prec()).tile(zero_tile).build());
+    let a = msg(s.attn(&model).tile(zero_tile).build());
+    assert_eq!(m, c, "matmul vs conv: zero tile");
+    assert_eq!(m, a, "matmul vs attn: zero tile");
+    assert!(
+        matches!(
+            s.attn(&model).tile(zero_tile).build(),
+            Err(BismoError::InvalidConfig(_))
+        ),
+        "typed as InvalidConfig"
+    );
+
+    // Degenerate precision is PrecisionUnsupported on every path (the
+    // attention builder validates the model's per-GEMM precisions).
+    let bad = Precision {
+        wbits: 0,
+        abits: 2,
+        lsigned: false,
+        rsigned: false,
+    };
+    assert!(matches!(
+        s.matmul(bad).build(),
+        Err(BismoError::PrecisionUnsupported(_))
+    ));
+    assert!(matches!(
+        s.conv(conv_spec(), bad).build(),
+        Err(BismoError::PrecisionUnsupported(_))
+    ));
+    let mut bad_model = attn_model();
+    bad_model.proj_prec.wbits = 0;
+    assert!(matches!(
+        s.attn(&bad_model).build(),
+        Err(BismoError::PrecisionUnsupported(_))
+    ));
+
+    // build() rejected everything above before queueing: the serving
+    // layer never saw a request. The failing submit/prepare paths are
+    // equally pre-queue.
+    let r = s
+        .matmul(Precision::unsigned(2, 2))
+        .instances(0)
+        .submit(IntMatrix::zeros(2, 2), IntMatrix::zeros(2, 2));
+    assert!(r.is_err());
+    let w = conv_spec().weights_from_fn(|_, _, _, _| 0);
+    let r = s
+        .conv(conv_spec(), conv_prec())
+        .instances(0)
+        .run(&Tensor::zeros(1, 6, 6, 2), w);
+    assert!(r.is_err());
+    let r = s.attn(&model).instances(0).prepare();
+    assert!(r.is_err());
+    assert_eq!(s.service().submitted(), submitted, "nothing was queued");
+}
+
+#[test]
+fn prepare_with_cache_rhs_off_is_rejected_identically() {
+    let s = session();
+    let m = msg(
+        s.matmul(Precision::unsigned(2, 2))
+            .cache_rhs(false)
+            .prepare(IntMatrix::zeros(2, 2)),
+    );
+    let w = conv_spec().weights_from_fn(|_, _, _, _| 0);
+    let c = msg(s.conv(conv_spec(), conv_prec()).cache_rhs(false).prepare(w));
+    let a = msg(s.attn(&attn_model()).cache_rhs(false).prepare());
+    assert_eq!(m, c, "matmul vs conv: prepare without weight caching");
+    assert_eq!(m, a, "matmul vs attn: prepare without weight caching");
+    assert!(m.contains("cache_rhs(false)"), "{m}");
+}
+
+#[test]
+fn conv_honors_the_restored_knobs_end_to_end() {
+    let s = session();
+    let mut rng = Rng::new(0xB17);
+    let spec = conv_spec();
+    let x = Tensor::random(&mut rng, 1, 6, 6, 2, 2, false);
+    let w = spec.weights_from_fn(|_, _, _, _| rng.operand(3, true));
+    let want = conv2d_direct(&x, &w, &spec);
+
+    // A pinned engine tile and an (ample) instruction budget are
+    // accepted and bit-exact.
+    let resp = s
+        .conv(spec, conv_prec())
+        .tile(tile())
+        .max_instrs(50_000_000)
+        .verify(true)
+        .run(&x, w.clone())
+        .unwrap();
+    assert_eq!(resp.output, want);
+
+    // An absurdly small sim budget trips the typed watchdog instead of
+    // hanging a worker.
+    let r = s
+        .conv(spec, conv_prec())
+        .backend(Backend::Sim)
+        .max_instrs(1)
+        .run(&x, w.clone());
+    assert!(matches!(r, Err(BismoError::SimFault(_))), "{r:?}");
+
+    // An explicit shard grid stays exact through the conv path.
+    let resp = s
+        .conv(spec, conv_prec())
+        .shard_grid(2, 1)
+        .verify(true)
+        .run(&x, w)
+        .unwrap();
+    assert_eq!(resp.output, want);
+    assert_eq!(resp.gemms[0].shards, 2);
+}
+
+/// One generic serving loop over any prepared operator: submit one job
+/// asynchronously, run one synchronously, then collect the async
+/// result — exactly the [`PreparedOp`] contract.
+fn roundtrip<P: PreparedOp>(op: &P, x: &P::Input) -> (P::Output, P::Output) {
+    let in_flight = op.submit(x).unwrap();
+    let sync = op.execute(x).unwrap();
+    (in_flight.wait().unwrap(), sync)
+}
+
+#[test]
+fn prepared_op_is_generic_over_matmul_and_conv() {
+    let s = session();
+    let mut rng = Rng::new(0xB18);
+
+    // Prepared matmul through the generic contract.
+    let w = IntMatrix::random(&mut rng, 48, 5, 3, true);
+    let prec = Precision {
+        wbits: 2,
+        abits: 3,
+        lsigned: false,
+        rsigned: true,
+    };
+    let prepared = s.prepare(w.clone(), prec).unwrap();
+    assert_eq!(PreparedOp::precision(&prepared), prec);
+    let x = IntMatrix::random(&mut rng, 3, 48, 2, false);
+    let (async_resp, sync_resp) = roundtrip(&prepared, &x);
+    assert_eq!(async_resp.result, x.matmul(&w));
+    assert_eq!(sync_resp.result, x.matmul(&w));
+
+    // Prepared conv through the *same* generic function.
+    let spec = conv_spec();
+    let cw = spec.weights_from_fn(|_, _, _, _| rng.operand(3, true));
+    let prepared = s.conv(spec, conv_prec()).prepare(cw.clone()).unwrap();
+    let xt = Tensor::random(&mut rng, 1, 6, 6, 2, 2, false);
+    let want = conv2d_direct(&xt, &cw, &spec);
+    let (async_resp, sync_resp) = roundtrip(&prepared, &xt);
+    assert_eq!(async_resp.output, want);
+    assert_eq!(sync_resp.output, want);
+
+    // The per-execute precision override is part of the contract too.
+    let wider = Precision {
+        wbits: 3,
+        abits: 4,
+        lsigned: false,
+        rsigned: true,
+    };
+    let r = PreparedOp::execute_with(&prepared, &xt, wider).unwrap();
+    assert_eq!(r.output, want, "declared headroom changes nothing");
+}

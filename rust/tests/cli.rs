@@ -445,3 +445,125 @@ fn info_reports_the_dispatch_tier_and_override_knob() {
     assert!(ok, "{text}");
     assert!(text.contains("simd tier: scalar"), "{text}");
 }
+
+#[test]
+fn attn_bench_quick_writes_json() {
+    let out = std::env::temp_dir().join(format!("bismo_attn_{}.json", std::process::id()));
+    let out_str = out.to_str().unwrap().to_string();
+    // Minimal seq/requests/reps: this test checks plumbing and schema;
+    // the CI smoke step runs the real quick suite.
+    let (ok, text) = bismo(&[
+        "attn-bench", "--quick", "--seq", "4", "--requests", "3", "--reps", "1",
+        "--out", &out_str,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("tokens/s"), "{text}");
+    let json = std::fs::read_to_string(&out).expect("attn bench json written");
+    let _ = std::fs::remove_file(&out);
+    let doc = bismo::util::Json::parse(&json).expect("valid json");
+    assert_eq!(
+        doc.get("schema").and_then(|s| s.as_str()),
+        Some("bismo-bench-attn/v1")
+    );
+    assert_eq!(doc.get("mode").and_then(|s| s.as_str()), Some("quick"));
+    // Six GEMM layers, each with its shape identity.
+    let layers = doc.get("layers").and_then(|l| l.as_arr()).expect("layers");
+    assert_eq!(layers.len(), 6, "{json}");
+    for l in layers {
+        for key in ["name", "gemms", "m", "k", "n", "activation_bits", "weight_bits"] {
+            assert!(l.get(key).is_some(), "layer missing {key}: {json}");
+        }
+    }
+    // All four arms with throughput + accuracy; the exact arms report
+    // accuracy 1.0 (they are gated bit-exact before timing).
+    for arm in ["static_full", "static_low", "adaptive", "adaptive_entropy"] {
+        let a = doc
+            .get("arms")
+            .and_then(|m| m.get(arm))
+            .unwrap_or_else(|| panic!("arm {arm} missing: {json}"));
+        let rate = a.get("tokens_per_s").and_then(|v| v.as_f64()).unwrap();
+        assert!(rate > 0.0, "{arm} rate: {json}");
+        assert!(a.get("accuracy_proxy").is_some(), "{arm}: {json}");
+    }
+    let acc = doc
+        .get("arms")
+        .and_then(|m| m.get("adaptive"))
+        .and_then(|a| a.get("accuracy_proxy"))
+        .and_then(|v| v.as_f64())
+        .unwrap();
+    assert_eq!(acc, 1.0, "range-adaptive arm must stay bit-exact: {json}");
+    // The policy decision log and the deterministic sim cycle section.
+    let decisions = doc.get("decisions").and_then(|d| d.as_arr()).expect("decisions");
+    assert!(!decisions.is_empty(), "{json}");
+    let sim = doc.get("sim").expect("sim section");
+    let ratio = sim.get("cycle_ratio").and_then(|v| v.as_f64()).unwrap();
+    assert!(
+        ratio >= 1.0,
+        "adaptive must not cost more sim cycles than static: {json}"
+    );
+    for key in [
+        "adaptive_speedup",
+        "sim_cycle_ratio",
+        "accuracy_proxy",
+        "accuracy_floor",
+        "tokens_per_s",
+    ] {
+        assert!(
+            doc.get("headline").and_then(|h| h.get(key)).is_some(),
+            "headline missing {key}: {json}"
+        );
+    }
+}
+
+#[test]
+fn bench_check_attn_gates_regressions_and_drift() {
+    let dir = std::env::temp_dir();
+    let base = dir.join(format!("bismo_attn_base_{}.json", std::process::id()));
+    let cur = dir.join(format!("bismo_attn_cur_{}.json", std::process::id()));
+    let base_str = base.to_str().unwrap().to_string();
+    let cur_str = cur.to_str().unwrap().to_string();
+    let (ok, text) = bismo(&[
+        "attn-bench", "--quick", "--seq", "4", "--requests", "3", "--reps", "1",
+        "--out", &base_str,
+    ]);
+    assert!(ok, "{text}");
+
+    // Self-comparison passes: identical identity, identical metrics.
+    let (ok, text) = bismo(&[
+        "bench-check", "--baseline", &base_str, "--current", &base_str,
+        "--tolerance", "0.5",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("bench-check OK"), "{text}");
+
+    // A sabotaged adaptive_speedup regresses; a drifted seq is schema
+    // drift. Both must fail loudly.
+    let json = std::fs::read_to_string(&base).unwrap();
+    let mut doc = bismo::util::Json::parse(&json).unwrap();
+    if let bismo::util::Json::Obj(root) = &mut doc {
+        if let Some(bismo::util::Json::Obj(headline)) = root.get_mut("headline") {
+            headline.insert("adaptive_speedup".into(), bismo::util::Json::num(0.01));
+        }
+    }
+    std::fs::write(&cur, doc.pretty(2)).unwrap();
+    let (ok, text) = bismo(&[
+        "bench-check", "--baseline", &base_str, "--current", &cur_str,
+        "--tolerance", "0.35",
+    ]);
+    assert!(!ok, "a collapsed adaptive speedup must fail the gate: {text}");
+    assert!(text.contains("REGRESSION"), "{text}");
+
+    let mut doc = bismo::util::Json::parse(&json).unwrap();
+    if let bismo::util::Json::Obj(root) = &mut doc {
+        root.insert("seq".into(), bismo::util::Json::num(999.0));
+    }
+    std::fs::write(&cur, doc.pretty(2)).unwrap();
+    let (ok, text) = bismo(&[
+        "bench-check", "--baseline", &base_str, "--current", &cur_str,
+    ]);
+    assert!(!ok, "workload identity drift must fail the gate: {text}");
+    assert!(text.contains("schema drift"), "{text}");
+
+    let _ = std::fs::remove_file(&base);
+    let _ = std::fs::remove_file(&cur);
+}

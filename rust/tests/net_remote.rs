@@ -3,7 +3,7 @@
 //! isolation, typed load shedding, prepared-weight replay and frame
 //! robustness under garbage input.
 
-use bismo::api::BismoError;
+use bismo::api::{BismoError, ExecOpts};
 use bismo::arch::BismoConfig;
 use bismo::bitmatrix::IntMatrix;
 use bismo::coordinator::{Backend, Precision};
@@ -315,7 +315,14 @@ fn conv_over_the_wire_matches_direct_convolution() {
     };
     for (mode, gemms) in [(LoweringMode::Im2col, 1u32), (LoweringMode::Kn2row, 9u32)] {
         let r = cli
-            .conv(spec, mode, &input, &weights, prec, Backend::Engine, true)
+            .conv(
+                spec,
+                mode,
+                &input,
+                &weights,
+                prec,
+                &ExecOpts::new().backend(Backend::Engine).verify(true),
+            )
             .unwrap();
         assert_eq!(r.gemms, gemms, "{mode:?} lowering shape");
         assert_eq!(
